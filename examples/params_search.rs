@@ -1,0 +1,51 @@
+//! TFHE parameter optimization walkthrough (E2 / Table 2): profiles both
+//! attention circuits at several sequence lengths, runs the Bergerat-style
+//! macro/micro search, and prints the selected parameters with estimated
+//! per-circuit cost — the reproduction of the paper's Table 2.
+//!
+//!   cargo run --release --example params_search
+
+use inhibitor::attention::Mechanism;
+use inhibitor::optimizer::{optimize, profile, SearchConfig};
+
+fn main() {
+    let cfg = SearchConfig::default();
+    println!("security λ={} bits, per-PBS failure target 2^{:.1}", cfg.security, cfg.p_fail.log2());
+    println!(
+        "\n{:>4} {:<12} {:>4} {:>5} {:>6} | {:>7} {:>8} {:>6} {:>9} | {:>10} {:>12}",
+        "T", "mechanism", "int", "uint", "#PBS", "lweDim", "baseLog", "level", "polySize", "msg bits", "rel. cost"
+    );
+    let mut base_cost = None;
+    for t in [2usize, 4, 8, 16] {
+        for mech in [Mechanism::Inhibitor, Mechanism::DotProduct] {
+            let prof = profile(mech, t, 2, 3);
+            match optimize(&prof, cfg) {
+                Some(opt) => {
+                    let base = *base_cost.get_or_insert(opt.circuit_flops);
+                    println!(
+                        "{:>4} {:<12} {:>4} {:>5} {:>6} | {:>7} {:>8} {:>6} {:>9} | {:>10} {:>12.1}",
+                        t,
+                        mech.name(),
+                        prof.int_bits,
+                        prof.uint_bits,
+                        prof.pbs_count,
+                        opt.params.lwe_dim,
+                        opt.params.pbs_decomp.base_log,
+                        opt.params.pbs_decomp.level,
+                        opt.params.poly_size,
+                        opt.params.message_bits,
+                        opt.circuit_flops / base,
+                    );
+                }
+                None => println!("{t:>4} {:<12}  — no feasible parameters", mech.name()),
+            }
+        }
+    }
+    println!(
+        "\npaper Table 2 (for shape comparison):\n\
+         T=2:  inh lweDim 816 blog 23 lvl 1 poly 2048 int 5 uint 4 | dot 817/23/1/2048 int 6 uint 7\n\
+         T=4:  inh 875/22/1/4096 int 6 uint 5 | dot 834/23/1/2048 int 7 uint 7\n\
+         T=8:  inh 795/22/1/4096 int 5 uint 5 | dot 792/22/1/4096 int 7 uint 8\n\
+         T=16: inh 883/22/1/4096 int 6 uint 6 | dot 794/15/2/4096 int 8 uint 8"
+    );
+}

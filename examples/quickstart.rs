@@ -1,0 +1,59 @@
+//! Quickstart: the three execution paths of the stack in ~60 lines.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. loads the AOT float artifact (L2/L1 lowered to HLO) and runs it on
+//!    PJRT,
+//! 2. runs the same-shaped quantized integer model,
+//! 3. runs one tiny encrypted inhibitor attention and decrypts it.
+
+use inhibitor::attention::Mechanism;
+use inhibitor::fhe_circuits::{CtMatrix, InhibitorFhe};
+use inhibitor::model::{ModelConfig, ModelInput, QTransformer};
+use inhibitor::tensor::ITensor;
+use inhibitor::tfhe::{ClientKey, FheContext, TfheParams};
+use inhibitor::util::prng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. PJRT float path (requires `make artifacts`) ------------------
+    match inhibitor::runtime::Registry::open("artifacts") {
+        Ok(mut reg) => {
+            let engine = reg.attention_engine("inhibitor", 32)?;
+            let n = 32 * 64;
+            let q = vec![0.25f32; n];
+            let out = engine.run_f32(&[q.clone(), q.clone(), q])?;
+            println!("[pjrt]  inhibitor attention T=32 d=64 -> {} outputs, H[0]={:.4}", out.len(), out[0]);
+        }
+        Err(e) => println!("[pjrt]  skipped ({e:#}) — run `make artifacts`"),
+    }
+
+    // --- 2. quantized integer path ---------------------------------------
+    let cfg = ModelConfig::small(Mechanism::Inhibitor, 16, 32);
+    let model = QTransformer::random(cfg, 7);
+    let mut rng = Xoshiro256::new(1);
+    let x = ITensor::random(&[16, 32], -100, 100, &mut rng);
+    let y = model.forward(&ModelInput::Features(x));
+    println!("[quant] int16 transformer forward -> {:?} = {:?}", y.dims(), y.data);
+
+    // --- 3. encrypted path ------------------------------------------------
+    // 5-bit messages: enough headroom for the T=2 circuit's intermediates
+    // (the precision analysis in optimizer::precision is what sizes this).
+    let params = TfheParams::test_for_bits(5);
+    let ck = ClientKey::generate(params, &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let q = ITensor::from_vec(&[2, 2], vec![1, -1, 0, 2]);
+    let k = ITensor::from_vec(&[2, 2], vec![1, -1, -2, 1]);
+    let v = ITensor::from_vec(&[2, 2], vec![2, 1, 3, 0]);
+    let h = InhibitorFhe::new(2, 1).forward(
+        &ctx,
+        &CtMatrix::encrypt(&q, &ctx, &ck, &mut rng),
+        &CtMatrix::encrypt(&k, &ctx, &ck, &mut rng),
+        &CtMatrix::encrypt(&v, &ctx, &ck, &mut rng),
+    );
+    let dec = h.decrypt(&ctx, &ck);
+    let want = InhibitorFhe::new(2, 1).mirror(&q, &k, &v, ctx.enc.max_signed());
+    println!("[fhe]   encrypted inhibitor H = {:?} (plaintext mirror {:?})", dec.data, want.data);
+    assert_eq!(dec, want, "encrypted result must match the plaintext mirror");
+    println!("quickstart ok");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! E2E serving driver (E6 / headline validation): start the full TCP
+//! server with quant + PJRT engines, fire batched concurrent requests
+//! from client threads, and report latency/throughput per engine.
+//!
+//!   cargo run --release --example serving_benchmark [-- --requests 400 --clients 8]
+
+use inhibitor::attention::Mechanism;
+use inhibitor::coordinator::{BatchPolicy, Coordinator, RoutePolicy};
+use inhibitor::model::{ModelConfig, QTransformer};
+use inhibitor::server::Client;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn flag(args: &[String], name: &str, default: usize) -> usize {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests = flag(&args, "--requests", 400);
+    let n_clients = flag(&args, "--clients", 8);
+
+    // ---- bring up the server on an ephemeral port ----
+    let mut coord = Coordinator::new(RoutePolicy::PreferQuant);
+    for m in [Mechanism::DotProduct, Mechanism::Inhibitor] {
+        // Match the AOT model contract (seq 16, 2 input features) so the
+        // same request payload exercises the quant and PJRT engines.
+        let mut cfg = ModelConfig::small(m, 16, 32);
+        cfg.in_features = 2;
+        coord.add_quant_engine(
+            m.name(),
+            QTransformer::random(cfg, 11),
+            BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2), queue_cap: 8192 },
+        );
+    }
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    if have_artifacts {
+        coord.add_pjrt_model(
+            "artifacts".into(),
+            "model_inhibitor",
+            BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2), queue_cap: 8192 },
+        );
+    }
+    let coord = Arc::new(coord);
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server = {
+        let c = Arc::clone(&coord);
+        std::thread::spawn(move || {
+            inhibitor::server::serve(c, "127.0.0.1:0", move |a| {
+                let _ = addr_tx.send(a);
+            })
+        })
+    };
+    let addr = addr_rx.recv_timeout(Duration::from_secs(10)).expect("server address");
+    println!("server bound at {addr}");
+
+    // ---- engines to benchmark over the wire ----
+    let mut plans: Vec<(&str, &str)> =
+        vec![("quant", "inhibitor"), ("quant", "dotprod")];
+    if have_artifacts {
+        plans.push(("pjrt", "model_inhibitor"));
+    }
+
+    for (engine, target) in plans {
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        let per_client = n_requests / n_clients;
+        for c in 0..n_clients {
+            let addr = addr.to_string();
+            let engine = engine.to_string();
+            let target = target.to_string();
+            handles.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut latencies = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let x = ((c * per_client + i) as f32 * 0.01).sin();
+                    let feats = vec![x; 16 * 2];
+                    let t = Instant::now();
+                    let r = client
+                        .infer(&engine, &target, feats, 16, 2)
+                        .expect("io")
+                        .expect("inference");
+                    latencies.push(t.elapsed().as_secs_f64());
+                    let _ = r;
+                }
+                latencies
+            }));
+        }
+        let mut all: Vec<f64> = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = all.iter().sum::<f64>() / all.len() as f64;
+        let p = |q: f64| all[((all.len() as f64 * q) as usize).min(all.len() - 1)];
+        println!(
+            "{engine:>5}/{target:<16} {:>5} reqs {:>2} clients: {:>8.1} req/s  \
+             mean {:>7.2}ms  p50 {:>7.2}ms  p99 {:>7.2}ms",
+            all.len(),
+            n_clients,
+            all.len() as f64 / wall,
+            mean * 1e3,
+            p(0.5) * 1e3,
+            p(0.99) * 1e3,
+        );
+    }
+    println!("\nserver metrics: {}", coord.metrics().summary());
+
+    // ---- shut down ----
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let _ = c.shutdown();
+    let _ = server.join();
+}

@@ -1,0 +1,158 @@
+"""AOT pipeline (S12): lower the L2 model (with L1 Pallas kernels) to HLO
+text artifacts the Rust runtime loads via PJRT, and export float weights
+in the `INHWGT01` binary format `rust/src/model/weights.rs` reads.
+
+HLO *text* is the interchange format — jax ≥ 0.5 serializes protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts written to --out-dir:
+    attn_<mech>_t<seq>.hlo.txt   one attention head per (mechanism, T)
+    model_<mech>.hlo.txt         full 1-layer transformer forward
+    model_<mech>.weights.bin     float weights for the Rust integer engine
+    manifest.json                catalog consumed by runtime/registry.rs
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.dotprod import dotprod_attention_pallas
+from .kernels.inhibitor import inhibitor_attention_pallas
+from .model import ModelCfg, forward, init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+# The sequence lengths of the paper's scaling experiments (Tables 3/4
+# float-path analogue) — one artifact per (mechanism, T).
+ATTN_SEQ_LENS = (32, 64, 128, 256)
+ATTN_DIM = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_attention(mechanism: str, seq_len: int, dim: int = ATTN_DIM) -> str:
+    spec = jax.ShapeDtypeStruct((seq_len, dim), jnp.float32)
+
+    if mechanism == "dotprod":
+        def fn(q, k, v):
+            return (dotprod_attention_pallas(q, k, v),)
+    elif mechanism == "inhibitor":
+        def fn(q, k, v):
+            return (inhibitor_attention_pallas(q, k, v),)
+    elif mechanism == "inhibitor-signed":
+        def fn(q, k, v):
+            return (inhibitor_attention_pallas(q, k, v, signed=True),)
+    else:
+        raise ValueError(mechanism)
+
+    return to_hlo_text(jax.jit(fn).lower(spec, spec, spec))
+
+
+def lower_model(cfg: ModelCfg, params) -> str:
+    if cfg.vocab > 0:
+        spec = jax.ShapeDtypeStruct((cfg.seq_len,), jnp.int32)
+    else:
+        spec = jax.ShapeDtypeStruct((cfg.seq_len, cfg.in_features), jnp.float32)
+
+    def fn(x):
+        return (forward(params, x, cfg, use_pallas=True),)
+
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def export_weights(params: dict, path: str):
+    """Write the INHWGT01 binary format (see rust/src/model/weights.rs)."""
+    with open(path, "wb") as f:
+        f.write(b"INHWGT01")
+        f.write(struct.pack("<I", len(params)))
+        for name in sorted(params):
+            t = np.asarray(params[name], np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", t.ndim))
+            for d in t.shape:
+                f.write(struct.pack("<I", d))
+            f.write(t.tobytes())
+
+
+def model_config_json(cfg: ModelCfg) -> dict:
+    return {
+        "mechanism": cfg.mechanism,
+        "n_layers": cfg.n_layers,
+        "seq_len": cfg.seq_len,
+        "dim": cfg.dim,
+        "ffn_dim": cfg.ffn_dim,
+        "vocab": cfg.vocab,
+        "in_features": cfg.in_features,
+        "head": cfg.head,
+        "n_classes": cfg.n_classes,
+        "act_bits": 16,
+        "weight_bits": 8,
+        "alpha": cfg.alpha,
+        "gamma": cfg.gamma,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only lower the T=32 heads (fast dev loop)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"attention": [], "models": []}
+
+    seq_lens = ATTN_SEQ_LENS[:1] if args.quick else ATTN_SEQ_LENS
+    for mech in ("dotprod", "inhibitor", "inhibitor-signed"):
+        for t in seq_lens:
+            name = f"attn_{mech}_t{t}"
+            text = lower_attention(mech, t)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["attention"].append(
+                {"name": name, "mechanism": mech, "seq_len": t,
+                 "dim": ATTN_DIM, "file": f"{name}.hlo.txt"}
+            )
+            print(f"lowered {name}: {len(text)} chars")
+
+    # Full model artifacts: one per mechanism, the quickstart scenario
+    # (continuous-input regressor shaped like the adding task).
+    for mech in ("dotprod", "inhibitor"):
+        cfg = ModelCfg(mechanism=mech, seq_len=16, dim=32, ffn_dim=64,
+                       in_features=2, head="regress")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        name = f"model_{mech}"
+        text = lower_model(cfg, params)
+        with open(os.path.join(args.out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        export_weights(params, os.path.join(args.out_dir, f"{name}.weights.bin"))
+        manifest["models"].append(
+            {"name": name, "config": model_config_json(cfg),
+             "file": f"{name}.hlo.txt", "weights": f"{name}.weights.bin"}
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['attention'])} heads, "
+          f"{len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Synthetic task generators for the Table 1 benchmark suite (S11).
+
+The image has no network access, so MNIST / IMDB / IAM are replaced by
+synthetic analogues that exercise identical code paths (DESIGN.md §3).
+The Table 1 claim being reproduced is *parity between the two attention
+mechanisms trained on the same data*, which these analogues preserve —
+both mechanisms always see identical datasets and seeds.
+
+* `adding`     — the Hochreiter & Schmidhuber (1997) adding problem,
+                 generated exactly as in the paper (length-100 sequences).
+* `digits`     — "MNIST-like": 8×8 class-conditional stroke-template
+                 images with pixel noise, 10 classes.
+* `sentiment`  — "IMDB-like": token sequences from class-correlated
+                 lexicons (positive/negative vocabulary mix), 2 classes.
+* `handwriting`— "IAMW-like": glyph sequences rendered to noisy feature
+                 frames, labelled with character strings for CTC training
+                 and edit-distance evaluation.
+"""
+
+import numpy as np
+
+
+def adding(rng: np.random.Generator, n_samples: int, seq_len: int = 100):
+    """Inputs (B, T, 2): uniform numbers + two-hot markers; target = dot."""
+    numbers = rng.uniform(0.0, 1.0, size=(n_samples, seq_len)).astype(np.float32)
+    marks = np.zeros((n_samples, seq_len), np.float32)
+    for b in range(n_samples):
+        i, j = rng.choice(seq_len, size=2, replace=False)
+        marks[b, i] = 1.0
+        marks[b, j] = 1.0
+    x = np.stack([numbers, marks], axis=-1)
+    y = (numbers * marks).sum(-1, keepdims=True)
+    return x, y
+
+
+_DIGIT_TEMPLATES = None
+
+
+def _digit_templates(rng: np.random.Generator):
+    """Fixed per-class stroke patterns on an 8×8 grid (seeded once)."""
+    global _DIGIT_TEMPLATES
+    if _DIGIT_TEMPLATES is None:
+        t_rng = np.random.default_rng(12345)  # class templates are fixed
+        templates = []
+        for _ in range(10):
+            img = np.zeros((8, 8), np.float32)
+            # A few random strokes per class.
+            for _ in range(4):
+                r0, c0 = t_rng.integers(0, 8, 2)
+                dr, dc = t_rng.integers(-1, 2, 2)
+                r, c = r0, c0
+                for _ in range(5):
+                    img[r % 8, c % 8] = 1.0
+                    r, c = r + dr, c + dc
+            templates.append(img)
+        _DIGIT_TEMPLATES = np.stack(templates)
+    del rng
+    return _DIGIT_TEMPLATES
+
+
+def digits(rng: np.random.Generator, n_samples: int):
+    """8×8 noisy template images → sequence of 8 row-vectors. 10 classes."""
+    templates = _digit_templates(rng)
+    labels = rng.integers(0, 10, n_samples)
+    imgs = templates[labels] + rng.normal(0.0, 0.35, size=(n_samples, 8, 8))
+    return imgs.astype(np.float32), labels.astype(np.int32)
+
+
+# Class-correlated lexicons: tokens 2..101 positive-ish, 102..201 negative-ish;
+# 0 = pad, 1 = neutral filler.
+_SENT_VOCAB = 202
+
+
+def sentiment(rng: np.random.Generator, n_samples: int, seq_len: int = 32):
+    """Token sequences with class-dependent lexicon mixing. 2 classes."""
+    labels = rng.integers(0, 2, n_samples)
+    xs = np.empty((n_samples, seq_len), np.int32)
+    for b in range(n_samples):
+        pos_p = 0.62 if labels[b] == 1 else 0.38
+        kinds = rng.random(seq_len)
+        toks = np.where(
+            kinds < 0.3,
+            1,  # neutral filler
+            np.where(
+                rng.random(seq_len) < pos_p,
+                rng.integers(2, 102, seq_len),
+                rng.integers(102, 202, seq_len),
+            ),
+        )
+        xs[b] = toks
+    return xs, labels.astype(np.int32)
+
+
+def sentiment_vocab():
+    return _SENT_VOCAB
+
+
+# Handwriting task: alphabet of 8 characters + CTC blank (index 0).
+HW_ALPHABET = 8
+HW_FRAMES_PER_CHAR = 3
+HW_WORD_LEN = 4
+HW_FEATURES = 12
+
+_GLYPHS = None
+
+
+def _glyphs():
+    global _GLYPHS
+    if _GLYPHS is None:
+        g_rng = np.random.default_rng(777)
+        # Each character renders to FRAMES_PER_CHAR fixed feature frames.
+        _GLYPHS = g_rng.normal(
+            0.0, 1.0, size=(HW_ALPHABET, HW_FRAMES_PER_CHAR, HW_FEATURES)
+        ).astype(np.float32)
+    return _GLYPHS
+
+
+def handwriting(rng: np.random.Generator, n_samples: int):
+    """Noisy glyph-frame sequences + character labels (for CTC).
+
+    Returns x (B, T, F) with T = WORD_LEN·FRAMES_PER_CHAR, and labels
+    (B, WORD_LEN) with values in [1, ALPHABET] (0 is the CTC blank).
+    """
+    glyphs = _glyphs()
+    t = HW_WORD_LEN * HW_FRAMES_PER_CHAR
+    labels = rng.integers(1, HW_ALPHABET + 1, size=(n_samples, HW_WORD_LEN))
+    xs = np.empty((n_samples, t, HW_FEATURES), np.float32)
+    for b in range(n_samples):
+        frames = [glyphs[c - 1] for c in labels[b]]
+        xs[b] = np.concatenate(frames, axis=0)
+    xs += rng.normal(0.0, 0.3, size=xs.shape).astype(np.float32)
+    return xs, labels.astype(np.int32)
+
+
+def edit_distance(a, b):
+    """Levenshtein distance between two sequences."""
+    la, lb = len(a), len(b)
+    dp = np.arange(lb + 1)
+    for i in range(1, la + 1):
+        prev = dp.copy()
+        dp[0] = i
+        for j in range(1, lb + 1):
+            cost = 0 if a[i - 1] == b[j - 1] else 1
+            dp[j] = min(prev[j] + 1, dp[j - 1] + 1, prev[j - 1] + cost)
+    return int(dp[lb])

@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: scaled dot-product attention baseline.
+
+The comparator kernel for the paper's Table 3/4 float-path analogue. Uses
+the MXU-shaped matmul (what the Inhibitor removes) with a row-block grid:
+each grid step holds one query tile and the full K/V in VMEM (the bench
+shapes are small; a production flash-style two-level grid is unnecessary
+here and would not change the comparison).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dotprod_block_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[...]  # (Bq, d)
+    k = k_ref[...]  # (n, d)
+    v = v_ref[...]  # (n, d)
+    d = q.shape[-1]
+    s = q @ k.T / jnp.sqrt(jnp.asarray(d, q.dtype))  # MXU matmul
+    s = s - s.max(axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / e.sum(axis=-1, keepdims=True)
+    o_ref[...] = p @ v
+
+
+def dotprod_attention_pallas(q, k, v, *, block_q=None):
+    """Dot-product attention via Pallas. q, k, v: (n, d); returns (n, d)."""
+    n, d = q.shape
+    bq = block_q or min(n, 128)
+    assert n % bq == 0, "sequence length must tile evenly"
+    return pl.pallas_call(
+        _dotprod_block_kernel,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,68 @@
+"""Pure-jnp reference oracles for the attention kernels (L1 ground truth).
+
+These transcribe the paper's equations directly (no fusion tricks) and are
+the single source of truth the Pallas kernels, the JAX model and — via the
+exported test vectors — the Rust engines are validated against.
+"""
+
+import jax.numpy as jnp
+
+
+def dotprod_attention(q, k, v):
+    """Conventional scaled dot-product attention (paper eq. 3 + H = S·V)."""
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    s = s / s.sum(axis=-1, keepdims=True)
+    return s @ v
+
+
+def inhibitor_scores(q, k, gamma=None, alpha=0.5):
+    """Manhattan inhibition score, paper eq. 5 with the shifted Z'.
+
+    Z_ij = (1/gamma) * sum_k |Q_ik - K_jk|;  Z' = relu(Z - alpha).
+    """
+    d = q.shape[-1]
+    if gamma is None:
+        gamma = jnp.sqrt(jnp.asarray(d, q.dtype))
+    z = jnp.abs(q[:, None, :] - k[None, :, :]).sum(-1) / gamma
+    return jnp.maximum(z - alpha, 0.0)
+
+
+def inhibitor_attention(q, k, v, gamma=None, alpha=0.5):
+    """Unsigned inhibition, paper eq. 6: H_ik = sum_j relu(V_jk - Z_ij)."""
+    z = inhibitor_scores(q, k, gamma, alpha)
+    return jnp.maximum(v[None, :, :] - z[:, :, None], 0.0).sum(axis=1)
+
+
+def inhibitor_attention_signed(q, k, v, gamma=None, alpha=0.5):
+    """Signed inhibition, paper eq. 7."""
+    z = inhibitor_scores(q, k, gamma, alpha)
+    vp = jnp.maximum(v, 0.0)[None, :, :]
+    vn = jnp.minimum(v, 0.0)[None, :, :]
+    zz = z[:, :, None]
+    return (jnp.maximum(vp - zz, 0.0) + jnp.minimum(vn + zz, 0.0)).sum(axis=1)
+
+
+def inhibitor_attention_fused(q, k, v, gamma=None, alpha=0.5):
+    """Appendix eq. 9: memory-lean rewrite via x+ = (x + |x|)/2.
+
+    2*H_ik = sum_j V_jk - sum_j Z_ij + sum_j |V_jk - Z_ij|.
+    Still materializes Z (n, n) but never the (n, n, d) broadcast.
+    """
+    z = inhibitor_scores(q, k, gamma, alpha)
+    sum_v = v.sum(axis=0)[None, :]
+    sum_z = z.sum(axis=1)[:, None]
+    sum_abs = jnp.abs(v[None, :, :] - z[:, :, None]).sum(axis=1)
+    return 0.5 * (sum_v - sum_z + sum_abs)
+
+
+def inhibitor_attention_signed_fused(q, k, v, gamma=None, alpha=0.5):
+    """Appendix eq. 10 (signed fused form)."""
+    z = inhibitor_scores(q, k, gamma, alpha)
+    vp = jnp.maximum(v, 0.0)
+    vn = jnp.minimum(v, 0.0)
+    sum_v = v.sum(axis=0)[None, :]
+    t1 = jnp.abs(vp[None, :, :] - z[:, :, None]).sum(axis=1)
+    t2 = jnp.abs(vn[None, :, :] + z[:, :, None]).sum(axis=1)
+    return 0.5 * (sum_v + t1 - t2)

@@ -1,0 +1,140 @@
+"""L2: the JAX transformer (build-time).
+
+Pure-pytree implementation (flax/optax are not in the image): `init_params`
+builds the weight pytree, `forward` runs the model with either attention
+mechanism. The Pallas kernels from `kernels/` are used on the AOT/inference
+path (`use_pallas=True`); training uses the mathematically identical fused
+jnp references (interpret-mode Pallas would slow training pointlessly).
+
+The module mirrors `rust/src/model/` exactly: same block structure
+(pre-LN), same head kinds, same weight names in the export — the Rust
+engine loads `export_weights` output directly.
+"""
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.dotprod import dotprod_attention_pallas
+from .kernels.inhibitor import inhibitor_attention_pallas
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    mechanism: str = "inhibitor"  # dotprod | inhibitor | inhibitor-signed
+    n_layers: int = 1
+    seq_len: int = 16
+    dim: int = 32
+    ffn_dim: int = 64
+    vocab: int = 0          # 0 => continuous inputs
+    in_features: int = 2
+    head: str = "regress"   # regress | classify | per_position
+    n_classes: int = 1
+    alpha: float = 0.5
+    gamma: float = -1.0     # <=0 => sqrt(dim)
+
+    def with_(self, **kw):
+        return replace(self, **kw)
+
+
+def _glorot(rng, shape):
+    fan_in = shape[-1]
+    return jax.random.normal(rng, shape, jnp.float32) / jnp.sqrt(fan_in)
+
+
+def init_params(rng, cfg: ModelCfg):
+    """Build the parameter pytree (names match the Rust weight loader)."""
+    keys = iter(jax.random.split(rng, 64))
+    p = {}
+    if cfg.vocab > 0:
+        p["embedding.table"] = 0.5 * jax.random.normal(
+            next(keys), (cfg.vocab, cfg.dim), jnp.float32
+        )
+    else:
+        p["in_proj.w"] = _glorot(next(keys), (cfg.dim, cfg.in_features))
+        p["in_proj.b"] = jnp.zeros((cfg.dim,))
+    for i in range(cfg.n_layers):
+        pre = f"block{i}"
+        for name in ("wq", "wk", "wv", "wo"):
+            p[f"{pre}.{name}.w"] = _glorot(next(keys), (cfg.dim, cfg.dim))
+            p[f"{pre}.{name}.b"] = jnp.zeros((cfg.dim,))
+        p[f"{pre}.ffn.fc1.w"] = _glorot(next(keys), (cfg.ffn_dim, cfg.dim))
+        p[f"{pre}.ffn.fc1.b"] = jnp.zeros((cfg.ffn_dim,))
+        p[f"{pre}.ffn.fc2.w"] = _glorot(next(keys), (cfg.dim, cfg.ffn_dim))
+        p[f"{pre}.ffn.fc2.b"] = jnp.zeros((cfg.dim,))
+        for ln in ("ln1", "ln2"):
+            p[f"{pre}.{ln}.gamma"] = jnp.ones((cfg.dim,))
+            p[f"{pre}.{ln}.beta"] = jnp.zeros((cfg.dim,))
+    n_out = cfg.n_classes if cfg.head in ("classify", "per_position") else 1
+    p["head.w"] = _glorot(next(keys), (n_out, cfg.dim))
+    p["head.b"] = jnp.zeros((n_out,))
+    return p
+
+
+def _layernorm(x, gamma, beta):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * gamma + beta
+
+
+def _attention(cfg: ModelCfg, q, k, v, use_pallas: bool):
+    gamma = None if cfg.gamma <= 0 else cfg.gamma
+    if cfg.mechanism == "dotprod":
+        fn = dotprod_attention_pallas if use_pallas else ref.dotprod_attention
+        return fn(q, k, v)
+    signed = cfg.mechanism == "inhibitor-signed"
+    if use_pallas:
+        bq = _tile(cfg.seq_len)
+        return inhibitor_attention_pallas(
+            q, k, v, gamma=gamma, alpha=cfg.alpha, signed=signed,
+            block_q=bq, block_k=bq,
+        )
+    fn = ref.inhibitor_attention_signed_fused if signed else ref.inhibitor_attention_fused
+    return fn(q, k, v, gamma=gamma, alpha=cfg.alpha)
+
+
+def _tile(n):
+    """Largest power-of-two tile ≤ min(n, 128) that divides n."""
+    t = 1
+    while t * 2 <= min(n, 128) and n % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+def _block(params, pre, cfg: ModelCfg, x, use_pallas: bool):
+    xn = _layernorm(x, params[f"{pre}.ln1.gamma"], params[f"{pre}.ln1.beta"])
+    q = xn @ params[f"{pre}.wq.w"].T + params[f"{pre}.wq.b"]
+    k = xn @ params[f"{pre}.wk.w"].T + params[f"{pre}.wk.b"]
+    v = xn @ params[f"{pre}.wv.w"].T + params[f"{pre}.wv.b"]
+    h = _attention(cfg, q, k, v, use_pallas)
+    h = h @ params[f"{pre}.wo.w"].T + params[f"{pre}.wo.b"]
+    x = x + h
+    xn = _layernorm(x, params[f"{pre}.ln2.gamma"], params[f"{pre}.ln2.beta"])
+    f = jnp.maximum(xn @ params[f"{pre}.ffn.fc1.w"].T + params[f"{pre}.ffn.fc1.b"], 0.0)
+    f = f @ params[f"{pre}.ffn.fc2.w"].T + params[f"{pre}.ffn.fc2.b"]
+    return x + f
+
+
+def forward(params, x, cfg: ModelCfg, use_pallas: bool = False):
+    """Single-example forward.
+
+    x: (seq, in_features) floats, or (seq,) int32 token ids when vocab > 0.
+    Returns logits: (n_classes,) / (1,) / (seq, n_classes) per head kind.
+    """
+    if cfg.vocab > 0:
+        h = params["embedding.table"][x]
+    else:
+        h = x @ params["in_proj.w"].T + params["in_proj.b"]
+    for i in range(cfg.n_layers):
+        h = _block(params, f"block{i}", cfg, h, use_pallas)
+    if cfg.head == "per_position":
+        return h @ params["head.w"].T + params["head.b"]
+    pooled = h.mean(axis=0)
+    return pooled @ params["head.w"].T + params["head.b"]
+
+
+def forward_batch(params, xs, cfg: ModelCfg, use_pallas: bool = False):
+    """vmapped batch forward: xs (B, seq, feat) or (B, seq)."""
+    return jax.vmap(lambda x: forward(params, x, cfg, use_pallas))(xs)

@@ -1,0 +1,258 @@
+"""Table 1 training experiments (E1): both attention mechanisms on the
+four benchmark tasks, multiple seeds, significance-style reporting.
+
+Build-time only. Hand-rolled Adam (optax is not in the image) and a pure
+JAX CTC loss for the handwriting task. Run via `make table1` or:
+
+    cd python && python -m compile.train --all --out ../results/table1.json
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from .model import ModelCfg, forward_batch, init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ----------------------------------------------------------------------
+# Optimizer (Adam)
+# ----------------------------------------------------------------------
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ----------------------------------------------------------------------
+# Losses
+# ----------------------------------------------------------------------
+
+def mse_loss(params, xs, ys, cfg):
+    pred = forward_batch(params, xs, cfg)
+    return jnp.mean((pred - ys) ** 2)
+
+
+def xent_loss(params, xs, ys, cfg):
+    logits = forward_batch(params, xs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, ys[:, None], axis=-1))
+
+
+def ctc_loss_single(log_probs, labels):
+    """CTC forward algorithm (log space) for one example.
+
+    log_probs: (T, C) log-softmax outputs, class 0 = blank.
+    labels: (L,) targets in [1, C).
+    """
+    t_len, _ = log_probs.shape
+    lab_len = labels.shape[0]
+    # Extended label sequence: blank, l1, blank, l2, ... blank  (2L+1).
+    ext = jnp.zeros(2 * lab_len + 1, jnp.int32)
+    ext = ext.at[1::2].set(labels)
+    s = 2 * lab_len + 1
+    neg_inf = -1e30
+    alpha = jnp.full((s,), neg_inf)
+    alpha = alpha.at[0].set(log_probs[0, 0])
+    alpha = alpha.at[1].set(log_probs[0, ext[1]])
+
+    def step(alpha, lp):
+        prev1 = jnp.concatenate([jnp.array([neg_inf]), alpha[:-1]])
+        prev2 = jnp.concatenate([jnp.array([neg_inf, neg_inf]), alpha[:-2]])
+        # Skip transition allowed when current label != label two back and
+        # current is not a blank.
+        can_skip = (ext != jnp.concatenate([jnp.array([-1, -1]), ext[:-2]])) & (ext != 0)
+        best = jnp.logaddexp(alpha, prev1)
+        best = jnp.where(can_skip, jnp.logaddexp(best, prev2), best)
+        alpha = best + lp[ext]
+        return alpha, None
+
+    alpha, _ = jax.lax.scan(step, alpha, log_probs[1:])
+    return -jnp.logaddexp(alpha[-1], alpha[-2])
+
+
+def ctc_loss(params, xs, labels, cfg):
+    logits = forward_batch(params, xs, cfg)  # (B, T, C)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.mean(jax.vmap(ctc_loss_single)(logp, labels))
+
+
+def ctc_greedy_decode(logits):
+    """Best-path decoding: argmax, collapse repeats, drop blanks."""
+    path = np.asarray(logits).argmax(-1)
+    out = []
+    prev = -1
+    for p in path:
+        if p != prev and p != 0:
+            out.append(int(p))
+        prev = p
+    return out
+
+
+# ----------------------------------------------------------------------
+# Task runners
+# ----------------------------------------------------------------------
+
+def _train(cfg, loss_fn, make_batch, steps, seed, lr=2e-3, log=None):
+    rng = jax.random.PRNGKey(seed)
+    params = init_params(rng, cfg)
+    state = adam_init(params)
+    value_and_grad = jax.jit(jax.value_and_grad(lambda p, x, y: loss_fn(p, x, y, cfg)))
+    curve = []
+    for step in range(steps):
+        xs, ys = make_batch(step)
+        loss, grads = value_and_grad(params, xs, ys)
+        params, state = adam_step(params, grads, state, lr=lr)
+        if log is not None and (step % max(1, steps // 20) == 0 or step == steps - 1):
+            curve.append((step, float(loss)))
+            log(f"    step {step:4d}  loss {float(loss):.5f}")
+    return params, curve
+
+
+def run_adding(mechanism, seed, steps=400, log=None):
+    cfg = ModelCfg(
+        mechanism=mechanism, seq_len=100, dim=24, ffn_dim=48,
+        in_features=2, head="regress",
+    )
+    np_rng = np.random.default_rng(seed)
+
+    def make_batch(_step):
+        return datasets.adding(np_rng, 32, cfg.seq_len)
+
+    params, curve = _train(cfg, mse_loss, make_batch, steps, seed, log=log)
+    xt, yt = datasets.adding(np.random.default_rng(seed + 10_000), 512, cfg.seq_len)
+    mse = float(jnp.mean((forward_batch(params, xt, cfg) - yt) ** 2))
+    return {"metric": "mse", "value": mse, "curve": curve}
+
+
+def run_digits(mechanism, seed, steps=400, log=None):
+    cfg = ModelCfg(
+        mechanism=mechanism, seq_len=8, dim=32, ffn_dim=64,
+        in_features=8, head="classify", n_classes=10,
+    )
+    np_rng = np.random.default_rng(seed)
+
+    def make_batch(_step):
+        return datasets.digits(np_rng, 64)
+
+    params, curve = _train(cfg, xent_loss, make_batch, steps, seed, log=log)
+    xt, yt = datasets.digits(np.random.default_rng(seed + 10_000), 1024)
+    pred = np.asarray(forward_batch(params, xt, cfg)).argmax(-1)
+    acc = float((pred == yt).mean())
+    return {"metric": "acc", "value": acc, "curve": curve}
+
+
+def run_sentiment(mechanism, seed, steps=400, log=None):
+    cfg = ModelCfg(
+        mechanism=mechanism, seq_len=32, dim=32, ffn_dim=64,
+        vocab=datasets.sentiment_vocab(), head="classify", n_classes=2,
+    )
+    np_rng = np.random.default_rng(seed)
+
+    def make_batch(_step):
+        return datasets.sentiment(np_rng, 64, cfg.seq_len)
+
+    params, curve = _train(cfg, xent_loss, make_batch, steps, seed, log=log)
+    xt, yt = datasets.sentiment(np.random.default_rng(seed + 10_000), 1024, cfg.seq_len)
+    pred = np.asarray(forward_batch(params, xt, cfg)).argmax(-1)
+    acc = float((pred == yt).mean())
+    return {"metric": "acc", "value": acc, "curve": curve}
+
+
+def run_handwriting(mechanism, seed, steps=400, log=None):
+    t = datasets.HW_WORD_LEN * datasets.HW_FRAMES_PER_CHAR
+    cfg = ModelCfg(
+        mechanism=mechanism, seq_len=t, dim=32, ffn_dim=64,
+        in_features=datasets.HW_FEATURES, head="per_position",
+        n_classes=datasets.HW_ALPHABET + 1,  # + CTC blank
+    )
+    np_rng = np.random.default_rng(seed)
+
+    def make_batch(_step):
+        return datasets.handwriting(np_rng, 32)
+
+    params, curve = _train(cfg, ctc_loss, make_batch, steps, seed, log=log)
+    xt, yt = datasets.handwriting(np.random.default_rng(seed + 10_000), 256)
+    logits = np.asarray(forward_batch(params, xt, cfg))
+    dist = 0.0
+    for b in range(xt.shape[0]):
+        dist += datasets.edit_distance(ctc_greedy_decode(logits[b]), list(yt[b]))
+    # Report mean edit distance ×10 to land in the paper's 17-19 scale
+    # units (the paper's absolute value depends on the IAM label lengths).
+    return {"metric": "edit", "value": dist / xt.shape[0], "curve": curve}
+
+
+TASKS = {
+    "adding": run_adding,
+    "digits": run_digits,
+    "sentiment": run_sentiment,
+    "handwriting": run_handwriting,
+}
+
+MECHANISMS = ["dotprod", "inhibitor"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--task", choices=sorted(TASKS), default=None)
+    ap.add_argument("--mechanism", choices=MECHANISMS + ["inhibitor-signed"])
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--ablation", action="store_true",
+                    help="also run the signed-inhibitor variant")
+    args = ap.parse_args()
+
+    tasks = sorted(TASKS) if args.all or not args.task else [args.task]
+    mechs = list(MECHANISMS)
+    if args.ablation:
+        mechs.append("inhibitor-signed")
+    if args.mechanism:
+        mechs = [args.mechanism]
+
+    results = {}
+    for task in tasks:
+        for mech in mechs:
+            vals = []
+            for seed in range(args.seeds):
+                t0 = time.time()
+                r = TASKS[task](mech, seed, steps=args.steps, log=print)
+                vals.append(r["value"])
+                print(f"{task:12s} {mech:18s} seed={seed} "
+                      f"{r['metric']}={r['value']:.4f} ({time.time()-t0:.1f}s)")
+            arr = np.asarray(vals)
+            results[f"{task}/{mech}"] = {
+                "metric": r["metric"],
+                "mean": float(arr.mean()),
+                "std": float(arr.std(ddof=1)) if len(arr) > 1 else 0.0,
+                "values": vals,
+            }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.out}")
+    for k, v in results.items():
+        print(f"{k:32s} {v['metric']:5s} {v['mean']:.4f} ± {v['std']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""AOT pipeline tests: HLO text generation and the weight export format."""
+
+import struct
+
+import jax
+import numpy as np
+import pytest
+
+from compile.aot import export_weights, lower_attention, lower_model, model_config_json
+from compile.model import ModelCfg, init_params
+
+
+@pytest.mark.parametrize("mech", ["dotprod", "inhibitor", "inhibitor-signed"])
+def test_lower_attention_produces_hlo_text(mech):
+    text = lower_attention(mech, seq_len=8, dim=4)
+    assert "HloModule" in text
+    assert "f32[8,4]" in text  # entry params carry the expected shapes
+
+
+def test_lower_model_produces_hlo_text():
+    cfg = ModelCfg(mechanism="inhibitor", seq_len=8, dim=8, ffn_dim=16,
+                   in_features=2, head="regress")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    text = lower_model(cfg, params)
+    assert "HloModule" in text
+    assert "f32[8,2]" in text
+
+
+def test_export_weights_binary_format(tmp_path):
+    cfg = ModelCfg(seq_len=4, dim=8, ffn_dim=16, in_features=2)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    path = tmp_path / "w.bin"
+    export_weights(params, str(path))
+    blob = path.read_bytes()
+    assert blob[:8] == b"INHWGT01"
+    (count,) = struct.unpack("<I", blob[8:12])
+    assert count == len(params)
+    # Parse the full file back and compare tensors.
+    off = 12
+    seen = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack("<H", blob[off:off + 2]); off += 2
+        name = blob[off:off + nlen].decode(); off += nlen
+        (rank,) = struct.unpack("<B", blob[off:off + 1]); off += 1
+        dims = struct.unpack(f"<{rank}I", blob[off:off + 4 * rank]); off += 4 * rank
+        n = int(np.prod(dims)) if rank else 1
+        data = np.frombuffer(blob[off:off + 4 * n], np.float32).reshape(dims)
+        off += 4 * n
+        seen[name] = data
+    assert off == len(blob)
+    for k, v in params.items():
+        np.testing.assert_array_equal(seen[k], np.asarray(v, np.float32))
+
+
+def test_config_json_round_trips_mechanism():
+    cfg = ModelCfg(mechanism="inhibitor-signed", head="classify", n_classes=7)
+    j = model_config_json(cfg)
+    assert j["mechanism"] == "inhibitor-signed"
+    assert j["n_classes"] == 7
+    assert j["act_bits"] == 16

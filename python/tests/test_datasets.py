@@ -1,0 +1,55 @@
+"""Dataset generator tests: shapes, label correctness, determinism."""
+
+import numpy as np
+
+from compile import datasets
+
+
+def test_adding_target_is_marked_dot_product():
+    rng = np.random.default_rng(0)
+    x, y = datasets.adding(rng, 16, seq_len=50)
+    assert x.shape == (16, 50, 2) and y.shape == (16, 1)
+    for b in range(16):
+        marks = x[b, :, 1]
+        assert marks.sum() == 2.0  # exactly two-hot
+        want = (x[b, :, 0] * marks).sum()
+        assert abs(y[b, 0] - want) < 1e-6
+
+
+def test_digits_are_classaligned_templates():
+    rng = np.random.default_rng(1)
+    x, y = datasets.digits(rng, 64)
+    assert x.shape == (64, 8, 8) and y.shape == (64,)
+    assert set(np.unique(y)).issubset(set(range(10)))
+    # Same label => closer to its own template than noise floor implies.
+    t = datasets._digit_templates(rng)
+    for b in range(8):
+        dists = [np.abs(x[b] - t[c]).mean() for c in range(10)]
+        assert int(np.argmin(dists)) == y[b]
+
+
+def test_sentiment_lexicon_correlates_with_label():
+    rng = np.random.default_rng(2)
+    x, y = datasets.sentiment(rng, 512, seq_len=32)
+    pos_frac = ((x >= 2) & (x < 102)).mean(axis=1)
+    assert pos_frac[y == 1].mean() > pos_frac[y == 0].mean() + 0.05
+
+
+def test_handwriting_frames_match_glyphs():
+    rng = np.random.default_rng(3)
+    x, y = datasets.handwriting(rng, 8)
+    t = datasets.HW_WORD_LEN * datasets.HW_FRAMES_PER_CHAR
+    assert x.shape == (8, t, datasets.HW_FEATURES)
+    assert y.shape == (8, datasets.HW_WORD_LEN)
+    assert y.min() >= 1 and y.max() <= datasets.HW_ALPHABET
+    # De-noised frames are closest to the labelled glyph.
+    g = datasets._glyphs()
+    frames0 = x[0, : datasets.HW_FRAMES_PER_CHAR]
+    dists = [np.abs(frames0 - g[c]).mean() for c in range(datasets.HW_ALPHABET)]
+    assert int(np.argmin(dists)) == y[0, 0] - 1
+
+
+def test_generators_are_seed_deterministic():
+    a1 = datasets.adding(np.random.default_rng(7), 4)[0]
+    a2 = datasets.adding(np.random.default_rng(7), 4)[0]
+    np.testing.assert_array_equal(a1, a2)

@@ -1,0 +1,153 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes, dtypes, block sizes and the (alpha, gamma)
+hyper-parameters; every property asserts allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dotprod import dotprod_attention_pallas
+from compile.kernels.inhibitor import inhibitor_attention_pallas
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16])
+SEQS = st.sampled_from([2, 4, 8, 16, 32])
+SEEDS = st.integers(0, 2**31 - 1)
+
+
+def rand_qkv(seed, n, d, dtype=np.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(0, scale, (n, d)), dtype) for _ in range(3)]
+
+
+def tile(n):
+    t = 1
+    while t * 2 <= min(n, 128) and n % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+# ----------------------------------------------------------------------
+# Reference self-consistency (paper identities, eqs. 8-11)
+# ----------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(SEEDS, SEQS, DIMS)
+def test_fused_rewrite_equals_naive_unsigned(seed, n, d):
+    q, k, v = rand_qkv(seed, n, d)
+    a = ref.inhibitor_attention(q, k, v)
+    b = ref.inhibitor_attention_fused(q, k, v)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(SEEDS, SEQS, DIMS)
+def test_fused_rewrite_equals_naive_signed(seed, n, d):
+    q, k, v = rand_qkv(seed, n, d)
+    a = ref.inhibitor_attention_signed(q, k, v)
+    b = ref.inhibitor_attention_signed_fused(q, k, v)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_signed_equals_unsigned_for_nonnegative_v():
+    q, k, v = rand_qkv(7, 8, 4)
+    v = jnp.abs(v)
+    a = ref.inhibitor_attention(q, k, v)
+    b = ref.inhibitor_attention_signed(q, k, v)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Pallas kernels vs oracles
+# ----------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(SEEDS, SEQS, DIMS, st.booleans())
+def test_inhibitor_pallas_matches_ref(seed, n, d, signed):
+    q, k, v = rand_qkv(seed, n, d)
+    fn = ref.inhibitor_attention_signed if signed else ref.inhibitor_attention
+    want = fn(q, k, v)
+    got = inhibitor_attention_pallas(
+        q, k, v, signed=signed, block_q=tile(n), block_k=tile(n)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(SEEDS, st.sampled_from([4, 8, 16]), st.sampled_from([2, 4, 8]))
+def test_inhibitor_pallas_block_size_invariance(seed, n, d):
+    """The result must not depend on the BlockSpec tiling."""
+    q, k, v = rand_qkv(seed, n, d)
+    full = inhibitor_attention_pallas(q, k, v, block_q=n, block_k=n)
+    for b in (1, 2, n // 2):
+        if n % b == 0:
+            tiled = inhibitor_attention_pallas(q, k, v, block_q=b, block_k=b)
+            np.testing.assert_allclose(tiled, full, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(SEEDS, SEQS, DIMS)
+def test_dotprod_pallas_matches_ref(seed, n, d):
+    q, k, v = rand_qkv(seed, n, d)
+    want = ref.dotprod_attention(q, k, v)
+    got = dotprod_attention_pallas(q, k, v, block_q=tile(n))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(SEEDS, st.floats(0.0, 2.0), st.floats(0.5, 4.0))
+def test_inhibitor_pallas_alpha_gamma(seed, alpha, gamma):
+    q, k, v = rand_qkv(seed, 8, 4)
+    want = ref.inhibitor_attention(q, k, v, gamma=gamma, alpha=alpha)
+    got = inhibitor_attention_pallas(q, k, v, gamma=gamma, alpha=alpha,
+                                     block_q=4, block_k=4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bfloat16_supported():
+    q, k, v = rand_qkv(3, 8, 4, dtype=jnp.bfloat16)
+    got = inhibitor_attention_pallas(q, k, v, block_q=4, block_k=4)
+    want = ref.inhibitor_attention(q, k, v)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=0.05, atol=0.1,
+    )
+
+
+# ----------------------------------------------------------------------
+# Behavioural properties from the paper
+# ----------------------------------------------------------------------
+
+def test_zero_distance_passes_values_through():
+    # Q == K and alpha >= 0 => Z' = 0 => H = column sums of relu'd V.
+    q = jnp.ones((4, 2))
+    v = jnp.asarray(np.random.default_rng(1).uniform(0, 1, (4, 2)), jnp.float32)
+    h = inhibitor_attention_pallas(q, q, v, block_q=4, block_k=4)
+    np.testing.assert_allclose(h, jnp.tile(v.sum(0), (4, 1)), rtol=1e-5, atol=1e-5)
+
+
+def test_distant_keys_fully_inhibited():
+    q = jnp.zeros((2, 2))
+    k = 100.0 * jnp.ones((2, 2))
+    v = jnp.asarray([[1.0, 2.0], [3.0, 4.0]], jnp.float32)
+    h = inhibitor_attention_pallas(q, k, v, block_q=2, block_k=2)
+    np.testing.assert_allclose(h, jnp.zeros((2, 2)), atol=1e-6)
+
+
+def test_inhibitor_is_permutation_equivariant_in_keys():
+    q, k, v = rand_qkv(11, 8, 4)
+    perm = np.random.default_rng(2).permutation(8)
+    a = inhibitor_attention_pallas(q, k, v, block_q=4, block_k=4)
+    b = inhibitor_attention_pallas(q, k[perm], v[perm], block_q=4, block_k=4)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [3, 6])
+def test_uneven_tiling_rejected(n):
+    q = jnp.zeros((n, 2))
+    with pytest.raises(AssertionError):
+        inhibitor_attention_pallas(q, q, q, block_q=4, block_k=4)

@@ -1,0 +1,94 @@
+"""Training-path tests: CTC loss vs brute force, Adam, loss decreases."""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import datasets
+from compile.model import ModelCfg
+from compile.train import (
+    adam_init,
+    adam_step,
+    ctc_greedy_decode,
+    ctc_loss_single,
+    mse_loss,
+    run_adding,
+)
+
+
+def brute_force_ctc(log_probs, labels):
+    """Enumerate every alignment path; sum probabilities of those that
+    collapse to `labels` (exponential — only for tiny cases)."""
+    lp = np.asarray(log_probs)
+    t, c = lp.shape
+    target = list(labels)
+    total = -np.inf
+    for path in itertools.product(range(c), repeat=t):
+        collapsed = []
+        prev = -1
+        for s in path:
+            if s != prev and s != 0:
+                collapsed.append(s)
+            prev = s
+        if collapsed == target:
+            total = np.logaddexp(total, sum(lp[i, s] for i, s in enumerate(path)))
+    return -total
+
+
+def test_ctc_loss_matches_brute_force():
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        t, c, l = 4, 3, 2
+        logits = rng.normal(size=(t, c))
+        logp = jax.nn.log_softmax(jnp.asarray(logits, jnp.float32))
+        labels = jnp.asarray(rng.integers(1, c, size=l), jnp.int32)
+        got = float(ctc_loss_single(logp, labels))
+        want = brute_force_ctc(np.asarray(logp), list(np.asarray(labels)))
+        assert abs(got - want) < 1e-3, (got, want)
+
+
+def test_ctc_greedy_decode_collapses():
+    # Path 0,1,1,0,2,2 -> [1, 2]
+    logits = np.full((6, 3), -5.0)
+    for i, s in enumerate([0, 1, 1, 0, 2, 2]):
+        logits[i, s] = 5.0
+    assert ctc_greedy_decode(jnp.asarray(logits)) == [1, 2]
+
+
+def test_adam_reduces_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adam_init(params)
+    grad_fn = jax.grad(lambda p: jnp.sum(p["w"] ** 2))
+    for _ in range(300):
+        params, state = adam_step(params, grad_fn(params), state, lr=5e-2)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_training_reduces_loss_quickly():
+    """A 60-step run on the adding task must beat the constant predictor."""
+    r = run_adding("inhibitor", seed=0, steps=60)
+    # Constant-mean predictor MSE on the adding task ~ Var(y) ~ 0.17.
+    assert r["value"] < 0.17, r
+
+
+def test_edit_distance():
+    assert datasets.edit_distance([1, 2, 3], [1, 2, 3]) == 0
+    assert datasets.edit_distance([1, 2, 3], [1, 3]) == 1
+    assert datasets.edit_distance([], [1, 2]) == 2
+    assert datasets.edit_distance([1, 2], [2, 1]) == 2
+
+
+def test_mse_loss_on_perfect_prediction_is_zero():
+    cfg = ModelCfg(mechanism="inhibitor", seq_len=4, dim=8, ffn_dim=16,
+                   in_features=2, head="regress")
+    params = {"zero": jnp.zeros(())}  # not used; direct check of the math
+    del params
+    xs = jnp.zeros((2, 4, 2))
+    ys = jnp.zeros((2, 1))
+    import jax.random as jr
+    from compile.model import init_params
+    p = init_params(jr.PRNGKey(0), cfg)
+    val = float(mse_loss(p, xs, ys, cfg))
+    assert np.isfinite(val)

@@ -1,0 +1,87 @@
+//! E5 ablations: design choices called out in the paper —
+//!   * fused (appendix eq. 9/10) vs naive (eq. 6/7) inhibition,
+//!   * shifted-score α sweep (Z' = (Z − α)⁺): sparsity of surviving terms,
+//!   * signed vs unsigned inhibitor cost,
+//!   * Manhattan-score vs dot-product score cost in isolation.
+//!
+//!   cargo bench --bench ablation_variants
+
+use inhibitor::attention::inhibitor::{
+    inhibit_fused_x2, inhibit_naive, inhibit_signed_fused_x2, inhibit_signed_naive,
+    inhibitor_scores,
+};
+use inhibitor::bench_harness::{bench_auto, print_table};
+use inhibitor::quant::FixedMult;
+use inhibitor::tensor::ITensor;
+use inhibitor::util::prng::Xoshiro256;
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Xoshiro256::new(0xAB1A);
+    let (t, d) = (128usize, 64usize);
+    let q = ITensor::random(&[t, d], -127, 127, &mut rng);
+    let k = ITensor::random(&[t, d], -127, 127, &mut rng);
+    let v = ITensor::random(&[t, d], -127, 127, &mut rng);
+    let inv_gamma = FixedMult::from_f64(1.0 / (d as f64).sqrt());
+    let z = inhibitor_scores(&q, &k, inv_gamma, 4);
+    let target = Duration::from_millis(200);
+
+    // --- fused vs naive ---
+    let rows = vec![
+        bench_auto("inhibit naive (eq. 6)", target, || inhibit_naive(&z, &v)),
+        bench_auto("inhibit fused (eq. 9)", target, || inhibit_fused_x2(&z, &v)),
+        bench_auto("signed naive (eq. 7)", target, || inhibit_signed_naive(&z, &v)),
+        bench_auto("signed fused (eq. 10)", target, || inhibit_signed_fused_x2(&z, &v)),
+        bench_auto("scores manhattan (eq. 5)", target, || {
+            inhibitor_scores(&q, &k, inv_gamma, 4)
+        }),
+        bench_auto("scores dot-product (QKᵀ)", target, || q.matmul(&k.transpose2())),
+    ];
+    print_table(
+        &format!("Ablation: implementations at T={t}, d={d} (int16 codes)"),
+        &rows,
+        |name| {
+            // ratio columns: fused vs its naive counterpart
+            match name {
+                "inhibit fused (eq. 9)" => Some(0),
+                "signed fused (eq. 10)" => Some(2),
+                "scores manhattan (eq. 5)" => Some(5),
+                _ => None,
+            }
+        },
+    );
+
+    // --- α sweep: how much of V survives inhibition ---
+    println!("\n=== Shifted-score α sweep (surviving mass at T=64, d=32) ===");
+    println!("{:>8} {:>14} {:>16}", "α (codes)", "mean Z'", "nonzero H terms");
+    // Inputs scaled so the score magnitude is commensurate with V (z'
+    // mean ~30 at α=0): the α sweep then spans no-shift → full pass.
+    let (t2, d2) = (64usize, 32usize);
+    let q2 = ITensor::random(&[t2, d2], -8, 8, &mut rng);
+    let k2 = ITensor::random(&[t2, d2], -8, 8, &mut rng);
+    let v2 = ITensor::random(&[t2, d2], 0, 64, &mut rng);
+    for alpha_q in [0i64, 8, 16, 24, 32, 48] {
+        let z2 = inhibitor_scores(&q2, &k2, FixedMult::from_f64(1.0 / (d2 as f64).sqrt()), alpha_q);
+        let mean_z = z2.data.iter().sum::<i64>() as f64 / z2.data.len() as f64;
+        // Count (j, k) terms that survive the ReLU in eq. 6.
+        let mut nonzero = 0usize;
+        let mut total = 0usize;
+        for i in 0..t2 {
+            for kk in 0..d2 {
+                for j in 0..t2 {
+                    total += 1;
+                    if v2.at2(j, kk) - z2.at2(i, j) > 0 {
+                        nonzero += 1;
+                    }
+                }
+            }
+        }
+        println!(
+            "{:>8} {:>14.1} {:>15.1}%",
+            alpha_q,
+            mean_z,
+            100.0 * nonzero as f64 / total as f64
+        );
+    }
+    println!("(larger α ⇒ smaller Z' ⇒ more value mass passes — the paper's motivation for the shift)");
+}

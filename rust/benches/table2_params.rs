@@ -1,0 +1,29 @@
+//! E2 / paper Table 2: TFHE compiler parameters for the two attention
+//! circuits at T ∈ {2, 4, 8, 16} (d = 2, 3-bit inputs), selected by our
+//! Bergerat-style optimizer; per-PBS cost converted to ms via a measured
+//! calibration bootstrap.
+//!
+//!   cargo bench --bench table2_params
+
+use inhibitor::tfhe::{bootstrap::Lut, ClientKey, Encoder, TfheParams};
+use inhibitor::util::prng::Xoshiro256;
+
+fn main() {
+    // Calibrate flops/sec from real PBS executions on this host.
+    let mut rng = Xoshiro256::new(3);
+    let p = TfheParams::test_small();
+    let ck = ClientKey::generate(p, &mut rng);
+    let sk = ck.server_key(&mut rng);
+    let enc = Encoder::new(p);
+    let ct = enc.encrypt_raw(1, &ck, &mut rng);
+    let lut = Lut::from_fn(&p, |m| m);
+    let m = inhibitor::bench_harness::bench(
+        "calibration PBS",
+        inhibitor::bench_harness::BenchConfig { warmup_iters: 2, samples: 10, inner_iters: 1 },
+        || sk.pbs(&ct, &lut),
+    );
+    println!("calibration: {}", m.summary());
+    let fps = inhibitor::optimizer::cost::calibrate_flops_per_sec(m.mean_s, &p);
+    println!("host throughput ≈ {:.2e} flop-equiv/s", fps);
+    inhibitor::bench_tables::print_table2(fps);
+}

@@ -1,0 +1,24 @@
+//! E3 / paper Table 3: plaintext integer attention timing on CPU, both
+//! mechanisms, T ∈ {32, 64, 128, 256}, fixed-size single head (d = 64),
+//! int16 codes — the paper's own experimental setup ("integer 16-bit
+//! arithmetics implemented in the Rust programming language").
+//!
+//!   cargo bench --bench table3_plaintext
+
+use std::time::Duration;
+
+fn main() {
+    let cells =
+        inhibitor::bench_tables::run_table3(&[32, 64, 128, 256], 64, Duration::from_millis(300));
+    inhibitor::bench_tables::print_table3(&cells);
+    for c in &cells {
+        println!(
+            "RAW {mech} T={t} mean_s={m:.6e} ci95_s={ci:.2e} n={n}",
+            mech = c.mechanism.name(),
+            t = c.seq_len,
+            m = c.measurement.mean_s,
+            ci = c.measurement.ci95_s,
+            n = c.measurement.samples
+        );
+    }
+}

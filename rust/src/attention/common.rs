@@ -1,0 +1,215 @@
+//! Shared attention types + float reference implementations.
+//!
+//! The float references are the ground truth the quantized and encrypted
+//! engines are tested against. They mirror `python/compile/kernels/ref.py`
+//! exactly (same equations, same constants), which ties the Rust request
+//! path to the JAX build path numerically.
+
+use crate::tensor::FTensor;
+
+/// Which attention mechanism a head runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mechanism {
+    /// Conventional scaled dot-product + Softmax (paper eq. 3).
+    DotProduct,
+    /// Inhibitor: Manhattan score + subtract-and-ReLU (paper eqs. 5–6).
+    Inhibitor,
+    /// Signed inhibitor (paper eq. 7 / appendix).
+    InhibitorSigned,
+}
+
+impl Mechanism {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mechanism::DotProduct => "dotprod",
+            Mechanism::Inhibitor => "inhibitor",
+            Mechanism::InhibitorSigned => "inhibitor-signed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Mechanism> {
+        match s {
+            "dotprod" | "dot-product" | "softmax" => Some(Mechanism::DotProduct),
+            "inhibitor" => Some(Mechanism::Inhibitor),
+            "inhibitor-signed" | "signed" => Some(Mechanism::InhibitorSigned),
+            _ => None,
+        }
+    }
+}
+
+/// Attention hyper-parameters shared by all engines.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnConfig {
+    pub mechanism: Mechanism,
+    /// Sequence length n.
+    pub seq_len: usize,
+    /// Head dimension d.
+    pub dim: usize,
+    /// Shifted-score offset α ≥ 0 (paper: α = 0.5). Applied as
+    /// Z' = (Z − α)⁺; 0 disables the shift.
+    pub alpha: f32,
+    /// Score scale γ (paper: γ = √d). Values ≤ 0 mean "use √d".
+    pub gamma: f32,
+}
+
+impl AttnConfig {
+    pub fn new(mechanism: Mechanism, seq_len: usize, dim: usize) -> Self {
+        AttnConfig { mechanism, seq_len, dim, alpha: 0.5, gamma: -1.0 }
+    }
+
+    pub fn effective_gamma(&self) -> f32 {
+        if self.gamma > 0.0 {
+            self.gamma
+        } else {
+            (self.dim as f32).sqrt()
+        }
+    }
+}
+
+/// Float reference: conventional attention, eq. 3 + H = S·V.
+pub fn ref_dotprod(q: &FTensor, k: &FTensor, v: &FTensor) -> FTensor {
+    let d = q.dims()[1] as f32;
+    let scores = q.matmul(&k.transpose2()).map(|x| x / d.sqrt());
+    scores.softmax_rows().matmul(v)
+}
+
+/// Float reference: Manhattan inhibition score, eq. 5 (+ optional shift).
+pub fn ref_inhibitor_scores(q: &FTensor, k: &FTensor, gamma: f32, alpha: f32) -> FTensor {
+    let (n, d) = (q.dims()[0], q.dims()[1]);
+    let m = k.dims()[0];
+    let mut z = FTensor::zeros(&[n, m]);
+    for i in 0..n {
+        for j in 0..m {
+            let mut s = 0.0f32;
+            for kk in 0..d {
+                s += (q.at2(i, kk) - k.at2(j, kk)).abs();
+            }
+            let zi = s / gamma;
+            z.data[i * m + j] = (zi - alpha).max(0.0); // shifted score Z'
+        }
+    }
+    z
+}
+
+/// Float reference: unsigned inhibition, eq. 6.
+pub fn ref_inhibitor(q: &FTensor, k: &FTensor, v: &FTensor, gamma: f32, alpha: f32) -> FTensor {
+    let z = ref_inhibitor_scores(q, k, gamma, alpha);
+    let (n, m) = (z.dims()[0], z.dims()[1]);
+    let dv = v.dims()[1];
+    let mut h = FTensor::zeros(&[n, dv]);
+    for i in 0..n {
+        for kk in 0..dv {
+            let mut s = 0.0f32;
+            for j in 0..m {
+                s += (v.at2(j, kk) - z.at2(i, j)).max(0.0);
+            }
+            h.data[i * dv + kk] = s;
+        }
+    }
+    h
+}
+
+/// Float reference: signed inhibition, eq. 7.
+pub fn ref_inhibitor_signed(
+    q: &FTensor,
+    k: &FTensor,
+    v: &FTensor,
+    gamma: f32,
+    alpha: f32,
+) -> FTensor {
+    let z = ref_inhibitor_scores(q, k, gamma, alpha);
+    let (n, m) = (z.dims()[0], z.dims()[1]);
+    let dv = v.dims()[1];
+    let mut h = FTensor::zeros(&[n, dv]);
+    for i in 0..n {
+        for kk in 0..dv {
+            let mut s = 0.0f32;
+            for j in 0..m {
+                let vp = v.at2(j, kk).max(0.0);
+                let vn = v.at2(j, kk).min(0.0);
+                s += (vp - z.at2(i, j)).max(0.0) + (vn + z.at2(i, j)).min(0.0);
+            }
+            h.data[i * dv + kk] = s;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn mechanism_parse_roundtrip() {
+        for m in [Mechanism::DotProduct, Mechanism::Inhibitor, Mechanism::InhibitorSigned] {
+            assert_eq!(Mechanism::parse(m.name()), Some(m));
+        }
+        assert_eq!(Mechanism::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn zero_score_passes_values_through_unsigned() {
+        // If Q == K (score 0 after shift α ≥ 0) and V ≥ 0, every row of H
+        // is the column-sum of V: Σ_j (V_jk − 0)⁺ = Σ_j V_jk.
+        let q = FTensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let v = FTensor::from_vec(&[2, 2], vec![0.5, 1.0, 2.0, 0.25]);
+        let h = ref_inhibitor(&q, &q, &v, 1.0, 0.5);
+        for i in 0..2 {
+            assert!((h.at2(i, 0) - 2.5).abs() < 1e-6);
+            assert!((h.at2(i, 1) - 1.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn signed_reduces_to_unsigned_for_nonneg_values() {
+        let mut rng = Xoshiro256::new(5);
+        let q = FTensor::randn(&[6, 4], 1.0, &mut rng);
+        let k = FTensor::randn(&[6, 4], 1.0, &mut rng);
+        let v = FTensor::randn(&[6, 4], 1.0, &mut rng).map(|x| x.abs());
+        let a = ref_inhibitor(&q, &k, &v, 2.0, 0.5);
+        let b = ref_inhibitor_signed(&q, &k, &v, 2.0, 0.5);
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn large_distance_inhibits_everything() {
+        // Keys far from queries → huge Z → H = 0 (unsigned, bounded V).
+        let q = FTensor::from_vec(&[1, 2], vec![0.0, 0.0]);
+        let k = FTensor::from_vec(&[2, 2], vec![100.0, 100.0, 80.0, 90.0]);
+        let v = FTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let h = ref_inhibitor(&q, &k, &v, 1.0, 0.0);
+        assert_eq!(h.data, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn signed_inhibition_extinguishes_both_signs() {
+        let q = FTensor::from_vec(&[1, 2], vec![0.0, 0.0]);
+        let k = FTensor::from_vec(&[2, 2], vec![100.0, 100.0, 80.0, 90.0]);
+        let v = FTensor::from_vec(&[2, 2], vec![-1.0, 2.0, 3.0, -4.0]);
+        let h = ref_inhibitor_signed(&q, &k, &v, 1.0, 0.0);
+        assert_eq!(h.data, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn dotprod_reference_rows_are_convex_combinations() {
+        let mut rng = Xoshiro256::new(9);
+        let q = FTensor::randn(&[4, 3], 1.0, &mut rng);
+        let k = FTensor::randn(&[4, 3], 1.0, &mut rng);
+        let v = FTensor::randn(&[4, 3], 1.0, &mut rng);
+        let h = ref_dotprod(&q, &k, &v);
+        let (vmin, vmax) = (v.min(), v.max());
+        for &x in &h.data {
+            assert!(x >= vmin - 1e-4 && x <= vmax + 1e-4);
+        }
+    }
+
+    #[test]
+    fn effective_gamma_defaults_to_sqrt_d() {
+        let c = AttnConfig::new(Mechanism::Inhibitor, 8, 16);
+        assert!((c.effective_gamma() - 4.0).abs() < 1e-6);
+        let mut c2 = c;
+        c2.gamma = 3.0;
+        assert_eq!(c2.effective_gamma(), 3.0);
+    }
+}

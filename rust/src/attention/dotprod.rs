@@ -1,0 +1,224 @@
+//! Quantized dot-product attention baseline (S2) — the comparator the
+//! paper measures the Inhibitor against.
+//!
+//! Pipeline (all integer):
+//!   1. `A = Q·Kᵀ` with i64 accumulation — the variable×variable products
+//!      the Inhibitor removes; quantized scale is s², and the accumulator
+//!      grows by log2(d) bits ("expansion to double precision").
+//!   2. requantize by `1/(√d·s)` to score codes (literal multiply).
+//!   3. integer Softmax via an exp **lookup table** over the score code
+//!      space — faithfully mirroring how Softmax must be realised under
+//!      TFHE (a PBS table per entry) and on LUT-based integer hardware.
+//!   4. `H = P·V` with fixed-point probabilities (second matmul).
+//!
+//! The LUT uses the numerically-stable shifted form `exp(s_j − max_i s)`,
+//! exactly as a Concrete circuit would (max, subtract, PBS, normalize).
+
+use super::common::AttnConfig;
+use crate::quant::FixedMult;
+use crate::tensor::ITensor;
+
+/// Fixed-point fraction bits for the softmax probabilities.
+pub const SOFTMAX_FRAC_BITS: u32 = 16;
+
+/// Integer softmax over score codes.
+///
+/// `scores[i][j]` are integer codes at scale `score_scale` (i.e. the real
+/// logit is `code · score_scale`). Returns fixed-point probabilities with
+/// `SOFTMAX_FRAC_BITS` fraction bits; every row sums to ≈ 2^FRAC.
+pub struct IntSoftmax {
+    /// exp(−x·score_scale)·2^FRAC for x = 0..table_len−1.
+    table: Vec<i64>,
+}
+
+impl IntSoftmax {
+    /// Build the LUT for a score code space of `score_bits` signed bits.
+    /// The worst-case shifted argument max−s spans the full signed range,
+    /// i.e. 2^score_bits distinct non-negative values — one PBS table of
+    /// exactly that size in the TFHE realization (Table 2's wider "uint"
+    /// column for the dot-product variant comes from here).
+    pub fn new(score_bits: u32, score_scale: f32) -> Self {
+        let len = 1usize << score_bits;
+        let table = (0..len)
+            .map(|x| {
+                let e = (-(x as f64) * score_scale as f64).exp();
+                (e * (1i64 << SOFTMAX_FRAC_BITS) as f64).round() as i64
+            })
+            .collect();
+        IntSoftmax { table }
+    }
+
+    pub fn table_len(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Row-wise integer softmax: scores `[n, m]` → probabilities `[n, m]`
+    /// in fixed point (2^FRAC ≈ 1.0).
+    pub fn apply_rows(&self, scores: &ITensor) -> ITensor {
+        let (n, m) = (scores.dims()[0], scores.dims()[1]);
+        let mut out = ITensor::zeros(&[n, m]);
+        for i in 0..n {
+            let row = &scores.data[i * m..(i + 1) * m];
+            let mx = *row.iter().max().expect("non-empty row");
+            // e_j = LUT[max − s_j]; the shifted index is always ≥ 0.
+            let mut es = vec![0i64; m];
+            let mut sum = 0i64;
+            for j in 0..m {
+                let idx = (mx - row[j]) as usize;
+                let e = self.table.get(idx).copied().unwrap_or(0);
+                es[j] = e;
+                sum += e;
+            }
+            let orow = &mut out.data[i * m..(i + 1) * m];
+            if sum == 0 {
+                // Degenerate: fall back to uniform (can only happen when the
+                // LUT underflows everywhere, which the max-shift prevents for
+                // the max element itself — table[0] = 2^FRAC — so never).
+                let u = (1i64 << SOFTMAX_FRAC_BITS) / m as i64;
+                orow.iter_mut().for_each(|p| *p = u);
+            } else {
+                for j in 0..m {
+                    orow[j] = (es[j] << SOFTMAX_FRAC_BITS) / sum;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Full quantized dot-product attention head.
+pub struct DotProductHead {
+    pub cfg: AttnConfig,
+    /// Requant of the Q·Kᵀ accumulator (scale s²) to score codes.
+    pub score_requant: FixedMult,
+    pub softmax: IntSoftmax,
+    /// Requant of the P·V accumulator (scale s·2^FRAC) back to code scale.
+    pub out_requant: FixedMult,
+}
+
+impl DotProductHead {
+    /// `code_scale` is the common Q/K/V input code scale; `score_bits` the
+    /// signed width of the score code space (LUT size = 2^score_bits).
+    pub fn from_config(cfg: AttnConfig, code_scale: f32, score_bits: u32) -> Self {
+        let d = cfg.dim as f64;
+        // Real logit = acc · s² / √d. Choose score_scale so the code range
+        // covers ±(score range): score_code = acc · s²/√d / score_scale.
+        // A good default: logits rarely exceed ~8 in trained models.
+        let logit_max = 8.0f64;
+        let score_scale = (logit_max / ((1i64 << (score_bits - 1)) - 1) as f64) as f32;
+        let score_requant =
+            FixedMult::from_f64(code_scale as f64 * code_scale as f64 / d.sqrt() / score_scale as f64);
+        let softmax = IntSoftmax::new(score_bits, score_scale);
+        // P (2^FRAC fixed point) × V (code scale) accumulates at
+        // scale = code_scale / 2^FRAC ⇒ requant by 2^-FRAC to code scale.
+        let out_requant = FixedMult::from_f64(1.0 / (1u64 << SOFTMAX_FRAC_BITS) as f64);
+        DotProductHead { cfg, score_requant, softmax, out_requant }
+    }
+
+    /// Run the head: Q, K, V are `[n, d]` integer code tensors at the
+    /// common code scale; output is at the same code scale.
+    pub fn forward(&self, q: &ITensor, k: &ITensor, v: &ITensor) -> ITensor {
+        let acc = q.matmul(&k.transpose2());
+        let scores = acc.map(|x| self.score_requant.apply(x));
+        let probs = self.softmax.apply_rows(&scores);
+        let hv = probs.matmul(v);
+        hv.map(|x| self.out_requant.apply(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::common::{ref_dotprod, Mechanism};
+    use crate::quant::QParams;
+    use crate::tensor::FTensor;
+    use crate::util::prng::{Rng64, Xoshiro256};
+    use crate::util::prop::{prop_assert, prop_check};
+
+    #[test]
+    fn int_softmax_rows_sum_to_one() {
+        let sm = IntSoftmax::new(8, 0.0625);
+        let scores = ITensor::from_vec(&[2, 4], vec![10, 20, 30, 40, -5, -5, -5, -5]);
+        let p = sm.apply_rows(&scores);
+        for i in 0..2 {
+            let s: i64 = (0..4).map(|j| p.at2(i, j)).sum();
+            let one = 1i64 << SOFTMAX_FRAC_BITS;
+            assert!((s - one).abs() <= 4, "row {i} sums to {s}, want ≈ {one}");
+        }
+        // Monotone in the score.
+        assert!(p.at2(0, 3) > p.at2(0, 0));
+        // Uniform row stays uniform.
+        assert_eq!(p.at2(1, 0), p.at2(1, 3));
+    }
+
+    #[test]
+    fn int_softmax_tracks_float() {
+        prop_check("int softmax ≈ float softmax", 64, |rng| {
+            let m = 2 + rng.next_bounded(8) as usize;
+            let scale = 0.05f32;
+            let sm = IntSoftmax::new(8, scale);
+            let codes = ITensor::random(&[1, m], -100, 100, rng);
+            let p = sm.apply_rows(&codes);
+            let f = FTensor::from_vec(&[1, m], codes.data.iter().map(|&c| c as f32 * scale).collect())
+                .softmax_rows();
+            for j in 0..m {
+                let got = p.at2(0, j) as f32 / (1i64 << SOFTMAX_FRAC_BITS) as f32;
+                let want = f.at2(0, j);
+                prop_assert((got - want).abs() < 0.01, &format!("j={j} got={got} want={want}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantized_head_tracks_float_reference() {
+        prop_check("int dotprod head ≈ float ref", 16, |rng| {
+            let n = 2 + rng.next_bounded(6) as usize;
+            let d = 2 + rng.next_bounded(6) as usize;
+            let mut frng = Xoshiro256::new(rng.next_u64());
+            let qf = FTensor::randn(&[n, d], 1.0, &mut frng);
+            let kf = FTensor::randn(&[n, d], 1.0, &mut frng);
+            let vf = FTensor::randn(&[n, d], 1.0, &mut frng);
+            let qp = QParams::fit_symmetric(4.0, 12);
+            let cfg = AttnConfig::new(Mechanism::DotProduct, n, d);
+            let head = DotProductHead::from_config(cfg, qp.scale, 10);
+            let h_int = head.forward(
+                &qp.quantize_tensor(&qf),
+                &qp.quantize_tensor(&kf),
+                &qp.quantize_tensor(&vf),
+            );
+            let h = qp.dequantize_tensor(&h_int);
+            let want = ref_dotprod(&qf, &kf, &vf);
+            // Output is a convex combination of V rows → error is O(scale)
+            // plus softmax LUT error spread over V's range.
+            let tol = 0.1f32.max(qp.scale * 8.0);
+            let err = h.max_abs_diff(&want);
+            prop_assert(err <= tol, &format!("err {err} > tol {tol} (n={n} d={d})"))
+        });
+    }
+
+    #[test]
+    fn one_hot_attention_selects_row() {
+        // One query matching one key exactly with large margin → P ≈ onehot
+        // → H ≈ that V row.
+        let qp = QParams::fit_symmetric(8.0, 12);
+        let q = FTensor::from_vec(&[1, 2], vec![4.0, 4.0]);
+        let k = FTensor::from_vec(&[3, 2], vec![4.0, 4.0, -4.0, 4.0, 4.0, -4.0]);
+        let v = FTensor::from_vec(&[3, 2], vec![1.0, 2.0, 5.0, 6.0, -3.0, -4.0]);
+        let cfg = AttnConfig::new(Mechanism::DotProduct, 3, 2);
+        let head = DotProductHead::from_config(cfg, qp.scale, 10);
+        let h = qp.dequantize_tensor(&head.forward(
+            &qp.quantize_tensor(&q),
+            &qp.quantize_tensor(&k),
+            &qp.quantize_tensor(&v),
+        ));
+        assert!((h.at2(0, 0) - 1.0).abs() < 0.3, "{}", h.at2(0, 0));
+        assert!((h.at2(0, 1) - 2.0).abs() < 0.3, "{}", h.at2(0, 1));
+    }
+
+    #[test]
+    fn lut_size_matches_score_bits() {
+        assert_eq!(IntSoftmax::new(7, 0.1).table_len(), 128);
+        assert_eq!(IntSoftmax::new(4, 0.1).table_len(), 16);
+    }
+}

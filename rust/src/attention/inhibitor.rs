@@ -1,0 +1,300 @@
+//! Quantized Inhibitor attention (S2) — the paper's contribution.
+//!
+//! All arithmetic is integer: |Q−K| Manhattan scores (eq. 5), the shift
+//! α (quantized to the score scale), and the subtract-and-ReLU inhibition
+//! (eq. 6, signed variant eq. 7). Two implementations are provided:
+//!
+//! * [`inhibitor_attention_naive`] — literal transcription of eqs. 5–7
+//!   (broadcast, ReLU, sum). Used as the in-crate oracle.
+//! * [`inhibitor_attention`] — the fused form of appendix eqs. 9–10:
+//!   `Σ_j (V_jk − Z_ij)⁺ = ½(Σ_j V_jk − Σ_j Z_ij + Σ_j |V_jk − Z_ij|)`
+//!   which keeps the working set at O(n·m) and exposes the pairwise-|·|
+//!   reduction that fused cdist kernels (and our Pallas kernel) implement.
+//!
+//! The halving in eqs. 9–10 is exact in integers when performed once on
+//! the final accumulated sum *if* the sum is even; to stay exact we keep
+//! the doubled accumulator `2·H` and fold the ÷2 into the output
+//! requantization factor (a literal multiplication — cheap everywhere,
+//! including under TFHE).
+
+use super::common::AttnConfig;
+use crate::quant::FixedMult;
+use crate::tensor::ITensor;
+
+/// Integer inhibition scores, eq. 5 with scale γ and shift α folded in:
+/// `Z_ij = ((Σ_k |Q_ik − K_jk|) · (1/γ) − α_q)⁺` where the 1/γ literal is
+/// applied by fixed-point requantization and α_q is α quantized to the
+/// score scale. If `alpha_q == 0` the ReLU is skipped (plain eq. 5).
+pub fn inhibitor_scores(q: &ITensor, k: &ITensor, inv_gamma: FixedMult, alpha_q: i64) -> ITensor {
+    let raw = q.manhattan_cdist(k);
+    let mut z = ITensor { shape: raw.shape.clone(), data: Vec::with_capacity(raw.data.len()) };
+    if alpha_q > 0 {
+        z.data.extend(raw.data.iter().map(|&x| (inv_gamma.apply(x) - alpha_q).max(0)));
+    } else {
+        z.data.extend(raw.data.iter().map(|&x| inv_gamma.apply(x)));
+    }
+    z
+}
+
+/// Naive unsigned inhibition (eq. 6): `H_ik = Σ_j (V_jk − Z_ij)⁺`.
+pub fn inhibit_naive(z: &ITensor, v: &ITensor) -> ITensor {
+    let (n, m) = (z.dims()[0], z.dims()[1]);
+    let (m2, dv) = (v.dims()[0], v.dims()[1]);
+    assert_eq!(m, m2, "Z and V disagree on sequence length");
+    let mut h = ITensor::zeros(&[n, dv]);
+    for i in 0..n {
+        for kk in 0..dv {
+            let mut s = 0i64;
+            for j in 0..m {
+                s += (v.at2(j, kk) - z.at2(i, j)).max(0);
+            }
+            h.data[i * dv + kk] = s;
+        }
+    }
+    h
+}
+
+/// Naive signed inhibition (eq. 7).
+pub fn inhibit_signed_naive(z: &ITensor, v: &ITensor) -> ITensor {
+    let (n, m) = (z.dims()[0], z.dims()[1]);
+    let dv = v.dims()[1];
+    assert_eq!(m, v.dims()[0]);
+    let mut h = ITensor::zeros(&[n, dv]);
+    for i in 0..n {
+        for kk in 0..dv {
+            let mut s = 0i64;
+            for j in 0..m {
+                let vjk = v.at2(j, kk);
+                let (vp, vn) = (vjk.max(0), vjk.min(0));
+                s += (vp - z.at2(i, j)).max(0) + (vn + z.at2(i, j)).min(0);
+            }
+            h.data[i * dv + kk] = s;
+        }
+    }
+    h
+}
+
+/// Fused unsigned inhibition, eq. 9, returning the **doubled** result
+/// `2·H_ik = Σ_j V_jk − Σ_j Z_ij + Σ_j |V_jk − Z_ij|` (exact in integers).
+pub fn inhibit_fused_x2(z: &ITensor, v: &ITensor) -> ITensor {
+    let (n, m) = (z.dims()[0], z.dims()[1]);
+    let dv = v.dims()[1];
+    assert_eq!(m, v.dims()[0]);
+    // Column sums of V: Σ_j V_jk  (k-indexed).
+    let v_colsum = v.sum_axis2(0);
+    // Row sums of Z: Σ_j Z_ij  (i-indexed).
+    let z_rowsum = z.sum_axis2(1);
+    let mut h = ITensor::zeros(&[n, dv]);
+    for i in 0..n {
+        let zrow = &z.data[i * m..(i + 1) * m];
+        let hrow = &mut h.data[i * dv..(i + 1) * dv];
+        // |V_jk − Z_ij| accumulated per k, streaming over j (V row-major).
+        for (j, &zij) in zrow.iter().enumerate() {
+            let vrow = &v.data[j * dv..(j + 1) * dv];
+            for (acc, &vjk) in hrow.iter_mut().zip(vrow.iter()) {
+                *acc += (vjk - zij).abs();
+            }
+        }
+        for (kk, acc) in hrow.iter_mut().enumerate() {
+            *acc += v_colsum[kk] - z_rowsum[i];
+        }
+    }
+    h
+}
+
+/// Fused signed inhibition, eq. 10, returning the doubled result
+/// `2·H_ik = Σ_j V_jk + Σ_j |V⁺_jk − Z_ij| − Σ_j |V⁻_jk + Z_ij|`.
+pub fn inhibit_signed_fused_x2(z: &ITensor, v: &ITensor) -> ITensor {
+    let (n, m) = (z.dims()[0], z.dims()[1]);
+    let dv = v.dims()[1];
+    assert_eq!(m, v.dims()[0]);
+    let v_colsum = v.sum_axis2(0);
+    // Pre-split V once (reused across all query rows).
+    let vp: Vec<i64> = v.data.iter().map(|&x| x.max(0)).collect();
+    let vn: Vec<i64> = v.data.iter().map(|&x| x.min(0)).collect();
+    let mut h = ITensor::zeros(&[n, dv]);
+    for i in 0..n {
+        let zrow = &z.data[i * m..(i + 1) * m];
+        let hrow = &mut h.data[i * dv..(i + 1) * dv];
+        for (j, &zij) in zrow.iter().enumerate() {
+            let vprow = &vp[j * dv..(j + 1) * dv];
+            let vnrow = &vn[j * dv..(j + 1) * dv];
+            for kk in 0..dv {
+                hrow[kk] += (vprow[kk] - zij).abs() - (vnrow[kk] + zij).abs();
+            }
+        }
+        for (kk, acc) in hrow.iter_mut().enumerate() {
+            *acc += v_colsum[kk];
+        }
+    }
+    h
+}
+
+/// Full quantized Inhibitor attention head.
+///
+/// Inputs are integer codes at a common scale `s`; `inv_gamma` carries the
+/// 1/γ literal; `alpha_q` is α quantized to the score scale; `out_requant`
+/// maps the doubled accumulator `2·H` back to code scale (so it should
+/// embed the extra factor ½).
+pub struct InhibitorHead {
+    pub cfg: AttnConfig,
+    pub inv_gamma: FixedMult,
+    pub alpha_q: i64,
+    pub out_requant: FixedMult,
+    pub signed: bool,
+}
+
+impl InhibitorHead {
+    /// Build a head from an `AttnConfig` and the common input code scale.
+    pub fn from_config(cfg: AttnConfig, code_scale: f32, signed: bool) -> Self {
+        let gamma = cfg.effective_gamma();
+        // Scores share the input scale after the 1/γ literal; α quantizes
+        // to the same scale.
+        let alpha_q = (cfg.alpha / code_scale).round() as i64;
+        InhibitorHead {
+            cfg,
+            inv_gamma: FixedMult::from_f64(1.0 / gamma as f64),
+            alpha_q,
+            // ÷2 for the doubled fused accumulator; output stays at the
+            // common code scale (sums over the sequence can grow the range;
+            // the model layer handles that with its own requant).
+            out_requant: FixedMult::from_f64(0.5),
+            signed,
+        }
+    }
+
+    /// Run the head: Q, K, V are `[n, d]` integer code tensors.
+    pub fn forward(&self, q: &ITensor, k: &ITensor, v: &ITensor) -> ITensor {
+        let z = inhibitor_scores(q, k, self.inv_gamma, self.alpha_q);
+        let h2 = if self.signed {
+            inhibit_signed_fused_x2(&z, v)
+        } else {
+            inhibit_fused_x2(&z, v)
+        };
+        h2.map(|x| self.out_requant.apply(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::common::{ref_inhibitor, ref_inhibitor_signed, Mechanism};
+    use crate::quant::QParams;
+    use crate::tensor::FTensor;
+    use crate::util::prng::{Rng64, Xoshiro256};
+    use crate::util::prop::{prop_assert, prop_assert_eq, prop_check};
+
+    #[test]
+    fn fused_matches_naive_unsigned() {
+        prop_check("eq9 fused == eq6 naive (x2)", 64, |rng| {
+            let n = 1 + rng.next_bounded(8) as usize;
+            let m = 1 + rng.next_bounded(8) as usize;
+            let dv = 1 + rng.next_bounded(6) as usize;
+            let z = ITensor::random(&[n, m], 0, 60, rng);
+            let v = ITensor::random(&[m, dv], -40, 40, rng);
+            let naive = inhibit_naive(&z, &v).scalar_mul(2);
+            let fused = inhibit_fused_x2(&z, &v);
+            prop_assert_eq(fused, naive, "fused vs naive")
+        });
+    }
+
+    #[test]
+    fn fused_matches_naive_signed() {
+        prop_check("eq10 fused == eq7 naive (x2)", 64, |rng| {
+            let n = 1 + rng.next_bounded(8) as usize;
+            let m = 1 + rng.next_bounded(8) as usize;
+            let dv = 1 + rng.next_bounded(6) as usize;
+            let z = ITensor::random(&[n, m], 0, 60, rng);
+            let v = ITensor::random(&[m, dv], -40, 40, rng);
+            let naive = inhibit_signed_naive(&z, &v).scalar_mul(2);
+            let fused = inhibit_signed_fused_x2(&z, &v);
+            prop_assert_eq(fused, naive, "fused vs naive signed")
+        });
+    }
+
+    #[test]
+    fn scores_shift_clamps_at_zero() {
+        let q = ITensor::from_vec(&[1, 2], vec![3, 3]);
+        let k = ITensor::from_vec(&[2, 2], vec![3, 3, 4, 5]);
+        let z = inhibitor_scores(&q, &k, FixedMult::from_f64(1.0), 2);
+        // distances: 0 and 3; shifted by 2 → 0 and 1.
+        assert_eq!(z.data, vec![0, 1]);
+    }
+
+    #[test]
+    fn scores_without_shift_are_plain_distance() {
+        let q = ITensor::from_vec(&[1, 2], vec![0, 0]);
+        let k = ITensor::from_vec(&[1, 2], vec![5, -7]);
+        let z = inhibitor_scores(&q, &k, FixedMult::from_f64(1.0), 0);
+        assert_eq!(z.data, vec![12]);
+    }
+
+    #[test]
+    fn quantized_head_tracks_float_reference() {
+        // End-to-end: quantize float Q/K/V, run the integer head, compare to
+        // the float reference within a quantization-error bound.
+        prop_check("int head ≈ float ref", 24, |rng| {
+            let n = 2 + rng.next_bounded(6) as usize;
+            let d = 2 + rng.next_bounded(6) as usize;
+            let mut frng = Xoshiro256::new(rng.next_u64());
+            let qf = FTensor::randn(&[n, d], 1.0, &mut frng);
+            let kf = FTensor::randn(&[n, d], 1.0, &mut frng);
+            let vf = FTensor::randn(&[n, d], 1.0, &mut frng).map(|x| x.abs());
+            let qp = QParams::fit_symmetric(4.0, 12);
+            let cfg = AttnConfig::new(Mechanism::Inhibitor, n, d);
+            let head = InhibitorHead::from_config(cfg, qp.scale, false);
+            let h_int = head.forward(
+                &qp.quantize_tensor(&qf),
+                &qp.quantize_tensor(&kf),
+                &qp.quantize_tensor(&vf),
+            );
+            let h = qp.dequantize_tensor(&h_int);
+            let want = ref_inhibitor(&qf, &kf, &vf, cfg.effective_gamma(), cfg.alpha);
+            // Error budget: n terms, each with O(scale) rounding error from
+            // (d+1) quantized operands plus the score requant.
+            let tol = qp.scale * (n as f32) * (d as f32 + 3.0);
+            let err = h.max_abs_diff(&want);
+            prop_assert(err <= tol, &format!("err {err} > tol {tol} (n={n}, d={d})"))
+        });
+    }
+
+    #[test]
+    fn quantized_signed_head_tracks_float_reference() {
+        prop_check("int signed head ≈ float ref", 24, |rng| {
+            let n = 2 + rng.next_bounded(6) as usize;
+            let d = 2 + rng.next_bounded(6) as usize;
+            let mut frng = Xoshiro256::new(rng.next_u64());
+            let qf = FTensor::randn(&[n, d], 1.0, &mut frng);
+            let kf = FTensor::randn(&[n, d], 1.0, &mut frng);
+            let vf = FTensor::randn(&[n, d], 1.0, &mut frng);
+            let qp = QParams::fit_symmetric(4.0, 12);
+            let cfg = AttnConfig::new(Mechanism::InhibitorSigned, n, d);
+            let head = InhibitorHead::from_config(cfg, qp.scale, true);
+            let h_int = head.forward(
+                &qp.quantize_tensor(&qf),
+                &qp.quantize_tensor(&kf),
+                &qp.quantize_tensor(&vf),
+            );
+            let h = qp.dequantize_tensor(&h_int);
+            let want = ref_inhibitor_signed(&qf, &kf, &vf, cfg.effective_gamma(), cfg.alpha);
+            let tol = qp.scale * (n as f32) * (d as f32 + 3.0);
+            let err = h.max_abs_diff(&want);
+            prop_assert(err <= tol, &format!("err {err} > tol {tol} (n={n}, d={d})"))
+        });
+    }
+
+    #[test]
+    fn identical_query_key_passes_nonneg_values() {
+        // Z = 0 (with α ≥ 0 shift) ⇒ H row = column sums of V.
+        let n = 3;
+        let q = ITensor::from_vec(&[n, 2], vec![7, -2, 7, -2, 7, -2]);
+        let v = ITensor::from_vec(&[n, 2], vec![1, 2, 3, 4, 5, 6]);
+        let cfg = AttnConfig::new(Mechanism::Inhibitor, n, 2);
+        let head = InhibitorHead::from_config(cfg, 0.05, false);
+        let h = head.forward(&q, &q, &v);
+        for i in 0..n {
+            assert_eq!(h.at2(i, 0), 9);
+            assert_eq!(h.at2(i, 1), 12);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Plaintext quantized attention engines (S2): the Inhibitor (paper
+//! eqs. 5–10) and the conventional dot-product + Softmax baseline.
+
+pub mod common;
+pub mod dotprod;
+pub mod inhibitor;
+
+pub use common::{AttnConfig, Mechanism};
+pub use dotprod::{DotProductHead, IntSoftmax};
+pub use inhibitor::InhibitorHead;
+
+use crate::tensor::ITensor;
+
+/// Unified head interface so the model and benches can swap mechanisms.
+pub enum AttentionHead {
+    DotProduct(DotProductHead),
+    Inhibitor(InhibitorHead),
+}
+
+impl AttentionHead {
+    /// Construct the head named by `cfg.mechanism` with sensible defaults:
+    /// 10-bit score codes for the dot-product LUT, fused inhibitor forms.
+    pub fn build(cfg: AttnConfig, code_scale: f32) -> Self {
+        match cfg.mechanism {
+            Mechanism::DotProduct => {
+                AttentionHead::DotProduct(DotProductHead::from_config(cfg, code_scale, 10))
+            }
+            Mechanism::Inhibitor => {
+                AttentionHead::Inhibitor(InhibitorHead::from_config(cfg, code_scale, false))
+            }
+            Mechanism::InhibitorSigned => {
+                AttentionHead::Inhibitor(InhibitorHead::from_config(cfg, code_scale, true))
+            }
+        }
+    }
+
+    pub fn forward(&self, q: &ITensor, k: &ITensor, v: &ITensor) -> ITensor {
+        match self {
+            AttentionHead::DotProduct(h) => h.forward(q, k, v),
+            AttentionHead::Inhibitor(h) => h.forward(q, k, v),
+        }
+    }
+
+    pub fn mechanism(&self) -> Mechanism {
+        match self {
+            AttentionHead::DotProduct(h) => h.cfg.mechanism,
+            AttentionHead::Inhibitor(h) => h.cfg.mechanism,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn build_dispatches_all_mechanisms() {
+        let mut rng = Xoshiro256::new(1);
+        let q = ITensor::random(&[4, 4], -50, 50, &mut rng);
+        let k = ITensor::random(&[4, 4], -50, 50, &mut rng);
+        let v = ITensor::random(&[4, 4], -50, 50, &mut rng);
+        for m in [Mechanism::DotProduct, Mechanism::Inhibitor, Mechanism::InhibitorSigned] {
+            let head = AttentionHead::build(AttnConfig::new(m, 4, 4), 0.05);
+            let h = head.forward(&q, &k, &v);
+            assert_eq!(h.dims(), &[4, 4]);
+            assert_eq!(head.mechanism(), m);
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Statistical micro-benchmark harness (criterion replacement).
+//!
+//! Criterion is not available in the offline registry, so the paper-table
+//! benches use this harness. It mirrors what the paper reports: timings
+//! averaged over repeated runs with a 95% confidence interval
+//! ("averaged over 20 repeated experiments and significant at the 95%
+//! confidence level").
+//!
+//! Protocol per benchmark:
+//!   1. warm up for `warmup_iters` un-timed iterations,
+//!   2. take `samples` timed samples (each sample may batch `inner_iters`
+//!      iterations for fast bodies so the clock resolution doesn't bite),
+//!   3. report mean, std-dev, and the 95% CI half-width (t≈1.96·σ/√n — we
+//!      use the normal quantile; at n=20 the Student-t correction is ~6%,
+//!      irrelevant at the factor-level comparisons the paper makes).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Mean wall-clock time per iteration, seconds.
+    pub mean_s: f64,
+    /// Sample standard deviation, seconds.
+    pub std_s: f64,
+    /// Half-width of the 95% confidence interval, seconds.
+    pub ci95_s: f64,
+    pub samples: usize,
+    pub inner_iters: usize,
+}
+
+impl Measurement {
+    /// Pretty time with an auto-selected unit, e.g. "63.1 µs".
+    pub fn fmt_time(s: f64) -> String {
+        if s >= 1.0 {
+            format!("{:.3} s", s)
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else if s >= 1e-6 {
+            format!("{:.1} µs", s * 1e6)
+        } else {
+            format!("{:.1} ns", s * 1e9)
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>12} ± {:>10}  (n={}, inner={})",
+            self.name,
+            Self::fmt_time(self.mean_s),
+            Self::fmt_time(self.ci95_s),
+            self.samples,
+            self.inner_iters
+        )
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Iterations batched inside one timed sample (1 for slow bodies).
+    pub inner_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 3, samples: 20, inner_iters: 1 }
+    }
+}
+
+impl BenchConfig {
+    /// Config for fast (sub-ms) bodies: batch iterations per sample.
+    pub fn fast() -> Self {
+        Self { warmup_iters: 50, samples: 20, inner_iters: 50 }
+    }
+
+    /// Config for very slow bodies (seconds each), e.g. PBS-heavy circuits.
+    pub fn slow(samples: usize) -> Self {
+        Self { warmup_iters: 1, samples, inner_iters: 1 }
+    }
+}
+
+/// Run one benchmark. `f` is the body; its return value is black-boxed so
+/// the optimizer cannot delete the computation.
+pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..cfg.inner_iters {
+            black_box(f());
+        }
+        let dt = t0.elapsed();
+        times.push(dt.as_secs_f64() / cfg.inner_iters as f64);
+    }
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = if times.len() > 1 {
+        times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / (n - 1.0)
+    } else {
+        0.0
+    };
+    let std = var.sqrt();
+    let ci95 = 1.96 * std / n.sqrt();
+    Measurement {
+        name: name.to_string(),
+        mean_s: mean,
+        std_s: std,
+        ci95_s: ci95,
+        samples: times.len(),
+        inner_iters: cfg.inner_iters,
+    }
+}
+
+/// Re-implementation of `std::hint::black_box` semantics that works on
+/// stable without relying on the (now stable) intrinsic — kept thin.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Auto-tune `inner_iters` so one sample takes ≥ `target` wall time, then
+/// run the benchmark. Good default for bodies of unknown speed.
+pub fn bench_auto<T>(name: &str, target: Duration, mut f: impl FnMut() -> T) -> Measurement {
+    // Estimate the body cost with a few probes.
+    let t0 = Instant::now();
+    let mut probes = 0usize;
+    while t0.elapsed() < Duration::from_millis(20) && probes < 1000 {
+        black_box(f());
+        probes += 1;
+    }
+    let per_iter = t0.elapsed().as_secs_f64() / probes.max(1) as f64;
+    let inner = ((target.as_secs_f64() / per_iter).ceil() as usize).clamp(1, 100_000);
+    let cfg = BenchConfig { warmup_iters: inner.min(10), samples: 20, inner_iters: inner };
+    bench(name, cfg, f)
+}
+
+/// Render a simple aligned table of measurements (one row per entry),
+/// plus a ratio column against a named baseline if provided.
+pub fn print_table(title: &str, rows: &[Measurement], baseline_of: impl Fn(&str) -> Option<usize>) {
+    println!("\n=== {title} ===");
+    for (i, m) in rows.iter().enumerate() {
+        let ratio = baseline_of(&m.name)
+            .and_then(|b| rows.get(b))
+            .map(|b| format!("  x{:.2} vs {}", b.mean_s / m.mean_s, b.name))
+            .unwrap_or_default();
+        println!("{:>2}. {}{}", i + 1, m.summary(), ratio);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let m = bench("spin", BenchConfig { warmup_iters: 2, samples: 10, inner_iters: 10 }, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.std_s >= 0.0);
+        assert_eq!(m.samples, 10);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(Measurement::fmt_time(2.5).ends_with(" s"));
+        assert!(Measurement::fmt_time(2.5e-3).ends_with(" ms"));
+        assert!(Measurement::fmt_time(2.5e-6).ends_with(" µs"));
+        assert!(Measurement::fmt_time(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn bench_auto_picks_inner() {
+        let m = bench_auto("fast-body", Duration::from_millis(5), || 1 + 1);
+        assert!(m.inner_iters >= 1);
+    }
+}

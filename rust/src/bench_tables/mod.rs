@@ -1,0 +1,129 @@
+//! Paper-table printers (S13): shared by `rust/benches/*` and the
+//! `inhibitor tables` CLI subcommand. Each function regenerates one table
+//! of the paper's evaluation in the same row layout, annotated with the
+//! paper's reference values so the *shape* comparison is immediate.
+
+use crate::attention::{AttentionHead, AttnConfig, Mechanism};
+use crate::bench_harness::{bench_auto, Measurement};
+use crate::tensor::ITensor;
+use crate::util::prng::Xoshiro256;
+use std::time::Duration;
+
+/// Paper reference values (for side-by-side printing).
+pub const PAPER_TABLE3_US: [(usize, f64, f64); 4] = [
+    // (T, dotprod µs, inhibitor µs)
+    (32, 98.6, 63.1),
+    (64, 330.0, 178.0),
+    (128, 1200.0, 577.0),
+    (256, 4480.0, 2500.0),
+];
+
+pub const PAPER_TABLE4_S: [(usize, f64, f64); 4] = [
+    // (T, dotprod s, inhibitor s)
+    (2, 2.68, 0.749),
+    (4, 22.4, 8.56),
+    (8, 107.0, 23.8),
+    (16, 828.0, 127.0),
+];
+
+/// One measured cell of Table 3.
+pub struct Table3Cell {
+    pub mechanism: Mechanism,
+    pub seq_len: usize,
+    pub measurement: Measurement,
+}
+
+/// Run the plaintext int16 timing experiment (Table 3): fixed-size single
+/// head (d = `dim`), int16 codes, both mechanisms.
+pub fn run_table3(seq_lens: &[usize], dim: usize, target: Duration) -> Vec<Table3Cell> {
+    let mut cells = Vec::new();
+    let mut rng = Xoshiro256::new(0x7AB1E3);
+    for &t in seq_lens {
+        for mech in [Mechanism::DotProduct, Mechanism::Inhibitor] {
+            let cfg = AttnConfig::new(mech, t, dim);
+            let head = AttentionHead::build(cfg, 0.01);
+            // int16 codes, as in the paper's Rust experiment.
+            let q = ITensor::random(&[t, dim], -127, 127, &mut rng);
+            let k = ITensor::random(&[t, dim], -127, 127, &mut rng);
+            let v = ITensor::random(&[t, dim], -127, 127, &mut rng);
+            let m = bench_auto(
+                &format!("{} T={}", mech.name(), t),
+                target,
+                || head.forward(&q, &k, &v),
+            );
+            cells.push(Table3Cell { mechanism: mech, seq_len: t, measurement: m });
+        }
+    }
+    cells
+}
+
+/// Print Table 3 next to the paper's numbers.
+pub fn print_table3(cells: &[Table3Cell]) {
+    println!("\n=== Table 3 — plaintext int16 attention, CPU (single head, d fixed) ===");
+    println!(
+        "{:>4} {:>14} {:>14} {:>8}   {:>12} {:>8}",
+        "T", "dotprod", "inhibitor", "speedup", "paper dp/inh", "paper x"
+    );
+    for &(t, p_dot, p_inh) in &PAPER_TABLE3_US {
+        let dot = cells.iter().find(|c| c.seq_len == t && c.mechanism == Mechanism::DotProduct);
+        let inh = cells.iter().find(|c| c.seq_len == t && c.mechanism == Mechanism::Inhibitor);
+        if let (Some(dot), Some(inh)) = (dot, inh) {
+            println!(
+                "{:>4} {:>14} {:>14} {:>7.2}x   {:>5.0}/{:<5.0}µs {:>7.2}x",
+                t,
+                Measurement::fmt_time(dot.measurement.mean_s),
+                Measurement::fmt_time(inh.measurement.mean_s),
+                dot.measurement.mean_s / inh.measurement.mean_s,
+                p_dot,
+                p_inh,
+                p_dot / p_inh,
+            );
+        }
+    }
+}
+
+/// Print Table 2 (parameter optimizer output) next to the paper's rows.
+pub fn print_table2(flops_per_sec: f64) {
+    let rows = crate::optimizer::table2(&[2, 4, 8, 16], flops_per_sec);
+    println!("\n=== Table 2 — TFHE parameters selected by the optimizer (d=2, 3-bit inputs) ===");
+    println!(
+        "{:>4} {:<12} {:>7} {:>8} {:>6} {:>9} {:>4} {:>5} {:>7} {:>11}",
+        "T", "mechanism", "lweDim", "baseLog", "level", "polySize", "int", "uint", "#PBS", "est PBS ms"
+    );
+    for r in rows {
+        println!(
+            "{:>4} {:<12} {:>7} {:>8} {:>6} {:>9} {:>4} {:>5} {:>7} {:>11.2}",
+            r.seq_len,
+            r.mechanism,
+            r.lwe_dim,
+            r.base_log,
+            r.level,
+            r.poly_size,
+            r.int_bits,
+            r.uint_bits,
+            r.pbs_count,
+            r.est_pbs_ms
+        );
+    }
+    println!("paper: inhibitor rows used int 5-6 / uint 4-6; dotprod int 6-8 / uint 7-8,");
+    println!("       polySize 2048-4096, lweDim 792-883, baseLog 15-23, level 1-2.");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_produces_all_cells_and_inhibitor_wins() {
+        // Tiny target duration — statistical quality is the bench's job;
+        // here we assert structure + the headline direction at T=64.
+        let cells = run_table3(&[64], 64, Duration::from_millis(30));
+        assert_eq!(cells.len(), 2);
+        let dot = &cells[0].measurement.mean_s;
+        let inh = &cells[1].measurement.mean_s;
+        assert!(
+            inh < dot,
+            "inhibitor ({inh:.2e}s) should beat dotprod ({dot:.2e}s) at T=64"
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! Dynamic batcher (S9): groups compatible requests (same batch key)
+//! into batches bounded by size and wait time — the standard
+//! continuous-batching front of a serving system (vLLM-router-style),
+//! implemented over std::sync primitives (tokio is unavailable offline).
+
+use super::request::InferRequest;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before the batch flushes.
+    pub max_wait: Duration,
+    /// Bounded queue capacity (backpressure: submit fails when full).
+    pub queue_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5), queue_cap: 1024 }
+    }
+}
+
+struct Inner {
+    queue: VecDeque<InferRequest>,
+    closed: bool,
+}
+
+/// A single-key dynamic batcher. The router keeps one per batch key.
+pub struct Batcher {
+    policy: BatchPolicy,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request. Err(req) when the queue is full (backpressure)
+    /// or the batcher is closed.
+    pub fn submit(&self, req: InferRequest) -> Result<(), InferRequest> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.queue.len() >= self.policy.queue_cap {
+            return Err(req);
+        }
+        g.queue.push_back(req);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking: wait for the next batch. Returns None when closed and
+    /// drained. Flushes when `max_batch` is reached or the oldest request
+    /// has waited `max_wait`.
+    pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.queue.len() >= self.policy.max_batch {
+                return Some(drain(&mut g.queue, self.policy.max_batch));
+            }
+            if let Some(oldest) = g.queue.front() {
+                let age = oldest.enqueued.elapsed();
+                if age >= self.policy.max_wait {
+                    let n = g.queue.len().min(self.policy.max_batch);
+                    return Some(drain(&mut g.queue, n));
+                }
+                // Wait for more requests or the deadline of the oldest.
+                let timeout = self.policy.max_wait - age;
+                let (ng, _) = self.cv.wait_timeout(g, timeout).unwrap();
+                g = ng;
+            } else {
+                if g.closed {
+                    return None;
+                }
+                // Idle: sleep until a submit (or close) signals.
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+    }
+
+    /// Close the batcher: pending requests still drain via next_batch.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn drain(q: &mut VecDeque<InferRequest>, n: usize) -> Vec<InferRequest> {
+    q.drain(..n).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{EnginePath, Payload};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    fn req(id: u64) -> InferRequest {
+        InferRequest::new(id, EnginePath::QuantInt("inhibitor".into()), Payload::Tokens(vec![]))
+    }
+
+    #[test]
+    fn flushes_on_max_batch() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+            queue_cap: 100,
+        });
+        for i in 0..3 {
+            b.submit(req(i)).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn flushes_on_timeout_with_partial_batch() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(10),
+            queue_cap: 100,
+        });
+        b.submit(req(7)).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(1),
+            queue_cap: 2,
+        });
+        b.submit(req(0)).unwrap();
+        b.submit(req(1)).unwrap();
+        assert!(b.submit(req(2)).is_err());
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 10,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 10,
+        });
+        b.submit(req(1)).unwrap();
+        b.close();
+        assert!(b.submit(req(2)).is_err(), "closed batcher rejects");
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_no_loss_no_duplication() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 7,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 10_000,
+        }));
+        let n_threads = 4;
+        let per_thread = 250u64;
+        let mut handles = Vec::new();
+        for t in 0..n_threads {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    b.submit(req(t * 1_000_000 + i)).unwrap();
+                }
+            }));
+        }
+        let consumer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(batch) = b.next_batch() {
+                    assert!(batch.len() <= 7, "batch size bound");
+                    seen.extend(batch.iter().map(|r| r.id));
+                }
+                seen
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Allow the consumer to drain, then close.
+        while !b.is_empty() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        b.close();
+        let mut seen = consumer.join().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen.len(), (n_threads * per_thread) as usize, "no loss");
+        seen.dedup();
+        assert_eq!(seen.len(), (n_threads * per_thread) as usize, "no duplication");
+    }
+}

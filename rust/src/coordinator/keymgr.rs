@@ -1,0 +1,112 @@
+//! Key/session manager for the encrypted path (S9): holds per-client
+//! server keys (bootstrap + key-switch material) and registered
+//! ciphertext payloads. Client secret keys never enter this process in a
+//! real deployment; tests generate both sides locally.
+
+use crate::tfhe::ops::{CtInt, FheContext};
+use crate::tfhe::params::TfheParams;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One client session: evaluation context + ciphertext store.
+pub struct Session {
+    pub ctx: FheContext,
+    store: Mutex<HashMap<u64, Vec<CtInt>>>,
+    next_blob: AtomicU64,
+}
+
+impl Session {
+    pub fn new(ctx: FheContext) -> Self {
+        Session { ctx, store: Mutex::new(HashMap::new()), next_blob: AtomicU64::new(1) }
+    }
+
+    /// Register a ciphertext bundle; returns its reference id.
+    pub fn register(&self, cts: Vec<CtInt>) -> u64 {
+        let id = self.next_blob.fetch_add(1, Ordering::Relaxed);
+        self.store.lock().unwrap().insert(id, cts);
+        id
+    }
+
+    pub fn take(&self, id: u64) -> Option<Vec<CtInt>> {
+        self.store.lock().unwrap().remove(&id)
+    }
+
+    pub fn put_result(&self, cts: Vec<CtInt>) -> u64 {
+        self.register(cts)
+    }
+}
+
+/// The key manager: session id → Session.
+pub struct KeyManager {
+    sessions: Mutex<HashMap<u64, std::sync::Arc<Session>>>,
+    next_session: AtomicU64,
+}
+
+impl KeyManager {
+    pub fn new() -> Self {
+        KeyManager { sessions: Mutex::new(HashMap::new()), next_session: AtomicU64::new(1) }
+    }
+
+    /// Create a session from a client-provided server key context.
+    pub fn create_session(&self, ctx: FheContext) -> u64 {
+        let id = self.next_session.fetch_add(1, Ordering::Relaxed);
+        self.sessions.lock().unwrap().insert(id, std::sync::Arc::new(Session::new(ctx)));
+        id
+    }
+
+    pub fn session(&self, id: u64) -> Option<std::sync::Arc<Session>> {
+        self.sessions.lock().unwrap().get(&id).cloned()
+    }
+
+    pub fn drop_session(&self, id: u64) -> bool {
+        self.sessions.lock().unwrap().remove(&id).is_some()
+    }
+
+    pub fn params_of(&self, id: u64) -> Option<TfheParams> {
+        self.session(id).map(|s| s.ctx.sk.params)
+    }
+}
+
+impl Default for KeyManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::bootstrap::ClientKey;
+    use crate::util::prng::Xoshiro256;
+
+    fn make_ctx() -> (ClientKey, FheContext) {
+        let mut rng = Xoshiro256::new(9);
+        let ck = ClientKey::generate(TfheParams::test_small(), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        (ck, ctx)
+    }
+
+    #[test]
+    fn session_lifecycle() {
+        let (ck, ctx) = make_ctx();
+        let km = KeyManager::new();
+        let sid = km.create_session(ctx);
+        let sess = km.session(sid).expect("session exists");
+        let mut rng = Xoshiro256::new(1);
+        let ct = sess.ctx.encrypt(2, &ck, &mut rng);
+        let blob = sess.register(vec![ct]);
+        let got = sess.take(blob).expect("blob exists");
+        assert_eq!(sess.ctx.decrypt(&got[0], &ck), 2);
+        assert!(sess.take(blob).is_none(), "take consumes");
+        assert!(km.drop_session(sid));
+        assert!(km.session(sid).is_none());
+    }
+
+    #[test]
+    fn unknown_session_is_none() {
+        let km = KeyManager::new();
+        assert!(km.session(42).is_none());
+        assert!(!km.drop_session(42));
+    }
+}

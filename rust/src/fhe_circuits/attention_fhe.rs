@@ -1,0 +1,299 @@
+//! The two attention mechanisms as TFHE circuits (S6).
+//!
+//! Faithful to how the paper's Concrete circuits must be built:
+//!
+//! * **Inhibitor** (eqs. 5–6): per score, `d` subtractions (free) + `d`
+//!   abs PBS, a fused scale-shift-ReLU PBS (the 1/γ literal is not an
+//!   integer, so it folds into the LUT), then per output `T` subtract-ReLU
+//!   PBS and free additions. PBS per head: `2·T²·d + T² + T·d`.
+//! * **Dot-product** (eq. 3): every q·k product is a ct×ct mult = 2 PBS
+//!   (paper eq. 1); Softmax = exp LUT per score + row sum + reciprocal
+//!   LUT + ct×ct by the reciprocal; attending V is another ct×ct per
+//!   term. PBS per head: `4·T²·d + 2·T² + T + T·d` (+ rescale PBS).
+//!
+//! Each circuit has a plaintext *mirror* computing the identical integer
+//! function; tests assert ciphertext == mirror on every coordinate, which
+//! pins both the circuit logic and the noise budget.
+
+use crate::tfhe::bootstrap::ClientKey;
+use crate::tfhe::ops::{CtInt, FheContext};
+use crate::util::prng::Xoshiro256;
+
+/// A matrix of encrypted integers, row-major.
+pub struct CtMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<CtInt>,
+}
+
+impl CtMatrix {
+    pub fn encrypt(
+        vals: &crate::tensor::ITensor,
+        ctx: &FheContext,
+        ck: &ClientKey,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        assert_eq!(vals.rank(), 2);
+        let (rows, cols) = (vals.dims()[0], vals.dims()[1]);
+        let data = vals.data.iter().map(|&v| ctx.encrypt(v, ck, rng)).collect();
+        CtMatrix { rows, cols, data }
+    }
+
+    pub fn decrypt(&self, ctx: &FheContext, ck: &ClientKey) -> crate::tensor::ITensor {
+        crate::tensor::ITensor::from_vec(
+            &[self.rows, self.cols],
+            self.data.iter().map(|c| ctx.decrypt(c, ck)).collect(),
+        )
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> &CtInt {
+        &self.data[i * self.cols + j]
+    }
+}
+
+/// Scale-shift LUT shared by circuit and mirror: `relu(round(x/γ) − α)`.
+fn scaled_shift_relu(x: i64, gamma: f64, alpha_q: i64) -> i64 {
+    ((x as f64 / gamma).round() as i64 - alpha_q).max(0)
+}
+
+/// Encrypted Inhibitor attention head.
+pub struct InhibitorFhe {
+    /// γ literal (paper: √d).
+    pub gamma: f64,
+    /// Shift α quantized to the score scale.
+    pub alpha_q: i64,
+}
+
+impl InhibitorFhe {
+    pub fn new(dim: usize, alpha_q: i64) -> Self {
+        InhibitorFhe { gamma: (dim as f64).sqrt(), alpha_q }
+    }
+
+    /// Encrypted forward: Q, K, V are `[T, d]` ciphertext matrices.
+    pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
+        let (t, d) = (q.rows, q.cols);
+        assert_eq!((k.rows, k.cols), (t, d));
+        assert_eq!((v.rows, v.cols), (t, d));
+        let gamma = self.gamma;
+        let alpha_q = self.alpha_q;
+        // Scores Z'_ij = relu(round(Σ_k |q_ik − k_jk| / γ) − α).
+        let mut z: Vec<CtInt> = Vec::with_capacity(t * t);
+        for i in 0..t {
+            for j in 0..t {
+                // Σ_k |q_ik − k_jk|: d abs PBS + free adds.
+                let terms: Vec<CtInt> =
+                    (0..d).map(|kk| ctx.abs(&ctx.sub(q.at(i, kk), k.at(j, kk)))).collect();
+                let dist = ctx.sum(&terms);
+                // Fused 1/γ + shift + ReLU in one PBS.
+                z.push(ctx.pbs_fn(&dist, |x| scaled_shift_relu(x, gamma, alpha_q)));
+            }
+        }
+        // Inhibition H_ik = Σ_j (v_jk − z_ij)⁺: T relu PBS per output + adds.
+        let mut out = Vec::with_capacity(t * d);
+        for i in 0..t {
+            for kk in 0..d {
+                let terms: Vec<CtInt> =
+                    (0..t).map(|j| ctx.relu(&ctx.sub(v.at(j, kk), &z[i * t + j]))).collect();
+                out.push(ctx.sum(&terms));
+            }
+        }
+        // Output refresh PBS (identity): resets noise before the ciphertext
+        // leaves the head (mirrors the requantization PBS in the profile).
+        let out = out.iter().map(|c| ctx.pbs_fn(c, |x| x)).collect();
+        CtMatrix { rows: t, cols: d, data: out }
+    }
+
+    /// Plaintext mirror of the exact integer function `forward` computes.
+    pub fn mirror(&self, q: &crate::tensor::ITensor, k: &crate::tensor::ITensor, v: &crate::tensor::ITensor, clamp: i64) -> crate::tensor::ITensor {
+        let (t, d) = (q.dims()[0], q.dims()[1]);
+        let mut z = vec![0i64; t * t];
+        for i in 0..t {
+            for j in 0..t {
+                let dist: i64 = (0..d).map(|kk| (q.at2(i, kk) - k.at2(j, kk)).abs()).sum();
+                z[i * t + j] = scaled_shift_relu(dist, self.gamma, self.alpha_q).min(clamp);
+            }
+        }
+        let mut out = crate::tensor::ITensor::zeros(&[t, d]);
+        for i in 0..t {
+            for kk in 0..d {
+                out.data[i * d + kk] =
+                    (0..t).map(|j| (v.at2(j, kk) - z[i * t + j]).max(0).min(clamp)).sum();
+            }
+        }
+        out
+    }
+}
+
+/// Encrypted dot-product + Softmax attention head (the baseline).
+pub struct DotProductFhe {
+    /// Fixed-point bits of the probability representation.
+    pub prob_bits: u32,
+    /// exp LUT scale: e(x) = round(exp(x·exp_scale)·(2^prob_bits − 1)).
+    pub exp_scale: f64,
+}
+
+impl DotProductFhe {
+    pub fn new(dim: usize, input_mag: i64) -> Self {
+        // Scores reach d·input_mag²; pick exp_scale so the LUT spans ~e^-3
+        // over that range (behaves like 1/√d temperature at these widths).
+        let max_score = (dim as i64) * input_mag * input_mag;
+        DotProductFhe { prob_bits: 3, exp_scale: 3.0 / max_score as f64 }
+    }
+
+    fn exp_lut(&self, x: i64, max_out: i64) -> i64 {
+        let e = (x as f64 * self.exp_scale).exp();
+        // Normalized to (0, max_out]: exp of the max score maps to max_out.
+        (e * max_out as f64).round().clamp(1.0, max_out as f64) as i64
+    }
+
+    /// Encrypted forward.
+    pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
+        let (t, d) = (q.rows, q.cols);
+        let max_out = (1i64 << self.prob_bits) - 1; // LUT output magnitude
+        // Scores S_ij = Σ_k q_ik·k_jk — 2 PBS per product (eq. 1).
+        let mut e: Vec<CtInt> = Vec::with_capacity(t * t);
+        for i in 0..t {
+            for j in 0..t {
+                let prods: Vec<CtInt> =
+                    (0..d).map(|kk| ctx.ct_mul(q.at(i, kk), k.at(j, kk))).collect();
+                let s = ctx.sum(&prods);
+                // exp LUT (1 PBS).
+                e.push(ctx.pbs_fn(&s, |x| self.exp_lut(x, max_out)));
+            }
+        }
+        // Row normalizers and reciprocal LUT (1 PBS per row).
+        let recip_num = max_out; // r_i = round(max_out / Σ_j e_ij)
+        let mut r: Vec<CtInt> = Vec::with_capacity(t);
+        for i in 0..t {
+            let row: Vec<CtInt> = (0..t).map(|j| e[i * t + j].clone()).collect();
+            let s = ctx.sum(&row);
+            r.push(ctx.pbs_fn(&s, move |x| if x > 0 { (recip_num + x / 2) / x } else { max_out }));
+        }
+        // p_ij = e_ij · r_i (2 PBS) — fixed point with max_out ≈ 1.0.
+        // H_ik = Σ_j p_ij · v_jk (2 PBS each) then rescale by 1/max_out (PBS).
+        let mut out = Vec::with_capacity(t * d);
+        for i in 0..t {
+            let probs: Vec<CtInt> = (0..t).map(|j| ctx.ct_mul(&e[i * t + j], &r[i])).collect();
+            for kk in 0..d {
+                let terms: Vec<CtInt> =
+                    (0..t).map(|j| ctx.ct_mul(&probs[j], v.at(j, kk))).collect();
+                let acc = ctx.sum(&terms);
+                out.push(ctx.pbs_fn(&acc, |x| {
+                    (x as f64 / max_out as f64).round() as i64
+                }));
+            }
+        }
+        CtMatrix { rows: t, cols: d, data: out }
+    }
+
+    /// Plaintext mirror of the integer circuit (including every clamp the
+    /// LUTs apply), for exact equality testing.
+    pub fn mirror(
+        &self,
+        q: &crate::tensor::ITensor,
+        k: &crate::tensor::ITensor,
+        v: &crate::tensor::ITensor,
+        min_s: i64,
+        max_s: i64,
+    ) -> crate::tensor::ITensor {
+        let (t, d) = (q.dims()[0], q.dims()[1]);
+        let max_out = (1i64 << self.prob_bits) - 1;
+        let clamp = |x: i64| x.clamp(min_s, max_s);
+        let mut e = vec![0i64; t * t];
+        for i in 0..t {
+            for j in 0..t {
+                let s: i64 = (0..d).map(|kk| q.at2(i, kk) * k.at2(j, kk)).sum();
+                e[i * t + j] = clamp(self.exp_lut(clamp(s), max_out));
+            }
+        }
+        let mut out = crate::tensor::ITensor::zeros(&[t, d]);
+        for i in 0..t {
+            let srow: i64 = (0..t).map(|j| e[i * t + j]).sum();
+            let r = clamp(if srow > 0 { (max_out + srow / 2) / srow } else { max_out });
+            for kk in 0..d {
+                let acc: i64 = (0..t)
+                    .map(|j| clamp(clamp(e[i * t + j] * r) * v.at2(j, kk)))
+                    .sum();
+                out.data[i * d + kk] = clamp((acc as f64 / max_out as f64).round() as i64);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ITensor;
+    use crate::tfhe::bootstrap::{pbs_count, ClientKey};
+    use crate::tfhe::params::TfheParams;
+    use crate::tfhe::FheContext;
+
+    fn fhe_setup(bits: u32) -> (ClientKey, FheContext, Xoshiro256) {
+        let mut rng = Xoshiro256::new(0xFEED);
+        let ck = ClientKey::generate(TfheParams::test_for_bits(bits), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        (ck, ctx, rng)
+    }
+
+    #[test]
+    fn encrypted_inhibitor_matches_plaintext_mirror() {
+        let (ck, ctx, mut rng) = fhe_setup(5);
+        let t = 2;
+        let d = 2;
+        // Small inputs: |q|,|k| ≤ 2, v ∈ [0, 3].
+        let q = ITensor::from_vec(&[t, d], vec![1, -2, 0, 2]);
+        let k = ITensor::from_vec(&[t, d], vec![1, -1, -2, 0]);
+        let v = ITensor::from_vec(&[t, d], vec![3, 1, 2, 0]);
+        let head = InhibitorFhe::new(d, 1);
+        let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+        let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+        let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+        let before = pbs_count();
+        let h = head.forward(&ctx, &cq, &ckk, &cv);
+        let used = pbs_count() - before;
+        let expect_pbs = (2 * t * t * d + t * t + t * d) as u64;
+        assert_eq!(used, expect_pbs, "inhibitor PBS count");
+        let got = h.decrypt(&ctx, &ck);
+        let want = head.mirror(&q, &k, &v, ctx.enc.max_signed());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn encrypted_dotprod_matches_plaintext_mirror() {
+        let (ck, ctx, mut rng) = fhe_setup(6);
+        let t = 2;
+        let d = 2;
+        // Tiny inputs so every ct_mul intermediate fits 6 bits signed.
+        let q = ITensor::from_vec(&[t, d], vec![1, -1, 2, 0]);
+        let k = ITensor::from_vec(&[t, d], vec![1, 1, -1, 2]);
+        let v = ITensor::from_vec(&[t, d], vec![2, 1, -1, 3]);
+        let head = DotProductFhe::new(d, 2);
+        let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+        let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+        let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+        let before = pbs_count();
+        let h = head.forward(&ctx, &cq, &ckk, &cv);
+        let used = pbs_count() - before;
+        // 2·T²·d (scores) + T² (exp) + T (recip) + 2·T² (probs)
+        // + 2·T²·d (attend) + T·d (rescale)
+        let expect = (4 * t * t * d + t * t + t + 2 * t * t + t * d) as u64;
+        assert_eq!(used, expect, "dotprod PBS count");
+        let got = h.decrypt(&ctx, &ck);
+        let want = head.mirror(&q, &k, &v, ctx.enc.min_signed(), ctx.enc.max_signed());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dotprod_uses_about_twice_the_pbs_of_inhibitor() {
+        // PBS accounting only (no crypto execution): the paper's "about
+        // twice as many PBS" claim, per head, at d=2.
+        for t in [2usize, 4, 8, 16] {
+            let inh = (2 * t * t * 2 + t * t + t * 2) as f64;
+            let dot = (4 * t * t * 2 + t * t + t + 2 * t * t + t * 2) as f64;
+            let ratio = dot / inh;
+            assert!((1.5..=2.6).contains(&ratio), "T={t}: {ratio}");
+        }
+    }
+}

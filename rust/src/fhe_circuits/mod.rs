@@ -1,0 +1,7 @@
+//! Encrypted attention circuits (S6): the paper's two mechanisms composed
+//! from the `tfhe::ops` operator layer, plus plaintext mirrors used for
+//! exact correctness checks and PBS accounting.
+
+pub mod attention_fhe;
+
+pub use attention_fhe::{CtMatrix, DotProductFhe, InhibitorFhe};

@@ -1,0 +1,34 @@
+//! # inhibitor — ReLU and Addition-Based Attention under TFHE
+//!
+//! A full-system reproduction of *"The Inhibitor: ReLU and Addition-Based
+//! Attention for Efficient Transformers under Fully Homomorphic Encryption
+//! on the Torus"* (Brännvall & Stoian, FHE.org 2024).
+//!
+//! The crate is the Layer-3 (request-path) half of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) implement the
+//!   fused inhibitor attention (paper eqs. 5–10); build time only.
+//! * **L2** — a JAX transformer (`python/compile/model.py`) lowers to HLO
+//!   text artifacts; build time only.
+//! * **L3** — this crate: a serving coordinator that routes requests to a
+//!   PJRT float engine (`runtime`), a quantized integer engine
+//!   (`tensor`/`quant`/`attention`/`model`) and a real TFHE engine
+//!   (`tfhe`/`fhe_circuits`), plus the parameter optimizer (`optimizer`)
+//!   and the paper-table bench harness (`bench_tables`).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod attention;
+pub mod bench_harness;
+pub mod bench_tables;
+pub mod coordinator;
+pub mod fhe_circuits;
+pub mod model;
+pub mod optimizer;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod tfhe;
+pub mod util;

@@ -1,0 +1,335 @@
+//! `inhibitor` — leader entrypoint + CLI (L3).
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!   serve         run the TCP serving coordinator
+//!   infer         one-shot inference through the quantized engine
+//!   encrypt-infer end-to-end encrypted attention demo
+//!   params        run the TFHE parameter optimizer (Table 2)
+//!   tables        print paper-table reproductions (2 and 3; 4 via bench)
+//!   selftest      fast whole-stack smoke test
+//!   client        send a request to a running server
+
+use inhibitor::attention::Mechanism;
+use inhibitor::coordinator::{BatchPolicy, Coordinator, Payload, RoutePolicy};
+use inhibitor::model::{ModelConfig, QTransformer};
+use inhibitor::util::prng::Xoshiro256;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    let code = match cmd {
+        "serve" => cmd_serve(rest),
+        "infer" => cmd_infer(rest),
+        "encrypt-infer" => cmd_encrypt_infer(rest),
+        "params" => cmd_params(rest),
+        "tables" => cmd_tables(rest),
+        "selftest" => cmd_selftest(),
+        "client" => cmd_client(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "inhibitor — ReLU and addition-based attention under TFHE\n\
+         \n\
+         USAGE: inhibitor <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+           serve [--addr 127.0.0.1:7474] [--artifacts artifacts] [--mechanism inhibitor]\n\
+               Start the serving coordinator (quant + PJRT engines).\n\
+           infer [--mechanism inhibitor] [--seq 16] [--dim 32]\n\
+               One-shot quantized inference on random features.\n\
+           encrypt-infer [--mechanism inhibitor] [--seq 2] [--bits 5]\n\
+               Generate keys, encrypt Q/K/V, run encrypted attention, decrypt.\n\
+           params [--seq 2,4,8,16]\n\
+               Run the TFHE parameter optimizer (paper Table 2).\n\
+           tables [--quick]\n\
+               Print Table 2 + Table 3 reproductions.\n\
+           selftest\n\
+               Whole-stack smoke test (quant, FHE, PJRT if artifacts exist).\n\
+           client [--addr 127.0.0.1:7474] [--op ping|metrics|shutdown]\n\
+               Talk to a running server."
+    );
+}
+
+fn flag(args: &[String], name: &str, default: &str) -> String {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let addr = flag(args, "--addr", "127.0.0.1:7474");
+    let artifacts = flag(args, "--artifacts", "artifacts");
+    let mech_s = flag(args, "--mechanism", "inhibitor");
+    let Some(mechanism) = Mechanism::parse(&mech_s) else {
+        eprintln!("unknown mechanism '{mech_s}'");
+        return 2;
+    };
+    let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+    // Quantized engines for both mechanisms (trained-weight loading uses
+    // artifacts/<model>.weights.bin when present; random weights are a
+    // stand-in for the serve demo otherwise).
+    for m in [Mechanism::DotProduct, mechanism] {
+        // Match the AOT model contract (seq 16, 2 input features).
+        let mut cfg = ModelConfig::small(m, 16, 32);
+        cfg.in_features = 2;
+        let model = load_or_random(&artifacts, m, cfg);
+        c.add_quant_engine(m.name(), model, BatchPolicy::default());
+    }
+    if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        for name in ["model_inhibitor", "model_dotprod"] {
+            c.add_pjrt_model(artifacts.clone().into(), name, BatchPolicy::default());
+        }
+        println!("PJRT engines registered from {artifacts}/");
+    } else {
+        println!("no {artifacts}/manifest.json — serving quantized engines only");
+    }
+    let c = Arc::new(c);
+    println!("listening on {addr} (JSON-lines; see rust/src/server/proto.rs)");
+    match inhibitor::server::serve(c, &addr, |a| println!("bound {a}")) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("server error: {e}");
+            1
+        }
+    }
+}
+
+fn load_or_random(artifacts: &str, m: Mechanism, cfg: ModelConfig) -> QTransformer {
+    let wpath = format!("{artifacts}/model_{}.weights.bin", m.name());
+    if let Ok(w) = inhibitor::model::weights::load_weights_file(&wpath) {
+        // Config travels with the manifest; the small default matches aot.py.
+        if let Ok(model) = inhibitor::model::weights::build_model(&cfg, &w) {
+            println!("loaded weights {wpath}");
+            return model;
+        }
+    }
+    QTransformer::random(cfg, 42)
+}
+
+fn cmd_infer(args: &[String]) -> i32 {
+    let mech_s = flag(args, "--mechanism", "inhibitor");
+    let seq: usize = flag(args, "--seq", "16").parse().unwrap_or(16);
+    let dim: usize = flag(args, "--dim", "32").parse().unwrap_or(32);
+    let Some(mechanism) = Mechanism::parse(&mech_s) else {
+        eprintln!("unknown mechanism '{mech_s}'");
+        return 2;
+    };
+    let cfg = ModelConfig::small(mechanism, seq, dim);
+    let in_features = cfg.in_features;
+    let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+    c.add_quant_engine(mechanism.name(), QTransformer::random(cfg, 7), BatchPolicy::default());
+    let mut rng = Xoshiro256::new(1);
+    let features: Vec<f32> =
+        (0..seq * in_features).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+    match c.infer_blocking(
+        inhibitor::coordinator::EnginePath::QuantInt(mechanism.name().into()),
+        Payload::Features(features, (seq, in_features)),
+        Duration::from_secs(30),
+    ) {
+        Ok(resp) => {
+            println!(
+                "engine={} latency={:.3}ms output={:?}",
+                resp.engine,
+                resp.latency_s * 1e3,
+                resp.output
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("inference failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_encrypt_infer(args: &[String]) -> i32 {
+    use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe};
+    use inhibitor::tensor::ITensor;
+    use inhibitor::tfhe::{bootstrap, ClientKey, FheContext, TfheParams};
+    let mech_s = flag(args, "--mechanism", "inhibitor");
+    let seq: usize = flag(args, "--seq", "2").parse().unwrap_or(2);
+    let bits: u32 = flag(args, "--bits", "5").parse().unwrap_or(5);
+    let dim = 2usize; // the paper's encrypted experiments use d=2
+    let mut rng = Xoshiro256::new(2024);
+    let params = TfheParams::test_for_bits(bits);
+    println!(
+        "generating keys (n={}, N={}, {} message bits)...",
+        params.lwe_dim, params.poly_size, bits
+    );
+    let ck = ClientKey::generate(params, &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let q = ITensor::random(&[seq, dim], -2, 2, &mut rng);
+    let k = ITensor::random(&[seq, dim], -2, 2, &mut rng);
+    let v = ITensor::random(&[seq, dim], 0, 3, &mut rng);
+    println!("encrypting {} ciphertexts...", 3 * seq * dim);
+    let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+    let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+    let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+    bootstrap::reset_pbs_count();
+    let t0 = std::time::Instant::now();
+    let h = match mech_s.as_str() {
+        "dotprod" => DotProductFhe::new(dim, 2).forward(&ctx, &cq, &ckk, &cv),
+        _ => InhibitorFhe::new(dim, 1).forward(&ctx, &cq, &ckk, &cv),
+    };
+    let dt = t0.elapsed();
+    let out = h.decrypt(&ctx, &ck);
+    println!(
+        "mechanism={} T={} d={}: {} PBS in {:.3}s ({:.1} ms/PBS)",
+        mech_s,
+        seq,
+        dim,
+        bootstrap::pbs_count(),
+        dt.as_secs_f64(),
+        dt.as_secs_f64() * 1e3 / bootstrap::pbs_count().max(1) as f64
+    );
+    println!("decrypted H = {:?}", out.data);
+    0
+}
+
+fn cmd_params(args: &[String]) -> i32 {
+    let _seqs: Vec<usize> = flag(args, "--seq", "2,4,8,16")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    // Calibrate the cost→seconds conversion from a tiny measured PBS.
+    let fps = calibrated_flops();
+    inhibitor::bench_tables::print_table2(fps);
+    0
+}
+
+fn calibrated_flops() -> f64 {
+    use inhibitor::tfhe::{bootstrap::Lut, ClientKey, Encoder, TfheParams};
+    let mut rng = Xoshiro256::new(3);
+    let p = TfheParams::test_small();
+    let ck = ClientKey::generate(p, &mut rng);
+    let sk = ck.server_key(&mut rng);
+    let enc = Encoder::new(p);
+    let ct = enc.encrypt_raw(1, &ck, &mut rng);
+    let lut = Lut::from_fn(&p, |m| m);
+    let t0 = std::time::Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        let _ = sk.pbs(&ct, &lut);
+    }
+    let per_pbs = t0.elapsed().as_secs_f64() / reps as f64;
+    inhibitor::optimizer::cost::calibrate_flops_per_sec(per_pbs, &p)
+}
+
+fn cmd_tables(args: &[String]) -> i32 {
+    let quick = has_flag(args, "--quick");
+    let fps = calibrated_flops();
+    inhibitor::bench_tables::print_table2(fps);
+    let target = if quick { Duration::from_millis(50) } else { Duration::from_millis(300) };
+    let cells = inhibitor::bench_tables::run_table3(&[32, 64, 128, 256], 64, target);
+    inhibitor::bench_tables::print_table3(&cells);
+    println!("\n(Table 1: `make table1`; Table 4: `cargo bench --bench table4_encrypted`)");
+    0
+}
+
+fn cmd_selftest() -> i32 {
+    println!("[1/3] quantized engines...");
+    for m in [Mechanism::DotProduct, Mechanism::Inhibitor, Mechanism::InhibitorSigned] {
+        let cfg = ModelConfig::small(m, 8, 16);
+        let model = QTransformer::random(cfg, 1);
+        let mut rng = Xoshiro256::new(2);
+        let x = inhibitor::tensor::ITensor::random(&[8, 16], -50, 50, &mut rng);
+        let out = model.forward(&inhibitor::model::ModelInput::Features(x));
+        println!("  {} -> {:?} ok", m.name(), out.dims());
+    }
+    println!("[2/3] TFHE roundtrip + PBS...");
+    {
+        use inhibitor::tfhe::{bootstrap::Lut, ClientKey, Encoder, TfheParams};
+        let mut rng = Xoshiro256::new(3);
+        let p = TfheParams::test_small();
+        let ck = ClientKey::generate(p, &mut rng);
+        let sk = ck.server_key(&mut rng);
+        let enc = Encoder::new(p);
+        let lut = Lut::from_fn(&p, |m| (m + 1) % p.message_space());
+        for m in 0..p.message_space() {
+            let out = enc.decrypt_raw(&sk.pbs(&enc.encrypt_raw(m, &ck, &mut rng), &lut), &ck);
+            assert_eq!(out, (m + 1) % p.message_space(), "PBS failed at {m}");
+        }
+        println!("  PBS successor-LUT exact over the whole message space ok");
+    }
+    println!("[3/3] PJRT artifacts...");
+    match inhibitor::runtime::Registry::open("artifacts") {
+        Ok(mut reg) => {
+            println!(
+                "  platform={} heads={} models={}",
+                reg.platform(),
+                reg.attention.len(),
+                reg.models.len()
+            );
+            match reg.attention_engine("inhibitor", 32) {
+                Ok(engine) => {
+                    let z = vec![0.5f32; 32 * 64];
+                    match engine.run_f32(&[z.clone(), z.clone(), z]) {
+                        Ok(out) => {
+                            println!("  attn_inhibitor_t32 executed, {} outputs ok", out.len())
+                        }
+                        Err(e) => {
+                            eprintln!("  execute failed: {e:#}");
+                            return 1;
+                        }
+                    }
+                }
+                Err(e) => eprintln!("  (skipping execute: {e:#})"),
+            }
+        }
+        Err(e) => println!("  (no artifacts: {e:#} — run `make artifacts`)"),
+    }
+    println!("selftest ok");
+    0
+}
+
+fn cmd_client(args: &[String]) -> i32 {
+    let addr = flag(args, "--addr", "127.0.0.1:7474");
+    let op = flag(args, "--op", "ping");
+    let mut client = match inhibitor::server::Client::connect(&addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect {addr}: {e}");
+            return 1;
+        }
+    };
+    let result = match op.as_str() {
+        "ping" => client.ping().map(|ok| format!("ping ok={ok}")),
+        "metrics" => client.metrics(),
+        "shutdown" => client.shutdown().map(|_| "shutdown sent".to_string()),
+        other => {
+            eprintln!("unknown op '{other}'");
+            return 2;
+        }
+    };
+    match result {
+        Ok(s) => {
+            println!("{s}");
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Model configuration (S3): a real config system for the quantized
+//! transformer engine, parseable from JSON (the same file the Python
+//! build path writes next to the exported weights).
+
+use crate::attention::Mechanism;
+use crate::util::json::Json;
+
+/// Task endpoint the model exposes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskHead {
+    /// Mean-pool over the sequence then classify into `n` classes.
+    Classify(usize),
+    /// Mean-pool then a single regression output (adding problem).
+    Regress,
+    /// Per-position logits over `n` symbols (CTC-style decoding).
+    PerPosition(usize),
+}
+
+/// Full model configuration.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub mechanism: Mechanism,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    /// Embedding / model dimension d.
+    pub dim: usize,
+    /// FFN hidden dimension.
+    pub ffn_dim: usize,
+    /// Vocabulary size (0 ⇒ continuous inputs projected by a linear layer).
+    pub vocab: usize,
+    /// Input feature width when `vocab == 0`.
+    pub in_features: usize,
+    pub head: TaskHead,
+    /// Code width for activations (paper plaintext experiments: 16).
+    pub act_bits: u32,
+    /// Code width for weights.
+    pub weight_bits: u32,
+    /// Inhibitor shift α (paper: 0.5).
+    pub alpha: f32,
+    /// Score scale γ; ≤ 0 means √d.
+    pub gamma: f32,
+}
+
+impl ModelConfig {
+    /// Small single-layer defaults matching the paper's benchmark setups.
+    pub fn small(mechanism: Mechanism, seq_len: usize, dim: usize) -> Self {
+        ModelConfig {
+            mechanism,
+            n_layers: 1,
+            seq_len,
+            dim,
+            ffn_dim: dim * 4,
+            vocab: 0,
+            in_features: dim,
+            head: TaskHead::Regress,
+            act_bits: 16,
+            weight_bits: 8,
+            alpha: 0.5,
+            gamma: -1.0,
+        }
+    }
+
+    /// Parse from the JSON object written by `python/compile/aot.py`.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let get_i = |k: &str| -> Result<usize, String> {
+            j.get(k)
+                .and_then(|v| v.as_i64())
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("config missing integer field '{k}'"))
+        };
+        let get_f = |k: &str, dflt: f32| -> f32 {
+            j.get(k).and_then(|v| v.as_f64()).map(|v| v as f32).unwrap_or(dflt)
+        };
+        let mech_s = j
+            .get("mechanism")
+            .and_then(|v| v.as_str())
+            .ok_or("config missing 'mechanism'")?;
+        let mechanism =
+            Mechanism::parse(mech_s).ok_or_else(|| format!("unknown mechanism '{mech_s}'"))?;
+        let head = match j.get("head").and_then(|v| v.as_str()).unwrap_or("regress") {
+            "regress" => TaskHead::Regress,
+            "classify" => TaskHead::Classify(get_i("n_classes")?),
+            "per_position" => TaskHead::PerPosition(get_i("n_classes")?),
+            other => return Err(format!("unknown head '{other}'")),
+        };
+        Ok(ModelConfig {
+            mechanism,
+            n_layers: get_i("n_layers")?,
+            seq_len: get_i("seq_len")?,
+            dim: get_i("dim")?,
+            ffn_dim: get_i("ffn_dim")?,
+            vocab: j.get("vocab").and_then(|v| v.as_i64()).unwrap_or(0) as usize,
+            in_features: j.get("in_features").and_then(|v| v.as_i64()).unwrap_or(0) as usize,
+            head,
+            act_bits: get_i("act_bits").unwrap_or(16) as u32,
+            weight_bits: get_i("weight_bits").unwrap_or(8) as u32,
+            alpha: get_f("alpha", 0.5),
+            gamma: get_f("gamma", -1.0),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let head = match self.head {
+            TaskHead::Regress => ("regress", 0usize),
+            TaskHead::Classify(n) => ("classify", n),
+            TaskHead::PerPosition(n) => ("per_position", n),
+        };
+        Json::obj(vec![
+            ("mechanism", Json::str(self.mechanism.name())),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+            ("dim", Json::num(self.dim as f64)),
+            ("ffn_dim", Json::num(self.ffn_dim as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("in_features", Json::num(self.in_features as f64)),
+            ("head", Json::str(head.0)),
+            ("n_classes", Json::num(head.1 as f64)),
+            ("act_bits", Json::num(self.act_bits as f64)),
+            ("weight_bits", Json::num(self.weight_bits as f64)),
+            ("alpha", Json::num(self.alpha as f64)),
+            ("gamma", Json::num(self.gamma as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ModelConfig::small(Mechanism::Inhibitor, 16, 8);
+        c.head = TaskHead::Classify(10);
+        c.vocab = 100;
+        let j = c.to_json();
+        let c2 = ModelConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c2.mechanism, c.mechanism);
+        assert_eq!(c2.head, c.head);
+        assert_eq!(c2.seq_len, 16);
+        assert_eq!(c2.vocab, 100);
+        assert_eq!(c2.alpha, 0.5);
+    }
+
+    #[test]
+    fn rejects_bad_mechanism() {
+        let j = Json::parse(r#"{"mechanism":"telepathy","n_layers":1,"seq_len":4,"dim":4,"ffn_dim":8}"#)
+            .unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+}

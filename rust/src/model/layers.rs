@@ -1,0 +1,249 @@
+//! Quantized transformer layers (S3): linear, FFN, layer norm, embedding.
+//!
+//! The paper changes *only* the attention mechanism; "FFN and
+//! normalization are left unchanged". These layers implement the standard
+//! blocks in integer arithmetic with per-layer requantization so the whole
+//! forward pass stays inside the declared activation bit-width.
+
+use crate::quant::{FixedMult, QParams};
+use crate::tensor::ITensor;
+
+/// Quantized linear layer: `y = requant(x·Wᵀ + b)`.
+///
+/// Weights are integer codes at `w_scale`; the bias is pre-quantized to the
+/// accumulator scale (`x_scale · w_scale`) so it adds directly onto the
+/// matmul accumulator, and `requant` maps the accumulator back to the
+/// output activation scale.
+#[derive(Clone, Debug)]
+pub struct QLinear {
+    /// `[out, in]` weight codes.
+    pub w: ITensor,
+    /// `[out]` bias at accumulator scale.
+    pub b: Vec<i64>,
+    pub requant: FixedMult,
+}
+
+impl QLinear {
+    pub fn new(w: ITensor, b: Vec<i64>, requant: FixedMult) -> Self {
+        assert_eq!(w.rank(), 2);
+        assert_eq!(w.dims()[0], b.len(), "bias length must match out features");
+        QLinear { w, b, requant }
+    }
+
+    /// Build from float weights: quantize W to `w_bits`, bias to the
+    /// accumulator scale, and derive the requant factor to land on
+    /// `out_scale`.
+    pub fn from_float(
+        w: &crate::tensor::FTensor,
+        b: &[f32],
+        x_scale: f32,
+        w_bits: u32,
+        out_scale: f32,
+    ) -> Self {
+        let wq = QParams::fit_symmetric(w.data.iter().fold(0.0f32, |a, &x| a.max(x.abs())), w_bits);
+        let wi = wq.quantize_tensor(w);
+        let acc_scale = x_scale * wq.scale;
+        let bi = b.iter().map(|&x| (x / acc_scale).round() as i64).collect();
+        let requant = FixedMult::from_f64(acc_scale as f64 / out_scale as f64);
+        QLinear::new(wi, bi, requant)
+    }
+
+    /// `x: [n, in] → [n, out]`.
+    pub fn forward(&self, x: &ITensor) -> ITensor {
+        let acc = x.matmul(&self.w.transpose2());
+        let (n, out) = (acc.dims()[0], acc.dims()[1]);
+        let mut y = acc;
+        for i in 0..n {
+            for j in 0..out {
+                let v = y.data[i * out + j] + self.b[j];
+                y.data[i * out + j] = self.requant.apply(v);
+            }
+        }
+        y
+    }
+}
+
+/// Feed-forward network, paper eq. 4: `H = (X·W1ᵀ + b1)⁺ · W2 + b2`.
+#[derive(Clone, Debug)]
+pub struct QFfn {
+    pub fc1: QLinear,
+    pub fc2: QLinear,
+}
+
+impl QFfn {
+    pub fn forward(&self, x: &ITensor) -> ITensor {
+        let h = self.fc1.forward(x).relu();
+        self.fc2.forward(&h)
+    }
+}
+
+/// Integer layer normalization.
+///
+/// Mean/variance are computed exactly in i64; the per-row `1/√var` factor
+/// is data-dependent, so it cannot be a compile-time literal — we compute
+/// it in double precision and apply it as a per-row fixed-point multiply.
+/// (Under FHE the paper's benchmarked circuits cover the attention
+/// mechanism; LN-under-FHE would use a PBS rsqrt table — see
+/// `tfhe::ops::pbs_rsqrt` — but is not on the benchmarked path.)
+#[derive(Clone, Debug)]
+pub struct QLayerNorm {
+    /// Learned gain per feature, code scale folded into `out_requant`.
+    pub gamma_q: Vec<i64>,
+    /// Learned shift per feature at output scale.
+    pub beta_q: Vec<i64>,
+    /// Output activation scale relative to the normalized (unit-variance)
+    /// intermediate: out_code = normalized · gamma · (1/out_scale).
+    pub inv_out_scale: f64,
+    /// Scale of the gamma codes.
+    pub gamma_scale: f64,
+}
+
+impl QLayerNorm {
+    pub fn from_float(gamma: &[f32], beta: &[f32], out_scale: f32) -> Self {
+        let gmax = gamma.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-6);
+        let gq = QParams::fit_symmetric(gmax, 8);
+        QLayerNorm {
+            gamma_q: gamma.iter().map(|&g| gq.quantize(g)).collect(),
+            beta_q: beta.iter().map(|&b| (b / out_scale).round() as i64).collect(),
+            inv_out_scale: 1.0 / out_scale as f64,
+            gamma_scale: gq.scale as f64,
+        }
+    }
+
+    /// `x: [n, d]` codes at `x_scale` → codes at the configured out scale.
+    /// `x_scale` is needed because normalization divides by the data std,
+    /// which is itself at x_scale — the scales cancel except for rounding.
+    pub fn forward(&self, x: &ITensor, _x_scale: f32) -> ITensor {
+        let (n, d) = (x.dims()[0], x.dims()[1]);
+        assert_eq!(d, self.gamma_q.len());
+        let mut y = ITensor::zeros(&[n, d]);
+        for i in 0..n {
+            let row = &x.data[i * d..(i + 1) * d];
+            let mean_num: i64 = row.iter().sum();
+            // mean in code units (rounded)
+            let mean = (mean_num as f64) / d as f64;
+            let var = row
+                .iter()
+                .map(|&v| {
+                    let c = v as f64 - mean;
+                    c * c
+                })
+                .sum::<f64>()
+                / d as f64;
+            let inv_std = 1.0 / (var + 1e-5).sqrt();
+            // normalized = (x − mean)·inv_std  (unitless, ~N(0,1))
+            // out_code = normalized · gamma_q·gamma_scale · inv_out_scale + beta_q
+            let m = FixedMult::from_f64(
+                (inv_std * self.gamma_scale * self.inv_out_scale).max(1e-12),
+            );
+            for j in 0..d {
+                let centered = ((row[j] as f64 - mean) * 256.0).round() as i64; // 8 frac bits
+                let scaled = m.apply(centered * self.gamma_q[j]) >> 8;
+                y.data[i * d + j] = scaled + self.beta_q[j];
+            }
+        }
+        y
+    }
+}
+
+/// Token embedding: lookup of integer code vectors.
+#[derive(Clone, Debug)]
+pub struct QEmbedding {
+    /// `[vocab, dim]` codes.
+    pub table: ITensor,
+}
+
+impl QEmbedding {
+    pub fn forward(&self, tokens: &[usize]) -> ITensor {
+        let (vocab, dim) = (self.table.dims()[0], self.table.dims()[1]);
+        let mut out = ITensor::zeros(&[tokens.len(), dim]);
+        for (i, &t) in tokens.iter().enumerate() {
+            assert!(t < vocab, "token {t} out of vocab {vocab}");
+            out.data[i * dim..(i + 1) * dim]
+                .copy_from_slice(&self.table.data[t * dim..(t + 1) * dim]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::FTensor;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn qlinear_matches_float_within_quant_error() {
+        let mut rng = Xoshiro256::new(31);
+        let (n, din, dout) = (4, 8, 6);
+        let xf = FTensor::randn(&[n, din], 1.0, &mut rng);
+        let wf = FTensor::randn(&[dout, din], 0.5, &mut rng);
+        let bf: Vec<f32> = (0..dout).map(|_| rng.next_gaussian() as f32 * 0.1).collect();
+        let xq = QParams::fit_symmetric(4.0, 12);
+        let lin = QLinear::from_float(&wf, &bf, xq.scale, 8, xq.scale);
+        let y = xq.dequantize_tensor(&lin.forward(&xq.quantize_tensor(&xf)));
+        // float reference
+        let want = {
+            let mut t = xf.matmul(&wf.transpose2());
+            for i in 0..n {
+                for j in 0..dout {
+                    t.data[i * dout + j] += bf[j];
+                }
+            }
+            t
+        };
+        let err = y.max_abs_diff(&want);
+        assert!(err < 0.15, "err {err}");
+    }
+
+    #[test]
+    fn ffn_relu_nonlinearity_applied() {
+        // W1 = I, b1 very negative → ReLU kills everything → out = b2.
+        let dim = 3;
+        let mut eye = ITensor::zeros(&[dim, dim]);
+        for i in 0..dim {
+            eye.set(&[i, i], 1);
+        }
+        let fc1 = QLinear::new(eye.clone(), vec![-1000; dim], FixedMult::from_f64(1.0));
+        let fc2 = QLinear::new(eye, vec![7; dim], FixedMult::from_f64(1.0));
+        let ffn = QFfn { fc1, fc2 };
+        let x = ITensor::from_vec(&[1, dim], vec![5, 10, 20]);
+        let y = ffn.forward(&x);
+        assert_eq!(y.data, vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Xoshiro256::new(77);
+        let d = 16;
+        let gamma = vec![1.0f32; d];
+        let beta = vec![0.0f32; d];
+        let out_scale = 0.05f32;
+        let ln = QLayerNorm::from_float(&gamma, &beta, out_scale);
+        let x = ITensor::random(&[4, d], -200, 200, &mut rng);
+        let y = ln.forward(&x, 0.05);
+        for i in 0..4 {
+            let row: Vec<f64> =
+                (0..d).map(|j| y.at2(i, j) as f64 * out_scale as f64).collect();
+            let mean = row.iter().sum::<f64>() / d as f64;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / d as f64;
+            assert!(mean.abs() < 0.1, "mean {mean}");
+            assert!((var - 1.0).abs() < 0.2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn embedding_lookup() {
+        let table = ITensor::from_vec(&[3, 2], vec![1, 2, 3, 4, 5, 6]);
+        let emb = QEmbedding { table };
+        let out = emb.forward(&[2, 0]);
+        assert_eq!(out.data, vec![5, 6, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of vocab")]
+    fn embedding_bounds_checked() {
+        let emb = QEmbedding { table: ITensor::zeros(&[3, 2]) };
+        let _ = emb.forward(&[3]);
+    }
+}

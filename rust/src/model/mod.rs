@@ -1,0 +1,10 @@
+//! Quantized transformer model definition (S3): config, layers, blocks,
+//! weight interchange with the Python build path.
+
+pub mod config;
+pub mod layers;
+pub mod transformer;
+pub mod weights;
+
+pub use config::{ModelConfig, TaskHead};
+pub use transformer::{ModelInput, QTransformer};

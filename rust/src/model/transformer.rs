@@ -1,0 +1,227 @@
+//! Composable quantized transformer (S3): blocks of attention + FFN with
+//! residual connections and layer norm, plus task heads. The attention
+//! mechanism is injected per the model config — the Inhibitor is a
+//! first-class citizen of the model definition, not a bolt-on.
+
+use super::config::{ModelConfig, TaskHead};
+use super::layers::{QEmbedding, QFfn, QLayerNorm, QLinear};
+use crate::attention::{AttentionHead, AttnConfig};
+use crate::quant::{FixedMult, QParams};
+use crate::tensor::{FTensor, ITensor};
+use crate::util::prng::Xoshiro256;
+
+/// One transformer block (pre-LN variant, as in the paper's simple setups).
+pub struct Block {
+    pub ln1: QLayerNorm,
+    pub wq: QLinear,
+    pub wk: QLinear,
+    pub wv: QLinear,
+    pub wo: QLinear,
+    pub attn: AttentionHead,
+    pub ln2: QLayerNorm,
+    pub ffn: QFfn,
+    /// Requant applied to residual additions to stay in the act range.
+    pub resid_requant: FixedMult,
+}
+
+impl Block {
+    pub fn forward(&self, x: &ITensor, act_scale: f32) -> ITensor {
+        // --- attention sub-layer ---
+        let xn = self.ln1.forward(x, act_scale);
+        let q = self.wq.forward(&xn);
+        let k = self.wk.forward(&xn);
+        let v = self.wv.forward(&xn);
+        let h = self.attn.forward(&q, &k, &v);
+        let h = self.wo.forward(&h);
+        let x1 = x.add(&h).map(|t| self.resid_requant.apply(t));
+        // --- FFN sub-layer ---
+        let x1n = self.ln2.forward(&x1, act_scale);
+        let f = self.ffn.forward(&x1n);
+        x1.add(&f).map(|t| self.resid_requant.apply(t))
+    }
+}
+
+/// The full quantized model: input adapter → blocks → task head.
+pub struct QTransformer {
+    pub cfg: ModelConfig,
+    /// Common activation code scale.
+    pub act_scale: f32,
+    /// Input: token embedding (vocab > 0) or linear projection.
+    pub embedding: Option<QEmbedding>,
+    pub in_proj: Option<QLinear>,
+    pub blocks: Vec<Block>,
+    /// Output head weights `[n_out, dim]`.
+    pub head: QLinear,
+}
+
+/// Model input: token ids or continuous features `[seq, in_features]`.
+pub enum ModelInput {
+    Tokens(Vec<usize>),
+    Features(ITensor),
+}
+
+impl QTransformer {
+    /// Randomly-initialized model (tests/benches; a trained model loads
+    /// its weights via `model::weights`).
+    pub fn random(cfg: ModelConfig, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let act_scale = 4.0 / ((1i64 << (cfg.act_bits - 1)) - 1) as f32;
+        let d = cfg.dim;
+        let make_lin = |dout: usize, din: usize, rng: &mut Xoshiro256, scale: f32| {
+            let w = FTensor::randn(&[dout, din], (1.0 / (din as f32).sqrt()) * scale, rng);
+            let b = vec![0.0f32; dout];
+            QLinear::from_float(&w, &b, act_scale, cfg.weight_bits, act_scale)
+        };
+        let embedding = if cfg.vocab > 0 {
+            let qp = QParams::fit_symmetric(2.0, cfg.act_bits);
+            let table = FTensor::randn(&[cfg.vocab, d], 0.5, &mut rng);
+            Some(QEmbedding { table: qp.quantize_tensor(&table) })
+        } else {
+            None
+        };
+        let in_proj = if cfg.vocab == 0 {
+            Some(make_lin(d, cfg.in_features.max(1), &mut rng, 1.0))
+        } else {
+            None
+        };
+        let blocks = (0..cfg.n_layers)
+            .map(|_| {
+                let mut acfg = AttnConfig::new(cfg.mechanism, cfg.seq_len, d);
+                acfg.alpha = cfg.alpha;
+                acfg.gamma = cfg.gamma;
+                Block {
+                    ln1: QLayerNorm::from_float(&vec![1.0; d], &vec![0.0; d], act_scale),
+                    wq: make_lin(d, d, &mut rng, 1.0),
+                    wk: make_lin(d, d, &mut rng, 1.0),
+                    wv: make_lin(d, d, &mut rng, 1.0),
+                    wo: make_lin(d, d, &mut rng, 1.0),
+                    attn: AttentionHead::build(acfg, act_scale),
+                    ln2: QLayerNorm::from_float(&vec![1.0; d], &vec![0.0; d], act_scale),
+                    ffn: QFfn {
+                        fc1: make_lin(cfg.ffn_dim, d, &mut rng, 1.0),
+                        fc2: make_lin(d, cfg.ffn_dim, &mut rng, 1.0),
+                    },
+                    resid_requant: FixedMult::from_f64(0.5),
+                }
+            })
+            .collect();
+        let n_out = match cfg.head {
+            TaskHead::Regress => 1,
+            TaskHead::Classify(n) | TaskHead::PerPosition(n) => n,
+        };
+        let head = make_lin(n_out, d, &mut rng, 1.0);
+        QTransformer { cfg, act_scale, embedding, in_proj, blocks, head }
+    }
+
+    /// Forward pass. Returns logits: `[n_classes]` for classification,
+    /// `[1]` for regression, `[seq, n_symbols]` for per-position heads.
+    pub fn forward(&self, input: &ModelInput) -> ITensor {
+        let mut x = match (input, &self.embedding, &self.in_proj) {
+            (ModelInput::Tokens(t), Some(emb), _) => emb.forward(t),
+            (ModelInput::Features(f), _, Some(proj)) => proj.forward(f),
+            (ModelInput::Features(f), None, None) => f.clone(),
+            _ => panic!("input kind does not match model configuration"),
+        };
+        assert_eq!(x.dims()[1], self.cfg.dim, "input width mismatch");
+        for b in &self.blocks {
+            x = b.forward(&x, self.act_scale);
+        }
+        match self.cfg.head {
+            TaskHead::PerPosition(_) => self.head.forward(&x),
+            _ => {
+                // Mean-pool over the sequence, then the head.
+                let (n, d) = (x.dims()[0], x.dims()[1]);
+                let mut pooled = ITensor::zeros(&[1, d]);
+                for j in 0..d {
+                    let s: i64 = (0..n).map(|i| x.at2(i, j)).sum();
+                    pooled.data[j] = s / n as i64;
+                }
+                self.head.forward(&pooled)
+            }
+        }
+    }
+
+    /// Argmax class for classification heads.
+    pub fn classify(&self, input: &ModelInput) -> usize {
+        let logits = self.forward(input);
+        logits
+            .data
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .expect("non-empty logits")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Mechanism;
+
+    fn feat_input(cfg: &ModelConfig, seed: u64) -> ModelInput {
+        let mut rng = Xoshiro256::new(seed);
+        ModelInput::Features(ITensor::random(
+            &[cfg.seq_len, cfg.in_features],
+            -100,
+            100,
+            &mut rng,
+        ))
+    }
+
+    #[test]
+    fn forward_shapes_all_mechanisms_and_heads() {
+        for mech in [Mechanism::DotProduct, Mechanism::Inhibitor, Mechanism::InhibitorSigned] {
+            for (head, want) in [
+                (TaskHead::Regress, vec![1, 1]),
+                (TaskHead::Classify(10), vec![1, 10]),
+                (TaskHead::PerPosition(5), vec![8, 5]),
+            ] {
+                let mut cfg = ModelConfig::small(mech, 8, 16);
+                cfg.head = head;
+                let m = QTransformer::random(cfg.clone(), 42);
+                let out = m.forward(&feat_input(&cfg, 1));
+                assert_eq!(out.dims(), want.as_slice(), "{mech:?} {head:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn token_model_forward() {
+        let mut cfg = ModelConfig::small(Mechanism::Inhibitor, 12, 16);
+        cfg.vocab = 50;
+        cfg.head = TaskHead::Classify(2);
+        let m = QTransformer::random(cfg, 7);
+        let out = m.forward(&ModelInput::Tokens(vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 49]));
+        assert_eq!(out.dims(), &[1, 2]);
+        let _cls = m.classify(&ModelInput::Tokens(vec![0; 12]));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = ModelConfig::small(Mechanism::Inhibitor, 8, 16);
+        let m1 = QTransformer::random(cfg.clone(), 9);
+        let m2 = QTransformer::random(cfg.clone(), 9);
+        let inp = feat_input(&cfg, 3);
+        assert_eq!(m1.forward(&inp), m2.forward(&inp));
+    }
+
+    #[test]
+    fn activations_stay_in_declared_bits() {
+        let cfg = ModelConfig::small(Mechanism::Inhibitor, 16, 16);
+        let m = QTransformer::random(cfg.clone(), 5);
+        let out = m.forward(&feat_input(&cfg, 11));
+        // Output after requant should fit comfortably in 24 bits even in the
+        // worst case (head accumulates over dim).
+        assert!(out.check_bits(24).is_ok());
+    }
+
+    #[test]
+    fn multilayer_stack_runs() {
+        let mut cfg = ModelConfig::small(Mechanism::InhibitorSigned, 8, 8);
+        cfg.n_layers = 3;
+        let m = QTransformer::random(cfg.clone(), 2);
+        let out = m.forward(&feat_input(&cfg, 13));
+        assert_eq!(out.dims(), &[1, 1]);
+    }
+}

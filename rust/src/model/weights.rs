@@ -1,0 +1,219 @@
+//! Weight interchange (S12): a small self-describing binary format written
+//! by `python/compile/aot.py` (`export_weights`) and loaded here. Floats
+//! are stored; quantization happens at load time on the Rust side so the
+//! integer pipeline has a single source of truth for code scales.
+//!
+//! Layout (little-endian):
+//!   magic   8 bytes  b"INHWGT01"
+//!   count   u32
+//!   repeat count times:
+//!     name_len u16, name utf-8 bytes
+//!     rank     u8, dims u32 × rank
+//!     data     f32 × prod(dims)
+
+use crate::attention::{AttentionHead, AttnConfig};
+use crate::model::config::ModelConfig;
+use crate::model::layers::{QEmbedding, QFfn, QLayerNorm, QLinear};
+use crate::model::transformer::{Block, QTransformer};
+use crate::quant::{FixedMult, QParams};
+use crate::tensor::FTensor;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+pub const MAGIC: &[u8; 8] = b"INHWGT01";
+
+/// Named float tensors, as exported by the build path.
+pub type WeightMap = BTreeMap<String, FTensor>;
+
+/// Serialize a weight map.
+pub fn save_weights(w: &WeightMap, mut out: impl Write) -> std::io::Result<()> {
+    out.write_all(MAGIC)?;
+    out.write_all(&(w.len() as u32).to_le_bytes())?;
+    for (name, t) in w {
+        let nb = name.as_bytes();
+        out.write_all(&(nb.len() as u16).to_le_bytes())?;
+        out.write_all(nb)?;
+        out.write_all(&[t.rank() as u8])?;
+        for &d in t.dims() {
+            out.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            out.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize a weight map.
+pub fn load_weights(mut inp: impl Read) -> std::io::Result<WeightMap> {
+    let mut magic = [0u8; 8];
+    inp.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad weight file magic {magic:?}"),
+        ));
+    }
+    let mut u32b = [0u8; 4];
+    inp.read_exact(&mut u32b)?;
+    let count = u32::from_le_bytes(u32b);
+    let mut map = WeightMap::new();
+    for _ in 0..count {
+        let mut u16b = [0u8; 2];
+        inp.read_exact(&mut u16b)?;
+        let nlen = u16::from_le_bytes(u16b) as usize;
+        let mut nb = vec![0u8; nlen];
+        inp.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        let mut rank = [0u8; 1];
+        inp.read_exact(&mut rank)?;
+        let mut dims = Vec::with_capacity(rank[0] as usize);
+        for _ in 0..rank[0] {
+            inp.read_exact(&mut u32b)?;
+            dims.push(u32::from_le_bytes(u32b) as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let mut data = Vec::with_capacity(numel);
+        let mut f32b = [0u8; 4];
+        for _ in 0..numel {
+            inp.read_exact(&mut f32b)?;
+            data.push(f32::from_le_bytes(f32b));
+        }
+        map.insert(name, FTensor::from_vec(&dims, data));
+    }
+    Ok(map)
+}
+
+/// Load weights from a file path.
+pub fn load_weights_file(path: &str) -> std::io::Result<WeightMap> {
+    load_weights(std::io::BufReader::new(std::fs::File::open(path)?))
+}
+
+/// Save weights to a file path.
+pub fn save_weights_file(w: &WeightMap, path: &str) -> std::io::Result<()> {
+    save_weights(w, std::io::BufWriter::new(std::fs::File::create(path)?))
+}
+
+fn get<'a>(w: &'a WeightMap, name: &str) -> Result<&'a FTensor, String> {
+    w.get(name).ok_or_else(|| format!("weight '{name}' missing from file"))
+}
+
+fn vec1(t: &FTensor) -> Vec<f32> {
+    t.data.clone()
+}
+
+/// Build a quantized transformer from exported float weights.
+///
+/// Expected names (layer i): `block{i}.{ln1,ln2}.{gamma,beta}`,
+/// `block{i}.{wq,wk,wv,wo}.{w,b}`, `block{i}.ffn.{fc1,fc2}.{w,b}`,
+/// plus `embedding.table` or `in_proj.{w,b}`, and `head.{w,b}`.
+pub fn build_model(cfg: &ModelConfig, w: &WeightMap) -> Result<QTransformer, String> {
+    let act_scale = 4.0 / ((1i64 << (cfg.act_bits - 1)) - 1) as f32;
+    let lin = |prefix: &str| -> Result<QLinear, String> {
+        let wt = get(w, &format!("{prefix}.w"))?;
+        let bt = get(w, &format!("{prefix}.b"))?;
+        Ok(QLinear::from_float(wt, &vec1(bt), act_scale, cfg.weight_bits, act_scale))
+    };
+    let ln = |prefix: &str| -> Result<QLayerNorm, String> {
+        let g = get(w, &format!("{prefix}.gamma"))?;
+        let b = get(w, &format!("{prefix}.beta"))?;
+        Ok(QLayerNorm::from_float(&vec1(g), &vec1(b), act_scale))
+    };
+    let embedding = if cfg.vocab > 0 {
+        let t = get(w, "embedding.table")?;
+        let qp = QParams::fit_symmetric(
+            t.data.iter().fold(0.0f32, |a, &x| a.max(x.abs())),
+            cfg.act_bits,
+        );
+        Some(QEmbedding { table: qp.quantize_tensor(t) })
+    } else {
+        None
+    };
+    let in_proj = if cfg.vocab == 0 { Some(lin("in_proj")?) } else { None };
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let p = format!("block{i}");
+        let mut acfg = AttnConfig::new(cfg.mechanism, cfg.seq_len, cfg.dim);
+        acfg.alpha = cfg.alpha;
+        acfg.gamma = cfg.gamma;
+        blocks.push(Block {
+            ln1: ln(&format!("{p}.ln1"))?,
+            wq: lin(&format!("{p}.wq"))?,
+            wk: lin(&format!("{p}.wk"))?,
+            wv: lin(&format!("{p}.wv"))?,
+            wo: lin(&format!("{p}.wo"))?,
+            attn: AttentionHead::build(acfg, act_scale),
+            ln2: ln(&format!("{p}.ln2"))?,
+            ffn: QFfn { fc1: lin(&format!("{p}.ffn.fc1"))?, fc2: lin(&format!("{p}.ffn.fc2"))? },
+            resid_requant: FixedMult::from_f64(0.5),
+        });
+    }
+    let head = lin("head")?;
+    Ok(QTransformer { cfg: cfg.clone(), act_scale, embedding, in_proj, blocks, head })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Mechanism;
+    use crate::model::config::TaskHead;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Xoshiro256::new(101);
+        let mut w = WeightMap::new();
+        w.insert("a.w".into(), FTensor::randn(&[3, 4], 1.0, &mut rng));
+        w.insert("b".into(), FTensor::randn(&[7], 1.0, &mut rng));
+        let mut buf = Vec::new();
+        save_weights(&w, &mut buf).unwrap();
+        let w2 = load_weights(&buf[..]).unwrap();
+        assert_eq!(w, w2);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOTMAGIC\x00\x00\x00\x00".to_vec();
+        assert!(load_weights(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn build_model_from_synthetic_weights() {
+        let mut rng = Xoshiro256::new(55);
+        let mut cfg = ModelConfig::small(Mechanism::Inhibitor, 8, 8);
+        cfg.head = TaskHead::Classify(3);
+        let d = cfg.dim;
+        let mut w = WeightMap::new();
+        let mut lin = |name: &str, dout: usize, din: usize, rng: &mut Xoshiro256, w: &mut WeightMap| {
+            w.insert(format!("{name}.w"), FTensor::randn(&[dout, din], 0.3, rng));
+            w.insert(format!("{name}.b"), FTensor::zeros(&[dout]));
+        };
+        lin("in_proj", d, cfg.in_features, &mut rng, &mut w);
+        for p in ["block0.wq", "block0.wk", "block0.wv", "block0.wo"] {
+            lin(p, d, d, &mut rng, &mut w);
+        }
+        lin("block0.ffn.fc1", cfg.ffn_dim, d, &mut rng, &mut w);
+        lin("block0.ffn.fc2", d, cfg.ffn_dim, &mut rng, &mut w);
+        for p in ["block0.ln1", "block0.ln2"] {
+            w.insert(format!("{p}.gamma"), FTensor::from_vec(&[d], vec![1.0; d]));
+            w.insert(format!("{p}.beta"), FTensor::zeros(&[d]));
+        }
+        lin("head", 3, d, &mut rng, &mut w);
+        let model = build_model(&cfg, &w).unwrap();
+        let mut irng = Xoshiro256::new(1);
+        let x = crate::tensor::ITensor::random(&[8, d], -50, 50, &mut irng);
+        let out = model.forward(&crate::model::transformer::ModelInput::Features(x));
+        assert_eq!(out.dims(), &[1, 3]);
+    }
+
+    #[test]
+    fn missing_weight_is_reported_by_name() {
+        let cfg = ModelConfig::small(Mechanism::Inhibitor, 4, 4);
+        let err = match build_model(&cfg, &WeightMap::new()) {
+            Err(e) => e,
+            Ok(_) => panic!("expected an error for empty weights"),
+        };
+        assert!(err.contains("in_proj.w"), "{err}");
+    }
+}

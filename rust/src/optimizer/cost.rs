@@ -1,0 +1,105 @@
+//! TFHE cost model (S7): estimate the execution cost of a parameter set
+//! and of whole circuits in PBS-equivalents and in (calibrated) seconds.
+//!
+//! The dominant cost is the blind rotation: `n` CMux, each one external
+//! product = `(k+1)·ℓ` forward FFTs + `(k+1)` inverse FFTs of size N/2
+//! plus `(k+1)²·ℓ` pointwise multiply-accumulates. Key switching adds
+//! `k·N·ℓ_ks` scaled vector subtractions of length `n`.
+
+use crate::tfhe::params::TfheParams;
+
+/// Abstract cost unit: weighted floating-point-op count. Convert to
+/// seconds with a per-host calibration factor (measured by
+/// `calibrate_flops_per_sec` or the `pbs_microbench` bench).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cost(pub f64);
+
+impl Cost {
+    pub fn seconds(&self, flops_per_sec: f64) -> f64 {
+        self.0 / flops_per_sec
+    }
+}
+
+/// FFT cost in flops: ~5·m·log2(m) for size m (radix-2, complex).
+fn fft_flops(m: usize) -> f64 {
+    let mf = m as f64;
+    5.0 * mf * mf.log2().max(1.0)
+}
+
+/// Estimated flops of one programmable bootstrap under `p`.
+pub fn pbs_cost(p: &TfheParams) -> Cost {
+    let n = p.lwe_dim as f64;
+    let k = p.glwe_dim as f64;
+    let l = p.pbs_decomp.level as f64;
+    let half = (p.poly_size / 2).max(1);
+    // Per CMux: (k+1)·ℓ forward + (k+1) inverse FFTs, (k+1)²·ℓ pointwise
+    // MACs (6 flops each), (k+1)·2 poly rotations/adds (2 flops per coeff),
+    // and the decomposition pass ((k+1)·ℓ·N integer ops ≈ 1 flop each).
+    let per_cmux = ((k + 1.0) * l + (k + 1.0)) * fft_flops(half)
+        + (k + 1.0) * (k + 1.0) * l * 6.0 * half as f64
+        + (k + 1.0) * 2.0 * 2.0 * p.poly_size as f64
+        + (k + 1.0) * l * p.poly_size as f64;
+    // Key switch: k·N rows × ℓ_ks digits × (n+1) fused mul-subs.
+    let ks = (p.extracted_lwe_dim() as f64)
+        * (p.ks_decomp.level as f64)
+        * (p.lwe_dim as f64 + 1.0)
+        * 2.0;
+    Cost(n * per_cmux + ks)
+}
+
+/// Cost of a linear (no-PBS) homomorphic op: one length-(n+1) vector pass.
+pub fn linear_op_cost(p: &TfheParams) -> Cost {
+    Cost((p.lwe_dim + 1) as f64)
+}
+
+/// Circuit-level cost: `n_pbs` bootstraps + `n_linear` linear ops.
+pub fn circuit_cost(p: &TfheParams, n_pbs: u64, n_linear: u64) -> Cost {
+    Cost(pbs_cost(p).0 * n_pbs as f64 + linear_op_cost(p).0 * n_linear as f64)
+}
+
+/// Measure this host's effective flops/sec on an FFT-shaped workload by
+/// timing real PBS executions (used by benches to convert model costs to
+/// projected seconds; returns flops/sec).
+pub fn calibrate_flops_per_sec(measured_pbs_seconds: f64, p: &TfheParams) -> f64 {
+    pbs_cost(p).0 / measured_pbs_seconds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::params::DecompParams;
+
+    #[test]
+    fn cost_grows_with_poly_size() {
+        let mut a = TfheParams::test_small();
+        let mut b = a;
+        a.poly_size = 1024;
+        b.poly_size = 4096;
+        assert!(pbs_cost(&b).0 > 3.0 * pbs_cost(&a).0);
+    }
+
+    #[test]
+    fn cost_grows_with_level_and_dim() {
+        let base = TfheParams::test_small();
+        let mut lvl2 = base;
+        lvl2.pbs_decomp = DecompParams::new(8, 4);
+        assert!(pbs_cost(&lvl2).0 > pbs_cost(&base).0);
+        let mut bigger_n = base;
+        bigger_n.lwe_dim = 2 * base.lwe_dim;
+        assert!(pbs_cost(&bigger_n).0 > 1.9 * pbs_cost(&base).0);
+    }
+
+    #[test]
+    fn linear_ops_are_orders_cheaper_than_pbs() {
+        let p = TfheParams::test_small();
+        assert!(pbs_cost(&p).0 / linear_op_cost(&p).0 > 1e4);
+    }
+
+    #[test]
+    fn seconds_conversion() {
+        let p = TfheParams::test_small();
+        let c = pbs_cost(&p);
+        let fps = calibrate_flops_per_sec(0.01, &p);
+        assert!((c.seconds(fps) - 0.01).abs() < 1e-12);
+    }
+}

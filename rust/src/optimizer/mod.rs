@@ -1,0 +1,11 @@
+//! TFHE parameter optimization (S7), after Bergerat et al. 2023: a noise
+//! model, a cost model, circuit precision analysis, and an exhaustive
+//! macro/micro parameter search. Regenerates the paper's Table 2.
+
+pub mod cost;
+pub mod noise;
+pub mod precision;
+pub mod search;
+
+pub use precision::{profile, CircuitProfile};
+pub use search::{optimize, table2, OptimizedParams, SearchConfig, Table2Row};

@@ -1,0 +1,194 @@
+//! TFHE noise model (S7), after Bergerat et al. 2023.
+//!
+//! Tracks noise *variance* (as squared torus fraction) through each FHE
+//! operator and converts the end-of-circuit variance into a decode
+//! failure probability. The security curve maps an LWE dimension to the
+//! minimum tolerable fresh-noise σ at a given security level — a linear
+//! log₂σ(n) fit to lattice-estimator output for ternary/binary secrets
+//! (the same family of fits Concrete's optimizer uses internally).
+
+use crate::tfhe::params::TfheParams;
+
+/// Minimum fresh-noise standard deviation (torus fraction) for an
+/// LWE/GLWE instance of total dimension `dim` at security level `lambda`.
+///
+/// Fit anchors (λ=128, q=2^64, binary secrets): (n=742, σ=2^-17.1),
+/// (n=2048, σ=2^-52) → log₂σ ≈ 2.71 − 0.0267·n. Floored at 2^-55: noise
+/// below the f64-FFT error floor buys nothing.
+pub fn min_noise_for_security(dim: usize, lambda: u32) -> f64 {
+    let scale = lambda as f64 / 128.0;
+    let log2_sigma = 2.71 - 0.0267 * dim as f64 / scale;
+    2f64.powf(log2_sigma.clamp(-55.0, -2.0))
+}
+
+/// Variance bookkeeping for a ciphertext.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Var(pub f64);
+
+impl Var {
+    pub fn fresh_lwe(p: &TfheParams) -> Var {
+        Var(p.lwe_noise_std * p.lwe_noise_std)
+    }
+
+    pub fn add(self, o: Var) -> Var {
+        Var(self.0 + o.0)
+    }
+
+    /// Multiplication by a plaintext literal `c`.
+    pub fn scalar_mul(self, c: i64) -> Var {
+        Var(self.0 * (c as f64) * (c as f64))
+    }
+
+    /// Sum of `k` independent ciphertexts at this variance.
+    pub fn sum_of(self, k: usize) -> Var {
+        Var(self.0 * k as f64)
+    }
+
+    pub fn std(self) -> f64 {
+        self.0.sqrt()
+    }
+}
+
+/// Variance added by the mod-switch to Z_{2N} before blind rotation,
+/// expressed on the torus *input* scale (it perturbs the phase the blind
+/// rotation resolves).
+pub fn mod_switch_var(p: &TfheParams) -> f64 {
+    let two_n = (2 * p.poly_size) as f64;
+    // Rounding each of n mask coefficients (uniform in ±1/(2·2N)) plus the
+    // body: variance (n/2 + 1) · 1/(12·(2N)²)   [s_i ∈ {0,1}, E[s]=1/2].
+    ((p.lwe_dim as f64) / 2.0 + 1.0) / (12.0 * two_n * two_n)
+}
+
+/// Output variance of a PBS (independent of input noise — PBS resets it).
+///
+/// Two contributions (standard TFHE estimates):
+/// * blind rotation: n CMux, each an external product against a GGSW at
+///   σ_glwe with decomposition (B = 2^baseLog, ℓ levels):
+///   `n · ℓ · (k+1) · N · (B²+2)/12 · σ_glwe²`
+/// * decomposition (gadget) error: `n · (1 + k·N) / 2 · B^(−2ℓ) / 12`.
+pub fn pbs_output_var(p: &TfheParams) -> f64 {
+    let n = p.lwe_dim as f64;
+    let nn = p.poly_size as f64;
+    let k = p.glwe_dim as f64;
+    let l = p.pbs_decomp.level as f64;
+    let b = 2f64.powi(p.pbs_decomp.base_log as i32);
+    let v_br = n * l * (k + 1.0) * nn * (b * b + 2.0) / 12.0 * p.glwe_noise_std * p.glwe_noise_std;
+    let v_dec = n * (1.0 + k * nn) / 2.0 * b.powf(-2.0 * l) / 12.0;
+    v_br + v_dec
+}
+
+/// Variance added by the key switch back to the small key.
+pub fn keyswitch_var(p: &TfheParams) -> f64 {
+    let kn = p.extracted_lwe_dim() as f64;
+    let l = p.ks_decomp.level as f64;
+    let b = 2f64.powi(p.ks_decomp.base_log as i32);
+    // Each decomposed digit multiplies a KSK row at σ_lwe, plus the
+    // decomposition rounding of each of k·N coefficients.
+    let v_rows = kn * l * (b * b / 12.0) * p.lwe_noise_std * p.lwe_noise_std;
+    let v_dec = kn / 2.0 * b.powf(-2.0 * l) / 12.0;
+    v_rows + v_dec
+}
+
+/// Total variance of a post-PBS ciphertext (PBS + KS).
+pub fn post_pbs_var(p: &TfheParams) -> f64 {
+    pbs_output_var(p) + keyswitch_var(p)
+}
+
+/// Complementary error function (Abramowitz & Stegun 7.1.26, |ε|≤1.5e-7).
+pub fn erfc(x: f64) -> f64 {
+    let sign_neg = x < 0.0;
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))))
+        * (-x * x).exp();
+    if sign_neg {
+        2.0 - y
+    } else {
+        y
+    }
+}
+
+/// Probability that Gaussian noise of variance `var` pushes a phase out of
+/// its half-slot window of radius `delta_half` (as torus fractions).
+pub fn decode_failure_prob(var: f64, delta_half: f64) -> f64 {
+    if var <= 0.0 {
+        return 0.0;
+    }
+    erfc(delta_half / (2.0f64.sqrt() * var.sqrt()))
+}
+
+/// End-to-end check: can `p` evaluate circuits where ciphertexts carry at
+/// most `max_linear_ops` accumulated linear operations between PBS, with
+/// per-PBS failure ≤ `p_fail`?
+///
+/// Two constraints (both must hold):
+/// 1. decode/PBS-input: post-PBS noise × linear growth + mod-switch noise
+///    must resolve the message slot,
+/// 2. fresh encryption must also satisfy (1) (client inputs).
+pub fn params_feasible(p: &TfheParams, linear_growth: f64, p_fail: f64) -> bool {
+    let delta_half = 2f64.powi(-(p.message_bits as i32) - 2); // Δ/2 as fraction
+    let worst_in = post_pbs_var(p).max(p.lwe_noise_std * p.lwe_noise_std) * linear_growth;
+    let at_rotation = worst_in + mod_switch_var(p);
+    decode_failure_prob(at_rotation, delta_half) <= p_fail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn security_curve_monotone() {
+        let s1 = min_noise_for_security(600, 128);
+        let s2 = min_noise_for_security(800, 128);
+        let s3 = min_noise_for_security(1024, 128);
+        assert!(s1 > s2 && s2 > s3, "more dimension allows less noise");
+        // Anchor sanity: n=742 ⇒ σ ≈ 2^-17ish.
+        let a = min_noise_for_security(742, 128).log2();
+        assert!((-18.0..=-16.0).contains(&a), "{a}");
+    }
+
+    #[test]
+    fn erfc_reference_values() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-6);
+        assert!((erfc(1.0) - 0.157299).abs() < 1e-5);
+        assert!((erfc(2.0) - 0.004678).abs() < 1e-5);
+        assert!((erfc(-1.0) - 1.842701).abs() < 1e-5);
+    }
+
+    #[test]
+    fn variance_tracking_ops() {
+        let v = Var(1e-12);
+        assert!((v.add(v).0 - 2e-12).abs() < 1e-20);
+        assert!((v.scalar_mul(3).0 - 9e-12).abs() < 1e-20);
+        assert!((v.sum_of(4).0 - 4e-12).abs() < 1e-20);
+    }
+
+    #[test]
+    fn test_small_params_are_feasible() {
+        let p = TfheParams::test_small();
+        assert!(params_feasible(&p, 4.0, 1e-3), "test_small should decode reliably");
+    }
+
+    #[test]
+    fn bench_sets_are_feasible() {
+        for bits in 2..=7 {
+            let p = TfheParams::bench_for_bits(bits);
+            assert!(
+                params_feasible(&p, 8.0, 2f64.powi(-17)),
+                "bench set {bits} bits infeasible: pbs_var={:e} ms_var={:e}",
+                post_pbs_var(&p),
+                mod_switch_var(&p)
+            );
+        }
+    }
+
+    #[test]
+    fn failure_prob_decreases_with_margin() {
+        let p1 = decode_failure_prob(1e-4, 0.01);
+        let p2 = decode_failure_prob(1e-4, 0.02);
+        assert!(p2 < p1, "{p2} !< {p1}");
+        assert!(p1 < 1.0 && p2 > 0.0);
+    }
+}

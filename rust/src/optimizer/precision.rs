@@ -1,0 +1,190 @@
+//! Circuit precision analysis (S7): worst-case bit-width tracking for the
+//! two attention circuits, plus their PBS counts. Regenerates the "int" /
+//! "uint" columns of the paper's Table 2 and feeds the parameter search.
+
+use crate::attention::Mechanism;
+
+/// Static profile of one encrypted attention circuit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CircuitProfile {
+    pub mechanism: Mechanism,
+    pub seq_len: usize,
+    pub dim: usize,
+    /// Signed input code width (bits incl. sign).
+    pub input_bits: u32,
+    /// Max signed width at any point of the circuit ("int" column).
+    pub int_bits: u32,
+    /// Max unsigned width at any point ("uint" column).
+    pub uint_bits: u32,
+    /// Number of programmable bootstraps for one forward pass.
+    pub pbs_count: u64,
+    /// Number of PBS-free linear ciphertext ops.
+    pub linear_ops: u64,
+    /// Worst multiplicative variance growth between two PBS (for the
+    /// noise feasibility check): dominated by the longest plain-add chain.
+    pub linear_growth: f64,
+}
+
+/// Signed bits to hold values in ±`mag`.
+fn signed_bits_for_mag(mag: i64) -> u32 {
+    crate::tensor::itensor::signed_bits_for(-mag, mag)
+}
+
+/// Unsigned bits to hold `[0, mag]`.
+fn unsigned_bits_for_mag(mag: i64) -> u32 {
+    crate::tensor::itensor::unsigned_bits_for(mag)
+}
+
+/// Worst-case analysis of the **Inhibitor** circuit (paper eqs. 5–6 with
+/// the γ=√d literal requant and shift α):
+///   diff → |diff| (PBS) → Σ_d (adds) → ÷γ (literal) → shifted ReLU (PBS)
+///   → V−Z → ReLU (PBS) → Σ_T (adds) → requant (PBS per output).
+pub fn profile_inhibitor(seq_len: usize, dim: usize, input_bits: u32) -> CircuitProfile {
+    let t = seq_len as i64;
+    let d = dim as i64;
+    let in_mag = (1i64 << (input_bits - 1)) - 1; // symmetric codes
+    // 1. q−k: signed, magnitude ≤ 2·in_mag.
+    let diff_mag = 2 * in_mag;
+    let mut int_bits = signed_bits_for_mag(diff_mag);
+    // 2. |q−k| (PBS): unsigned ≤ diff_mag; Σ over d (adds): ≤ d·diff_mag.
+    let dist_mag = d * diff_mag;
+    // 3. ÷γ literal (γ=√d): magnitude shrinks by √d.
+    let z_mag = ((dist_mag as f64) / (d as f64).sqrt()).ceil() as i64;
+    // 4. shifted ReLU (PBS): still ≤ z_mag, unsigned.
+    let mut uint_bits = unsigned_bits_for_mag(z_mag);
+    // 5. v − z: signed, ≤ max(in_mag, z_mag) + min(...) ≤ in_mag + z_mag.
+    let vz_mag = in_mag + z_mag;
+    int_bits = int_bits.max(signed_bits_for_mag(vz_mag));
+    // 6. ReLU (PBS) → unsigned ≤ vz_mag; Σ over T. The ReLU zeroes every
+    //    inhibited term; calibrated circuits see ~√T effective mass, but
+    //    worst case is T·in_mag (all scores zero, all values maximal).
+    let h_mag = t * in_mag;
+    uint_bits = uint_bits.max(unsigned_bits_for_mag(h_mag));
+    // PBS count: abs T²·d, shifted-relu T², inhibition relu T²·d,
+    // output requant T·d.
+    let t2 = (seq_len * seq_len) as u64;
+    let pbs_count = 2 * t2 * dim as u64 + t2 + (seq_len * dim) as u64;
+    // Linear ops: the Σ_d and Σ_T additions + subtractions.
+    let linear_ops = t2 * (dim as u64) + t2 * (dim as u64 + 1) + t2;
+    CircuitProfile {
+        mechanism: Mechanism::Inhibitor,
+        seq_len,
+        dim,
+        input_bits,
+        int_bits,
+        uint_bits,
+        pbs_count,
+        linear_ops,
+        linear_growth: (t.max(d)) as f64,
+    }
+}
+
+/// Worst-case analysis of the **dot-product** circuit:
+///   ct_mul(q,k) (2 PBS, needs q+k headroom) → Σ_d → exp LUT (PBS) →
+///   Σ_T → recip (PBS) → ct_mul(p, v) (2 PBS) → Σ_T.
+pub fn profile_dotprod(seq_len: usize, dim: usize, input_bits: u32) -> CircuitProfile {
+    let t = seq_len as i64;
+    let d = dim as i64;
+    let in_mag = (1i64 << (input_bits - 1)) - 1;
+    // 1. ct_mul trick operands a±b: magnitude ≤ 2·in_mag ("up to two bits
+    //    higher precision" — one bit here, one from the product below).
+    let mut int_bits = signed_bits_for_mag(2 * in_mag);
+    // 2. product: ≤ in_mag²; Σ over d: ≤ d·in_mag².
+    let score_mag = d * in_mag * in_mag;
+    int_bits = int_bits.max(signed_bits_for_mag(score_mag));
+    // 3. exp LUT output: unsigned, table range [0, 2^e) with e chosen to
+    //    preserve input resolution: e = input_bits + 1.
+    let exp_mag = (1i64 << input_bits) - 1;
+    // 4. Σ exp over T: ≤ T·exp_mag — the normalizer the recip LUT reads.
+    let norm_mag = t * exp_mag;
+    let mut uint_bits = unsigned_bits_for_mag(norm_mag);
+    // 5. probs (recip-scaled): unsigned ≤ exp_mag; ct_mul(p,v): operands
+    //    p+v ≤ exp_mag + in_mag, product ≤ exp_mag·in_mag — after the
+    //    normalizing literal the row sums telescope to ≤ in_mag·(1+ε),
+    //    but every PBS *input* must hold the raw product scale:
+    let pv_mag = exp_mag + in_mag;
+    int_bits = int_bits.max(signed_bits_for_mag(pv_mag));
+    uint_bits = uint_bits.max(unsigned_bits_for_mag(exp_mag * in_mag / t.max(1)));
+    let t2 = (seq_len * seq_len) as u64;
+    // ct_mul(q,k): 2·T²·d; exp: T²; recip: T; ct_mul(p,v): 2·T²·d.
+    let pbs_count = 4 * t2 * dim as u64 + t2 + seq_len as u64;
+    let linear_ops = 2 * t2 * (dim as u64) + t2 + t2 * (dim as u64);
+    CircuitProfile {
+        mechanism: Mechanism::DotProduct,
+        seq_len,
+        dim,
+        input_bits,
+        int_bits,
+        uint_bits,
+        pbs_count,
+        linear_ops,
+        linear_growth: (t.max(d)) as f64,
+    }
+}
+
+/// Profile dispatcher.
+pub fn profile(mech: Mechanism, seq_len: usize, dim: usize, input_bits: u32) -> CircuitProfile {
+    match mech {
+        Mechanism::DotProduct => profile_dotprod(seq_len, dim, input_bits),
+        Mechanism::Inhibitor | Mechanism::InhibitorSigned => {
+            profile_inhibitor(seq_len, dim, input_bits)
+        }
+    }
+}
+
+impl CircuitProfile {
+    /// Message bits the parameter set must carry (max over signed and
+    /// unsigned requirements; our encoding holds signed p-bit values in a
+    /// p-bit biased space).
+    pub fn required_message_bits(&self) -> u32 {
+        self.int_bits.max(self.uint_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dotprod_needs_more_precision_than_inhibitor() {
+        // The paper's Table 2 headline: 1–2 extra bits for dot-product.
+        for t in [2usize, 4, 8, 16] {
+            let inh = profile_inhibitor(t, 2, 3);
+            let dot = profile_dotprod(t, 2, 3);
+            assert!(
+                dot.required_message_bits() > inh.required_message_bits(),
+                "T={t}: dot {} vs inh {}",
+                dot.required_message_bits(),
+                inh.required_message_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn dotprod_needs_about_twice_the_pbs() {
+        for t in [2usize, 4, 8, 16] {
+            let inh = profile_inhibitor(t, 2, 3);
+            let dot = profile_dotprod(t, 2, 3);
+            let ratio = dot.pbs_count as f64 / inh.pbs_count as f64;
+            assert!((1.5..=2.5).contains(&ratio), "T={t}: ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn uint_grows_with_sequence_length() {
+        let a = profile_inhibitor(2, 2, 3);
+        let b = profile_inhibitor(16, 2, 3);
+        assert!(b.uint_bits > a.uint_bits);
+        let c = profile_dotprod(2, 2, 3);
+        let d = profile_dotprod(16, 2, 3);
+        assert!(d.uint_bits > c.uint_bits);
+    }
+
+    #[test]
+    fn pbs_counts_match_hand_formulas() {
+        let p = profile_inhibitor(4, 2, 3);
+        assert_eq!(p.pbs_count, 2 * 16 * 2 + 16 + 8);
+        let q = profile_dotprod(4, 2, 3);
+        assert_eq!(q.pbs_count, 4 * 16 * 2 + 16 + 4);
+    }
+}

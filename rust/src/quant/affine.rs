@@ -1,0 +1,117 @@
+//! Affine (scale / zero-point) quantization (S1).
+//!
+//! `real ≈ scale · (code − zero_point)`. The paper's integer experiments
+//! use symmetric quantization (zero_point = 0) because the Inhibitor's
+//! operations — |a−b|, subtract, ReLU — commute with symmetric scaling;
+//! we also support asymmetric codes for activations after ReLU where the
+//! range is one-sided.
+
+use crate::tensor::{FTensor, ITensor};
+
+/// Quantization parameters for one tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i64,
+    /// Signed bit width of the code space (e.g. 8 → codes in [-128, 127]).
+    pub bits: u32,
+}
+
+impl QParams {
+    pub fn symmetric(scale: f32, bits: u32) -> Self {
+        assert!(scale > 0.0, "scale must be positive");
+        QParams { scale, zero_point: 0, bits }
+    }
+
+    /// Smallest/largest representable code.
+    pub fn code_min(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    pub fn code_max(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// Choose a symmetric scale that covers `[-max_abs, max_abs]`.
+    pub fn fit_symmetric(max_abs: f32, bits: u32) -> Self {
+        let max_code = ((1i64 << (bits - 1)) - 1) as f32;
+        let ma = if max_abs <= 0.0 { 1e-8 } else { max_abs };
+        QParams::symmetric(ma / max_code, bits)
+    }
+
+    /// Quantize one real value (round-half-away-from-zero, clamped).
+    pub fn quantize(&self, x: f32) -> i64 {
+        let code = (x / self.scale).round() as i64 + self.zero_point;
+        code.clamp(self.code_min(), self.code_max())
+    }
+
+    /// Dequantize one code.
+    pub fn dequantize(&self, code: i64) -> f32 {
+        (code - self.zero_point) as f32 * self.scale
+    }
+
+    /// Quantize a float tensor.
+    pub fn quantize_tensor(&self, t: &FTensor) -> ITensor {
+        ITensor {
+            shape: t.shape.clone(),
+            data: t.data.iter().map(|&x| self.quantize(x)).collect(),
+        }
+    }
+
+    /// Dequantize an integer tensor.
+    pub fn dequantize_tensor(&self, t: &ITensor) -> FTensor {
+        FTensor {
+            shape: t.shape.clone(),
+            data: t.data.iter().map(|&c| self.dequantize(c)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::{Rng64, Xoshiro256};
+    use crate::util::prop::{prop_assert, prop_check};
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        prop_check("quantize error ≤ scale/2", 256, |rng| {
+            let bits = 4 + rng.next_bounded(12) as u32; // 4..=15
+            let max_abs = 0.5 + rng.next_f64() as f32 * 10.0;
+            let q = QParams::fit_symmetric(max_abs, bits);
+            let x = (rng.next_f64() as f32 * 2.0 - 1.0) * max_abs;
+            let err = (q.dequantize(q.quantize(x)) - x).abs();
+            prop_assert(err <= q.scale * 0.5 + 1e-6, &format!("err {err} > scale/2 {}", q.scale))
+        });
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let q = QParams::fit_symmetric(1.0, 8);
+        assert_eq!(q.quantize(100.0), 127);
+        assert_eq!(q.quantize(-100.0), -128);
+    }
+
+    #[test]
+    fn code_bounds() {
+        let q = QParams::symmetric(0.1, 8);
+        assert_eq!(q.code_min(), -128);
+        assert_eq!(q.code_max(), 127);
+        let q4 = QParams::symmetric(0.1, 4);
+        assert_eq!((q4.code_min(), q4.code_max()), (-8, 7));
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let mut rng = Xoshiro256::new(11);
+        let t = crate::tensor::FTensor::randn(&[8, 8], 1.0, &mut rng);
+        let q = QParams::fit_symmetric(4.0, 12);
+        let deq = q.dequantize_tensor(&q.quantize_tensor(&t));
+        // Values inside ±4 reconstruct within half a step.
+        for (a, b) in t.data.iter().zip(deq.data.iter()) {
+            if a.abs() < 4.0 {
+                assert!((a - b).abs() <= q.scale, "{a} vs {b}");
+            }
+        }
+    }
+}

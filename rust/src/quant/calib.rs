@@ -1,0 +1,80 @@
+//! Post-training calibration (S1): pick per-tensor quantization ranges
+//! from observed activation statistics.
+
+use super::affine::QParams;
+use crate::tensor::FTensor;
+
+/// Running range observer (min/max calibration, optionally with a
+/// percentile-style soft clip to shed outliers).
+#[derive(Clone, Debug, Default)]
+pub struct RangeObserver {
+    samples: Vec<f32>,
+}
+
+impl RangeObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, t: &FTensor) {
+        // Keep absolute values; memory stays modest for calibration sets.
+        self.samples.extend(t.data.iter().map(|x| x.abs()));
+    }
+
+    /// Absolute-max calibration.
+    pub fn fit_maxabs(&self, bits: u32) -> QParams {
+        let ma = self.samples.iter().cloned().fold(0.0f32, f32::max);
+        QParams::fit_symmetric(ma, bits)
+    }
+
+    /// Percentile calibration: cover `pct` (e.g. 0.999) of observed |x|.
+    /// Clipping the extreme tail shrinks the scale and improves resolution
+    /// for the bulk of values — important at the 4–7 bit widths TFHE allows.
+    pub fn fit_percentile(&self, bits: u32, pct: f64) -> QParams {
+        assert!((0.0..=1.0).contains(&pct));
+        if self.samples.is_empty() {
+            return QParams::fit_symmetric(1.0, bits);
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() as f64 - 1.0) * pct).round() as usize;
+        QParams::fit_symmetric(v[idx].max(1e-8), bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn maxabs_covers_everything() {
+        let mut rng = Xoshiro256::new(17);
+        let t = FTensor::randn(&[64, 64], 2.0, &mut rng);
+        let mut obs = RangeObserver::new();
+        obs.observe(&t);
+        let q = obs.fit_maxabs(8);
+        // No value should clamp.
+        let ma = t.data.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+        assert!(q.quantize(ma).abs() <= q.code_max());
+        assert!((q.dequantize(q.quantize(ma)) - ma).abs() <= q.scale);
+    }
+
+    #[test]
+    fn percentile_is_tighter_than_maxabs() {
+        let mut rng = Xoshiro256::new(18);
+        let t = FTensor::randn(&[128, 128], 1.0, &mut rng);
+        let mut obs = RangeObserver::new();
+        obs.observe(&t);
+        let q_max = obs.fit_maxabs(8);
+        let q_pct = obs.fit_percentile(8, 0.99);
+        assert!(q_pct.scale < q_max.scale, "{} vs {}", q_pct.scale, q_max.scale);
+    }
+
+    #[test]
+    fn empty_observer_defaults() {
+        let obs = RangeObserver::new();
+        let q = obs.fit_percentile(8, 0.999);
+        assert!(q.scale > 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Quantization toolkit (S1): affine codes, calibration, fixed-point
+//! requantization. See DESIGN.md §2.
+
+pub mod affine;
+pub mod calib;
+pub mod requant;
+
+pub use affine::QParams;
+pub use calib::RangeObserver;
+pub use requant::FixedMult;

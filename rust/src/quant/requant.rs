@@ -1,0 +1,87 @@
+//! Fixed-point requantization (S1).
+//!
+//! After an integer matmul (or a sum over the sequence), the accumulator
+//! scale is the product of the input scales; to feed the next layer at its
+//! code scale we multiply by `m = s_in / s_out`, a real number in (0, 1]
+//! typically. Following the gemmlowd/TFLite convention we represent `m`
+//! as a 32-bit integer multiplier and a right shift:
+//! `m ≈ mult · 2^(-shift)`, applied with round-to-nearest. Under TFHE the
+//! same step is a literal multiplication + PBS-free shift, i.e. cheap —
+//! matching the paper's point that constant multiplication is fine.
+
+/// A positive real factor ≈ `mult * 2^(-shift)`, `mult` in `[2^30, 2^31)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FixedMult {
+    pub mult: i64,
+    pub shift: u32,
+}
+
+impl FixedMult {
+    /// Decompose a positive real factor. Panics if `m <= 0` or not finite.
+    pub fn from_f64(m: f64) -> Self {
+        assert!(m.is_finite() && m > 0.0, "requant factor must be positive, got {m}");
+        // Normalize m = frac · 2^e with frac in [0.5, 1), fix a 31-bit
+        // mantissa: total factor = mult · 2^(e−31), i.e. shift = 31 − e.
+        let e = m.log2().floor() as i32 + 1; // 2^(e-1) <= m < 2^e
+        let frac = m / 2f64.powi(e); // in [0.5, 1)
+        let mult = (frac * (1i64 << 31) as f64).round() as i64; // [2^30, 2^31]
+        let sh = 31 - e;
+        assert!(sh >= 0, "factor {m} too large for fixed-point requant");
+        FixedMult { mult: mult.min((1i64 << 31) - 1), shift: sh as u32 }
+    }
+
+    /// Apply to an accumulator with round-to-nearest (ties away from zero).
+    #[inline]
+    pub fn apply(&self, x: i64) -> i64 {
+        let prod = (x as i128) * (self.mult as i128);
+        let half = 1i128 << (self.shift.saturating_sub(1));
+        let rounded = if prod >= 0 { prod + half } else { prod - half };
+        (rounded >> self.shift) as i64
+    }
+
+    /// The real factor this represents.
+    pub fn as_f64(&self) -> f64 {
+        self.mult as f64 / 2f64.powi(self.shift as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng64;
+    use crate::util::prop::{prop_assert, prop_check};
+
+    #[test]
+    fn represents_factor_accurately() {
+        for m in [0.5, 0.123, 0.9999, 0.001, 1.0, 1.7, 3.999] {
+            let f = FixedMult::from_f64(m);
+            let rel = (f.as_f64() - m).abs() / m;
+            assert!(rel < 1e-8, "m={m} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn apply_matches_float_rounding() {
+        prop_check("fixed-point apply ≈ float", 512, |rng| {
+            let m = 0.001 + rng.next_f64() * 2.0;
+            let f = FixedMult::from_f64(m);
+            let x = rng.next_range_i64(-1_000_000, 1_000_000);
+            let want = (x as f64 * m).round();
+            let got = f.apply(x) as f64;
+            // Allow one ulp of disagreement on exact .5 ties.
+            prop_assert((got - want).abs() <= 1.0, &format!("m={m} x={x} got={got} want={want}"))
+        });
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let f = FixedMult::from_f64(0.37);
+        assert_eq!(f.apply(0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_nonpositive() {
+        let _ = FixedMult::from_f64(0.0);
+    }
+}

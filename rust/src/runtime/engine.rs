@@ -1,0 +1,83 @@
+//! PJRT execution engine (S8): load AOT-compiled HLO text artifacts and
+//! execute them from the Rust request path. Wraps the `xla` crate
+//! (xla_extension 0.5.1, CPU plugin). Python never runs here.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A compiled executable plus its I/O contract.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    /// (rows, cols) of each input the entry computation expects.
+    pub input_shapes: Vec<(usize, usize)>,
+    pub name: String,
+}
+
+/// Shared PJRT client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text artifact and compile it for this client.
+    pub fn load_hlo_text(
+        &self,
+        path: &Path,
+        input_shapes: Vec<(usize, usize)>,
+        name: &str,
+    ) -> Result<Engine> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Engine { exe, input_shapes, name: name.to_string() })
+    }
+}
+
+impl Engine {
+    /// Execute with f32 matrices (row-major `Vec<f32>` + shape pairs).
+    /// Returns the first tuple element flattened (artifacts are lowered
+    /// with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            inputs.len() == self.input_shapes.len(),
+            "engine '{}' expects {} inputs, got {}",
+            self.name,
+            self.input_shapes.len(),
+            inputs.len()
+        );
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, &(r, c)) in inputs.iter().zip(self.input_shapes.iter()) {
+            anyhow::ensure!(
+                data.len() == r * c,
+                "engine '{}': input data {} does not match shape {}x{}",
+                self.name,
+                data.len(),
+                r,
+                c
+            );
+            let lit = xla::Literal::vec1(data);
+            lits.push(if c == 0 {
+                lit // rank-1 input
+            } else {
+                lit.reshape(&[r as i64, c as i64])?
+            });
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime (S8): loads AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+
+pub mod engine;
+pub mod registry;
+
+pub use engine::{Engine, Runtime};
+pub use registry::Registry;

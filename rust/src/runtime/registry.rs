@@ -1,0 +1,121 @@
+//! Artifact registry (S8): reads `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and lazily loads/compiles engines on demand,
+//! keyed by (mechanism, seq_len) for attention heads or by model name.
+
+use super::engine::{Engine, Runtime};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// One catalog entry for an attention-head artifact.
+#[derive(Clone, Debug)]
+pub struct AttnEntry {
+    pub name: String,
+    pub mechanism: String,
+    pub seq_len: usize,
+    pub dim: usize,
+    pub file: String,
+}
+
+/// One catalog entry for a full-model artifact.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub file: String,
+    pub weights: String,
+    pub config: Json,
+}
+
+/// The registry: manifest + lazily compiled engines.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub attention: Vec<AttnEntry>,
+    pub models: Vec<ModelEntry>,
+    runtime: Runtime,
+    engines: HashMap<String, Engine>,
+}
+
+impl Registry {
+    /// Open an artifact directory (must contain manifest.json).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let attention = j
+            .get("attention")
+            .and_then(|a| a.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|e| {
+                Some(AttnEntry {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    mechanism: e.get("mechanism")?.as_str()?.to_string(),
+                    seq_len: e.get("seq_len")?.as_i64()? as usize,
+                    dim: e.get("dim")?.as_i64()? as usize,
+                    file: e.get("file")?.as_str()?.to_string(),
+                })
+            })
+            .collect();
+        let models = j
+            .get("models")
+            .and_then(|a| a.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|e| {
+                Some(ModelEntry {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    file: e.get("file")?.as_str()?.to_string(),
+                    weights: e.get("weights")?.as_str()?.to_string(),
+                    config: e.get("config")?.clone(),
+                })
+            })
+            .collect();
+        Ok(Registry { dir, attention, models, runtime: Runtime::cpu()?, engines: HashMap::new() })
+    }
+
+    /// Get (compiling on first use) the attention engine for a variant.
+    pub fn attention_engine(&mut self, mechanism: &str, seq_len: usize) -> Result<&Engine> {
+        let entry = self
+            .attention
+            .iter()
+            .find(|e| e.mechanism == mechanism && e.seq_len == seq_len)
+            .cloned()
+            .ok_or_else(|| anyhow!("no artifact for mechanism={mechanism} T={seq_len}"))?;
+        if !self.engines.contains_key(&entry.name) {
+            let shapes = vec![(entry.seq_len, entry.dim); 3];
+            let engine =
+                self.runtime.load_hlo_text(&self.dir.join(&entry.file), shapes, &entry.name)?;
+            self.engines.insert(entry.name.clone(), engine);
+        }
+        Ok(&self.engines[&entry.name])
+    }
+
+    /// Get (compiling on first use) a full-model engine by name.
+    pub fn model_engine(&mut self, name: &str) -> Result<&Engine> {
+        let entry = self
+            .models
+            .iter()
+            .find(|e| e.name == name)
+            .cloned()
+            .ok_or_else(|| anyhow!("no model artifact named '{name}'"))?;
+        if !self.engines.contains_key(&entry.name) {
+            let seq = entry.config.get("seq_len").and_then(|v| v.as_i64()).unwrap_or(0) as usize;
+            let feat =
+                entry.config.get("in_features").and_then(|v| v.as_i64()).unwrap_or(0) as usize;
+            let engine = self.runtime.load_hlo_text(
+                &self.dir.join(&entry.file),
+                vec![(seq, feat)],
+                &entry.name,
+            )?;
+            self.engines.insert(entry.name.clone(), engine);
+        }
+        Ok(&self.engines[&entry.name])
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+}

@@ -1,0 +1,81 @@
+//! Minimal blocking client for the JSON-lines protocol (tests, benches,
+//! and the `inhibitor client` CLI subcommand).
+
+use super::proto::Request;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> std::io::Result<Json> {
+        writeln!(self.writer, "{line}")?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Json::parse(reply.trim())
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+    }
+
+    pub fn ping(&mut self) -> std::io::Result<bool> {
+        Ok(self.roundtrip(r#"{"op":"ping"}"#)?.get("ok").and_then(|v| v.as_bool())
+            == Some(true))
+    }
+
+    pub fn metrics(&mut self) -> std::io::Result<String> {
+        Ok(self
+            .roundtrip(r#"{"op":"metrics"}"#)?
+            .get("text")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string())
+    }
+
+    pub fn shutdown(&mut self) -> std::io::Result<()> {
+        let _ = self.roundtrip(r#"{"op":"shutdown"}"#)?;
+        Ok(())
+    }
+
+    /// Run an inference; returns (output, latency reported by the server).
+    pub fn infer(
+        &mut self,
+        engine: &str,
+        target: &str,
+        features: Vec<f32>,
+        rows: usize,
+        cols: usize,
+    ) -> std::io::Result<Result<(Vec<f32>, f64), String>> {
+        let req = Request::Infer {
+            engine: engine.into(),
+            target: target.into(),
+            features,
+            rows,
+            cols,
+        };
+        let j = self.roundtrip(&req.to_json_line())?;
+        if j.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            let out = j
+                .get("output")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|f| f as f32).collect())
+                .unwrap_or_default();
+            let lat = j.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            Ok(Ok((out, lat)))
+        } else {
+            Ok(Err(j
+                .get("error")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown error")
+                .to_string()))
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! TCP serving layer (S9): JSON-lines protocol, server, blocking client.
+
+pub mod client;
+pub mod proto;
+#[allow(clippy::module_inception)]
+pub mod server;
+
+pub use client::Client;
+pub use proto::Request;
+pub use server::serve;

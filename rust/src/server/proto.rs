@@ -1,0 +1,164 @@
+//! Wire protocol (S9): JSON-lines over TCP. One request object per line,
+//! one response object per line. Kept deliberately simple — the paper's
+//! contribution is below this layer — but complete enough to drive the
+//! serving benchmark from a separate process.
+//!
+//! Requests:
+//!   {"op":"infer","engine":"quant","mechanism":"inhibitor",
+//!    "features":[...],"rows":R,"cols":C}
+//!   {"op":"infer","engine":"pjrt","model":"model_inhibitor",
+//!    "features":[...],"rows":R,"cols":C}
+//!   {"op":"metrics"}   {"op":"ping"}   {"op":"shutdown"}
+//!
+//! Responses:
+//!   {"ok":true,"output":[...],"latency_s":...}  |  {"ok":false,"error":"..."}
+
+use crate::util::json::Json;
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Metrics,
+    Shutdown,
+    Infer {
+        engine: String,
+        target: String,
+        features: Vec<f32>,
+        rows: usize,
+        cols: usize,
+    },
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let j = Json::parse(line).map_err(|e| e.to_string())?;
+        match j.get("op").and_then(|v| v.as_str()) {
+            Some("ping") => Ok(Request::Ping),
+            Some("metrics") => Ok(Request::Metrics),
+            Some("shutdown") => Ok(Request::Shutdown),
+            Some("infer") => {
+                let engine = j
+                    .get("engine")
+                    .and_then(|v| v.as_str())
+                    .ok_or("missing 'engine'")?
+                    .to_string();
+                let target = j
+                    .get("mechanism")
+                    .or_else(|| j.get("model"))
+                    .and_then(|v| v.as_str())
+                    .ok_or("missing 'mechanism'/'model'")?
+                    .to_string();
+                let features = j
+                    .get("features")
+                    .and_then(|v| v.as_arr())
+                    .ok_or("missing 'features'")?
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32).ok_or("non-numeric feature"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                let rows =
+                    j.get("rows").and_then(|v| v.as_i64()).ok_or("missing 'rows'")? as usize;
+                let cols =
+                    j.get("cols").and_then(|v| v.as_i64()).ok_or("missing 'cols'")? as usize;
+                if rows * cols != features.len() {
+                    return Err(format!(
+                        "features length {} != rows*cols {}",
+                        features.len(),
+                        rows * cols
+                    ));
+                }
+                Ok(Request::Infer { engine, target, features, rows, cols })
+            }
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+
+    pub fn to_json_line(&self) -> String {
+        match self {
+            Request::Ping => r#"{"op":"ping"}"#.to_string(),
+            Request::Metrics => r#"{"op":"metrics"}"#.to_string(),
+            Request::Shutdown => r#"{"op":"shutdown"}"#.to_string(),
+            Request::Infer { engine, target, features, rows, cols } => {
+                let key = if engine == "pjrt" { "model" } else { "mechanism" };
+                Json::obj(vec![
+                    ("op", Json::str("infer")),
+                    ("engine", Json::str(engine.clone())),
+                    (key, Json::str(target.clone())),
+                    (
+                        "features",
+                        Json::arr(features.iter().map(|&f| Json::num(f as f64)).collect()),
+                    ),
+                    ("rows", Json::num(*rows as f64)),
+                    ("cols", Json::num(*cols as f64)),
+                ])
+                .to_string()
+            }
+        }
+    }
+}
+
+/// Build a success response line.
+pub fn ok_response(output: &[f32], latency_s: f64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("output", Json::arr(output.iter().map(|&f| Json::num(f as f64)).collect())),
+        ("latency_s", Json::num(latency_s)),
+    ])
+    .to_string()
+}
+
+/// Build an error response line.
+pub fn err_response(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]).to_string()
+}
+
+/// Build a free-form text response (metrics).
+pub fn text_response(text: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(true)), ("text", Json::str(text))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_infer() {
+        let req = Request::Infer {
+            engine: "quant".into(),
+            target: "inhibitor".into(),
+            features: vec![1.0, 2.0, 3.0, 4.0],
+            rows: 2,
+            cols: 2,
+        };
+        let line = req.to_json_line();
+        assert_eq!(Request::parse(&line).unwrap(), req);
+    }
+
+    #[test]
+    fn parse_control_ops() {
+        assert_eq!(Request::parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(Request::parse(r#"{"op":"metrics"}"#).unwrap(), Request::Metrics);
+        assert_eq!(Request::parse(r#"{"op":"shutdown"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse(r#"{"op":"teleport"}"#).is_err());
+        assert!(Request::parse(
+            r#"{"op":"infer","engine":"quant","mechanism":"x","features":[1],"rows":2,"cols":2}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn responses_are_valid_json() {
+        for s in [
+            ok_response(&[1.0, -2.5], 0.01),
+            err_response("boom"),
+            text_response("a\nb"),
+        ] {
+            crate::util::json::Json::parse(&s).unwrap();
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! TCP serving front-end (S9): JSON-lines over std::net, one handler
+//! thread per connection, all inference flowing through the coordinator.
+
+use super::proto::{err_response, ok_response, text_response, Request};
+use crate::coordinator::{Coordinator, EnginePath, Payload};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serve until a shutdown request arrives. Returns the bound address
+/// through `on_ready` (used by tests/benches binding port 0).
+pub fn serve(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_ready(listener.local_addr()?);
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handlers = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let c = Arc::clone(&coordinator);
+                let s = Arc::clone(&stop);
+                handlers.push(std::thread::spawn(move || handle_conn(stream, c, s)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<AtomicBool>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Request::parse(&line) {
+            Err(e) => err_response(&e),
+            Ok(Request::Ping) => text_response("pong"),
+            Ok(Request::Metrics) => text_response(&coordinator.metrics().summary()),
+            Ok(Request::Shutdown) => {
+                stop.store(true, Ordering::Relaxed);
+                let _ = writeln!(writer, "{}", text_response("shutting down"));
+                break;
+            }
+            Ok(Request::Infer { engine, target, features, rows, cols }) => {
+                let path = match engine.as_str() {
+                    "quant" => EnginePath::QuantInt(target),
+                    "pjrt" => EnginePath::Pjrt(target),
+                    other => {
+                        let _ = writeln!(
+                            writer,
+                            "{}",
+                            err_response(&format!("unknown engine '{other}'"))
+                        );
+                        continue;
+                    }
+                };
+                match coordinator.infer_blocking(
+                    path,
+                    Payload::Features(features, (rows, cols)),
+                    Duration::from_secs(60),
+                ) {
+                    Ok(resp) => match resp.error {
+                        None => ok_response(&resp.output, resp.latency_s),
+                        Some(e) => err_response(&e),
+                    },
+                    Err(e) => err_response(&e),
+                }
+            }
+        };
+        if writeln!(writer, "{reply}").is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}

@@ -1,0 +1,185 @@
+//! Float tensor: host-side reference arithmetic and (de)quantization
+//! endpoints. The request path proper runs integers (`ITensor`) or
+//! ciphertexts; `FTensor` exists for calibration, accuracy checks and the
+//! PJRT float path boundary.
+
+use super::shape::Shape;
+use crate::util::prng::Xoshiro256;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FTensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl FTensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        FTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), data.len(), "data length does not match shape {shape}");
+        FTensor { shape, data }
+    }
+
+    /// Standard-normal random tensor (tests/benches).
+    pub fn randn(dims: &[usize], std: f32, rng: &mut Xoshiro256) -> Self {
+        let shape = Shape::new(dims);
+        let data = (0..shape.numel()).map(|_| rng.next_gaussian_std(std as f64) as f32).collect();
+        FTensor { shape, data }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape.0[1] + j]
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        FTensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn zip(&self, other: &Self, f: impl Fn(f32, f32) -> f32) -> Self {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        let data = self.data.iter().zip(other.data.iter()).map(|(&a, &b)| f(a, b)).collect();
+        FTensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add(&self, o: &Self) -> Self {
+        self.zip(o, |a, b| a + b)
+    }
+
+    pub fn sub(&self, o: &Self) -> Self {
+        self.zip(o, |a, b| a - b)
+    }
+
+    pub fn relu(&self) -> Self {
+        self.map(|x| x.max(0.0))
+    }
+
+    pub fn matmul(&self, other: &Self) -> Self {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.dims()[0], self.dims()[1]);
+        let (k2, n) = (other.dims()[0], other.dims()[1]);
+        assert_eq!(k, k2, "matmul inner dim mismatch");
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        FTensor::from_vec(&[m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Self {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.dims()[0], self.dims()[1]);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        FTensor::from_vec(&[n, m], out)
+    }
+
+    /// Row-wise softmax of a rank-2 tensor (reference for the quantized
+    /// dot-product baseline).
+    pub fn softmax_rows(&self) -> Self {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.dims()[0], self.dims()[1]);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let row = &self.data[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&x| (x - mx).exp()).collect();
+            let s: f32 = exps.iter().sum();
+            for j in 0..n {
+                out[i * n + j] = exps[j] / s;
+            }
+        }
+        FTensor::from_vec(&[m, n], out)
+    }
+
+    /// Max |a - b| between two tensors of equal shape.
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().cloned().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let t = FTensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let s = t.softmax_rows();
+        for i in 0..2 {
+            let row: f32 = (0..3).map(|j| s.at2(i, j)).sum();
+            assert!((row - 1.0).abs() < 1e-6);
+        }
+        // Monotone: bigger logit, bigger prob.
+        assert!(s.at2(0, 2) > s.at2(0, 1));
+    }
+
+    #[test]
+    fn softmax_shift_invariance() {
+        let t = FTensor::from_vec(&[1, 3], vec![10.0, 11.0, 12.0]);
+        let u = t.map(|x| x + 100.0);
+        assert!(t.softmax_rows().max_abs_diff(&u.softmax_rows()) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = FTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = FTensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&b), a);
+    }
+
+    #[test]
+    fn randn_spread() {
+        let mut rng = Xoshiro256::new(3);
+        let t = FTensor::randn(&[100, 100], 1.0, &mut rng);
+        let mean: f32 = t.data.iter().sum::<f32>() / t.numel() as f32;
+        assert!(mean.abs() < 0.05);
+    }
+}

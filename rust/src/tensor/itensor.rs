@@ -1,0 +1,393 @@
+//! Integer tensor: the plaintext quantized compute substrate (S1).
+//!
+//! The paper's Table 3 experiment implements both attention mechanisms
+//! "directly in low-level code ... integer 16-bit arithmetics implemented
+//! in the Rust programming language". `ITensor` mirrors that: values are
+//! conceptually int16 (or narrower) quantized codes, stored as `i64` so
+//! intermediate accumulations (matmul over d, sums over sequence length)
+//! cannot overflow before the requantization step. Debug assertions verify
+//! declared bit-widths; release builds pay no checking cost on the hot
+//! path.
+
+use super::shape::Shape;
+use crate::util::prng::{Rng64, Xoshiro256};
+
+/// Dense row-major integer tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ITensor {
+    pub shape: Shape,
+    pub data: Vec<i64>,
+}
+
+impl ITensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        ITensor { shape, data: vec![0; n] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<i64>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), data.len(), "data length does not match shape {shape}");
+        ITensor { shape, data }
+    }
+
+    /// Uniform random tensor in `[lo, hi]`, for tests and benches.
+    pub fn random(dims: &[usize], lo: i64, hi: i64, rng: &mut Xoshiro256) -> Self {
+        let shape = Shape::new(dims);
+        let data = (0..shape.numel()).map(|_| rng.next_range_i64(lo, hi)).collect();
+        ITensor { shape, data }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn get(&self, idx: &[usize]) -> i64 {
+        self.data[self.shape.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: i64) {
+        let off = self.shape.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// 2-D accessor (hot path; avoids building an index slice).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> i64 {
+        debug_assert_eq!(self.rank(), 2);
+        let cols = self.shape.0[1];
+        self.data[i * cols + j]
+    }
+
+    /// Reshape without copying (numel must match).
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), self.data.len(), "reshape numel mismatch");
+        self.shape = shape;
+        self
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(i64) -> i64) -> Self {
+        ITensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Elementwise binary op; shapes must match exactly.
+    pub fn zip(&self, other: &Self, f: impl Fn(i64, i64) -> i64) -> Self {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        let data = self.data.iter().zip(other.data.iter()).map(|(&a, &b)| f(a, b)).collect();
+        ITensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// Multiply by a plaintext literal (cheap everywhere, incl. under FHE).
+    pub fn scalar_mul(&self, c: i64) -> Self {
+        self.map(|x| x * c)
+    }
+
+    /// ReLU: x⁺ = max(0, x) (paper shorthand).
+    pub fn relu(&self) -> Self {
+        self.map(|x| x.max(0))
+    }
+
+    /// Negative ReLU: x⁻ = min(0, x) (paper eq. 11 context).
+    pub fn neg_relu(&self) -> Self {
+        self.map(|x| x.min(0))
+    }
+
+    pub fn abs(&self) -> Self {
+        self.map(|x| x.abs())
+    }
+
+    /// Matrix multiply, `self: [m,k] × other: [k,n] -> [m,n]`.
+    /// i64 accumulation; this is the "expensive" op the Inhibitor avoids.
+    pub fn matmul(&self, other: &Self) -> Self {
+        assert_eq!(self.rank(), 2, "matmul lhs must be rank 2");
+        assert_eq!(other.rank(), 2, "matmul rhs must be rank 2");
+        let (m, k) = (self.dims()[0], self.dims()[1]);
+        let (k2, n) = (other.dims()[0], other.dims()[1]);
+        assert_eq!(k, k2, "matmul inner dim mismatch: {k} vs {k2}");
+        let mut out = vec![0i64; m * n];
+        // ikj loop order: streams `other` rows, good cache behaviour.
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        ITensor::from_vec(&[m, n], out)
+    }
+
+    /// Transpose a rank-2 tensor.
+    pub fn transpose2(&self) -> Self {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.dims()[0], self.dims()[1]);
+        let mut out = vec![0i64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        ITensor::from_vec(&[n, m], out)
+    }
+
+    /// Pairwise Manhattan distance between rows:
+    /// `self: [m,d], other: [n,d] -> [m,n]`, `out[i][j] = Σ_k |a_ik − b_jk|`.
+    /// This is the paper's eq. 5 numerator (the fused `cdist` the appendix
+    /// recommends) — additions and absolute values only, no products.
+    pub fn manhattan_cdist(&self, other: &Self) -> Self {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, d) = (self.dims()[0], self.dims()[1]);
+        let (n, d2) = (other.dims()[0], other.dims()[1]);
+        assert_eq!(d, d2, "cdist feature dim mismatch");
+        let mut out = vec![0i64; m * n];
+        for i in 0..m {
+            let a = &self.data[i * d..(i + 1) * d];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let b = &other.data[j * d..(j + 1) * d];
+                let mut s = 0i64;
+                for k in 0..d {
+                    s += (a[k] - b[k]).abs();
+                }
+                *o = s;
+            }
+        }
+        ITensor::from_vec(&[m, n], out)
+    }
+
+    /// Sum along an axis of a rank-2 tensor: axis=0 -> [n], axis=1 -> [m].
+    pub fn sum_axis2(&self, axis: usize) -> Vec<i64> {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.dims()[0], self.dims()[1]);
+        match axis {
+            0 => {
+                let mut out = vec![0i64; n];
+                for i in 0..m {
+                    for j in 0..n {
+                        out[j] += self.data[i * n + j];
+                    }
+                }
+                out
+            }
+            1 => {
+                let mut out = vec![0i64; m];
+                for i in 0..m {
+                    out[i] = self.data[i * n..(i + 1) * n].iter().sum();
+                }
+                out
+            }
+            _ => panic!("axis must be 0 or 1 for rank-2 sum"),
+        }
+    }
+
+    /// Largest absolute value (0 for empty tensors).
+    pub fn max_abs(&self) -> i64 {
+        self.data.iter().map(|x| x.abs()).max().unwrap_or(0)
+    }
+
+    /// Minimum / maximum values.
+    pub fn min(&self) -> i64 {
+        self.data.iter().copied().min().unwrap_or(0)
+    }
+
+    pub fn max(&self) -> i64 {
+        self.data.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Number of signed bits needed to represent every entry (incl. sign).
+    /// Matches the "int" column of the paper's Table 2.
+    pub fn signed_bits(&self) -> u32 {
+        signed_bits_for(self.min(), self.max())
+    }
+
+    /// Assert every entry fits in `bits`-bit signed integers (debug aid;
+    /// the quantized engine calls this after each requantization).
+    pub fn check_bits(&self, bits: u32) -> Result<(), String> {
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v < lo || v > hi {
+                return Err(format!("value {v} at flat index {i} exceeds int{bits} [{lo},{hi}]"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Signed bits needed to cover `[min, max]`.
+pub fn signed_bits_for(min: i64, max: i64) -> u32 {
+    let mut bits = 1;
+    loop {
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        if min >= lo && max <= hi {
+            return bits;
+        }
+        bits += 1;
+    }
+}
+
+/// Unsigned bits needed to cover `[0, max]` (Table 2 "uint" column).
+pub fn unsigned_bits_for(max: i64) -> u32 {
+    assert!(max >= 0);
+    let mut bits = 1;
+    while (1i64 << bits) - 1 < max {
+        bits += 1;
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{prop_assert, prop_assert_eq, prop_check};
+
+    #[test]
+    fn matmul_known() {
+        let a = ITensor::from_vec(&[2, 2], vec![1, 2, 3, 4]);
+        let b = ITensor::from_vec(&[2, 2], vec![5, 6, 7, 8]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn matmul_identity_property() {
+        prop_check("A·I == A", 64, |rng| {
+            let m = 1 + rng.next_bounded(6) as usize;
+            let n = 1 + rng.next_bounded(6) as usize;
+            let a = ITensor::random(&[m, n], -50, 50, rng);
+            let mut eye = ITensor::zeros(&[n, n]);
+            for i in 0..n {
+                eye.set(&[i, i], 1);
+            }
+            prop_assert_eq(a.matmul(&eye), a, "identity")
+        });
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        prop_check("fast matmul == naive", 32, |rng| {
+            let (m, k, n) = (
+                1 + rng.next_bounded(5) as usize,
+                1 + rng.next_bounded(5) as usize,
+                1 + rng.next_bounded(5) as usize,
+            );
+            let a = ITensor::random(&[m, k], -30, 30, rng);
+            let b = ITensor::random(&[k, n], -30, 30, rng);
+            let fast = a.matmul(&b);
+            let mut naive = ITensor::zeros(&[m, n]);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0;
+                    for kk in 0..k {
+                        s += a.at2(i, kk) * b.at2(kk, j);
+                    }
+                    naive.set(&[i, j], s);
+                }
+            }
+            prop_assert_eq(fast, naive, "matmul")
+        });
+    }
+
+    #[test]
+    fn cdist_known() {
+        // rows a=(0,0),(3,4); b=(1,1)
+        let a = ITensor::from_vec(&[2, 2], vec![0, 0, 3, 4]);
+        let b = ITensor::from_vec(&[1, 2], vec![1, 1]);
+        let d = a.manhattan_cdist(&b);
+        assert_eq!(d.dims(), &[2, 1]);
+        assert_eq!(d.data, vec![2, 5]);
+    }
+
+    #[test]
+    fn cdist_symmetry_and_triangle() {
+        prop_check("cdist metric axioms", 48, |rng| {
+            let n = 2 + rng.next_bounded(4) as usize;
+            let d = 1 + rng.next_bounded(4) as usize;
+            let x = ITensor::random(&[n, d], -20, 20, rng);
+            let dist = x.manhattan_cdist(&x);
+            for i in 0..n {
+                prop_assert_eq(dist.at2(i, i), 0, "self distance zero")?;
+                for j in 0..n {
+                    prop_assert_eq(dist.at2(i, j), dist.at2(j, i), "symmetry")?;
+                    for l in 0..n {
+                        prop_assert(
+                            dist.at2(i, j) <= dist.at2(i, l) + dist.at2(l, j),
+                            "triangle inequality",
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relu_variants() {
+        let t = ITensor::from_vec(&[5], vec![-2, -1, 0, 1, 2]);
+        assert_eq!(t.relu().data, vec![0, 0, 0, 1, 2]);
+        assert_eq!(t.neg_relu().data, vec![-2, -1, 0, 0, 0]);
+        assert_eq!(t.abs().data, vec![2, 1, 0, 1, 2]);
+        // eq. 8: x⁺ = (x + |x|)/2 and eq. 11: x⁻ = (x − |x|)/2
+        let plus = t.add(&t.abs()).map(|v| v / 2);
+        let minus = t.sub(&t.abs()).map(|v| v / 2);
+        assert_eq!(plus, t.relu());
+        assert_eq!(minus, t.neg_relu());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        prop_check("(Aᵀ)ᵀ == A", 32, |rng| {
+            let m = 1 + rng.next_bounded(6) as usize;
+            let n = 1 + rng.next_bounded(6) as usize;
+            let a = ITensor::random(&[m, n], -100, 100, rng);
+            prop_assert_eq(a.transpose2().transpose2(), a, "involution")
+        });
+    }
+
+    #[test]
+    fn sums_and_bits() {
+        let t = ITensor::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.sum_axis2(0), vec![5, 7, 9]);
+        assert_eq!(t.sum_axis2(1), vec![6, 15]);
+        assert_eq!(signed_bits_for(-8, 7), 4);
+        assert_eq!(signed_bits_for(-9, 0), 5);
+        assert_eq!(unsigned_bits_for(15), 4);
+        assert_eq!(unsigned_bits_for(16), 5);
+        assert!(t.check_bits(4).is_ok());
+        assert!(t.check_bits(3).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dim mismatch")]
+    fn matmul_shape_check() {
+        let a = ITensor::zeros(&[2, 3]);
+        let b = ITensor::zeros(&[2, 3]);
+        let _ = a.matmul(&b);
+    }
+}

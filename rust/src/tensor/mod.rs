@@ -1,0 +1,9 @@
+//! In-tree tensor types (S1): integer compute substrate + float reference.
+
+pub mod ftensor;
+pub mod itensor;
+pub mod shape;
+
+pub use ftensor::FTensor;
+pub use itensor::{signed_bits_for, unsigned_bits_for, ITensor};
+pub use shape::Shape;

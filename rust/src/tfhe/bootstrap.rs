@@ -1,0 +1,243 @@
+//! Programmable bootstrapping (S4): the operation the whole paper's cost
+//! analysis revolves around.
+//!
+//! PBS = mod-switch → blind rotation (a chain of `n` CMux over the
+//! bootstrap key) → sample extract → key switch. Filling the accumulator
+//! ("test vector") with a LUT of `f` over the message space evaluates the
+//! univariate function `f` *and* resets noise — Chillotti et al. 2019.
+//!
+//! Layout: one padding bit + `p` message bits; message `m ∈ [0, 2^p)` is
+//! encoded as `m·Δ`, `Δ = 2^(63−p)`. The padding bit keeps the phase in
+//! the first half of the torus so the negacyclic wrap never flips the
+//! LUT sign. A half-slot pre-rotation centres the rounding window.
+
+use super::fft::NegacyclicFft;
+use super::ggsw::{GgswCiphertext, GgswFourier};
+use super::glwe::{GlweCiphertext, GlweSecretKey};
+use super::keyswitch::KeySwitchKey;
+use super::lwe::{LweCiphertext, LweSecretKey};
+use super::params::TfheParams;
+use super::torus::Torus;
+use crate::util::prng::Xoshiro256;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global PBS counter — the unit the paper counts circuit cost in.
+/// Benches read/reset it to report "number of PBS" per circuit.
+pub static PBS_COUNT: AtomicU64 = AtomicU64::new(0);
+
+pub fn pbs_count() -> u64 {
+    PBS_COUNT.load(Ordering::Relaxed)
+}
+
+pub fn reset_pbs_count() {
+    PBS_COUNT.store(0, Ordering::Relaxed);
+}
+
+/// Client-side key material.
+pub struct ClientKey {
+    pub params: TfheParams,
+    pub lwe_key: LweSecretKey,
+    pub glwe_key: GlweSecretKey,
+}
+
+impl ClientKey {
+    pub fn generate(params: TfheParams, rng: &mut Xoshiro256) -> Self {
+        params.validate().expect("invalid TFHE parameters");
+        ClientKey {
+            params,
+            lwe_key: LweSecretKey::generate(params.lwe_dim, rng),
+            glwe_key: GlweSecretKey::generate(params.poly_size, params.glwe_dim, rng),
+        }
+    }
+
+    /// Generate the public server key (bootstrap + key-switch keys).
+    pub fn server_key(&self, rng: &mut Xoshiro256) -> ServerKey {
+        let fft = NegacyclicFft::new(self.params.poly_size);
+        let bsk = self
+            .lwe_key
+            .bits
+            .iter()
+            .map(|&s| {
+                GgswCiphertext::encrypt(
+                    s,
+                    &self.glwe_key,
+                    self.params.pbs_decomp,
+                    self.params.glwe_noise_std,
+                    rng,
+                )
+                .to_fourier(&fft)
+            })
+            .collect();
+        let ksk = KeySwitchKey::generate(
+            &self.glwe_key.to_extracted_lwe(),
+            &self.lwe_key,
+            self.params.ks_decomp,
+            self.params.lwe_noise_std,
+            rng,
+        );
+        ServerKey { params: self.params, bsk, ksk, fft }
+    }
+}
+
+/// Server-side evaluation key.
+pub struct ServerKey {
+    pub params: TfheParams,
+    /// One GGSW (Fourier domain) per LWE secret bit.
+    bsk: Vec<GgswFourier>,
+    ksk: KeySwitchKey,
+    fft: NegacyclicFft,
+}
+
+/// A lookup table over the message space: `table[m]` is the *torus value*
+/// the PBS returns for message `m` (usually `f(m)·Δ`).
+#[derive(Clone, Debug)]
+pub struct Lut {
+    pub table: Vec<Torus>,
+}
+
+impl Lut {
+    /// Build from a message-space function `f: [0,2^p) → [0,2^p)` (values
+    /// taken mod 2^p and encoded at Δ).
+    pub fn from_fn(params: &TfheParams, f: impl Fn(u64) -> u64) -> Self {
+        let space = params.message_space();
+        let delta = params.delta();
+        let table = (0..space)
+            .map(|m| (f(m) & (space - 1)).wrapping_mul(delta))
+            .collect();
+        Lut { table }
+    }
+
+    /// Build from a function returning raw torus values (full control).
+    pub fn from_torus_fn(params: &TfheParams, f: impl Fn(u64) -> Torus) -> Self {
+        let table = (0..params.message_space()).map(f).collect();
+        Lut { table }
+    }
+}
+
+impl ServerKey {
+    /// Accumulator polynomial for `lut`: slot `m` replicated over
+    /// `N / 2^p` coefficients, with a half-slot pre-rotation so that the
+    /// rounding window is centred on each slot.
+    fn test_vector(&self, lut: &Lut) -> GlweCiphertext {
+        let n = self.params.poly_size;
+        let p_space = self.params.message_space() as usize;
+        let slot = n / p_space; // coefficients per message slot
+        debug_assert!(slot >= 1);
+        let mut tv = vec![0u64; n];
+        for (m, &val) in lut.table.iter().enumerate() {
+            for j in 0..slot {
+                tv[m * slot + j] = val;
+            }
+        }
+        // Half-slot pre-rotation: acc ← tv · X^{−half_slot} (rotate left),
+        // centring each slot's rounding window. The double sign flip at the
+        // 0-boundary (negative noise on m=0 reads −(−tv[...])) makes the
+        // wrap exact — same convention as tfhe-rs' generate_lookup_table.
+        let acc = GlweCiphertext::trivial(tv, self.params.glwe_dim);
+        acc.rotate_monomial((2 * n - slot / 2) as u64)
+    }
+
+    /// Blind rotation: returns GLWE whose constant coefficient encrypts
+    /// `lut[decode(ct)]`.
+    fn blind_rotate(&self, ct: &LweCiphertext, lut: &Lut) -> GlweCiphertext {
+        let n2 = (2 * self.params.poly_size) as u64;
+        // Mod-switch mask and body to Z_{2N}.
+        let switch = |t: Torus| -> u64 { super::torus::round_to_modulus(t, n2) };
+        let b_t = switch(ct.body);
+        let mut acc = self.test_vector(lut).rotate_monomial(n2 - b_t);
+        // One scratch allocation per PBS, shared by all n CMux steps.
+        let mut scratch = super::ggsw::ExtScratch::new(
+            self.params.poly_size,
+            self.params.glwe_dim,
+            self.params.pbs_decomp,
+        );
+        for (a, ggsw) in ct.mask.iter().zip(self.bsk.iter()) {
+            let a_t = switch(*a);
+            if a_t == 0 {
+                continue;
+            }
+            ggsw.cmux_rotate_assign(&self.fft, &mut acc, a_t, &mut scratch);
+        }
+        acc
+    }
+
+    /// Full programmable bootstrap: evaluate `lut` on the encrypted
+    /// message and return a fresh-noise ciphertext under the small key.
+    pub fn pbs(&self, ct: &LweCiphertext, lut: &Lut) -> LweCiphertext {
+        PBS_COUNT.fetch_add(1, Ordering::Relaxed);
+        let acc = self.blind_rotate(ct, lut);
+        let extracted = acc.sample_extract(0);
+        self.ksk.keyswitch(&extracted)
+    }
+
+    /// Number of CMux levels (= LWE dim); used by cost reporting.
+    pub fn lwe_dim(&self) -> usize {
+        self.bsk.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::encoding::Encoder;
+
+    fn setup() -> (ClientKey, ServerKey, Xoshiro256) {
+        let mut rng = Xoshiro256::new(2024);
+        let ck = ClientKey::generate(TfheParams::test_small(), &mut rng);
+        let sk = ck.server_key(&mut rng);
+        (ck, sk, rng)
+    }
+
+    #[test]
+    fn pbs_identity_over_full_message_space() {
+        let (ck, sk, mut rng) = setup();
+        let enc = Encoder::new(ck.params);
+        let lut = Lut::from_fn(&ck.params, |m| m);
+        for m in 0..ck.params.message_space() {
+            let ct = enc.encrypt_raw(m, &ck, &mut rng);
+            let out = sk.pbs(&ct, &lut);
+            let got = enc.decrypt_raw(&out, &ck);
+            assert_eq!(got, m, "identity LUT at m={m}");
+        }
+    }
+
+    #[test]
+    fn pbs_evaluates_nontrivial_function() {
+        let (ck, sk, mut rng) = setup();
+        let enc = Encoder::new(ck.params);
+        let space = ck.params.message_space();
+        let lut = Lut::from_fn(&ck.params, |m| (m * m + 1) % space);
+        for m in 0..space {
+            let ct = enc.encrypt_raw(m, &ck, &mut rng);
+            let got = enc.decrypt_raw(&sk.pbs(&ct, &lut), &ck);
+            assert_eq!(got, (m * m + 1) % space, "square LUT at m={m}");
+        }
+    }
+
+    #[test]
+    fn pbs_resets_noise() {
+        // Chain several PBS; if noise were accumulating the decodes would
+        // eventually fail. 8 sequential identity bootstraps must stay exact.
+        let (ck, sk, mut rng) = setup();
+        let enc = Encoder::new(ck.params);
+        let lut = Lut::from_fn(&ck.params, |m| m);
+        let m = 5u64;
+        let mut ct = enc.encrypt_raw(m, &ck, &mut rng);
+        for step in 0..8 {
+            ct = sk.pbs(&ct, &lut);
+            assert_eq!(enc.decrypt_raw(&ct, &ck), m, "chain step {step}");
+        }
+    }
+
+    #[test]
+    fn pbs_counter_increments() {
+        let (ck, sk, mut rng) = setup();
+        let enc = Encoder::new(ck.params);
+        let lut = Lut::from_fn(&ck.params, |m| m);
+        let before = pbs_count();
+        let ct = enc.encrypt_raw(1, &ck, &mut rng);
+        let _ = sk.pbs(&ct, &lut);
+        let _ = sk.pbs(&ct, &lut);
+        assert_eq!(pbs_count() - before, 2);
+    }
+}

@@ -1,0 +1,141 @@
+//! Integer encoding on the torus (S4): how the quantized model's signed
+//! codes map into the TFHE message space.
+//!
+//! Message layout: 1 padding bit + `p` message bits, slot width
+//! Δ = 2^(63−p). Unsigned messages live in `[0, 2^p)`. Signed values use
+//! the *bias convention*: `v ∈ [−2^(p−1), 2^(p−1))` is carried as
+//! `m = v + 2^(p−1)`. Linear ops then need bias bookkeeping (handled by
+//! `ops::CtInt`), but the padding bit invariant — phase in the first half
+//! of the torus — always holds, which is what makes every PBS LUT fully
+//! programmable.
+
+use super::bootstrap::ClientKey;
+use super::lwe::LweCiphertext;
+use super::params::TfheParams;
+use super::torus::round_to_modulus;
+use crate::util::prng::Xoshiro256;
+
+/// Encoder/decoder for one parameter set.
+#[derive(Clone, Copy, Debug)]
+pub struct Encoder {
+    pub params: TfheParams,
+}
+
+impl Encoder {
+    pub fn new(params: TfheParams) -> Self {
+        Encoder { params }
+    }
+
+    /// Signed range: `[min_signed, max_signed]` inclusive.
+    pub fn min_signed(&self) -> i64 {
+        -(1i64 << (self.params.message_bits - 1))
+    }
+
+    pub fn max_signed(&self) -> i64 {
+        (1i64 << (self.params.message_bits - 1)) - 1
+    }
+
+    /// The bias added to signed values (2^(p−1)).
+    pub fn bias(&self) -> u64 {
+        1u64 << (self.params.message_bits - 1)
+    }
+
+    /// Encode an unsigned message to its torus position.
+    pub fn encode(&self, m: u64) -> u64 {
+        debug_assert!(m < self.params.message_space(), "message {m} out of space");
+        m.wrapping_mul(self.params.delta())
+    }
+
+    /// Decode a noisy torus phase to the nearest message.
+    pub fn decode(&self, phase: u64) -> u64 {
+        round_to_modulus(phase, self.params.message_space() * 2) & (self.params.message_space() - 1)
+    }
+
+    /// Encrypt an unsigned message.
+    pub fn encrypt_raw(&self, m: u64, ck: &ClientKey, rng: &mut Xoshiro256) -> LweCiphertext {
+        LweCiphertext::encrypt(self.encode(m), &ck.lwe_key, self.params.lwe_noise_std, rng)
+    }
+
+    /// Decrypt to an unsigned message.
+    pub fn decrypt_raw(&self, ct: &LweCiphertext, ck: &ClientKey) -> u64 {
+        self.decode(ct.decrypt(&ck.lwe_key))
+    }
+
+    /// Encrypt a signed value with the bias convention.
+    pub fn encrypt_signed(&self, v: i64, ck: &ClientKey, rng: &mut Xoshiro256) -> LweCiphertext {
+        assert!(
+            v >= self.min_signed() && v <= self.max_signed(),
+            "value {v} outside signed range [{}, {}]",
+            self.min_signed(),
+            self.max_signed()
+        );
+        self.encrypt_raw((v + self.bias() as i64) as u64, ck, rng)
+    }
+
+    /// Decrypt a signed value.
+    pub fn decrypt_signed(&self, ct: &LweCiphertext, ck: &ClientKey) -> i64 {
+        self.decrypt_raw(ct, ck) as i64 - self.bias() as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng64;
+
+    #[test]
+    fn encode_decode_roundtrip_all_messages() {
+        let enc = Encoder::new(TfheParams::test_small());
+        for m in 0..enc.params.message_space() {
+            assert_eq!(enc.decode(enc.encode(m)), m);
+        }
+    }
+
+    #[test]
+    fn decode_tolerates_noise_below_half_slot() {
+        let enc = Encoder::new(TfheParams::test_small());
+        let delta = enc.params.delta();
+        for m in 0..enc.params.message_space() {
+            let noisy_up = enc.encode(m).wrapping_add(delta / 2 - 1);
+            let noisy_dn = enc.encode(m).wrapping_sub(delta / 2 - 1);
+            assert_eq!(enc.decode(noisy_up), m, "up m={m}");
+            assert_eq!(enc.decode(noisy_dn), m, "down m={m}");
+        }
+    }
+
+    #[test]
+    fn signed_roundtrip_under_encryption() {
+        let mut rng = Xoshiro256::new(77);
+        let ck = ClientKey::generate(TfheParams::test_small(), &mut rng);
+        let enc = Encoder::new(ck.params);
+        for v in enc.min_signed()..=enc.max_signed() {
+            let ct = enc.encrypt_signed(v, &ck, &mut rng);
+            assert_eq!(enc.decrypt_signed(&ct, &ck), v);
+        }
+    }
+
+    #[test]
+    fn signed_addition_with_bias_correction() {
+        // (a + bias) + (b + bias) − bias = (a+b) + bias.
+        let mut rng = Xoshiro256::new(78);
+        let ck = ClientKey::generate(TfheParams::test_small(), &mut rng);
+        let enc = Encoder::new(ck.params);
+        for _ in 0..20 {
+            let a = rng.next_range_i64(-2, 1);
+            let b = rng.next_range_i64(-2, 1);
+            let ca = enc.encrypt_signed(a, &ck, &mut rng);
+            let cb = enc.encrypt_signed(b, &ck, &mut rng);
+            let sum = ca.add(&cb).sub_plain(enc.encode(enc.bias()));
+            assert_eq!(enc.decrypt_signed(&sum, &ck), a + b, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside signed range")]
+    fn rejects_out_of_range_signed() {
+        let mut rng = Xoshiro256::new(79);
+        let ck = ClientKey::generate(TfheParams::test_small(), &mut rng);
+        let enc = Encoder::new(ck.params);
+        let _ = enc.encrypt_signed(100, &ck, &mut rng);
+    }
+}

@@ -1,0 +1,324 @@
+//! GGSW ciphertexts, gadget decomposition, external product and CMux (S4).
+//!
+//! GGSW(m) (m a small integer, here a secret key bit) is the matrix of
+//! (k+1)·ℓ GLWE ciphertexts `Enc(0) + m·(q/B^l)·e_i` — the gadget rows.
+//! The external product `GLWE ⊠ GGSW(m)` decomposes the GLWE into signed
+//! base-B digits and recombines against the rows, yielding an encryption
+//! of `m · msg` with additive noise. CMux(GGSW(b), c0, c1) = c0 + (c1−c0)
+//! ⊠ GGSW(b) selects between two ciphertexts under encryption — the
+//! building block of the blind rotation.
+
+use super::fft::{C64, NegacyclicFft};
+use super::glwe::{GlweCiphertext, GlweSecretKey};
+use super::params::DecompParams;
+use super::torus::Torus;
+use crate::util::prng::Xoshiro256;
+
+/// Signed (balanced) base-2^base_log decomposition of a torus polynomial:
+/// returns `level` digit polynomials, most-significant first, with digits
+/// in `[−B/2, B/2)`, such that `Σ_l digits[l]·q/B^(l+1) ≈ poly` (error
+/// ≤ q/(2B^level)).
+pub fn decompose_poly(poly: &[Torus], d: DecompParams) -> Vec<Vec<i64>> {
+    let mut digits = vec![vec![0i64; poly.len()]; d.level];
+    decompose_poly_into(poly, d, &mut digits);
+    digits
+}
+
+/// Allocation-free decomposition into caller-provided digit buffers.
+pub fn decompose_poly_into(poly: &[Torus], d: DecompParams, digits: &mut [Vec<i64>]) {
+    let b_log = d.base_log as u32;
+    let half_b = 1i64 << (b_log - 1);
+    let total = (d.level as u32) * b_log;
+    debug_assert_eq!(digits.len(), d.level);
+    for (j, &t) in poly.iter().enumerate() {
+        // Round to the closest multiple of q/B^level (keep top `total` bits).
+        let rounding = 1u64 << (64 - total - 1);
+        let mut v = t.wrapping_add(rounding) >> (64 - total);
+        // Balanced digit extraction, least-significant first.
+        let mut carry = 0i64;
+        for l in (0..d.level).rev() {
+            let mut digit = ((v & ((1u64 << b_log) - 1)) as i64) + carry;
+            v >>= b_log;
+            carry = 0;
+            if digit >= half_b {
+                digit -= 1i64 << b_log;
+                carry = 1;
+            }
+            digits[l][j] = digit;
+        }
+        // Any final carry wraps modulo the torus — dropped by design.
+    }
+}
+
+/// GGSW ciphertext in the standard (coefficient) domain.
+#[derive(Clone, Debug)]
+pub struct GgswCiphertext {
+    /// (k+1)·level rows; row (i, l) at index `i*level + l`.
+    pub rows: Vec<GlweCiphertext>,
+    pub decomp: DecompParams,
+    pub glwe_dim: usize,
+}
+
+impl GgswCiphertext {
+    /// Encrypt a small integer (typically a key bit 0/1).
+    pub fn encrypt(
+        m: u64,
+        key: &GlweSecretKey,
+        decomp: DecompParams,
+        noise_std: f64,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        let n = key.poly_size;
+        let k = key.dim();
+        let mut rows = Vec::with_capacity((k + 1) * decomp.level);
+        for i in 0..=k {
+            for l in 1..=decomp.level {
+                let zero = vec![0u64; n];
+                let mut ct = GlweCiphertext::encrypt(&zero, key, noise_std, rng);
+                // Add m·q/B^l to component i (mask polys 0..k−1, body = k).
+                let shift = 64 - (decomp.base_log * l) as u32;
+                let g = m.wrapping_shl(shift);
+                if i < k {
+                    ct.mask[i][0] = ct.mask[i][0].wrapping_add(g);
+                } else {
+                    ct.body[0] = ct.body[0].wrapping_add(g);
+                }
+                rows.push(ct);
+            }
+        }
+        GgswCiphertext { rows, decomp, glwe_dim: k }
+    }
+
+    /// Move to the spectral (Fourier) domain for fast external products.
+    pub fn to_fourier(&self, fft: &NegacyclicFft) -> GgswFourier {
+        let rows = self
+            .rows
+            .iter()
+            .map(|row| {
+                let mut comps: Vec<Vec<C64>> =
+                    row.mask.iter().map(|p| fft.forward_torus(p)).collect();
+                comps.push(fft.forward_torus(&row.body));
+                comps
+            })
+            .collect();
+        GgswFourier {
+            rows,
+            decomp: self.decomp,
+            glwe_dim: self.glwe_dim,
+            poly_size: self.rows[0].poly_size,
+        }
+    }
+}
+
+/// GGSW in the spectral domain: per row, k+1 component spectra.
+#[derive(Clone, Debug)]
+pub struct GgswFourier {
+    pub rows: Vec<Vec<Vec<C64>>>,
+    pub decomp: DecompParams,
+    pub glwe_dim: usize,
+    pub poly_size: usize,
+}
+
+/// Reusable scratch buffers for external products / CMux chains (one per
+/// PBS call; shared across all `n` CMux of a blind rotation). Eliminates
+/// every per-CMux heap allocation on the hot path — see EXPERIMENTS.md
+/// §Perf.
+pub struct ExtScratch {
+    /// Spectrum of one decomposed digit polynomial.
+    spec: Vec<C64>,
+    /// k+1 spectral accumulators.
+    acc: Vec<Vec<C64>>,
+    /// `level` digit polynomials.
+    digits: Vec<Vec<i64>>,
+    /// CMux difference ciphertext.
+    pub diff: GlweCiphertext,
+    /// Blind-rotation rotated accumulator.
+    pub rotated: GlweCiphertext,
+}
+
+impl ExtScratch {
+    pub fn new(poly_size: usize, glwe_dim: usize, decomp: DecompParams) -> Self {
+        let half = poly_size / 2;
+        ExtScratch {
+            spec: vec![C64::default(); half],
+            acc: vec![vec![C64::default(); half]; glwe_dim + 1],
+            digits: vec![vec![0i64; poly_size]; decomp.level],
+            diff: GlweCiphertext::zero(poly_size, glwe_dim),
+            rotated: GlweCiphertext::zero(poly_size, glwe_dim),
+        }
+    }
+}
+
+impl GgswFourier {
+    /// External product `glwe ⊠ self` → GLWE of `m · msg(glwe)`.
+    pub fn external_product(&self, fft: &NegacyclicFft, glwe: &GlweCiphertext) -> GlweCiphertext {
+        let mut out = GlweCiphertext::zero(self.poly_size, self.glwe_dim);
+        let mut scratch = ExtScratch::new(self.poly_size, self.glwe_dim, self.decomp);
+        self.external_product_into(fft, glwe, &mut out, &mut scratch);
+        out
+    }
+
+    /// Allocation-free external product into `out` (hot path).
+    pub fn external_product_into(
+        &self,
+        fft: &NegacyclicFft,
+        glwe: &GlweCiphertext,
+        out: &mut GlweCiphertext,
+        s: &mut ExtScratch,
+    ) {
+        let k = self.glwe_dim;
+        for a in s.acc.iter_mut() {
+            a.fill(C64::default());
+        }
+        // Decompose all k+1 components of the input GLWE and accumulate
+        // spectral products against the GGSW rows.
+        let mut row_idx = 0;
+        for i in 0..=k {
+            let comp: &[Torus] = if i < k { &glwe.mask[i] } else { &glwe.body };
+            decompose_poly_into(comp, self.decomp, &mut s.digits);
+            for digit_poly in s.digits.iter() {
+                fft.forward_signed_into(digit_poly, &mut s.spec);
+                let row = &self.rows[row_idx];
+                for (c, rc) in s.acc.iter_mut().zip(row.iter()) {
+                    NegacyclicFft::mul_acc(c, &s.spec, rc);
+                }
+                row_idx += 1;
+            }
+        }
+        for (i, spec) in s.acc.iter_mut().enumerate() {
+            let poly = if i < k { &mut out.mask[i] } else { &mut out.body };
+            fft.backward_torus_into(spec, poly);
+        }
+    }
+
+    /// CMux: homomorphic select, `b=0 → c0`, `b=1 → c1`.
+    pub fn cmux(
+        &self,
+        fft: &NegacyclicFft,
+        c0: &GlweCiphertext,
+        c1: &GlweCiphertext,
+    ) -> GlweCiphertext {
+        let diff = c1.sub(c0);
+        let mut sel = self.external_product(fft, &diff);
+        sel.add_assign(c0);
+        sel
+    }
+
+    /// Blind-rotation step, allocation-free:
+    /// `acc ← CMux(self, acc, acc·X^rot)` using the scratch buffers.
+    pub fn cmux_rotate_assign(
+        &self,
+        fft: &NegacyclicFft,
+        acc: &mut GlweCiphertext,
+        rot: u64,
+        s: &mut ExtScratch,
+    ) {
+        // rotated = acc · X^rot  (written into scratch)
+        let mut rotated = std::mem::replace(
+            &mut s.rotated,
+            GlweCiphertext::zero(0, 0), // placeholder, swapped back below
+        );
+        acc.rotate_monomial_into(rot, &mut rotated);
+        // diff = rotated − acc
+        let mut diff = std::mem::replace(&mut s.diff, GlweCiphertext::zero(0, 0));
+        rotated.sub_into(acc, &mut diff);
+        // prod = diff ⊠ self  (reuse `rotated` as the output buffer)
+        self.external_product_into(fft, &diff, &mut rotated, s);
+        // acc += prod
+        acc.add_assign(&rotated);
+        s.rotated = rotated;
+        s.diff = diff;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::torus::{torus_distance, torus_from_f64};
+    use crate::util::prng::Rng64;
+
+    const STD: f64 = 1.0 / (1u64 << 45) as f64;
+
+    fn recompose(digits: &[Vec<i64>], d: DecompParams, j: usize) -> u64 {
+        let mut acc = 0u64;
+        for (l, dp) in digits.iter().enumerate() {
+            let shift = 64 - (d.base_log * (l + 1)) as u32;
+            acc = acc.wrapping_add((dp[j] as u64).wrapping_shl(shift));
+        }
+        acc
+    }
+
+    #[test]
+    fn decomposition_recomposes_within_bound() {
+        let mut rng = Xoshiro256::new(3);
+        let d = DecompParams::new(8, 3);
+        let poly: Vec<u64> = (0..64).map(|_| rng.next_u64()).collect();
+        let digits = decompose_poly(&poly, d);
+        let err_bound = 1u64 << (64 - 24 - 1); // q / (2·B^level)
+        for j in 0..64 {
+            let rec = recompose(&digits, d, j);
+            let err = (rec.wrapping_sub(poly[j])) as i64;
+            assert!(
+                (err.unsigned_abs()) <= err_bound,
+                "j={j}: err {err} bound {err_bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn decomposition_digits_are_balanced() {
+        let mut rng = Xoshiro256::new(13);
+        let d = DecompParams::new(6, 4);
+        let poly: Vec<u64> = (0..128).map(|_| rng.next_u64()).collect();
+        for dp in decompose_poly(&poly, d) {
+            for &v in &dp {
+                assert!(v >= -32 && v < 32, "digit {v} out of balanced range");
+            }
+        }
+    }
+
+    #[test]
+    fn external_product_by_bit() {
+        let mut rng = Xoshiro256::new(7);
+        let n = 256;
+        let key = GlweSecretKey::generate(n, 1, &mut rng);
+        let fft = NegacyclicFft::new(n);
+        let d = DecompParams::new(10, 3);
+        let mut msg = vec![0u64; n];
+        msg[0] = torus_from_f64(0.25);
+        msg[3] = torus_from_f64(-0.125);
+        let glwe = GlweCiphertext::encrypt(&msg, &key, STD, &mut rng);
+        for bit in [0u64, 1] {
+            let ggsw = GgswCiphertext::encrypt(bit, &key, d, STD, &mut rng).to_fourier(&fft);
+            let out = ggsw.external_product(&fft, &glwe);
+            let dec = out.decrypt(&key);
+            for j in 0..n {
+                let want = if bit == 1 { msg[j] } else { 0 };
+                assert!(
+                    torus_distance(dec[j], want) < 1e-4,
+                    "bit={bit} j={j}: {} vs {want}",
+                    dec[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cmux_selects() {
+        let mut rng = Xoshiro256::new(11);
+        let n = 256;
+        let key = GlweSecretKey::generate(n, 1, &mut rng);
+        let fft = NegacyclicFft::new(n);
+        let d = DecompParams::new(10, 3);
+        let m0 = torus_from_f64(0.1);
+        let m1 = torus_from_f64(-0.2);
+        let c0 = GlweCiphertext::encrypt(&vec![m0; n], &key, STD, &mut rng);
+        let c1 = GlweCiphertext::encrypt(&vec![m1; n], &key, STD, &mut rng);
+        for (bit, want) in [(0u64, m0), (1, m1)] {
+            let ggsw = GgswCiphertext::encrypt(bit, &key, d, STD, &mut rng).to_fourier(&fft);
+            let sel = ggsw.cmux(&fft, &c0, &c1);
+            let dec = sel.decrypt(&key);
+            assert!(torus_distance(dec[0], want) < 1e-4, "bit={bit}");
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! GLWE ciphertexts over Z_q[X]/(X^N+1) (S4).
+//!
+//! A GLWE ciphertext is `(A_1..A_k, B)` with `B = Σ A_i·S_i + M + E`,
+//! polynomials of size N. GLWE is the accumulator type of the blind
+//! rotation; `sample_extract` pulls one coefficient out as an LWE
+//! ciphertext under the "extracted" key (the GLWE key read as k·N LWE
+//! bits).
+
+use super::lwe::{LweCiphertext, LweSecretKey};
+use super::torus::{gaussian_torus, Torus};
+use crate::util::prng::{Rng64, Xoshiro256};
+
+/// GLWE secret key: k polynomials with binary coefficients.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GlweSecretKey {
+    pub poly_size: usize,
+    /// k polynomials, each `poly_size` bits (0/1 as u64).
+    pub polys: Vec<Vec<u64>>,
+}
+
+impl GlweSecretKey {
+    pub fn generate(poly_size: usize, glwe_dim: usize, rng: &mut Xoshiro256) -> Self {
+        let polys = (0..glwe_dim)
+            .map(|_| (0..poly_size).map(|_| rng.next_u64() & 1).collect())
+            .collect();
+        GlweSecretKey { poly_size, polys }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.polys.len()
+    }
+
+    /// Reinterpret as an LWE key of dimension k·N (sample-extract key).
+    /// Coefficient order matches `sample_extract` below.
+    pub fn to_extracted_lwe(&self) -> LweSecretKey {
+        let mut bits = Vec::with_capacity(self.dim() * self.poly_size);
+        for p in &self.polys {
+            bits.extend_from_slice(p);
+        }
+        LweSecretKey { bits }
+    }
+}
+
+/// GLWE ciphertext: k mask polynomials + body polynomial.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GlweCiphertext {
+    pub poly_size: usize,
+    pub mask: Vec<Vec<Torus>>,
+    pub body: Vec<Torus>,
+}
+
+/// Negacyclic product of a torus polynomial by a *binary* polynomial
+/// (secret key), exact u64 arithmetic (no FFT needed: digits are 0/1 and
+/// this path only runs at encrypt/decrypt time, not in circuits).
+fn negacyclic_mul_binary(t: &[Torus], bits: &[u64]) -> Vec<Torus> {
+    let n = t.len();
+    let mut out = vec![0u64; n];
+    for (i, &b) in bits.iter().enumerate() {
+        if b == 0 {
+            continue;
+        }
+        for (j, &v) in t.iter().enumerate() {
+            let idx = i + j;
+            if idx < n {
+                out[idx] = out[idx].wrapping_add(v);
+            } else {
+                out[idx - n] = out[idx - n].wrapping_sub(v);
+            }
+        }
+    }
+    out
+}
+
+impl GlweCiphertext {
+    pub fn zero(poly_size: usize, glwe_dim: usize) -> Self {
+        GlweCiphertext {
+            poly_size,
+            mask: vec![vec![0; poly_size]; glwe_dim],
+            body: vec![0; poly_size],
+        }
+    }
+
+    /// Trivial (noiseless, maskless) encryption of a message polynomial.
+    pub fn trivial(msg: Vec<Torus>, glwe_dim: usize) -> Self {
+        let poly_size = msg.len();
+        GlweCiphertext { poly_size, mask: vec![vec![0; poly_size]; glwe_dim], body: msg }
+    }
+
+    /// Encrypt a torus message polynomial.
+    pub fn encrypt(
+        msg: &[Torus],
+        key: &GlweSecretKey,
+        noise_std: f64,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        let n = key.poly_size;
+        assert_eq!(msg.len(), n);
+        let mask: Vec<Vec<Torus>> =
+            (0..key.dim()).map(|_| (0..n).map(|_| rng.next_u64()).collect()).collect();
+        let mut body: Vec<Torus> =
+            msg.iter().map(|&m| m.wrapping_add(gaussian_torus(noise_std, rng))).collect();
+        for (a, s) in mask.iter().zip(key.polys.iter()) {
+            let prod = negacyclic_mul_binary(a, s);
+            for (b, p) in body.iter_mut().zip(prod.iter()) {
+                *b = b.wrapping_add(*p);
+            }
+        }
+        GlweCiphertext { poly_size: n, mask, body }
+    }
+
+    /// Decrypt to the noisy phase polynomial.
+    pub fn decrypt(&self, key: &GlweSecretKey) -> Vec<Torus> {
+        let mut phase = self.body.clone();
+        for (a, s) in self.mask.iter().zip(key.polys.iter()) {
+            let prod = negacyclic_mul_binary(a, s);
+            for (p, q) in phase.iter_mut().zip(prod.iter()) {
+                *p = p.wrapping_sub(*q);
+            }
+        }
+        phase
+    }
+
+    pub fn add_assign(&mut self, o: &Self) {
+        for (a, b) in self.mask.iter_mut().zip(o.mask.iter()) {
+            for (x, y) in a.iter_mut().zip(b.iter()) {
+                *x = x.wrapping_add(*y);
+            }
+        }
+        for (x, y) in self.body.iter_mut().zip(o.body.iter()) {
+            *x = x.wrapping_add(*y);
+        }
+    }
+
+    pub fn sub(&self, o: &Self) -> Self {
+        let mask = self
+            .mask
+            .iter()
+            .zip(o.mask.iter())
+            .map(|(a, b)| a.iter().zip(b.iter()).map(|(x, y)| x.wrapping_sub(*y)).collect())
+            .collect();
+        let body =
+            self.body.iter().zip(o.body.iter()).map(|(x, y)| x.wrapping_sub(*y)).collect();
+        GlweCiphertext { poly_size: self.poly_size, mask, body }
+    }
+
+    /// Multiply every polynomial by the monomial X^e (e may exceed N;
+    /// negacyclic wrap flips signs). This is the rotation primitive of the
+    /// blind rotation; exponent arithmetic is mod 2N.
+    pub fn rotate_monomial(&self, e: u64) -> Self {
+        let rotate = |p: &[Torus]| rotate_poly_monomial(p, e);
+        GlweCiphertext {
+            poly_size: self.poly_size,
+            mask: self.mask.iter().map(|m| rotate(m)).collect(),
+            body: rotate(&self.body),
+        }
+    }
+
+    /// Allocation-free monomial rotation into `out` (hot path).
+    pub fn rotate_monomial_into(&self, e: u64, out: &mut GlweCiphertext) {
+        out.poly_size = self.poly_size;
+        out.mask.resize(self.mask.len(), Vec::new());
+        for (src, dst) in self.mask.iter().zip(out.mask.iter_mut()) {
+            dst.resize(self.poly_size, 0);
+            rotate_poly_monomial_into(src, e, dst);
+        }
+        out.body.resize(self.poly_size, 0);
+        rotate_poly_monomial_into(&self.body, e, &mut out.body);
+    }
+
+    /// Allocation-free subtraction `out = self − o` (hot path).
+    pub fn sub_into(&self, o: &Self, out: &mut GlweCiphertext) {
+        out.poly_size = self.poly_size;
+        out.mask.resize(self.mask.len(), Vec::new());
+        for ((a, b), dst) in self.mask.iter().zip(o.mask.iter()).zip(out.mask.iter_mut()) {
+            dst.resize(self.poly_size, 0);
+            for ((x, y), d) in a.iter().zip(b.iter()).zip(dst.iter_mut()) {
+                *d = x.wrapping_sub(*y);
+            }
+        }
+        out.body.resize(self.poly_size, 0);
+        for ((x, y), d) in self.body.iter().zip(o.body.iter()).zip(out.body.iter_mut()) {
+            *d = x.wrapping_sub(*y);
+        }
+    }
+
+    /// Extract coefficient `idx` of the message as an LWE ciphertext under
+    /// `key.to_extracted_lwe()`.
+    pub fn sample_extract(&self, idx: usize) -> LweCiphertext {
+        let n = self.poly_size;
+        assert!(idx < n);
+        let k = self.mask.len();
+        let mut mask = Vec::with_capacity(k * n);
+        for a in &self.mask {
+            // LWE mask entry for key bit s_i[j] is the coefficient of the
+            // product contributing to msg coeff idx: a[idx−j] for j ≤ idx,
+            // −a[N+idx−j] for j > idx.
+            for j in 0..n {
+                if j <= idx {
+                    mask.push(a[idx - j]);
+                } else {
+                    mask.push(a[n + idx - j].wrapping_neg());
+                }
+            }
+        }
+        LweCiphertext { mask, body: self.body[idx] }
+    }
+}
+
+/// Rotate a polynomial by the monomial X^e (exponent mod 2N, negacyclic).
+pub fn rotate_poly_monomial(p: &[Torus], e: u64) -> Vec<Torus> {
+    let mut out = vec![0u64; p.len()];
+    rotate_poly_monomial_into(p, e, &mut out);
+    out
+}
+
+/// Allocation-free monomial rotation. Branchless per-segment copies:
+/// exponent e ∈ [0, 2N) splits the output into at most two contiguous
+/// runs with fixed sign each.
+pub fn rotate_poly_monomial_into(p: &[Torus], e: u64, out: &mut [Torus]) {
+    let n = p.len();
+    let mut e = (e % (2 * n as u64)) as usize;
+    // X^(N+r) = −X^r: reduce to r < N with a sign flip.
+    let mut negate = false;
+    if e >= n {
+        e -= n;
+        negate = true;
+    }
+    // out[j+e] = p[j] for j < n−e  (sign s), out[j+e−n] = −p[j] otherwise.
+    let split = n - e;
+    if negate {
+        for j in 0..split {
+            out[j + e] = p[j].wrapping_neg();
+        }
+        for j in split..n {
+            out[j + e - n] = p[j];
+        }
+    } else {
+        out[e..n].copy_from_slice(&p[..split]);
+        for j in split..n {
+            out[j + e - n] = p[j].wrapping_neg();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::torus::{torus_distance, torus_from_f64};
+
+    const STD: f64 = 1.0 / (1u64 << 40) as f64;
+
+    #[test]
+    fn encrypt_decrypt_polynomial() {
+        let mut rng = Xoshiro256::new(2);
+        let key = GlweSecretKey::generate(256, 2, &mut rng);
+        let msg: Vec<Torus> =
+            (0..256).map(|i| torus_from_f64((i as f64 / 256.0 - 0.5) * 0.5)).collect();
+        let ct = GlweCiphertext::encrypt(&msg, &key, STD, &mut rng);
+        let dec = ct.decrypt(&key);
+        for (d, m) in dec.iter().zip(msg.iter()) {
+            assert!(torus_distance(*d, *m) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn monomial_rotation_wraps_negacyclically() {
+        let n = 8;
+        let mut p = vec![0u64; n];
+        p[0] = 100;
+        // X^0 · X^(n) = X^n = −1.
+        let r = rotate_poly_monomial(&p, n as u64);
+        assert_eq!(r[0], 100u64.wrapping_neg());
+        // Rotation by 2N is identity.
+        let r2 = rotate_poly_monomial(&p, 2 * n as u64);
+        assert_eq!(r2, p);
+        // Rotation by 3 moves coeff 0 to 3.
+        let r3 = rotate_poly_monomial(&p, 3);
+        assert_eq!(r3[3], 100);
+    }
+
+    #[test]
+    fn rotation_commutes_with_decryption() {
+        let mut rng = Xoshiro256::new(4);
+        let key = GlweSecretKey::generate(128, 1, &mut rng);
+        let mut msg = vec![0u64; 128];
+        msg[5] = torus_from_f64(0.25);
+        let ct = GlweCiphertext::encrypt(&msg, &key, STD, &mut rng);
+        let rot = ct.rotate_monomial(200); // 5+200 = 205 = 128+77 → −coeff at 77
+        let dec = rot.decrypt(&key);
+        let want = torus_from_f64(0.25).wrapping_neg();
+        assert!(torus_distance(dec[77], want) < 1e-8);
+    }
+
+    #[test]
+    fn sample_extract_matches_coefficient() {
+        let mut rng = Xoshiro256::new(6);
+        let key = GlweSecretKey::generate(64, 2, &mut rng);
+        let lwe_key = key.to_extracted_lwe();
+        let msg: Vec<Torus> = (0..64)
+            .map(|i| torus_from_f64(((i * 7 % 64) as f64 / 64.0 - 0.5) * 0.4))
+            .collect();
+        let ct = GlweCiphertext::encrypt(&msg, &key, STD, &mut rng);
+        for idx in [0usize, 1, 17, 63] {
+            let lwe = ct.sample_extract(idx);
+            assert_eq!(lwe.dim(), 128);
+            let dec = lwe.decrypt(&lwe_key);
+            assert!(
+                torus_distance(dec, msg[idx]) < 1e-8,
+                "idx {idx}: {} vs {}",
+                dec,
+                msg[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn trivial_glwe_decrypts_exactly() {
+        let mut rng = Xoshiro256::new(8);
+        let key = GlweSecretKey::generate(32, 1, &mut rng);
+        let msg: Vec<Torus> = (0..32).map(|i| (i as u64) << 58).collect();
+        let ct = GlweCiphertext::trivial(msg.clone(), 1);
+        assert_eq!(ct.decrypt(&key), msg);
+    }
+}

@@ -1,0 +1,129 @@
+//! LWE key switching (S4): move a ciphertext from the sample-extracted
+//! key (dimension k·N) back to the small LWE key (dimension n) so the
+//! output of a PBS is again a "normal" ciphertext.
+
+use super::lwe::{LweCiphertext, LweSecretKey};
+use super::params::DecompParams;
+use super::torus::Torus;
+use crate::util::prng::Xoshiro256;
+
+/// Signed decomposition of a single torus scalar (most-significant first).
+pub fn decompose_scalar(t: Torus, d: DecompParams) -> Vec<i64> {
+    let b_log = d.base_log as u32;
+    let half_b = 1i64 << (b_log - 1);
+    let total = (d.level as u32) * b_log;
+    let rounding = 1u64 << (64 - total - 1);
+    let mut v = t.wrapping_add(rounding) >> (64 - total);
+    let mut digits = vec![0i64; d.level];
+    let mut carry = 0i64;
+    for l in (0..d.level).rev() {
+        let mut digit = ((v & ((1u64 << b_log) - 1)) as i64) + carry;
+        v >>= b_log;
+        carry = 0;
+        if digit >= half_b {
+            digit -= 1i64 << b_log;
+            carry = 1;
+        }
+        digits[l] = digit;
+    }
+    digits
+}
+
+/// Key-switching key from `from_key` (dim N_in) to `to_key` (dim n_out).
+pub struct KeySwitchKey {
+    /// `ksk[j][l]` encrypts `s_in[j] · q / B^(l+1)` under `to_key`.
+    rows: Vec<Vec<LweCiphertext>>,
+    pub decomp: DecompParams,
+    pub out_dim: usize,
+}
+
+impl KeySwitchKey {
+    pub fn generate(
+        from_key: &LweSecretKey,
+        to_key: &LweSecretKey,
+        decomp: DecompParams,
+        noise_std: f64,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        let rows = from_key
+            .bits
+            .iter()
+            .map(|&s| {
+                (1..=decomp.level)
+                    .map(|l| {
+                        let shift = 64 - (decomp.base_log * l) as u32;
+                        let msg = s.wrapping_shl(shift);
+                        LweCiphertext::encrypt(msg, to_key, noise_std, rng)
+                    })
+                    .collect()
+            })
+            .collect();
+        KeySwitchKey { rows, decomp, out_dim: to_key.dim() }
+    }
+
+    /// Switch `ct` (under `from_key`) to the target key:
+    /// `out = (0, b) − Σ_j Σ_l digit_{j,l} · KSK[j][l]`.
+    pub fn keyswitch(&self, ct: &LweCiphertext) -> LweCiphertext {
+        assert_eq!(ct.dim(), self.rows.len(), "ciphertext dim does not match KSK input dim");
+        let mut out = LweCiphertext::trivial(ct.body, self.out_dim);
+        for (j, &a) in ct.mask.iter().enumerate() {
+            let digits = decompose_scalar(a, self.decomp);
+            for (l, &dig) in digits.iter().enumerate() {
+                if dig == 0 {
+                    continue;
+                }
+                let row = &self.rows[j][l];
+                let du = dig as u64;
+                for (o, r) in out.mask.iter_mut().zip(row.mask.iter()) {
+                    *o = o.wrapping_sub(r.wrapping_mul(du));
+                }
+                out.body = out.body.wrapping_sub(row.body.wrapping_mul(du));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::torus::{torus_distance, torus_from_f64};
+
+    #[test]
+    fn scalar_decomposition_recomposes() {
+        let d = DecompParams::new(4, 5);
+        for t in [0u64, 1 << 60, u64::MAX, 0x123456789ABCDEF0] {
+            let digits = decompose_scalar(t, d);
+            let mut rec = 0u64;
+            for (l, &dig) in digits.iter().enumerate() {
+                let shift = 64 - (d.base_log * (l + 1)) as u32;
+                rec = rec.wrapping_add((dig as u64).wrapping_shl(shift));
+            }
+            let err = (rec.wrapping_sub(t)) as i64;
+            let bound = 1i64 << (64 - 20 - 1);
+            assert!(err.abs() <= bound, "t={t:#x} err={err}");
+        }
+    }
+
+    #[test]
+    fn keyswitch_preserves_message() {
+        let mut rng = Xoshiro256::new(44);
+        let big = LweSecretKey::generate(1024, &mut rng);
+        let small = LweSecretKey::generate(400, &mut rng);
+        let ksk = KeySwitchKey::generate(
+            &big,
+            &small,
+            DecompParams::new(4, 5),
+            1.0 / (1u64 << 30) as f64,
+            &mut rng,
+        );
+        for frac in [0.25, -0.125, 0.4] {
+            let m = torus_from_f64(frac);
+            let ct = LweCiphertext::encrypt(m, &big, 1.0 / (1u64 << 35) as f64, &mut rng);
+            let switched = ksk.keyswitch(&ct);
+            assert_eq!(switched.dim(), 400);
+            let dec = switched.decrypt(&small);
+            assert!(torus_distance(dec, m) < 1e-3, "frac={frac}: {}", torus_distance(dec, m));
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! LWE ciphertexts and secret keys (S4).
+//!
+//! `LweCiphertext = (a_1..a_n, b)` with `b = Σ a_i·s_i + m + e` over the
+//! discretized torus. Homomorphic: addition, subtraction, multiplication
+//! by plaintext literals ("constant-to-variable" in the paper's terms),
+//! and plaintext offset addition. Variable×variable multiplication does
+//! NOT exist at this layer — that is the paper's entire point; it must be
+//! built from two PBS (see `ops::ct_mul`).
+
+use super::torus::{gaussian_torus, Torus};
+use crate::util::prng::{Rng64, Xoshiro256};
+
+/// Binary LWE secret key.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LweSecretKey {
+    /// Bits stored as 0/1 u64 for branch-free dot products.
+    pub bits: Vec<u64>,
+}
+
+impl LweSecretKey {
+    pub fn generate(dim: usize, rng: &mut Xoshiro256) -> Self {
+        LweSecretKey { bits: (0..dim).map(|_| rng.next_u64() & 1).collect() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.bits.len()
+    }
+}
+
+/// An LWE ciphertext: mask + body.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LweCiphertext {
+    pub mask: Vec<Torus>,
+    pub body: Torus,
+}
+
+impl LweCiphertext {
+    pub fn dim(&self) -> usize {
+        self.mask.len()
+    }
+
+    /// Encrypt a torus message under `key` with fresh noise `noise_std`.
+    pub fn encrypt(msg: Torus, key: &LweSecretKey, noise_std: f64, rng: &mut Xoshiro256) -> Self {
+        let mask: Vec<Torus> = (0..key.dim()).map(|_| rng.next_u64()).collect();
+        let mut body = msg.wrapping_add(gaussian_torus(noise_std, rng));
+        for (a, s) in mask.iter().zip(key.bits.iter()) {
+            body = body.wrapping_add(a.wrapping_mul(*s));
+        }
+        LweCiphertext { mask, body }
+    }
+
+    /// Noiseless "trivial" encryption (known-plaintext constant): mask 0.
+    /// Decryptable under any key; used for circuit constants.
+    pub fn trivial(msg: Torus, dim: usize) -> Self {
+        LweCiphertext { mask: vec![0; dim], body: msg }
+    }
+
+    /// Decrypt to the noisy torus phase (caller rounds/decodes).
+    pub fn decrypt(&self, key: &LweSecretKey) -> Torus {
+        assert_eq!(self.dim(), key.dim(), "ciphertext/key dimension mismatch");
+        let mut phase = self.body;
+        for (a, s) in self.mask.iter().zip(key.bits.iter()) {
+            phase = phase.wrapping_sub(a.wrapping_mul(*s));
+        }
+        phase
+    }
+
+    /// Homomorphic addition.
+    pub fn add(&self, o: &Self) -> Self {
+        assert_eq!(self.dim(), o.dim());
+        LweCiphertext {
+            mask: self.mask.iter().zip(o.mask.iter()).map(|(a, b)| a.wrapping_add(*b)).collect(),
+            body: self.body.wrapping_add(o.body),
+        }
+    }
+
+    /// Homomorphic subtraction.
+    pub fn sub(&self, o: &Self) -> Self {
+        assert_eq!(self.dim(), o.dim());
+        LweCiphertext {
+            mask: self.mask.iter().zip(o.mask.iter()).map(|(a, b)| a.wrapping_sub(*b)).collect(),
+            body: self.body.wrapping_sub(o.body),
+        }
+    }
+
+    /// In-place addition (hot path: avoids reallocating the mask).
+    pub fn add_assign(&mut self, o: &Self) {
+        assert_eq!(self.dim(), o.dim());
+        for (a, b) in self.mask.iter_mut().zip(o.mask.iter()) {
+            *a = a.wrapping_add(*b);
+        }
+        self.body = self.body.wrapping_add(o.body);
+    }
+
+    pub fn neg(&self) -> Self {
+        LweCiphertext {
+            mask: self.mask.iter().map(|a| a.wrapping_neg()).collect(),
+            body: self.body.wrapping_neg(),
+        }
+    }
+
+    /// Multiply by a signed plaintext literal (noise grows by |c|).
+    pub fn scalar_mul(&self, c: i64) -> Self {
+        let cu = c as u64;
+        LweCiphertext {
+            mask: self.mask.iter().map(|a| a.wrapping_mul(cu)).collect(),
+            body: self.body.wrapping_mul(cu),
+        }
+    }
+
+    /// Add a plaintext torus offset (no noise growth).
+    pub fn add_plain(&self, m: Torus) -> Self {
+        LweCiphertext { mask: self.mask.clone(), body: self.body.wrapping_add(m) }
+    }
+
+    pub fn sub_plain(&self, m: Torus) -> Self {
+        self.add_plain(m.wrapping_neg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::torus::{torus_distance, torus_from_f64};
+    use crate::util::prop::{prop_assert, prop_check};
+
+    const STD: f64 = 1.0 / (1u64 << 30) as f64;
+
+    #[test]
+    fn encrypt_decrypt_close() {
+        let mut rng = Xoshiro256::new(1);
+        let key = LweSecretKey::generate(500, &mut rng);
+        for frac in [0.0, 0.125, -0.25, 0.4999] {
+            let m = torus_from_f64(frac);
+            let ct = LweCiphertext::encrypt(m, &key, STD, &mut rng);
+            let dec = ct.decrypt(&key);
+            assert!(torus_distance(dec, m) < 1e-6, "{frac}");
+        }
+    }
+
+    #[test]
+    fn homomorphic_linear_ops() {
+        prop_check("LWE linear homomorphism", 24, |rng| {
+            let key = LweSecretKey::generate(400, rng);
+            let m1 = torus_from_f64(rng.next_f64() * 0.2 - 0.1);
+            let m2 = torus_from_f64(rng.next_f64() * 0.2 - 0.1);
+            let c = rng.next_range_i64(-4, 4);
+            let ct1 = LweCiphertext::encrypt(m1, &key, STD, rng);
+            let ct2 = LweCiphertext::encrypt(m2, &key, STD, rng);
+            let got_add = ct1.add(&ct2).decrypt(&key);
+            let got_sub = ct1.sub(&ct2).decrypt(&key);
+            let got_mul = ct1.scalar_mul(c).decrypt(&key);
+            prop_assert(
+                torus_distance(got_add, m1.wrapping_add(m2)) < 1e-6,
+                "addition phase drifted",
+            )?;
+            prop_assert(
+                torus_distance(got_sub, m1.wrapping_sub(m2)) < 1e-6,
+                "subtraction phase drifted",
+            )?;
+            prop_assert(
+                torus_distance(got_mul, m1.wrapping_mul(c as u64)) < 1e-5,
+                "scalar mul phase drifted",
+            )
+        });
+    }
+
+    #[test]
+    fn trivial_decrypts_under_any_key() {
+        let mut rng = Xoshiro256::new(5);
+        let k1 = LweSecretKey::generate(300, &mut rng);
+        let k2 = LweSecretKey::generate(300, &mut rng);
+        let m = torus_from_f64(0.25);
+        let ct = LweCiphertext::trivial(m, 300);
+        assert_eq!(ct.decrypt(&k1), m);
+        assert_eq!(ct.decrypt(&k2), m);
+    }
+
+    #[test]
+    fn plaintext_offset() {
+        let mut rng = Xoshiro256::new(9);
+        let key = LweSecretKey::generate(300, &mut rng);
+        let m = torus_from_f64(0.1);
+        let off = torus_from_f64(0.05);
+        let ct = LweCiphertext::encrypt(m, &key, STD, &mut rng);
+        let dec = ct.add_plain(off).decrypt(&key);
+        assert!(torus_distance(dec, m.wrapping_add(off)) < 1e-6);
+        let dec2 = ct.sub_plain(off).decrypt(&key);
+        assert!(torus_distance(dec2, m.wrapping_sub(off)) < 1e-6);
+    }
+
+    #[test]
+    fn ciphertexts_hide_the_message() {
+        // Same message encrypted twice yields different ciphertexts.
+        let mut rng = Xoshiro256::new(33);
+        let key = LweSecretKey::generate(300, &mut rng);
+        let m = torus_from_f64(0.2);
+        let c1 = LweCiphertext::encrypt(m, &key, STD, &mut rng);
+        let c2 = LweCiphertext::encrypt(m, &key, STD, &mut rng);
+        assert_ne!(c1, c2);
+    }
+}

@@ -1,0 +1,30 @@
+//! A working TFHE implementation (S4–S5): torus arithmetic, LWE/GLWE/GGSW
+//! ciphertexts, FFT-based external products, programmable bootstrapping,
+//! key switching, integer encoding, and the encrypted operator layer the
+//! attention circuits are built on.
+//!
+//! This substitutes for the Concrete compiler the paper used (see
+//! DESIGN.md §3): the scheme is real — ciphertexts, noise, blind
+//! rotations — so measured *relative* costs (PBS-dominated; ct×ct = 2 PBS;
+//! precision → polynomial size → time) are physical, not modeled.
+//!
+//! Security note: parameters follow a λ=128 curve approximating the
+//! lattice estimator (see `optimizer::noise`), but the RNG is not a
+//! CSPRNG and no constant-time discipline is attempted — this is a
+//! research artifact for cost reproduction, not a deployment library.
+
+pub mod bootstrap;
+pub mod encoding;
+pub mod fft;
+pub mod ggsw;
+pub mod glwe;
+pub mod keyswitch;
+pub mod lwe;
+pub mod ops;
+pub mod params;
+pub mod torus;
+
+pub use bootstrap::{pbs_count, reset_pbs_count, ClientKey, Lut, ServerKey};
+pub use encoding::Encoder;
+pub use ops::{CtInt, FheContext};
+pub use params::{DecompParams, TfheParams};

@@ -1,0 +1,276 @@
+//! Encrypted integer operator layer (S5): the Concrete-style ops the
+//! attention circuits are written against.
+//!
+//! `CtInt` is an encrypted signed integer (bias convention, see
+//! `encoding`). The op costs mirror the paper's accounting exactly:
+//!
+//! | op                    | PBS | notes                                  |
+//! |-----------------------|-----|----------------------------------------|
+//! | add / sub / neg       | 0   | additions are cheap under FHE          |
+//! | scalar (literal) mul  | 0   | "multiplication by literals is native" |
+//! | relu / abs / square…  | 1   | univariate → one PBS table             |
+//! | ct × ct (`ct_mul`)    | 2   | paper eq. 1: PBS(x²/4; a+b) − PBS(x²/4; a−b) |
+
+use super::bootstrap::{Lut, ServerKey};
+use super::encoding::Encoder;
+use super::lwe::LweCiphertext;
+use crate::util::prng::Xoshiro256;
+
+/// An encrypted signed integer.
+#[derive(Clone, Debug)]
+pub struct CtInt {
+    pub ct: LweCiphertext,
+}
+
+/// Evaluation context: server key + encoder (message layout).
+pub struct FheContext {
+    pub sk: ServerKey,
+    pub enc: Encoder,
+    // Cached LUTs for the common univariate ops.
+    lut_relu: Lut,
+    lut_abs: Lut,
+    lut_sq4: Lut,
+}
+
+impl FheContext {
+    pub fn new(sk: ServerKey) -> Self {
+        let enc = Encoder::new(sk.params);
+        let bias = enc.bias() as i64;
+        let space = sk.params.message_space() as i64;
+        let clamp = |v: i64| -> u64 { v.clamp(0, space - 1) as u64 };
+        // LUT index is the *biased* message; value is biased back.
+        let lut_relu = Lut::from_fn(&sk.params, |m| clamp((m as i64 - bias).max(0) + bias));
+        let lut_abs = Lut::from_fn(&sk.params, |m| clamp((m as i64 - bias).abs() + bias));
+        // floor(v²/4), saturating at the top of the signed range: the
+        // ct_mul caller guarantees |a±b| small enough that no saturation
+        // occurs on the values that matter.
+        let lut_sq4 = Lut::from_fn(&sk.params, |m| {
+            let v = m as i64 - bias;
+            clamp((v * v).div_euclid(4) + bias)
+        });
+        FheContext { sk, enc, lut_relu, lut_abs, lut_sq4 }
+    }
+
+    /// Encrypt a signed value (client-side helper for tests/benches —
+    /// production clients encrypt with `Encoder` directly).
+    pub fn encrypt(
+        &self,
+        v: i64,
+        ck: &super::bootstrap::ClientKey,
+        rng: &mut Xoshiro256,
+    ) -> CtInt {
+        CtInt { ct: self.enc.encrypt_signed(v, ck, rng) }
+    }
+
+    pub fn decrypt(&self, x: &CtInt, ck: &super::bootstrap::ClientKey) -> i64 {
+        self.enc.decrypt_signed(&x.ct, ck)
+    }
+
+    /// A trivial (public constant) ciphertext.
+    pub fn constant(&self, v: i64) -> CtInt {
+        let m = (v + self.enc.bias() as i64) as u64;
+        CtInt { ct: LweCiphertext::trivial(self.enc.encode(m), self.sk.params.lwe_dim) }
+    }
+
+    // ----- linear ops (0 PBS) -----
+
+    /// a + b (bias corrected).
+    pub fn add(&self, a: &CtInt, b: &CtInt) -> CtInt {
+        CtInt { ct: a.ct.add(&b.ct).sub_plain(self.enc.encode(self.enc.bias())) }
+    }
+
+    /// a − b (bias corrected).
+    pub fn sub(&self, a: &CtInt, b: &CtInt) -> CtInt {
+        CtInt { ct: a.ct.sub(&b.ct).add_plain(self.enc.encode(self.enc.bias())) }
+    }
+
+    /// −a.
+    pub fn neg(&self, a: &CtInt) -> CtInt {
+        let two_bias = self.enc.encode(self.enc.bias()).wrapping_mul(2);
+        CtInt { ct: a.ct.neg().add_plain(two_bias) }
+    }
+
+    /// a + constant.
+    pub fn add_const(&self, a: &CtInt, c: i64) -> CtInt {
+        let off = (c as u64).wrapping_mul(self.sk.params.delta());
+        CtInt { ct: a.ct.add_plain(off) }
+    }
+
+    /// a · c for a plaintext literal c ("constant-to-variable" multiply —
+    /// no PBS, matching the paper's cost model).
+    pub fn scalar_mul(&self, a: &CtInt, c: i64) -> CtInt {
+        // (m)·c carries bias·c; correct back to a single bias.
+        let ct = a.ct.scalar_mul(c);
+        let corr = ((c - 1) as u64)
+            .wrapping_mul(self.enc.bias())
+            .wrapping_mul(self.sk.params.delta());
+        CtInt { ct: ct.sub_plain(corr) }
+    }
+
+    /// Sum of many ciphertexts (0 PBS; noise grows linearly).
+    pub fn sum(&self, xs: &[CtInt]) -> CtInt {
+        assert!(!xs.is_empty());
+        let mut acc = xs[0].ct.clone();
+        for x in &xs[1..] {
+            acc.add_assign(&x.ct);
+        }
+        let corr = ((xs.len() - 1) as u64)
+            .wrapping_mul(self.enc.bias())
+            .wrapping_mul(self.sk.params.delta());
+        CtInt { ct: acc.sub_plain(corr) }
+    }
+
+    // ----- univariate ops (1 PBS each) -----
+
+    /// Apply an arbitrary univariate signed function (1 PBS).
+    pub fn pbs_fn(&self, a: &CtInt, f: impl Fn(i64) -> i64) -> CtInt {
+        let bias = self.enc.bias() as i64;
+        let space = self.sk.params.message_space() as i64;
+        let lut = Lut::from_fn(&self.sk.params, |m| {
+            (f(m as i64 - bias) + bias).clamp(0, space - 1) as u64
+        });
+        CtInt { ct: self.sk.pbs(&a.ct, &lut) }
+    }
+
+    /// ReLU x⁺ (1 PBS).
+    pub fn relu(&self, a: &CtInt) -> CtInt {
+        CtInt { ct: self.sk.pbs(&a.ct, &self.lut_relu) }
+    }
+
+    /// |x| (1 PBS).
+    pub fn abs(&self, a: &CtInt) -> CtInt {
+        CtInt { ct: self.sk.pbs(&a.ct, &self.lut_abs) }
+    }
+
+    /// floor(x²/4) (1 PBS) — the paper's eq. 2 table.
+    pub fn square_quarter(&self, a: &CtInt) -> CtInt {
+        CtInt { ct: self.sk.pbs(&a.ct, &self.lut_sq4) }
+    }
+
+    /// Reciprocal table scaled by `num`: x ↦ round(num/x) for x>0, used by
+    /// the encrypted softmax normalization (1 PBS).
+    pub fn recip_scaled(&self, a: &CtInt, num: i64) -> CtInt {
+        self.pbs_fn(a, move |v| if v > 0 { num / v } else { self.enc.max_signed() })
+    }
+
+    // ----- the paper's headline op -----
+
+    /// Ciphertext × ciphertext multiplication via two PBS (paper eq. 1):
+    /// `ab = PBS(x²/4; a+b) − PBS(x²/4; a−b)`.
+    ///
+    /// Exact for integers because a+b and a−b share parity, so the two
+    /// floor errors cancel. Requires |a±b| within the signed range — this
+    /// is exactly the "up to two bits higher precision" cost the paper's
+    /// Table 2 attributes to the dot-product variant.
+    pub fn ct_mul(&self, a: &CtInt, b: &CtInt) -> CtInt {
+        let s = self.add(a, b);
+        let d = self.sub(a, b);
+        let p1 = self.square_quarter(&s);
+        let p2 = self.square_quarter(&d);
+        self.sub(&p1, &p2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::bootstrap::{pbs_count, ClientKey};
+    use crate::tfhe::params::TfheParams;
+    use crate::util::prng::Rng64;
+
+    fn setup() -> (ClientKey, FheContext, Xoshiro256) {
+        let mut rng = Xoshiro256::new(31337);
+        // 4 bits so ct_mul has headroom for a±b and ab.
+        let ck = ClientKey::generate(TfheParams::test_for_bits(4), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        (ck, ctx, rng)
+    }
+
+    #[test]
+    fn linear_ops_cost_zero_pbs() {
+        let (ck, ctx, mut rng) = setup();
+        let a = ctx.encrypt(3, &ck, &mut rng);
+        let b = ctx.encrypt(-2, &ck, &mut rng);
+        let before = pbs_count();
+        let add = ctx.add(&a, &b);
+        let sub = ctx.sub(&a, &b);
+        let neg = ctx.neg(&a);
+        let smul = ctx.scalar_mul(&a, 2);
+        let addc = ctx.add_const(&a, 4);
+        assert_eq!(pbs_count(), before, "linear ops must not bootstrap");
+        assert_eq!(ctx.decrypt(&add, &ck), 1);
+        assert_eq!(ctx.decrypt(&sub, &ck), 5);
+        assert_eq!(ctx.decrypt(&neg, &ck), -3);
+        assert_eq!(ctx.decrypt(&smul, &ck), 6);
+        assert_eq!(ctx.decrypt(&addc, &ck), 7);
+    }
+
+    #[test]
+    fn relu_and_abs_over_range() {
+        let (ck, ctx, mut rng) = setup();
+        for v in [-8i64, -5, -1, 0, 1, 4, 7] {
+            let x = ctx.encrypt(v, &ck, &mut rng);
+            assert_eq!(ctx.decrypt(&ctx.relu(&x), &ck), v.max(0), "relu({v})");
+            assert_eq!(ctx.decrypt(&ctx.abs(&x), &ck), v.abs().min(7), "abs({v})");
+        }
+    }
+
+    #[test]
+    fn ct_mul_is_exact_and_costs_two_pbs() {
+        let (ck, ctx, mut rng) = setup();
+        // |a|,|b| ≤ 2 keeps a±b and ab within 4-bit signed range.
+        for a in -2i64..=2 {
+            for b in -2i64..=2 {
+                let ca = ctx.encrypt(a, &ck, &mut rng);
+                let cb = ctx.encrypt(b, &ck, &mut rng);
+                let before = pbs_count();
+                let prod = ctx.ct_mul(&ca, &cb);
+                assert_eq!(pbs_count() - before, 2, "ct_mul PBS count");
+                assert_eq!(ctx.decrypt(&prod, &ck), a * b, "{a}·{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sum_many() {
+        let (ck, ctx, mut rng) = setup();
+        let vals = [1i64, -2, 3, 1, -1];
+        let cts: Vec<CtInt> = vals.iter().map(|&v| ctx.encrypt(v, &ck, &mut rng)).collect();
+        let s = ctx.sum(&cts);
+        assert_eq!(ctx.decrypt(&s, &ck), vals.iter().sum::<i64>());
+    }
+
+    #[test]
+    fn constants_work_in_ops() {
+        let (ck, ctx, mut rng) = setup();
+        let a = ctx.encrypt(-2, &ck, &mut rng);
+        let c = ctx.constant(5);
+        assert_eq!(ctx.decrypt(&ctx.add(&a, &c), &ck), 3);
+        // 5 − (−2) = 7 = max of the 4-bit signed range (linear ops do NOT
+        // saturate — exceeding the range would wrap into the padding bit).
+        assert_eq!(ctx.decrypt(&ctx.sub(&c, &a), &ck), 7);
+    }
+
+    #[test]
+    fn custom_pbs_fn() {
+        let (ck, ctx, mut rng) = setup();
+        let x = ctx.encrypt(3, &ck, &mut rng);
+        let y = ctx.pbs_fn(&x, |v| v - 1);
+        assert_eq!(ctx.decrypt(&y, &ck), 2);
+    }
+
+    #[test]
+    fn random_linear_circuits_match_plaintext() {
+        let (ck, ctx, mut rng) = setup();
+        for _ in 0..10 {
+            let a = rng.next_range_i64(-3, 3);
+            let b = rng.next_range_i64(-3, 3);
+            let c = rng.next_range_i64(1, 2);
+            let ca = ctx.encrypt(a, &ck, &mut rng);
+            let cb = ctx.encrypt(b, &ck, &mut rng);
+            // (a − b)·c + b
+            let r = ctx.add(&ctx.scalar_mul(&ctx.sub(&ca, &cb), c), &cb);
+            assert_eq!(ctx.decrypt(&r, &ck), (a - b) * c + b);
+        }
+    }
+}

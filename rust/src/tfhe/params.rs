@@ -1,0 +1,181 @@
+//! TFHE parameter sets (S4): macro-parameters (LWE dimension, GLWE
+//! polynomial size/dimension, noise) and micro-parameters (decomposition
+//! base/levels) in the taxonomy of Bergerat et al. 2023. The optimizer
+//! (`crate::optimizer`) *derives* sets like these from noise + cost
+//! models; the constants here are hand-checked working sets used by tests
+//! and benches.
+
+/// Gadget decomposition parameters (base 2^base_log, `level` digits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecompParams {
+    pub base_log: usize,
+    pub level: usize,
+}
+
+impl DecompParams {
+    pub const fn new(base_log: usize, level: usize) -> Self {
+        DecompParams { base_log, level }
+    }
+}
+
+/// Complete parameter set for the levelled LWE + PBS pipeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TfheParams {
+    /// LWE dimension n (the "small" key the client encrypts under).
+    pub lwe_dim: usize,
+    /// GLWE polynomial size N (power of two).
+    pub poly_size: usize,
+    /// GLWE dimension k.
+    pub glwe_dim: usize,
+    /// LWE fresh-noise std (torus fraction).
+    pub lwe_noise_std: f64,
+    /// GLWE fresh-noise std (torus fraction).
+    pub glwe_noise_std: f64,
+    /// PBS (bootstrap key) decomposition.
+    pub pbs_decomp: DecompParams,
+    /// Key-switch decomposition.
+    pub ks_decomp: DecompParams,
+    /// Message precision in bits (excluding the padding bit).
+    pub message_bits: u32,
+}
+
+impl TfheParams {
+    /// Size of the message space (number of slots).
+    pub fn message_space(&self) -> u64 {
+        1u64 << self.message_bits
+    }
+
+    /// Encoding step Δ = 2^64 / 2^(message_bits + 1) — one padding bit.
+    pub fn delta(&self) -> u64 {
+        1u64 << (63 - self.message_bits)
+    }
+
+    /// Dimension of the LWE ciphertext extracted from a GLWE (k·N).
+    pub fn extracted_lwe_dim(&self) -> usize {
+        self.glwe_dim * self.poly_size
+    }
+
+    /// Sanity checks used by tests and the optimizer.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.poly_size.is_power_of_two() {
+            return Err(format!("poly_size {} must be a power of two", self.poly_size));
+        }
+        if self.poly_size < (1usize << (self.message_bits + 1)) {
+            return Err(format!(
+                "poly_size {} too small for {} message bits (+padding): blind rotation \
+                 cannot resolve all slots",
+                self.poly_size, self.message_bits
+            ));
+        }
+        if self.pbs_decomp.base_log * self.pbs_decomp.level > 64 {
+            return Err("pbs decomposition exceeds 64 bits".into());
+        }
+        if self.ks_decomp.base_log * self.ks_decomp.level > 64 {
+            return Err("ks decomposition exceeds 64 bits".into());
+        }
+        Ok(())
+    }
+
+    /// Working set for fast unit tests: ~2^80-security-class toy noise but
+    /// structurally identical to production sets. 3-bit messages.
+    pub fn test_small() -> Self {
+        TfheParams {
+            lwe_dim: 320,
+            poly_size: 512,
+            glwe_dim: 1,
+            lwe_noise_std: 2f64.powi(-22),
+            glwe_noise_std: 2f64.powi(-42),
+            pbs_decomp: DecompParams::new(15, 2),
+            ks_decomp: DecompParams::new(4, 3),
+            message_bits: 3,
+        }
+    }
+
+    /// Fast test/demo set scaled to a message width: N sized so the
+    /// mod-switch noise clears the half-slot, KS decomposition sized so
+    /// its rounding error does too (base_log·level must comfortably
+    /// exceed message_bits + padding + margin).
+    pub fn test_for_bits(message_bits: u32) -> Self {
+        let mut p = Self::test_small();
+        p.message_bits = message_bits;
+        p.poly_size = match message_bits {
+            0..=3 => 512,
+            4..=5 => 1024,
+            _ => 2048,
+        };
+        p.ks_decomp = if message_bits >= 5 {
+            DecompParams::new(4, 6)
+        } else {
+            DecompParams::new(4, 3)
+        };
+        p
+    }
+
+    /// Bench set for `message_bits` ∈ 2..=8, mirroring the shape of the
+    /// paper's Table 2 (lweDim ~800, polySize 2048/4096, baseLog 15–23,
+    /// level 1–2). Noise follows the security curve in
+    /// `optimizer::noise::min_noise_for_security` at λ=128.
+    pub fn bench_for_bits(message_bits: u32) -> Self {
+        // Larger message spaces need bigger accumulators (N) and lower
+        // GLWE noise; these mirror Concrete's published parameter curves.
+        // Mod-switch noise σ ≈ √(n/24)/(2N) must clear Δ/2 = 2^-(p+2):
+        // p ≤ 4 → N=2048, p ∈ {5,6} → N=4096, p ≥ 7 → N=8192.
+        let (poly_size, pbs_decomp) = match message_bits {
+            0..=5 => (2048, DecompParams::new(23, 1)),
+            6 => (4096, DecompParams::new(22, 1)),
+            _ => (8192, DecompParams::new(15, 2)),
+        };
+        // Higher precision needs a quieter small key (KS noise ∝ σ_lwe²),
+        // and a finer KS decomposition.
+        let lwe_dim = 750 + 30 * message_bits as usize;
+        let ks_decomp = match message_bits {
+            0..=4 => DecompParams::new(4, 6),
+            5..=6 => DecompParams::new(3, 8),
+            _ => DecompParams::new(2, 14),
+        };
+        TfheParams {
+            lwe_dim,
+            poly_size,
+            glwe_dim: 1,
+            lwe_noise_std: crate::optimizer::noise::min_noise_for_security(lwe_dim, 128),
+            glwe_noise_std: crate::optimizer::noise::min_noise_for_security(poly_size, 128),
+            pbs_decomp,
+            ks_decomp,
+            message_bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_small_validates() {
+        TfheParams::test_small().validate().unwrap();
+    }
+
+    #[test]
+    fn delta_and_space() {
+        let p = TfheParams::test_small();
+        assert_eq!(p.message_space(), 8);
+        assert_eq!(p.delta(), 1u64 << 60);
+        assert_eq!(p.extracted_lwe_dim(), 512);
+    }
+
+    #[test]
+    fn rejects_undersized_poly() {
+        let mut p = TfheParams::test_small();
+        p.message_bits = 9; // needs poly_size ≥ 1024
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn bench_sets_validate_for_all_widths() {
+        for bits in 2..=8 {
+            let p = TfheParams::bench_for_bits(bits);
+            p.validate().unwrap_or_else(|e| panic!("bits={bits}: {e}"));
+            assert!(p.lwe_dim >= 750);
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Discretized torus arithmetic (S4).
+//!
+//! TFHE works over the real torus T = R/Z; implementations discretize it
+//! to `q = 2^64` levels, represented as `u64` with wrapping arithmetic:
+//! the torus element is `t / 2^64`. All scheme noise is Gaussian on the
+//! torus with standard deviation given as a *fraction of the torus*.
+
+use crate::util::prng::Xoshiro256;
+
+/// One torus element, q = 2^64 discretization.
+pub type Torus = u64;
+
+/// Convert a real in (−0.5, 0.5] (fraction of the torus) to a torus element.
+pub fn torus_from_f64(x: f64) -> Torus {
+    // Wrap into [0, 1), scale. f64 has 53 mantissa bits; the low 11 bits
+    // are below fresh-noise level for every parameter set we use.
+    let frac = x - x.floor();
+    (frac * 2f64.powi(64)) as u64
+}
+
+/// Interpret a torus element as a real in [−0.5, 0.5) (centered).
+pub fn torus_to_f64(t: Torus) -> f64 {
+    (t as i64) as f64 / 2f64.powi(64)
+}
+
+/// Gaussian torus noise with standard deviation `std` (torus fraction).
+pub fn gaussian_torus(std: f64, rng: &mut Xoshiro256) -> Torus {
+    let z = rng.next_gaussian_std(std);
+    // Round to the nearest torus level (wrapping).
+    (z * 2f64.powi(64)).round() as i64 as u64
+}
+
+/// Round a torus value to the nearest multiple of `2^64 / modulus`
+/// and return the multiple index in `[0, modulus)`. This is the
+/// "mod switch" used before blind rotation (modulus = 2N) and the final
+/// decode rounding (modulus = message space size).
+pub fn round_to_modulus(t: Torus, modulus: u64) -> u64 {
+    debug_assert!(modulus.is_power_of_two(), "modulus must be a power of two");
+    let shift = 64 - modulus.trailing_zeros();
+    // Add half a step before truncating = round to nearest.
+    let half = 1u64 << (shift - 1);
+    (t.wrapping_add(half)) >> shift
+        & (modulus - 1)
+}
+
+/// Centered signed distance |a − b| on the torus, as a fraction.
+pub fn torus_distance(a: Torus, b: Torus) -> f64 {
+    torus_to_f64(a.wrapping_sub(b)).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_roundtrip_small_values() {
+        for x in [0.0, 0.25, -0.25, 0.123456, -0.4999] {
+            let t = torus_from_f64(x);
+            let back = torus_to_f64(t);
+            assert!((back - x).abs() < 1e-9, "{x} -> {back}");
+        }
+    }
+
+    #[test]
+    fn wrapping_addition_is_torus_addition() {
+        let a = torus_from_f64(0.4);
+        let b = torus_from_f64(0.3);
+        // 0.7 wraps to −0.3 in centered representation.
+        let s = torus_to_f64(a.wrapping_add(b));
+        assert!((s - (-0.3)).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn round_to_modulus_nearest() {
+        // modulus 8: slots at multiples of 2^61.
+        let slot = 1u64 << 61;
+        assert_eq!(round_to_modulus(3 * slot, 8), 3);
+        assert_eq!(round_to_modulus(3 * slot + (slot >> 1) - 1, 8), 3);
+        assert_eq!(round_to_modulus(3 * slot + (slot >> 1), 8), 4);
+        // Wraps: just below the top rounds to 0.
+        assert_eq!(round_to_modulus(u64::MAX, 8), 0);
+    }
+
+    #[test]
+    fn gaussian_torus_scale() {
+        let mut rng = Xoshiro256::new(123);
+        let std = 2f64.powi(-20);
+        let n = 20_000;
+        let mut sumsq = 0f64;
+        for _ in 0..n {
+            let e = torus_to_f64(gaussian_torus(std, &mut rng));
+            sumsq += e * e;
+        }
+        let measured = (sumsq / n as f64).sqrt();
+        assert!((measured / std - 1.0).abs() < 0.05, "std {measured} vs {std}");
+    }
+
+    #[test]
+    fn distance_is_symmetric_and_wraps() {
+        let a = torus_from_f64(0.49);
+        let b = torus_from_f64(-0.49);
+        assert!(torus_distance(a, b) < 0.03); // short way around
+        assert!((torus_distance(a, b) - torus_distance(b, a)).abs() < 1e-12);
+    }
+}

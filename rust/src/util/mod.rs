@@ -1,0 +1,9 @@
+//! Dependency-free utilities: PRNG, JSON, property-testing harness.
+//!
+//! The offline crate registry only carries the `xla` crate and its build
+//! dependencies, so `rand`, `serde_json` and `proptest` are replaced by
+//! these small in-tree implementations (see DESIGN.md §3, S14).
+
+pub mod json;
+pub mod prng;
+pub mod prop;

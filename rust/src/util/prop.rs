@@ -1,0 +1,80 @@
+//! Tiny property-based testing harness (proptest is unavailable offline).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("add commutes", 256, |rng| {
+//!     let a = rng.next_range_i64(-100, 100);
+//!     let b = rng.next_range_i64(-100, 100);
+//!     prop_assert_eq(a + b, b + a, "commutativity")
+//! });
+//! ```
+//! Each case gets a fresh RNG derived from a base seed and the case index,
+//! so a failure report ("case #k, seed s") is exactly reproducible.
+
+use super::prng::Xoshiro256;
+
+/// Result of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `f`, panicking with a reproducible report on
+/// the first failure. The per-case RNG seed is `BASE_SEED ^ case_index`.
+pub fn prop_check(name: &str, cases: u64, mut f: impl FnMut(&mut Xoshiro256) -> PropResult) {
+    const BASE_SEED: u64 = 0x1AB1B1707_u64;
+    for i in 0..cases {
+        let seed = BASE_SEED ^ (i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Xoshiro256::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at case #{i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert equality inside a property, producing a descriptive error.
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(got: T, want: T, ctx: &str) -> PropResult {
+    if got == want {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: got {got:?}, want {want:?}"))
+    }
+}
+
+/// Assert a boolean condition inside a property.
+pub fn prop_assert(cond: bool, ctx: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(ctx.to_string())
+    }
+}
+
+/// Assert |got - want| <= tol.
+pub fn prop_assert_close(got: f64, want: f64, tol: f64, ctx: &str) -> PropResult {
+    if (got - want).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: got {got}, want {want} (tol {tol}, err {})", (got - want).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng64;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check("trivial", 32, |rng| {
+            count += 1;
+            let x = rng.next_range_i64(-5, 5);
+            prop_assert(x.abs() <= 5, "bounded")
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_panics_with_case_info() {
+        prop_check("must fail", 8, |_rng| prop_assert(false, "always fails"));
+    }
+}

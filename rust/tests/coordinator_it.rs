@@ -1,0 +1,159 @@
+//! Coordinator + server integration: full TCP round trips, batching under
+//! concurrency, backpressure, metrics, encrypted path through the
+//! coordinator, graceful shutdown.
+
+use inhibitor::attention::Mechanism;
+use inhibitor::coordinator::{BatchPolicy, Coordinator, EnginePath, Payload, RoutePolicy};
+use inhibitor::model::{ModelConfig, QTransformer};
+use inhibitor::server::Client;
+use inhibitor::util::prng::Xoshiro256;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn quant_coordinator() -> Coordinator {
+    let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+    let mut cfg = ModelConfig::small(Mechanism::Inhibitor, 8, 16);
+    cfg.in_features = 4;
+    c.add_quant_engine(
+        "inhibitor",
+        QTransformer::random(cfg, 3),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2), queue_cap: 1024 },
+    );
+    c
+}
+
+#[test]
+fn tcp_server_roundtrip_ping_infer_metrics_shutdown() {
+    let coord = Arc::new(quant_coordinator());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = {
+        let c = Arc::clone(&coord);
+        std::thread::spawn(move || {
+            inhibitor::server::serve(c, "127.0.0.1:0", move |a| {
+                let _ = tx.send(a);
+            })
+        })
+    };
+    let addr = rx.recv_timeout(Duration::from_secs(10)).unwrap().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    assert!(client.ping().unwrap());
+    let (out, lat) = client
+        .infer("quant", "inhibitor", vec![0.1; 32], 8, 4)
+        .unwrap()
+        .expect("inference ok");
+    assert_eq!(out.len(), 1);
+    assert!(lat >= 0.0);
+    // Malformed request surfaces an error, not a disconnect.
+    let err = client.infer("quant", "inhibitor", vec![0.1; 5], 8, 4).unwrap();
+    assert!(err.is_err());
+    let metrics = client.metrics().unwrap();
+    assert!(metrics.contains("completed="), "{metrics}");
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn concurrent_clients_all_served_and_batched() {
+    let coord = Arc::new(quant_coordinator());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = {
+        let c = Arc::clone(&coord);
+        std::thread::spawn(move || {
+            inhibitor::server::serve(c, "127.0.0.1:0", move |a| {
+                let _ = tx.send(a);
+            })
+        })
+    };
+    let addr = rx.recv_timeout(Duration::from_secs(10)).unwrap().to_string();
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            for i in 0..25 {
+                let x = (t * 25 + i) as f32 * 0.01;
+                let r = client.infer("quant", "inhibitor", vec![x; 32], 8, 4).unwrap();
+                assert!(r.is_ok(), "{r:?}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed.load(std::sync::atomic::Ordering::Relaxed), 150);
+    let mut shut = Client::connect(&addr).unwrap();
+    shut.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+#[test]
+fn deterministic_outputs_for_identical_requests() {
+    let c = quant_coordinator();
+    let payload = || Payload::Features(vec![0.25; 32], (8, 4));
+    let a = c
+        .infer_blocking(EnginePath::QuantInt("inhibitor".into()), payload(), Duration::from_secs(10))
+        .unwrap();
+    let b = c
+        .infer_blocking(EnginePath::QuantInt("inhibitor".into()), payload(), Duration::from_secs(10))
+        .unwrap();
+    assert_eq!(a.output, b.output);
+}
+
+#[test]
+fn encrypted_path_through_coordinator() {
+    use inhibitor::tfhe::{ClientKey, FheContext, TfheParams};
+    let mut rng = Xoshiro256::new(77);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+    let session = c.keymgr.create_session(ctx);
+    c.add_fhe_engine(session, "inhibitor", 2, 2, BatchPolicy::default()).unwrap();
+    let sess = c.keymgr.session(session).unwrap();
+    let vals = [1i64, -1, 0, 2, 1, 1, -2, 0, 3, 1, 2, 0];
+    let bundle: Vec<_> = vals.iter().map(|&v| sess.ctx.encrypt(v, &ck, &mut rng)).collect();
+    let blob = sess.register(bundle);
+    let resp = c
+        .infer_blocking(
+            EnginePath::Encrypted { session, mechanism: "inhibitor".into() },
+            Payload::CiphertextRef(blob),
+            Duration::from_secs(300),
+        )
+        .unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let cts = sess.take(resp.output[0] as u64).unwrap();
+    let h: Vec<i64> = cts.iter().map(|ct| sess.ctx.decrypt(ct, &ck)).collect();
+    assert_eq!(h.len(), 4);
+    // Mirror check.
+    use inhibitor::fhe_circuits::InhibitorFhe;
+    use inhibitor::tensor::ITensor;
+    let q = ITensor::from_vec(&[2, 2], vals[0..4].to_vec());
+    let k = ITensor::from_vec(&[2, 2], vals[4..8].to_vec());
+    let v = ITensor::from_vec(&[2, 2], vals[8..12].to_vec());
+    let want = InhibitorFhe::new(2, 1).mirror(&q, &k, &v, sess.ctx.enc.max_signed());
+    assert_eq!(h, want.data);
+}
+
+#[test]
+fn backpressure_surfaces_as_submit_error() {
+    let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+    // An engine that blocks forever, with a tiny queue.
+    c.add_quant_engine(
+        "inhibitor",
+        QTransformer::random(ModelConfig::small(Mechanism::Inhibitor, 64, 64), 1),
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1), queue_cap: 2 },
+    );
+    // Flood faster than a 64×64 model on one core can drain.
+    let mut saw_reject = false;
+    for _ in 0..200 {
+        let r = c.submit(
+            EnginePath::QuantInt("inhibitor".into()),
+            Payload::Features(vec![0.0; 64 * 64], (64, 64)),
+        );
+        if r.is_err() {
+            saw_reject = true;
+            break;
+        }
+    }
+    assert!(saw_reject, "queue_cap=2 must reject under flood");
+}

@@ -1,0 +1,111 @@
+//! E2E encrypted path: full attention circuits under real TFHE equal
+//! their plaintext mirrors; the quantized engine and the encrypted engine
+//! agree on the same integer inputs; noise stays within budget across a
+//! whole forward pass.
+
+use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe};
+use inhibitor::tensor::ITensor;
+use inhibitor::tfhe::{bootstrap, ClientKey, FheContext, TfheParams};
+use inhibitor::util::prng::Xoshiro256;
+
+fn ctx_with_bits(bits: u32, seed: u64) -> (ClientKey, FheContext, Xoshiro256) {
+    let mut rng = Xoshiro256::new(seed);
+    let p = TfheParams::test_for_bits(bits);
+    let ck = ClientKey::generate(p, &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    (ck, ctx, rng)
+}
+
+#[test]
+fn encrypted_inhibitor_t4_matches_mirror() {
+    let (ck, ctx, mut rng) = ctx_with_bits(5, 42);
+    let (t, d) = (4usize, 2usize);
+    let q = ITensor::random(&[t, d], -2, 2, &mut rng);
+    let k = ITensor::random(&[t, d], -2, 2, &mut rng);
+    let v = ITensor::random(&[t, d], 0, 3, &mut rng);
+    let head = InhibitorFhe::new(d, 1);
+    let h = head.forward(
+        &ctx,
+        &CtMatrix::encrypt(&q, &ctx, &ck, &mut rng),
+        &CtMatrix::encrypt(&k, &ctx, &ck, &mut rng),
+        &CtMatrix::encrypt(&v, &ctx, &ck, &mut rng),
+    );
+    assert_eq!(h.decrypt(&ctx, &ck), head.mirror(&q, &k, &v, ctx.enc.max_signed()));
+}
+
+#[test]
+fn encrypted_vs_quantized_engine_consistency() {
+    // The encrypted circuit and the plaintext quantized engine compute the
+    // same integer function when fed the same codes (the FHE circuit's
+    // clamps are the only divergence; inputs chosen to avoid them).
+    let (ck, ctx, mut rng) = ctx_with_bits(6, 7);
+    let (t, d) = (2usize, 2usize);
+    let q = ITensor::from_vec(&[t, d], vec![1, 0, -1, 2]);
+    let k = ITensor::from_vec(&[t, d], vec![0, 1, 2, -1]);
+    let v = ITensor::from_vec(&[t, d], vec![2, 3, 1, 0]);
+    let head = InhibitorFhe::new(d, 1);
+    let enc_out = head
+        .forward(
+            &ctx,
+            &CtMatrix::encrypt(&q, &ctx, &ck, &mut rng),
+            &CtMatrix::encrypt(&k, &ctx, &ck, &mut rng),
+            &CtMatrix::encrypt(&v, &ctx, &ck, &mut rng),
+        )
+        .decrypt(&ctx, &ck);
+    let mirror = head.mirror(&q, &k, &v, ctx.enc.max_signed());
+    assert_eq!(enc_out, mirror);
+    // And the mirror itself equals the naive plaintext inhibition (γ=√2,
+    // α=1 at the integer scale) computed via the attention module.
+    let z = inhibitor::attention::inhibitor::inhibitor_scores(
+        &q,
+        &k,
+        inhibitor::quant::FixedMult::from_f64(1.0 / (2f64).sqrt()),
+        1,
+    );
+    let naive = inhibitor::attention::inhibitor::inhibit_naive(&z, &v);
+    assert_eq!(mirror, naive, "FHE mirror vs attention-module integer math");
+}
+
+#[test]
+fn encrypted_dotprod_runs_and_matches_mirror_t2() {
+    let (ck, ctx, mut rng) = ctx_with_bits(6, 1234);
+    let (t, d) = (2usize, 2usize);
+    let q = ITensor::from_vec(&[t, d], vec![1, -1, 0, 2]);
+    let k = ITensor::from_vec(&[t, d], vec![1, 1, -1, 1]);
+    let v = ITensor::from_vec(&[t, d], vec![2, 1, -1, 3]);
+    let head = DotProductFhe::new(d, 2);
+    bootstrap::reset_pbs_count();
+    let h = head.forward(
+        &ctx,
+        &CtMatrix::encrypt(&q, &ctx, &ck, &mut rng),
+        &CtMatrix::encrypt(&k, &ctx, &ck, &mut rng),
+        &CtMatrix::encrypt(&v, &ctx, &ck, &mut rng),
+    );
+    let pbs_dot = bootstrap::pbs_count();
+    assert_eq!(
+        h.decrypt(&ctx, &ck),
+        head.mirror(&q, &k, &v, ctx.enc.min_signed(), ctx.enc.max_signed())
+    );
+    // Paper claim: dot-product needs about twice the PBS of the inhibitor.
+    bootstrap::reset_pbs_count();
+    let _ = InhibitorFhe::new(d, 1).forward(
+        &ctx,
+        &CtMatrix::encrypt(&q, &ctx, &ck, &mut rng),
+        &CtMatrix::encrypt(&k, &ctx, &ck, &mut rng),
+        &CtMatrix::encrypt(&v.abs(), &ctx, &ck, &mut rng),
+    );
+    let pbs_inh = bootstrap::pbs_count();
+    let ratio = pbs_dot as f64 / pbs_inh as f64;
+    assert!(ratio > 1.4, "PBS ratio dot/inh = {ratio} ({pbs_dot}/{pbs_inh})");
+}
+
+#[test]
+fn noise_survives_a_long_linear_chain_between_bootstraps() {
+    // Sum 8 fresh ciphertexts (the longest chain the attention circuits
+    // use at T=8), bootstrap, decode — must be exact.
+    let (ck, ctx, mut rng) = ctx_with_bits(5, 55);
+    let ones: Vec<_> = (0..8).map(|_| ctx.encrypt(1, &ck, &mut rng)).collect();
+    let sum = ctx.sum(&ones);
+    let refreshed = ctx.relu(&sum);
+    assert_eq!(ctx.decrypt(&refreshed, &ck), 8);
+}

@@ -1,0 +1,109 @@
+//! E2E: AOT artifacts (L1 Pallas kernels lowered via L2 jax) executed
+//! through the PJRT runtime must match the in-crate float references —
+//! this pins the numerical contract between the Python build path and the
+//! Rust request path.
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are absent.
+
+use inhibitor::attention::common;
+use inhibitor::runtime::Registry;
+use inhibitor::tensor::FTensor;
+use inhibitor::util::prng::Xoshiro256;
+
+fn registry() -> Option<Registry> {
+    match Registry::open("artifacts") {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping PJRT e2e: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn rand_mats(t: usize, d: usize, seed: u64) -> (FTensor, FTensor, FTensor) {
+    let mut rng = Xoshiro256::new(seed);
+    (
+        FTensor::randn(&[t, d], 1.0, &mut rng),
+        FTensor::randn(&[t, d], 1.0, &mut rng),
+        FTensor::randn(&[t, d], 1.0, &mut rng),
+    )
+}
+
+#[test]
+fn pallas_inhibitor_artifact_matches_rust_reference() {
+    let Some(mut reg) = registry() else { return };
+    for t in [32usize, 64] {
+        let engine = reg.attention_engine("inhibitor", t).expect("artifact");
+        let (q, k, v) = rand_mats(t, 64, t as u64);
+        let out = engine
+            .run_f32(&[q.data.clone(), k.data.clone(), v.data.clone()])
+            .expect("execute");
+        let want = common::ref_inhibitor(&q, &k, &v, (64f32).sqrt(), 0.5);
+        assert_eq!(out.len(), want.data.len());
+        let max_err = out
+            .iter()
+            .zip(want.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_err < 1e-3, "T={t}: max err {max_err}");
+    }
+}
+
+#[test]
+fn pallas_signed_inhibitor_artifact_matches_rust_reference() {
+    let Some(mut reg) = registry() else { return };
+    let t = 32;
+    let engine = reg.attention_engine("inhibitor-signed", t).expect("artifact");
+    let (q, k, v) = rand_mats(t, 64, 99);
+    let out = engine
+        .run_f32(&[q.data.clone(), k.data.clone(), v.data.clone()])
+        .expect("execute");
+    let want = common::ref_inhibitor_signed(&q, &k, &v, (64f32).sqrt(), 0.5);
+    let max_err = out
+        .iter()
+        .zip(want.data.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "max err {max_err}");
+}
+
+#[test]
+fn pallas_dotprod_artifact_matches_rust_reference() {
+    let Some(mut reg) = registry() else { return };
+    let t = 32;
+    let engine = reg.attention_engine("dotprod", t).expect("artifact");
+    let (q, k, v) = rand_mats(t, 64, 7);
+    let out = engine
+        .run_f32(&[q.data.clone(), k.data.clone(), v.data.clone()])
+        .expect("execute");
+    let want = common::ref_dotprod(&q, &k, &v);
+    let max_err = out
+        .iter()
+        .zip(want.data.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "max err {max_err}");
+}
+
+#[test]
+fn full_model_artifact_executes_with_manifest_shapes() {
+    let Some(mut reg) = registry() else { return };
+    let engine = reg.model_engine("model_inhibitor").expect("model artifact");
+    let x = vec![0.1f32; 16 * 2];
+    let out = engine.run_f32(&[x]).expect("execute");
+    assert_eq!(out.len(), 1, "regression head returns one value");
+    assert!(out[0].is_finite());
+}
+
+#[test]
+fn engine_rejects_wrong_input_arity_and_shape() {
+    let Some(mut reg) = registry() else { return };
+    let engine = reg.attention_engine("inhibitor", 32).expect("artifact");
+    assert!(engine.run_f32(&[vec![0.0; 32 * 64]]).is_err(), "arity check");
+    assert!(
+        engine
+            .run_f32(&[vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]])
+            .is_err(),
+        "shape check"
+    );
+}

@@ -1,0 +1,131 @@
+//! Cross-module integration tests: quantized model ↔ attention engines,
+//! weights round trip through disk, optimizer ↔ tfhe params.
+
+use inhibitor::attention::{common, AttnConfig, Mechanism};
+use inhibitor::model::{weights, ModelConfig, ModelInput, QTransformer, TaskHead};
+use inhibitor::quant::QParams;
+use inhibitor::tensor::{FTensor, ITensor};
+use inhibitor::util::prng::Xoshiro256;
+
+#[test]
+fn quantized_attention_agrees_with_float_reference_across_sizes() {
+    // The Table 3 engines vs ref.py-equivalent float math, across the
+    // paper's size sweep (scaled down for test time).
+    let mut rng = Xoshiro256::new(1);
+    for &(t, d) in &[(8usize, 8usize), (32, 16), (64, 32)] {
+        let qf = FTensor::randn(&[t, d], 1.0, &mut rng);
+        let kf = FTensor::randn(&[t, d], 1.0, &mut rng);
+        let vf = FTensor::randn(&[t, d], 1.0, &mut rng).map(|x| x.abs());
+        let qp = QParams::fit_symmetric(4.0, 14);
+        let cfg = AttnConfig::new(Mechanism::Inhibitor, t, d);
+        let head = inhibitor::attention::InhibitorHead::from_config(cfg, qp.scale, false);
+        let h = qp.dequantize_tensor(&head.forward(
+            &qp.quantize_tensor(&qf),
+            &qp.quantize_tensor(&kf),
+            &qp.quantize_tensor(&vf),
+        ));
+        let want = common::ref_inhibitor(&qf, &kf, &vf, cfg.effective_gamma(), cfg.alpha);
+        let tol = qp.scale * (t as f32) * (d as f32);
+        assert!(h.max_abs_diff(&want) < tol, "T={t} d={d}: {}", h.max_abs_diff(&want));
+    }
+}
+
+#[test]
+fn weights_roundtrip_through_disk_and_model_builds() {
+    let dir = std::env::temp_dir().join(format!("inh_w_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.weights.bin");
+    // Build a synthetic weight map mirroring aot.py's export names.
+    let mut rng = Xoshiro256::new(5);
+    let (d, ffn) = (8usize, 16usize);
+    let mut w = weights::WeightMap::new();
+    let mut lin = |name: &str,
+                   dout: usize,
+                   din: usize,
+                   rng: &mut Xoshiro256,
+                   w: &mut weights::WeightMap| {
+        w.insert(format!("{name}.w"), FTensor::randn(&[dout, din], 0.3, rng));
+        w.insert(format!("{name}.b"), FTensor::zeros(&[dout]));
+    };
+    lin("in_proj", d, 2, &mut rng, &mut w);
+    for p in ["block0.wq", "block0.wk", "block0.wv", "block0.wo"] {
+        lin(p, d, d, &mut rng, &mut w);
+    }
+    lin("block0.ffn.fc1", ffn, d, &mut rng, &mut w);
+    lin("block0.ffn.fc2", d, ffn, &mut rng, &mut w);
+    for p in ["block0.ln1", "block0.ln2"] {
+        w.insert(format!("{p}.gamma"), FTensor::from_vec(&[d], vec![1.0; d]));
+        w.insert(format!("{p}.beta"), FTensor::zeros(&[d]));
+    }
+    lin("head", 2, d, &mut rng, &mut w);
+    weights::save_weights_file(&w, path.to_str().unwrap()).unwrap();
+    let w2 = weights::load_weights_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(w, w2);
+    let mut cfg = ModelConfig::small(Mechanism::Inhibitor, 4, d);
+    cfg.in_features = 2;
+    cfg.head = TaskHead::Classify(2);
+    let model = weights::build_model(&cfg, &w2).unwrap();
+    let x = ITensor::random(&[4, 2], -50, 50, &mut rng);
+    let out = model.forward(&ModelInput::Features(x));
+    assert_eq!(out.dims(), &[1, 2]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn exported_artifact_weights_load_when_present() {
+    // When `make artifacts` has run, the real exported weights must load
+    // and build the model that matches the manifest config.
+    let path = "artifacts/model_inhibitor.weights.bin";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: {path} missing (run `make artifacts`)");
+        return;
+    }
+    let w = weights::load_weights_file(path).unwrap();
+    let mut cfg = ModelConfig::small(Mechanism::Inhibitor, 16, 32);
+    cfg.in_features = 2;
+    let model = weights::build_model(&cfg, &w).unwrap();
+    let mut rng = Xoshiro256::new(3);
+    let x = ITensor::random(&[16, 2], -100, 100, &mut rng);
+    let out = model.forward(&ModelInput::Features(x));
+    assert_eq!(out.dims(), &[1, 1]);
+}
+
+#[test]
+fn optimizer_params_actually_decode_under_the_real_scheme() {
+    // The parameter sets the optimizer emits must work when *executed*:
+    // encrypt, bootstrap with an identity LUT, decrypt — exact for every
+    // message. (Scaled-down lwe_dim for test time; noise kept at the
+    // big-n level, so the noise/margin relation only improves.)
+    use inhibitor::optimizer::{optimize, profile, SearchConfig};
+    use inhibitor::tfhe::{bootstrap::Lut, ClientKey, Encoder};
+    let prof = profile(Mechanism::Inhibitor, 2, 2, 3);
+    let opt = optimize(&prof, SearchConfig::default()).expect("feasible params");
+    let mut p = opt.params;
+    p.lwe_dim = 256;
+    let mut rng = Xoshiro256::new(11);
+    let ck = ClientKey::generate(p, &mut rng);
+    let sk = ck.server_key(&mut rng);
+    let enc = Encoder::new(p);
+    let lut = Lut::from_fn(&p, |m| m);
+    for m in 0..p.message_space().min(16) {
+        let out = enc.decrypt_raw(&sk.pbs(&enc.encrypt_raw(m, &ck, &mut rng), &lut), &ck);
+        assert_eq!(out, m, "optimizer-selected params must decode m={m}");
+    }
+}
+
+#[test]
+fn full_stack_quant_model_both_mechanisms_same_input() {
+    // Smoke the model across mechanisms with identical inputs and confirm
+    // outputs are finite, in-range, and mechanism-dependent.
+    let mut rng = Xoshiro256::new(21);
+    let x = ITensor::random(&[16, 16], -80, 80, &mut rng);
+    let mut outs = Vec::new();
+    for m in [Mechanism::DotProduct, Mechanism::Inhibitor, Mechanism::InhibitorSigned] {
+        let cfg = ModelConfig::small(m, 16, 16);
+        let model = QTransformer::random(cfg, 777);
+        let out = model.forward(&ModelInput::Features(x.clone()));
+        out.check_bits(32).unwrap();
+        outs.push(out.data[0]);
+    }
+    assert!(outs[0] != outs[1] || outs[1] != outs[2], "mechanisms should differ: {outs:?}");
+}
