@@ -1,12 +1,19 @@
-//! PBS micro-benchmarks: per-operation cost of every TFHE primitive, and
-//! the cost-model calibration data (measured vs modeled PBS time across
-//! parameter sets). This is the §Perf instrument for L3's FHE hot path.
+//! PBS micro-benchmarks: per-operation cost of every TFHE primitive, the
+//! cost-model calibration data (measured vs modeled PBS time across
+//! parameter sets), and the batched parallel PBS engine sweep
+//! (batch-size × thread-count). This is the §Perf instrument for L3's
+//! FHE hot path; it writes a machine-readable throughput record to
+//! `BENCH_pbs.json` so the perf trajectory is tracked across PRs.
 //!
 //!   cargo bench --bench pbs_microbench
 
 use inhibitor::bench_harness::{bench, BenchConfig};
 use inhibitor::optimizer::cost::pbs_cost;
-use inhibitor::tfhe::{bootstrap::Lut, ClientKey, Encoder, FheContext, TfheParams};
+use inhibitor::tfhe::lwe::LweCiphertext;
+use inhibitor::tfhe::{
+    bootstrap::Lut, ClientKey, Encoder, FheContext, PreparedLut, TfheParams,
+};
+use inhibitor::util::json::Json;
 use inhibitor::util::prng::Xoshiro256;
 
 fn main() {
@@ -36,6 +43,100 @@ fn main() {
         "  PBS / linear-op cost ratio: {:.0}×  (the paper's whole premise)",
         one_pbs / linear
     );
+
+    // === Prepared-LUT accumulator caching: single-thread latency =========
+    println!("\n=== Prepared LUT vs per-call accumulator rebuild (1 thread) ===");
+    let sk = &ctx.sk;
+    let enc = Encoder::new(p);
+    let ct1 = enc.encrypt_raw(1, &ck, &mut rng);
+    let lut = Lut::from_fn(&p, |m| m);
+    let prepared = sk.prepare_lut(&lut);
+    let m_rebuild = bench("pbs (rebuild accumulator per call)", cfg, || sk.pbs(&ct1, &lut));
+    let m_prepared = bench("pbs (prepared accumulator)", cfg, || {
+        sk.pbs_prepared(&ct1, &prepared)
+    });
+    let mut scratch = sk.scratch();
+    let m_scratch = bench("pbs (prepared + reused scratch)", cfg, || {
+        sk.pbs_prepared_with_scratch(&ct1, &prepared, &mut scratch)
+    });
+    for m in [&m_rebuild, &m_prepared, &m_scratch] {
+        println!("  {}", m.summary());
+    }
+    let single_speedup = m_rebuild.mean_s / m_scratch.mean_s;
+    println!("  single-thread speedup vs rebuild baseline: {single_speedup:.3}×");
+
+    // === Batch × thread sweep ============================================
+    println!("\n=== pbs_batch throughput: batch-size × thread-count sweep ===");
+    let space = p.message_space();
+    let cts: Vec<LweCiphertext> =
+        (0..128u64).map(|i| enc.encrypt_raw(i % space, &ck, &mut rng)).collect();
+    let thread_counts = [1usize, 2, 4, 8];
+    println!(
+        "{:>6} {:>8} {:>12} {:>12} {:>10}",
+        "batch", "threads", "total", "PBS/sec", "speedup"
+    );
+    let mut sweep_records = Vec::new();
+    for &batch in &[16usize, 64, 128] {
+        let jobs: Vec<(&LweCiphertext, &PreparedLut)> =
+            cts[..batch].iter().map(|c| (c, &prepared)).collect();
+        let mut base_pbs_per_sec = 0.0f64;
+        for &threads in &thread_counts {
+            let samples = if batch >= 128 { 8 } else { 12 };
+            let m = bench(
+                &format!("pbs_batch b={batch} t={threads}"),
+                BenchConfig { warmup_iters: 1, samples, inner_iters: 1 },
+                || sk.pbs_batch(&jobs, threads),
+            );
+            let pbs_per_sec = batch as f64 / m.mean_s;
+            if threads == 1 {
+                base_pbs_per_sec = pbs_per_sec;
+            }
+            let speedup = pbs_per_sec / base_pbs_per_sec;
+            println!(
+                "{:>6} {:>8} {:>12} {:>12.1} {:>9.2}x",
+                batch,
+                threads,
+                inhibitor::bench_harness::Measurement::fmt_time(m.mean_s),
+                pbs_per_sec,
+                speedup
+            );
+            sweep_records.push(Json::obj(vec![
+                ("batch", Json::num(batch as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("mean_s", Json::num(m.mean_s)),
+                ("ci95_s", Json::num(m.ci95_s)),
+                ("pbs_per_sec", Json::num(pbs_per_sec)),
+                ("speedup_vs_1_thread", Json::num(speedup)),
+            ]));
+        }
+    }
+
+    // === Machine-readable perf record ====================================
+    let record = Json::obj(vec![
+        ("bench", Json::str("pbs_microbench")),
+        (
+            "params",
+            Json::obj(vec![
+                ("lwe_dim", Json::num(p.lwe_dim as f64)),
+                ("poly_size", Json::num(p.poly_size as f64)),
+                ("message_bits", Json::num(p.message_bits as f64)),
+            ]),
+        ),
+        (
+            "single_thread",
+            Json::obj(vec![
+                ("rebuild_s", Json::num(m_rebuild.mean_s)),
+                ("prepared_s", Json::num(m_prepared.mean_s)),
+                ("prepared_scratch_s", Json::num(m_scratch.mean_s)),
+                ("speedup_vs_rebuild", Json::num(single_speedup)),
+            ]),
+        ),
+        ("sweep", Json::arr(sweep_records)),
+    ]);
+    match std::fs::write("BENCH_pbs.json", format!("{record}\n")) {
+        Ok(()) => println!("\nwrote BENCH_pbs.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_pbs.json: {e}"),
+    }
 
     println!("\n=== Cost model calibration: measured vs modeled across parameter sets ===");
     println!(

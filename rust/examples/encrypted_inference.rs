@@ -45,6 +45,7 @@ fn main() {
     let blob = sess.register(bundle);
     println!("client: uploaded {} ciphertexts as bundle {blob}", 3 * seq * dim);
 
+    println!("server: PBS engine running {} worker thread(s)", sess.ctx.threads());
     bootstrap::reset_pbs_count();
     let t0 = Instant::now();
     let resp = coord

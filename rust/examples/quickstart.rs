@@ -14,18 +14,36 @@ use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::{ClientKey, FheContext, TfheParams};
 use inhibitor::util::prng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
-    // --- 1. PJRT float path (requires `make artifacts`) ------------------
-    match inhibitor::runtime::Registry::open("artifacts") {
-        Ok(mut reg) => {
-            let engine = reg.attention_engine("inhibitor", 32)?;
-            let n = 32 * 64;
-            let q = vec![0.25f32; n];
-            let out = engine.run_f32(&[q.clone(), q.clone(), q])?;
-            println!("[pjrt]  inhibitor attention T=32 d=64 -> {} outputs, H[0]={:.4}", out.len(), out[0]);
-        }
-        Err(e) => println!("[pjrt]  skipped ({e:#}) — run `make artifacts`"),
+/// PJRT float path (requires `make artifacts` and the `xla` feature).
+#[cfg(feature = "xla")]
+fn pjrt_demo() {
+    let run = || -> Result<(), String> {
+        let mut reg =
+            inhibitor::runtime::Registry::open("artifacts").map_err(|e| format!("{e:#}"))?;
+        let engine = reg.attention_engine("inhibitor", 32).map_err(|e| format!("{e:#}"))?;
+        let n = 32 * 64;
+        let q = vec![0.25f32; n];
+        let out = engine.run_f32(&[q.clone(), q.clone(), q]).map_err(|e| format!("{e:#}"))?;
+        println!(
+            "[pjrt]  inhibitor attention T=32 d=64 -> {} outputs, H[0]={:.4}",
+            out.len(),
+            out[0]
+        );
+        Ok(())
+    };
+    if let Err(e) = run() {
+        println!("[pjrt]  skipped ({e}) — run `make artifacts`");
     }
+}
+
+#[cfg(not(feature = "xla"))]
+fn pjrt_demo() {
+    println!("[pjrt]  skipped (built without the `xla` feature)");
+}
+
+fn main() {
+    // --- 1. PJRT float path ----------------------------------------------
+    pjrt_demo();
 
     // --- 2. quantized integer path ---------------------------------------
     let cfg = ModelConfig::small(Mechanism::Inhibitor, 16, 32);
@@ -55,5 +73,4 @@ fn main() -> anyhow::Result<()> {
     println!("[fhe]   encrypted inhibitor H = {:?} (plaintext mirror {:?})", dec.data, want.data);
     assert_eq!(dec, want, "encrypted result must match the plaintext mirror");
     println!("quickstart ok");
-    Ok(())
 }

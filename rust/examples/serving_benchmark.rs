@@ -37,7 +37,9 @@ fn main() {
             BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2), queue_cap: 8192 },
         );
     }
-    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let have_artifacts = cfg!(feature = "xla")
+        && std::path::Path::new("artifacts/manifest.json").exists();
+    #[cfg(feature = "xla")]
     if have_artifacts {
         coord.add_pjrt_model(
             "artifacts".into(),

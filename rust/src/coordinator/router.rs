@@ -16,6 +16,7 @@ use super::scheduler::Scheduler;
 use crate::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe};
 use crate::model::{ModelInput, QTransformer};
 use crate::tensor::ITensor;
+#[cfg(feature = "xla")]
 use std::path::PathBuf;
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -45,6 +46,12 @@ impl Coordinator {
 
     pub fn metrics(&self) -> &super::metrics::Metrics {
         &self.scheduler.metrics
+    }
+
+    /// PBS worker threads granted to encrypted engines registered from
+    /// here on (default: `FHE_THREADS` env or all cores).
+    pub fn set_fhe_threads(&mut self, n: usize) {
+        self.scheduler.set_fhe_threads(n);
     }
 
     /// Register a quantized integer model under `quant/<mechanism>`.
@@ -90,7 +97,10 @@ impl Coordinator {
     }
 
     /// Register a PJRT model engine under `pjrt/<name>`. The artifact is
-    /// compiled on first use inside the worker thread.
+    /// compiled on first use inside the worker thread. Only available
+    /// with the `xla` feature (the PJRT runtime needs the vendored `xla`
+    /// crate).
+    #[cfg(feature = "xla")]
     pub fn add_pjrt_model(&mut self, artifacts_dir: PathBuf, model_name: &str, policy: BatchPolicy) {
         let key = EnginePath::Pjrt(model_name.into()).batch_key();
         let name = model_name.to_string();
@@ -143,6 +153,9 @@ impl Coordinator {
             .keymgr
             .session(session_id)
             .ok_or_else(|| format!("unknown session {session_id}"))?;
+        // Grant this session's context the scheduler's PBS worker budget:
+        // the circuit's level-synchronous stages fan out across it.
+        session.ctx.set_threads(self.scheduler.fhe_threads());
         let key = EnginePath::Encrypted { session: session_id, mechanism: mechanism.into() }
             .batch_key();
         let mech = mechanism.to_string();
@@ -270,5 +283,23 @@ mod tests {
         let mut c = Coordinator::new(RoutePolicy::PreferQuant);
         let err = c.add_fhe_engine(99, "inhibitor", 2, 2, BatchPolicy::default()).unwrap_err();
         assert!(err.contains("unknown session"), "{err}");
+    }
+
+    #[test]
+    fn fhe_engine_applies_scheduler_thread_budget() {
+        use crate::tfhe::{ClientKey, FheContext, TfheParams};
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::new(12);
+        let ck = ClientKey::generate(TfheParams::test_small(), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+        c.set_fhe_threads(3);
+        let sid = c.keymgr.create_session(ctx);
+        c.add_fhe_engine(sid, "inhibitor", 2, 2, BatchPolicy::default()).unwrap();
+        assert_eq!(
+            c.keymgr.session(sid).unwrap().ctx.threads(),
+            3,
+            "registering the engine must grant the session the scheduler's PBS budget"
+        );
     }
 }

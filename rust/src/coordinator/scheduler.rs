@@ -38,6 +38,10 @@ pub struct Scheduler {
     pending: PendingMap,
     workers: Vec<EngineWorker>,
     next_id: std::sync::atomic::AtomicU64,
+    /// PBS worker threads granted to each encrypted engine's batch stages
+    /// (`FHE_THREADS` env or all cores by default). The router applies
+    /// this to a session's `FheContext` when its engine is registered.
+    fhe_threads: usize,
 }
 
 impl Scheduler {
@@ -47,7 +51,19 @@ impl Scheduler {
             pending: Arc::new(Mutex::new(std::collections::HashMap::new())),
             workers: Vec::new(),
             next_id: std::sync::atomic::AtomicU64::new(1),
+            fhe_threads: crate::tfhe::default_fhe_threads(),
         }
+    }
+
+    /// PBS worker threads handed to encrypted engines.
+    pub fn fhe_threads(&self) -> usize {
+        self.fhe_threads
+    }
+
+    /// Override the per-engine PBS worker count (serving-side config;
+    /// applies to engines registered after the call).
+    pub fn set_fhe_threads(&mut self, n: usize) {
+        self.fhe_threads = n.max(1);
     }
 
     /// Register an engine under `name` with its batching policy; spawns

@@ -14,6 +14,15 @@
 //! Each circuit has a plaintext *mirror* computing the identical integer
 //! function; tests assert ciphertext == mirror on every coordinate, which
 //! pins both the circuit logic and the noise budget.
+//!
+//! Both forwards are organized as **level-synchronous stages**: each
+//! stage gathers every independent PBS of one circuit level (all `T²·d`
+//! score-abs jobs, the `T²` fused scale-shift-ReLU jobs, …) and issues a
+//! single `pbs_many` batch, which the context fans across its worker
+//! pool. Because a PBS is deterministic and the linear ops between
+//! stages are applied in the original per-output order, the staged
+//! circuits produce bit-identical ciphertexts to the sequential
+//! formulation — the mirror-equality and exact-PBS-count tests pin this.
 
 use crate::tfhe::bootstrap::ClientKey;
 use crate::tfhe::ops::{CtInt, FheContext};
@@ -57,6 +66,20 @@ fn scaled_shift_relu(x: i64, gamma: f64, alpha_q: i64) -> i64 {
     ((x as f64 / gamma).round() as i64 - alpha_q).max(0)
 }
 
+/// Square-LUT inputs for a batch of eq.-1 products `a·b`: `a+b` for every
+/// pair (first half), then `a−b` (second half). After the square batch,
+/// product `idx` is `sq[idx] − sq[pairs.len() + idx]`.
+fn mul_halves(ctx: &FheContext, pairs: &[(&CtInt, &CtInt)]) -> Vec<CtInt> {
+    let mut out = Vec::with_capacity(2 * pairs.len());
+    for &(a, b) in pairs {
+        out.push(ctx.add(a, b));
+    }
+    for &(a, b) in pairs {
+        out.push(ctx.sub(a, b));
+    }
+    out
+}
+
 /// Encrypted Inhibitor attention head.
 pub struct InhibitorFhe {
     /// γ literal (paper: √d).
@@ -71,36 +94,54 @@ impl InhibitorFhe {
     }
 
     /// Encrypted forward: Q, K, V are `[T, d]` ciphertext matrices.
+    ///
+    /// Level-synchronous: score abs-batch → fused scale-shift-ReLU batch
+    /// → inhibition ReLU batch → refresh batch, one `pbs_many` per stage.
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         assert_eq!((k.rows, k.cols), (t, d));
         assert_eq!((v.rows, v.cols), (t, d));
         let gamma = self.gamma;
         let alpha_q = self.alpha_q;
-        // Scores Z'_ij = relu(round(Σ_k |q_ik − k_jk| / γ) − α).
-        let mut z: Vec<CtInt> = Vec::with_capacity(t * t);
+        // Stage 1 — |q_ik − k_jk| for every (i, j, k): the subtractions
+        // are free; the T²·d abs PBS are independent → one batch.
+        let mut deltas = Vec::with_capacity(t * t * d);
         for i in 0..t {
             for j in 0..t {
-                // Σ_k |q_ik − k_jk|: d abs PBS + free adds.
-                let terms: Vec<CtInt> =
-                    (0..d).map(|kk| ctx.abs(&ctx.sub(q.at(i, kk), k.at(j, kk)))).collect();
-                let dist = ctx.sum(&terms);
-                // Fused 1/γ + shift + ReLU in one PBS.
-                z.push(ctx.pbs_fn(&dist, |x| scaled_shift_relu(x, gamma, alpha_q)));
+                for kk in 0..d {
+                    deltas.push(ctx.sub(q.at(i, kk), k.at(j, kk)));
+                }
             }
         }
-        // Inhibition H_ik = Σ_j (v_jk − z_ij)⁺: T relu PBS per output + adds.
-        let mut out = Vec::with_capacity(t * d);
+        let abs = ctx.abs_many(&deltas);
+        drop(deltas);
+        // Stage 2 — scores Z'_ij = relu(round(Σ_k |·| / γ) − α): free adds
+        // per score, then one fused scale-shift-ReLU PBS batch. The LUT is
+        // prepared once per head (not per score).
+        let dists: Vec<CtInt> =
+            (0..t * t).map(|ij| ctx.sum(&abs[ij * d..(ij + 1) * d])).collect();
+        drop(abs);
+        let ssr = ctx.prepared_fn(|x| scaled_shift_relu(x, gamma, alpha_q));
+        let z = ctx.pbs_many(&dists, &ssr);
+        // Stage 3 — inhibition H_ik = Σ_j (v_jk − z_ij)⁺: T²·d ReLU batch,
+        // then free adds per output.
+        let mut inh = Vec::with_capacity(t * d * t);
         for i in 0..t {
             for kk in 0..d {
-                let terms: Vec<CtInt> =
-                    (0..t).map(|j| ctx.relu(&ctx.sub(v.at(j, kk), &z[i * t + j]))).collect();
-                out.push(ctx.sum(&terms));
+                for j in 0..t {
+                    inh.push(ctx.sub(v.at(j, kk), &z[i * t + j]));
+                }
             }
         }
-        // Output refresh PBS (identity): resets noise before the ciphertext
-        // leaves the head (mirrors the requantization PBS in the profile).
-        let out = out.iter().map(|c| ctx.pbs_fn(c, |x| x)).collect();
+        let relus = ctx.relu_many(&inh);
+        drop(inh);
+        let sums: Vec<CtInt> =
+            (0..t * d).map(|ik| ctx.sum(&relus[ik * t..(ik + 1) * t])).collect();
+        drop(relus);
+        // Stage 4 — output refresh (identity PBS batch): resets noise
+        // before the ciphertext leaves the head (mirrors the
+        // requantization PBS in the profile).
+        let out = ctx.refresh_many(&sums);
         CtMatrix { rows: t, cols: d, data: out }
     }
 
@@ -148,42 +189,85 @@ impl DotProductFhe {
     }
 
     /// Encrypted forward.
+    ///
+    /// Level-synchronous: score square-batch (the 2 PBS halves of every
+    /// ct×ct product, eq. 1) → exp batch → reciprocal batch → probability
+    /// square-batch → attend square-batch → rescale batch.
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         let max_out = (1i64 << self.prob_bits) - 1; // LUT output magnitude
-        // Scores S_ij = Σ_k q_ik·k_jk — 2 PBS per product (eq. 1).
-        let mut e: Vec<CtInt> = Vec::with_capacity(t * t);
+        // Stage 1 — scores S_ij = Σ_k q_ik·k_jk. Each product is
+        // PBS(x²/4; a+b) − PBS(x²/4; a−b); all 2·T²·d square jobs are
+        // independent → one batch (sums first, then differences). Stage
+        // inputs are built as statement temporaries so each stage's
+        // scratch is freed before the next one peaks.
+        let n_prod = t * t * d;
+        let mut pairs = Vec::with_capacity(n_prod);
         for i in 0..t {
             for j in 0..t {
-                let prods: Vec<CtInt> =
-                    (0..d).map(|kk| ctx.ct_mul(q.at(i, kk), k.at(j, kk))).collect();
-                let s = ctx.sum(&prods);
-                // exp LUT (1 PBS).
-                e.push(ctx.pbs_fn(&s, |x| self.exp_lut(x, max_out)));
+                for kk in 0..d {
+                    pairs.push((q.at(i, kk), k.at(j, kk)));
+                }
             }
         }
-        // Row normalizers and reciprocal LUT (1 PBS per row).
-        let recip_num = max_out; // r_i = round(max_out / Σ_j e_ij)
-        let mut r: Vec<CtInt> = Vec::with_capacity(t);
+        let sq = ctx.square_quarter_many(&mul_halves(ctx, &pairs));
+        drop(pairs);
+        let scores: Vec<CtInt> = (0..t * t)
+            .map(|ij| {
+                let prods: Vec<CtInt> = (0..d)
+                    .map(|kk| ctx.sub(&sq[ij * d + kk], &sq[n_prod + ij * d + kk]))
+                    .collect();
+                ctx.sum(&prods)
+            })
+            .collect();
+        drop(sq);
+        // Stage 2 — exp LUT batch (T² PBS, one table per head).
+        let exp = ctx.prepared_fn(|x| self.exp_lut(x, max_out));
+        let e = ctx.pbs_many(&scores, &exp);
+        // Stage 3 — row normalizers r_i = round(max_out / Σ_j e_ij): free
+        // row sums, then the shared reciprocal table (see
+        // `FheContext::prepared_recip` — the softmax normalizer's single
+        // definition), one PBS per row.
+        let row_sums: Vec<CtInt> = (0..t).map(|i| ctx.sum(&e[i * t..(i + 1) * t])).collect();
+        let recip = ctx.prepared_recip(max_out);
+        let r = ctx.pbs_many(&row_sums, &recip);
+        // Stage 4 — probabilities p_ij = e_ij · r_i: 2·T² square jobs
+        // (fixed point with max_out ≈ 1.0).
+        let mut pairs = Vec::with_capacity(t * t);
         for i in 0..t {
-            let row: Vec<CtInt> = (0..t).map(|j| e[i * t + j].clone()).collect();
-            let s = ctx.sum(&row);
-            r.push(ctx.pbs_fn(&s, move |x| if x > 0 { (recip_num + x / 2) / x } else { max_out }));
+            for j in 0..t {
+                pairs.push((&e[i * t + j], &r[i]));
+            }
         }
-        // p_ij = e_ij · r_i (2 PBS) — fixed point with max_out ≈ 1.0.
-        // H_ik = Σ_j p_ij · v_jk (2 PBS each) then rescale by 1/max_out (PBS).
-        let mut out = Vec::with_capacity(t * d);
+        let p_sq = ctx.square_quarter_many(&mul_halves(ctx, &pairs));
+        drop(pairs);
+        let probs: Vec<CtInt> =
+            (0..t * t).map(|ij| ctx.sub(&p_sq[ij], &p_sq[t * t + ij])).collect();
+        drop(p_sq);
+        // Stage 5 — attend V: H_ik = Σ_j p_ij · v_jk, 2·T²·d square jobs.
+        let n_att = t * d * t;
+        let mut pairs = Vec::with_capacity(n_att);
         for i in 0..t {
-            let probs: Vec<CtInt> = (0..t).map(|j| ctx.ct_mul(&e[i * t + j], &r[i])).collect();
             for kk in 0..d {
-                let terms: Vec<CtInt> =
-                    (0..t).map(|j| ctx.ct_mul(&probs[j], v.at(j, kk))).collect();
-                let acc = ctx.sum(&terms);
-                out.push(ctx.pbs_fn(&acc, |x| {
-                    (x as f64 / max_out as f64).round() as i64
-                }));
+                for j in 0..t {
+                    pairs.push((&probs[i * t + j], v.at(j, kk)));
+                }
             }
         }
+        let a_sq = ctx.square_quarter_many(&mul_halves(ctx, &pairs));
+        drop(pairs);
+        let accs: Vec<CtInt> = (0..t * d)
+            .map(|ik| {
+                let terms: Vec<CtInt> = (0..t)
+                    .map(|j| ctx.sub(&a_sq[ik * t + j], &a_sq[n_att + ik * t + j]))
+                    .collect();
+                ctx.sum(&terms)
+            })
+            .collect();
+        drop(a_sq);
+        // Stage 6 — rescale by 1/max_out (T·d PBS batch).
+        let rescale = ctx.prepared_fn(|x| (x as f64 / max_out as f64).round() as i64);
+        let out = ctx.pbs_many(&accs, &rescale);
         CtMatrix { rows: t, cols: d, data: out }
     }
 
@@ -239,6 +323,7 @@ mod tests {
 
     #[test]
     fn encrypted_inhibitor_matches_plaintext_mirror() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, ctx, mut rng) = fhe_setup(5);
         let t = 2;
         let d = 2;
@@ -262,6 +347,7 @@ mod tests {
 
     #[test]
     fn encrypted_dotprod_matches_plaintext_mirror() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, ctx, mut rng) = fhe_setup(6);
         let t = 2;
         let d = 2;

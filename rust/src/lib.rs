@@ -11,10 +11,41 @@
 //! * **L2** — a JAX transformer (`python/compile/model.py`) lowers to HLO
 //!   text artifacts; build time only.
 //! * **L3** — this crate: a serving coordinator that routes requests to a
-//!   PJRT float engine (`runtime`), a quantized integer engine
-//!   (`tensor`/`quant`/`attention`/`model`) and a real TFHE engine
-//!   (`tfhe`/`fhe_circuits`), plus the parameter optimizer (`optimizer`)
-//!   and the paper-table bench harness (`bench_tables`).
+//!   PJRT float engine (`runtime`, behind the `xla` feature), a quantized
+//!   integer engine (`tensor`/`quant`/`attention`/`model`) and a real
+//!   TFHE engine (`tfhe`/`fhe_circuits`), plus the parameter optimizer
+//!   (`optimizer`) and the paper-table bench harness (`bench_tables`).
+//!
+//! ## Batched parallel PBS engine
+//!
+//! The paper denominates every circuit cost in PBS, and the runtime's
+//! wall-clock is PBS-bound, so the TFHE layer executes bootstraps through
+//! a batched, multi-threaded engine:
+//!
+//! * **Prepared LUTs** (`tfhe::PreparedLut`): the blind-rotation
+//!   accumulator (slot replication + half-slot pre-rotation) is built
+//!   once per LUT instead of inside every `pbs` call. `FheContext` keeps
+//!   the standard tables (ReLU/abs/x²⁄4/identity) prepared and caches
+//!   arbitrary `pbs_fn` tables keyed by their message-space table, so
+//!   per-head LUTs like the Inhibitor's fused scale-shift-ReLU are built
+//!   once per head rather than `T²` times.
+//! * **Batch API** (`ServerKey::pbs_batch` / `FheContext::pbs_many`):
+//!   independent (ciphertext, LUT) jobs fan out over a
+//!   `std::thread::scope` worker pool — no external thread-pool crate —
+//!   with one reusable `ExtScratch` per worker and an exact atomic
+//!   `PBS_COUNT`. The worker count comes from the `FHE_THREADS` env var
+//!   (default: all cores) and is plumbed through the serving coordinator
+//!   (`Scheduler::set_fhe_threads`) and the benches.
+//! * **Sync audit**: `ServerKey` (bootstrap key spectra, key-switch key,
+//!   FFT plan with precomputed twiddles) and `FheContext` are immutable
+//!   shared-read state — `Send + Sync` holds structurally and is asserted
+//!   by compile-checked tests.
+//! * **Level-synchronous circuits** (`fhe_circuits`): both attention
+//!   forwards gather each circuit level's independent PBS into a single
+//!   batch (score abs → fused scale-shift-ReLU → inhibition ReLU →
+//!   refresh; square/exp/recip/probs/attend/rescale for the dot-product
+//!   baseline), preserving exact ciphertext==mirror equality and the
+//!   paper's per-head PBS counts.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
@@ -27,6 +58,7 @@ pub mod fhe_circuits;
 pub mod model;
 pub mod optimizer;
 pub mod quant;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod server;
 pub mod tensor;

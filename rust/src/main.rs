@@ -49,11 +49,14 @@ fn print_help() {
          \n\
          COMMANDS:\n\
            serve [--addr 127.0.0.1:7474] [--artifacts artifacts] [--mechanism inhibitor]\n\
-               Start the serving coordinator (quant + PJRT engines).\n\
+                 [--threads N]\n\
+               Start the serving coordinator (quant + PJRT engines); --threads\n\
+               sets the PBS worker budget for encrypted engines.\n\
            infer [--mechanism inhibitor] [--seq 16] [--dim 32]\n\
                One-shot quantized inference on random features.\n\
-           encrypt-infer [--mechanism inhibitor] [--seq 2] [--bits 5]\n\
+           encrypt-infer [--mechanism inhibitor] [--seq 2] [--bits 5] [--threads N]\n\
                Generate keys, encrypt Q/K/V, run encrypted attention, decrypt.\n\
+               (--threads overrides the FHE_THREADS PBS worker count.)\n\
            params [--seq 2,4,8,16]\n\
                Run the TFHE parameter optimizer (paper Table 2).\n\
            tables [--quick]\n\
@@ -81,11 +84,17 @@ fn cmd_serve(args: &[String]) -> i32 {
     let addr = flag(args, "--addr", "127.0.0.1:7474");
     let artifacts = flag(args, "--artifacts", "artifacts");
     let mech_s = flag(args, "--mechanism", "inhibitor");
+    let threads: usize = flag(args, "--threads", "0").parse().unwrap_or(0);
     let Some(mechanism) = Mechanism::parse(&mech_s) else {
         eprintln!("unknown mechanism '{mech_s}'");
         return 2;
     };
     let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+    if threads > 0 {
+        // PBS worker budget for encrypted engines registered on this
+        // coordinator (default: FHE_THREADS env or all cores).
+        c.set_fhe_threads(threads);
+    }
     // Quantized engines for both mechanisms (trained-weight loading uses
     // artifacts/<model>.weights.bin when present; random weights are a
     // stand-in for the serve demo otherwise).
@@ -96,14 +105,19 @@ fn cmd_serve(args: &[String]) -> i32 {
         let model = load_or_random(&artifacts, m, cfg);
         c.add_quant_engine(m.name(), model, BatchPolicy::default());
     }
-    if std::path::Path::new(&artifacts).join("manifest.json").exists() {
-        for name in ["model_inhibitor", "model_dotprod"] {
-            c.add_pjrt_model(artifacts.clone().into(), name, BatchPolicy::default());
+    #[cfg(feature = "xla")]
+    {
+        if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+            for name in ["model_inhibitor", "model_dotprod"] {
+                c.add_pjrt_model(artifacts.clone().into(), name, BatchPolicy::default());
+            }
+            println!("PJRT engines registered from {artifacts}/");
+        } else {
+            println!("no {artifacts}/manifest.json — serving quantized engines only");
         }
-        println!("PJRT engines registered from {artifacts}/");
-    } else {
-        println!("no {artifacts}/manifest.json — serving quantized engines only");
     }
+    #[cfg(not(feature = "xla"))]
+    println!("built without `xla` — serving quantized engines only ({artifacts}/ ignored)");
     let c = Arc::new(c);
     println!("listening on {addr} (JSON-lines; see rust/src/server/proto.rs)");
     match inhibitor::server::serve(c, &addr, |a| println!("bound {a}")) {
@@ -170,6 +184,7 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
     let mech_s = flag(args, "--mechanism", "inhibitor");
     let seq: usize = flag(args, "--seq", "2").parse().unwrap_or(2);
     let bits: u32 = flag(args, "--bits", "5").parse().unwrap_or(5);
+    let threads: usize = flag(args, "--threads", "0").parse().unwrap_or(0);
     let dim = 2usize; // the paper's encrypted experiments use d=2
     let mut rng = Xoshiro256::new(2024);
     let params = TfheParams::test_for_bits(bits);
@@ -179,6 +194,10 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
     );
     let ck = ClientKey::generate(params, &mut rng);
     let ctx = FheContext::new(ck.server_key(&mut rng));
+    if threads > 0 {
+        ctx.set_threads(threads);
+    }
+    println!("PBS engine: {} worker thread(s)", ctx.threads());
     let q = ITensor::random(&[seq, dim], -2, 2, &mut rng);
     let k = ITensor::random(&[seq, dim], -2, 2, &mut rng);
     let v = ITensor::random(&[seq, dim], 0, 3, &mut rng);
@@ -273,6 +292,7 @@ fn cmd_selftest() -> i32 {
         println!("  PBS successor-LUT exact over the whole message space ok");
     }
     println!("[3/3] PJRT artifacts...");
+    #[cfg(feature = "xla")]
     match inhibitor::runtime::Registry::open("artifacts") {
         Ok(mut reg) => {
             println!(
@@ -299,6 +319,8 @@ fn cmd_selftest() -> i32 {
         }
         Err(e) => println!("  (no artifacts: {e:#} — run `make artifacts`)"),
     }
+    #[cfg(not(feature = "xla"))]
+    println!("  (built without the `xla` feature — skipped)");
     println!("selftest ok");
     0
 }

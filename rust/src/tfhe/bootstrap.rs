@@ -10,9 +10,29 @@
 //! encoded as `m·Δ`, `Δ = 2^(63−p)`. The padding bit keeps the phase in
 //! the first half of the torus so the negacyclic wrap never flips the
 //! LUT sign. A half-slot pre-rotation centres the rounding window.
+//!
+//! ## Batched execution engine
+//!
+//! Two properties make the PBS layer batchable:
+//!
+//! * A PBS is deterministic server-side (no fresh randomness), so a batch
+//!   of independent (ciphertext, LUT) jobs can run in any order — or on
+//!   any thread — and produce bit-identical outputs.
+//! * [`ServerKey`] is immutable after key generation: the bootstrap key,
+//!   key-switch key and FFT plan (twiddles precomputed in
+//!   `NegacyclicFft::new`) are plain owned data with no interior
+//!   mutability, so `ServerKey: Send + Sync` holds structurally (asserted
+//!   by a compile-checked test below) and one key can serve many workers.
+//!
+//! [`PreparedLut`] hoists the accumulator construction (slot replication
+//! + half-slot pre-rotation, previously rebuilt inside every `pbs` call)
+//! out of the hot loop; [`ServerKey::pbs_batch`] fans independent jobs
+//! across a `std::thread::scope` worker pool with one reusable
+//! [`ExtScratch`] per worker. `PBS_COUNT` stays exact under concurrency
+//! (atomic increment per bootstrap).
 
 use super::fft::NegacyclicFft;
-use super::ggsw::{GgswCiphertext, GgswFourier};
+use super::ggsw::{ExtScratch, GgswCiphertext, GgswFourier};
 use super::glwe::{GlweCiphertext, GlweSecretKey};
 use super::keyswitch::KeySwitchKey;
 use super::lwe::{LweCiphertext, LweSecretKey};
@@ -114,6 +134,19 @@ impl Lut {
     }
 }
 
+/// A LUT whose blind-rotation accumulator is fully precomputed: the
+/// slot-replicated test vector with its half-slot pre-rotation already
+/// applied. Building this once per LUT (instead of once per `pbs` call)
+/// removes a GLWE allocation, an `N`-coefficient replication fill and a
+/// monomial rotation from every bootstrap; since monomial rotations
+/// compose exactly (`rotate(a)∘rotate(b) = rotate(a+b)` over coefficient
+/// shuffles), the prepared path is bit-identical to the on-the-fly one.
+#[derive(Clone, Debug)]
+pub struct PreparedLut {
+    /// Trivial GLWE holding the pre-rotated test vector.
+    acc: GlweCiphertext,
+}
+
 impl ServerKey {
     /// Accumulator polynomial for `lut`: slot `m` replicated over
     /// `N / 2^p` coefficients, with a half-slot pre-rotation so that the
@@ -137,37 +170,104 @@ impl ServerKey {
         acc.rotate_monomial((2 * n - slot / 2) as u64)
     }
 
+    /// Precompute the reusable accumulator for `lut`.
+    pub fn prepare_lut(&self, lut: &Lut) -> PreparedLut {
+        PreparedLut { acc: self.test_vector(lut) }
+    }
+
+    /// A fresh scratch buffer sized for this key's CMux chain; reuse one
+    /// per worker thread across many PBS.
+    pub fn scratch(&self) -> ExtScratch {
+        ExtScratch::new(self.params.poly_size, self.params.glwe_dim, self.params.pbs_decomp)
+    }
+
     /// Blind rotation: returns GLWE whose constant coefficient encrypts
     /// `lut[decode(ct)]`.
-    fn blind_rotate(&self, ct: &LweCiphertext, lut: &Lut) -> GlweCiphertext {
+    fn blind_rotate(
+        &self,
+        ct: &LweCiphertext,
+        lut: &PreparedLut,
+        scratch: &mut ExtScratch,
+    ) -> GlweCiphertext {
         let n2 = (2 * self.params.poly_size) as u64;
         // Mod-switch mask and body to Z_{2N}.
         let switch = |t: Torus| -> u64 { super::torus::round_to_modulus(t, n2) };
         let b_t = switch(ct.body);
-        let mut acc = self.test_vector(lut).rotate_monomial(n2 - b_t);
-        // One scratch allocation per PBS, shared by all n CMux steps.
-        let mut scratch = super::ggsw::ExtScratch::new(
-            self.params.poly_size,
-            self.params.glwe_dim,
-            self.params.pbs_decomp,
-        );
+        let mut acc = lut.acc.rotate_monomial(n2 - b_t);
         for (a, ggsw) in ct.mask.iter().zip(self.bsk.iter()) {
             let a_t = switch(*a);
             if a_t == 0 {
                 continue;
             }
-            ggsw.cmux_rotate_assign(&self.fft, &mut acc, a_t, &mut scratch);
+            ggsw.cmux_rotate_assign(&self.fft, &mut acc, a_t, scratch);
         }
         acc
     }
 
     /// Full programmable bootstrap: evaluate `lut` on the encrypted
     /// message and return a fresh-noise ciphertext under the small key.
+    /// Convenience path — builds the accumulator per call; hot paths use
+    /// [`Self::prepare_lut`] + [`Self::pbs_prepared`] / [`Self::pbs_batch`].
     pub fn pbs(&self, ct: &LweCiphertext, lut: &Lut) -> LweCiphertext {
+        self.pbs_prepared(ct, &self.prepare_lut(lut))
+    }
+
+    /// PBS against a precomputed accumulator (allocates its own scratch).
+    pub fn pbs_prepared(&self, ct: &LweCiphertext, lut: &PreparedLut) -> LweCiphertext {
+        let mut scratch = self.scratch();
+        self.pbs_prepared_with_scratch(ct, lut, &mut scratch)
+    }
+
+    /// PBS against a precomputed accumulator with a caller-owned scratch
+    /// buffer — the zero-per-call-allocation hot path of the batch engine.
+    pub fn pbs_prepared_with_scratch(
+        &self,
+        ct: &LweCiphertext,
+        lut: &PreparedLut,
+        scratch: &mut ExtScratch,
+    ) -> LweCiphertext {
         PBS_COUNT.fetch_add(1, Ordering::Relaxed);
-        let acc = self.blind_rotate(ct, lut);
+        let acc = self.blind_rotate(ct, lut, scratch);
         let extracted = acc.sample_extract(0);
         self.ksk.keyswitch(&extracted)
+    }
+
+    /// Execute a batch of independent PBS jobs across `threads` workers.
+    ///
+    /// Jobs are split into contiguous chunks, one `std::thread::scope`
+    /// worker per chunk, each with its own reusable [`ExtScratch`].
+    /// Output order matches input order, and every output ciphertext is
+    /// bit-identical to what sequential execution produces (PBS is
+    /// deterministic); `PBS_COUNT` advances by exactly `jobs.len()`.
+    pub fn pbs_batch(
+        &self,
+        jobs: &[(&LweCiphertext, &PreparedLut)],
+        threads: usize,
+    ) -> Vec<LweCiphertext> {
+        if jobs.is_empty() {
+            return Vec::new();
+        }
+        let threads = threads.max(1).min(jobs.len());
+        if threads == 1 {
+            let mut scratch = self.scratch();
+            return jobs
+                .iter()
+                .map(|&(ct, lut)| self.pbs_prepared_with_scratch(ct, lut, &mut scratch))
+                .collect();
+        }
+        let chunk = (jobs.len() + threads - 1) / threads;
+        let mut out: Vec<Option<LweCiphertext>> = jobs.iter().map(|_| None).collect();
+        std::thread::scope(|s| {
+            for (job_chunk, out_chunk) in jobs.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                s.spawn(move || {
+                    let mut scratch = self.scratch();
+                    for (&(ct, lut), slot) in job_chunk.iter().zip(out_chunk.iter_mut()) {
+                        *slot = Some(self.pbs_prepared_with_scratch(ct, lut, &mut scratch));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|c| c.expect("worker filled every slot")).collect()
     }
 
     /// Number of CMux levels (= LWE dim); used by cost reporting.
@@ -190,6 +290,7 @@ mod tests {
 
     #[test]
     fn pbs_identity_over_full_message_space() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, sk, mut rng) = setup();
         let enc = Encoder::new(ck.params);
         let lut = Lut::from_fn(&ck.params, |m| m);
@@ -203,6 +304,7 @@ mod tests {
 
     #[test]
     fn pbs_evaluates_nontrivial_function() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, sk, mut rng) = setup();
         let enc = Encoder::new(ck.params);
         let space = ck.params.message_space();
@@ -218,6 +320,7 @@ mod tests {
     fn pbs_resets_noise() {
         // Chain several PBS; if noise were accumulating the decodes would
         // eventually fail. 8 sequential identity bootstraps must stay exact.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, sk, mut rng) = setup();
         let enc = Encoder::new(ck.params);
         let lut = Lut::from_fn(&ck.params, |m| m);
@@ -231,6 +334,7 @@ mod tests {
 
     #[test]
     fn pbs_counter_increments() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, sk, mut rng) = setup();
         let enc = Encoder::new(ck.params);
         let lut = Lut::from_fn(&ck.params, |m| m);
@@ -239,5 +343,54 @@ mod tests {
         let _ = sk.pbs(&ct, &lut);
         let _ = sk.pbs(&ct, &lut);
         assert_eq!(pbs_count() - before, 2);
+    }
+
+    #[test]
+    fn server_key_is_send_and_sync() {
+        // The Sync audit the batch engine rests on: the bootstrap key
+        // (GgswFourier spectra), key-switch key and FFT plan are plain
+        // owned data — shared-read safe across scoped worker threads.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ServerKey>();
+        assert_send_sync::<PreparedLut>();
+        assert_send_sync::<Lut>();
+        assert_send_sync::<crate::tfhe::ops::FheContext>();
+    }
+
+    #[test]
+    fn prepared_lut_is_bit_identical_to_on_the_fly_path() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, sk, mut rng) = setup();
+        let enc = Encoder::new(ck.params);
+        let space = ck.params.message_space();
+        let lut = Lut::from_fn(&ck.params, |m| (3 * m + 2) % space);
+        let prepared = sk.prepare_lut(&lut);
+        for m in 0..space {
+            let ct = enc.encrypt_raw(m, &ck, &mut rng);
+            let on_the_fly = sk.pbs(&ct, &lut);
+            let cached = sk.pbs_prepared(&ct, &prepared);
+            assert_eq!(on_the_fly, cached, "ciphertexts must match exactly at m={m}");
+        }
+    }
+
+    #[test]
+    fn pbs_batch_matches_sequential_at_any_thread_count() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, sk, mut rng) = setup();
+        let enc = Encoder::new(ck.params);
+        let space = ck.params.message_space();
+        let lut = Lut::from_fn(&ck.params, |m| (m + 1) % space);
+        let prepared = sk.prepare_lut(&lut);
+        let cts: Vec<LweCiphertext> =
+            (0..9u64).map(|i| enc.encrypt_raw(i % space, &ck, &mut rng)).collect();
+        let jobs: Vec<(&LweCiphertext, &PreparedLut)> =
+            cts.iter().map(|ct| (ct, &prepared)).collect();
+        let sequential: Vec<LweCiphertext> =
+            cts.iter().map(|ct| sk.pbs_prepared(ct, &prepared)).collect();
+        for threads in [1usize, 2, 4, 16] {
+            let batched = sk.pbs_batch(&jobs, threads);
+            assert_eq!(batched, sequential, "threads={threads}");
+        }
+        assert!(sk.pbs_batch(&[], 4).is_empty(), "empty batch");
     }
 }

@@ -24,7 +24,16 @@ pub mod ops;
 pub mod params;
 pub mod torus;
 
-pub use bootstrap::{pbs_count, reset_pbs_count, ClientKey, Lut, ServerKey};
+/// Serializes unit tests that bootstrap (and hence touch the
+/// process-global `PBS_COUNT`): the parallel test harness would otherwise
+/// interleave counter deltas and flake the exact-count assertions.
+#[cfg(test)]
+pub(crate) fn pbs_test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+pub use bootstrap::{pbs_count, reset_pbs_count, ClientKey, Lut, PreparedLut, ServerKey};
 pub use encoding::Encoder;
-pub use ops::{CtInt, FheContext};
+pub use ops::{default_fhe_threads, CtInt, FheContext};
 pub use params::{DecompParams, TfheParams};

@@ -10,11 +10,36 @@
 //! | scalar (literal) mul  | 0   | "multiplication by literals is native" |
 //! | relu / abs / square…  | 1   | univariate → one PBS table             |
 //! | ct × ct (`ct_mul`)    | 2   | paper eq. 1: PBS(x²/4; a+b) − PBS(x²/4; a−b) |
+//!
+//! Every univariate op resolves to a [`PreparedLut`] (accumulator built
+//! once, not per call): the four standard tables are prepared at context
+//! construction, and arbitrary `pbs_fn` closures go through a table-keyed
+//! cache, so e.g. the Inhibitor's fused scale-shift-ReLU table is built
+//! once per head rather than `T²` times. The `*_many` entry points fan
+//! independent jobs across the [`ServerKey::pbs_batch`] worker pool; the
+//! worker count comes from `FHE_THREADS` (default: all cores) and can be
+//! overridden per context via [`FheContext::set_threads`].
 
-use super::bootstrap::{Lut, ServerKey};
+use super::bootstrap::{Lut, PreparedLut, ServerKey};
 use super::encoding::Encoder;
 use super::lwe::LweCiphertext;
 use crate::util::prng::Xoshiro256;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Default PBS worker-thread count: the `FHE_THREADS` environment
+/// variable when set (≥ 1), otherwise the machine's available
+/// parallelism. This is the knob the coordinator and the benches plumb.
+pub fn default_fhe_threads() -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match std::env::var("FHE_THREADS") {
+        // Unparseable or zero values fall back to all cores, per the
+        // documented default — never silently to a single thread.
+        Ok(v) => v.trim().parse::<usize>().ok().filter(|&n| n >= 1).unwrap_or(cores),
+        Err(_) => cores,
+    }
+}
 
 /// An encrypted signed integer.
 #[derive(Clone, Debug)]
@@ -22,33 +47,70 @@ pub struct CtInt {
     pub ct: LweCiphertext,
 }
 
-/// Evaluation context: server key + encoder (message layout).
+/// Evaluation context: server key + encoder (message layout) + the
+/// prepared-LUT cache and worker-thread knob of the batched PBS engine.
 pub struct FheContext {
     pub sk: ServerKey,
     pub enc: Encoder,
-    // Cached LUTs for the common univariate ops.
-    lut_relu: Lut,
-    lut_abs: Lut,
-    lut_sq4: Lut,
+    /// PBS worker threads used by the `*_many` batch entry points.
+    threads: AtomicUsize,
+    // Prepared accumulators for the common univariate ops.
+    lut_relu: PreparedLut,
+    lut_abs: PreparedLut,
+    lut_sq4: PreparedLut,
+    lut_id: PreparedLut,
+    /// Keyed cache for arbitrary `pbs_fn` tables: the (tiny) message-space
+    /// table is the key, the (large) prepared accumulator is the value —
+    /// collision-proof without requiring callers to name their closures.
+    lut_cache: RwLock<HashMap<Vec<u64>, Arc<PreparedLut>>>,
 }
 
 impl FheContext {
     pub fn new(sk: ServerKey) -> Self {
+        Self::with_threads(sk, default_fhe_threads())
+    }
+
+    /// Build a context with an explicit PBS worker count.
+    pub fn with_threads(sk: ServerKey, threads: usize) -> Self {
         let enc = Encoder::new(sk.params);
         let bias = enc.bias() as i64;
         let space = sk.params.message_space() as i64;
         let clamp = |v: i64| -> u64 { v.clamp(0, space - 1) as u64 };
         // LUT index is the *biased* message; value is biased back.
-        let lut_relu = Lut::from_fn(&sk.params, |m| clamp((m as i64 - bias).max(0) + bias));
-        let lut_abs = Lut::from_fn(&sk.params, |m| clamp((m as i64 - bias).abs() + bias));
+        let lut_relu =
+            sk.prepare_lut(&Lut::from_fn(&sk.params, |m| clamp((m as i64 - bias).max(0) + bias)));
+        let lut_abs =
+            sk.prepare_lut(&Lut::from_fn(&sk.params, |m| clamp((m as i64 - bias).abs() + bias)));
         // floor(v²/4), saturating at the top of the signed range: the
         // ct_mul caller guarantees |a±b| small enough that no saturation
         // occurs on the values that matter.
-        let lut_sq4 = Lut::from_fn(&sk.params, |m| {
+        let lut_sq4 = sk.prepare_lut(&Lut::from_fn(&sk.params, |m| {
             let v = m as i64 - bias;
             clamp((v * v).div_euclid(4) + bias)
-        });
-        FheContext { sk, enc, lut_relu, lut_abs, lut_sq4 }
+        }));
+        // Identity (noise-refresh) table.
+        let lut_id = sk.prepare_lut(&Lut::from_fn(&sk.params, |m| m));
+        FheContext {
+            sk,
+            enc,
+            threads: AtomicUsize::new(threads.max(1)),
+            lut_relu,
+            lut_abs,
+            lut_sq4,
+            lut_id,
+            lut_cache: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// Current PBS worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.threads.load(Ordering::Relaxed).max(1)
+    }
+
+    /// Override the PBS worker-thread count (shared contexts included:
+    /// the coordinator applies its serving-side knob through this).
+    pub fn set_threads(&self, n: usize) {
+        self.threads.store(n.max(1), Ordering::Relaxed);
     }
 
     /// Encrypt a signed value (client-side helper for tests/benches —
@@ -122,35 +184,94 @@ impl FheContext {
 
     // ----- univariate ops (1 PBS each) -----
 
-    /// Apply an arbitrary univariate signed function (1 PBS).
-    pub fn pbs_fn(&self, a: &CtInt, f: impl Fn(i64) -> i64) -> CtInt {
+    /// Build (or fetch from the cache) the prepared LUT for an arbitrary
+    /// univariate signed function. The closure is evaluated over the
+    /// (tiny) message space to form the table; the expensive accumulator
+    /// construction happens only on a cache miss.
+    pub fn prepared_fn(&self, f: impl Fn(i64) -> i64) -> Arc<PreparedLut> {
         let bias = self.enc.bias() as i64;
         let space = self.sk.params.message_space() as i64;
         let lut = Lut::from_fn(&self.sk.params, |m| {
             (f(m as i64 - bias) + bias).clamp(0, space - 1) as u64
         });
-        CtInt { ct: self.sk.pbs(&a.ct, &lut) }
+        if let Some(hit) = self.lut_cache.read().unwrap().get(&lut.table) {
+            return Arc::clone(hit);
+        }
+        let prepared = Arc::new(self.sk.prepare_lut(&lut));
+        let mut cache = self.lut_cache.write().unwrap();
+        Arc::clone(cache.entry(lut.table).or_insert(prepared))
+    }
+
+    /// The prepared reciprocal table `x ↦ round(num/x)` for `x > 0` (and
+    /// `num` for `x ≤ 0`, matching the softmax mirror's degenerate row) —
+    /// the single definition of the encrypted softmax normalizer.
+    pub fn prepared_recip(&self, num: i64) -> Arc<PreparedLut> {
+        self.prepared_fn(move |v| if v > 0 { (num + v / 2) / v } else { num })
+    }
+
+    /// Apply an arbitrary univariate signed function (1 PBS). The LUT is
+    /// resolved through the prepared-table cache.
+    pub fn pbs_fn(&self, a: &CtInt, f: impl Fn(i64) -> i64) -> CtInt {
+        let lut = self.prepared_fn(f);
+        CtInt { ct: self.sk.pbs_prepared(&a.ct, &lut) }
     }
 
     /// ReLU x⁺ (1 PBS).
     pub fn relu(&self, a: &CtInt) -> CtInt {
-        CtInt { ct: self.sk.pbs(&a.ct, &self.lut_relu) }
+        CtInt { ct: self.sk.pbs_prepared(&a.ct, &self.lut_relu) }
     }
 
     /// |x| (1 PBS).
     pub fn abs(&self, a: &CtInt) -> CtInt {
-        CtInt { ct: self.sk.pbs(&a.ct, &self.lut_abs) }
+        CtInt { ct: self.sk.pbs_prepared(&a.ct, &self.lut_abs) }
     }
 
     /// floor(x²/4) (1 PBS) — the paper's eq. 2 table.
     pub fn square_quarter(&self, a: &CtInt) -> CtInt {
-        CtInt { ct: self.sk.pbs(&a.ct, &self.lut_sq4) }
+        CtInt { ct: self.sk.pbs_prepared(&a.ct, &self.lut_sq4) }
     }
 
-    /// Reciprocal table scaled by `num`: x ↦ round(num/x) for x>0, used by
-    /// the encrypted softmax normalization (1 PBS).
+    /// Identity refresh: resets noise without changing the value (1 PBS).
+    pub fn refresh(&self, a: &CtInt) -> CtInt {
+        CtInt { ct: self.sk.pbs_prepared(&a.ct, &self.lut_id) }
+    }
+
+    /// Rounded reciprocal scaled by `num`: x ↦ round(num/x) for x>0, used
+    /// by the encrypted softmax normalization (1 PBS).
     pub fn recip_scaled(&self, a: &CtInt, num: i64) -> CtInt {
-        self.pbs_fn(a, move |v| if v > 0 { num / v } else { self.enc.max_signed() })
+        let lut = self.prepared_recip(num);
+        CtInt { ct: self.sk.pbs_prepared(&a.ct, &lut) }
+    }
+
+    // ----- batched univariate ops (1 PBS per element, parallel) -----
+
+    /// Evaluate one prepared LUT over many independent ciphertexts via
+    /// the multi-threaded batch engine. Outputs are bit-identical to the
+    /// sequential path and ordered like the inputs.
+    pub fn pbs_many(&self, xs: &[CtInt], lut: &PreparedLut) -> Vec<CtInt> {
+        let jobs: Vec<(&LweCiphertext, &PreparedLut)> =
+            xs.iter().map(|x| (&x.ct, lut)).collect();
+        self.sk.pbs_batch(&jobs, self.threads()).into_iter().map(|ct| CtInt { ct }).collect()
+    }
+
+    /// Batched ReLU.
+    pub fn relu_many(&self, xs: &[CtInt]) -> Vec<CtInt> {
+        self.pbs_many(xs, &self.lut_relu)
+    }
+
+    /// Batched |x|.
+    pub fn abs_many(&self, xs: &[CtInt]) -> Vec<CtInt> {
+        self.pbs_many(xs, &self.lut_abs)
+    }
+
+    /// Batched floor(x²/4).
+    pub fn square_quarter_many(&self, xs: &[CtInt]) -> Vec<CtInt> {
+        self.pbs_many(xs, &self.lut_sq4)
+    }
+
+    /// Batched identity noise refresh.
+    pub fn refresh_many(&self, xs: &[CtInt]) -> Vec<CtInt> {
+        self.pbs_many(xs, &self.lut_id)
     }
 
     // ----- the paper's headline op -----
@@ -188,6 +309,7 @@ mod tests {
 
     #[test]
     fn linear_ops_cost_zero_pbs() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, ctx, mut rng) = setup();
         let a = ctx.encrypt(3, &ck, &mut rng);
         let b = ctx.encrypt(-2, &ck, &mut rng);
@@ -207,6 +329,7 @@ mod tests {
 
     #[test]
     fn relu_and_abs_over_range() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, ctx, mut rng) = setup();
         for v in [-8i64, -5, -1, 0, 1, 4, 7] {
             let x = ctx.encrypt(v, &ck, &mut rng);
@@ -217,6 +340,7 @@ mod tests {
 
     #[test]
     fn ct_mul_is_exact_and_costs_two_pbs() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, ctx, mut rng) = setup();
         // |a|,|b| ≤ 2 keeps a±b and ab within 4-bit signed range.
         for a in -2i64..=2 {
@@ -233,6 +357,7 @@ mod tests {
 
     #[test]
     fn sum_many() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, ctx, mut rng) = setup();
         let vals = [1i64, -2, 3, 1, -1];
         let cts: Vec<CtInt> = vals.iter().map(|&v| ctx.encrypt(v, &ck, &mut rng)).collect();
@@ -242,6 +367,7 @@ mod tests {
 
     #[test]
     fn constants_work_in_ops() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, ctx, mut rng) = setup();
         let a = ctx.encrypt(-2, &ck, &mut rng);
         let c = ctx.constant(5);
@@ -253,6 +379,7 @@ mod tests {
 
     #[test]
     fn custom_pbs_fn() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, ctx, mut rng) = setup();
         let x = ctx.encrypt(3, &ck, &mut rng);
         let y = ctx.pbs_fn(&x, |v| v - 1);
@@ -260,7 +387,52 @@ mod tests {
     }
 
     #[test]
+    fn prepared_fn_cache_hits_on_identical_tables() {
+        let (_ck, ctx, _rng) = setup();
+        let a = ctx.prepared_fn(|v| v.max(0));
+        let b = ctx.prepared_fn(|v| v.max(0));
+        assert!(Arc::ptr_eq(&a, &b), "same table must share one prepared accumulator");
+        let c = ctx.prepared_fn(|v| v.min(0));
+        assert!(!Arc::ptr_eq(&a, &c), "different tables must not collide");
+    }
+
+    #[test]
+    fn batched_ops_match_scalar_ops() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup();
+        let vals = [-5i64, -2, 0, 1, 3, 7];
+        let cts: Vec<CtInt> = vals.iter().map(|&v| ctx.encrypt(v, &ck, &mut rng)).collect();
+        for threads in [1usize, 3] {
+            ctx.set_threads(threads);
+            assert_eq!(ctx.threads(), threads);
+            let relu_b = ctx.relu_many(&cts);
+            let abs_b = ctx.abs_many(&cts);
+            let refresh_b = ctx.refresh_many(&cts);
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(ctx.relu(&cts[i]).ct, relu_b[i].ct, "relu threads={threads} i={i}");
+                assert_eq!(ctx.abs(&cts[i]).ct, abs_b[i].ct, "abs threads={threads} i={i}");
+                assert_eq!(ctx.decrypt(&refresh_b[i], &ck), v, "refresh threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn recip_scaled_matches_rounded_division() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup();
+        for v in [1i64, 2, 3, 5, 7] {
+            let x = ctx.encrypt(v, &ck, &mut rng);
+            let r = ctx.recip_scaled(&x, 7);
+            assert_eq!(ctx.decrypt(&r, &ck), (7 + v / 2) / v, "v={v}");
+        }
+        // Degenerate (non-positive) input maps to the numerator.
+        let z = ctx.encrypt(0, &ck, &mut rng);
+        assert_eq!(ctx.decrypt(&ctx.recip_scaled(&z, 7), &ck), 7);
+    }
+
+    #[test]
     fn random_linear_circuits_match_plaintext() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, ctx, mut rng) = setup();
         for _ in 0..10 {
             let a = rng.next_range_i64(-3, 3);

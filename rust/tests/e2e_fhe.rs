@@ -7,6 +7,16 @@ use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe};
 use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::{bootstrap, ClientKey, FheContext, TfheParams};
 use inhibitor::util::prng::Xoshiro256;
+use std::sync::Mutex;
+
+/// `PBS_COUNT` is process-global and this binary's tests run on parallel
+/// threads; every test here bootstraps, so they serialize through this
+/// lock to keep the count-based assertions exact.
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn ctx_with_bits(bits: u32, seed: u64) -> (ClientKey, FheContext, Xoshiro256) {
     let mut rng = Xoshiro256::new(seed);
@@ -18,6 +28,7 @@ fn ctx_with_bits(bits: u32, seed: u64) -> (ClientKey, FheContext, Xoshiro256) {
 
 #[test]
 fn encrypted_inhibitor_t4_matches_mirror() {
+    let _guard = lock();
     let (ck, ctx, mut rng) = ctx_with_bits(5, 42);
     let (t, d) = (4usize, 2usize);
     let q = ITensor::random(&[t, d], -2, 2, &mut rng);
@@ -38,6 +49,7 @@ fn encrypted_vs_quantized_engine_consistency() {
     // The encrypted circuit and the plaintext quantized engine compute the
     // same integer function when fed the same codes (the FHE circuit's
     // clamps are the only divergence; inputs chosen to avoid them).
+    let _guard = lock();
     let (ck, ctx, mut rng) = ctx_with_bits(6, 7);
     let (t, d) = (2usize, 2usize);
     let q = ITensor::from_vec(&[t, d], vec![1, 0, -1, 2]);
@@ -68,6 +80,7 @@ fn encrypted_vs_quantized_engine_consistency() {
 
 #[test]
 fn encrypted_dotprod_runs_and_matches_mirror_t2() {
+    let _guard = lock();
     let (ck, ctx, mut rng) = ctx_with_bits(6, 1234);
     let (t, d) = (2usize, 2usize);
     let q = ITensor::from_vec(&[t, d], vec![1, -1, 0, 2]);
@@ -103,6 +116,7 @@ fn encrypted_dotprod_runs_and_matches_mirror_t2() {
 fn noise_survives_a_long_linear_chain_between_bootstraps() {
     // Sum 8 fresh ciphertexts (the longest chain the attention circuits
     // use at T=8), bootstrap, decode — must be exact.
+    let _guard = lock();
     let (ck, ctx, mut rng) = ctx_with_bits(5, 55);
     let ones: Vec<_> = (0..8).map(|_| ctx.encrypt(1, &ck, &mut rng)).collect();
     let sum = ctx.sum(&ones);

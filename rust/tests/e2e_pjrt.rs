@@ -4,6 +4,10 @@
 //! Rust request path.
 //!
 //! Requires `make artifacts`; tests self-skip when artifacts are absent.
+//! The whole file needs the PJRT runtime, which is behind the `xla`
+//! cargo feature (vendored xla crate) — without it this test binary is
+//! empty.
+#![cfg(feature = "xla")]
 
 use inhibitor::attention::common;
 use inhibitor::runtime::Registry;

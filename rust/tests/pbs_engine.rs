@@ -1,0 +1,118 @@
+//! Batched parallel PBS engine tests: `pbs_many` must be value- and
+//! count-equivalent to sequential `pbs` at every worker count, cached
+//! `PreparedLut` accumulators must be bit-identical to the on-the-fly
+//! path, and the level-synchronous circuits must stay exact under
+//! threading.
+
+use inhibitor::fhe_circuits::{CtMatrix, InhibitorFhe};
+use inhibitor::tensor::ITensor;
+use inhibitor::tfhe::{bootstrap, ClientKey, Encoder, FheContext, Lut, TfheParams};
+use inhibitor::util::prng::{Rng64, Xoshiro256};
+use std::sync::Mutex;
+
+/// `PBS_COUNT` is process-global and the tests in this binary run on
+/// parallel threads; count-sensitive tests serialize through this lock
+/// (every test here that bootstraps takes it).
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn pbs_many_matches_sequential_and_count_is_thread_invariant() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xBA7C);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(4), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    // Property: random batches, random values, every worker count.
+    for case in 0..6u64 {
+        let batch = 1 + (case as usize) * 3; // 1, 4, 7, 10, 13, 16
+        let vals: Vec<i64> = (0..batch).map(|_| rng.next_range_i64(-8, 7)).collect();
+        let cts: Vec<_> = vals.iter().map(|&v| ctx.encrypt(v, &ck, &mut rng)).collect();
+        let lut = ctx.prepared_fn(|v| (v / 2).max(-3));
+        // Sequential reference (1 PBS per element, same prepared table).
+        ctx.set_threads(1);
+        let reference = ctx.pbs_many(&cts, &lut);
+        for threads in [2usize, 3, 4] {
+            ctx.set_threads(threads);
+            let before = bootstrap::pbs_count();
+            let batched = ctx.pbs_many(&cts, &lut);
+            assert_eq!(
+                bootstrap::pbs_count() - before,
+                batch as u64,
+                "PBS_COUNT must be exact at threads={threads} (case {case})"
+            );
+            for (i, (seq, par)) in reference.iter().zip(batched.iter()).enumerate() {
+                assert_eq!(
+                    seq.ct, par.ct,
+                    "bit-identical ciphertexts, case {case} threads={threads} i={i}"
+                );
+            }
+            for (i, out) in batched.iter().enumerate() {
+                assert_eq!(
+                    ctx.decrypt(out, &ck),
+                    (vals[i] / 2).max(-3),
+                    "decrypt, case {case} threads={threads} i={i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_prepared_lut_is_bit_identical_to_on_the_fly_pbs() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xCAC4E);
+    let params = TfheParams::test_small();
+    let ck = ClientKey::generate(params, &mut rng);
+    let sk = ck.server_key(&mut rng);
+    let enc = Encoder::new(params);
+    let space = params.message_space();
+    let lut = Lut::from_fn(&params, |m| (5 * m + 3) % space);
+    let prepared = sk.prepare_lut(&lut);
+    for m in 0..space {
+        let ct = enc.encrypt_raw(m, &ck, &mut rng);
+        let on_the_fly = sk.pbs(&ct, &lut);
+        let cached = sk.pbs_prepared(&ct, &prepared);
+        assert_eq!(on_the_fly, cached, "m={m}");
+        assert_eq!(enc.decrypt_raw(&cached, &ck), (5 * m + 3) % space, "m={m}");
+    }
+}
+
+#[test]
+fn inhibitor_forward_is_exact_and_count_stable_across_thread_counts() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x1B17);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let (t, d) = (2usize, 2usize);
+    let q = ITensor::from_vec(&[t, d], vec![1, -2, 0, 2]);
+    let k = ITensor::from_vec(&[t, d], vec![1, -1, -2, 0]);
+    let v = ITensor::from_vec(&[t, d], vec![3, 1, 2, 0]);
+    let head = InhibitorFhe::new(d, 1);
+    let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+    let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+    let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+    let want = head.mirror(&q, &k, &v, ctx.enc.max_signed());
+    let expect_pbs = (2 * t * t * d + t * t + t * d) as u64;
+    let mut first: Option<Vec<_>> = None;
+    for threads in [1usize, 2, 4] {
+        ctx.set_threads(threads);
+        let before = bootstrap::pbs_count();
+        let h = head.forward(&ctx, &cq, &ckk, &cv);
+        assert_eq!(
+            bootstrap::pbs_count() - before,
+            expect_pbs,
+            "per-head PBS count at threads={threads}"
+        );
+        assert_eq!(h.decrypt(&ctx, &ck), want, "mirror equality at threads={threads}");
+        let cts: Vec<_> = h.data.iter().map(|c| c.ct.clone()).collect();
+        match &first {
+            None => first = Some(cts),
+            Some(f) => {
+                assert_eq!(f, &cts, "outputs must be bit-identical across thread counts")
+            }
+        }
+    }
+}
