@@ -133,9 +133,12 @@ fn main() {
         ),
         ("sweep", Json::arr(sweep_records)),
     ]);
-    match std::fs::write("BENCH_pbs.json", format!("{record}\n")) {
-        Ok(()) => println!("\nwrote BENCH_pbs.json"),
-        Err(e) => eprintln!("\ncould not write BENCH_pbs.json: {e}"),
+    // Write next to the workspace root (cargo runs benches with CWD at
+    // the package root), where the perf-trajectory record is checked in.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pbs.json");
+    match std::fs::write(path, format!("{record}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 
     println!("\n=== Cost model calibration: measured vs modeled across parameter sets ===");

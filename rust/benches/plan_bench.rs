@@ -1,0 +1,123 @@
+//! Plan-executor perf instrument: (a) declarative `CircuitPlan` execution
+//! vs the PR 1 hand-staged forwards (the plan path must not regress), and
+//! (b) cross-request fused level execution vs per-request execution of
+//! the same co-scheduled batch (the fusion path must be no slower — at
+//! small `T` it fills the worker pool that solo requests leave idle).
+//! Writes a machine-readable record to `BENCH_plan.json`.
+//!
+//!   cargo bench --bench plan_bench
+
+use inhibitor::bench_harness::{bench, BenchConfig};
+use inhibitor::coordinator::FusedLevelExecutor;
+use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe};
+use inhibitor::tensor::ITensor;
+use inhibitor::tfhe::ops::CtInt;
+use inhibitor::tfhe::{CircuitPlan, ClientKey, FheContext, TfheParams};
+use inhibitor::util::json::Json;
+use inhibitor::util::prng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::new(0x71A9);
+    let (t, d) = (2usize, 2usize);
+    let threads = inhibitor::tfhe::default_fhe_threads();
+    let cfg = BenchConfig { warmup_iters: 1, samples: 10, inner_iters: 1 };
+    let mut records = Vec::new();
+
+    println!("=== Plan executor vs hand-staged circuits (T={t}, d={d}, {threads} threads) ===");
+    for mech in ["inhibitor", "dotprod"] {
+        let bits = if mech == "dotprod" { 6 } else { 5 };
+        let ck = ClientKey::generate(TfheParams::test_for_bits(bits), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        ctx.set_threads(threads);
+        let q = ITensor::random(&[t, d], -2, 2, &mut rng);
+        let k = ITensor::random(&[t, d], -2, 2, &mut rng);
+        let v = ITensor::random(&[t, d], 0, 3, &mut rng);
+        let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+        let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+        let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+        let (m_staged, m_plan) = if mech == "dotprod" {
+            let head = DotProductFhe::new(d, 2);
+            (
+                bench(&format!("{mech} staged"), cfg, || head.forward_staged(&ctx, &cq, &ckk, &cv)),
+                bench(&format!("{mech} plan"), cfg, || head.forward(&ctx, &cq, &ckk, &cv)),
+            )
+        } else {
+            let head = InhibitorFhe::new(d, 1);
+            (
+                bench(&format!("{mech} staged"), cfg, || head.forward_staged(&ctx, &cq, &ckk, &cv)),
+                bench(&format!("{mech} plan"), cfg, || head.forward(&ctx, &cq, &ckk, &cv)),
+            )
+        };
+        println!("  {}", m_staged.summary());
+        println!("  {}", m_plan.summary());
+        println!("  plan/staged latency ratio: {:.3}", m_plan.mean_s / m_staged.mean_s);
+        records.push(Json::obj(vec![
+            ("mechanism", Json::str(mech)),
+            ("staged_s", Json::num(m_staged.mean_s)),
+            ("plan_s", Json::num(m_plan.mean_s)),
+            ("plan_over_staged", Json::num(m_plan.mean_s / m_staged.mean_s)),
+        ]));
+    }
+
+    // === Fused vs per-request execution of a co-scheduled batch =========
+    println!("\n=== Cross-request fusion: R co-scheduled T={t} inhibitor requests ===");
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    ctx.set_threads(threads);
+    let head = InhibitorFhe::new(d, 1);
+    let plan = head.plan(t, d);
+    let mut fusion_records = Vec::new();
+    for &n_req in &[2usize, 4, 8] {
+        let bundles: Vec<Vec<CtInt>> = (0..n_req)
+            .map(|_| {
+                let q = ITensor::random(&[t, d], -2, 2, &mut rng);
+                let k = ITensor::random(&[t, d], -2, 2, &mut rng);
+                let v = ITensor::random(&[t, d], 0, 3, &mut rng);
+                let mut inputs = Vec::with_capacity(3 * t * d);
+                for tensor in [&q, &k, &v] {
+                    inputs.extend(
+                        tensor.data.iter().map(|&val| ctx.encrypt(val, &ck, &mut rng)),
+                    );
+                }
+                inputs
+            })
+            .collect();
+        let requests: Vec<(&CircuitPlan, &[CtInt])> =
+            bundles.iter().map(|b| (&plan, b.as_slice())).collect();
+        let m_solo = bench(&format!("solo x{n_req}"), cfg, || {
+            bundles.iter().map(|b| plan.execute(&ctx, b)).collect::<Vec<_>>()
+        });
+        let m_fused =
+            bench(&format!("fused x{n_req}"), cfg, || FusedLevelExecutor::new(&ctx).run(&requests));
+        let solo_rps = n_req as f64 / m_solo.mean_s;
+        let fused_rps = n_req as f64 / m_fused.mean_s;
+        println!(
+            "  R={n_req}: solo {:.2} req/s, fused {:.2} req/s ({:.2}x)",
+            solo_rps,
+            fused_rps,
+            fused_rps / solo_rps
+        );
+        fusion_records.push(Json::obj(vec![
+            ("requests", Json::num(n_req as f64)),
+            ("solo_req_per_sec", Json::num(solo_rps)),
+            ("fused_req_per_sec", Json::num(fused_rps)),
+            ("fused_speedup", Json::num(fused_rps / solo_rps)),
+        ]));
+    }
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("plan_bench")),
+        ("seq_len", Json::num(t as f64)),
+        ("dim", Json::num(d as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("plan_vs_staged", Json::arr(records)),
+        ("fusion", Json::arr(fusion_records)),
+    ]);
+    // Write next to the workspace root (cargo runs benches with CWD at
+    // the package root), where the perf-trajectory record is checked in.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_plan.json");
+    match std::fs::write(path, format!("{record}\n")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

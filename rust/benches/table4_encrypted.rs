@@ -71,12 +71,12 @@ fn main() {
         println!("[{mech_name}] measured {:.1} ms/PBS", per_pbs * 1e3);
 
         for t in [2usize, 4, 8, 16] {
-            // Expected PBS, matching fhe_circuits exactly (the dotprod
-            // circuit adds probs ct_mul + rescale beyond the profile).
+            // Expected PBS straight from the circuit plan — the same DAG
+            // `forward` executes, so the accounting cannot drift.
             let pbs_expected = if is_dot {
-                (4 * t * t * dim + t * t + t + 2 * t * t + t * dim) as u64
+                DotProductFhe::new(dim, 2).plan(t, dim).pbs_count()
             } else {
-                (2 * t * t * dim + t * t + t * dim) as u64
+                InhibitorFhe::new(dim, 1).plan(t, dim).pbs_count()
             };
             // Default budget keeps `cargo bench` under ~5 min; the full
             // sweep (results/table4.txt was produced with these budgets:

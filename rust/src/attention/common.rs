@@ -200,7 +200,7 @@ mod tests {
         let h = ref_dotprod(&q, &k, &v);
         let (vmin, vmax) = (v.min(), v.max());
         for &x in &h.data {
-            assert!(x >= vmin - 1e-4 && x <= vmax + 1e-4);
+            assert!((vmin - 1e-4..=vmax + 1e-4).contains(&x));
         }
     }
 

@@ -2,6 +2,10 @@
 //! `inhibitor tables` CLI subcommand. Each function regenerates one table
 //! of the paper's evaluation in the same row layout, annotated with the
 //! paper's reference values so the *shape* comparison is immediate.
+//!
+//! PBS counts in these tables (Table 2's `#PBS` column via
+//! `optimizer::profile`, Table 4's expected counts) are derived from
+//! `tfhe::plan::CircuitPlan` — the executed DAG — not hand formulas.
 
 use crate::attention::{AttentionHead, AttnConfig, Mechanism};
 use crate::bench_harness::{bench_auto, Measurement};

@@ -1,0 +1,185 @@
+//! Cross-request PBS batch fusion (S9b): the coordinator-level payoff of
+//! the circuit-plan IR.
+//!
+//! The batcher already groups compatible encrypted requests (same
+//! session, mechanism and shape) into one engine invocation. Before PR 2
+//! each request's circuit still ran its PBS levels alone, so at small `T`
+//! a level batch (e.g. `T²·d = 8` jobs at T=2, d=2) could not fill the
+//! worker pool. [`FusedLevelExecutor`] advances the [`PlanRun`] of every
+//! co-scheduled request in lock-step and submits **one** `pbs_batch` per
+//! level containing the union of all requests' jobs — the per-level batch
+//! size the engine sees is exactly the *sum* of the per-request level
+//! sizes (recorded in [`FusedStats`] and pinned by tests).
+//!
+//! Fusion changes scheduling only, never results or accounting: each
+//! request's PBS jobs and linear ops are the same DAG evaluations as in
+//! solo execution, so outputs are bit-identical to per-request
+//! `CircuitPlan::execute` and the total PBS count is the sum of the plan
+//! counts.
+
+use crate::tfhe::bootstrap::PreparedLut;
+use crate::tfhe::lwe::LweCiphertext;
+use crate::tfhe::ops::{CtInt, FheContext};
+use crate::tfhe::plan::{CircuitPlan, PlanRun};
+use std::sync::Arc;
+
+/// What one fused execution did — the observability the "worker pool
+/// actually fills up" claim rests on.
+#[derive(Clone, Debug, Default)]
+pub struct FusedStats {
+    /// Union batch size submitted to `pbs_batch` at each level.
+    pub level_batch_sizes: Vec<usize>,
+    /// Total PBS across all fused requests (= Σ plan.pbs_count()).
+    pub pbs_total: u64,
+}
+
+/// Lock-step executor over many plan runs sharing one context.
+pub struct FusedLevelExecutor<'c> {
+    ctx: &'c FheContext,
+}
+
+impl<'c> FusedLevelExecutor<'c> {
+    pub fn new(ctx: &'c FheContext) -> Self {
+        FusedLevelExecutor { ctx }
+    }
+
+    /// Execute every (plan, inputs) request, merging the current level of
+    /// all still-running requests into a single batched PBS submission.
+    /// Requests may have different plans/depths; a request that runs out
+    /// of levels simply stops contributing jobs. Returns the per-request
+    /// outputs (same order as `requests`) and the fusion stats.
+    pub fn run(
+        &self,
+        requests: &[(&CircuitPlan, &[CtInt])],
+    ) -> (Vec<Vec<CtInt>>, FusedStats) {
+        let ctx = self.ctx;
+        let mut runs: Vec<PlanRun> =
+            requests.iter().map(|(plan, inputs)| PlanRun::new(plan, ctx, inputs)).collect();
+        let mut stats = FusedStats::default();
+        loop {
+            // Gather the next level of every still-running request.
+            let mut level_jobs: Vec<(CtInt, Arc<PreparedLut>)> = Vec::new();
+            let mut counts: Vec<Option<usize>> = Vec::with_capacity(runs.len());
+            for run in runs.iter_mut() {
+                match run.next_level_jobs(ctx) {
+                    Some(jobs) => {
+                        counts.push(Some(jobs.len()));
+                        level_jobs.extend(jobs);
+                    }
+                    None => counts.push(None),
+                }
+            }
+            if counts.iter().all(|c| c.is_none()) {
+                break;
+            }
+            stats.level_batch_sizes.push(level_jobs.len());
+            stats.pbs_total += level_jobs.len() as u64;
+            // One fused submission for the whole level.
+            let refs: Vec<(&LweCiphertext, &PreparedLut)> =
+                level_jobs.iter().map(|(ct, lut)| (&ct.ct, lut.as_ref())).collect();
+            let mut outs = ctx.pbs_jobs(&refs).into_iter().map(|ct| CtInt { ct });
+            // Scatter results back to their runs (same order as gathered).
+            for (run, count) in runs.iter_mut().zip(&counts) {
+                if let Some(n) = count {
+                    run.supply((&mut outs).take(*n).collect());
+                }
+            }
+        }
+        let outputs = runs.into_iter().map(|run| run.finish(ctx)).collect();
+        (outputs, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fhe_circuits::InhibitorFhe;
+    use crate::tfhe::bootstrap::{pbs_count, ClientKey};
+    use crate::tfhe::params::TfheParams;
+    use crate::util::prng::{Rng64, Xoshiro256};
+
+    #[test]
+    fn fused_execution_matches_solo_execution_and_sums_level_sizes() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let mut rng = Xoshiro256::new(0xF05E);
+        let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let (t, d) = (2usize, 2usize);
+        let head = InhibitorFhe::new(d, 1);
+        let plan = head.plan(t, d);
+        // Three co-scheduled requests with distinct inputs.
+        let make_inputs = |rng: &mut Xoshiro256| -> Vec<CtInt> {
+            (0..3 * t * d)
+                .map(|i| {
+                    let v = if i < 2 * t * d {
+                        rng.next_range_i64(-2, 2) // q, k
+                    } else {
+                        rng.next_range_i64(0, 3) // v
+                    };
+                    ctx.encrypt(v, &ck, rng)
+                })
+                .collect()
+        };
+        let bundles: Vec<Vec<CtInt>> = (0..3).map(|_| make_inputs(&mut rng)).collect();
+        // Solo reference executions.
+        let solo: Vec<Vec<CtInt>> =
+            bundles.iter().map(|inputs| plan.execute(&ctx, inputs)).collect();
+        // Fused execution.
+        let requests: Vec<(&CircuitPlan, &[CtInt])> =
+            bundles.iter().map(|b| (&plan, b.as_slice())).collect();
+        let before = pbs_count();
+        let (fused, stats) = FusedLevelExecutor::new(&ctx).run(&requests);
+        // Accounting: fusion reschedules, never changes the count.
+        assert_eq!(pbs_count() - before, 3 * plan.pbs_count(), "total PBS");
+        assert_eq!(stats.pbs_total, 3 * plan.pbs_count());
+        let want_sizes: Vec<usize> = plan.level_sizes().iter().map(|s| 3 * s).collect();
+        assert_eq!(stats.level_batch_sizes, want_sizes, "summed per-level batch sizes");
+        // Results: bit-identical to solo execution, request by request.
+        for (r, (f, s)) in fused.iter().zip(&solo).enumerate() {
+            assert_eq!(f.len(), s.len());
+            for (i, (a, b)) in f.iter().zip(s.iter()).enumerate() {
+                assert_eq!(a.ct, b.ct, "request {r} output {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_handles_heterogeneous_depths() {
+        // A deep plan fused with a shallow one: the shallow request stops
+        // contributing after its last level while the deep one continues.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let mut rng = Xoshiro256::new(0xD2E9);
+        let ck = ClientKey::generate(TfheParams::test_for_bits(4), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        use crate::tfhe::plan::CircuitBuilder;
+        // Shallow: relu(x). Deep: refresh(relu(x)).
+        let shallow = {
+            let mut b = CircuitBuilder::new();
+            let ins = b.inputs(1);
+            let r = b.relu(ins[0]);
+            b.output(r);
+            b.build()
+        };
+        let deep = {
+            let mut b = CircuitBuilder::new();
+            let ins = b.inputs(1);
+            let r = b.relu(ins[0]);
+            let f = b.refresh(r);
+            b.output(f);
+            b.build()
+        };
+        let xs = ctx.encrypt(-3, &ck, &mut rng);
+        let xd = ctx.encrypt(5, &ck, &mut rng);
+        let in_s = [xs.clone()];
+        let in_d = [xd.clone()];
+        let (outs, stats) =
+            FusedLevelExecutor::new(&ctx).run(&[(&shallow, &in_s), (&deep, &in_d)]);
+        assert_eq!(stats.level_batch_sizes, vec![2, 1]);
+        assert_eq!(stats.pbs_total, 3);
+        assert_eq!(ctx.decrypt(&outs[0][0], &ck), 0);
+        assert_eq!(ctx.decrypt(&outs[1][0], &ck), 5);
+        // Bit-identity with solo runs.
+        assert_eq!(outs[0][0].ct, shallow.execute(&ctx, &[xs])[0].ct);
+        assert_eq!(outs[1][0].ct, deep.execute(&ctx, &[xd])[0].ct);
+    }
+}

@@ -32,6 +32,13 @@ impl Session {
         self.store.lock().unwrap().remove(&id)
     }
 
+    /// Re-insert a bundle under its original id — the error-path rollback
+    /// of [`Self::take`], so a failed batch does not consume the bundles
+    /// of co-batched requests that could otherwise be retried.
+    pub fn restore(&self, id: u64, cts: Vec<CtInt>) {
+        self.store.lock().unwrap().insert(id, cts);
+    }
+
     pub fn put_result(&self, cts: Vec<CtInt>) -> u64 {
         self.register(cts)
     }

@@ -64,6 +64,11 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Fused PBS levels executed by encrypted engines (one per
+    /// cross-request `pbs_batch` submission).
+    pub fused_levels: AtomicU64,
+    /// Total PBS jobs submitted through fused levels.
+    pub fused_pbs: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -80,15 +85,27 @@ impl Metrics {
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    /// Mean PBS jobs per fused level — the worker-utilization signal of
+    /// the cross-request fusion path.
+    pub fn mean_fused_level_size(&self) -> f64 {
+        let l = self.fused_levels.load(Ordering::Relaxed);
+        if l == 0 {
+            return 0.0;
+        }
+        self.fused_pbs.load(Ordering::Relaxed) as f64 / l as f64
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
-             mean_latency={} p50={} p99={}",
+             fused_levels={} fused_pbs={} mean_latency={} p50={} p99={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
+            self.fused_levels.load(Ordering::Relaxed),
+            self.fused_pbs.load(Ordering::Relaxed),
             crate::bench_harness::Measurement::fmt_time(self.latency.mean_s()),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.5)),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.99)),

@@ -7,6 +7,7 @@
 //! where one worker thread per engine is the right execution model.
 
 pub mod batcher;
+pub mod fused;
 pub mod keymgr;
 pub mod metrics;
 pub mod request;
@@ -14,6 +15,7 @@ pub mod router;
 pub mod scheduler;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use fused::{FusedLevelExecutor, FusedStats};
 pub use keymgr::{KeyManager, Session};
 pub use metrics::Metrics;
 pub use request::{EnginePath, InferRequest, InferResponse, Payload};

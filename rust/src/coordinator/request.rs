@@ -15,12 +15,19 @@ pub enum EnginePath {
 
 impl EnginePath {
     /// Batching key: requests with the same key may share a batch.
+    /// Encrypted keys canonicalize mechanism aliases (e.g. "softmax" →
+    /// "dotprod") so registration and submission agree no matter which
+    /// accepted name either side used; unknown strings pass through
+    /// verbatim (registration rejects them anyway).
     pub fn batch_key(&self) -> String {
         match self {
             EnginePath::Pjrt(m) => format!("pjrt/{m}"),
             EnginePath::QuantInt(m) => format!("quant/{m}"),
             EnginePath::Encrypted { session, mechanism } => {
-                format!("fhe/{mechanism}/{session}")
+                let canon = crate::attention::Mechanism::parse(mechanism)
+                    .map(|m| m.name())
+                    .unwrap_or(mechanism.as_str());
+                format!("fhe/{canon}/{session}")
             }
         }
     }
@@ -83,5 +90,15 @@ mod tests {
         let a = EnginePath::QuantInt("dotprod".into()).batch_key();
         let b = EnginePath::QuantInt("dotprod".into()).batch_key();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn encrypted_keys_canonicalize_mechanism_aliases() {
+        let alias = EnginePath::Encrypted { session: 7, mechanism: "softmax".into() };
+        let canon = EnginePath::Encrypted { session: 7, mechanism: "dotprod".into() };
+        assert_eq!(alias.batch_key(), canon.batch_key());
+        // Unknown names pass through (rejected later at registration).
+        let junk = EnginePath::Encrypted { session: 7, mechanism: "nonsense".into() };
+        assert_eq!(junk.batch_key(), "fhe/nonsense/7");
     }
 }

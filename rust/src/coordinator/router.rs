@@ -10,14 +10,16 @@
 //!   * `fhe/<mech>/<sid>`  — per-session encrypted attention.
 
 use super::batcher::BatchPolicy;
+use super::fused::FusedLevelExecutor;
 use super::keymgr::KeyManager;
 use super::request::{EnginePath, InferRequest, InferResponse, Payload};
 use super::scheduler::Scheduler;
-use crate::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe};
+use crate::fhe_circuits::{DotProductFhe, InhibitorFhe};
 use crate::model::{ModelInput, QTransformer};
 use crate::tensor::ITensor;
 #[cfg(feature = "xla")]
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
@@ -141,6 +143,14 @@ impl Coordinator {
     /// carry `Payload::CiphertextRef` pointing at a registered Q/K/V
     /// bundle (3·T·d ciphertexts); the result bundle id is returned as the
     /// single output value.
+    ///
+    /// The worker builds the head's `CircuitPlan` once (the engine's
+    /// mechanism and shape are fixed) and executes every batch through
+    /// [`super::fused::FusedLevelExecutor`]: the current PBS level of all
+    /// co-scheduled requests goes to the worker pool as one fused
+    /// `pbs_batch`, so small-`T` requests fill the pool together. Fusion
+    /// never changes results or PBS counts — outputs are bit-identical to
+    /// single-request execution (pinned by `tests/fusion_it.rs`).
     pub fn add_fhe_engine(
         &mut self,
         session_id: u64,
@@ -149,56 +159,110 @@ impl Coordinator {
         dim: usize,
         policy: BatchPolicy,
     ) -> Result<(), String> {
+        // Same name resolution as every other entry point (CLI included):
+        // aliases like "softmax" select the dot-product circuit.
+        let mech = crate::attention::Mechanism::parse(mechanism)
+            .ok_or_else(|| format!("unknown mechanism '{mechanism}'"))?;
+        if mech == crate::attention::Mechanism::InhibitorSigned {
+            return Err(format!("no encrypted circuit for '{mechanism}'"));
+        }
         let session = self
             .keymgr
             .session(session_id)
             .ok_or_else(|| format!("unknown session {session_id}"))?;
         // Grant this session's context the scheduler's PBS worker budget:
-        // the circuit's level-synchronous stages fan out across it.
+        // the fused level batches fan out across it.
         session.ctx.set_threads(self.scheduler.fhe_threads());
-        let key = EnginePath::Encrypted { session: session_id, mechanism: mechanism.into() }
+        // Key the engine by the *canonical* mechanism name so routing
+        // agrees with registration no matter which alias was used.
+        let key = EnginePath::Encrypted { session: session_id, mechanism: mech.name().into() }
             .batch_key();
-        let mech = mechanism.to_string();
+        let metrics = Arc::clone(&self.scheduler.metrics);
         self.scheduler.add_engine(
             &key,
             policy,
             Box::new(move || {
+                let plan = if mech == crate::attention::Mechanism::DotProduct {
+                    DotProductFhe::new(dim, 2).plan(seq_len, dim)
+                } else {
+                    InhibitorFhe::new(dim, 1).plan(seq_len, dim)
+                };
                 Box::new(move |batch: &[InferRequest]| {
-                batch
-                    .iter()
-                    .map(|req| {
+                    // Phase 1 — resolve every request's ciphertext bundle.
+                    // Any bad request fails the whole batch (matching the
+                    // scheduler's per-batch error propagation), but the
+                    // bundles already taken are restored so the innocent
+                    // co-batched requests can be resubmitted.
+                    let mut bundles: Vec<(u64, Vec<_>)> = Vec::with_capacity(batch.len());
+                    let mut bad: Option<String> = None;
+                    for req in batch {
                         let blob = match req.payload {
                             Payload::CiphertextRef(b) => b,
-                            _ => return Err("fhe engine takes ciphertext refs".into()),
+                            _ => {
+                                bad = Some("fhe engine takes ciphertext refs".into());
+                                break;
+                            }
                         };
-                        let cts = session
-                            .take(blob)
-                            .ok_or_else(|| format!("unknown ciphertext bundle {blob}"))?;
+                        let cts = match session.take(blob) {
+                            Some(cts) => cts,
+                            None => {
+                                bad = Some(format!("unknown ciphertext bundle {blob}"));
+                                break;
+                            }
+                        };
                         if cts.len() != 3 * seq_len * dim {
-                            return Err(format!(
+                            bad = Some(format!(
                                 "bundle must hold 3·T·d = {} ciphertexts, got {}",
                                 3 * seq_len * dim,
                                 cts.len()
                             ));
+                            session.restore(blob, cts);
+                            break;
                         }
-                        let mut it = cts.into_iter();
-                        let mut take_mat = || CtMatrix {
-                            rows: seq_len,
-                            cols: dim,
-                            data: (&mut it).take(seq_len * dim).collect(),
-                        };
-                        let q = take_mat();
-                        let k = take_mat();
-                        let v = take_mat();
-                        let h = if mech == "dotprod" {
-                            DotProductFhe::new(dim, 2).forward(&session.ctx, &q, &k, &v)
-                        } else {
-                            InhibitorFhe::new(dim, 1).forward(&session.ctx, &q, &k, &v)
-                        };
-                        let out_blob = session.put_result(h.data);
-                        Ok(vec![out_blob as f32])
-                    })
-                    .collect::<Result<Vec<_>, _>>()
+                        bundles.push((blob, cts));
+                    }
+                    if let Some(msg) = bad {
+                        for (blob, cts) in bundles {
+                            session.restore(blob, cts);
+                        }
+                        return Err(msg);
+                    }
+                    // Phase 2 — fused level-synchronous execution across
+                    // the whole batch.
+                    let requests: Vec<(&crate::tfhe::plan::CircuitPlan, &[_])> =
+                        bundles.iter().map(|(_, b)| (&plan, b.as_slice())).collect();
+                    let (outs, stats) = FusedLevelExecutor::new(&session.ctx).run(&requests);
+                    let levels = stats.level_batch_sizes.len() as u64;
+                    metrics.fused_levels.fetch_add(levels, Ordering::Relaxed);
+                    metrics.fused_pbs.fetch_add(stats.pbs_total, Ordering::Relaxed);
+                    // Phase 3 — register each request's result bundle.
+                    // The wire protocol carries the blob id as f32, which
+                    // is exact only below 2^24 — fail loudly rather than
+                    // silently round to a neighboring blob, and roll back
+                    // this batch's registrations so the error leaks no
+                    // unreachable ciphertexts into the session store.
+                    let mut results = Vec::with_capacity(outs.len());
+                    let mut registered = Vec::with_capacity(outs.len());
+                    for data in outs {
+                        let out_blob = session.put_result(data);
+                        if out_blob >= (1u64 << 24) {
+                            let _ = session.take(out_blob);
+                            for blob in registered {
+                                let _ = session.take(blob);
+                            }
+                            // Same contract as the Phase-1 error path:
+                            // give the clients their inputs back.
+                            for (blob, cts) in bundles {
+                                session.restore(blob, cts);
+                            }
+                            return Err(format!(
+                                "result blob id {out_blob} exceeds the f32-exact protocol range"
+                            ));
+                        }
+                        registered.push(out_blob);
+                        results.push(vec![out_blob as f32]);
+                    }
+                    Ok(results)
                 }) as crate::coordinator::scheduler::EngineBody
             }),
         );
@@ -282,6 +346,21 @@ mod tests {
     fn fhe_engine_requires_session() {
         let mut c = Coordinator::new(RoutePolicy::PreferQuant);
         let err = c.add_fhe_engine(99, "inhibitor", 2, 2, BatchPolicy::default()).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+    }
+
+    #[test]
+    fn fhe_engine_rejects_unknown_or_uncircuited_mechanism() {
+        let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+        // Mechanism checks run before session resolution.
+        let err = c.add_fhe_engine(1, "nonsense", 2, 2, BatchPolicy::default()).unwrap_err();
+        assert!(err.contains("unknown mechanism"), "{err}");
+        let err =
+            c.add_fhe_engine(1, "inhibitor-signed", 2, 2, BatchPolicy::default()).unwrap_err();
+        assert!(err.contains("no encrypted circuit"), "{err}");
+        // "softmax" is a valid dot-product alias: it must get past the
+        // mechanism check and fail only on the missing session.
+        let err = c.add_fhe_engine(1, "softmax", 2, 2, BatchPolicy::default()).unwrap_err();
         assert!(err.contains("unknown session"), "{err}");
     }
 

@@ -9,23 +9,27 @@
 //! * **Dot-product** (eq. 3): every q·k product is a ct×ct mult = 2 PBS
 //!   (paper eq. 1); Softmax = exp LUT per score + row sum + reciprocal
 //!   LUT + ct×ct by the reciprocal; attending V is another ct×ct per
-//!   term. PBS per head: `4·T²·d + 2·T² + T + T·d` (+ rescale PBS).
+//!   term. PBS per head: `4·T²·d + 3·T² + T + T·d` (incl. rescale PBS).
 //!
 //! Each circuit has a plaintext *mirror* computing the identical integer
 //! function; tests assert ciphertext == mirror on every coordinate, which
 //! pins both the circuit logic and the noise budget.
 //!
-//! Both forwards are organized as **level-synchronous stages**: each
-//! stage gathers every independent PBS of one circuit level (all `T²·d`
-//! score-abs jobs, the `T²` fused scale-shift-ReLU jobs, …) and issues a
-//! single `pbs_many` batch, which the context fans across its worker
-//! pool. Because a PBS is deterministic and the linear ops between
-//! stages are applied in the original per-output order, the staged
-//! circuits produce bit-identical ciphertexts to the sequential
-//! formulation — the mirror-equality and exact-PBS-count tests pin this.
+//! Since PR 2 both circuits are **declarative plan builders**: `plan()`
+//! emits a [`CircuitPlan`] DAG of free linear ops and PBS nodes, and
+//! `forward()` executes it — the leveling pass batches each level's
+//! independent PBS into one `pbs_many`-style submission exactly like the
+//! hand-staged loops did (score abs → fused scale-shift-ReLU → inhibition
+//! ReLU → refresh; square/exp/recip/probs/attend/rescale for the
+//! baseline). The PR 1 hand-staged forwards survive as
+//! `forward_staged()`, the reference the bit-identity tests and the
+//! plan-vs-staged bench compare against. The same plan object is the
+//! optimizer's and the bench tables' PBS-count oracle
+//! ([`CircuitPlan::pbs_count`]).
 
 use crate::tfhe::bootstrap::ClientKey;
 use crate::tfhe::ops::{CtInt, FheContext};
+use crate::tfhe::plan::{CircuitBuilder, CircuitPlan};
 use crate::util::prng::Xoshiro256;
 
 /// A matrix of encrypted integers, row-major.
@@ -61,6 +65,16 @@ impl CtMatrix {
     }
 }
 
+/// Q, K, V concatenated into one plan-input vector (the layout
+/// `plan()` declares: q row-major, then k, then v).
+fn qkv_inputs(q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> Vec<CtInt> {
+    let mut inputs = Vec::with_capacity(q.data.len() + k.data.len() + v.data.len());
+    inputs.extend(q.data.iter().cloned());
+    inputs.extend(k.data.iter().cloned());
+    inputs.extend(v.data.iter().cloned());
+    inputs
+}
+
 /// Scale-shift LUT shared by circuit and mirror: `relu(round(x/γ) − α)`.
 fn scaled_shift_relu(x: i64, gamma: f64, alpha_q: i64) -> i64 {
     ((x as f64 / gamma).round() as i64 - alpha_q).max(0)
@@ -81,6 +95,7 @@ fn mul_halves(ctx: &FheContext, pairs: &[(&CtInt, &CtInt)]) -> Vec<CtInt> {
 }
 
 /// Encrypted Inhibitor attention head.
+#[derive(Clone, Copy, Debug)]
 pub struct InhibitorFhe {
     /// γ literal (paper: √d).
     pub gamma: f64,
@@ -93,11 +108,75 @@ impl InhibitorFhe {
         InhibitorFhe { gamma: (dim as f64).sqrt(), alpha_q }
     }
 
+    /// Build the head's circuit plan for a `[T, d]` head. Inputs are
+    /// `q ‖ k ‖ v` row-major; outputs are `H` row-major. Four PBS levels:
+    /// score abs (T²·d) → fused scale-shift-ReLU (T²) → inhibition ReLU
+    /// (T²·d) → output refresh (T·d); `2·T²·d + T² + T·d` PBS total.
+    pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
+        let gamma = self.gamma;
+        let alpha_q = self.alpha_q;
+        let mut b = CircuitBuilder::new();
+        let q = b.inputs(t * d);
+        let k = b.inputs(t * d);
+        let v = b.inputs(t * d);
+        // Level 1 — |q_ik − k_jk| for every (i, j, k): subtractions free.
+        let mut abs = Vec::with_capacity(t * t * d);
+        for i in 0..t {
+            for j in 0..t {
+                for kk in 0..d {
+                    let diff = b.sub(q[i * d + kk], k[j * d + kk]);
+                    abs.push(b.abs(diff));
+                }
+            }
+        }
+        // Level 2 — scores Z'_ij = relu(round(Σ_k |·| / γ) − α): free adds
+        // per score, then the fused scale-shift-ReLU LUT (one table per
+        // head — the γ literal folds into it).
+        let ssr = b.lut(move |x| scaled_shift_relu(x, gamma, alpha_q));
+        let mut z = Vec::with_capacity(t * t);
+        for ij in 0..t * t {
+            let dist = b.sum(&abs[ij * d..(ij + 1) * d]);
+            z.push(b.pbs(dist, ssr));
+        }
+        // Level 3 — inhibition H_ik = Σ_j (v_jk − z_ij)⁺, then level 4 —
+        // output refresh (identity PBS) before the ciphertext leaves the
+        // head.
+        for i in 0..t {
+            for kk in 0..d {
+                let mut terms = Vec::with_capacity(t);
+                for j in 0..t {
+                    let diff = b.sub(v[j * d + kk], z[i * t + j]);
+                    terms.push(b.relu(diff));
+                }
+                let h = b.sum(&terms);
+                let out = b.refresh(h);
+                b.output(out);
+            }
+        }
+        b.build()
+    }
+
     /// Encrypted forward: Q, K, V are `[T, d]` ciphertext matrices.
-    ///
-    /// Level-synchronous: score abs-batch → fused scale-shift-ReLU batch
-    /// → inhibition ReLU batch → refresh batch, one `pbs_many` per stage.
+    /// Builds the circuit plan and executes it — one batched PBS
+    /// submission per level through the context's worker pool.
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
+        let (t, d) = (q.rows, q.cols);
+        assert_eq!((k.rows, k.cols), (t, d));
+        assert_eq!((v.rows, v.cols), (t, d));
+        let data = self.plan(t, d).execute(ctx, &qkv_inputs(q, k, v));
+        CtMatrix { rows: t, cols: d, data }
+    }
+
+    /// The PR 1 hand-staged forward (level-synchronous loops over
+    /// `pbs_many`), kept as the reference implementation: tests pin the
+    /// plan path bit-identical to it, and `plan_bench` compares latency.
+    pub fn forward_staged(
+        &self,
+        ctx: &FheContext,
+        q: &CtMatrix,
+        k: &CtMatrix,
+        v: &CtMatrix,
+    ) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         assert_eq!((k.rows, k.cols), (t, d));
         assert_eq!((v.rows, v.cols), (t, d));
@@ -167,6 +246,7 @@ impl InhibitorFhe {
 }
 
 /// Encrypted dot-product + Softmax attention head (the baseline).
+#[derive(Clone, Copy, Debug)]
 pub struct DotProductFhe {
     /// Fixed-point bits of the probability representation.
     pub prob_bits: u32,
@@ -188,12 +268,83 @@ impl DotProductFhe {
         (e * max_out as f64).round().clamp(1.0, max_out as f64) as i64
     }
 
-    /// Encrypted forward.
-    ///
-    /// Level-synchronous: score square-batch (the 2 PBS halves of every
-    /// ct×ct product, eq. 1) → exp batch → reciprocal batch → probability
-    /// square-batch → attend square-batch → rescale batch.
+    /// Build the baseline's circuit plan for a `[T, d]` head. Inputs are
+    /// `q ‖ k ‖ v` row-major. Six PBS levels: score squares (2·T²·d, the
+    /// two halves of every eq.-1 product) → exp (T²) → reciprocal (T) →
+    /// probability squares (2·T²) → attend squares (2·T²·d) → rescale
+    /// (T·d); `4·T²·d + 3·T² + T + T·d` PBS total.
+    pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
+        let head = *self;
+        let max_out = (1i64 << self.prob_bits) - 1; // LUT output magnitude
+        let mut b = CircuitBuilder::new();
+        let q = b.inputs(t * d);
+        let k = b.inputs(t * d);
+        let v = b.inputs(t * d);
+        // Level 1 — scores S_ij = Σ_k q_ik·k_jk, each product via eq. 1.
+        let mut scores = Vec::with_capacity(t * t);
+        for i in 0..t {
+            for j in 0..t {
+                let prods: Vec<_> =
+                    (0..d).map(|kk| b.ct_mul(q[i * d + kk], k[j * d + kk])).collect();
+                scores.push(b.sum(&prods));
+            }
+        }
+        // Level 2 — exp LUT (one table per head).
+        let exp = b.lut(move |x| head.exp_lut(x, max_out));
+        let e: Vec<_> = scores.iter().map(|&s| b.pbs(s, exp)).collect();
+        // Level 3 — row normalizers r_i = round(max_out / Σ_j e_ij): free
+        // row sums, then the shared reciprocal table (see
+        // `tfhe::ops::recip_fn` — the softmax normalizer's single
+        // definition).
+        let recip = b.lut(crate::tfhe::ops::recip_fn(max_out));
+        let r: Vec<_> = (0..t)
+            .map(|i| {
+                let row = b.sum(&e[i * t..(i + 1) * t]);
+                b.pbs(row, recip)
+            })
+            .collect();
+        // Level 4 — probabilities p_ij = e_ij · r_i (fixed point with
+        // max_out ≈ 1.0).
+        let mut probs = Vec::with_capacity(t * t);
+        for i in 0..t {
+            for j in 0..t {
+                probs.push(b.ct_mul(e[i * t + j], r[i]));
+            }
+        }
+        // Level 5 — attend V: H_ik = Σ_j p_ij · v_jk, then level 6 —
+        // rescale by 1/max_out.
+        let rescale = b.lut(move |x| (x as f64 / max_out as f64).round() as i64);
+        for i in 0..t {
+            for kk in 0..d {
+                let terms: Vec<_> =
+                    (0..t).map(|j| b.ct_mul(probs[i * t + j], v[j * d + kk])).collect();
+                let acc = b.sum(&terms);
+                let out = b.pbs(acc, rescale);
+                b.output(out);
+            }
+        }
+        b.build()
+    }
+
+    /// Encrypted forward: builds the circuit plan and executes it — one
+    /// batched PBS submission per level.
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
+        let (t, d) = (q.rows, q.cols);
+        assert_eq!((k.rows, k.cols), (t, d));
+        assert_eq!((v.rows, v.cols), (t, d));
+        let data = self.plan(t, d).execute(ctx, &qkv_inputs(q, k, v));
+        CtMatrix { rows: t, cols: d, data }
+    }
+
+    /// The PR 1 hand-staged forward, kept as the reference implementation
+    /// (see [`InhibitorFhe::forward_staged`]).
+    pub fn forward_staged(
+        &self,
+        ctx: &FheContext,
+        q: &CtMatrix,
+        k: &CtMatrix,
+        v: &CtMatrix,
+    ) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         let max_out = (1i64 << self.prob_bits) - 1; // LUT output magnitude
         // Stage 1 — scores S_ij = Σ_k q_ik·k_jk. Each product is
@@ -340,6 +491,7 @@ mod tests {
         let used = pbs_count() - before;
         let expect_pbs = (2 * t * t * d + t * t + t * d) as u64;
         assert_eq!(used, expect_pbs, "inhibitor PBS count");
+        assert_eq!(head.plan(t, d).pbs_count(), expect_pbs, "plan count oracle");
         let got = h.decrypt(&ctx, &ck);
         let want = head.mirror(&q, &k, &v, ctx.enc.max_signed());
         assert_eq!(got, want);
@@ -366,18 +518,88 @@ mod tests {
         // + 2·T²·d (attend) + T·d (rescale)
         let expect = (4 * t * t * d + t * t + t + 2 * t * t + t * d) as u64;
         assert_eq!(used, expect, "dotprod PBS count");
+        assert_eq!(head.plan(t, d).pbs_count(), expect, "plan count oracle");
         let got = h.decrypt(&ctx, &ck);
         let want = head.mirror(&q, &k, &v, ctx.enc.min_signed(), ctx.enc.max_signed());
         assert_eq!(got, want);
     }
 
     #[test]
+    fn plan_forward_is_bit_identical_to_staged_forward() {
+        // The PR 2 acceptance bar: the declarative plan path must produce
+        // exactly the ciphertexts of the PR 1 hand-staged path, for both
+        // mechanisms, at every thread count.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = fhe_setup(6);
+        let t = 2;
+        let d = 2;
+        let q = ITensor::from_vec(&[t, d], vec![1, -1, 2, 0]);
+        let k = ITensor::from_vec(&[t, d], vec![1, 1, -1, 2]);
+        let v = ITensor::from_vec(&[t, d], vec![2, 1, -1, 3]);
+        let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+        let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+        let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+        let inh = InhibitorFhe::new(d, 1);
+        let dot = DotProductFhe::new(d, 2);
+        for threads in [1usize, 3] {
+            ctx.set_threads(threads);
+            let staged = inh.forward_staged(&ctx, &cq, &ckk, &cv);
+            let planned = inh.forward(&ctx, &cq, &ckk, &cv);
+            for (i, (s, p)) in staged.data.iter().zip(planned.data.iter()).enumerate() {
+                assert_eq!(s.ct, p.ct, "inhibitor threads={threads} i={i}");
+            }
+            let staged = dot.forward_staged(&ctx, &cq, &ckk, &cv);
+            let planned = dot.forward(&ctx, &cq, &ckk, &cv);
+            for (i, (s, p)) in staged.data.iter().zip(planned.data.iter()).enumerate() {
+                assert_eq!(s.ct, p.ct, "dotprod threads={threads} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_counts_reproduce_paper_closed_forms_across_t_d() {
+        // Pure DAG analysis — no crypto — so the sweep can be wide. The
+        // level structure is part of the contract: it is what the fused
+        // executor synchronizes on.
+        for &t in &[2usize, 3, 4, 8, 16] {
+            for &d in &[1usize, 2, 4] {
+                let inh = InhibitorFhe::new(d, 1).plan(t, d);
+                assert_eq!(
+                    inh.pbs_count(),
+                    (2 * t * t * d + t * t + t * d) as u64,
+                    "inhibitor T={t} d={d}"
+                );
+                assert_eq!(inh.levels(), 4, "inhibitor levels T={t} d={d}");
+                assert_eq!(
+                    inh.level_sizes(),
+                    vec![t * t * d, t * t, t * t * d, t * d],
+                    "inhibitor level sizes T={t} d={d}"
+                );
+                assert_eq!(inh.n_inputs(), 3 * t * d);
+                assert_eq!(inh.n_outputs(), t * d);
+                let dot = DotProductFhe::new(d, 2).plan(t, d);
+                assert_eq!(
+                    dot.pbs_count(),
+                    (4 * t * t * d + 3 * t * t + t + t * d) as u64,
+                    "dotprod T={t} d={d}"
+                );
+                assert_eq!(dot.levels(), 6, "dotprod levels T={t} d={d}");
+                assert_eq!(
+                    dot.level_sizes(),
+                    vec![2 * t * t * d, t * t, t, 2 * t * t, 2 * t * t * d, t * d],
+                    "dotprod level sizes T={t} d={d}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn dotprod_uses_about_twice_the_pbs_of_inhibitor() {
         // PBS accounting only (no crypto execution): the paper's "about
-        // twice as many PBS" claim, per head, at d=2.
+        // twice as many PBS" claim, per head, at d=2 — read off the plans.
         for t in [2usize, 4, 8, 16] {
-            let inh = (2 * t * t * 2 + t * t + t * 2) as f64;
-            let dot = (4 * t * t * 2 + t * t + t + 2 * t * t + t * 2) as f64;
+            let inh = InhibitorFhe::new(2, 1).plan(t, 2).pbs_count() as f64;
+            let dot = DotProductFhe::new(2, 2).plan(t, 2).pbs_count() as f64;
             let ratio = dot / inh;
             assert!((1.5..=2.6).contains(&ratio), "T={t}: {ratio}");
         }

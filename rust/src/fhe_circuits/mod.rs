@@ -1,6 +1,8 @@
-//! Encrypted attention circuits (S6): the paper's two mechanisms composed
-//! from the `tfhe::ops` operator layer, plus plaintext mirrors used for
-//! exact correctness checks and PBS accounting.
+//! Encrypted attention circuits (S6): the paper's two mechanisms as
+//! declarative `tfhe::plan` builders (executed level-by-level through the
+//! batched PBS engine), plus plaintext mirrors used for exact correctness
+//! checks and the PR 1 hand-staged forwards kept as bit-identity
+//! references.
 
 pub mod attention_fhe;
 

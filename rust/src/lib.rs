@@ -16,39 +16,47 @@
 //!   TFHE engine (`tfhe`/`fhe_circuits`), plus the parameter optimizer
 //!   (`optimizer`) and the paper-table bench harness (`bench_tables`).
 //!
-//! ## Batched parallel PBS engine
+//! ## Declarative circuit plans over a batched parallel PBS engine
 //!
 //! The paper denominates every circuit cost in PBS, and the runtime's
-//! wall-clock is PBS-bound, so the TFHE layer executes bootstraps through
-//! a batched, multi-threaded engine:
+//! wall-clock is PBS-bound, so the TFHE layer is built plan-then-execute:
 //!
+//! * **Circuit-plan IR** (`tfhe::plan`): `CircuitBuilder` emits a
+//!   `CircuitPlan` — a DAG of free linear ops and `Pbs { lut }` nodes. A
+//!   leveling pass groups independent PBS into execution levels; the
+//!   executor issues one batched submission per level. The same plan is
+//!   the PBS-count oracle the optimizer's cost model and the bench
+//!   tables read (`CircuitPlan::pbs_count`/`levels`), so accounting and
+//!   implementation cannot drift. Both attention circuits
+//!   (`fhe_circuits`) are plan builders; the PR 1 hand-staged forwards
+//!   survive as bit-identity references (`forward_staged`).
 //! * **Prepared LUTs** (`tfhe::PreparedLut`): the blind-rotation
 //!   accumulator (slot replication + half-slot pre-rotation) is built
-//!   once per LUT instead of inside every `pbs` call. `FheContext` keeps
-//!   the standard tables (ReLU/abs/x²⁄4/identity) prepared and caches
-//!   arbitrary `pbs_fn` tables keyed by their message-space table, so
-//!   per-head LUTs like the Inhibitor's fused scale-shift-ReLU are built
-//!   once per head rather than `T²` times.
+//!   once per LUT instead of inside every `pbs` call, with arbitrary
+//!   tables cached by their message-space table.
 //! * **Batch API** (`ServerKey::pbs_batch` / `FheContext::pbs_many`):
 //!   independent (ciphertext, LUT) jobs fan out over a
 //!   `std::thread::scope` worker pool — no external thread-pool crate —
 //!   with one reusable `ExtScratch` per worker and an exact atomic
 //!   `PBS_COUNT`. The worker count comes from the `FHE_THREADS` env var
 //!   (default: all cores) and is plumbed through the serving coordinator
-//!   (`Scheduler::set_fhe_threads`) and the benches.
-//! * **Sync audit**: `ServerKey` (bootstrap key spectra, key-switch key,
-//!   FFT plan with precomputed twiddles) and `FheContext` are immutable
-//!   shared-read state — `Send + Sync` holds structurally and is asserted
-//!   by compile-checked tests.
-//! * **Level-synchronous circuits** (`fhe_circuits`): both attention
-//!   forwards gather each circuit level's independent PBS into a single
-//!   batch (score abs → fused scale-shift-ReLU → inhibition ReLU →
-//!   refresh; square/exp/recip/probs/attend/rescale for the dot-product
-//!   baseline), preserving exact ciphertext==mirror equality and the
-//!   paper's per-head PBS counts.
+//!   (`Scheduler::set_fhe_threads`) and the benches. Keygen
+//!   (`ClientKey::server_key`) fans its per-bit GGSW encryptions across
+//!   the same pattern, thread-count invariantly.
+//! * **Cross-request fusion** (`coordinator::FusedLevelExecutor`): the
+//!   encrypted engine merges the current plan level of every
+//!   co-scheduled request into one `pbs_batch` submission, filling the
+//!   worker pool at small `T` without changing results or counts.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! See `rust/DESIGN.md` for the system inventory (§4 plan IR, §5 PBS
+//! engine, §6 coordinator fusion) and `BENCH_pbs.json`/`BENCH_plan.json`
+//! for the checked-in perf trajectory records.
+
+// The integer/FHE kernels are written in explicit index notation to
+// mirror the paper's equations (i, j, k subscripts over T×d heads);
+// iterator rewrites of those loops obscure the math without changing
+// the codegen.
+#![allow(clippy::needless_range_loop)]
 
 pub mod attention;
 pub mod bench_harness;

@@ -182,6 +182,14 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
     use inhibitor::tensor::ITensor;
     use inhibitor::tfhe::{bootstrap, ClientKey, FheContext, TfheParams};
     let mech_s = flag(args, "--mechanism", "inhibitor");
+    let Some(mechanism) = Mechanism::parse(&mech_s) else {
+        eprintln!("unknown mechanism '{mech_s}'");
+        return 2;
+    };
+    if mechanism == Mechanism::InhibitorSigned {
+        eprintln!("no encrypted circuit for '{mech_s}'");
+        return 2;
+    }
     let seq: usize = flag(args, "--seq", "2").parse().unwrap_or(2);
     let bits: u32 = flag(args, "--bits", "5").parse().unwrap_or(5);
     let threads: usize = flag(args, "--threads", "0").parse().unwrap_or(0);
@@ -207,15 +215,15 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
     let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
     bootstrap::reset_pbs_count();
     let t0 = std::time::Instant::now();
-    let h = match mech_s.as_str() {
-        "dotprod" => DotProductFhe::new(dim, 2).forward(&ctx, &cq, &ckk, &cv),
+    let h = match mechanism {
+        Mechanism::DotProduct => DotProductFhe::new(dim, 2).forward(&ctx, &cq, &ckk, &cv),
         _ => InhibitorFhe::new(dim, 1).forward(&ctx, &cq, &ckk, &cv),
     };
     let dt = t0.elapsed();
     let out = h.decrypt(&ctx, &ck);
     println!(
         "mechanism={} T={} d={}: {} PBS in {:.3}s ({:.1} ms/PBS)",
-        mech_s,
+        mechanism.name(),
         seq,
         dim,
         bootstrap::pbs_count(),

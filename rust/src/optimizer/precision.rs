@@ -1,8 +1,21 @@
 //! Circuit precision analysis (S7): worst-case bit-width tracking for the
 //! two attention circuits, plus their PBS counts. Regenerates the "int" /
 //! "uint" columns of the paper's Table 2 and feeds the parameter search.
+//!
+//! Since PR 2 the PBS and linear-op counts are **not** hand-derived
+//! formulas: they are read off the circuit's [`CircuitPlan`] — the exact
+//! DAG the executor runs — via [`CircuitPlan::pbs_count`] /
+//! [`CircuitPlan::linear_op_count`], so the optimizer can never drift
+//! from the implementation again. (The dot-product count grew accordingly:
+//! the old formula omitted the probability ct×ct and the rescale PBS the
+//! circuit always executed.)
+//!
+//! [`CircuitPlan`]: crate::tfhe::plan::CircuitPlan
+//! [`CircuitPlan::pbs_count`]: crate::tfhe::plan::CircuitPlan::pbs_count
+//! [`CircuitPlan::linear_op_count`]: crate::tfhe::plan::CircuitPlan::linear_op_count
 
 use crate::attention::Mechanism;
+use crate::fhe_circuits::{DotProductFhe, InhibitorFhe};
 
 /// Static profile of one encrypted attention circuit.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -60,12 +73,12 @@ pub fn profile_inhibitor(seq_len: usize, dim: usize, input_bits: u32) -> Circuit
     //    worst case is T·in_mag (all scores zero, all values maximal).
     let h_mag = t * in_mag;
     uint_bits = uint_bits.max(unsigned_bits_for_mag(h_mag));
-    // PBS count: abs T²·d, shifted-relu T², inhibition relu T²·d,
+    // Op counts come from the circuit plan itself (α does not affect the
+    // DAG shape): abs T²·d + shifted-relu T² + inhibition relu T²·d +
     // output requant T·d.
-    let t2 = (seq_len * seq_len) as u64;
-    let pbs_count = 2 * t2 * dim as u64 + t2 + (seq_len * dim) as u64;
-    // Linear ops: the Σ_d and Σ_T additions + subtractions.
-    let linear_ops = t2 * (dim as u64) + t2 * (dim as u64 + 1) + t2;
+    let plan = InhibitorFhe::new(dim, 1).plan(seq_len, dim);
+    let pbs_count = plan.pbs_count();
+    let linear_ops = plan.linear_op_count();
     CircuitProfile {
         mechanism: Mechanism::Inhibitor,
         seq_len,
@@ -81,7 +94,8 @@ pub fn profile_inhibitor(seq_len: usize, dim: usize, input_bits: u32) -> Circuit
 
 /// Worst-case analysis of the **dot-product** circuit:
 ///   ct_mul(q,k) (2 PBS, needs q+k headroom) → Σ_d → exp LUT (PBS) →
-///   Σ_T → recip (PBS) → ct_mul(p, v) (2 PBS) → Σ_T.
+///   Σ_T → recip (PBS) → ct_mul(e, r) (2 PBS) → ct_mul(p, v) (2 PBS) →
+///   Σ_T → rescale (PBS).
 pub fn profile_dotprod(seq_len: usize, dim: usize, input_bits: u32) -> CircuitProfile {
     let t = seq_len as i64;
     let d = dim as i64;
@@ -105,10 +119,11 @@ pub fn profile_dotprod(seq_len: usize, dim: usize, input_bits: u32) -> CircuitPr
     let pv_mag = exp_mag + in_mag;
     int_bits = int_bits.max(signed_bits_for_mag(pv_mag));
     uint_bits = uint_bits.max(unsigned_bits_for_mag(exp_mag * in_mag / t.max(1)));
-    let t2 = (seq_len * seq_len) as u64;
-    // ct_mul(q,k): 2·T²·d; exp: T²; recip: T; ct_mul(p,v): 2·T²·d.
-    let pbs_count = 4 * t2 * dim as u64 + t2 + seq_len as u64;
-    let linear_ops = 2 * t2 * (dim as u64) + t2 + t2 * (dim as u64);
+    // Op counts from the plan: ct_mul(q,k) 2·T²·d + exp T² + recip T +
+    // ct_mul(e,r) 2·T² + ct_mul(p,v) 2·T²·d + rescale T·d.
+    let plan = DotProductFhe::new(dim, in_mag).plan(seq_len, dim);
+    let pbs_count = plan.pbs_count();
+    let linear_ops = plan.linear_op_count();
     CircuitProfile {
         mechanism: Mechanism::DotProduct,
         seq_len,
@@ -181,10 +196,13 @@ mod tests {
     }
 
     #[test]
-    fn pbs_counts_match_hand_formulas() {
+    fn pbs_counts_match_closed_forms() {
+        // The plan-derived counts must reproduce the paper's closed-form
+        // per-head formulas (T=4, d=2): inhibitor 2·T²·d + T² + T·d and
+        // dot-product 4·T²·d + 3·T² + T + T·d.
         let p = profile_inhibitor(4, 2, 3);
         assert_eq!(p.pbs_count, 2 * 16 * 2 + 16 + 8);
         let q = profile_dotprod(4, 2, 3);
-        assert_eq!(q.pbs_count, 4 * 16 * 2 + 16 + 4);
+        assert_eq!(q.pbs_count, 4 * 16 * 2 + 3 * 16 + 4 + 8);
     }
 }

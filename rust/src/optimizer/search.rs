@@ -79,7 +79,11 @@ pub fn optimize(profile: &CircuitProfile, cfg: SearchConfig) -> Option<Optimized
                             message_bits: msg_bits,
                         };
                         let cost = circuit_cost(&p, profile.pbs_count, profile.linear_ops).0;
-                        if best.as_ref().map_or(true, |(c, _)| cost < *c) {
+                        let improved = match &best {
+                            Some((c, _)) => cost < *c,
+                            None => true,
+                        };
+                        if improved {
                             best = Some((cost, p));
                         }
                     }

@@ -1,5 +1,5 @@
 //! Quantization toolkit (S1): affine codes, calibration, fixed-point
-//! requantization. See DESIGN.md §2.
+//! requantization. See rust/DESIGN.md §2.
 
 pub mod affine;
 pub mod calib;

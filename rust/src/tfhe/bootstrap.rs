@@ -29,7 +29,11 @@
 //! out of the hot loop; [`ServerKey::pbs_batch`] fans independent jobs
 //! across a `std::thread::scope` worker pool with one reusable
 //! [`ExtScratch`] per worker. `PBS_COUNT` stays exact under concurrency
-//! (atomic increment per bootstrap).
+//! (atomic increment per bootstrap). Key generation reuses the same
+//! scoped-pool pattern: the per-bit GGSW encryptions of
+//! [`ClientKey::server_key`] are independent and run across workers, with
+//! per-bit child RNGs derived sequentially so the key is thread-count
+//! invariant.
 
 use super::fft::NegacyclicFft;
 use super::ggsw::{ExtScratch, GgswCiphertext, GgswFourier};
@@ -38,7 +42,7 @@ use super::keyswitch::KeySwitchKey;
 use super::lwe::{LweCiphertext, LweSecretKey};
 use super::params::TfheParams;
 use super::torus::Torus;
-use crate::util::prng::Xoshiro256;
+use crate::util::prng::{Rng64, Xoshiro256};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Global PBS counter — the unit the paper counts circuit cost in.
@@ -70,24 +74,61 @@ impl ClientKey {
         }
     }
 
-    /// Generate the public server key (bootstrap + key-switch keys).
+    /// Generate the public server key (bootstrap + key-switch keys),
+    /// parallelizing keygen across the default worker budget
+    /// (`FHE_THREADS` env or all cores — same knob as `pbs_batch`).
     pub fn server_key(&self, rng: &mut Xoshiro256) -> ServerKey {
+        self.server_key_with_threads(crate::tfhe::ops::default_fhe_threads(), rng)
+    }
+
+    /// Server-key generation with an explicit worker count. The `n`
+    /// per-bit GGSW encryptions dominate keygen and are independent, so
+    /// they fan out over a scoped-thread pool (the `pbs_batch` pattern).
+    ///
+    /// Determinism: one child RNG seed per key bit is drawn
+    /// *sequentially* from the parent stream before any worker starts, so
+    /// the generated key material is a pure function of the parent RNG
+    /// state — bit-identical at every thread count (pinned by
+    /// `parallel_keygen_matches_sequential`). The key-switch key is
+    /// generated on the caller thread from the parent stream afterwards.
+    pub fn server_key_with_threads(&self, threads: usize, rng: &mut Xoshiro256) -> ServerKey {
         let fft = NegacyclicFft::new(self.params.poly_size);
-        let bsk = self
-            .lwe_key
-            .bits
-            .iter()
-            .map(|&s| {
-                GgswCiphertext::encrypt(
-                    s,
-                    &self.glwe_key,
-                    self.params.pbs_decomp,
-                    self.params.glwe_noise_std,
-                    rng,
-                )
-                .to_fourier(&fft)
-            })
-            .collect();
+        let bits = &self.lwe_key.bits;
+        let n = bits.len();
+        let seeds: Vec<u64> = bits.iter().map(|_| rng.next_u64()).collect();
+        let encrypt_bit = |bit: u64, seed: u64| -> GgswFourier {
+            let mut crng = Xoshiro256::new(seed);
+            GgswCiphertext::encrypt(
+                bit,
+                &self.glwe_key,
+                self.params.pbs_decomp,
+                self.params.glwe_noise_std,
+                &mut crng,
+            )
+            .to_fourier(&fft)
+        };
+        let threads = threads.clamp(1, n.max(1));
+        let bsk: Vec<GgswFourier> = if threads == 1 {
+            bits.iter().zip(&seeds).map(|(&bit, &seed)| encrypt_bit(bit, seed)).collect()
+        } else {
+            let chunk = (n + threads - 1) / threads;
+            let mut out: Vec<Option<GgswFourier>> = bits.iter().map(|_| None).collect();
+            std::thread::scope(|s| {
+                for ((bit_chunk, seed_chunk), out_chunk) in
+                    bits.chunks(chunk).zip(seeds.chunks(chunk)).zip(out.chunks_mut(chunk))
+                {
+                    let encrypt_bit = &encrypt_bit;
+                    s.spawn(move || {
+                        for ((&bit, &seed), slot) in
+                            bit_chunk.iter().zip(seed_chunk).zip(out_chunk.iter_mut())
+                        {
+                            *slot = Some(encrypt_bit(bit, seed));
+                        }
+                    });
+                }
+            });
+            out.into_iter().map(|g| g.expect("worker filled every slot")).collect()
+        };
         let ksk = KeySwitchKey::generate(
             &self.glwe_key.to_extracted_lwe(),
             &self.lwe_key,
@@ -274,6 +315,13 @@ impl ServerKey {
     pub fn lwe_dim(&self) -> usize {
         self.bsk.len()
     }
+
+    /// Structural equality of the key material (bootstrap-key spectra and
+    /// key-switch rows). Used to pin the parallel keygen against the
+    /// single-threaded derivation — not a constant-time comparison.
+    pub fn key_material_eq(&self, other: &ServerKey) -> bool {
+        self.params == other.params && self.bsk == other.bsk && self.ksk == other.ksk
+    }
 }
 
 #[cfg(test)]
@@ -370,6 +418,37 @@ mod tests {
             let on_the_fly = sk.pbs(&ct, &lut);
             let cached = sk.pbs_prepared(&ct, &prepared);
             assert_eq!(on_the_fly, cached, "ciphertexts must match exactly at m={m}");
+        }
+    }
+
+    #[test]
+    fn parallel_keygen_matches_sequential() {
+        // The per-bit child-RNG derivation makes the server key a pure
+        // function of the parent RNG state: every thread count must
+        // produce byte-identical key material — and a working key.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let params = TfheParams::test_small();
+        let mut baseline: Option<ServerKey> = None;
+        for threads in [1usize, 2, 5, 16] {
+            let mut rng = Xoshiro256::new(0x5EED);
+            let ck = ClientKey::generate(params, &mut rng);
+            let sk = ck.server_key_with_threads(threads, &mut rng);
+            match &baseline {
+                None => {
+                    // Functional check once: the generated key bootstraps.
+                    let enc = Encoder::new(params);
+                    let lut = Lut::from_fn(&params, |m| m);
+                    let ct = enc.encrypt_raw(3, &ck, &mut rng);
+                    assert_eq!(enc.decrypt_raw(&sk.pbs(&ct, &lut), &ck), 3);
+                    baseline = Some(sk);
+                }
+                Some(reference) => {
+                    assert!(
+                        sk.key_material_eq(reference),
+                        "keygen must be thread-count invariant (threads={threads})"
+                    );
+                }
+            }
         }
     }
 

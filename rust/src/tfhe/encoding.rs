@@ -64,7 +64,7 @@ impl Encoder {
     /// Encrypt a signed value with the bias convention.
     pub fn encrypt_signed(&self, v: i64, ck: &ClientKey, rng: &mut Xoshiro256) -> LweCiphertext {
         assert!(
-            v >= self.min_signed() && v <= self.max_signed(),
+            (self.min_signed()..=self.max_signed()).contains(&v),
             "value {v} outside signed range [{}, {}]",
             self.min_signed(),
             self.max_signed()

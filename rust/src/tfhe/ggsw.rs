@@ -111,7 +111,7 @@ impl GgswCiphertext {
 }
 
 /// GGSW in the spectral domain: per row, k+1 component spectra.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct GgswFourier {
     pub rows: Vec<Vec<Vec<C64>>>,
     pub decomp: DecompParams,
@@ -121,8 +121,8 @@ pub struct GgswFourier {
 
 /// Reusable scratch buffers for external products / CMux chains (one per
 /// PBS call; shared across all `n` CMux of a blind rotation). Eliminates
-/// every per-CMux heap allocation on the hot path — see EXPERIMENTS.md
-/// §Perf.
+/// every per-CMux heap allocation on the hot path — see rust/DESIGN.md
+/// §5.
 pub struct ExtScratch {
     /// Spectrum of one decomposed digit polynomial.
     spec: Vec<C64>,
@@ -272,7 +272,7 @@ mod tests {
         let poly: Vec<u64> = (0..128).map(|_| rng.next_u64()).collect();
         for dp in decompose_poly(&poly, d) {
             for &v in &dp {
-                assert!(v >= -32 && v < 32, "digit {v} out of balanced range");
+                assert!((-32..32).contains(&v), "digit {v} out of balanced range");
             }
         }
     }

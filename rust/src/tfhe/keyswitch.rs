@@ -30,6 +30,7 @@ pub fn decompose_scalar(t: Torus, d: DecompParams) -> Vec<i64> {
 }
 
 /// Key-switching key from `from_key` (dim N_in) to `to_key` (dim n_out).
+#[derive(Clone, Debug, PartialEq)]
 pub struct KeySwitchKey {
     /// `ksk[j][l]` encrypts `s_in[j] · q / B^(l+1)` under `to_key`.
     rows: Vec<Vec<LweCiphertext>>,

@@ -4,7 +4,7 @@
 //! attention circuits are built on.
 //!
 //! This substitutes for the Concrete compiler the paper used (see
-//! DESIGN.md §3): the scheme is real — ciphertexts, noise, blind
+//! rust/DESIGN.md §3): the scheme is real — ciphertexts, noise, blind
 //! rotations — so measured *relative* costs (PBS-dominated; ct×ct = 2 PBS;
 //! precision → polynomial size → time) are physical, not modeled.
 //!
@@ -22,6 +22,7 @@ pub mod keyswitch;
 pub mod lwe;
 pub mod ops;
 pub mod params;
+pub mod plan;
 pub mod torus;
 
 /// Serializes unit tests that bootstrap (and hence touch the
@@ -37,3 +38,4 @@ pub use bootstrap::{pbs_count, reset_pbs_count, ClientKey, Lut, PreparedLut, Ser
 pub use encoding::Encoder;
 pub use ops::{default_fhe_threads, CtInt, FheContext};
 pub use params::{DecompParams, TfheParams};
+pub use plan::{CircuitBuilder, CircuitPlan, LutRef, NodeId, PlanRun};

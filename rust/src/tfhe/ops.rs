@@ -41,6 +41,14 @@ pub fn default_fhe_threads() -> usize {
     }
 }
 
+/// The softmax-normalizer reciprocal `x ↦ round(num/x)` for `x > 0` (and
+/// `num` for `x ≤ 0`, matching the softmax mirror's degenerate row) —
+/// the single definition of the table, shared by
+/// [`FheContext::prepared_recip`] and the dot-product plan builder.
+pub fn recip_fn(num: i64) -> impl Fn(i64) -> i64 {
+    move |v| if v > 0 { (num + v / 2) / v } else { num }
+}
+
 /// An encrypted signed integer.
 #[derive(Clone, Debug)]
 pub struct CtInt {
@@ -171,6 +179,13 @@ impl FheContext {
 
     /// Sum of many ciphertexts (0 PBS; noise grows linearly).
     pub fn sum(&self, xs: &[CtInt]) -> CtInt {
+        let refs: Vec<&CtInt> = xs.iter().collect();
+        self.sum_refs(&refs)
+    }
+
+    /// [`Self::sum`] over borrowed operands (the plan executor's form —
+    /// identical math, so plan and direct paths stay bit-identical).
+    pub fn sum_refs(&self, xs: &[&CtInt]) -> CtInt {
         assert!(!xs.is_empty());
         let mut acc = xs[0].ct.clone();
         for x in &xs[1..] {
@@ -189,6 +204,12 @@ impl FheContext {
     /// (tiny) message space to form the table; the expensive accumulator
     /// construction happens only on a cache miss.
     pub fn prepared_fn(&self, f: impl Fn(i64) -> i64) -> Arc<PreparedLut> {
+        self.prepared_dyn(&f)
+    }
+
+    /// Dynamic-dispatch form of [`Self::prepared_fn`] — the circuit-plan
+    /// executor resolves its LUT registry (`Arc<dyn Fn>`) through this.
+    pub fn prepared_dyn(&self, f: &dyn Fn(i64) -> i64) -> Arc<PreparedLut> {
         let bias = self.enc.bias() as i64;
         let space = self.sk.params.message_space() as i64;
         let lut = Lut::from_fn(&self.sk.params, |m| {
@@ -202,11 +223,10 @@ impl FheContext {
         Arc::clone(cache.entry(lut.table).or_insert(prepared))
     }
 
-    /// The prepared reciprocal table `x ↦ round(num/x)` for `x > 0` (and
-    /// `num` for `x ≤ 0`, matching the softmax mirror's degenerate row) —
-    /// the single definition of the encrypted softmax normalizer.
+    /// The prepared reciprocal table of [`recip_fn`] — the encrypted
+    /// softmax normalizer.
     pub fn prepared_recip(&self, num: i64) -> Arc<PreparedLut> {
-        self.prepared_fn(move |v| if v > 0 { (num + v / 2) / v } else { num })
+        self.prepared_fn(recip_fn(num))
     }
 
     /// Apply an arbitrary univariate signed function (1 PBS). The LUT is
@@ -251,7 +271,14 @@ impl FheContext {
     pub fn pbs_many(&self, xs: &[CtInt], lut: &PreparedLut) -> Vec<CtInt> {
         let jobs: Vec<(&LweCiphertext, &PreparedLut)> =
             xs.iter().map(|x| (&x.ct, lut)).collect();
-        self.sk.pbs_batch(&jobs, self.threads()).into_iter().map(|ct| CtInt { ct }).collect()
+        self.pbs_jobs(&jobs).into_iter().map(|ct| CtInt { ct }).collect()
+    }
+
+    /// Run heterogeneous (ciphertext, LUT) jobs through the batch engine
+    /// under this context's worker budget — one circuit level (possibly
+    /// spanning several fused requests) per call.
+    pub fn pbs_jobs(&self, jobs: &[(&LweCiphertext, &PreparedLut)]) -> Vec<LweCiphertext> {
+        self.sk.pbs_batch(jobs, self.threads())
     }
 
     /// Batched ReLU.

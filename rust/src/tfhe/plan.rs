@@ -1,0 +1,673 @@
+//! Declarative circuit-plan IR (S5b): the plan-then-execute seam of the
+//! FHE layer.
+//!
+//! A [`CircuitPlan`] is a DAG over two node classes, mirroring the
+//! paper's cost model exactly: *free* linear ops (add/sub/neg/plain
+//! scalar/sum — 0 PBS) and [`Node::Pbs`] nodes (1 PBS each, referencing a
+//! [`LutRef`] into the plan's LUT registry). Plans are built by
+//! [`CircuitBuilder`] as pure data — no keys, no ciphertexts — so the
+//! same object serves three consumers:
+//!
+//! * **Cost**: [`CircuitPlan::pbs_count`] / [`CircuitPlan::levels`] /
+//!   [`CircuitPlan::level_sizes`] are the single source of truth for the
+//!   PBS accounting the optimizer and the bench tables previously
+//!   hand-derived per circuit.
+//! * **Execution**: [`CircuitPlan::execute`] runs the leveling pass —
+//!   every PBS node's *level* is its bootstrap depth, so all nodes of one
+//!   level are independent — and issues **one batched PBS call per
+//!   level** through the [`ServerKey::pbs_batch`] worker pool. Because a
+//!   PBS is deterministic and the linear ops are evaluated in the same
+//!   dataflow, plan execution is bit-identical to the hand-staged
+//!   formulation it replaced (pinned by tests in `fhe_circuits`).
+//! * **Fusion**: [`PlanRun`] exposes the level loop one step at a time
+//!   (jobs out, results in), which is the seam the serving coordinator's
+//!   `FusedLevelExecutor` uses to merge the current level of *every
+//!   co-scheduled request* into a single `pbs_batch` submission.
+//!
+//! [`ServerKey::pbs_batch`]: super::bootstrap::ServerKey::pbs_batch
+
+use super::bootstrap::PreparedLut;
+use super::lwe::LweCiphertext;
+use super::ops::{CtInt, FheContext};
+use std::sync::Arc;
+
+/// Index of a node inside its plan (topological: a node only references
+/// smaller ids).
+pub type NodeId = usize;
+
+/// Reference into a plan's LUT registry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LutRef(pub usize);
+
+/// One DAG node. Linear nodes cost 0 PBS; `Pbs` costs exactly 1.
+#[derive(Clone, Debug)]
+pub enum Node {
+    /// The i-th circuit input ciphertext.
+    Input(usize),
+    /// A public (trivially encrypted) constant.
+    Const(i64),
+    Add(NodeId, NodeId),
+    Sub(NodeId, NodeId),
+    Neg(NodeId),
+    AddConst(NodeId, i64),
+    ScalarMul(NodeId, i64),
+    /// Sum of many operands (len − 1 homomorphic additions).
+    Sum(Vec<NodeId>),
+    /// Programmable bootstrap: apply `lut` to `input`.
+    Pbs { input: NodeId, lut: LutRef },
+}
+
+/// A univariate signed function registered with the plan; resolved to a
+/// [`PreparedLut`] (through the context's table-keyed cache) at run time.
+type LutFn = Arc<dyn Fn(i64) -> i64 + Send + Sync>;
+
+/// Builder for [`CircuitPlan`]s. Append-only, so node ids come out in
+/// topological order by construction.
+pub struct CircuitBuilder {
+    nodes: Vec<Node>,
+    luts: Vec<LutFn>,
+    n_inputs: usize,
+    outputs: Vec<NodeId>,
+    /// Cached refs for the standard tables (relu/abs/x²⁄4/identity) so
+    /// each plan registers them at most once (mirrors `FheContext`'s
+    /// prepared standard LUTs).
+    std_luts: [Option<LutRef>; 4],
+}
+
+/// Indices into `CircuitBuilder::std_luts`.
+const STD_RELU: usize = 0;
+const STD_ABS: usize = 1;
+const STD_SQ4: usize = 2;
+const STD_ID: usize = 3;
+
+impl CircuitBuilder {
+    pub fn new() -> Self {
+        CircuitBuilder {
+            nodes: Vec::new(),
+            luts: Vec::new(),
+            n_inputs: 0,
+            outputs: Vec::new(),
+            std_luts: [None; 4],
+        }
+    }
+
+    fn push(&mut self, node: Node) -> NodeId {
+        self.nodes.push(node);
+        self.nodes.len() - 1
+    }
+
+    fn check(&self, id: NodeId) {
+        assert!(id < self.nodes.len(), "node {id} not yet defined");
+    }
+
+    /// Declare `n` fresh circuit inputs; returns their node ids in order.
+    pub fn inputs(&mut self, n: usize) -> Vec<NodeId> {
+        (0..n)
+            .map(|_| {
+                let idx = self.n_inputs;
+                self.n_inputs += 1;
+                self.push(Node::Input(idx))
+            })
+            .collect()
+    }
+
+    /// A public constant (trivial ciphertext at run time).
+    pub fn constant(&mut self, v: i64) -> NodeId {
+        self.push(Node::Const(v))
+    }
+
+    // ----- free linear ops (0 PBS) -----
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.check(a);
+        self.check(b);
+        self.push(Node::Add(a, b))
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.check(a);
+        self.check(b);
+        self.push(Node::Sub(a, b))
+    }
+
+    pub fn neg(&mut self, a: NodeId) -> NodeId {
+        self.check(a);
+        self.push(Node::Neg(a))
+    }
+
+    pub fn add_const(&mut self, a: NodeId, c: i64) -> NodeId {
+        self.check(a);
+        self.push(Node::AddConst(a, c))
+    }
+
+    /// Multiplication by a plaintext literal (0 PBS, per the paper).
+    pub fn scalar_mul(&mut self, a: NodeId, c: i64) -> NodeId {
+        self.check(a);
+        self.push(Node::ScalarMul(a, c))
+    }
+
+    /// Sum of many nodes (0 PBS; evaluated exactly like `FheContext::sum`).
+    pub fn sum(&mut self, xs: &[NodeId]) -> NodeId {
+        assert!(!xs.is_empty(), "sum of zero nodes");
+        for &x in xs {
+            self.check(x);
+        }
+        self.push(Node::Sum(xs.to_vec()))
+    }
+
+    // ----- PBS nodes (1 PBS each) -----
+
+    /// Register a univariate signed function; the returned [`LutRef`] can
+    /// feed any number of [`CircuitBuilder::pbs`] nodes.
+    pub fn lut<F: Fn(i64) -> i64 + Send + Sync + 'static>(&mut self, f: F) -> LutRef {
+        self.luts.push(Arc::new(f));
+        LutRef(self.luts.len() - 1)
+    }
+
+    /// Apply a registered LUT (1 PBS).
+    pub fn pbs(&mut self, x: NodeId, lut: LutRef) -> NodeId {
+        self.check(x);
+        assert!(lut.0 < self.luts.len(), "LUT {} not registered", lut.0);
+        self.push(Node::Pbs { input: x, lut })
+    }
+
+    /// Register-once lookup of a standard table.
+    fn std_lut(&mut self, idx: usize, f: fn(i64) -> i64) -> LutRef {
+        match self.std_luts[idx] {
+            Some(l) => l,
+            None => {
+                let l = self.lut(f);
+                self.std_luts[idx] = Some(l);
+                l
+            }
+        }
+    }
+
+    /// ReLU x⁺ (1 PBS).
+    pub fn relu(&mut self, x: NodeId) -> NodeId {
+        let lut = self.std_lut(STD_RELU, |v| v.max(0));
+        self.pbs(x, lut)
+    }
+
+    /// |x| (1 PBS).
+    pub fn abs(&mut self, x: NodeId) -> NodeId {
+        let lut = self.std_lut(STD_ABS, |v: i64| v.abs());
+        self.pbs(x, lut)
+    }
+
+    /// floor(x²/4) (1 PBS) — the paper's eq. 2 table.
+    pub fn square_quarter(&mut self, x: NodeId) -> NodeId {
+        let lut = self.std_lut(STD_SQ4, |v| (v * v).div_euclid(4));
+        self.pbs(x, lut)
+    }
+
+    /// Identity noise refresh (1 PBS).
+    pub fn refresh(&mut self, x: NodeId) -> NodeId {
+        let lut = self.std_lut(STD_ID, |v| v);
+        self.pbs(x, lut)
+    }
+
+    /// Ciphertext × ciphertext via the paper's eq. 1 (2 PBS):
+    /// `ab = PBS(x²/4; a+b) − PBS(x²/4; a−b)`.
+    pub fn ct_mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let s = self.add(a, b);
+        let d = self.sub(a, b);
+        let p1 = self.square_quarter(s);
+        let p2 = self.square_quarter(d);
+        self.sub(p1, p2)
+    }
+
+    /// Mark a node as a circuit output (in call order).
+    pub fn output(&mut self, id: NodeId) {
+        self.check(id);
+        self.outputs.push(id);
+    }
+
+    /// Finalize: runs the leveling pass and freezes the DAG.
+    pub fn build(self) -> CircuitPlan {
+        // Leveling: a node's level is its bootstrap depth — 0 for inputs
+        // and constants, max over operands for linear nodes, operand
+        // level + 1 for PBS nodes. Nodes are topological, so one forward
+        // scan suffices. The same scan records each node's consumer count
+        // (+1 per output listing) so the executor can free intermediate
+        // ciphertexts after their last read instead of holding the whole
+        // DAG live.
+        let mut levels = vec![0usize; self.nodes.len()];
+        let mut uses = vec![0u32; self.nodes.len()];
+        let mut max_level = 0usize;
+        for (id, node) in self.nodes.iter().enumerate() {
+            let lvl = match node {
+                Node::Input(_) | Node::Const(_) => 0,
+                Node::Add(a, b) | Node::Sub(a, b) => {
+                    uses[*a] += 1;
+                    uses[*b] += 1;
+                    levels[*a].max(levels[*b])
+                }
+                Node::Neg(a) | Node::AddConst(a, _) | Node::ScalarMul(a, _) => {
+                    uses[*a] += 1;
+                    levels[*a]
+                }
+                Node::Sum(xs) => {
+                    let mut lvl = 0;
+                    for &x in xs {
+                        uses[x] += 1;
+                        lvl = lvl.max(levels[x]);
+                    }
+                    lvl
+                }
+                Node::Pbs { input, .. } => {
+                    uses[*input] += 1;
+                    levels[*input] + 1
+                }
+            };
+            levels[id] = lvl;
+            max_level = max_level.max(lvl);
+        }
+        for &out in &self.outputs {
+            uses[out] += 1;
+        }
+        CircuitPlan {
+            nodes: self.nodes,
+            luts: self.luts,
+            n_inputs: self.n_inputs,
+            outputs: self.outputs,
+            levels,
+            uses,
+            max_level,
+        }
+    }
+}
+
+impl Default for CircuitBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A finalized circuit plan: the DAG, its LUT registry, and the result of
+/// the leveling pass.
+pub struct CircuitPlan {
+    nodes: Vec<Node>,
+    luts: Vec<LutFn>,
+    n_inputs: usize,
+    outputs: Vec<NodeId>,
+    /// Per-node bootstrap depth (see [`CircuitBuilder::build`]).
+    levels: Vec<usize>,
+    /// Per-node consumer count (operand reads + output listings) — the
+    /// executor's liveness information.
+    uses: Vec<u32>,
+    max_level: usize,
+}
+
+impl CircuitPlan {
+    /// Number of circuit input ciphertexts.
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// Number of circuit outputs.
+    pub fn n_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Total programmable bootstraps of one execution — the paper's cost
+    /// unit, now derived from the same DAG the executor runs.
+    pub fn pbs_count(&self) -> u64 {
+        self.nodes.iter().filter(|n| matches!(n, Node::Pbs { .. })).count() as u64
+    }
+
+    /// Number of PBS execution levels (batched rounds).
+    pub fn levels(&self) -> usize {
+        self.max_level
+    }
+
+    /// PBS jobs per level, index 0 = level 1. Sums to `pbs_count()`.
+    pub fn level_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.max_level];
+        for (id, node) in self.nodes.iter().enumerate() {
+            if matches!(node, Node::Pbs { .. }) {
+                sizes[self.levels[id] - 1] += 1;
+            }
+        }
+        sizes
+    }
+
+    /// PBS-free homomorphic ops of one execution (`Sum` of k operands
+    /// counts its k − 1 additions), for the optimizer's linear-cost term.
+    pub fn linear_op_count(&self) -> u64 {
+        self.nodes
+            .iter()
+            .map(|n| match n {
+                Node::Input(_) | Node::Const(_) | Node::Pbs { .. } => 0,
+                Node::Sum(xs) => xs.len() as u64 - 1,
+                _ => 1,
+            })
+            .sum()
+    }
+
+    /// Execute the plan: one batched PBS submission per level through the
+    /// context's worker pool, linear ops evaluated between levels.
+    pub fn execute(&self, ctx: &FheContext, inputs: &[CtInt]) -> Vec<CtInt> {
+        let mut run = PlanRun::new(self, ctx, inputs);
+        while let Some(jobs) = run.next_level_jobs(ctx) {
+            let refs: Vec<(&LweCiphertext, &PreparedLut)> =
+                jobs.iter().map(|(ct, lut)| (&ct.ct, lut.as_ref())).collect();
+            let outs: Vec<CtInt> =
+                ctx.pbs_jobs(&refs).into_iter().map(|ct| CtInt { ct }).collect();
+            run.supply(outs);
+        }
+        run.finish(ctx)
+    }
+}
+
+/// One in-flight execution of a plan, advanced level by level: call
+/// [`PlanRun::next_level_jobs`] to obtain the current level's PBS jobs,
+/// run them (any way you like — this is the coordinator's fusion seam),
+/// hand the results back via [`PlanRun::supply`], repeat until `None`,
+/// then [`PlanRun::finish`].
+pub struct PlanRun<'p> {
+    plan: &'p CircuitPlan,
+    values: Vec<Option<CtInt>>,
+    /// Whether a node has been computed (its value may since have been
+    /// freed once every consumer read it).
+    evaluated: Vec<bool>,
+    /// Consumer reads left per node; at 0 the value is dropped, so peak
+    /// residency tracks the live frontier, not the whole DAG.
+    remaining: Vec<u32>,
+    /// LUT registry resolved against the executing context (cache-backed).
+    resolved: Vec<Arc<PreparedLut>>,
+    /// Next PBS level to execute (1-based).
+    current: usize,
+    /// Pbs node ids whose jobs were handed out and await `supply`.
+    pending: Vec<NodeId>,
+}
+
+impl<'p> PlanRun<'p> {
+    pub fn new(plan: &'p CircuitPlan, ctx: &FheContext, inputs: &[CtInt]) -> Self {
+        assert_eq!(inputs.len(), plan.n_inputs, "plan expects {} inputs", plan.n_inputs);
+        let resolved = plan.luts.iter().map(|f| ctx.prepared_dyn(f.as_ref())).collect();
+        let mut values: Vec<Option<CtInt>> = plan.nodes.iter().map(|_| None).collect();
+        let mut evaluated = vec![false; plan.nodes.len()];
+        for (id, node) in plan.nodes.iter().enumerate() {
+            match node {
+                Node::Input(i) => values[id] = Some(inputs[*i].clone()),
+                Node::Const(v) => values[id] = Some(ctx.constant(*v)),
+                _ => continue,
+            }
+            evaluated[id] = true;
+        }
+        PlanRun {
+            plan,
+            values,
+            evaluated,
+            remaining: plan.uses.clone(),
+            resolved,
+            current: 1,
+            pending: Vec::new(),
+        }
+    }
+
+    fn value(&self, i: NodeId) -> &CtInt {
+        self.values[i].as_ref().expect("operand live (topological order + use counts)")
+    }
+
+    /// Record one consumer read of `i`; free the value after the last.
+    fn release(&mut self, i: NodeId) {
+        self.remaining[i] -= 1;
+        if self.remaining[i] == 0 {
+            self.values[i] = None;
+        }
+    }
+
+    /// Evaluate every not-yet-evaluated linear node of level < `bound`.
+    /// Ids are topological, so a single in-order pass sees all operands
+    /// (earlier linear nodes this pass, PBS results from prior levels).
+    fn eval_linear(&mut self, ctx: &FheContext, bound: usize) {
+        for id in 0..self.plan.nodes.len() {
+            if self.evaluated[id] || self.plan.levels[id] >= bound {
+                continue;
+            }
+            // Operand refs live in the plan (`&'p`), so computing the
+            // value and releasing the operands can interleave freely
+            // with `&mut self` bookkeeping.
+            let v = match &self.plan.nodes[id] {
+                Node::Input(_) | Node::Const(_) => continue, // prefilled
+                Node::Pbs { .. } => continue,                // supplied per level
+                Node::Add(a, b) => {
+                    let v = ctx.add(self.value(*a), self.value(*b));
+                    self.release(*a);
+                    self.release(*b);
+                    v
+                }
+                Node::Sub(a, b) => {
+                    let v = ctx.sub(self.value(*a), self.value(*b));
+                    self.release(*a);
+                    self.release(*b);
+                    v
+                }
+                Node::Neg(a) => {
+                    let v = ctx.neg(self.value(*a));
+                    self.release(*a);
+                    v
+                }
+                Node::AddConst(a, c) => {
+                    let v = ctx.add_const(self.value(*a), *c);
+                    self.release(*a);
+                    v
+                }
+                Node::ScalarMul(a, c) => {
+                    let v = ctx.scalar_mul(self.value(*a), *c);
+                    self.release(*a);
+                    v
+                }
+                Node::Sum(xs) => {
+                    let refs: Vec<&CtInt> = xs.iter().map(|&x| self.value(x)).collect();
+                    let v = ctx.sum_refs(&refs);
+                    drop(refs);
+                    for &x in xs {
+                        self.release(x);
+                    }
+                    v
+                }
+            };
+            self.values[id] = Some(v);
+            self.evaluated[id] = true;
+        }
+    }
+
+    /// The next level's PBS jobs as (input ciphertext, prepared LUT)
+    /// pairs, or `None` once every PBS level has been supplied. Jobs are
+    /// in node-id order; results must come back in the same order.
+    pub fn next_level_jobs(&mut self, ctx: &FheContext) -> Option<Vec<(CtInt, Arc<PreparedLut>)>> {
+        assert!(self.pending.is_empty(), "previous level awaits supply()");
+        if self.current > self.plan.max_level {
+            return None;
+        }
+        self.eval_linear(ctx, self.current);
+        let mut jobs = Vec::new();
+        for (id, node) in self.plan.nodes.iter().enumerate() {
+            if let Node::Pbs { input, lut } = node {
+                if self.plan.levels[id] == self.current {
+                    let ct = self.values[*input]
+                        .clone()
+                        .expect("PBS input live (level < current)");
+                    jobs.push((ct, Arc::clone(&self.resolved[lut.0])));
+                    self.pending.push(id);
+                    self.release(*input);
+                }
+            }
+        }
+        Some(jobs)
+    }
+
+    /// Hand back the results of the jobs returned by the last
+    /// [`PlanRun::next_level_jobs`] call (same order) and advance.
+    pub fn supply(&mut self, outs: Vec<CtInt>) {
+        assert_eq!(outs.len(), self.pending.len(), "level result count mismatch");
+        for (id, ct) in self.pending.drain(..).zip(outs) {
+            self.values[id] = Some(ct);
+            self.evaluated[id] = true;
+        }
+        self.current += 1;
+    }
+
+    /// Evaluate the trailing linear nodes and return the outputs.
+    pub fn finish(mut self, ctx: &FheContext) -> Vec<CtInt> {
+        assert!(
+            self.current > self.plan.max_level && self.pending.is_empty(),
+            "finish() before all PBS levels were executed"
+        );
+        self.eval_linear(ctx, self.plan.max_level + 1);
+        self.plan
+            .outputs
+            .iter()
+            .map(|&id| self.values[id].clone().expect("output live"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::bootstrap::{pbs_count, ClientKey};
+    use crate::tfhe::params::TfheParams;
+    use crate::util::prng::Xoshiro256;
+
+    fn setup() -> (ClientKey, FheContext, Xoshiro256) {
+        let mut rng = Xoshiro256::new(0x9147);
+        let ck = ClientKey::generate(TfheParams::test_for_bits(4), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        (ck, ctx, rng)
+    }
+
+    /// relu(a − b) + |b| · 2 — one plan, two levels of depth 1.
+    fn small_plan() -> CircuitPlan {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(2);
+        let d = b.sub(ins[0], ins[1]);
+        let r = b.relu(d);
+        let ab = b.abs(ins[1]);
+        let ab2 = b.scalar_mul(ab, 2);
+        let out = b.add(r, ab2);
+        b.output(out);
+        b.build()
+    }
+
+    #[test]
+    fn analysis_counts_levels_and_ops() {
+        let p = small_plan();
+        assert_eq!(p.n_inputs(), 2);
+        assert_eq!(p.n_outputs(), 1);
+        assert_eq!(p.pbs_count(), 2);
+        assert_eq!(p.levels(), 1);
+        assert_eq!(p.level_sizes(), vec![2]);
+        assert_eq!(p.linear_op_count(), 3); // sub, scalar_mul, add
+    }
+
+    #[test]
+    fn ct_mul_and_chained_levels() {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(2);
+        let prod = b.ct_mul(ins[0], ins[1]); // level 1 (2 PBS)
+        let r = b.relu(prod); // level 2
+        b.output(r);
+        let p = b.build();
+        assert_eq!(p.pbs_count(), 3);
+        assert_eq!(p.levels(), 2);
+        assert_eq!(p.level_sizes(), vec![2, 1]);
+    }
+
+    #[test]
+    fn sum_counts_len_minus_one_linear_ops() {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(4);
+        let s = b.sum(&ins);
+        b.output(s);
+        let p = b.build();
+        assert_eq!(p.pbs_count(), 0);
+        assert_eq!(p.levels(), 0);
+        assert_eq!(p.linear_op_count(), 3);
+    }
+
+    #[test]
+    fn execute_matches_direct_ops_bit_identically() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup();
+        let p = small_plan();
+        // Values keep every intermediate and the output inside the 4-bit
+        // signed range [−8, 7] (linear ops do not saturate).
+        for (a, b) in [(1i64, -2), (-4, 1), (0, 0), (2, 3)] {
+            let ca = ctx.encrypt(a, &ck, &mut rng);
+            let cb = ctx.encrypt(b, &ck, &mut rng);
+            let before = pbs_count();
+            let outs = p.execute(&ctx, &[ca.clone(), cb.clone()]);
+            assert_eq!(pbs_count() - before, p.pbs_count(), "plan PBS count a={a} b={b}");
+            // Direct formulation of the same dataflow.
+            let want =
+                ctx.add(&ctx.relu(&ctx.sub(&ca, &cb)), &ctx.scalar_mul(&ctx.abs(&cb), 2));
+            assert_eq!(outs.len(), 1);
+            assert_eq!(outs[0].ct, want.ct, "bit-identical a={a} b={b}");
+            assert_eq!(ctx.decrypt(&outs[0], &ck), (a - b).max(0) + 2 * b.abs());
+        }
+    }
+
+    #[test]
+    fn execute_is_thread_invariant() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup();
+        let p = small_plan();
+        let ca = ctx.encrypt(1, &ck, &mut rng);
+        let cb = ctx.encrypt(-2, &ck, &mut rng);
+        let inputs = [ca, cb];
+        ctx.set_threads(1);
+        let reference = p.execute(&ctx, &inputs);
+        for threads in [2usize, 4] {
+            ctx.set_threads(threads);
+            let got = p.execute(&ctx, &inputs);
+            assert_eq!(got[0].ct, reference[0].ct, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn constants_and_pure_linear_plans() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup();
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(1);
+        let c = b.constant(3);
+        let s = b.add(ins[0], c);
+        let t = b.add_const(s, -1);
+        let n = b.neg(t);
+        b.output(n);
+        let p = b.build();
+        assert_eq!(p.pbs_count(), 0);
+        let x = ctx.encrypt(2, &ck, &mut rng);
+        let before = pbs_count();
+        let outs = p.execute(&ctx, &[x]);
+        assert_eq!(pbs_count(), before, "linear plan must not bootstrap");
+        assert_eq!(ctx.decrypt(&outs[0], &ck), -(2 + 3 - 1));
+    }
+
+    #[test]
+    fn stepper_drives_levels_manually() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup();
+        let p = small_plan();
+        let ca = ctx.encrypt(-1, &ck, &mut rng);
+        let cb = ctx.encrypt(2, &ck, &mut rng);
+        let mut run = PlanRun::new(&p, &ctx, &[ca, cb]);
+        let mut rounds = 0;
+        while let Some(jobs) = run.next_level_jobs(&ctx) {
+            rounds += 1;
+            // Execute the level's jobs one by one (any schedule is valid).
+            let outs: Vec<CtInt> = jobs
+                .iter()
+                .map(|(ct, lut)| CtInt { ct: ctx.sk.pbs_prepared(&ct.ct, lut) })
+                .collect();
+            run.supply(outs);
+        }
+        assert_eq!(rounds, p.levels());
+        let outs = run.finish(&ctx);
+        assert_eq!(ctx.decrypt(&outs[0], &ck), (-1i64 - 2).max(0) + 2 * 2);
+    }
+}

@@ -2,7 +2,7 @@
 //!
 //! The offline crate registry only carries the `xla` crate and its build
 //! dependencies, so `rand`, `serde_json` and `proptest` are replaced by
-//! these small in-tree implementations (see DESIGN.md §3, S14).
+//! these small in-tree implementations (see rust/DESIGN.md §3, S14).
 
 pub mod json;
 pub mod prng;

@@ -1,0 +1,168 @@
+//! Cross-request PBS batch fusion: co-scheduled encrypted requests must
+//! (a) execute as fused per-level `pbs_batch` submissions whose sizes are
+//! the *sums* of the per-request plan level sizes, (b) cost exactly the
+//! sum of the per-request plan PBS counts (fusion changes scheduling,
+//! never accounting), and (c) return bit-identical results to
+//! single-request execution.
+
+use inhibitor::coordinator::{BatchPolicy, Coordinator, EnginePath, Payload, RoutePolicy};
+use inhibitor::fhe_circuits::InhibitorFhe;
+use inhibitor::tfhe::ops::CtInt;
+use inhibitor::tfhe::{bootstrap, ClientKey, FheContext, TfheParams};
+use inhibitor::util::prng::{Rng64, Xoshiro256};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// `PBS_COUNT` is process-global and tests in this binary run on parallel
+/// threads; count-sensitive tests serialize through this lock.
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn encrypt_qkv(
+    ctx: &FheContext,
+    ck: &ClientKey,
+    rng: &mut Xoshiro256,
+    t: usize,
+    d: usize,
+) -> Vec<CtInt> {
+    (0..3 * t * d)
+        .map(|i| {
+            let v = if i < 2 * t * d {
+                rng.next_range_i64(-2, 2) // q, k codes
+            } else {
+                rng.next_range_i64(0, 3) // v codes
+            };
+            ctx.encrypt(v, ck, rng)
+        })
+        .collect()
+}
+
+#[test]
+fn coscheduled_requests_fuse_and_match_single_request_execution() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xFA5E);
+    let (t, d) = (2usize, 2usize);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let head = InhibitorFhe::new(d, 1);
+    let plan = head.plan(t, d);
+
+    let mut coord = Coordinator::new(RoutePolicy::PreferQuant);
+    let session = coord.keymgr.create_session(ctx);
+    // max_batch = n_req with a generous wait: both submissions land in
+    // one batch, which the engine executes as one fused run.
+    let n_req = 2usize;
+    coord
+        .add_fhe_engine(
+            session,
+            "inhibitor",
+            t,
+            d,
+            BatchPolicy { max_batch: n_req, max_wait: Duration::from_secs(2), queue_cap: 64 },
+        )
+        .unwrap();
+    let sess = coord.keymgr.session(session).unwrap();
+
+    // Per-request bundles + solo reference executions on the same
+    // context (PBS is deterministic, so solo vs fused is exact).
+    let bundles: Vec<Vec<CtInt>> =
+        (0..n_req).map(|_| encrypt_qkv(&sess.ctx, &ck, &mut rng, t, d)).collect();
+    let solo: Vec<Vec<CtInt>> =
+        bundles.iter().map(|inputs| plan.execute(&sess.ctx, inputs)).collect();
+
+    let before = bootstrap::pbs_count();
+    let rxs: Vec<_> = bundles
+        .iter()
+        .map(|inputs| {
+            let blob = sess.register(inputs.clone());
+            coord
+                .submit(
+                    EnginePath::Encrypted { session, mechanism: "inhibitor".into() },
+                    Payload::CiphertextRef(blob),
+                )
+                .unwrap()
+        })
+        .collect();
+    let resps: Vec<_> =
+        rxs.into_iter().map(|rx| rx.recv_timeout(Duration::from_secs(300)).unwrap()).collect();
+    for resp in &resps {
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    // Accounting: the fused batch costs exactly Σ per-request plan counts.
+    assert_eq!(
+        bootstrap::pbs_count() - before,
+        n_req as u64 * plan.pbs_count(),
+        "fusion must not change the PBS count"
+    );
+    // The engine recorded one fused submission per plan level, each the
+    // size of the summed per-request level (worker-pool fill).
+    let m = coord.metrics();
+    assert_eq!(
+        m.fused_levels.load(std::sync::atomic::Ordering::Relaxed),
+        plan.levels() as u64,
+        "both requests must ride one fused batch"
+    );
+    assert_eq!(
+        m.fused_pbs.load(std::sync::atomic::Ordering::Relaxed),
+        n_req as u64 * plan.pbs_count()
+    );
+    let expect_mean = (n_req as u64 * plan.pbs_count()) as f64 / plan.levels() as f64;
+    assert!((m.mean_fused_level_size() - expect_mean).abs() < 1e-9);
+    // Results: bit-identical to the solo executions.
+    for (r, resp) in resps.iter().enumerate() {
+        let cts = sess.take(resp.output[0] as u64).unwrap();
+        assert_eq!(cts.len(), t * d);
+        for (i, (got, want)) in cts.iter().zip(&solo[r]).enumerate() {
+            assert_eq!(got.ct, want.ct, "request {r} output {i}");
+        }
+        // And equal to the plaintext mirror.
+        let vals: Vec<i64> = bundles[r].iter().map(|c| sess.ctx.decrypt(c, &ck)).collect();
+        let q = inhibitor::tensor::ITensor::from_vec(&[t, d], vals[0..t * d].to_vec());
+        let k = inhibitor::tensor::ITensor::from_vec(&[t, d], vals[t * d..2 * t * d].to_vec());
+        let v = inhibitor::tensor::ITensor::from_vec(&[t, d], vals[2 * t * d..].to_vec());
+        let mirror = head.mirror(&q, &k, &v, sess.ctx.enc.max_signed());
+        let got: Vec<i64> = cts.iter().map(|c| sess.ctx.decrypt(c, &ck)).collect();
+        assert_eq!(got, mirror.data, "request {r} mirror");
+    }
+}
+
+#[test]
+fn lone_request_still_served_through_fused_path() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x10E);
+    let (t, d) = (2usize, 2usize);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let head = InhibitorFhe::new(d, 1);
+    let plan = head.plan(t, d);
+    let mut coord = Coordinator::new(RoutePolicy::PreferQuant);
+    let session = coord.keymgr.create_session(ctx);
+    coord
+        .add_fhe_engine(
+            session,
+            "inhibitor",
+            t,
+            d,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5), queue_cap: 64 },
+        )
+        .unwrap();
+    let sess = coord.keymgr.session(session).unwrap();
+    let inputs = encrypt_qkv(&sess.ctx, &ck, &mut rng, t, d);
+    let want = plan.execute(&sess.ctx, &inputs);
+    let blob = sess.register(inputs);
+    let resp = coord
+        .infer_blocking(
+            EnginePath::Encrypted { session, mechanism: "inhibitor".into() },
+            Payload::CiphertextRef(blob),
+            Duration::from_secs(300),
+        )
+        .unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let cts = sess.take(resp.output[0] as u64).unwrap();
+    for (got, want) in cts.iter().zip(&want) {
+        assert_eq!(got.ct, want.ct, "batch-of-one must equal solo execution");
+    }
+}
