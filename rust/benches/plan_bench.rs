@@ -9,10 +9,10 @@
 
 use inhibitor::bench_harness::{bench, BenchConfig};
 use inhibitor::coordinator::FusedLevelExecutor;
-use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe};
+use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
 use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::ops::CtInt;
-use inhibitor::tfhe::{CircuitPlan, ClientKey, FheContext, TfheParams};
+use inhibitor::tfhe::{CircuitPlan, ClientKey, FheContext, PlanRewriter, TfheParams};
 use inhibitor::util::json::Json;
 use inhibitor::util::prng::Xoshiro256;
 
@@ -105,6 +105,50 @@ fn main() {
         ]));
     }
 
+    // === Rewritten vs unrewritten plans (CSE + multi-value packing) ====
+    // The signed inhibitor is the circuit where both passes bite: the
+    // verbatim eq.-7 plan carries T-fold duplicate V⁺/V⁻ splits (CSE)
+    // whose survivors share inputs pairwise (packing). Counts come from
+    // the plans themselves; latencies from executing both on one keyset.
+    println!("\n=== Plan rewrites: signed inhibitor T={t}, d={d} (ϑ=1 packing budget) ===");
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(4), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    ctx.set_threads(threads);
+    let head = InhibitorSignedFhe::new(d, 1);
+    let raw = head.plan(t, d);
+    let (rewritten, stats) = PlanRewriter::for_ctx(&ctx).rewrite(head.plan(t, d));
+    let mut inputs: Vec<CtInt> = Vec::with_capacity(3 * t * d);
+    for (lo, hi, n) in [(-2i64, 1i64, 2 * t * d), (-3, 3, t * d)] {
+        let vals = ITensor::random(&[n, 1], lo, hi, &mut rng);
+        inputs.extend(vals.data.iter().map(|&val| ctx.encrypt(val, &ck, &mut rng)));
+    }
+    let m_raw = bench("signed unrewritten", cfg, || raw.execute(&ctx, &inputs));
+    let m_rw = bench("signed rewritten", cfg, || rewritten.execute(&ctx, &inputs));
+    println!("  {}", m_raw.summary());
+    println!("  {}", m_rw.summary());
+    println!(
+        "  pbs {} -> {}, blind rotations {} -> {} (cse_merged={}, packed={} in {} groups)",
+        raw.pbs_count(),
+        rewritten.pbs_count(),
+        raw.blind_rotation_count(),
+        rewritten.blind_rotation_count(),
+        stats.cse_merged,
+        stats.packed_luts,
+        stats.multi_groups,
+    );
+    let rewrite_records = vec![Json::obj(vec![
+        ("mechanism", Json::str("inhibitor-signed")),
+        ("pbs_unrewritten", Json::num(raw.pbs_count() as f64)),
+        ("pbs_rewritten", Json::num(rewritten.pbs_count() as f64)),
+        ("blind_rotations_unrewritten", Json::num(raw.blind_rotation_count() as f64)),
+        ("blind_rotations_rewritten", Json::num(rewritten.blind_rotation_count() as f64)),
+        ("cse_merged", Json::num(stats.cse_merged as f64)),
+        ("multi_groups", Json::num(stats.multi_groups as f64)),
+        ("unrewritten_s", Json::num(m_raw.mean_s)),
+        ("rewritten_s", Json::num(m_rw.mean_s)),
+        ("speedup", Json::num(m_raw.mean_s / m_rw.mean_s)),
+    ])];
+
     let record = Json::obj(vec![
         ("bench", Json::str("plan_bench")),
         ("seq_len", Json::num(t as f64)),
@@ -112,6 +156,7 @@ fn main() {
         ("threads", Json::num(threads as f64)),
         ("plan_vs_staged", Json::arr(records)),
         ("fusion", Json::arr(fusion_records)),
+        ("rewrite", Json::arr(rewrite_records)),
     ]);
     // Write next to the workspace root (cargo runs benches with CWD at
     // the package root), where the perf-trajectory record is checked in.

@@ -17,20 +17,22 @@
 //! `CircuitPlan::execute` and the total PBS count is the sum of the plan
 //! counts.
 
-use crate::tfhe::bootstrap::PreparedLut;
-use crate::tfhe::lwe::LweCiphertext;
 use crate::tfhe::ops::{CtInt, FheContext};
-use crate::tfhe::plan::{CircuitPlan, PlanRun};
-use std::sync::Arc;
+use crate::tfhe::plan::{CircuitPlan, LevelJob, PlanRun};
 
 /// What one fused execution did — the observability the "worker pool
 /// actually fills up" claim rests on.
 #[derive(Clone, Debug, Default)]
 pub struct FusedStats {
-    /// Union batch size submitted to `pbs_batch` at each level.
+    /// Union batch size (bootstrap jobs, i.e. blind rotations) submitted
+    /// to the worker pool at each level.
     pub level_batch_sizes: Vec<usize>,
-    /// Total PBS across all fused requests (= Σ plan.pbs_count()).
+    /// Total LUT evaluations across all fused requests
+    /// (= Σ plan.pbs_count()).
     pub pbs_total: u64,
+    /// Total blind rotations (= Σ plan.blind_rotation_count(); smaller
+    /// than `pbs_total` when the plans carry packed multi-value nodes).
+    pub blind_rotations: u64,
 }
 
 /// Lock-step executor over many plan runs sharing one context.
@@ -58,12 +60,14 @@ impl<'c> FusedLevelExecutor<'c> {
         let mut stats = FusedStats::default();
         loop {
             // Gather the next level of every still-running request.
-            let mut level_jobs: Vec<(CtInt, Arc<PreparedLut>)> = Vec::new();
+            let mut level_jobs: Vec<LevelJob> = Vec::new();
+            // Per run: flattened output count to hand back (a packed
+            // multi job contributes several outputs for one submission).
             let mut counts: Vec<Option<usize>> = Vec::with_capacity(runs.len());
             for run in runs.iter_mut() {
                 match run.next_level_jobs(ctx) {
                     Some(jobs) => {
-                        counts.push(Some(jobs.len()));
+                        counts.push(Some(jobs.iter().map(LevelJob::n_outputs).sum()));
                         level_jobs.extend(jobs);
                     }
                     None => counts.push(None),
@@ -73,11 +77,10 @@ impl<'c> FusedLevelExecutor<'c> {
                 break;
             }
             stats.level_batch_sizes.push(level_jobs.len());
-            stats.pbs_total += level_jobs.len() as u64;
+            stats.blind_rotations += level_jobs.len() as u64;
+            stats.pbs_total += level_jobs.iter().map(|j| j.n_outputs() as u64).sum::<u64>();
             // One fused submission for the whole level.
-            let refs: Vec<(&LweCiphertext, &PreparedLut)> =
-                level_jobs.iter().map(|(ct, lut)| (&ct.ct, lut.as_ref())).collect();
-            let mut outs = ctx.pbs_jobs(&refs).into_iter().map(|ct| CtInt { ct });
+            let mut outs = ctx.pbs_level(&level_jobs).into_iter();
             // Scatter results back to their runs (same order as gathered).
             for (run, count) in runs.iter_mut().zip(&counts) {
                 if let Some(n) = count {
@@ -132,6 +135,7 @@ mod tests {
         // Accounting: fusion reschedules, never changes the count.
         assert_eq!(pbs_count() - before, 3 * plan.pbs_count(), "total PBS");
         assert_eq!(stats.pbs_total, 3 * plan.pbs_count());
+        assert_eq!(stats.blind_rotations, stats.pbs_total, "unpacked: 1 rotation per LUT");
         let want_sizes: Vec<usize> = plan.level_sizes().iter().map(|s| 3 * s).collect();
         assert_eq!(stats.level_batch_sizes, want_sizes, "summed per-level batch sizes");
         // Results: bit-identical to solo execution, request by request.
@@ -181,5 +185,57 @@ mod tests {
         // Bit-identity with solo runs.
         assert_eq!(outs[0][0].ct, shallow.execute(&ctx, &[xs])[0].ct);
         assert_eq!(outs[1][0].ct, deep.execute(&ctx, &[xd])[0].ct);
+    }
+
+    #[test]
+    fn fused_execution_carries_packed_multi_value_plans() {
+        // Two co-scheduled signed-inhibitor requests on a packing-capable
+        // set: the fused level loop must route the MultiPbs jobs through
+        // the mixed worker pool, keep accounting exact, and stay
+        // bit-identical to solo execution of the same rewritten plan.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        use crate::fhe_circuits::InhibitorSignedFhe;
+        let mut rng = Xoshiro256::new(0xF05F);
+        let ck = ClientKey::generate(TfheParams::test_multi_lut(4), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let (t, d) = (2usize, 2usize);
+        let head = InhibitorSignedFhe::new(d, 1);
+        let plan = head.plan_for(&ctx, t, d);
+        assert!(
+            plan.blind_rotation_count() < plan.pbs_count(),
+            "signed plan must actually carry packed nodes"
+        );
+        let make_inputs = |rng: &mut Xoshiro256| -> Vec<CtInt> {
+            (0..3 * t * d)
+                .map(|i| {
+                    let v = if i < 2 * t * d {
+                        rng.next_range_i64(-2, 1) // q, k
+                    } else {
+                        rng.next_range_i64(-3, 3) // v (signed values)
+                    };
+                    ctx.encrypt(v, &ck, rng)
+                })
+                .collect()
+        };
+        let bundles: Vec<Vec<CtInt>> = (0..2).map(|_| make_inputs(&mut rng)).collect();
+        let solo: Vec<Vec<CtInt>> =
+            bundles.iter().map(|inputs| plan.execute(&ctx, inputs)).collect();
+        let requests: Vec<(&CircuitPlan, &[CtInt])> =
+            bundles.iter().map(|b| (plan.as_ref(), b.as_slice())).collect();
+        let before_pbs = pbs_count();
+        let before_rot = crate::tfhe::bootstrap::blind_rotation_count();
+        let (fused, stats) = FusedLevelExecutor::new(&ctx).run(&requests);
+        assert_eq!(pbs_count() - before_pbs, 2 * plan.pbs_count());
+        assert_eq!(
+            crate::tfhe::bootstrap::blind_rotation_count() - before_rot,
+            2 * plan.blind_rotation_count()
+        );
+        assert_eq!(stats.pbs_total, 2 * plan.pbs_count());
+        assert_eq!(stats.blind_rotations, 2 * plan.blind_rotation_count());
+        for (r, (f, s)) in fused.iter().zip(&solo).enumerate() {
+            for (i, (a, b)) in f.iter().zip(s.iter()).enumerate() {
+                assert_eq!(a.ct, b.ct, "request {r} output {i}");
+            }
+        }
     }
 }

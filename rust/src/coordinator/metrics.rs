@@ -67,8 +67,11 @@ pub struct Metrics {
     /// Fused PBS levels executed by encrypted engines (one per
     /// cross-request `pbs_batch` submission).
     pub fused_levels: AtomicU64,
-    /// Total PBS jobs submitted through fused levels.
+    /// Total LUT evaluations submitted through fused levels.
     pub fused_pbs: AtomicU64,
+    /// Total blind rotations behind those evaluations — smaller than
+    /// `fused_pbs` when the rewritten plans pack multi-value bootstraps.
+    pub fused_blind_rotations: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -98,7 +101,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
-             fused_levels={} fused_pbs={} mean_latency={} p50={} p99={}",
+             fused_levels={} fused_pbs={} fused_blind_rotations={} mean_latency={} p50={} \
+             p99={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -106,6 +110,7 @@ impl Metrics {
             self.mean_batch_size(),
             self.fused_levels.load(Ordering::Relaxed),
             self.fused_pbs.load(Ordering::Relaxed),
+            self.fused_blind_rotations.load(Ordering::Relaxed),
             crate::bench_harness::Measurement::fmt_time(self.latency.mean_s()),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.5)),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.99)),

@@ -163,9 +163,6 @@ impl Coordinator {
         // aliases like "softmax" select the dot-product circuit.
         let mech = crate::attention::Mechanism::parse(mechanism)
             .ok_or_else(|| format!("unknown mechanism '{mechanism}'"))?;
-        if mech == crate::attention::Mechanism::InhibitorSigned {
-            return Err(format!("no encrypted circuit for '{mechanism}'"));
-        }
         let session = self
             .keymgr
             .session(session_id)
@@ -182,10 +179,21 @@ impl Coordinator {
             &key,
             policy,
             Box::new(move || {
-                let plan = if mech == crate::attention::Mechanism::DotProduct {
-                    DotProductFhe::new(dim, 2).plan(seq_len, dim)
-                } else {
-                    InhibitorFhe::new(dim, 1).plan(seq_len, dim)
+                // The worker holds the head's *rewritten* plan (CSE +
+                // multi-value packing at the session's parameter budget),
+                // cached on the head: the serving path executes the same
+                // reduced-rotation IR the benches and the profile report.
+                let plan = match mech {
+                    crate::attention::Mechanism::DotProduct => {
+                        DotProductFhe::new(dim, 2).plan_for(&session.ctx, seq_len, dim)
+                    }
+                    crate::attention::Mechanism::Inhibitor => {
+                        InhibitorFhe::new(dim, 1).plan_for(&session.ctx, seq_len, dim)
+                    }
+                    crate::attention::Mechanism::InhibitorSigned => {
+                        crate::fhe_circuits::InhibitorSignedFhe::new(dim, 1)
+                            .plan_for(&session.ctx, seq_len, dim)
+                    }
                 };
                 Box::new(move |batch: &[InferRequest]| {
                     // Phase 1 — resolve every request's ciphertext bundle.
@@ -230,11 +238,14 @@ impl Coordinator {
                     // Phase 2 — fused level-synchronous execution across
                     // the whole batch.
                     let requests: Vec<(&crate::tfhe::plan::CircuitPlan, &[_])> =
-                        bundles.iter().map(|(_, b)| (&plan, b.as_slice())).collect();
+                        bundles.iter().map(|(_, b)| (plan.as_ref(), b.as_slice())).collect();
                     let (outs, stats) = FusedLevelExecutor::new(&session.ctx).run(&requests);
                     let levels = stats.level_batch_sizes.len() as u64;
                     metrics.fused_levels.fetch_add(levels, Ordering::Relaxed);
                     metrics.fused_pbs.fetch_add(stats.pbs_total, Ordering::Relaxed);
+                    metrics
+                        .fused_blind_rotations
+                        .fetch_add(stats.blind_rotations, Ordering::Relaxed);
                     // Phase 3 — register each request's result bundle.
                     // The wire protocol carries the blob id as f32, which
                     // is exact only below 2^24 — fail loudly rather than
@@ -350,18 +361,18 @@ mod tests {
     }
 
     #[test]
-    fn fhe_engine_rejects_unknown_or_uncircuited_mechanism() {
+    fn fhe_engine_rejects_unknown_mechanism_and_accepts_all_circuits() {
         let mut c = Coordinator::new(RoutePolicy::PreferQuant);
         // Mechanism checks run before session resolution.
         let err = c.add_fhe_engine(1, "nonsense", 2, 2, BatchPolicy::default()).unwrap_err();
         assert!(err.contains("unknown mechanism"), "{err}");
-        let err =
-            c.add_fhe_engine(1, "inhibitor-signed", 2, 2, BatchPolicy::default()).unwrap_err();
-        assert!(err.contains("no encrypted circuit"), "{err}");
-        // "softmax" is a valid dot-product alias: it must get past the
-        // mechanism check and fail only on the missing session.
-        let err = c.add_fhe_engine(1, "softmax", 2, 2, BatchPolicy::default()).unwrap_err();
-        assert!(err.contains("unknown session"), "{err}");
+        // Every named mechanism now has an encrypted circuit (the signed
+        // inhibitor landed with the rewrite passes): each must get past
+        // the mechanism check and fail only on the missing session.
+        for mech in ["inhibitor-signed", "softmax", "inhibitor"] {
+            let err = c.add_fhe_engine(1, mech, 2, 2, BatchPolicy::default()).unwrap_err();
+            assert!(err.contains("unknown session"), "{mech}: {err}");
+        }
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The two attention mechanisms as TFHE circuits (S6).
+//! The attention mechanisms as TFHE circuits (S6).
 //!
 //! Faithful to how the paper's Concrete circuits must be built:
 //!
@@ -26,11 +26,30 @@
 //! plan-vs-staged bench compare against. The same plan object is the
 //! optimizer's and the bench tables' PBS-count oracle
 //! ([`CircuitPlan::pbs_count`]).
+//!
+//! Since PR 3 `forward()` executes the plan **after** the
+//! [`PlanRewriter`] pipeline (CSE + multi-value bootstrap packing at the
+//! context's parameter budget) and caches the rewritten plan per
+//! `(T, d, budget)` on the head, so repeated forwards neither rebuild
+//! nor re-rewrite the DAG. `plan()` still returns the raw builder
+//! output — the verbatim-dataflow oracle the rewrite tests compare
+//! against. The third circuit, [`InhibitorSignedFhe`] (paper eq. 7),
+//! transcribes the signed inhibition verbatim: the V⁺/V⁻ splits are
+//! emitted per score row, which is exactly the redundancy CSE collapses
+//! (T-fold duplicate `Pbs` nodes) and the packing pass then fuses
+//! (`relu(v)` and `min(v, 0)` of the *same* input share one blind
+//! rotation), so its PBS and blind-rotation counts drop strictly under
+//! rewriting.
+//!
+//! [`PlanRewriter`]: crate::tfhe::plan::PlanRewriter
 
 use crate::tfhe::bootstrap::ClientKey;
 use crate::tfhe::ops::{CtInt, FheContext};
-use crate::tfhe::plan::{CircuitBuilder, CircuitPlan};
+use crate::tfhe::plan::{CircuitBuilder, CircuitPlan, PlanRewriter};
 use crate::util::prng::Xoshiro256;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// A matrix of encrypted integers, row-major.
 pub struct CtMatrix {
@@ -80,6 +99,60 @@ fn scaled_shift_relu(x: i64, gamma: f64, alpha_q: i64) -> i64 {
     ((x as f64 / gamma).round() as i64 - alpha_q).max(0)
 }
 
+/// exp LUT shared by the dot-product circuit and its mirror, normalized
+/// to (0, max_out]: exp of the max score maps to max_out.
+fn exp_lut_at(exp_scale: f64, x: i64, max_out: i64) -> i64 {
+    let e = (x as f64 * exp_scale).exp();
+    (e * max_out as f64).round().clamp(1.0, max_out as f64) as i64
+}
+
+/// Per-head cache of rewritten circuit plans, keyed by
+/// `(T, d, multi-LUT budget)` so one head can serve contexts with
+/// different packing headroom. Shared across clones (`Arc`) and safe
+/// from concurrent engine workers (`Mutex`); `builds` counts cache
+/// misses so tests can pin "one build across repeated forwards".
+#[derive(Default)]
+struct PlanCache {
+    plans: Mutex<HashMap<(usize, usize, usize), Arc<CircuitPlan>>>,
+    builds: AtomicUsize,
+}
+
+impl PlanCache {
+    /// Fetch the rewritten plan for `(t, d)` under `ctx`'s parameter
+    /// budget, building (and rewriting) it on first use.
+    fn rewritten_for(
+        &self,
+        ctx: &FheContext,
+        t: usize,
+        d: usize,
+        build: impl FnOnce() -> CircuitPlan,
+    ) -> Arc<CircuitPlan> {
+        let key = (t, d, ctx.max_multi_lut());
+        if let Some(hit) = self.plans.lock().unwrap().get(&key) {
+            return Arc::clone(hit);
+        }
+        // Build outside the lock (plan construction is pure); a racing
+        // worker may build too — `or_insert` keeps the first insert and
+        // drops the loser's copy, which is fine: both plans are
+        // identical.
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        let (plan, _stats) = PlanRewriter::for_ctx(ctx).rewrite(build());
+        let plan = Arc::new(plan);
+        let mut cache = self.plans.lock().unwrap();
+        Arc::clone(cache.entry(key).or_insert(plan))
+    }
+
+    fn builds(&self) -> usize {
+        self.builds.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanCache").field("builds", &self.builds()).finish()
+    }
+}
+
 /// Square-LUT inputs for a batch of eq.-1 products `a·b`: `a+b` for every
 /// pair (first half), then `a−b` (second half). After the square batch,
 /// product `idx` is `sq[idx] − sq[pairs.len() + idx]`.
@@ -95,17 +168,35 @@ fn mul_halves(ctx: &FheContext, pairs: &[(&CtInt, &CtInt)]) -> Vec<CtInt> {
 }
 
 /// Encrypted Inhibitor attention head.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct InhibitorFhe {
     /// γ literal (paper: √d).
     pub gamma: f64,
     /// Shift α quantized to the score scale.
     pub alpha_q: i64,
+    cache: Arc<PlanCache>,
 }
 
 impl InhibitorFhe {
     pub fn new(dim: usize, alpha_q: i64) -> Self {
-        InhibitorFhe { gamma: (dim as f64).sqrt(), alpha_q }
+        InhibitorFhe {
+            gamma: (dim as f64).sqrt(),
+            alpha_q,
+            cache: Arc::new(PlanCache::default()),
+        }
+    }
+
+    /// The rewritten, `(T, d)`-cached plan `forward()` executes under
+    /// `ctx`. Repeated calls rebuild nothing (see
+    /// [`InhibitorFhe::plan_builds`]).
+    pub fn plan_for(&self, ctx: &FheContext, t: usize, d: usize) -> Arc<CircuitPlan> {
+        self.cache.rewritten_for(ctx, t, d, || self.plan(t, d))
+    }
+
+    /// How many times this head (and its clones) actually built a plan —
+    /// the per-head cache regression counter.
+    pub fn plan_builds(&self) -> usize {
+        self.cache.builds()
     }
 
     /// Build the head's circuit plan for a `[T, d]` head. Inputs are
@@ -157,13 +248,16 @@ impl InhibitorFhe {
     }
 
     /// Encrypted forward: Q, K, V are `[T, d]` ciphertext matrices.
-    /// Builds the circuit plan and executes it — one batched PBS
-    /// submission per level through the context's worker pool.
+    /// Executes the cached rewritten plan — one batched PBS submission
+    /// per level through the context's worker pool. (The rewrite
+    /// pipeline finds nothing to change in this circuit — its verbatim
+    /// dataflow is already duplicate-free with all-distinct PBS inputs —
+    /// so counts and ciphertexts are those of the raw plan.)
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         assert_eq!((k.rows, k.cols), (t, d));
         assert_eq!((v.rows, v.cols), (t, d));
-        let data = self.plan(t, d).execute(ctx, &qkv_inputs(q, k, v));
+        let data = self.plan_for(ctx, t, d).execute(ctx, &qkv_inputs(q, k, v));
         CtMatrix { rows: t, cols: d, data }
     }
 
@@ -245,13 +339,162 @@ impl InhibitorFhe {
     }
 }
 
+/// Encrypted **signed** Inhibitor attention head (paper eq. 7): values
+/// split into positive and negative parts, inhibited symmetrically:
+/// `H_ik = Σ_j [(V⁺_jk − Z_ij)⁺ + (V⁻_jk + Z_ij)⁻]`.
+///
+/// The plan builder transcribes the equation verbatim: the V⁺/V⁻ split
+/// PBS are re-emitted inside the per-query-row loop (duplicated across
+/// the `T` rows, exactly as eq. 7 reads), and the two splits are two
+/// *different* LUTs — `relu` and `min(·,0)` — of the *same* value
+/// ciphertext. That makes this the circuit where both rewrite passes
+/// bite: CSE collapses the T-fold duplicate splits
+/// (`5T²d + T² + Td` → `3T²d + T² + 3Td` LUT evaluations) and
+/// multi-value packing fuses each surviving V⁺/V⁻ pair into one blind
+/// rotation (`3T²d + T² + 2Td` rotations at a packing budget ≥ 2) —
+/// closed forms pinned by `tests/rewrite_it.rs`.
+#[derive(Clone, Debug)]
+pub struct InhibitorSignedFhe {
+    /// γ literal (paper: √d).
+    pub gamma: f64,
+    /// Shift α quantized to the score scale.
+    pub alpha_q: i64,
+    cache: Arc<PlanCache>,
+}
+
+impl InhibitorSignedFhe {
+    pub fn new(dim: usize, alpha_q: i64) -> Self {
+        InhibitorSignedFhe {
+            gamma: (dim as f64).sqrt(),
+            alpha_q,
+            cache: Arc::new(PlanCache::default()),
+        }
+    }
+
+    /// Build the head's circuit plan, **verbatim** (no manual
+    /// deduplication — that is the rewriter's job). Inputs `q ‖ k ‖ v`
+    /// row-major; outputs `H` row-major. Four PBS levels: score abs +
+    /// value splits (3·T²·d) → fused scale-shift-ReLU (T²) → signed
+    /// inhibition (2·T²·d) → output refresh (T·d).
+    pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
+        let gamma = self.gamma;
+        let alpha_q = self.alpha_q;
+        let mut b = CircuitBuilder::new();
+        let q = b.inputs(t * d);
+        let k = b.inputs(t * d);
+        let v = b.inputs(t * d);
+        // Level 1 — |q_ik − k_jk| for every (i, j, k), as the unsigned head.
+        let mut abs = Vec::with_capacity(t * t * d);
+        for i in 0..t {
+            for j in 0..t {
+                for kk in 0..d {
+                    let diff = b.sub(q[i * d + kk], k[j * d + kk]);
+                    abs.push(b.abs(diff));
+                }
+            }
+        }
+        // Level 2 — scores Z'_ij = relu(round(Σ_k |·| / γ) − α).
+        let ssr = b.lut(move |x| scaled_shift_relu(x, gamma, alpha_q));
+        let mut z = Vec::with_capacity(t * t);
+        for ij in 0..t * t {
+            let dist = b.sum(&abs[ij * d..(ij + 1) * d]);
+            z.push(b.pbs(dist, ssr));
+        }
+        // Level 3 — eq. 7's signed inhibition, with the V⁺/V⁻ splits
+        // written where the equation uses them (per query row — the
+        // duplicates CSE removes and the same-input pairs packing fuses).
+        // Positive and negative terms interleave per j so every partial
+        // sum stays within the magnitude of the final result.
+        let vmin = b.lut(|x: i64| x.min(0));
+        for i in 0..t {
+            for kk in 0..d {
+                let mut terms = Vec::with_capacity(2 * t);
+                for j in 0..t {
+                    let vp = b.relu(v[j * d + kk]);
+                    let vn = b.pbs(v[j * d + kk], vmin);
+                    let pos_in = b.sub(vp, z[i * t + j]);
+                    terms.push(b.relu(pos_in));
+                    let neg_in = b.add(vn, z[i * t + j]);
+                    terms.push(b.pbs(neg_in, vmin));
+                }
+                let h = b.sum(&terms);
+                let out = b.refresh(h);
+                b.output(out);
+            }
+        }
+        b.build()
+    }
+
+    /// The rewritten, `(T, d)`-cached plan `forward()` executes under
+    /// `ctx`.
+    pub fn plan_for(&self, ctx: &FheContext, t: usize, d: usize) -> Arc<CircuitPlan> {
+        self.cache.rewritten_for(ctx, t, d, || self.plan(t, d))
+    }
+
+    /// Per-head cache regression counter (see [`InhibitorFhe::plan_builds`]).
+    pub fn plan_builds(&self) -> usize {
+        self.cache.builds()
+    }
+
+    /// Encrypted forward: executes the cached rewritten plan. On
+    /// packing-capable parameter sets this is where the multi-value
+    /// saving lands in serving: fewer blind rotations, identical
+    /// decrypted outputs.
+    pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
+        let (t, d) = (q.rows, q.cols);
+        assert_eq!((k.rows, k.cols), (t, d));
+        assert_eq!((v.rows, v.cols), (t, d));
+        let data = self.plan_for(ctx, t, d).execute(ctx, &qkv_inputs(q, k, v));
+        CtMatrix { rows: t, cols: d, data }
+    }
+
+    /// Plaintext mirror of the exact integer function the circuit
+    /// computes, including every LUT clamp, for exact equality testing.
+    pub fn mirror(
+        &self,
+        q: &crate::tensor::ITensor,
+        k: &crate::tensor::ITensor,
+        v: &crate::tensor::ITensor,
+        min_s: i64,
+        max_s: i64,
+    ) -> crate::tensor::ITensor {
+        let (t, d) = (q.dims()[0], q.dims()[1]);
+        let clamp = |x: i64| x.clamp(min_s, max_s);
+        let mut z = vec![0i64; t * t];
+        for i in 0..t {
+            for j in 0..t {
+                let dist: i64 =
+                    (0..d).map(|kk| clamp((q.at2(i, kk) - k.at2(j, kk)).abs())).sum();
+                z[i * t + j] = clamp(scaled_shift_relu(dist, self.gamma, self.alpha_q));
+            }
+        }
+        let mut out = crate::tensor::ITensor::zeros(&[t, d]);
+        for i in 0..t {
+            for kk in 0..d {
+                let h: i64 = (0..t)
+                    .map(|j| {
+                        let vjk = v.at2(j, kk);
+                        let vp = clamp(vjk.max(0));
+                        let vn = clamp(vjk.min(0));
+                        let zij = z[i * t + j];
+                        clamp((vp - zij).max(0)) + clamp((vn + zij).min(0))
+                    })
+                    .sum();
+                out.data[i * d + kk] = clamp(h);
+            }
+        }
+        out
+    }
+}
+
 /// Encrypted dot-product + Softmax attention head (the baseline).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct DotProductFhe {
     /// Fixed-point bits of the probability representation.
     pub prob_bits: u32,
     /// exp LUT scale: e(x) = round(exp(x·exp_scale)·(2^prob_bits − 1)).
     pub exp_scale: f64,
+    cache: Arc<PlanCache>,
 }
 
 impl DotProductFhe {
@@ -259,13 +502,26 @@ impl DotProductFhe {
         // Scores reach d·input_mag²; pick exp_scale so the LUT spans ~e^-3
         // over that range (behaves like 1/√d temperature at these widths).
         let max_score = (dim as i64) * input_mag * input_mag;
-        DotProductFhe { prob_bits: 3, exp_scale: 3.0 / max_score as f64 }
+        DotProductFhe {
+            prob_bits: 3,
+            exp_scale: 3.0 / max_score as f64,
+            cache: Arc::new(PlanCache::default()),
+        }
+    }
+
+    /// The rewritten, `(T, d)`-cached plan `forward()` executes under
+    /// `ctx`.
+    pub fn plan_for(&self, ctx: &FheContext, t: usize, d: usize) -> Arc<CircuitPlan> {
+        self.cache.rewritten_for(ctx, t, d, || self.plan(t, d))
+    }
+
+    /// Per-head cache regression counter (see [`InhibitorFhe::plan_builds`]).
+    pub fn plan_builds(&self) -> usize {
+        self.cache.builds()
     }
 
     fn exp_lut(&self, x: i64, max_out: i64) -> i64 {
-        let e = (x as f64 * self.exp_scale).exp();
-        // Normalized to (0, max_out]: exp of the max score maps to max_out.
-        (e * max_out as f64).round().clamp(1.0, max_out as f64) as i64
+        exp_lut_at(self.exp_scale, x, max_out)
     }
 
     /// Build the baseline's circuit plan for a `[T, d]` head. Inputs are
@@ -274,7 +530,7 @@ impl DotProductFhe {
     /// probability squares (2·T²) → attend squares (2·T²·d) → rescale
     /// (T·d); `4·T²·d + 3·T² + T + T·d` PBS total.
     pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
-        let head = *self;
+        let exp_scale = self.exp_scale;
         let max_out = (1i64 << self.prob_bits) - 1; // LUT output magnitude
         let mut b = CircuitBuilder::new();
         let q = b.inputs(t * d);
@@ -290,7 +546,7 @@ impl DotProductFhe {
             }
         }
         // Level 2 — exp LUT (one table per head).
-        let exp = b.lut(move |x| head.exp_lut(x, max_out));
+        let exp = b.lut(move |x| exp_lut_at(exp_scale, x, max_out));
         let e: Vec<_> = scores.iter().map(|&s| b.pbs(s, exp)).collect();
         // Level 3 — row normalizers r_i = round(max_out / Σ_j e_ij): free
         // row sums, then the shared reciprocal table (see
@@ -326,13 +582,15 @@ impl DotProductFhe {
         b.build()
     }
 
-    /// Encrypted forward: builds the circuit plan and executes it — one
-    /// batched PBS submission per level.
+    /// Encrypted forward: executes the cached rewritten plan — one
+    /// batched PBS submission per level. (As with the unsigned
+    /// inhibitor, the rewrite pipeline is a no-op on this circuit's
+    /// all-distinct dataflow.)
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         assert_eq!((k.rows, k.cols), (t, d));
         assert_eq!((v.rows, v.cols), (t, d));
-        let data = self.plan(t, d).execute(ctx, &qkv_inputs(q, k, v));
+        let data = self.plan_for(ctx, t, d).execute(ctx, &qkv_inputs(q, k, v));
         CtMatrix { rows: t, cols: d, data }
     }
 
@@ -591,6 +849,113 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn signed_inhibitor_counts_follow_the_rewrite_closed_forms() {
+        // Analysis only (no crypto): the verbatim eq.-7 transcription,
+        // its CSE'd form, and the packed form at budget 2.
+        use crate::tfhe::plan::{PlanRewriter, RewriteConfig};
+        for &(t, d) in &[(2usize, 2usize), (3, 2), (2, 3), (4, 4)] {
+            let head = InhibitorSignedFhe::new(d, 1);
+            let p = head.plan(t, d);
+            let verbatim = (5 * t * t * d + t * t + t * d) as u64;
+            assert_eq!(p.pbs_count(), verbatim, "verbatim T={t} d={d}");
+            assert_eq!(p.blind_rotation_count(), verbatim, "unpacked plans: 1 rot/PBS");
+            assert_eq!(p.levels(), 4);
+            assert_eq!(p.level_sizes(), vec![3 * t * t * d, t * t, 2 * t * t * d, t * d]);
+            let (cse, stats) =
+                PlanRewriter::new(RewriteConfig::cse_only()).rewrite(head.plan(t, d));
+            let deduped = (3 * t * t * d + t * t + 3 * t * d) as u64;
+            assert_eq!(stats.cse_merged, 2 * t * d * (t - 1), "T-fold splits merge");
+            assert_eq!(cse.pbs_count(), deduped, "CSE'd T={t} d={d}");
+            assert_eq!(cse.blind_rotation_count(), deduped);
+            let (packed, pstats) = PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 2 })
+                .rewrite(head.plan(t, d));
+            assert_eq!(pstats.multi_groups, t * d, "one V⁺/V⁻ pair per value");
+            assert_eq!(pstats.packed_luts, 2 * t * d);
+            assert_eq!(packed.pbs_count(), deduped, "packing keeps LUT evaluations");
+            assert_eq!(
+                packed.blind_rotation_count(),
+                (3 * t * t * d + t * t + 2 * t * d) as u64,
+                "packed T={t} d={d}"
+            );
+            assert_eq!(packed.levels(), 4, "packing never crosses levels");
+            assert_eq!(
+                packed.level_sizes(),
+                vec![t * t * d + t * d, t * t, 2 * t * t * d, t * d]
+            );
+        }
+    }
+
+    #[test]
+    fn encrypted_signed_inhibitor_matches_mirror_with_packed_execution() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let mut rng = Xoshiro256::new(0xFEED5);
+        let ck = ClientKey::generate(TfheParams::test_multi_lut(4), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        assert_eq!(ctx.max_multi_lut(), 2);
+        let t = 2;
+        let d = 2;
+        // |q|,|k| ≤ 2 and v ∈ [−3, 3] keep every intermediate of the
+        // signed circuit inside the 4-bit signed range [−8, 7].
+        let q = ITensor::from_vec(&[t, d], vec![1, -2, 0, 1]);
+        let k = ITensor::from_vec(&[t, d], vec![1, -1, -2, 0]);
+        let v = ITensor::from_vec(&[t, d], vec![3, -1, -2, 2]);
+        let head = InhibitorSignedFhe::new(d, 1);
+        let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+        let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+        let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+        let before_pbs = pbs_count();
+        let before_rot = crate::tfhe::bootstrap::blind_rotation_count();
+        let h = head.forward(&ctx, &cq, &ckk, &cv);
+        // forward() runs the rewritten plan: CSE'd LUT evaluations,
+        // packed rotations.
+        assert_eq!(
+            pbs_count() - before_pbs,
+            (3 * t * t * d + t * t + 3 * t * d) as u64,
+            "signed PBS count (rewritten)"
+        );
+        assert_eq!(
+            crate::tfhe::bootstrap::blind_rotation_count() - before_rot,
+            (3 * t * t * d + t * t + 2 * t * d) as u64,
+            "signed blind rotations (packed)"
+        );
+        let got = h.decrypt(&ctx, &ck);
+        let want = head.mirror(&q, &k, &v, ctx.enc.min_signed(), ctx.enc.max_signed());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn per_head_plan_cache_builds_once_across_forwards() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = fhe_setup(5);
+        let t = 2;
+        let d = 2;
+        let q = ITensor::from_vec(&[t, d], vec![1, -2, 0, 2]);
+        let k = ITensor::from_vec(&[t, d], vec![1, -1, -2, 0]);
+        let v = ITensor::from_vec(&[t, d], vec![3, 1, 2, 0]);
+        let head = InhibitorFhe::new(d, 1);
+        assert_eq!(head.plan_builds(), 0);
+        let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+        let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+        let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+        let first = head.forward(&ctx, &cq, &ckk, &cv);
+        let second = head.forward(&ctx, &cq, &ckk, &cv);
+        assert_eq!(head.plan_builds(), 1, "repeated forwards must reuse the cached plan");
+        // Clones share the cache (the serving engine clones heads freely).
+        let clone = head.clone();
+        let third = clone.forward(&ctx, &cq, &ckk, &cv);
+        assert_eq!(clone.plan_builds(), 1, "clones share the cache");
+        for (a, b) in first.data.iter().zip(second.data.iter()) {
+            assert_eq!(a.ct, b.ct, "cached plan must not change results");
+        }
+        for (a, b) in first.data.iter().zip(third.data.iter()) {
+            assert_eq!(a.ct, b.ct);
+        }
+        // A different shape is a separate cache entry.
+        let _ = head.plan_for(&ctx, t + 1, d);
+        assert_eq!(head.plan_builds(), 2);
     }
 
     #[test]

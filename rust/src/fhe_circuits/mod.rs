@@ -1,9 +1,11 @@
-//! Encrypted attention circuits (S6): the paper's two mechanisms as
+//! Encrypted attention circuits (S6): the paper's mechanisms as
 //! declarative `tfhe::plan` builders (executed level-by-level through the
-//! batched PBS engine), plus plaintext mirrors used for exact correctness
-//! checks and the PR 1 hand-staged forwards kept as bit-identity
-//! references.
+//! batched PBS engine after the rewrite pipeline), plus plaintext
+//! mirrors used for exact correctness checks and the PR 1 hand-staged
+//! forwards kept as bit-identity references. The signed Inhibitor
+//! (paper eq. 7) is transcribed verbatim — its redundancy is the
+//! rewriter's to remove.
 
 pub mod attention_fhe;
 
-pub use attention_fhe::{CtMatrix, DotProductFhe, InhibitorFhe};
+pub use attention_fhe::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe};

@@ -178,7 +178,7 @@ fn cmd_infer(args: &[String]) -> i32 {
 }
 
 fn cmd_encrypt_infer(args: &[String]) -> i32 {
-    use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe};
+    use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
     use inhibitor::tensor::ITensor;
     use inhibitor::tfhe::{bootstrap, ClientKey, FheContext, TfheParams};
     let mech_s = flag(args, "--mechanism", "inhibitor");
@@ -186,16 +186,18 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
         eprintln!("unknown mechanism '{mech_s}'");
         return 2;
     };
-    if mechanism == Mechanism::InhibitorSigned {
-        eprintln!("no encrypted circuit for '{mech_s}'");
-        return 2;
-    }
     let seq: usize = flag(args, "--seq", "2").parse().unwrap_or(2);
     let bits: u32 = flag(args, "--bits", "5").parse().unwrap_or(5);
     let threads: usize = flag(args, "--threads", "0").parse().unwrap_or(0);
     let dim = 2usize; // the paper's encrypted experiments use d=2
     let mut rng = Xoshiro256::new(2024);
-    let params = TfheParams::test_for_bits(bits);
+    // The signed circuit's V⁺/V⁻ pairs pack into shared blind rotations
+    // when the parameter set carries multi-value headroom — give it one.
+    let params = if mechanism == Mechanism::InhibitorSigned {
+        TfheParams::test_multi_lut(bits)
+    } else {
+        TfheParams::test_for_bits(bits)
+    };
     println!(
         "generating keys (n={}, N={}, {} message bits)...",
         params.lwe_dim, params.poly_size, bits
@@ -208,25 +210,36 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
     println!("PBS engine: {} worker thread(s)", ctx.threads());
     let q = ITensor::random(&[seq, dim], -2, 2, &mut rng);
     let k = ITensor::random(&[seq, dim], -2, 2, &mut rng);
-    let v = ITensor::random(&[seq, dim], 0, 3, &mut rng);
+    // Signed inhibition exercises negative values; the other circuits
+    // keep the non-negative range their mirrors assume.
+    let v = if mechanism == Mechanism::InhibitorSigned {
+        ITensor::random(&[seq, dim], -3, 3, &mut rng)
+    } else {
+        ITensor::random(&[seq, dim], 0, 3, &mut rng)
+    };
     println!("encrypting {} ciphertexts...", 3 * seq * dim);
     let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
     let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
     let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
     bootstrap::reset_pbs_count();
+    bootstrap::reset_blind_rotation_count();
     let t0 = std::time::Instant::now();
     let h = match mechanism {
         Mechanism::DotProduct => DotProductFhe::new(dim, 2).forward(&ctx, &cq, &ckk, &cv),
+        Mechanism::InhibitorSigned => {
+            InhibitorSignedFhe::new(dim, 1).forward(&ctx, &cq, &ckk, &cv)
+        }
         _ => InhibitorFhe::new(dim, 1).forward(&ctx, &cq, &ckk, &cv),
     };
     let dt = t0.elapsed();
     let out = h.decrypt(&ctx, &ck);
     println!(
-        "mechanism={} T={} d={}: {} PBS in {:.3}s ({:.1} ms/PBS)",
+        "mechanism={} T={} d={}: {} PBS ({} blind rotations) in {:.3}s ({:.1} ms/PBS)",
         mechanism.name(),
         seq,
         dim,
         bootstrap::pbs_count(),
+        bootstrap::blind_rotation_count(),
         dt.as_secs_f64(),
         dt.as_secs_f64() * 1e3 / bootstrap::pbs_count().max(1) as f64
     );

@@ -15,7 +15,22 @@
 //! [`CircuitPlan::linear_op_count`]: crate::tfhe::plan::CircuitPlan::linear_op_count
 
 use crate::attention::Mechanism;
-use crate::fhe_circuits::{DotProductFhe, InhibitorFhe};
+use crate::fhe_circuits::{DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
+use crate::tfhe::plan::{CircuitPlan, PlanRewriter, RewriteConfig};
+
+/// Profile-side counts of one circuit plan: LUT evaluations and linear
+/// ops after the always-safe CSE pass (what `forward()` executes on any
+/// parameter set), plus blind rotations at the smallest real packing
+/// budget (ϑ = 1, groups of 2 — the budget `TfheParams::test_multi_lut`
+/// sets), so Table-2-style reports can show the multi-value saving.
+fn plan_counts(plan: CircuitPlan) -> (u64, u64, u64) {
+    let (cse, _) = PlanRewriter::new(RewriteConfig::cse_only()).rewrite(plan);
+    let pbs = cse.pbs_count();
+    let linear = cse.linear_op_count();
+    let (packed, _) =
+        PlanRewriter::new(RewriteConfig { cse: false, max_multi_lut: 2 }).rewrite(cse);
+    (pbs, packed.blind_rotation_count(), linear)
+}
 
 /// Static profile of one encrypted attention circuit.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -29,8 +44,15 @@ pub struct CircuitProfile {
     pub int_bits: u32,
     /// Max unsigned width at any point ("uint" column).
     pub uint_bits: u32,
-    /// Number of programmable bootstraps for one forward pass.
+    /// LUT evaluations for one forward pass (after the always-safe CSE
+    /// rewrite — what the serving path actually executes).
     pub pbs_count: u64,
+    /// Blind rotations for one forward pass at a packing budget of
+    /// `2^ϑ ≥ 2`. Equals `pbs_count` for circuits the packing pass
+    /// leaves untouched; the parameter search still costs by
+    /// `pbs_count` (a conservative bound when the chosen set carries no
+    /// packing headroom).
+    pub blind_rotations_packed: u64,
     /// Number of PBS-free linear ciphertext ops.
     pub linear_ops: u64,
     /// Worst multiplicative variance growth between two PBS (for the
@@ -75,10 +97,10 @@ pub fn profile_inhibitor(seq_len: usize, dim: usize, input_bits: u32) -> Circuit
     uint_bits = uint_bits.max(unsigned_bits_for_mag(h_mag));
     // Op counts come from the circuit plan itself (α does not affect the
     // DAG shape): abs T²·d + shifted-relu T² + inhibition relu T²·d +
-    // output requant T·d.
-    let plan = InhibitorFhe::new(dim, 1).plan(seq_len, dim);
-    let pbs_count = plan.pbs_count();
-    let linear_ops = plan.linear_op_count();
+    // output requant T·d. The rewrite pipeline finds nothing to change
+    // in this circuit, so the counts equal the raw plan's.
+    let (pbs_count, blind_rotations_packed, linear_ops) =
+        plan_counts(InhibitorFhe::new(dim, 1).plan(seq_len, dim));
     CircuitProfile {
         mechanism: Mechanism::Inhibitor,
         seq_len,
@@ -87,8 +109,52 @@ pub fn profile_inhibitor(seq_len: usize, dim: usize, input_bits: u32) -> Circuit
         int_bits,
         uint_bits,
         pbs_count,
+        blind_rotations_packed,
         linear_ops,
         linear_growth: (t.max(d)) as f64,
+    }
+}
+
+/// Worst-case analysis of the **signed Inhibitor** circuit (paper
+/// eq. 7): the score path matches the unsigned head; the value path
+/// splits V into V⁺/V⁻ (two LUTs of the same ciphertext — the
+/// multi-value packing target) and inhibits both signs symmetrically.
+/// Counts are read off the rewritten plan: the verbatim eq.-7 builder
+/// emits `5T²d + T² + Td` LUT evaluations, CSE keeps `3T²d + T² + 3Td`,
+/// and packing executes them in `3T²d + T² + 2Td` blind rotations.
+pub fn profile_inhibitor_signed(seq_len: usize, dim: usize, input_bits: u32) -> CircuitProfile {
+    let t = seq_len as i64;
+    let d = dim as i64;
+    let in_mag = (1i64 << (input_bits - 1)) - 1;
+    let diff_mag = 2 * in_mag;
+    let mut int_bits = signed_bits_for_mag(diff_mag);
+    let dist_mag = d * diff_mag;
+    let z_mag = ((dist_mag as f64) / (d as f64).sqrt()).ceil() as i64;
+    let mut uint_bits = unsigned_bits_for_mag(z_mag);
+    // v⁺ − z and v⁻ + z are both bounded by in_mag + z_mag in magnitude.
+    let vz_mag = in_mag + z_mag;
+    int_bits = int_bits.max(signed_bits_for_mag(vz_mag));
+    // The signed accumulator mixes positive and negative terms; worst
+    // case magnitude is T·in_mag on either side.
+    let h_mag = t * in_mag;
+    int_bits = int_bits.max(signed_bits_for_mag(h_mag));
+    uint_bits = uint_bits.max(unsigned_bits_for_mag(h_mag));
+    let (pbs_count, blind_rotations_packed, linear_ops) =
+        plan_counts(InhibitorSignedFhe::new(dim, 1).plan(seq_len, dim));
+    CircuitProfile {
+        mechanism: Mechanism::InhibitorSigned,
+        seq_len,
+        dim,
+        input_bits,
+        int_bits,
+        uint_bits,
+        pbs_count,
+        blind_rotations_packed,
+        linear_ops,
+        // The signed accumulator sums 2T PBS outputs (a positive and a
+        // negative term per key position) before the output refresh —
+        // twice the unsigned head's plain-add chain.
+        linear_growth: ((2 * t).max(d)) as f64,
     }
 }
 
@@ -120,10 +186,10 @@ pub fn profile_dotprod(seq_len: usize, dim: usize, input_bits: u32) -> CircuitPr
     int_bits = int_bits.max(signed_bits_for_mag(pv_mag));
     uint_bits = uint_bits.max(unsigned_bits_for_mag(exp_mag * in_mag / t.max(1)));
     // Op counts from the plan: ct_mul(q,k) 2·T²·d + exp T² + recip T +
-    // ct_mul(e,r) 2·T² + ct_mul(p,v) 2·T²·d + rescale T·d.
-    let plan = DotProductFhe::new(dim, in_mag).plan(seq_len, dim);
-    let pbs_count = plan.pbs_count();
-    let linear_ops = plan.linear_op_count();
+    // ct_mul(e,r) 2·T² + ct_mul(p,v) 2·T²·d + rescale T·d. All PBS
+    // inputs are distinct linear nodes, so the rewrites change nothing.
+    let (pbs_count, blind_rotations_packed, linear_ops) =
+        plan_counts(DotProductFhe::new(dim, in_mag).plan(seq_len, dim));
     CircuitProfile {
         mechanism: Mechanism::DotProduct,
         seq_len,
@@ -132,6 +198,7 @@ pub fn profile_dotprod(seq_len: usize, dim: usize, input_bits: u32) -> CircuitPr
         int_bits,
         uint_bits,
         pbs_count,
+        blind_rotations_packed,
         linear_ops,
         linear_growth: (t.max(d)) as f64,
     }
@@ -141,9 +208,8 @@ pub fn profile_dotprod(seq_len: usize, dim: usize, input_bits: u32) -> CircuitPr
 pub fn profile(mech: Mechanism, seq_len: usize, dim: usize, input_bits: u32) -> CircuitProfile {
     match mech {
         Mechanism::DotProduct => profile_dotprod(seq_len, dim, input_bits),
-        Mechanism::Inhibitor | Mechanism::InhibitorSigned => {
-            profile_inhibitor(seq_len, dim, input_bits)
-        }
+        Mechanism::Inhibitor => profile_inhibitor(seq_len, dim, input_bits),
+        Mechanism::InhibitorSigned => profile_inhibitor_signed(seq_len, dim, input_bits),
     }
 }
 
@@ -193,6 +259,25 @@ mod tests {
         let c = profile_dotprod(2, 2, 3);
         let d = profile_dotprod(16, 2, 3);
         assert!(d.uint_bits > c.uint_bits);
+    }
+
+    #[test]
+    fn signed_profile_reads_rewritten_counts() {
+        let (t, d) = (4u64, 2u64);
+        let p = profile_inhibitor_signed(4, 2, 3);
+        assert_eq!(p.pbs_count, 3 * t * t * d + t * t + 3 * t * d, "CSE'd LUT evals");
+        assert_eq!(
+            p.blind_rotations_packed,
+            3 * t * t * d + t * t + 2 * t * d,
+            "packed rotations"
+        );
+        assert!(p.blind_rotations_packed < p.pbs_count);
+        assert_eq!(profile(Mechanism::InhibitorSigned, 4, 2, 3).pbs_count, p.pbs_count);
+        // Circuits the packing pass leaves untouched report equality.
+        let u = profile_inhibitor(4, 2, 3);
+        assert_eq!(u.blind_rotations_packed, u.pbs_count);
+        let q = profile_dotprod(4, 2, 3);
+        assert_eq!(q.blind_rotations_packed, q.pbs_count);
     }
 
     #[test]

@@ -77,6 +77,7 @@ pub fn optimize(profile: &CircuitProfile, cfg: SearchConfig) -> Option<Optimized
                             pbs_decomp: DecompParams::new(base_log, level),
                             ks_decomp: ks,
                             message_bits: msg_bits,
+                            many_lut_log: 0,
                         };
                         let cost = circuit_cost(&p, profile.pbs_count, profile.linear_ops).0;
                         let improved = match &best {
@@ -119,6 +120,7 @@ fn min_feasible_lwe_dim(
             pbs_decomp,
             ks_decomp,
             message_bits: msg_bits,
+            many_lut_log: 0,
         };
         params_feasible(&p, linear_growth, cfg.p_fail)
     };

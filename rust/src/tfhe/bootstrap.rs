@@ -28,8 +28,15 @@
 //! + half-slot pre-rotation, previously rebuilt inside every `pbs` call)
 //! out of the hot loop; [`ServerKey::pbs_batch`] fans independent jobs
 //! across a `std::thread::scope` worker pool with one reusable
-//! [`ExtScratch`] per worker. `PBS_COUNT` stays exact under concurrency
-//! (atomic increment per bootstrap). Key generation reuses the same
+//! [`ExtScratch`] per worker. [`ServerKey::pbs_multi`] is the
+//! multi-value bootstrap: several LUTs of the *same* input packed into
+//! one accumulator ([`PreparedMultiLut`]) and evaluated with a single
+//! blind rotation + one sample-extract/key-switch per LUT — the
+//! execution target of the plan rewriter's packing pass
+//! (`tfhe::plan::PlanRewriter`); [`ServerKey::pbs_batch_mixed`] runs
+//! single and multi jobs through one worker pool. `PBS_COUNT` stays
+//! exact under concurrency (atomic increment per LUT evaluation;
+//! `BLIND_ROTATION_COUNT` per rotation). Key generation reuses the same
 //! scoped-pool pattern: the per-bit GGSW encryptions of
 //! [`ClientKey::server_key`] are independent and run across workers, with
 //! per-bit child RNGs derived sequentially so the key is thread-count
@@ -45,9 +52,17 @@ use super::torus::Torus;
 use crate::util::prng::{Rng64, Xoshiro256};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Global PBS counter — the unit the paper counts circuit cost in.
-/// Benches read/reset it to report "number of PBS" per circuit.
+/// Global PBS counter — the unit the paper counts circuit cost in: one
+/// increment per LUT evaluation. Benches read/reset it to report
+/// "number of PBS" per circuit.
 pub static PBS_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Global blind-rotation counter. A standard PBS performs exactly one
+/// blind rotation per LUT; a multi-value bootstrap
+/// ([`ServerKey::pbs_multi`]) shares one rotation across several LUTs,
+/// so this counter is the honest measure of the dominant cost after the
+/// plan rewriter packs same-input LUT evaluations.
+pub static BLIND_ROTATION_COUNT: AtomicU64 = AtomicU64::new(0);
 
 pub fn pbs_count() -> u64 {
     PBS_COUNT.load(Ordering::Relaxed)
@@ -55,6 +70,14 @@ pub fn pbs_count() -> u64 {
 
 pub fn reset_pbs_count() {
     PBS_COUNT.store(0, Ordering::Relaxed);
+}
+
+pub fn blind_rotation_count() -> u64 {
+    BLIND_ROTATION_COUNT.load(Ordering::Relaxed)
+}
+
+pub fn reset_blind_rotation_count() {
+    BLIND_ROTATION_COUNT.store(0, Ordering::Relaxed);
 }
 
 /// Client-side key material.
@@ -188,6 +211,52 @@ pub struct PreparedLut {
     acc: GlweCiphertext,
 }
 
+/// A packed accumulator for the multi-value bootstrap (PBS-many-LUT in
+/// the sense of Chillotti et al. 2021): `n_luts` tables of the same
+/// message space interleaved at stride `2^gran_log` inside every message
+/// slot, so **one** blind rotation evaluates all of them — coefficient
+/// `j` of the rotated accumulator holds `lut_j[m]`, pulled out by one
+/// sample extract + key switch per LUT.
+///
+/// The trade: the mod-switch must round the rotation to a multiple of
+/// the stride (otherwise phase noise would smear reads across sub-slots),
+/// which costs `gran_log` bits of noise margin. Parameter sets advertise
+/// how much of that margin they carry via [`TfheParams::many_lut_log`].
+#[derive(Clone, Debug)]
+pub struct PreparedMultiLut {
+    /// Trivial GLWE holding the packed, pre-rotated test vector.
+    acc: GlweCiphertext,
+    /// Number of packed LUTs (= outputs per bootstrap).
+    n_luts: usize,
+    /// log2 of the sub-slot stride = mod-switch rounding granularity.
+    gran_log: u32,
+}
+
+impl PreparedMultiLut {
+    pub fn n_luts(&self) -> usize {
+        self.n_luts
+    }
+}
+
+/// One job of a mixed PBS batch ([`ServerKey::pbs_batch_mixed`]).
+#[derive(Clone, Copy)]
+pub enum BatchJob<'a> {
+    /// Standard bootstrap: one LUT, one output ciphertext.
+    Single(&'a LweCiphertext, &'a PreparedLut),
+    /// Multi-value bootstrap: one blind rotation, `n_luts` outputs.
+    Multi(&'a LweCiphertext, &'a PreparedMultiLut),
+}
+
+impl BatchJob<'_> {
+    /// Ciphertexts this job contributes to the flattened output vector.
+    pub fn n_outputs(&self) -> usize {
+        match self {
+            BatchJob::Single(..) => 1,
+            BatchJob::Multi(_, mlut) => mlut.n_luts,
+        }
+    }
+}
+
 impl ServerKey {
     /// Accumulator polynomial for `lut`: slot `m` replicated over
     /// `N / 2^p` coefficients, with a half-slot pre-rotation so that the
@@ -223,18 +292,27 @@ impl ServerKey {
     }
 
     /// Blind rotation: returns GLWE whose constant coefficient encrypts
-    /// `lut[decode(ct)]`.
+    /// `lut[decode(ct)]` (for `gran_log = 0`). With `gran_log = ϑ > 0`
+    /// the mod-switch rounds every coefficient to a multiple of `2^ϑ`,
+    /// so the total rotation is too — the alignment the packed
+    /// multi-value accumulator needs. At ϑ = 0 the arithmetic reduces
+    /// exactly to the standard mod-switch, so the single-LUT path is
+    /// bit-identical to what it was before the refactor.
     fn blind_rotate(
         &self,
         ct: &LweCiphertext,
-        lut: &PreparedLut,
+        acc_init: &GlweCiphertext,
+        gran_log: u32,
         scratch: &mut ExtScratch,
     ) -> GlweCiphertext {
+        BLIND_ROTATION_COUNT.fetch_add(1, Ordering::Relaxed);
         let n2 = (2 * self.params.poly_size) as u64;
-        // Mod-switch mask and body to Z_{2N}.
-        let switch = |t: Torus| -> u64 { super::torus::round_to_modulus(t, n2) };
+        // Mod-switch mask and body to Z_{2N} (coarsened to multiples of
+        // 2^gran_log: round at the reduced modulus, scale back up).
+        let switch =
+            |t: Torus| -> u64 { super::torus::round_to_modulus(t, n2 >> gran_log) << gran_log };
         let b_t = switch(ct.body);
-        let mut acc = lut.acc.rotate_monomial(n2 - b_t);
+        let mut acc = acc_init.rotate_monomial(n2 - b_t);
         for (a, ggsw) in ct.mask.iter().zip(self.bsk.iter()) {
             let a_t = switch(*a);
             if a_t == 0 {
@@ -268,47 +346,176 @@ impl ServerKey {
         scratch: &mut ExtScratch,
     ) -> LweCiphertext {
         PBS_COUNT.fetch_add(1, Ordering::Relaxed);
-        let acc = self.blind_rotate(ct, lut, scratch);
+        let acc = self.blind_rotate(ct, &lut.acc, 0, scratch);
         let extracted = acc.sample_extract(0);
         self.ksk.keyswitch(&extracted)
     }
 
-    /// Execute a batch of independent PBS jobs across `threads` workers.
-    ///
-    /// Jobs are split into contiguous chunks, one `std::thread::scope`
-    /// worker per chunk, each with its own reusable [`ExtScratch`].
-    /// Output order matches input order, and every output ciphertext is
-    /// bit-identical to what sequential execution produces (PBS is
-    /// deterministic); `PBS_COUNT` advances by exactly `jobs.len()`.
+    /// Pack several LUTs over this key's message space into one
+    /// multi-value accumulator. Within each message slot the tables are
+    /// interleaved at a power-of-two stride `B ≥ n_luts`: sub-position
+    /// `r·B + j` holds `lut_j[m]`, replicated over every block `r`, so
+    /// any stride-aligned rotation inside the slot reads all tables
+    /// consistently. Requires `2·B ≤ N/2^p` (checked), i.e. the
+    /// polynomial must carry the headroom [`TfheParams::many_lut_log`]
+    /// advertises.
+    pub fn prepare_multi_lut(&self, luts: &[&Lut]) -> PreparedMultiLut {
+        assert!(!luts.is_empty(), "multi-LUT accumulator needs at least one table");
+        // The noise budget, not just the geometry: a coarser mod-switch
+        // than `many_lut_log` provisions would decode wrongly without
+        // ever panicking, so reject it here on the public API.
+        assert!(
+            luts.len() <= self.params.max_multi_lut(),
+            "packing {} LUTs exceeds this parameter set's multi-value budget {} \
+             (TfheParams::many_lut_log = {})",
+            luts.len(),
+            self.params.max_multi_lut(),
+            self.params.many_lut_log
+        );
+        let n = self.params.poly_size;
+        let p_space = self.params.message_space() as usize;
+        let slot = n / p_space;
+        let stride = luts.len().next_power_of_two();
+        assert!(
+            2 * stride <= slot,
+            "cannot pack {} LUTs: stride {stride} needs slot ≥ {} but N/2^p = {slot}",
+            luts.len(),
+            2 * stride
+        );
+        for lut in luts {
+            assert_eq!(lut.table.len(), p_space, "LUT table must cover the message space");
+        }
+        let mut tv = vec![0u64; n];
+        for m in 0..p_space {
+            for r in 0..slot / stride {
+                for j in 0..stride {
+                    // Unused pad positions repeat the last table.
+                    let val = luts[j.min(luts.len() - 1)].table[m];
+                    tv[m * slot + r * stride + j] = val;
+                }
+            }
+        }
+        // Same half-slot pre-rotation as the single-LUT accumulator; the
+        // stride divides slot/2, so block alignment survives it (and the
+        // negacyclic wrap at the 0-boundary, which shifts by whole slots).
+        let acc = GlweCiphertext::trivial(tv, self.params.glwe_dim);
+        PreparedMultiLut {
+            acc: acc.rotate_monomial((2 * n - slot / 2) as u64),
+            n_luts: luts.len(),
+            gran_log: stride.trailing_zeros(),
+        }
+    }
+
+    /// Multi-value bootstrap: evaluate every LUT packed into `mlut` on
+    /// the encrypted message with **one** blind rotation, returning one
+    /// fresh ciphertext per LUT (in packing order). Costs `n_luts` on
+    /// `PBS_COUNT` (LUT evaluations) but only 1 on
+    /// `BLIND_ROTATION_COUNT`; each output decodes to the same message
+    /// the corresponding single-LUT PBS would produce, provided the
+    /// parameter set carries the advertised mod-switch margin.
+    pub fn pbs_multi(&self, ct: &LweCiphertext, mlut: &PreparedMultiLut) -> Vec<LweCiphertext> {
+        let mut scratch = self.scratch();
+        self.pbs_multi_with_scratch(ct, mlut, &mut scratch)
+    }
+
+    /// [`Self::pbs_multi`] with a caller-owned scratch buffer (the batch
+    /// engine's zero-per-call-allocation hot path).
+    pub fn pbs_multi_with_scratch(
+        &self,
+        ct: &LweCiphertext,
+        mlut: &PreparedMultiLut,
+        scratch: &mut ExtScratch,
+    ) -> Vec<LweCiphertext> {
+        PBS_COUNT.fetch_add(mlut.n_luts as u64, Ordering::Relaxed);
+        let acc = self.blind_rotate(ct, &mlut.acc, mlut.gran_log, scratch);
+        (0..mlut.n_luts)
+            .map(|j| self.ksk.keyswitch(&acc.sample_extract(j)))
+            .collect()
+    }
+
+    /// Execute a batch of independent single-LUT PBS jobs across
+    /// `threads` workers (the common case; a thin wrapper over
+    /// [`Self::pbs_batch_mixed`] with one output per job).
     pub fn pbs_batch(
         &self,
         jobs: &[(&LweCiphertext, &PreparedLut)],
         threads: usize,
     ) -> Vec<LweCiphertext> {
+        let mixed: Vec<BatchJob> =
+            jobs.iter().map(|&(ct, lut)| BatchJob::Single(ct, lut)).collect();
+        self.pbs_batch_mixed(&mixed, threads)
+    }
+
+    /// Execute a batch of independent PBS jobs — single-LUT bootstraps
+    /// and multi-value bootstraps mixed freely — across `threads`
+    /// workers.
+    ///
+    /// Jobs are split into contiguous chunks, one `std::thread::scope`
+    /// worker per chunk, each with its own reusable [`ExtScratch`].
+    /// Outputs are flattened in job order (a multi job contributes
+    /// [`BatchJob::n_outputs`] consecutive ciphertexts in packing
+    /// order), and every output is bit-identical to what sequential
+    /// execution produces (both bootstrap flavors are deterministic).
+    /// `PBS_COUNT` advances by the total LUT evaluations,
+    /// `BLIND_ROTATION_COUNT` by exactly `jobs.len()`.
+    pub fn pbs_batch_mixed(&self, jobs: &[BatchJob], threads: usize) -> Vec<LweCiphertext> {
         if jobs.is_empty() {
             return Vec::new();
         }
+        let total: usize = jobs.iter().map(|j| j.n_outputs()).sum();
+        let mut out: Vec<Option<LweCiphertext>> = (0..total).map(|_| None).collect();
         let threads = threads.max(1).min(jobs.len());
         if threads == 1 {
             let mut scratch = self.scratch();
-            return jobs
-                .iter()
-                .map(|&(ct, lut)| self.pbs_prepared_with_scratch(ct, lut, &mut scratch))
-                .collect();
-        }
-        let chunk = (jobs.len() + threads - 1) / threads;
-        let mut out: Vec<Option<LweCiphertext>> = jobs.iter().map(|_| None).collect();
-        std::thread::scope(|s| {
-            for (job_chunk, out_chunk) in jobs.chunks(chunk).zip(out.chunks_mut(chunk)) {
-                s.spawn(move || {
-                    let mut scratch = self.scratch();
-                    for (&(ct, lut), slot) in job_chunk.iter().zip(out_chunk.iter_mut()) {
-                        *slot = Some(self.pbs_prepared_with_scratch(ct, lut, &mut scratch));
-                    }
-                });
+            let mut off = 0;
+            for job in jobs {
+                let n = job.n_outputs();
+                self.run_batch_job(job, &mut scratch, &mut out[off..off + n]);
+                off += n;
             }
-        });
+        } else {
+            let chunk = (jobs.len() + threads - 1) / threads;
+            std::thread::scope(|s| {
+                let mut rest: &mut [Option<LweCiphertext>] = &mut out;
+                for job_chunk in jobs.chunks(chunk) {
+                    let n: usize = job_chunk.iter().map(|j| j.n_outputs()).sum();
+                    let (head, tail) = rest.split_at_mut(n);
+                    rest = tail;
+                    s.spawn(move || {
+                        let mut scratch = self.scratch();
+                        let mut off = 0;
+                        for job in job_chunk {
+                            let k = job.n_outputs();
+                            self.run_batch_job(job, &mut scratch, &mut head[off..off + k]);
+                            off += k;
+                        }
+                    });
+                }
+            });
+        }
         out.into_iter().map(|c| c.expect("worker filled every slot")).collect()
+    }
+
+    /// Execute one mixed-batch job into its output span (len =
+    /// `job.n_outputs()`).
+    fn run_batch_job(
+        &self,
+        job: &BatchJob,
+        scratch: &mut ExtScratch,
+        out: &mut [Option<LweCiphertext>],
+    ) {
+        match *job {
+            BatchJob::Single(ct, lut) => {
+                out[0] = Some(self.pbs_prepared_with_scratch(ct, lut, scratch));
+            }
+            BatchJob::Multi(ct, mlut) => {
+                for (slot, res) in
+                    out.iter_mut().zip(self.pbs_multi_with_scratch(ct, mlut, scratch))
+                {
+                    *slot = Some(res);
+                }
+            }
+        }
     }
 
     /// Number of CMux levels (= LWE dim); used by cost reporting.
@@ -401,6 +608,7 @@ mod tests {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<ServerKey>();
         assert_send_sync::<PreparedLut>();
+        assert_send_sync::<PreparedMultiLut>();
         assert_send_sync::<Lut>();
         assert_send_sync::<crate::tfhe::ops::FheContext>();
     }
@@ -450,6 +658,99 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pbs_multi_decodes_every_packed_lut() {
+        // Params with one bit of packing headroom: the coarse mod-switch
+        // at stride 2 keeps the same σ-margin the base set has at full
+        // resolution, so the packed reads decode exactly.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let mut rng = Xoshiro256::new(0x317A);
+        let params = TfheParams::test_multi_lut(3);
+        let ck = ClientKey::generate(params, &mut rng);
+        let sk = ck.server_key(&mut rng);
+        let enc = Encoder::new(params);
+        let space = params.message_space();
+        let lut_a = Lut::from_fn(&params, |m| (m + 1) % space);
+        let lut_b = Lut::from_fn(&params, |m| (m * m) % space);
+        let mlut = sk.prepare_multi_lut(&[&lut_a, &lut_b]);
+        assert_eq!(mlut.n_luts(), 2);
+        for m in 0..space {
+            let ct = enc.encrypt_raw(m, &ck, &mut rng);
+            let before_pbs = pbs_count();
+            let before_rot = blind_rotation_count();
+            let outs = sk.pbs_multi(&ct, &mlut);
+            assert_eq!(pbs_count() - before_pbs, 2, "two LUT evaluations at m={m}");
+            assert_eq!(blind_rotation_count() - before_rot, 1, "one rotation at m={m}");
+            assert_eq!(outs.len(), 2);
+            // Each output decodes to what the corresponding single-LUT
+            // PBS decodes to.
+            assert_eq!(enc.decrypt_raw(&outs[0], &ck), (m + 1) % space, "lut_a at m={m}");
+            assert_eq!(enc.decrypt_raw(&outs[1], &ck), (m * m) % space, "lut_b at m={m}");
+            assert_eq!(
+                enc.decrypt_raw(&sk.pbs(&ct, &lut_a), &ck),
+                enc.decrypt_raw(&outs[0], &ck),
+                "multi output 0 agrees with the single path at m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn prepare_multi_lut_rejects_packs_beyond_the_budget() {
+        let mut rng = Xoshiro256::new(0x317B);
+        // test_multi_lut(3) advertises ϑ = 1: pairs pack, triples must be
+        // rejected outright — a coarser mod-switch than provisioned would
+        // decode wrongly without ever panicking.
+        let params = TfheParams::test_multi_lut(3);
+        let ck = ClientKey::generate(params, &mut rng);
+        let sk = ck.server_key(&mut rng);
+        let lut = Lut::from_fn(&params, |m| m);
+        let ok = sk.prepare_multi_lut(&[&lut, &lut]);
+        assert_eq!(ok.n_luts(), 2, "a pair fits the ϑ = 1 budget");
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sk.prepare_multi_lut(&[&lut, &lut, &lut])
+        }));
+        assert!(res.is_err(), "packing beyond 2^many_lut_log must be rejected");
+    }
+
+    #[test]
+    fn mixed_batch_matches_sequential_at_any_thread_count() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let mut rng = Xoshiro256::new(0x317C);
+        let params = TfheParams::test_multi_lut(3);
+        let ck = ClientKey::generate(params, &mut rng);
+        let sk = ck.server_key(&mut rng);
+        let enc = Encoder::new(params);
+        let space = params.message_space();
+        let single = sk.prepare_lut(&Lut::from_fn(&params, |m| (m + 3) % space));
+        let lut_a = Lut::from_fn(&params, |m| (m + 1) % space);
+        let lut_b = Lut::from_fn(&params, |m| (2 * m) % space);
+        let mlut = sk.prepare_multi_lut(&[&lut_a, &lut_b]);
+        let cts: Vec<LweCiphertext> =
+            (0..7u64).map(|i| enc.encrypt_raw(i % space, &ck, &mut rng)).collect();
+        // Alternate single and multi jobs so chunk boundaries land on both.
+        let jobs: Vec<BatchJob> = cts
+            .iter()
+            .enumerate()
+            .map(|(i, ct)| {
+                if i % 2 == 0 {
+                    BatchJob::Single(ct, &single)
+                } else {
+                    BatchJob::Multi(ct, &mlut)
+                }
+            })
+            .collect();
+        let expect_outputs: usize = jobs.iter().map(|j| j.n_outputs()).sum();
+        let before = pbs_count();
+        let reference = sk.pbs_batch_mixed(&jobs, 1);
+        assert_eq!(reference.len(), expect_outputs);
+        assert_eq!(pbs_count() - before, expect_outputs as u64);
+        for threads in [2usize, 3, 16] {
+            let batched = sk.pbs_batch_mixed(&jobs, threads);
+            assert_eq!(batched, reference, "threads={threads}");
+        }
+        assert!(sk.pbs_batch_mixed(&[], 4).is_empty(), "empty mixed batch");
     }
 
     #[test]

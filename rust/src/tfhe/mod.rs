@@ -34,8 +34,14 @@ pub(crate) fn pbs_test_guard() -> std::sync::MutexGuard<'static, ()> {
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-pub use bootstrap::{pbs_count, reset_pbs_count, ClientKey, Lut, PreparedLut, ServerKey};
+pub use bootstrap::{
+    blind_rotation_count, pbs_count, reset_blind_rotation_count, reset_pbs_count, BatchJob,
+    ClientKey, Lut, PreparedLut, PreparedMultiLut, ServerKey,
+};
 pub use encoding::Encoder;
 pub use ops::{default_fhe_threads, CtInt, FheContext};
 pub use params::{DecompParams, TfheParams};
-pub use plan::{CircuitBuilder, CircuitPlan, LutRef, NodeId, PlanRun};
+pub use plan::{
+    CircuitBuilder, CircuitPlan, LevelJob, LutRef, NodeId, PlanRewriter, PlanRun, RewriteConfig,
+    RewriteStats,
+};

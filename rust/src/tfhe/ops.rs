@@ -20,9 +20,10 @@
 //! worker count comes from `FHE_THREADS` (default: all cores) and can be
 //! overridden per context via [`FheContext::set_threads`].
 
-use super::bootstrap::{Lut, PreparedLut, ServerKey};
+use super::bootstrap::{BatchJob, Lut, PreparedLut, PreparedMultiLut, ServerKey};
 use super::encoding::Encoder;
 use super::lwe::LweCiphertext;
+use super::plan::LevelJob;
 use crate::util::prng::Xoshiro256;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -71,6 +72,11 @@ pub struct FheContext {
     /// table is the key, the (large) prepared accumulator is the value —
     /// collision-proof without requiring callers to name their closures.
     lut_cache: RwLock<HashMap<Vec<u64>, Arc<PreparedLut>>>,
+    /// Same idea for packed multi-value accumulators: keyed by the
+    /// concatenated member tables (each `message_space` long, so the
+    /// length encodes the LUT count and keys cannot collide across group
+    /// sizes).
+    multi_lut_cache: RwLock<HashMap<Vec<u64>, Arc<PreparedMultiLut>>>,
 }
 
 impl FheContext {
@@ -107,7 +113,14 @@ impl FheContext {
             lut_sq4,
             lut_id,
             lut_cache: RwLock::new(HashMap::new()),
+            multi_lut_cache: RwLock::new(HashMap::new()),
         }
+    }
+
+    /// Largest LUT group the plan rewriter may pack into one blind
+    /// rotation under this context's parameter set (1 = packing off).
+    pub fn max_multi_lut(&self) -> usize {
+        self.sk.params.max_multi_lut()
     }
 
     /// Current PBS worker-thread count.
@@ -207,20 +220,51 @@ impl FheContext {
         self.prepared_dyn(&f)
     }
 
+    /// The message-space table of a signed univariate function — the one
+    /// definition both the single-LUT and the packed multi-LUT paths
+    /// build from, so a packed member's table is always identical to its
+    /// standalone table (the packing rewrite can then never change a
+    /// decoded value).
+    fn signed_table(&self, f: &dyn Fn(i64) -> i64) -> Lut {
+        let bias = self.enc.bias() as i64;
+        let space = self.sk.params.message_space() as i64;
+        Lut::from_fn(&self.sk.params, |m| {
+            (f(m as i64 - bias) + bias).clamp(0, space - 1) as u64
+        })
+    }
+
     /// Dynamic-dispatch form of [`Self::prepared_fn`] — the circuit-plan
     /// executor resolves its LUT registry (`Arc<dyn Fn>`) through this.
     pub fn prepared_dyn(&self, f: &dyn Fn(i64) -> i64) -> Arc<PreparedLut> {
-        let bias = self.enc.bias() as i64;
-        let space = self.sk.params.message_space() as i64;
-        let lut = Lut::from_fn(&self.sk.params, |m| {
-            (f(m as i64 - bias) + bias).clamp(0, space - 1) as u64
-        });
+        let lut = self.signed_table(f);
         if let Some(hit) = self.lut_cache.read().unwrap().get(&lut.table) {
             return Arc::clone(hit);
         }
         let prepared = Arc::new(self.sk.prepare_lut(&lut));
         let mut cache = self.lut_cache.write().unwrap();
         Arc::clone(cache.entry(lut.table).or_insert(prepared))
+    }
+
+    /// Build (or fetch from the cache) the packed accumulator evaluating
+    /// several signed univariate functions of one input in a single
+    /// blind rotation ([`ServerKey::pbs_multi`]). The group size must
+    /// respect [`Self::max_multi_lut`].
+    pub fn prepared_multi_dyn(&self, fns: &[&dyn Fn(i64) -> i64]) -> Arc<PreparedMultiLut> {
+        assert!(
+            fns.len() <= self.max_multi_lut(),
+            "group of {} LUTs exceeds this parameter set's multi-value budget {}",
+            fns.len(),
+            self.max_multi_lut()
+        );
+        let luts: Vec<Lut> = fns.iter().map(|f| self.signed_table(*f)).collect();
+        let key: Vec<u64> = luts.iter().flat_map(|l| l.table.iter().copied()).collect();
+        if let Some(hit) = self.multi_lut_cache.read().unwrap().get(&key) {
+            return Arc::clone(hit);
+        }
+        let refs: Vec<&Lut> = luts.iter().collect();
+        let prepared = Arc::new(self.sk.prepare_multi_lut(&refs));
+        let mut cache = self.multi_lut_cache.write().unwrap();
+        Arc::clone(cache.entry(key).or_insert(prepared))
     }
 
     /// The prepared reciprocal table of [`recip_fn`] — the encrypted
@@ -279,6 +323,20 @@ impl FheContext {
     /// spanning several fused requests) per call.
     pub fn pbs_jobs(&self, jobs: &[(&LweCiphertext, &PreparedLut)]) -> Vec<LweCiphertext> {
         self.sk.pbs_batch(jobs, self.threads())
+    }
+
+    /// Run one plan level's jobs — single bootstraps and multi-value
+    /// bootstraps mixed — through the batch engine. Outputs are
+    /// flattened in job order (a multi job contributes its LUT count of
+    /// consecutive ciphertexts), exactly the order
+    /// [`super::plan::PlanRun::supply`] expects.
+    pub fn pbs_level(&self, jobs: &[LevelJob]) -> Vec<CtInt> {
+        let refs: Vec<BatchJob> = jobs.iter().map(LevelJob::as_batch_job).collect();
+        self.sk
+            .pbs_batch_mixed(&refs, self.threads())
+            .into_iter()
+            .map(|ct| CtInt { ct })
+            .collect()
     }
 
     /// Batched ReLU.

@@ -37,6 +37,13 @@ pub struct TfheParams {
     pub ks_decomp: DecompParams,
     /// Message precision in bits (excluding the padding bit).
     pub message_bits: u32,
+    /// Multi-value bootstrap budget ϑ: up to `2^ϑ` LUTs of the same
+    /// input may share one blind rotation (`ServerKey::pbs_multi`). The
+    /// packed accumulator needs `2^ϑ` sub-slots per message slot and the
+    /// coarse mod-switch costs ϑ bits of noise margin, so a set only
+    /// advertises ϑ > 0 when its polynomial size carries that headroom
+    /// (enforced by [`TfheParams::validate`]). 0 disables packing.
+    pub many_lut_log: u32,
 }
 
 impl TfheParams {
@@ -73,7 +80,27 @@ impl TfheParams {
         if self.ks_decomp.base_log * self.ks_decomp.level > 64 {
             return Err("ks decomposition exceeds 64 bits".into());
         }
+        // Multi-value bootstrap: each message slot must hold 2^ϑ sub-slots
+        // *and* keep the half-slot pre-rotation aligned to the sub-slot
+        // stride, i.e. slot = N/2^p ≥ 2^(ϑ+1).
+        if self.many_lut_log > 0
+            && self.poly_size < (1usize << (self.message_bits + 1 + self.many_lut_log))
+        {
+            return Err(format!(
+                "poly_size {} too small for a 2^{} multi-value bootstrap budget at {} \
+                 message bits: packing needs N ≥ 2^(p + 1 + ϑ)",
+                self.poly_size, self.many_lut_log, self.message_bits
+            ));
+        }
         Ok(())
+    }
+
+    /// Largest number of LUTs [`ServerKey::pbs_multi`] may fuse into one
+    /// blind rotation under this set (1 = packing disabled).
+    ///
+    /// [`ServerKey::pbs_multi`]: super::bootstrap::ServerKey::pbs_multi
+    pub fn max_multi_lut(&self) -> usize {
+        1usize << self.many_lut_log
     }
 
     /// Working set for fast unit tests: ~2^80-security-class toy noise but
@@ -88,6 +115,7 @@ impl TfheParams {
             pbs_decomp: DecompParams::new(15, 2),
             ks_decomp: DecompParams::new(4, 3),
             message_bits: 3,
+            many_lut_log: 0,
         }
     }
 
@@ -108,6 +136,29 @@ impl TfheParams {
         } else {
             DecompParams::new(4, 3)
         };
+        p
+    }
+
+    /// Test set with a multi-value bootstrap budget of ϑ = 1 (two LUTs
+    /// per blind rotation): [`Self::test_for_bits`] with the polynomial
+    /// size doubled, which buys exactly the one bit of mod-switch margin
+    /// the coarser rounding of `pbs_multi` consumes — the packed path
+    /// decodes with the same σ-margin the standard path has at the base
+    /// size. The KS decomposition is deepened to match the doubled
+    /// extracted dimension (same choice `test_for_bits` makes at N=2048).
+    ///
+    /// Margin note: the base sets give bits ≤ 4 roughly twice the
+    /// half-slot headroom of bits 5 (N does not grow between 4 and 5
+    /// message bits), and the doubling preserves that ratio — so the
+    /// packed path at 5 bits runs at the *same, tighter* margin the
+    /// existing `test_for_bits(5)` tests run at, while the decode-exact
+    /// test grids (`rewrite_it`, `pbs_multi` unit tests) pin the
+    /// comfortable ≤ 4-bit sets.
+    pub fn test_multi_lut(message_bits: u32) -> Self {
+        let mut p = Self::test_for_bits(message_bits);
+        p.poly_size *= 2;
+        p.ks_decomp = DecompParams::new(4, 6);
+        p.many_lut_log = 1;
         p
     }
 
@@ -142,6 +193,11 @@ impl TfheParams {
             pbs_decomp,
             ks_decomp,
             message_bits,
+            // The bench curve sizes N for the *standard* mod-switch; a
+            // packing budget would spend margin the λ=128 noise curve
+            // has not provisioned. Enable per-width after validating the
+            // coarse-rounding failure rate on a perf host.
+            many_lut_log: 0,
         }
     }
 }
@@ -168,6 +224,30 @@ mod tests {
         let mut p = TfheParams::test_small();
         p.message_bits = 9; // needs poly_size ≥ 1024
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn multi_lut_sets_validate_and_advertise_budget() {
+        for bits in 3..=5 {
+            let p = TfheParams::test_multi_lut(bits);
+            p.validate().unwrap_or_else(|e| panic!("bits={bits}: {e}"));
+            assert_eq!(p.max_multi_lut(), 2);
+            assert_eq!(p.poly_size, 2 * TfheParams::test_for_bits(bits).poly_size);
+        }
+        assert_eq!(TfheParams::test_small().max_multi_lut(), 1, "default: packing off");
+    }
+
+    #[test]
+    fn rejects_multi_lut_budget_without_headroom() {
+        // N=512 resolves 8 message bits (+padding) exactly, with no spare
+        // sub-slot for a packed accumulator.
+        let mut p = TfheParams::test_small();
+        p.message_bits = 8;
+        p.validate().unwrap();
+        p.many_lut_log = 1;
+        assert!(p.validate().is_err());
+        p.poly_size = 1024;
+        p.validate().unwrap();
     }
 
     #[test]

@@ -24,11 +24,42 @@
 //!   `FusedLevelExecutor` uses to merge the current level of *every
 //!   co-scheduled request* into a single `pbs_batch` submission.
 //!
+//! ## Rewrite passes
+//!
+//! Because the plan is pure data, PBS-count reductions are IR rewrites
+//! rather than per-circuit hand optimizations. [`PlanRewriter`] runs an
+//! ordered pipeline over a finished plan (before execution re-levels
+//! it):
+//!
+//! 1. **Common-subexpression elimination** — merges linear nodes with
+//!    identical canonicalized operands (`Add`/`Sum` are commutative on
+//!    the torus, so operand order is normalized away) and `Pbs` nodes
+//!    with the same input *and the same registered LUT*. Every merge is
+//!    ciphertext-exact: the surviving node computes the bit-identical
+//!    ciphertext both duplicates would have.
+//! 2. **Multi-value bootstrap packing** — groups `Pbs` nodes sharing
+//!    one input ciphertext into a [`Node::MultiPbs`] evaluated by
+//!    [`ServerKey::pbs_multi`]: one blind rotation for the whole group,
+//!    one sample-extract/key-switch per LUT, with each member's result
+//!    surfaced through a free [`Node::MultiOut`] projection. Group size
+//!    is capped by the parameter set's `many_lut_log` headroom (the
+//!    coarse mod-switch spends that margin), so a budget of 0 makes the
+//!    pass a no-op. Packing never changes `pbs_count()` (LUT
+//!    evaluations) but strictly reduces `blind_rotation_count()`
+//!    wherever a group forms; members of a group always sit at the same
+//!    level (a PBS level is its input's level + 1).
+//!
+//! Both passes are idempotent, and rewriting is observable:
+//! [`RewriteStats`] reports merged and packed node counts, and the
+//! pre/post plans expose `pbs_count()` / `blind_rotation_count()` so
+//! tests pin the saving exactly (`tests/rewrite_it.rs`).
+//!
 //! [`ServerKey::pbs_batch`]: super::bootstrap::ServerKey::pbs_batch
+//! [`ServerKey::pbs_multi`]: super::bootstrap::ServerKey::pbs_multi
 
-use super::bootstrap::PreparedLut;
-use super::lwe::LweCiphertext;
+use super::bootstrap::{BatchJob, PreparedLut, PreparedMultiLut};
 use super::ops::{CtInt, FheContext};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Index of a node inside its plan (topological: a node only references
@@ -55,6 +86,15 @@ pub enum Node {
     Sum(Vec<NodeId>),
     /// Programmable bootstrap: apply `lut` to `input`.
     Pbs { input: NodeId, lut: LutRef },
+    /// Multi-value bootstrap: evaluate every `luts` entry on `input`
+    /// with one shared blind rotation (`luts.len()` LUT evaluations, 1
+    /// rotation). Produces no value of its own — results surface through
+    /// `MultiOut` projections. Only the rewriter's packing pass creates
+    /// these.
+    MultiPbs { input: NodeId, luts: Vec<LutRef> },
+    /// The `index`-th output of a `MultiPbs` node (free: the extraction
+    /// happens inside the bootstrap).
+    MultiOut { multi: NodeId, index: usize },
 }
 
 /// A univariate signed function registered with the plan; resolved to a
@@ -225,56 +265,7 @@ impl CircuitBuilder {
 
     /// Finalize: runs the leveling pass and freezes the DAG.
     pub fn build(self) -> CircuitPlan {
-        // Leveling: a node's level is its bootstrap depth — 0 for inputs
-        // and constants, max over operands for linear nodes, operand
-        // level + 1 for PBS nodes. Nodes are topological, so one forward
-        // scan suffices. The same scan records each node's consumer count
-        // (+1 per output listing) so the executor can free intermediate
-        // ciphertexts after their last read instead of holding the whole
-        // DAG live.
-        let mut levels = vec![0usize; self.nodes.len()];
-        let mut uses = vec![0u32; self.nodes.len()];
-        let mut max_level = 0usize;
-        for (id, node) in self.nodes.iter().enumerate() {
-            let lvl = match node {
-                Node::Input(_) | Node::Const(_) => 0,
-                Node::Add(a, b) | Node::Sub(a, b) => {
-                    uses[*a] += 1;
-                    uses[*b] += 1;
-                    levels[*a].max(levels[*b])
-                }
-                Node::Neg(a) | Node::AddConst(a, _) | Node::ScalarMul(a, _) => {
-                    uses[*a] += 1;
-                    levels[*a]
-                }
-                Node::Sum(xs) => {
-                    let mut lvl = 0;
-                    for &x in xs {
-                        uses[x] += 1;
-                        lvl = lvl.max(levels[x]);
-                    }
-                    lvl
-                }
-                Node::Pbs { input, .. } => {
-                    uses[*input] += 1;
-                    levels[*input] + 1
-                }
-            };
-            levels[id] = lvl;
-            max_level = max_level.max(lvl);
-        }
-        for &out in &self.outputs {
-            uses[out] += 1;
-        }
-        CircuitPlan {
-            nodes: self.nodes,
-            luts: self.luts,
-            n_inputs: self.n_inputs,
-            outputs: self.outputs,
-            levels,
-            uses,
-            max_level,
-        }
+        CircuitPlan::from_parts(self.nodes, self.luts, self.n_inputs, self.outputs)
     }
 }
 
@@ -300,6 +291,69 @@ pub struct CircuitPlan {
 }
 
 impl CircuitPlan {
+    /// Freeze a node list into an analyzed plan: the leveling pass
+    /// assigns every node its bootstrap depth — 0 for inputs and
+    /// constants, max over operands for linear nodes, operand level + 1
+    /// for (multi-)PBS nodes, and the owning bootstrap's level for
+    /// `MultiOut` projections. Nodes are topological, so one forward
+    /// scan suffices. The same scan records each node's consumer count
+    /// (+1 per output listing) so the executor can free intermediate
+    /// ciphertexts after their last read instead of holding the whole
+    /// DAG live. Both `CircuitBuilder::build` and the rewriter feed
+    /// through here, so rewritten plans carry fresh analysis.
+    pub(crate) fn from_parts(
+        nodes: Vec<Node>,
+        luts: Vec<LutFn>,
+        n_inputs: usize,
+        outputs: Vec<NodeId>,
+    ) -> CircuitPlan {
+        let mut levels = vec![0usize; nodes.len()];
+        let mut uses = vec![0u32; nodes.len()];
+        let mut max_level = 0usize;
+        for (id, node) in nodes.iter().enumerate() {
+            let lvl = match node {
+                Node::Input(_) | Node::Const(_) => 0,
+                Node::Add(a, b) | Node::Sub(a, b) => {
+                    uses[*a] += 1;
+                    uses[*b] += 1;
+                    levels[*a].max(levels[*b])
+                }
+                Node::Neg(a) | Node::AddConst(a, _) | Node::ScalarMul(a, _) => {
+                    uses[*a] += 1;
+                    levels[*a]
+                }
+                Node::Sum(xs) => {
+                    let mut lvl = 0;
+                    for &x in xs {
+                        uses[x] += 1;
+                        lvl = lvl.max(levels[x]);
+                    }
+                    lvl
+                }
+                Node::Pbs { input, .. } | Node::MultiPbs { input, .. } => {
+                    uses[*input] += 1;
+                    levels[*input] + 1
+                }
+                Node::MultiOut { multi, .. } => {
+                    uses[*multi] += 1;
+                    levels[*multi]
+                }
+            };
+            levels[id] = lvl;
+            max_level = max_level.max(lvl);
+        }
+        for &out in &outputs {
+            uses[out] += 1;
+        }
+        CircuitPlan { nodes, luts, n_inputs, outputs, levels, uses, max_level }
+    }
+
+    /// Decompose into the rewriter's working set (nodes, LUT registry,
+    /// input count, outputs); analysis is recomputed on reassembly.
+    pub(crate) fn into_parts(self) -> (Vec<Node>, Vec<LutFn>, usize, Vec<NodeId>) {
+        (self.nodes, self.luts, self.n_inputs, self.outputs)
+    }
+
     /// Number of circuit input ciphertexts.
     pub fn n_inputs(&self) -> usize {
         self.n_inputs
@@ -310,10 +364,30 @@ impl CircuitPlan {
         self.outputs.len()
     }
 
-    /// Total programmable bootstraps of one execution — the paper's cost
-    /// unit, now derived from the same DAG the executor runs.
+    /// Total LUT evaluations of one execution — the paper's cost unit,
+    /// derived from the same DAG the executor runs. A `MultiPbs` node
+    /// counts one per packed LUT, so packing never changes this number
+    /// (it changes [`CircuitPlan::blind_rotation_count`]).
     pub fn pbs_count(&self) -> u64 {
-        self.nodes.iter().filter(|n| matches!(n, Node::Pbs { .. })).count() as u64
+        self.nodes
+            .iter()
+            .map(|n| match n {
+                Node::Pbs { .. } => 1,
+                Node::MultiPbs { luts, .. } => luts.len() as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Total blind rotations of one execution: 1 per `Pbs` node and 1
+    /// per `MultiPbs` node regardless of its group size. Equal to
+    /// `pbs_count()` on unpacked plans; strictly smaller wherever the
+    /// packing rewrite formed a group.
+    pub fn blind_rotation_count(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Pbs { .. } | Node::MultiPbs { .. }))
+            .count() as u64
     }
 
     /// Number of PBS execution levels (batched rounds).
@@ -321,11 +395,13 @@ impl CircuitPlan {
         self.max_level
     }
 
-    /// PBS jobs per level, index 0 = level 1. Sums to `pbs_count()`.
+    /// Bootstrap jobs per level (one per `Pbs` or `MultiPbs` node),
+    /// index 0 = level 1. Sums to `blind_rotation_count()` — which is
+    /// `pbs_count()` on unpacked plans.
     pub fn level_sizes(&self) -> Vec<usize> {
         let mut sizes = vec![0usize; self.max_level];
         for (id, node) in self.nodes.iter().enumerate() {
-            if matches!(node, Node::Pbs { .. }) {
+            if matches!(node, Node::Pbs { .. } | Node::MultiPbs { .. }) {
                 sizes[self.levels[id] - 1] += 1;
             }
         }
@@ -334,11 +410,17 @@ impl CircuitPlan {
 
     /// PBS-free homomorphic ops of one execution (`Sum` of k operands
     /// counts its k − 1 additions), for the optimizer's linear-cost term.
+    /// `MultiOut` projections are free (the extraction happens inside
+    /// the shared bootstrap).
     pub fn linear_op_count(&self) -> u64 {
         self.nodes
             .iter()
             .map(|n| match n {
-                Node::Input(_) | Node::Const(_) | Node::Pbs { .. } => 0,
+                Node::Input(_)
+                | Node::Const(_)
+                | Node::Pbs { .. }
+                | Node::MultiPbs { .. }
+                | Node::MultiOut { .. } => 0,
                 Node::Sum(xs) => xs.len() as u64 - 1,
                 _ => 1,
             })
@@ -350,13 +432,35 @@ impl CircuitPlan {
     pub fn execute(&self, ctx: &FheContext, inputs: &[CtInt]) -> Vec<CtInt> {
         let mut run = PlanRun::new(self, ctx, inputs);
         while let Some(jobs) = run.next_level_jobs(ctx) {
-            let refs: Vec<(&LweCiphertext, &PreparedLut)> =
-                jobs.iter().map(|(ct, lut)| (&ct.ct, lut.as_ref())).collect();
-            let outs: Vec<CtInt> =
-                ctx.pbs_jobs(&refs).into_iter().map(|ct| CtInt { ct }).collect();
+            let outs = ctx.pbs_level(&jobs);
             run.supply(outs);
         }
         run.finish(ctx)
+    }
+}
+
+/// One bootstrap job of a plan level, as handed out by
+/// [`PlanRun::next_level_jobs`]: the input ciphertext plus the prepared
+/// accumulator, single-LUT or packed. Results go back through
+/// [`PlanRun::supply`] flattened in job order (a multi job contributes
+/// [`LevelJob::n_outputs`] consecutive ciphertexts in packing order).
+pub enum LevelJob {
+    Single(CtInt, Arc<PreparedLut>),
+    Multi(CtInt, Arc<PreparedMultiLut>),
+}
+
+impl LevelJob {
+    /// Ciphertexts this job produces.
+    pub fn n_outputs(&self) -> usize {
+        self.as_batch_job().n_outputs()
+    }
+
+    /// Borrow as a worker-pool job for `ServerKey::pbs_batch_mixed`.
+    pub fn as_batch_job(&self) -> BatchJob<'_> {
+        match self {
+            LevelJob::Single(ct, lut) => BatchJob::Single(&ct.ct, lut),
+            LevelJob::Multi(ct, mlut) => BatchJob::Multi(&ct.ct, mlut),
+        }
     }
 }
 
@@ -374,34 +478,84 @@ pub struct PlanRun<'p> {
     /// Consumer reads left per node; at 0 the value is dropped, so peak
     /// residency tracks the live frontier, not the whole DAG.
     remaining: Vec<u32>,
-    /// LUT registry resolved against the executing context (cache-backed).
-    resolved: Vec<Arc<PreparedLut>>,
+    /// LUT registry resolved against the executing context
+    /// (cache-backed). `None` for tables no `Pbs` node references —
+    /// after packing, a table may live only inside a `MultiPbs`
+    /// accumulator, and building its unused single-LUT accumulator
+    /// would waste memory and first-run latency.
+    resolved: Vec<Option<Arc<PreparedLut>>>,
+    /// Packed accumulators per `MultiPbs` node (cache-backed likewise).
+    multi_accs: HashMap<NodeId, Arc<PreparedMultiLut>>,
+    /// `MultiOut` node ids per `MultiPbs` node, indexed by output slot —
+    /// where `supply` scatters a multi job's results.
+    multi_members: HashMap<NodeId, Vec<NodeId>>,
     /// Next PBS level to execute (1-based).
     current: usize,
-    /// Pbs node ids whose jobs were handed out and await `supply`.
+    /// `Pbs`/`MultiPbs` node ids whose jobs were handed out and await
+    /// `supply`.
     pending: Vec<NodeId>,
 }
 
 impl<'p> PlanRun<'p> {
     pub fn new(plan: &'p CircuitPlan, ctx: &FheContext, inputs: &[CtInt]) -> Self {
         assert_eq!(inputs.len(), plan.n_inputs, "plan expects {} inputs", plan.n_inputs);
-        let resolved = plan.luts.iter().map(|f| ctx.prepared_dyn(f.as_ref())).collect();
+        let mut single_use = vec![false; plan.luts.len()];
+        for node in &plan.nodes {
+            if let Node::Pbs { lut, .. } = node {
+                single_use[lut.0] = true;
+            }
+        }
+        let resolved = plan
+            .luts
+            .iter()
+            .zip(&single_use)
+            .map(|(f, &used)| used.then(|| ctx.prepared_dyn(f.as_ref())))
+            .collect();
+        let mut multi_accs = HashMap::new();
+        let mut multi_members: HashMap<NodeId, Vec<NodeId>> = HashMap::new();
         let mut values: Vec<Option<CtInt>> = plan.nodes.iter().map(|_| None).collect();
         let mut evaluated = vec![false; plan.nodes.len()];
         for (id, node) in plan.nodes.iter().enumerate() {
             match node {
                 Node::Input(i) => values[id] = Some(inputs[*i].clone()),
                 Node::Const(v) => values[id] = Some(ctx.constant(*v)),
+                Node::MultiPbs { luts, .. } => {
+                    let fns: Vec<&dyn Fn(i64) -> i64> = luts
+                        .iter()
+                        .map(|l| {
+                            let f: &(dyn Fn(i64) -> i64) = plan.luts[l.0].as_ref();
+                            f
+                        })
+                        .collect();
+                    multi_accs.insert(id, ctx.prepared_multi_dyn(&fns));
+                    multi_members.insert(id, vec![usize::MAX; luts.len()]);
+                    continue;
+                }
+                Node::MultiOut { multi, index } => {
+                    let slots =
+                        multi_members.get_mut(multi).expect("MultiOut before its MultiPbs");
+                    slots[*index] = id;
+                    continue;
+                }
                 _ => continue,
             }
             evaluated[id] = true;
         }
+        // Hard assert (runs once per PlanRun): a rewrite pass that drops
+        // a projection would otherwise surface as an opaque out-of-bounds
+        // on the sentinel at supply() time.
+        assert!(
+            multi_members.values().all(|m| m.iter().all(|&id| id != usize::MAX)),
+            "every MultiPbs output slot must have a MultiOut projection"
+        );
         PlanRun {
             plan,
             values,
             evaluated,
             remaining: plan.uses.clone(),
             resolved,
+            multi_accs,
+            multi_members,
             current: 1,
             pending: Vec::new(),
         }
@@ -432,7 +586,9 @@ impl<'p> PlanRun<'p> {
             // with `&mut self` bookkeeping.
             let v = match &self.plan.nodes[id] {
                 Node::Input(_) | Node::Const(_) => continue, // prefilled
-                Node::Pbs { .. } => continue,                // supplied per level
+                // Bootstrap results (including multi projections) are
+                // supplied per level, not computed here.
+                Node::Pbs { .. } | Node::MultiPbs { .. } | Node::MultiOut { .. } => continue,
                 Node::Add(a, b) => {
                     let v = ctx.add(self.value(*a), self.value(*b));
                     self.release(*a);
@@ -475,10 +631,11 @@ impl<'p> PlanRun<'p> {
         }
     }
 
-    /// The next level's PBS jobs as (input ciphertext, prepared LUT)
-    /// pairs, or `None` once every PBS level has been supplied. Jobs are
-    /// in node-id order; results must come back in the same order.
-    pub fn next_level_jobs(&mut self, ctx: &FheContext) -> Option<Vec<(CtInt, Arc<PreparedLut>)>> {
+    /// The next level's bootstrap jobs, or `None` once every PBS level
+    /// has been supplied. Jobs are in node-id order; results must come
+    /// back in the same order, flattened (a [`LevelJob::Multi`]
+    /// contributes its LUT count of consecutive outputs).
+    pub fn next_level_jobs(&mut self, ctx: &FheContext) -> Option<Vec<LevelJob>> {
         assert!(self.pending.is_empty(), "previous level awaits supply()");
         if self.current > self.plan.max_level {
             return None;
@@ -486,33 +643,85 @@ impl<'p> PlanRun<'p> {
         self.eval_linear(ctx, self.current);
         let mut jobs = Vec::new();
         for (id, node) in self.plan.nodes.iter().enumerate() {
-            if let Node::Pbs { input, lut } = node {
-                if self.plan.levels[id] == self.current {
+            if self.plan.levels[id] != self.current {
+                continue;
+            }
+            match node {
+                Node::Pbs { input, lut } => {
                     let ct = self.values[*input]
                         .clone()
                         .expect("PBS input live (level < current)");
-                    jobs.push((ct, Arc::clone(&self.resolved[lut.0])));
+                    let acc = self.resolved[lut.0]
+                        .as_ref()
+                        .expect("LUT resolved (referenced by a Pbs node)");
+                    jobs.push(LevelJob::Single(ct, Arc::clone(acc)));
                     self.pending.push(id);
                     self.release(*input);
                 }
+                Node::MultiPbs { input, .. } => {
+                    let ct = self.values[*input]
+                        .clone()
+                        .expect("multi-PBS input live (level < current)");
+                    jobs.push(LevelJob::Multi(ct, Arc::clone(&self.multi_accs[&id])));
+                    self.pending.push(id);
+                    self.release(*input);
+                }
+                _ => {}
             }
         }
         Some(jobs)
     }
 
     /// Hand back the results of the jobs returned by the last
-    /// [`PlanRun::next_level_jobs`] call (same order) and advance.
+    /// [`PlanRun::next_level_jobs`] call (same order, flattened) and
+    /// advance. A multi job's outputs scatter to its `MultiOut`
+    /// projections in packing order.
     pub fn supply(&mut self, outs: Vec<CtInt>) {
-        assert_eq!(outs.len(), self.pending.len(), "level result count mismatch");
-        for (id, ct) in self.pending.drain(..).zip(outs) {
-            self.values[id] = Some(ct);
-            self.evaluated[id] = true;
+        let expect: usize = self
+            .pending
+            .iter()
+            .map(|&id| match &self.plan.nodes[id] {
+                Node::Pbs { .. } => 1,
+                Node::MultiPbs { luts, .. } => luts.len(),
+                _ => unreachable!("pending holds only bootstrap nodes"),
+            })
+            .sum();
+        assert_eq!(outs.len(), expect, "level result count mismatch");
+        let pending = std::mem::take(&mut self.pending);
+        let mut outs = outs.into_iter();
+        for id in pending {
+            match &self.plan.nodes[id] {
+                Node::Pbs { .. } => {
+                    self.values[id] = Some(outs.next().expect("counted above"));
+                    self.evaluated[id] = true;
+                }
+                Node::MultiPbs { luts, .. } => {
+                    for slot in 0..luts.len() {
+                        let member = self.multi_members[&id][slot];
+                        self.values[member] = Some(outs.next().expect("counted above"));
+                        self.evaluated[member] = true;
+                        // The projection's "read" of the tuple node
+                        // happens right here — account for it so the
+                        // liveness invariant (consumed ⇒ freed) holds
+                        // for MultiPbs nodes too.
+                        self.release(id);
+                    }
+                    self.evaluated[id] = true;
+                }
+                _ => unreachable!("pending holds only bootstrap nodes"),
+            }
         }
         self.current += 1;
     }
 
     /// Evaluate the trailing linear nodes and return the outputs.
     pub fn finish(mut self, ctx: &FheContext) -> Vec<CtInt> {
+        self.finish_in_place(ctx)
+    }
+
+    /// [`Self::finish`] without consuming the run (tests use this to
+    /// inspect liveness bookkeeping after completion).
+    fn finish_in_place(&mut self, ctx: &FheContext) -> Vec<CtInt> {
         assert!(
             self.current > self.plan.max_level && self.pending.is_empty(),
             "finish() before all PBS levels were executed"
@@ -524,6 +733,261 @@ impl<'p> PlanRun<'p> {
             .map(|&id| self.values[id].clone().expect("output live"))
             .collect()
     }
+}
+
+// ---------------------------------------------------------------------
+// Rewrite passes
+// ---------------------------------------------------------------------
+
+/// Configuration of the [`PlanRewriter`] pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RewriteConfig {
+    /// Run common-subexpression elimination.
+    pub cse: bool,
+    /// Largest same-input LUT group the packing pass may fuse into one
+    /// `MultiPbs` (1 disables packing). Must not exceed the executing
+    /// parameter set's [`TfheParams::max_multi_lut`] budget — the
+    /// executor asserts this when resolving the packed accumulator.
+    ///
+    /// [`TfheParams::max_multi_lut`]: super::params::TfheParams::max_multi_lut
+    pub max_multi_lut: usize,
+}
+
+impl RewriteConfig {
+    /// Everything off — `rewrite` returns the plan unchanged.
+    pub fn none() -> Self {
+        RewriteConfig { cse: false, max_multi_lut: 1 }
+    }
+
+    /// CSE only (parameter-independent: merges are ciphertext-exact on
+    /// every set, so this is always safe).
+    pub fn cse_only() -> Self {
+        RewriteConfig { cse: true, max_multi_lut: 1 }
+    }
+
+    /// The full pipeline at the budget a parameter set advertises.
+    pub fn for_params(params: &super::params::TfheParams) -> Self {
+        RewriteConfig { cse: true, max_multi_lut: params.max_multi_lut() }
+    }
+}
+
+/// What one rewrite did — pinned by the rewrite test harness.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RewriteStats {
+    /// Duplicate nodes removed by CSE.
+    pub cse_merged: usize,
+    /// `MultiPbs` groups formed by the packing pass.
+    pub multi_groups: usize,
+    /// `Pbs` nodes folded into those groups (≥ 2 per group).
+    pub packed_luts: usize,
+}
+
+/// Ordered rewrite pipeline over [`CircuitPlan`]s: CSE first (so
+/// duplicate `Pbs` nodes collapse instead of wasting packing slots),
+/// then multi-value packing. Rewritten plans go through the same
+/// leveling pass as freshly built ones, so every consumer of the IR —
+/// `execute`, the fused executor, the optimizer profile, the benches —
+/// picks the rewrites up transparently. Running the pipeline twice is a
+/// no-op (pinned by tests).
+pub struct PlanRewriter {
+    cfg: RewriteConfig,
+}
+
+impl PlanRewriter {
+    pub fn new(cfg: RewriteConfig) -> Self {
+        PlanRewriter { cfg }
+    }
+
+    /// Pipeline at the executing context's parameter budget.
+    pub fn for_ctx(ctx: &FheContext) -> Self {
+        Self::new(RewriteConfig::for_params(&ctx.sk.params))
+    }
+
+    pub fn config(&self) -> RewriteConfig {
+        self.cfg
+    }
+
+    /// Run the configured passes, returning the rewritten plan and what
+    /// changed.
+    pub fn rewrite(&self, plan: CircuitPlan) -> (CircuitPlan, RewriteStats) {
+        let mut stats = RewriteStats::default();
+        let (mut nodes, luts, n_inputs, mut outputs) = plan.into_parts();
+        if self.cfg.cse {
+            cse_pass(&mut nodes, &mut outputs, &mut stats);
+        }
+        if self.cfg.max_multi_lut > 1 {
+            pack_pass(&mut nodes, &mut outputs, self.cfg.max_multi_lut, &mut stats);
+        }
+        (CircuitPlan::from_parts(nodes, luts, n_inputs, outputs), stats)
+    }
+}
+
+/// Structural identity key of a node, with commutative operand order
+/// normalized away (`Add`/`Sum` are wrapping torus additions, so operand
+/// order cannot change a single ciphertext bit). `Pbs` keys carry the
+/// LUT registry index: two nodes merge only when they reference the
+/// *same registered table* — never across distinct tables.
+#[derive(Clone, Hash, PartialEq, Eq)]
+enum NodeKey {
+    Input(usize),
+    Const(i64),
+    Add(NodeId, NodeId),
+    Sub(NodeId, NodeId),
+    Neg(NodeId),
+    AddConst(NodeId, i64),
+    ScalarMul(NodeId, i64),
+    Sum(Vec<NodeId>),
+    Pbs(NodeId, usize),
+    MultiPbs(NodeId, Vec<usize>),
+    MultiOut(NodeId, usize),
+}
+
+fn node_key(node: &Node) -> NodeKey {
+    match node {
+        Node::Input(i) => NodeKey::Input(*i),
+        Node::Const(v) => NodeKey::Const(*v),
+        Node::Add(a, b) => NodeKey::Add(*a.min(b), *a.max(b)),
+        Node::Sub(a, b) => NodeKey::Sub(*a, *b),
+        Node::Neg(a) => NodeKey::Neg(*a),
+        Node::AddConst(a, c) => NodeKey::AddConst(*a, *c),
+        Node::ScalarMul(a, c) => NodeKey::ScalarMul(*a, *c),
+        Node::Sum(xs) => {
+            let mut sorted = xs.clone();
+            sorted.sort_unstable();
+            NodeKey::Sum(sorted)
+        }
+        Node::Pbs { input, lut } => NodeKey::Pbs(*input, lut.0),
+        Node::MultiPbs { input, luts } => {
+            NodeKey::MultiPbs(*input, luts.iter().map(|l| l.0).collect())
+        }
+        Node::MultiOut { multi, index } => NodeKey::MultiOut(*multi, *index),
+    }
+}
+
+/// Clone `node` with every operand sent through `remap`.
+fn remap_node(node: &Node, remap: &[NodeId]) -> Node {
+    match node {
+        Node::Input(i) => Node::Input(*i),
+        Node::Const(v) => Node::Const(*v),
+        Node::Add(a, b) => Node::Add(remap[*a], remap[*b]),
+        Node::Sub(a, b) => Node::Sub(remap[*a], remap[*b]),
+        Node::Neg(a) => Node::Neg(remap[*a]),
+        Node::AddConst(a, c) => Node::AddConst(remap[*a], *c),
+        Node::ScalarMul(a, c) => Node::ScalarMul(remap[*a], *c),
+        Node::Sum(xs) => Node::Sum(xs.iter().map(|&x| remap[x]).collect()),
+        Node::Pbs { input, lut } => Node::Pbs { input: remap[*input], lut: *lut },
+        Node::MultiPbs { input, luts } => {
+            Node::MultiPbs { input: remap[*input], luts: luts.clone() }
+        }
+        Node::MultiOut { multi, index } => {
+            Node::MultiOut { multi: remap[*multi], index: *index }
+        }
+    }
+}
+
+/// Common-subexpression elimination: one forward scan (ids are
+/// topological) that remaps operands and drops any node whose
+/// canonicalized key was already seen. Because a duplicate's operands
+/// were remapped to the survivor's first, chains of duplicates collapse
+/// in a single pass, and the pass is idempotent.
+fn cse_pass(nodes: &mut Vec<Node>, outputs: &mut [NodeId], stats: &mut RewriteStats) {
+    let mut remap: Vec<NodeId> = Vec::with_capacity(nodes.len());
+    let mut seen: HashMap<NodeKey, NodeId> = HashMap::with_capacity(nodes.len());
+    let mut kept: Vec<Node> = Vec::with_capacity(nodes.len());
+    for node in nodes.iter() {
+        let node = remap_node(node, &remap);
+        match seen.entry(node_key(&node)) {
+            std::collections::hash_map::Entry::Occupied(hit) => {
+                remap.push(*hit.get());
+                stats.cse_merged += 1;
+            }
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                let id = kept.len();
+                slot.insert(id);
+                remap.push(id);
+                kept.push(node);
+            }
+        }
+    }
+    for out in outputs.iter_mut() {
+        *out = remap[*out];
+    }
+    *nodes = kept;
+}
+
+/// Multi-value packing: group `Pbs` nodes by input ciphertext, split
+/// each group into chunks of at most `max_multi`, and replace every
+/// chunk of ≥ 2 with one `MultiPbs` (at the first member's position)
+/// plus per-member `MultiOut` projections. Same input ⇒ same level
+/// (a PBS level is its input's level + 1), so packing can never merge
+/// across levels. Leftover singletons stay plain `Pbs`, which also
+/// makes the pass idempotent: a second run finds only groups of one.
+fn pack_pass(
+    nodes: &mut Vec<Node>,
+    outputs: &mut [NodeId],
+    max_multi: usize,
+    stats: &mut RewriteStats,
+) {
+    // Group members in node-id order.
+    let mut groups: HashMap<NodeId, Vec<NodeId>> = HashMap::new();
+    for (id, node) in nodes.iter().enumerate() {
+        if let Node::Pbs { input, .. } = node {
+            groups.entry(*input).or_default().push(id);
+        }
+    }
+    // member id -> (leader id, output slot); leader -> packed LUT list.
+    let mut member_slot: HashMap<NodeId, (NodeId, usize)> = HashMap::new();
+    let mut leader_luts: HashMap<NodeId, Vec<LutRef>> = HashMap::new();
+    for members in groups.values() {
+        for chunk in members.chunks(max_multi) {
+            if chunk.len() < 2 {
+                continue;
+            }
+            let luts: Vec<LutRef> = chunk
+                .iter()
+                .map(|&m| match &nodes[m] {
+                    Node::Pbs { lut, .. } => *lut,
+                    _ => unreachable!("group members are Pbs nodes"),
+                })
+                .collect();
+            leader_luts.insert(chunk[0], luts);
+            for (slot, &m) in chunk.iter().enumerate() {
+                member_slot.insert(m, (chunk[0], slot));
+            }
+            stats.multi_groups += 1;
+            stats.packed_luts += chunk.len();
+        }
+    }
+    if leader_luts.is_empty() {
+        return;
+    }
+    // Rebuild the node list: the leader position grows a MultiPbs right
+    // before its own MultiOut, so every projection still follows the
+    // bootstrap it reads (ids stay topological).
+    let mut remap: Vec<NodeId> = Vec::with_capacity(nodes.len());
+    let mut kept: Vec<Node> = Vec::with_capacity(nodes.len() + leader_luts.len());
+    let mut multi_of_leader: HashMap<NodeId, NodeId> = HashMap::new();
+    for (id, node) in nodes.iter().enumerate() {
+        if let Some(&(leader, slot)) = member_slot.get(&id) {
+            if leader == id {
+                let input = match node {
+                    Node::Pbs { input, .. } => remap[*input],
+                    _ => unreachable!("leader is a Pbs node"),
+                };
+                multi_of_leader.insert(leader, kept.len());
+                kept.push(Node::MultiPbs { input, luts: leader_luts[&leader].clone() });
+            }
+            remap.push(kept.len());
+            kept.push(Node::MultiOut { multi: multi_of_leader[&leader], index: slot });
+        } else {
+            remap.push(kept.len());
+            kept.push(remap_node(node, &remap));
+        }
+    }
+    for out in outputs.iter_mut() {
+        *out = remap[*out];
+    }
+    *nodes = kept;
 }
 
 #[cfg(test)]
@@ -662,12 +1126,217 @@ mod tests {
             // Execute the level's jobs one by one (any schedule is valid).
             let outs: Vec<CtInt> = jobs
                 .iter()
-                .map(|(ct, lut)| CtInt { ct: ctx.sk.pbs_prepared(&ct.ct, lut) })
+                .flat_map(|job| match job {
+                    LevelJob::Single(ct, lut) => {
+                        vec![CtInt { ct: ctx.sk.pbs_prepared(&ct.ct, lut) }]
+                    }
+                    LevelJob::Multi(ct, mlut) => ctx
+                        .sk
+                        .pbs_multi(&ct.ct, mlut)
+                        .into_iter()
+                        .map(|ct| CtInt { ct })
+                        .collect(),
+                })
                 .collect();
             run.supply(outs);
         }
         assert_eq!(rounds, p.levels());
         let outs = run.finish(&ctx);
         assert_eq!(ctx.decrypt(&outs[0], &ck), (-1i64 - 2).max(0) + 2 * 2);
+    }
+
+    // ----- rewrite passes -----
+
+    /// A multi-LUT-capable context (ϑ = 1 ⇒ groups of ≤ 2).
+    fn multi_setup() -> (ClientKey, FheContext, Xoshiro256) {
+        let mut rng = Xoshiro256::new(0x9148);
+        let ck = ClientKey::generate(TfheParams::test_multi_lut(3), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        (ck, ctx, rng)
+    }
+
+    /// relu(x) and |x| of the same input, plus a duplicated difference
+    /// and a duplicated relu of it: CSE fodder on top of a packable pair.
+    fn redundant_plan() -> CircuitPlan {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(2);
+        let d1 = b.sub(ins[0], ins[1]);
+        let d2 = b.sub(ins[0], ins[1]); // duplicate of d1
+        let r1 = b.relu(d1);
+        let r2 = b.relu(d2); // collapses once d2 → d1
+        let ab = b.abs(d1); // same input as r1, different LUT → packable
+        let s = b.add(r1, r2);
+        let out = b.add(s, ab);
+        b.output(out);
+        b.build()
+    }
+
+    #[test]
+    fn cse_merges_duplicates_and_execution_stays_bit_identical() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup();
+        let p = redundant_plan();
+        assert_eq!(p.pbs_count(), 3);
+        let (q, stats) = PlanRewriter::new(RewriteConfig::cse_only()).rewrite(redundant_plan());
+        // d2 and r2 merge; r1/ab survive (different tables).
+        assert_eq!(stats.cse_merged, 2);
+        assert_eq!(q.pbs_count(), 2);
+        assert_eq!(q.blind_rotation_count(), 2);
+        // a − b = 2 keeps 2·relu + abs = 6 inside the 4-bit signed range.
+        let a = ctx.encrypt(1, &ck, &mut rng);
+        let b = ctx.encrypt(-1, &ck, &mut rng);
+        let inputs = [a, b];
+        let want = p.execute(&ctx, &inputs);
+        let before = pbs_count();
+        let got = q.execute(&ctx, &inputs);
+        assert_eq!(pbs_count() - before, 2, "merged plan executes 2 PBS");
+        // CSE merges are ciphertext-exact, so even the *ciphertexts*
+        // agree with the unrewritten run.
+        assert_eq!(got[0].ct, want[0].ct);
+        assert_eq!(ctx.decrypt(&got[0], &ck), 6);
+    }
+
+    #[test]
+    fn cse_never_merges_nodes_with_different_lut_tables() {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(1);
+        let l1 = b.lut(|x| x.max(0));
+        let l2 = b.lut(|x| x.min(0)); // different table, same input
+        let p1 = b.pbs(ins[0], l1);
+        let p2 = b.pbs(ins[0], l2);
+        let s = b.add(p1, p2);
+        b.output(s);
+        let (q, stats) = PlanRewriter::new(RewriteConfig::cse_only()).rewrite(b.build());
+        assert_eq!(stats.cse_merged, 0, "distinct tables must never merge");
+        assert_eq!(q.pbs_count(), 2);
+    }
+
+    #[test]
+    fn cse_canonicalizes_commutative_operands() {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(2);
+        let s1 = b.add(ins[0], ins[1]);
+        let s2 = b.add(ins[1], ins[0]); // torus addition commutes
+        let t1 = b.sub(ins[0], ins[1]);
+        let t2 = b.sub(ins[1], ins[0]); // subtraction does NOT
+        let u = b.add(s1, s2);
+        let v = b.add(t1, t2);
+        let w = b.add(u, v);
+        b.output(w);
+        let (q, stats) = PlanRewriter::new(RewriteConfig::cse_only()).rewrite(b.build());
+        assert_eq!(stats.cse_merged, 1, "only the commuted Add merges");
+        assert_eq!(q.linear_op_count(), 6);
+    }
+
+    #[test]
+    fn packing_groups_share_one_rotation_and_decode_identically() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = multi_setup();
+        assert_eq!(ctx.max_multi_lut(), 2);
+        let p = redundant_plan();
+        let (q, stats) = PlanRewriter::for_ctx(&ctx).rewrite(redundant_plan());
+        assert_eq!(stats.cse_merged, 2);
+        assert_eq!(stats.multi_groups, 1);
+        assert_eq!(stats.packed_luts, 2);
+        // LUT evaluations unchanged by packing, rotations reduced.
+        assert_eq!(q.pbs_count(), 2);
+        assert_eq!(q.blind_rotation_count(), 1);
+        assert_eq!(q.levels(), p.levels());
+        assert_eq!(q.level_sizes(), vec![1], "one fused job on the only level");
+        // 3-bit signed range is [−4, 3]: keep every intermediate —
+        // including 2·relu(a−b) + |a−b| — inside it.
+        for (a, b) in [(1i64, 0), (0, 1), (-1, 1), (-2, -2)] {
+            let ca = ctx.encrypt(a, &ck, &mut rng);
+            let cb = ctx.encrypt(b, &ck, &mut rng);
+            let inputs = [ca, cb];
+            let want = p.execute(&ctx, &inputs);
+            let before_pbs = pbs_count();
+            let before_rot = crate::tfhe::bootstrap::blind_rotation_count();
+            let got = q.execute(&ctx, &inputs);
+            assert_eq!(pbs_count() - before_pbs, q.pbs_count(), "a={a} b={b}");
+            assert_eq!(
+                crate::tfhe::bootstrap::blind_rotation_count() - before_rot,
+                q.blind_rotation_count(),
+                "a={a} b={b}"
+            );
+            assert_eq!(
+                ctx.decrypt(&got[0], &ck),
+                ctx.decrypt(&want[0], &ck),
+                "decode equality a={a} b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn packing_respects_group_budget_and_level_boundaries() {
+        // Four LUTs of one input at budget 2 → two groups of 2; a LUT of
+        // a *different* (deeper) node must not join any group.
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(1);
+        let luts: Vec<LutRef> = (0..4i64).map(|k| b.lut(move |x| x + k)).collect();
+        let outs: Vec<NodeId> = luts.iter().map(|&l| b.pbs(ins[0], l)).collect();
+        let deeper = b.pbs(outs[0], luts[1]); // level 2: same table, different input
+        let s = b.sum(&outs);
+        let t = b.add(s, deeper);
+        b.output(t);
+        let p = b.build();
+        let (q, stats) =
+            PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 2 }).rewrite(p);
+        assert_eq!(stats.multi_groups, 2);
+        assert_eq!(stats.packed_luts, 4);
+        assert_eq!(q.pbs_count(), 5);
+        assert_eq!(q.blind_rotation_count(), 3, "2 groups + the deeper singleton");
+        // Grouped members sit at one level; the deeper PBS kept its own.
+        assert_eq!(q.levels(), 2);
+        assert_eq!(q.level_sizes(), vec![2, 1]);
+    }
+
+    #[test]
+    fn rewrites_are_idempotent() {
+        let rewriter = PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 2 });
+        let (once, stats1) = rewriter.rewrite(redundant_plan());
+        assert!(stats1.cse_merged > 0 && stats1.multi_groups > 0);
+        let (pbs1, rot1, lin1) =
+            (once.pbs_count(), once.blind_rotation_count(), once.linear_op_count());
+        let (twice, stats2) = rewriter.rewrite(once);
+        assert_eq!(stats2, RewriteStats::default(), "second run must be a no-op");
+        assert_eq!(twice.pbs_count(), pbs1);
+        assert_eq!(twice.blind_rotation_count(), rot1);
+        assert_eq!(twice.linear_op_count(), lin1);
+    }
+
+    #[test]
+    fn rewrite_none_returns_plan_unchanged() {
+        let p = redundant_plan();
+        let (q, stats) = PlanRewriter::new(RewriteConfig::none()).rewrite(redundant_plan());
+        assert_eq!(stats, RewriteStats::default());
+        assert_eq!(q.pbs_count(), p.pbs_count());
+        assert_eq!(q.blind_rotation_count(), p.blind_rotation_count());
+        assert_eq!(q.level_sizes(), p.level_sizes());
+    }
+
+    #[test]
+    fn liveness_frees_every_intermediate_in_rewritten_plans() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = multi_setup();
+        let (q, _) = PlanRewriter::for_ctx(&ctx).rewrite(redundant_plan());
+        let ca = ctx.encrypt(1, &ck, &mut rng);
+        let cb = ctx.encrypt(0, &ck, &mut rng);
+        let mut run = PlanRun::new(&q, &ctx, &[ca, cb]);
+        while let Some(jobs) = run.next_level_jobs(&ctx) {
+            let outs = ctx.pbs_level(&jobs);
+            run.supply(outs);
+        }
+        let outs = run.finish_in_place(&ctx);
+        assert_eq!(outs.len(), 1);
+        // Every consumed node was freed after its last read; only the
+        // listed outputs (whose +1 use is never released) may stay live.
+        for id in 0..q.nodes.len() {
+            if q.outputs.contains(&id) {
+                continue;
+            }
+            assert_eq!(run.remaining[id], 0, "node {id} has unconsumed reads");
+            assert!(run.values[id].is_none(), "node {id} leaked its ciphertext");
+        }
     }
 }

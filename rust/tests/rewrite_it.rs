@@ -1,0 +1,237 @@
+//! Bit-identity harness for the plan rewrite passes: over a seeded
+//! `(T, d)` grid, every attention circuit must decrypt to the *same*
+//! integers with rewrites off and on, the blind-rotation count must
+//! strictly drop wherever packing applies (the signed inhibitor), and
+//! the global `PBS_COUNT` / `BLIND_ROTATION_COUNT` deltas must match the
+//! `CircuitPlan` predictions exactly in both modes. Circuits the passes
+//! cannot touch (unsigned inhibitor, dot-product) must come out
+//! ciphertext-identical, not just decode-identical.
+
+use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
+use inhibitor::tensor::ITensor;
+use inhibitor::tfhe::ops::CtInt;
+use inhibitor::tfhe::{
+    bootstrap, CircuitPlan, ClientKey, FheContext, PlanRewriter, RewriteConfig, TfheParams,
+};
+use inhibitor::util::prng::Xoshiro256;
+use std::sync::Mutex;
+
+/// `PBS_COUNT` / `BLIND_ROTATION_COUNT` are process-global and tests in
+/// this binary run on parallel threads; count-sensitive tests serialize
+/// through this lock.
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Execute `plan` and return (decrypted outputs, LUT evaluations, blind
+/// rotations), asserting the counter deltas match the plan's own
+/// predictions exactly.
+fn run_counted(
+    plan: &CircuitPlan,
+    ctx: &FheContext,
+    ck: &ClientKey,
+    inputs: &[CtInt],
+    label: &str,
+) -> (Vec<i64>, Vec<CtInt>) {
+    let before_pbs = bootstrap::pbs_count();
+    let before_rot = bootstrap::blind_rotation_count();
+    let outs = plan.execute(ctx, inputs);
+    assert_eq!(
+        bootstrap::pbs_count() - before_pbs,
+        plan.pbs_count(),
+        "{label}: PBS_COUNT must match the plan's pbs_count()"
+    );
+    assert_eq!(
+        bootstrap::blind_rotation_count() - before_rot,
+        plan.blind_rotation_count(),
+        "{label}: BLIND_ROTATION_COUNT must match the plan's blind_rotation_count()"
+    );
+    let dec = outs.iter().map(|c| ctx.decrypt(c, ck)).collect();
+    (dec, outs)
+}
+
+fn encrypt_qkv(
+    ctx: &FheContext,
+    ck: &ClientKey,
+    rng: &mut Xoshiro256,
+    t: usize,
+    d: usize,
+    qk_range: (i64, i64),
+    v_range: (i64, i64),
+) -> (ITensor, ITensor, ITensor, Vec<CtInt>) {
+    let q = ITensor::random(&[t, d], qk_range.0, qk_range.1, rng);
+    let k = ITensor::random(&[t, d], qk_range.0, qk_range.1, rng);
+    let v = ITensor::random(&[t, d], v_range.0, v_range.1, rng);
+    let mut inputs = Vec::with_capacity(3 * t * d);
+    for tensor in [&q, &k, &v] {
+        inputs.extend(tensor.data.iter().map(|&val| ctx.encrypt(val, ck, rng)));
+    }
+    (q, k, v, inputs)
+}
+
+#[test]
+fn signed_inhibitor_rewrites_are_bit_identical_and_cut_rotations() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x2E11);
+    // One packing-capable keyset for the whole grid (ϑ = 1 at 4 bits).
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(4), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    assert_eq!(ctx.max_multi_lut(), 2, "grid params must advertise a packing budget");
+    // (T, d, q/k range, v range): ranges hand-sized so every
+    // intermediate of the signed circuit stays in the 4-bit signed range.
+    let grid = [(2usize, 2usize, (-2i64, 1i64), (-3i64, 3i64)), (3, 2, (-1, 1), (-2, 2))];
+    for &(t, d, qk_range, v_range) in &grid {
+        let head = InhibitorSignedFhe::new(d, 1);
+        let raw = head.plan(t, d);
+        let rewriter = PlanRewriter::new(RewriteConfig {
+            cse: true,
+            max_multi_lut: ctx.max_multi_lut(),
+        });
+        let (rewritten, stats) = rewriter.rewrite(head.plan(t, d));
+        // Exact closed forms of the rewrite, pinned per shape.
+        let (tu, du) = (t as u64, d as u64);
+        assert_eq!(raw.pbs_count(), 5 * tu * tu * du + tu * tu + tu * du, "verbatim T={t}");
+        assert_eq!(
+            rewritten.pbs_count(),
+            3 * tu * tu * du + tu * tu + 3 * tu * du,
+            "CSE'd T={t}"
+        );
+        assert_eq!(
+            rewritten.blind_rotation_count(),
+            3 * tu * tu * du + tu * tu + 2 * tu * du,
+            "packed T={t}"
+        );
+        assert!(
+            rewritten.blind_rotation_count() < raw.blind_rotation_count(),
+            "packing applies here, so rotations must strictly drop (T={t}, d={d})"
+        );
+        assert_eq!(stats.multi_groups, t * d);
+        // Same encrypted inputs through both plans.
+        let (q, k, v, inputs) = encrypt_qkv(&ctx, &ck, &mut rng, t, d, qk_range, v_range);
+        let (dec_raw, _) = run_counted(&raw, &ctx, &ck, &inputs, "signed raw");
+        let (dec_rw, _) = run_counted(&rewritten, &ctx, &ck, &inputs, "signed rewritten");
+        assert_eq!(dec_raw, dec_rw, "rewritten outputs must be bit-identical (T={t}, d={d})");
+        // And both must equal the plaintext mirror.
+        let want = head.mirror(&q, &k, &v, ctx.enc.min_signed(), ctx.enc.max_signed());
+        assert_eq!(dec_rw, want.data, "mirror equality (T={t}, d={d})");
+    }
+}
+
+#[test]
+fn untouched_circuits_rewrite_to_ciphertext_identical_plans() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x2E12);
+    let (t, d) = (2usize, 2usize);
+    // Unsigned inhibitor at 5 bits, dot-product at 6 — the widths their
+    // e2e tests use. Neither circuit has duplicate or same-input PBS
+    // nodes, so the full pipeline must leave counts unchanged and the
+    // executions bit-identical down to the ciphertexts.
+    {
+        let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let head = InhibitorFhe::new(d, 1);
+        let raw = head.plan(t, d);
+        let (rewritten, stats) =
+            PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 4 })
+                .rewrite(head.plan(t, d));
+        assert_eq!(stats.cse_merged, 0, "inhibitor plan is already duplicate-free");
+        assert_eq!(stats.multi_groups, 0, "no same-input LUT pairs to pack");
+        assert_eq!(rewritten.pbs_count(), raw.pbs_count());
+        assert_eq!(rewritten.blind_rotation_count(), raw.blind_rotation_count());
+        let (_, _, _, inputs) = encrypt_qkv(&ctx, &ck, &mut rng, t, d, (-2, 2), (0, 3));
+        let (_, outs_raw) = run_counted(&raw, &ctx, &ck, &inputs, "inhibitor raw");
+        let (_, outs_rw) = run_counted(&rewritten, &ctx, &ck, &inputs, "inhibitor rewritten");
+        for (i, (a, b)) in outs_raw.iter().zip(outs_rw.iter()).enumerate() {
+            assert_eq!(a.ct, b.ct, "inhibitor output {i} must be ciphertext-identical");
+        }
+    }
+    {
+        let ck = ClientKey::generate(TfheParams::test_for_bits(6), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let head = DotProductFhe::new(d, 2);
+        let raw = head.plan(t, d);
+        let (rewritten, stats) =
+            PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 4 })
+                .rewrite(head.plan(t, d));
+        assert_eq!(stats.cse_merged, 0, "dot-product plan is already duplicate-free");
+        assert_eq!(stats.multi_groups, 0);
+        assert_eq!(rewritten.pbs_count(), raw.pbs_count());
+        assert_eq!(rewritten.blind_rotation_count(), raw.blind_rotation_count());
+        let mut inputs = Vec::with_capacity(3 * t * d);
+        for tensor in [
+            ITensor::from_vec(&[t, d], vec![1, -1, 2, 0]),
+            ITensor::from_vec(&[t, d], vec![1, 1, -1, 2]),
+            ITensor::from_vec(&[t, d], vec![2, 1, -1, 3]),
+        ] {
+            inputs.extend(tensor.data.iter().map(|&val| ctx.encrypt(val, &ck, &mut rng)));
+        }
+        let (_, outs_raw) = run_counted(&raw, &ctx, &ck, &inputs, "dotprod raw");
+        let (_, outs_rw) = run_counted(&rewritten, &ctx, &ck, &inputs, "dotprod rewritten");
+        for (i, (a, b)) in outs_raw.iter().zip(outs_rw.iter()).enumerate() {
+            assert_eq!(a.ct, b.ct, "dotprod output {i} must be ciphertext-identical");
+        }
+    }
+}
+
+#[test]
+fn forward_executes_rewritten_plan_from_a_warm_cache() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x2E13);
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(4), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let (t, d) = (2usize, 2usize);
+    let head = InhibitorSignedFhe::new(d, 1);
+    let q = ITensor::from_vec(&[t, d], vec![1, -2, 0, 1]);
+    let k = ITensor::from_vec(&[t, d], vec![1, -1, -2, 0]);
+    let v = ITensor::from_vec(&[t, d], vec![3, -1, -2, 2]);
+    let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+    let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+    let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+    let rewritten = head.plan_for(&ctx, t, d);
+    assert_eq!(head.plan_builds(), 1);
+    let mut first: Option<Vec<_>> = None;
+    for round in 0..2 {
+        let before_pbs = bootstrap::pbs_count();
+        let before_rot = bootstrap::blind_rotation_count();
+        let h = head.forward(&ctx, &cq, &ckk, &cv);
+        // forward() must execute exactly the cached rewritten plan.
+        assert_eq!(bootstrap::pbs_count() - before_pbs, rewritten.pbs_count(), "round {round}");
+        assert_eq!(
+            bootstrap::blind_rotation_count() - before_rot,
+            rewritten.blind_rotation_count(),
+            "round {round}"
+        );
+        let cts: Vec<_> = h.data.iter().map(|c| c.ct.clone()).collect();
+        match &first {
+            None => first = Some(cts),
+            Some(f) => assert_eq!(f, &cts, "repeated forwards are bit-identical"),
+        }
+    }
+    assert_eq!(head.plan_builds(), 1, "no rebuild across repeated forwards");
+}
+
+#[test]
+fn packed_execution_is_thread_count_invariant() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x2E14);
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(4), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let (t, d) = (2usize, 2usize);
+    let head = InhibitorSignedFhe::new(d, 1);
+    let plan = head.plan_for(&ctx, t, d);
+    let (_, _, _, inputs) = encrypt_qkv(&ctx, &ck, &mut rng, t, d, (-2, 1), (-3, 3));
+    ctx.set_threads(1);
+    let reference = plan.execute(&ctx, &inputs);
+    for threads in [2usize, 4] {
+        ctx.set_threads(threads);
+        let got = plan.execute(&ctx, &inputs);
+        for (i, (a, b)) in reference.iter().zip(got.iter()).enumerate() {
+            assert_eq!(
+                a.ct, b.ct,
+                "multi-LUT worker path must be deterministic (threads={threads}, output {i})"
+            );
+        }
+    }
+}
