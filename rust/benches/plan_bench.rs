@@ -7,9 +7,12 @@
 //!
 //!   cargo bench --bench plan_bench
 
+use inhibitor::attention::Mechanism;
 use inhibitor::bench_harness::{bench, BenchConfig};
 use inhibitor::coordinator::FusedLevelExecutor;
-use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
+use inhibitor::fhe_circuits::{
+    CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, MultiHeadFhe,
+};
 use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::ops::CtInt;
 use inhibitor::tfhe::{CircuitPlan, ClientKey, FheContext, PlanRewriter, TfheParams};
@@ -149,6 +152,60 @@ fn main() {
         ("speedup", Json::num(m_raw.mean_s / m_rw.mean_s)),
     ])];
 
+    // === Multi-head: one fused H-head plan vs H single-head plans ======
+    // The cross-head payoff (same keyset, ϑ=1 budget): H shared-KV
+    // signed heads in ONE plan — CSE dedupes the per-head V⁺/V⁻ splits
+    // across head boundaries and packing executes the survivors once
+    // for the whole block — against H separately-rewritten single-head
+    // plans over the same values. `rewritten` above IS the
+    // separately-rewritten single-head plan.
+    println!("\n=== Multi-head: fused H-head signed plan vs H single plans (shared KV) ===");
+    let heads = 4usize;
+    let mh = MultiHeadFhe::new(Mechanism::InhibitorSigned, d, heads, true);
+    let (fused, _) = PlanRewriter::for_ctx(&ctx).rewrite(mh.plan(t, d));
+    let sep_pbs = heads as u64 * rewritten.pbs_count();
+    let sep_rot = heads as u64 * rewritten.blind_rotation_count();
+    // Shared-KV input pool: H Q segments, then one K and one V segment.
+    let mut mh_inputs: Vec<CtInt> = Vec::with_capacity((heads + 2) * t * d);
+    for seg in 0..heads + 2 {
+        let (lo, hi) = if seg <= heads { (-2i64, 1i64) } else { (-3, 3) };
+        let vals = ITensor::random(&[t * d, 1], lo, hi, &mut rng);
+        mh_inputs.extend(vals.data.iter().map(|&val| ctx.encrypt(val, &ck, &mut rng)));
+    }
+    // Per-head bundles of the same ciphertexts: q_h ‖ k ‖ v.
+    let head_bundles: Vec<Vec<CtInt>> = (0..heads)
+        .map(|hh| {
+            let mut bundle: Vec<CtInt> = Vec::with_capacity(3 * t * d);
+            bundle.extend(mh_inputs[hh * t * d..(hh + 1) * t * d].iter().cloned());
+            bundle.extend(mh_inputs[heads * t * d..].iter().cloned());
+            bundle
+        })
+        .collect();
+    let m_fused = bench("multihead fused", cfg, || fused.execute(&ctx, &mh_inputs));
+    let m_sep = bench("multihead separate", cfg, || {
+        head_bundles.iter().map(|bundle| rewritten.execute(&ctx, bundle)).collect::<Vec<_>>()
+    });
+    println!("  {}", m_fused.summary());
+    println!("  {}", m_sep.summary());
+    println!(
+        "  H={heads}: pbs {sep_pbs} -> {}, blind rotations {sep_rot} -> {} ({:.3}x latency)",
+        fused.pbs_count(),
+        fused.blind_rotation_count(),
+        m_sep.mean_s / m_fused.mean_s,
+    );
+    let multihead_records = vec![Json::obj(vec![
+        ("mechanism", Json::str("inhibitor-signed")),
+        ("heads", Json::num(heads as f64)),
+        ("shared_kv", Json::num(1.0)),
+        ("pbs_fused", Json::num(fused.pbs_count() as f64)),
+        ("pbs_separate", Json::num(sep_pbs as f64)),
+        ("blind_rotations_fused", Json::num(fused.blind_rotation_count() as f64)),
+        ("blind_rotations_separate", Json::num(sep_rot as f64)),
+        ("fused_s", Json::num(m_fused.mean_s)),
+        ("separate_s", Json::num(m_sep.mean_s)),
+        ("speedup", Json::num(m_sep.mean_s / m_fused.mean_s)),
+    ])];
+
     let record = Json::obj(vec![
         ("bench", Json::str("plan_bench")),
         ("seq_len", Json::num(t as f64)),
@@ -157,6 +214,7 @@ fn main() {
         ("plan_vs_staged", Json::arr(records)),
         ("fusion", Json::arr(fusion_records)),
         ("rewrite", Json::arr(rewrite_records)),
+        ("multihead", Json::arr(multihead_records)),
     ]);
     // Write next to the workspace root (cargo runs benches with CWD at
     // the package root), where the perf-trajectory record is checked in.

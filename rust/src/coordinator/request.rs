@@ -18,16 +18,26 @@ impl EnginePath {
     /// Encrypted keys canonicalize mechanism aliases (e.g. "softmax" →
     /// "dotprod") so registration and submission agree no matter which
     /// accepted name either side used; unknown strings pass through
-    /// verbatim (registration rejects them anyway).
+    /// verbatim (registration rejects them anyway). Multi-head engines
+    /// suffix the mechanism (`dotprod@h4s` — see
+    /// `fhe_circuits::multihead_engine_mechanism`); canonicalization
+    /// applies to the base name, so `softmax@h4s` and `dotprod@h4s`
+    /// share a key while head-count/layout variants stay distinct.
     pub fn batch_key(&self) -> String {
         match self {
             EnginePath::Pjrt(m) => format!("pjrt/{m}"),
             EnginePath::QuantInt(m) => format!("quant/{m}"),
             EnginePath::Encrypted { session, mechanism } => {
-                let canon = crate::attention::Mechanism::parse(mechanism)
-                    .map(|m| m.name())
-                    .unwrap_or(mechanism.as_str());
-                format!("fhe/{canon}/{session}")
+                let (base, suffix) = match mechanism.split_once('@') {
+                    Some((b, s)) => (b, Some(s)),
+                    None => (mechanism.as_str(), None),
+                };
+                let canon =
+                    crate::attention::Mechanism::parse(base).map(|m| m.name()).unwrap_or(base);
+                match suffix {
+                    Some(s) => format!("fhe/{canon}@{s}/{session}"),
+                    None => format!("fhe/{canon}/{session}"),
+                }
             }
         }
     }
@@ -100,5 +110,17 @@ mod tests {
         // Unknown names pass through (rejected later at registration).
         let junk = EnginePath::Encrypted { session: 7, mechanism: "nonsense".into() };
         assert_eq!(junk.batch_key(), "fhe/nonsense/7");
+    }
+
+    #[test]
+    fn multihead_keys_canonicalize_base_and_keep_configuration_distinct() {
+        let alias = EnginePath::Encrypted { session: 7, mechanism: "softmax@h4s".into() };
+        let canon = EnginePath::Encrypted { session: 7, mechanism: "dotprod@h4s".into() };
+        assert_eq!(alias.batch_key(), canon.batch_key());
+        assert_eq!(canon.batch_key(), "fhe/dotprod@h4s/7");
+        let single = EnginePath::Encrypted { session: 7, mechanism: "dotprod".into() };
+        let two = EnginePath::Encrypted { session: 7, mechanism: "dotprod@h2".into() };
+        assert!(canon.batch_key() != single.batch_key());
+        assert!(canon.batch_key() != two.batch_key());
     }
 }

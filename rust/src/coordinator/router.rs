@@ -11,12 +11,13 @@
 
 use super::batcher::BatchPolicy;
 use super::fused::FusedLevelExecutor;
-use super::keymgr::KeyManager;
+use super::keymgr::{KeyManager, Session};
 use super::request::{EnginePath, InferRequest, InferResponse, Payload};
 use super::scheduler::Scheduler;
-use crate::fhe_circuits::{DotProductFhe, InhibitorFhe};
+use crate::fhe_circuits::{DotProductFhe, InhibitorFhe, InhibitorSignedFhe, MultiHeadFhe};
 use crate::model::{ModelInput, QTransformer};
 use crate::tensor::ITensor;
+use crate::tfhe::plan::CircuitPlan;
 #[cfg(feature = "xla")]
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -167,34 +168,92 @@ impl Coordinator {
             .keymgr
             .session(session_id)
             .ok_or_else(|| format!("unknown session {session_id}"))?;
-        // Grant this session's context the scheduler's PBS worker budget:
-        // the fused level batches fan out across it.
-        session.ctx.set_threads(self.scheduler.fhe_threads());
         // Key the engine by the *canonical* mechanism name so routing
         // agrees with registration no matter which alias was used.
         let key = EnginePath::Encrypted { session: session_id, mechanism: mech.name().into() }
             .batch_key();
+        self.add_encrypted_engine(&key, session, policy, move |ctx| match mech {
+            crate::attention::Mechanism::DotProduct => {
+                DotProductFhe::new(dim, 2).plan_for(ctx, seq_len, dim)
+            }
+            crate::attention::Mechanism::Inhibitor => {
+                InhibitorFhe::new(dim, 1).plan_for(ctx, seq_len, dim)
+            }
+            crate::attention::Mechanism::InhibitorSigned => {
+                InhibitorSignedFhe::new(dim, 1).plan_for(ctx, seq_len, dim)
+            }
+        });
+        Ok(())
+    }
+
+    /// Register an encrypted **multi-head** engine for a session: H
+    /// heads of the mechanism fused into one combined `CircuitPlan`
+    /// (`fhe_circuits::MultiHeadFhe`), so the rewrite passes optimize
+    /// across heads and the fused level executor sees H× the jobs per
+    /// level. The engine key carries the head configuration
+    /// (`<mechanism>@h<H>[s]`, see `MultiHeadFhe::engine_mechanism`),
+    /// keeping it distinct from the session's single-head engines.
+    /// Request bundles hold the plan's inputs in `MultiHeadFhe::plan`
+    /// layout: per-head `q_h ‖ k_h ‖ v_h` segments, or all Q segments
+    /// then one shared K/V pair when `shared_kv` (multi-query) is on.
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_fhe_multihead_engine(
+        &mut self,
+        session_id: u64,
+        mechanism: &str,
+        seq_len: usize,
+        d_head: usize,
+        n_heads: usize,
+        shared_kv: bool,
+        policy: BatchPolicy,
+    ) -> Result<(), String> {
+        let mech = crate::attention::Mechanism::parse(mechanism)
+            .ok_or_else(|| format!("unknown mechanism '{mechanism}'"))?;
+        if n_heads == 0 {
+            return Err("n_heads must be at least 1".into());
+        }
+        let session = self
+            .keymgr
+            .session(session_id)
+            .ok_or_else(|| format!("unknown session {session_id}"))?;
+        let head = MultiHeadFhe::new(mech, d_head, n_heads, shared_kv);
+        let key = EnginePath::Encrypted { session: session_id, mechanism: head.engine_mechanism() }
+            .batch_key();
+        self.add_encrypted_engine(&key, session, policy, move |ctx| {
+            head.plan_for(ctx, seq_len, d_head)
+        });
+        Ok(())
+    }
+
+    /// Shared registration body of every encrypted engine: grants the
+    /// session the scheduler's PBS worker budget, resolves the
+    /// (rewritten, cached) plan once on the engine's worker thread, and
+    /// executes each batch through [`FusedLevelExecutor`] — the current
+    /// PBS level of all co-scheduled requests goes to the worker pool as
+    /// one fused `pbs_batch`. Fusion never changes results or counts —
+    /// outputs are bit-identical to single-request execution (pinned by
+    /// `tests/fusion_it.rs` and `tests/multihead_it.rs`).
+    fn add_encrypted_engine(
+        &mut self,
+        key: &str,
+        session: Arc<Session>,
+        policy: BatchPolicy,
+        make_plan: impl FnOnce(&crate::tfhe::FheContext) -> Arc<CircuitPlan> + Send + 'static,
+    ) {
+        // Grant this session's context the scheduler's PBS worker budget:
+        // the fused level batches fan out across it.
+        session.ctx.set_threads(self.scheduler.fhe_threads());
         let metrics = Arc::clone(&self.scheduler.metrics);
         self.scheduler.add_engine(
-            &key,
+            key,
             policy,
             Box::new(move || {
-                // The worker holds the head's *rewritten* plan (CSE +
+                // The worker holds the engine's *rewritten* plan (CSE +
                 // multi-value packing at the session's parameter budget),
                 // cached on the head: the serving path executes the same
                 // reduced-rotation IR the benches and the profile report.
-                let plan = match mech {
-                    crate::attention::Mechanism::DotProduct => {
-                        DotProductFhe::new(dim, 2).plan_for(&session.ctx, seq_len, dim)
-                    }
-                    crate::attention::Mechanism::Inhibitor => {
-                        InhibitorFhe::new(dim, 1).plan_for(&session.ctx, seq_len, dim)
-                    }
-                    crate::attention::Mechanism::InhibitorSigned => {
-                        crate::fhe_circuits::InhibitorSignedFhe::new(dim, 1)
-                            .plan_for(&session.ctx, seq_len, dim)
-                    }
-                };
+                let plan = make_plan(&session.ctx);
+                let n_inputs = plan.n_inputs();
                 Box::new(move |batch: &[InferRequest]| {
                     // Phase 1 — resolve every request's ciphertext bundle.
                     // Any bad request fails the whole batch (matching the
@@ -218,10 +277,10 @@ impl Coordinator {
                                 break;
                             }
                         };
-                        if cts.len() != 3 * seq_len * dim {
+                        if cts.len() != n_inputs {
                             bad = Some(format!(
-                                "bundle must hold 3·T·d = {} ciphertexts, got {}",
-                                3 * seq_len * dim,
+                                "bundle must hold {} ciphertexts, got {}",
+                                n_inputs,
                                 cts.len()
                             ));
                             session.restore(blob, cts);
@@ -237,7 +296,7 @@ impl Coordinator {
                     }
                     // Phase 2 — fused level-synchronous execution across
                     // the whole batch.
-                    let requests: Vec<(&crate::tfhe::plan::CircuitPlan, &[_])> =
+                    let requests: Vec<(&CircuitPlan, &[_])> =
                         bundles.iter().map(|(_, b)| (plan.as_ref(), b.as_slice())).collect();
                     let (outs, stats) = FusedLevelExecutor::new(&session.ctx).run(&requests);
                     let levels = stats.level_batch_sizes.len() as u64;
@@ -277,7 +336,6 @@ impl Coordinator {
                 }) as crate::coordinator::scheduler::EngineBody
             }),
         );
-        Ok(())
     }
 
     /// Route a logical float request per the policy.
@@ -371,6 +429,26 @@ mod tests {
         // the mechanism check and fail only on the missing session.
         for mech in ["inhibitor-signed", "softmax", "inhibitor"] {
             let err = c.add_fhe_engine(1, mech, 2, 2, BatchPolicy::default()).unwrap_err();
+            assert!(err.contains("unknown session"), "{mech}: {err}");
+        }
+    }
+
+    #[test]
+    fn multihead_engine_registration_checks() {
+        let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+        // Mechanism and head-count checks run before session resolution.
+        let err = c
+            .add_fhe_multihead_engine(1, "nonsense", 2, 2, 2, false, BatchPolicy::default())
+            .unwrap_err();
+        assert!(err.contains("unknown mechanism"), "{err}");
+        let err = c
+            .add_fhe_multihead_engine(1, "inhibitor", 2, 2, 0, false, BatchPolicy::default())
+            .unwrap_err();
+        assert!(err.contains("n_heads"), "{err}");
+        for mech in ["inhibitor", "inhibitor-signed", "softmax"] {
+            let err = c
+                .add_fhe_multihead_engine(1, mech, 2, 2, 4, true, BatchPolicy::default())
+                .unwrap_err();
             assert!(err.contains("unknown session"), "{mech}: {err}");
         }
     }

@@ -41,11 +41,18 @@
 //! rotation), so its PBS and blind-rotation counts drop strictly under
 //! rewriting.
 //!
+//! Since PR 4 each circuit's plan body is an `emit` function over a
+//! shared [`CircuitBuilder`] — `plan()` wraps it for the single-head
+//! case, and [`super::MultiHeadFhe`] emits H heads into **one** combined
+//! plan so the rewrite passes work across head boundaries. `forward()`
+//! executes plans **by reference** (`execute_ref`): the 3·T·d input
+//! ciphertexts are borrowed, never copied into the run.
+//!
 //! [`PlanRewriter`]: crate::tfhe::plan::PlanRewriter
 
 use crate::tfhe::bootstrap::ClientKey;
 use crate::tfhe::ops::{CtInt, FheContext};
-use crate::tfhe::plan::{CircuitBuilder, CircuitPlan, PlanRewriter};
+use crate::tfhe::plan::{CircuitBuilder, CircuitPlan, NodeId, PlanRewriter};
 use crate::util::prng::Xoshiro256;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -84,13 +91,15 @@ impl CtMatrix {
     }
 }
 
-/// Q, K, V concatenated into one plan-input vector (the layout
-/// `plan()` declares: q row-major, then k, then v).
-fn qkv_inputs(q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> Vec<CtInt> {
+/// Q, K, V as one *borrowed* plan-input vector (the layout `plan()`
+/// declares: q row-major, then k, then v). References only — paired
+/// with [`CircuitPlan::execute_ref`], `forward()` never copies the
+/// 3·T·d input ciphertexts into the run.
+fn qkv_input_refs<'m>(q: &'m CtMatrix, k: &'m CtMatrix, v: &'m CtMatrix) -> Vec<&'m CtInt> {
     let mut inputs = Vec::with_capacity(q.data.len() + k.data.len() + v.data.len());
-    inputs.extend(q.data.iter().cloned());
-    inputs.extend(k.data.iter().cloned());
-    inputs.extend(v.data.iter().cloned());
+    inputs.extend(q.data.iter());
+    inputs.extend(k.data.iter());
+    inputs.extend(v.data.iter());
     inputs
 }
 
@@ -111,23 +120,31 @@ fn exp_lut_at(exp_scale: f64, x: i64, max_out: i64) -> i64 {
 /// different packing headroom. Shared across clones (`Arc`) and safe
 /// from concurrent engine workers (`Mutex`); `builds` counts cache
 /// misses so tests can pin "one build across repeated forwards".
+/// `pub(super)` so the multi-head wrapper caches through the same
+/// machinery.
 #[derive(Default)]
-struct PlanCache {
+pub(super) struct PlanCache {
     plans: Mutex<HashMap<(usize, usize, usize), Arc<CircuitPlan>>>,
     builds: AtomicUsize,
 }
 
 impl PlanCache {
     /// Fetch the rewritten plan for `(t, d)` under `ctx`'s parameter
-    /// budget, building (and rewriting) it on first use.
-    fn rewritten_for(
+    /// budget, building (and rewriting) it on first use. Honors the
+    /// `FHE_NO_REWRITE` knob ([`crate::tfhe::plan::rewrites_disabled`]):
+    /// when set, the raw builder plan is served instead, cached under a
+    /// sentinel budget so toggling the knob between calls can never leak
+    /// a rewritten plan into a no-rewrite run or vice versa.
+    pub(super) fn rewritten_for(
         &self,
         ctx: &FheContext,
         t: usize,
         d: usize,
         build: impl FnOnce() -> CircuitPlan,
     ) -> Arc<CircuitPlan> {
-        let key = (t, d, ctx.max_multi_lut());
+        let no_rewrite = crate::tfhe::plan::rewrites_disabled();
+        let budget = if no_rewrite { usize::MAX } else { ctx.max_multi_lut() };
+        let key = (t, d, budget);
         if let Some(hit) = self.plans.lock().unwrap().get(&key) {
             return Arc::clone(hit);
         }
@@ -136,13 +153,17 @@ impl PlanCache {
         // drops the loser's copy, which is fine: both plans are
         // identical.
         self.builds.fetch_add(1, Ordering::Relaxed);
-        let (plan, _stats) = PlanRewriter::for_ctx(ctx).rewrite(build());
+        let plan = if no_rewrite {
+            build()
+        } else {
+            PlanRewriter::for_ctx(ctx).rewrite(build()).0
+        };
         let plan = Arc::new(plan);
         let mut cache = self.plans.lock().unwrap();
         Arc::clone(cache.entry(key).or_insert(plan))
     }
 
-    fn builds(&self) -> usize {
+    pub(super) fn builds(&self) -> usize {
         self.builds.load(Ordering::Relaxed)
     }
 }
@@ -199,17 +220,24 @@ impl InhibitorFhe {
         self.cache.builds()
     }
 
-    /// Build the head's circuit plan for a `[T, d]` head. Inputs are
-    /// `q ‖ k ‖ v` row-major; outputs are `H` row-major. Four PBS levels:
-    /// score abs (T²·d) → fused scale-shift-ReLU (T²) → inhibition ReLU
-    /// (T²·d) → output refresh (T·d); `2·T²·d + T² + T·d` PBS total.
-    pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
+    /// Emit this head's subgraph into a shared builder: `q`/`k`/`v` are
+    /// the head's `T·d` input-segment node ids; the returned `T·d`
+    /// output nodes (refreshed, row-major) are *not* marked as plan
+    /// outputs — the caller owns the combined plan's output order. Both
+    /// [`InhibitorFhe::plan`] and the multi-head builder
+    /// ([`super::MultiHeadFhe`]) feed through here, so the per-head
+    /// dataflow is defined exactly once.
+    pub(super) fn emit(
+        &self,
+        b: &mut CircuitBuilder,
+        q: &[NodeId],
+        k: &[NodeId],
+        v: &[NodeId],
+        t: usize,
+        d: usize,
+    ) -> Vec<NodeId> {
         let gamma = self.gamma;
         let alpha_q = self.alpha_q;
-        let mut b = CircuitBuilder::new();
-        let q = b.inputs(t * d);
-        let k = b.inputs(t * d);
-        let v = b.inputs(t * d);
         // Level 1 — |q_ik − k_jk| for every (i, j, k): subtractions free.
         let mut abs = Vec::with_capacity(t * t * d);
         for i in 0..t {
@@ -232,6 +260,7 @@ impl InhibitorFhe {
         // Level 3 — inhibition H_ik = Σ_j (v_jk − z_ij)⁺, then level 4 —
         // output refresh (identity PBS) before the ciphertext leaves the
         // head.
+        let mut outs = Vec::with_capacity(t * d);
         for i in 0..t {
             for kk in 0..d {
                 let mut terms = Vec::with_capacity(t);
@@ -240,24 +269,39 @@ impl InhibitorFhe {
                     terms.push(b.relu(diff));
                 }
                 let h = b.sum(&terms);
-                let out = b.refresh(h);
-                b.output(out);
+                outs.push(b.refresh(h));
             }
+        }
+        outs
+    }
+
+    /// Build the head's circuit plan for a `[T, d]` head. Inputs are
+    /// `q ‖ k ‖ v` row-major; outputs are `H` row-major. Four PBS levels:
+    /// score abs (T²·d) → fused scale-shift-ReLU (T²) → inhibition ReLU
+    /// (T²·d) → output refresh (T·d); `2·T²·d + T² + T·d` PBS total.
+    pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
+        let mut b = CircuitBuilder::new();
+        let q = b.inputs(t * d);
+        let k = b.inputs(t * d);
+        let v = b.inputs(t * d);
+        for out in self.emit(&mut b, &q, &k, &v, t, d) {
+            b.output(out);
         }
         b.build()
     }
 
     /// Encrypted forward: Q, K, V are `[T, d]` ciphertext matrices.
-    /// Executes the cached rewritten plan — one batched PBS submission
-    /// per level through the context's worker pool. (The rewrite
-    /// pipeline finds nothing to change in this circuit — its verbatim
-    /// dataflow is already duplicate-free with all-distinct PBS inputs —
-    /// so counts and ciphertexts are those of the raw plan.)
+    /// Executes the cached rewritten plan *by reference* — one batched
+    /// PBS submission per level through the context's worker pool, and
+    /// no copy of the 3·T·d input ciphertexts. (The rewrite pipeline
+    /// finds nothing to change in this circuit — its verbatim dataflow
+    /// is already duplicate-free with all-distinct PBS inputs — so
+    /// counts and ciphertexts are those of the raw plan.)
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         assert_eq!((k.rows, k.cols), (t, d));
         assert_eq!((v.rows, v.cols), (t, d));
-        let data = self.plan_for(ctx, t, d).execute(ctx, &qkv_inputs(q, k, v));
+        let data = self.plan_for(ctx, t, d).execute_ref(ctx, &qkv_input_refs(q, k, v));
         CtMatrix { rows: t, cols: d, data }
     }
 
@@ -371,18 +415,24 @@ impl InhibitorSignedFhe {
         }
     }
 
-    /// Build the head's circuit plan, **verbatim** (no manual
-    /// deduplication — that is the rewriter's job). Inputs `q ‖ k ‖ v`
-    /// row-major; outputs `H` row-major. Four PBS levels: score abs +
-    /// value splits (3·T²·d) → fused scale-shift-ReLU (T²) → signed
-    /// inhibition (2·T²·d) → output refresh (T·d).
-    pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
+    /// Emit this head's subgraph, **verbatim** (no manual deduplication
+    /// — that is the rewriter's job), into a shared builder; see
+    /// [`InhibitorFhe::emit`] for the contract. The value-split tables
+    /// are the builder's *standard* relu/min0 LUTs, so in a fused
+    /// multi-head plan every head references the same registered tables
+    /// — which is exactly what lets CSE collapse split PBS across head
+    /// boundaries when heads share a V segment (multi-query layouts).
+    pub(super) fn emit(
+        &self,
+        b: &mut CircuitBuilder,
+        q: &[NodeId],
+        k: &[NodeId],
+        v: &[NodeId],
+        t: usize,
+        d: usize,
+    ) -> Vec<NodeId> {
         let gamma = self.gamma;
         let alpha_q = self.alpha_q;
-        let mut b = CircuitBuilder::new();
-        let q = b.inputs(t * d);
-        let k = b.inputs(t * d);
-        let v = b.inputs(t * d);
         // Level 1 — |q_ik − k_jk| for every (i, j, k), as the unsigned head.
         let mut abs = Vec::with_capacity(t * t * d);
         for i in 0..t {
@@ -405,22 +455,36 @@ impl InhibitorSignedFhe {
         // duplicates CSE removes and the same-input pairs packing fuses).
         // Positive and negative terms interleave per j so every partial
         // sum stays within the magnitude of the final result.
-        let vmin = b.lut(|x: i64| x.min(0));
+        let mut outs = Vec::with_capacity(t * d);
         for i in 0..t {
             for kk in 0..d {
                 let mut terms = Vec::with_capacity(2 * t);
                 for j in 0..t {
                     let vp = b.relu(v[j * d + kk]);
-                    let vn = b.pbs(v[j * d + kk], vmin);
+                    let vn = b.min0(v[j * d + kk]);
                     let pos_in = b.sub(vp, z[i * t + j]);
                     terms.push(b.relu(pos_in));
                     let neg_in = b.add(vn, z[i * t + j]);
-                    terms.push(b.pbs(neg_in, vmin));
+                    terms.push(b.min0(neg_in));
                 }
                 let h = b.sum(&terms);
-                let out = b.refresh(h);
-                b.output(out);
+                outs.push(b.refresh(h));
             }
+        }
+        outs
+    }
+
+    /// Build the head's circuit plan. Inputs `q ‖ k ‖ v` row-major;
+    /// outputs `H` row-major. Four PBS levels: score abs + value splits
+    /// (3·T²·d) → fused scale-shift-ReLU (T²) → signed inhibition
+    /// (2·T²·d) → output refresh (T·d).
+    pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
+        let mut b = CircuitBuilder::new();
+        let q = b.inputs(t * d);
+        let k = b.inputs(t * d);
+        let v = b.inputs(t * d);
+        for out in self.emit(&mut b, &q, &k, &v, t, d) {
+            b.output(out);
         }
         b.build()
     }
@@ -436,15 +500,15 @@ impl InhibitorSignedFhe {
         self.cache.builds()
     }
 
-    /// Encrypted forward: executes the cached rewritten plan. On
-    /// packing-capable parameter sets this is where the multi-value
-    /// saving lands in serving: fewer blind rotations, identical
-    /// decrypted outputs.
+    /// Encrypted forward: executes the cached rewritten plan by
+    /// reference (no input copies). On packing-capable parameter sets
+    /// this is where the multi-value saving lands in serving: fewer
+    /// blind rotations, identical decrypted outputs.
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         assert_eq!((k.rows, k.cols), (t, d));
         assert_eq!((v.rows, v.cols), (t, d));
-        let data = self.plan_for(ctx, t, d).execute(ctx, &qkv_inputs(q, k, v));
+        let data = self.plan_for(ctx, t, d).execute_ref(ctx, &qkv_input_refs(q, k, v));
         CtMatrix { rows: t, cols: d, data }
     }
 
@@ -524,18 +588,19 @@ impl DotProductFhe {
         exp_lut_at(self.exp_scale, x, max_out)
     }
 
-    /// Build the baseline's circuit plan for a `[T, d]` head. Inputs are
-    /// `q ‖ k ‖ v` row-major. Six PBS levels: score squares (2·T²·d, the
-    /// two halves of every eq.-1 product) → exp (T²) → reciprocal (T) →
-    /// probability squares (2·T²) → attend squares (2·T²·d) → rescale
-    /// (T·d); `4·T²·d + 3·T² + T + T·d` PBS total.
-    pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
+    /// Emit the baseline's subgraph into a shared builder; see
+    /// [`InhibitorFhe::emit`] for the contract.
+    pub(super) fn emit(
+        &self,
+        b: &mut CircuitBuilder,
+        q: &[NodeId],
+        k: &[NodeId],
+        v: &[NodeId],
+        t: usize,
+        d: usize,
+    ) -> Vec<NodeId> {
         let exp_scale = self.exp_scale;
         let max_out = (1i64 << self.prob_bits) - 1; // LUT output magnitude
-        let mut b = CircuitBuilder::new();
-        let q = b.inputs(t * d);
-        let k = b.inputs(t * d);
-        let v = b.inputs(t * d);
         // Level 1 — scores S_ij = Σ_k q_ik·k_jk, each product via eq. 1.
         let mut scores = Vec::with_capacity(t * t);
         for i in 0..t {
@@ -570,27 +635,43 @@ impl DotProductFhe {
         // Level 5 — attend V: H_ik = Σ_j p_ij · v_jk, then level 6 —
         // rescale by 1/max_out.
         let rescale = b.lut(move |x| (x as f64 / max_out as f64).round() as i64);
+        let mut outs = Vec::with_capacity(t * d);
         for i in 0..t {
             for kk in 0..d {
                 let terms: Vec<_> =
                     (0..t).map(|j| b.ct_mul(probs[i * t + j], v[j * d + kk])).collect();
                 let acc = b.sum(&terms);
-                let out = b.pbs(acc, rescale);
-                b.output(out);
+                outs.push(b.pbs(acc, rescale));
             }
+        }
+        outs
+    }
+
+    /// Build the baseline's circuit plan for a `[T, d]` head. Inputs are
+    /// `q ‖ k ‖ v` row-major. Six PBS levels: score squares (2·T²·d, the
+    /// two halves of every eq.-1 product) → exp (T²) → reciprocal (T) →
+    /// probability squares (2·T²) → attend squares (2·T²·d) → rescale
+    /// (T·d); `4·T²·d + 3·T² + T + T·d` PBS total.
+    pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
+        let mut b = CircuitBuilder::new();
+        let q = b.inputs(t * d);
+        let k = b.inputs(t * d);
+        let v = b.inputs(t * d);
+        for out in self.emit(&mut b, &q, &k, &v, t, d) {
+            b.output(out);
         }
         b.build()
     }
 
-    /// Encrypted forward: executes the cached rewritten plan — one
-    /// batched PBS submission per level. (As with the unsigned
-    /// inhibitor, the rewrite pipeline is a no-op on this circuit's
-    /// all-distinct dataflow.)
+    /// Encrypted forward: executes the cached rewritten plan by
+    /// reference — one batched PBS submission per level, no input
+    /// copies. (As with the unsigned inhibitor, the rewrite pipeline is
+    /// a no-op on this circuit's all-distinct dataflow.)
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         assert_eq!((k.rows, k.cols), (t, d));
         assert_eq!((v.rows, v.cols), (t, d));
-        let data = self.plan_for(ctx, t, d).execute(ctx, &qkv_inputs(q, k, v));
+        let data = self.plan_for(ctx, t, d).execute_ref(ctx, &qkv_input_refs(q, k, v));
         CtMatrix { rows: t, cols: d, data }
     }
 

@@ -4,8 +4,12 @@
 //! mirrors used for exact correctness checks and the PR 1 hand-staged
 //! forwards kept as bit-identity references. The signed Inhibitor
 //! (paper eq. 7) is transcribed verbatim — its redundancy is the
-//! rewriter's to remove.
+//! rewriter's to remove. `multihead` fuses H heads of any mechanism
+//! into one combined plan, where the rewrite passes finally work
+//! *across* head boundaries (S6b).
 
 pub mod attention_fhe;
+pub mod multihead;
 
 pub use attention_fhe::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
+pub use multihead::{multihead_engine_mechanism, MultiHeadFhe};

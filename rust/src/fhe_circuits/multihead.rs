@@ -1,0 +1,335 @@
+//! Multi-head encrypted attention as **one** fused `CircuitPlan` (S6b).
+//!
+//! A transformer block splits its model width into H head slices, runs
+//! attention per slice, and concatenates. Serving each head as its own
+//! circuit would hand the rewrite pipeline H isolated DAGs — and PR 3's
+//! passes find nothing *across* circuits. [`MultiHeadFhe`] instead emits
+//! every head's subgraph into a single [`CircuitBuilder`] (per-head
+//! Q/K/V input segments, head outputs interleaved into `[T, H·d]`
+//! row-major order), so:
+//!
+//! * **CSE works across head boundaries.** In the multi-query layout
+//!   (`shared_kv`: one K/V segment attended by every head — the standard
+//!   bandwidth optimization), the signed inhibitor's V⁺/V⁻ split PBS are
+//!   re-emitted by *every* head on the *same* value ciphertexts, and the
+//!   splits reference the builder's standard relu/min0 tables — so CSE
+//!   collapses them to one split pair per value for the whole block
+//!   (`2·(H−1)·T·d` fewer LUT evaluations than H separate circuits).
+//! * **Packing amortizes across heads.** The surviving split pairs fuse
+//!   into `T·d` shared blind rotations whose results feed all H heads'
+//!   subgraphs: at any `many_lut_log ≥ 1` budget the fused plan needs
+//!   **strictly fewer** rotations than H separately-rewritten
+//!   single-head plans (`(H−1)·T·d` fewer — pinned by
+//!   `tests/multihead_it.rs`).
+//! * **Fusion sees one deeper batch.** The combined plan has the same
+//!   level count as one head but H× the jobs per level, so
+//!   `FusedLevelExecutor` fills the PBS worker pool even for a single
+//!   request, and co-scheduled multi-head requests fuse level-wise
+//!   exactly like single-head ones.
+//!
+//! With per-head K/V (`shared_kv = false`) the H subgraphs are disjoint
+//! and every count is exactly H× the single-head closed form — also
+//! pinned, so the fused builder provably adds no hidden cost.
+//!
+//! The plaintext reference ([`MultiHeadFhe::mirror`]) is the per-head
+//! single-head mirror applied to each column slice and concatenated —
+//! the same function `model::Block` computes with `n_heads > 1` — which
+//! is what the differential harness tests encrypted outputs against,
+//! bit for bit.
+
+use super::attention_fhe::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, PlanCache};
+use crate::attention::Mechanism;
+use crate::tensor::ITensor;
+use crate::tfhe::ops::{CtInt, FheContext};
+use crate::tfhe::plan::{CircuitBuilder, CircuitPlan, NodeId};
+use std::sync::Arc;
+
+/// The per-head circuit a [`MultiHeadFhe`] instantiates H times.
+#[derive(Clone, Debug)]
+enum HeadProto {
+    Inhibitor(InhibitorFhe),
+    InhibitorSigned(InhibitorSignedFhe),
+    DotProduct(DotProductFhe),
+}
+
+/// Generic H-head wrapper over the three head mechanisms, compiled into
+/// a single combined [`CircuitPlan`] (see the module docs).
+#[derive(Clone, Debug)]
+pub struct MultiHeadFhe {
+    pub mechanism: Mechanism,
+    pub n_heads: usize,
+    /// Multi-query layout: one K/V segment shared by every head (per-head
+    /// Q segments). `false` gives each head its own K/V slice.
+    pub shared_kv: bool,
+    proto: HeadProto,
+    cache: Arc<PlanCache>,
+}
+
+impl MultiHeadFhe {
+    /// `d_head` is the per-head width (γ = √d_head for the inhibitors);
+    /// the per-head constructors use the same defaults as the serving
+    /// registry's single-head engines (α_q = 1, input magnitude 2).
+    pub fn new(mechanism: Mechanism, d_head: usize, n_heads: usize, shared_kv: bool) -> Self {
+        assert!(n_heads >= 1, "a multi-head block needs at least one head");
+        let proto = match mechanism {
+            Mechanism::Inhibitor => HeadProto::Inhibitor(InhibitorFhe::new(d_head, 1)),
+            Mechanism::InhibitorSigned => {
+                HeadProto::InhibitorSigned(InhibitorSignedFhe::new(d_head, 1))
+            }
+            Mechanism::DotProduct => HeadProto::DotProduct(DotProductFhe::new(d_head, 2)),
+        };
+        MultiHeadFhe { mechanism, n_heads, shared_kv, proto, cache: Arc::new(PlanCache::default()) }
+    }
+
+    /// Ciphertexts the combined plan takes: H Q segments of `T·d` each,
+    /// plus H (or, under `shared_kv`, one) K and V segment pairs.
+    pub fn n_plan_inputs(&self, t: usize, d: usize) -> usize {
+        if self.shared_kv {
+            (self.n_heads + 2) * t * d
+        } else {
+            3 * self.n_heads * t * d
+        }
+    }
+
+    /// Mechanism string the serving registry keys multi-head engines by
+    /// — distinct from the single-head engine of the same mechanism and
+    /// session (e.g. `inhibitor-signed@h4s` = 4 heads, shared KV).
+    pub fn engine_mechanism(&self) -> String {
+        multihead_engine_mechanism(self.mechanism, self.n_heads, self.shared_kv)
+    }
+
+    /// Build the combined H-head plan, **raw** (the rewrite pipeline is
+    /// the caller's — `plan_for` applies it). Input layout: per head
+    /// `q_h ‖ k_h ‖ v_h` row-major segments, or `q_0 ‖ … ‖ q_{H−1} ‖ k ‖
+    /// v` under `shared_kv`. Outputs are `[T, H·d]` row-major — the
+    /// decrypted plan output *is* the concatenated multi-head matrix.
+    pub fn plan(&self, t: usize, d: usize) -> CircuitPlan {
+        let h = self.n_heads;
+        let mut b = CircuitBuilder::new();
+        let (qs, ks, vs) = if self.shared_kv {
+            let qs: Vec<Vec<NodeId>> = (0..h).map(|_| b.inputs(t * d)).collect();
+            let k = b.inputs(t * d);
+            let v = b.inputs(t * d);
+            (qs, vec![k; h], vec![v; h])
+        } else {
+            let mut qs = Vec::with_capacity(h);
+            let mut ks = Vec::with_capacity(h);
+            let mut vs = Vec::with_capacity(h);
+            for _ in 0..h {
+                qs.push(b.inputs(t * d));
+                ks.push(b.inputs(t * d));
+                vs.push(b.inputs(t * d));
+            }
+            (qs, ks, vs)
+        };
+        let outs: Vec<Vec<NodeId>> = (0..h)
+            .map(|hh| match &self.proto {
+                HeadProto::Inhibitor(head) => head.emit(&mut b, &qs[hh], &ks[hh], &vs[hh], t, d),
+                HeadProto::InhibitorSigned(head) => {
+                    head.emit(&mut b, &qs[hh], &ks[hh], &vs[hh], t, d)
+                }
+                HeadProto::DotProduct(head) => head.emit(&mut b, &qs[hh], &ks[hh], &vs[hh], t, d),
+            })
+            .collect();
+        for i in 0..t {
+            for head_out in &outs {
+                for kk in 0..d {
+                    b.output(head_out[i * d + kk]);
+                }
+            }
+        }
+        b.build()
+    }
+
+    /// The rewritten, `(T, d, budget)`-cached combined plan `forward()`
+    /// executes under `ctx` (honors `FHE_NO_REWRITE`, like every
+    /// single-head `plan_for`).
+    pub fn plan_for(&self, ctx: &FheContext, t: usize, d: usize) -> Arc<CircuitPlan> {
+        self.cache.rewritten_for(ctx, t, d, || self.plan(t, d))
+    }
+
+    /// Per-wrapper cache regression counter (see
+    /// [`InhibitorFhe::plan_builds`]).
+    pub fn plan_builds(&self) -> usize {
+        self.cache.builds()
+    }
+
+    /// Borrowed plan-input vector in exactly the layout [`Self::plan`]
+    /// declares. `forward()`, the serving engine's clients, and the
+    /// differential tests all pack through here, so the wire layout has
+    /// a single definition. `q` is `[T, H·d]`; `k`/`v` are the same
+    /// shape, or `[T, d]` under `shared_kv`.
+    pub fn input_refs<'m>(
+        &self,
+        q: &'m CtMatrix,
+        k: &'m CtMatrix,
+        v: &'m CtMatrix,
+    ) -> Vec<&'m CtInt> {
+        let h = self.n_heads;
+        let t = q.rows;
+        assert_eq!(q.cols % h, 0, "q width {} must split into {h} heads", q.cols);
+        let d = q.cols / h;
+        let kv_cols = if self.shared_kv { d } else { h * d };
+        assert_eq!((k.rows, k.cols), (t, kv_cols), "k must be [T, {kv_cols}]");
+        assert_eq!((v.rows, v.cols), (t, kv_cols), "v must be [T, {kv_cols}]");
+        let mut refs = Vec::with_capacity(self.n_plan_inputs(t, d));
+        if self.shared_kv {
+            for hh in 0..h {
+                push_cols(&mut refs, q, hh * d, d);
+            }
+            push_cols(&mut refs, k, 0, d);
+            push_cols(&mut refs, v, 0, d);
+        } else {
+            for hh in 0..h {
+                push_cols(&mut refs, q, hh * d, d);
+                push_cols(&mut refs, k, hh * d, d);
+                push_cols(&mut refs, v, hh * d, d);
+            }
+        }
+        refs
+    }
+
+    /// Encrypted multi-head forward: splits `q` (and `k`/`v` unless
+    /// shared) into H column slices, executes the cached combined plan
+    /// by reference, and returns the concatenated `[T, H·d]` result.
+    pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
+        let t = q.rows;
+        let d = q.cols / self.n_heads;
+        let refs = self.input_refs(q, k, v);
+        let data = self.plan_for(ctx, t, d).execute_ref(ctx, &refs);
+        CtMatrix { rows: t, cols: self.n_heads * d, data }
+    }
+
+    /// One head's mirror, dispatched per mechanism (the unsigned
+    /// inhibitor only clamps at `max_s`, like its own mirror).
+    fn head_mirror(&self, q: &ITensor, k: &ITensor, v: &ITensor, min_s: i64, max_s: i64) -> ITensor {
+        match &self.proto {
+            HeadProto::Inhibitor(head) => head.mirror(q, k, v, max_s),
+            HeadProto::InhibitorSigned(head) => head.mirror(q, k, v, min_s, max_s),
+            HeadProto::DotProduct(head) => head.mirror(q, k, v, min_s, max_s),
+        }
+    }
+
+    /// Plaintext mirror of the exact integer function the combined
+    /// circuit computes (including every LUT clamp): the single-head
+    /// mirror on each column slice, concatenated into `[T, H·d]`.
+    /// `min_s`/`max_s` are the executing encoder's signed bounds.
+    pub fn mirror(&self, q: &ITensor, k: &ITensor, v: &ITensor, min_s: i64, max_s: i64) -> ITensor {
+        let h = self.n_heads;
+        let (t, dm) = (q.dims()[0], q.dims()[1]);
+        assert_eq!(dm % h, 0, "q width {dm} must split into {h} heads");
+        let d = dm / h;
+        let mut out = ITensor::zeros(&[t, dm]);
+        for hh in 0..h {
+            let qs = q.slice_cols(hh * d, d);
+            let head_out = if self.shared_kv {
+                self.head_mirror(&qs, k, v, min_s, max_s)
+            } else {
+                let ks = k.slice_cols(hh * d, d);
+                let vs = v.slice_cols(hh * d, d);
+                self.head_mirror(&qs, &ks, &vs, min_s, max_s)
+            };
+            for i in 0..t {
+                for kk in 0..d {
+                    out.data[i * dm + hh * d + kk] = head_out.at2(i, kk);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Push the `[T, width]` column slice of `m` starting at `col0`,
+/// row-major, as references.
+fn push_cols<'m>(refs: &mut Vec<&'m CtInt>, m: &'m CtMatrix, col0: usize, width: usize) {
+    for i in 0..m.rows {
+        for kk in 0..width {
+            refs.push(m.at(i, col0 + kk));
+        }
+    }
+}
+
+/// See [`MultiHeadFhe::engine_mechanism`]: `<mechanism>@h<H>[s]`.
+pub fn multihead_engine_mechanism(mech: Mechanism, n_heads: usize, shared_kv: bool) -> String {
+    format!("{}@h{}{}", mech.name(), n_heads, if shared_kv { "s" } else { "" })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_head_plan_is_the_single_head_plan() {
+        // H = 1 (either layout — they coincide) must reproduce the
+        // single-head plan exactly: same counts, levels, IO. Analysis
+        // only, so the sweep is cheap.
+        for &(t, d) in &[(2usize, 2usize), (3, 2), (4, 1)] {
+            for shared in [false, true] {
+                let mh = MultiHeadFhe::new(Mechanism::Inhibitor, d, 1, shared);
+                let p = mh.plan(t, d);
+                let s = InhibitorFhe::new(d, 1).plan(t, d);
+                assert_eq!(p.pbs_count(), s.pbs_count(), "T={t} d={d}");
+                assert_eq!(p.levels(), s.levels());
+                assert_eq!(p.level_sizes(), s.level_sizes());
+                assert_eq!(p.n_inputs(), s.n_inputs());
+                assert_eq!(p.n_outputs(), s.n_outputs());
+                assert_eq!(p.linear_op_count(), s.linear_op_count());
+            }
+        }
+        let mh = MultiHeadFhe::new(Mechanism::DotProduct, 2, 1, false);
+        let s = DotProductFhe::new(2, 2).plan(2, 2);
+        assert_eq!(mh.plan(2, 2).pbs_count(), s.pbs_count());
+        let mh = MultiHeadFhe::new(Mechanism::InhibitorSigned, 2, 1, true);
+        let s = InhibitorSignedFhe::new(2, 1).plan(2, 2);
+        assert_eq!(mh.plan(2, 2).pbs_count(), s.pbs_count());
+    }
+
+    #[test]
+    fn plan_input_and_output_layout() {
+        let (t, d, h) = (3usize, 2usize, 4usize);
+        let mh = MultiHeadFhe::new(Mechanism::Inhibitor, d, h, false);
+        let p = mh.plan(t, d);
+        assert_eq!(p.n_inputs(), 3 * h * t * d);
+        assert_eq!(p.n_inputs(), mh.n_plan_inputs(t, d));
+        assert_eq!(p.n_outputs(), h * t * d, "outputs cover [T, H·d]");
+        let shared = MultiHeadFhe::new(Mechanism::Inhibitor, d, h, true);
+        assert_eq!(shared.plan(t, d).n_inputs(), (h + 2) * t * d);
+        assert_eq!(shared.plan(t, d).n_outputs(), h * t * d);
+    }
+
+    #[test]
+    fn engine_mechanism_strings_are_distinct_per_configuration() {
+        let a = multihead_engine_mechanism(Mechanism::Inhibitor, 4, false);
+        let b = multihead_engine_mechanism(Mechanism::Inhibitor, 4, true);
+        let c = multihead_engine_mechanism(Mechanism::Inhibitor, 2, false);
+        assert_eq!(a, "inhibitor@h4");
+        assert_eq!(b, "inhibitor@h4s");
+        assert!(a != b && a != c && b != c);
+        assert_eq!(
+            MultiHeadFhe::new(Mechanism::DotProduct, 2, 3, true).engine_mechanism(),
+            "dotprod@h3s"
+        );
+    }
+
+    #[test]
+    fn mirror_concatenates_per_head_single_head_mirrors() {
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::new(77);
+        let (t, d, h) = (3usize, 2usize, 2usize);
+        let q = ITensor::random(&[t, h * d], -2, 2, &mut rng);
+        let k = ITensor::random(&[t, h * d], -2, 2, &mut rng);
+        let v = ITensor::random(&[t, h * d], 0, 3, &mut rng);
+        let mh = MultiHeadFhe::new(Mechanism::Inhibitor, d, h, false);
+        let got = mh.mirror(&q, &k, &v, -16, 15);
+        let single = InhibitorFhe::new(d, 1);
+        for hh in 0..h {
+            let want = single.mirror(
+                &q.slice_cols(hh * d, d),
+                &k.slice_cols(hh * d, d),
+                &v.slice_cols(hh * d, d),
+                15,
+            );
+            assert_eq!(got.slice_cols(hh * d, d), want, "head {hh} slice");
+        }
+    }
+}

@@ -55,8 +55,11 @@ fn print_help() {
            infer [--mechanism inhibitor] [--seq 16] [--dim 32]\n\
                One-shot quantized inference on random features.\n\
            encrypt-infer [--mechanism inhibitor] [--seq 2] [--bits 5] [--threads N]\n\
+                         [--heads H] [--shared-kv]\n\
                Generate keys, encrypt Q/K/V, run encrypted attention, decrypt.\n\
-               (--threads overrides the FHE_THREADS PBS worker count.)\n\
+               --heads > 1 serves an H-head block as ONE fused circuit plan\n\
+               (--shared-kv: multi-query layout, one K/V for all heads);\n\
+               --threads overrides the FHE_THREADS PBS worker count.\n\
            params [--seq 2,4,8,16]\n\
                Run the TFHE parameter optimizer (paper Table 2).\n\
            tables [--quick]\n\
@@ -178,7 +181,9 @@ fn cmd_infer(args: &[String]) -> i32 {
 }
 
 fn cmd_encrypt_infer(args: &[String]) -> i32 {
-    use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
+    use inhibitor::fhe_circuits::{
+        CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, MultiHeadFhe,
+    };
     use inhibitor::tensor::ITensor;
     use inhibitor::tfhe::{bootstrap, ClientKey, FheContext, TfheParams};
     let mech_s = flag(args, "--mechanism", "inhibitor");
@@ -189,7 +194,9 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
     let seq: usize = flag(args, "--seq", "2").parse().unwrap_or(2);
     let bits: u32 = flag(args, "--bits", "5").parse().unwrap_or(5);
     let threads: usize = flag(args, "--threads", "0").parse().unwrap_or(0);
-    let dim = 2usize; // the paper's encrypted experiments use d=2
+    let heads: usize = flag(args, "--heads", "1").parse().unwrap_or(1).max(1);
+    let shared_kv = has_flag(args, "--shared-kv");
+    let dim = 2usize; // per-head width; the paper's encrypted experiments use d=2
     let mut rng = Xoshiro256::new(2024);
     // The signed circuit's V⁺/V⁻ pairs pack into shared blind rotations
     // when the parameter set carries multi-value headroom — give it one.
@@ -208,42 +215,82 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
         ctx.set_threads(threads);
     }
     println!("PBS engine: {} worker thread(s)", ctx.threads());
-    let q = ITensor::random(&[seq, dim], -2, 2, &mut rng);
-    let k = ITensor::random(&[seq, dim], -2, 2, &mut rng);
     // Signed inhibition exercises negative values; the other circuits
     // keep the non-negative range their mirrors assume.
-    let v = if mechanism == Mechanism::InhibitorSigned {
-        ITensor::random(&[seq, dim], -3, 3, &mut rng)
-    } else {
-        ITensor::random(&[seq, dim], 0, 3, &mut rng)
-    };
-    println!("encrypting {} ciphertexts...", 3 * seq * dim);
+    let v_range = if mechanism == Mechanism::InhibitorSigned { (-3, 3) } else { (0, 3) };
+    let (d_model, kv_cols) =
+        (heads * dim, if shared_kv && heads > 1 { dim } else { heads * dim });
+    let q = ITensor::random(&[seq, d_model], -2, 2, &mut rng);
+    let k = ITensor::random(&[seq, kv_cols], -2, 2, &mut rng);
+    let v = ITensor::random(&[seq, kv_cols], v_range.0, v_range.1, &mut rng);
+    println!("encrypting {} ciphertexts...", seq * (d_model + 2 * kv_cols));
     let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
     let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
     let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
     bootstrap::reset_pbs_count();
     bootstrap::reset_blind_rotation_count();
     let t0 = std::time::Instant::now();
-    let h = match mechanism {
-        Mechanism::DotProduct => DotProductFhe::new(dim, 2).forward(&ctx, &cq, &ckk, &cv),
-        Mechanism::InhibitorSigned => {
-            InhibitorSignedFhe::new(dim, 1).forward(&ctx, &cq, &ckk, &cv)
+    let (h, mirror) = if heads > 1 {
+        // One fused H-head circuit plan: the rewrite passes optimize
+        // across head boundaries (shared-KV value splits dedupe + pack).
+        let mh = MultiHeadFhe::new(mechanism, dim, heads, shared_kv && heads > 1);
+        let h = mh.forward(&ctx, &cq, &ckk, &cv);
+        let mirror = mh.mirror(&q, &k, &v, ctx.enc.min_signed(), ctx.enc.max_signed());
+        (h, mirror)
+    } else {
+        match mechanism {
+            Mechanism::DotProduct => {
+                let head = DotProductFhe::new(dim, 2);
+                let h = head.forward(&ctx, &cq, &ckk, &cv);
+                let m = head.mirror(&q, &k, &v, ctx.enc.min_signed(), ctx.enc.max_signed());
+                (h, m)
+            }
+            Mechanism::InhibitorSigned => {
+                let head = InhibitorSignedFhe::new(dim, 1);
+                let h = head.forward(&ctx, &cq, &ckk, &cv);
+                let m = head.mirror(&q, &k, &v, ctx.enc.min_signed(), ctx.enc.max_signed());
+                (h, m)
+            }
+            _ => {
+                let head = InhibitorFhe::new(dim, 1);
+                let h = head.forward(&ctx, &cq, &ckk, &cv);
+                let m = head.mirror(&q, &k, &v, ctx.enc.max_signed());
+                (h, m)
+            }
         }
-        _ => InhibitorFhe::new(dim, 1).forward(&ctx, &cq, &ckk, &cv),
     };
     let dt = t0.elapsed();
     let out = h.decrypt(&ctx, &ck);
     println!(
-        "mechanism={} T={} d={}: {} PBS ({} blind rotations) in {:.3}s ({:.1} ms/PBS)",
+        "mechanism={} T={} d={}{}: {} PBS ({} blind rotations) in {:.3}s ({:.1} ms/PBS)",
         mechanism.name(),
         seq,
         dim,
+        if heads > 1 {
+            format!(" heads={heads}{}", if shared_kv { " shared-kv" } else { "" })
+        } else {
+            String::new()
+        },
         bootstrap::pbs_count(),
         bootstrap::blind_rotation_count(),
         dt.as_secs_f64(),
         dt.as_secs_f64() * 1e3 / bootstrap::pbs_count().max(1) as f64
     );
     println!("decrypted H = {:?}", out.data);
+    if out == mirror {
+        println!("plaintext mirror check: ok");
+    } else {
+        // Informative, not fatal: the mirror equality guarantee assumes
+        // every linear intermediate fits the chosen code width, which a
+        // demo-sized `--bits` cannot promise for all mechanisms (wrapped
+        // torus sums vs the mirror's clamped i64 sums). Raise --bits to
+        // tighten the demo.
+        println!(
+            "plaintext mirror check: MISMATCH (expected {:?}) — likely an \
+             intermediate overflowed {bits} message bits; retry with a larger --bits",
+            mirror.data
+        );
+    }
     0
 }
 

@@ -24,6 +24,10 @@ pub struct ModelConfig {
     pub seq_len: usize,
     /// Embedding / model dimension d.
     pub dim: usize,
+    /// Attention heads per block: `dim` splits into `n_heads` slices of
+    /// `dim / n_heads`, attended independently and concatenated (1 =
+    /// single-head, the paper's benchmark setups).
+    pub n_heads: usize,
     /// FFN hidden dimension.
     pub ffn_dim: usize,
     /// Vocabulary size (0 ⇒ continuous inputs projected by a linear layer).
@@ -49,6 +53,7 @@ impl ModelConfig {
             n_layers: 1,
             seq_len,
             dim,
+            n_heads: 1,
             ffn_dim: dim * 4,
             vocab: 0,
             in_features: dim,
@@ -88,6 +93,7 @@ impl ModelConfig {
             n_layers: get_i("n_layers")?,
             seq_len: get_i("seq_len")?,
             dim: get_i("dim")?,
+            n_heads: j.get("n_heads").and_then(|v| v.as_i64()).unwrap_or(1).max(1) as usize,
             ffn_dim: get_i("ffn_dim")?,
             vocab: j.get("vocab").and_then(|v| v.as_i64()).unwrap_or(0) as usize,
             in_features: j.get("in_features").and_then(|v| v.as_i64()).unwrap_or(0) as usize,
@@ -110,6 +116,7 @@ impl ModelConfig {
             ("n_layers", Json::num(self.n_layers as f64)),
             ("seq_len", Json::num(self.seq_len as f64)),
             ("dim", Json::num(self.dim as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
             ("ffn_dim", Json::num(self.ffn_dim as f64)),
             ("vocab", Json::num(self.vocab as f64)),
             ("in_features", Json::num(self.in_features as f64)),
@@ -132,13 +139,26 @@ mod tests {
         let mut c = ModelConfig::small(Mechanism::Inhibitor, 16, 8);
         c.head = TaskHead::Classify(10);
         c.vocab = 100;
+        c.n_heads = 4;
         let j = c.to_json();
         let c2 = ModelConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(c2.mechanism, c.mechanism);
         assert_eq!(c2.head, c.head);
         assert_eq!(c2.seq_len, 16);
         assert_eq!(c2.vocab, 100);
+        assert_eq!(c2.n_heads, 4);
         assert_eq!(c2.alpha, 0.5);
+    }
+
+    #[test]
+    fn n_heads_defaults_to_one_for_legacy_configs() {
+        // Configs written before the multi-head change carry no
+        // `n_heads` field; they must keep parsing as single-head.
+        let j = Json::parse(
+            r#"{"mechanism":"inhibitor","n_layers":1,"seq_len":4,"dim":4,"ffn_dim":8}"#,
+        )
+        .unwrap();
+        assert_eq!(ModelConfig::from_json(&j).unwrap().n_heads, 1);
     }
 
     #[test]

@@ -17,7 +17,13 @@ pub struct Block {
     pub wk: QLinear,
     pub wv: QLinear,
     pub wo: QLinear,
+    /// The per-head attention mechanism (built at width `dim / n_heads`).
     pub attn: AttentionHead,
+    /// Heads the attention sub-layer splits `dim` into: Q/K/V are column
+    /// sliced per head, attended independently, and concatenated — the
+    /// plaintext reference of the fused multi-head FHE path
+    /// (`fhe_circuits::MultiHeadFhe`). 1 = single-head.
+    pub n_heads: usize,
     pub ln2: QLayerNorm,
     pub ffn: QFfn,
     /// Requant applied to residual additions to stay in the act range.
@@ -25,13 +31,36 @@ pub struct Block {
 }
 
 impl Block {
+    /// Multi-head attention over already-projected Q/K/V: per-head
+    /// column slices through `self.attn`, concatenated. This is the
+    /// exact function the fused multi-head circuit mirrors.
+    fn attention(&self, q: &ITensor, k: &ITensor, v: &ITensor) -> ITensor {
+        if self.n_heads <= 1 {
+            return self.attn.forward(q, k, v);
+        }
+        let d_model = q.dims()[1];
+        assert_eq!(d_model % self.n_heads, 0, "dim must split into n_heads");
+        let d = d_model / self.n_heads;
+        let parts: Vec<ITensor> = (0..self.n_heads)
+            .map(|h| {
+                self.attn.forward(
+                    &q.slice_cols(h * d, d),
+                    &k.slice_cols(h * d, d),
+                    &v.slice_cols(h * d, d),
+                )
+            })
+            .collect();
+        let refs: Vec<&ITensor> = parts.iter().collect();
+        ITensor::concat_cols(&refs)
+    }
+
     pub fn forward(&self, x: &ITensor, act_scale: f32) -> ITensor {
         // --- attention sub-layer ---
         let xn = self.ln1.forward(x, act_scale);
         let q = self.wq.forward(&xn);
         let k = self.wk.forward(&xn);
         let v = self.wv.forward(&xn);
-        let h = self.attn.forward(&q, &k, &v);
+        let h = self.attention(&q, &k, &v);
         let h = self.wo.forward(&h);
         let x1 = x.add(&h).map(|t| self.resid_requant.apply(t));
         // --- FFN sub-layer ---
@@ -84,9 +113,13 @@ impl QTransformer {
         } else {
             None
         };
+        let n_heads = cfg.n_heads.max(1);
+        assert_eq!(d % n_heads, 0, "dim {d} must split into {n_heads} heads");
         let blocks = (0..cfg.n_layers)
             .map(|_| {
-                let mut acfg = AttnConfig::new(cfg.mechanism, cfg.seq_len, d);
+                // The head mechanism operates on d/n_heads-wide slices
+                // (γ = √d_head), matching the fused encrypted plan.
+                let mut acfg = AttnConfig::new(cfg.mechanism, cfg.seq_len, d / n_heads);
                 acfg.alpha = cfg.alpha;
                 acfg.gamma = cfg.gamma;
                 Block {
@@ -96,6 +129,7 @@ impl QTransformer {
                     wv: make_lin(d, d, &mut rng, 1.0),
                     wo: make_lin(d, d, &mut rng, 1.0),
                     attn: AttentionHead::build(acfg, act_scale),
+                    n_heads,
                     ln2: QLayerNorm::from_float(&vec![1.0; d], &vec![0.0; d], act_scale),
                     ffn: QFfn {
                         fc1: make_lin(cfg.ffn_dim, d, &mut rng, 1.0),
@@ -223,5 +257,42 @@ mod tests {
         let m = QTransformer::random(cfg.clone(), 2);
         let out = m.forward(&feat_input(&cfg, 13));
         assert_eq!(out.dims(), &[1, 1]);
+    }
+
+    #[test]
+    fn multihead_blocks_run_for_all_mechanisms() {
+        for mech in [Mechanism::DotProduct, Mechanism::Inhibitor, Mechanism::InhibitorSigned] {
+            let mut cfg = ModelConfig::small(mech, 8, 16);
+            cfg.n_heads = 4;
+            let m = QTransformer::random(cfg.clone(), 21);
+            let out = m.forward(&feat_input(&cfg, 8));
+            assert_eq!(out.dims(), &[1, 1], "{mech:?}");
+        }
+    }
+
+    #[test]
+    fn block_multihead_attention_is_slicewise_single_head_attention() {
+        // The multi-head reference is *defined* as per-slice single-head
+        // attention + concat; pin that the Block computes exactly it.
+        let cfg = ModelConfig::small(Mechanism::Inhibitor, 6, 8);
+        let m = QTransformer::random(cfg, 31);
+        let block = &m.blocks[0];
+        let mut rng = Xoshiro256::new(17);
+        let q = ITensor::random(&[6, 8], -40, 40, &mut rng);
+        let k = ITensor::random(&[6, 8], -40, 40, &mut rng);
+        let v = ITensor::random(&[6, 8], -40, 40, &mut rng);
+        // n_heads = 1: the whole width in one head.
+        assert_eq!(block.n_heads, 1);
+        let single = block.attention(&q, &k, &v);
+        assert_eq!(single, block.attn.forward(&q, &k, &v));
+        // A 2-head clone of the same mechanism at half width.
+        let mut cfg2 = ModelConfig::small(Mechanism::Inhibitor, 6, 8);
+        cfg2.n_heads = 2;
+        let m2 = QTransformer::random(cfg2, 31);
+        let b2 = &m2.blocks[0];
+        let got = b2.attention(&q, &k, &v);
+        let lo = b2.attn.forward(&q.slice_cols(0, 4), &k.slice_cols(0, 4), &v.slice_cols(0, 4));
+        let hi = b2.attn.forward(&q.slice_cols(4, 4), &k.slice_cols(4, 4), &v.slice_cols(4, 4));
+        assert_eq!(got, ITensor::concat_cols(&[&lo, &hi]));
     }
 }

@@ -132,9 +132,15 @@ pub fn build_model(cfg: &ModelConfig, w: &WeightMap) -> Result<QTransformer, Str
     };
     let in_proj = if cfg.vocab == 0 { Some(lin("in_proj")?) } else { None };
     let mut blocks = Vec::with_capacity(cfg.n_layers);
+    let n_heads = cfg.n_heads.max(1);
+    if cfg.dim % n_heads != 0 {
+        return Err(format!("dim {} does not split into {n_heads} heads", cfg.dim));
+    }
     for i in 0..cfg.n_layers {
         let p = format!("block{i}");
-        let mut acfg = AttnConfig::new(cfg.mechanism, cfg.seq_len, cfg.dim);
+        // Heads attend d/n_heads-wide slices (γ = √d_head), matching
+        // QTransformer::random and the fused encrypted plan.
+        let mut acfg = AttnConfig::new(cfg.mechanism, cfg.seq_len, cfg.dim / n_heads);
         acfg.alpha = cfg.alpha;
         acfg.gamma = cfg.gamma;
         blocks.push(Block {
@@ -144,6 +150,7 @@ pub fn build_model(cfg: &ModelConfig, w: &WeightMap) -> Result<QTransformer, Str
             wv: lin(&format!("{p}.wv"))?,
             wo: lin(&format!("{p}.wo"))?,
             attn: AttentionHead::build(acfg, act_scale),
+            n_heads,
             ln2: ln(&format!("{p}.ln2"))?,
             ffn: QFfn { fc1: lin(&format!("{p}.ffn.fc1"))?, fc2: lin(&format!("{p}.ffn.fc2"))? },
             resid_requant: FixedMult::from_f64(0.5),

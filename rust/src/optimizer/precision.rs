@@ -213,6 +213,61 @@ pub fn profile(mech: Mechanism, seq_len: usize, dim: usize, input_bits: u32) -> 
     }
 }
 
+/// Static profile of an H-head **fused** attention plan
+/// (`fhe_circuits::MultiHeadFhe`): the per-head widths are those of the
+/// constituent single head (each head sees only its own `d_head`-wide
+/// slice, so precision requirements do not grow with H), while the
+/// closed-form op counts account for cross-head CSE and packing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MultiHeadProfile {
+    /// The constituent single-head profile.
+    pub head: CircuitProfile,
+    pub n_heads: usize,
+    /// Multi-query layout (one K/V segment shared by all heads).
+    pub shared_kv: bool,
+    /// LUT evaluations of the fused H-head plan (after CSE) — what the
+    /// serving path executes on any parameter set.
+    pub pbs_count: u64,
+    /// Blind rotations of the fused plan at a packing budget of 2^ϑ ≥ 2.
+    pub blind_rotations_packed: u64,
+}
+
+/// Closed-form multi-head counts, checked against the fused plan's own
+/// `pbs_count()`/`blind_rotation_count()` oracles by a unit test so the
+/// formulas can never drift from the IR. Cross-head sharing exists only
+/// in the shared-KV signed circuit: every head re-emits the V⁺/V⁻
+/// splits of the *same* value ciphertexts, so CSE keeps one split pair
+/// per value for the whole block (2·(H−1)·T·d fewer LUT evaluations
+/// than H separate circuits) and packing executes the survivors in T·d
+/// rotations instead of H·T·d ((H−1)·T·d fewer). All other
+/// configurations are exactly H× the single-head closed forms — the H
+/// subgraphs are disjoint.
+pub fn profile_multihead(
+    mech: Mechanism,
+    seq_len: usize,
+    d_head: usize,
+    n_heads: usize,
+    shared_kv: bool,
+    input_bits: u32,
+) -> MultiHeadProfile {
+    assert!(n_heads >= 1);
+    let head = profile(mech, seq_len, d_head, input_bits);
+    let h = n_heads as u64;
+    let (t, d) = (seq_len as u64, d_head as u64);
+    let (dup_luts, dup_rots) = if shared_kv && mech == Mechanism::InhibitorSigned {
+        (2 * (h - 1) * t * d, (h - 1) * t * d)
+    } else {
+        (0, 0)
+    };
+    MultiHeadProfile {
+        head,
+        n_heads,
+        shared_kv,
+        pbs_count: h * head.pbs_count - dup_luts,
+        blind_rotations_packed: h * head.blind_rotations_packed - dup_rots,
+    }
+}
+
 impl CircuitProfile {
     /// Message bits the parameter set must carry (max over signed and
     /// unsigned requirements; our encoding holds signed p-bit values in a
@@ -278,6 +333,41 @@ mod tests {
         assert_eq!(u.blind_rotations_packed, u.pbs_count);
         let q = profile_dotprod(4, 2, 3);
         assert_eq!(q.blind_rotations_packed, q.pbs_count);
+    }
+
+    #[test]
+    fn multihead_profile_matches_the_fused_plan_oracles() {
+        // The closed forms must reproduce what the fused H-head plan
+        // actually counts after the same rewrite configurations the
+        // single-head profile uses (CSE for LUT evaluations, CSE +
+        // budget-2 packing for rotations) — for every mechanism, both
+        // KV layouts, H = 1..3.
+        use crate::fhe_circuits::MultiHeadFhe;
+        use crate::tfhe::plan::{PlanRewriter, RewriteConfig};
+        let (t, d) = (3usize, 2usize);
+        for &mech in &[Mechanism::Inhibitor, Mechanism::InhibitorSigned, Mechanism::DotProduct] {
+            for &(heads, shared) in &[(1usize, false), (2, false), (2, true), (3, true)] {
+                let mh = MultiHeadFhe::new(mech, d, heads, shared);
+                let (cse, _) = PlanRewriter::new(RewriteConfig::cse_only()).rewrite(mh.plan(t, d));
+                let (packed, _) = PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 2 })
+                    .rewrite(mh.plan(t, d));
+                let p = profile_multihead(mech, t, d, heads, shared, 3);
+                let tag = format!("{mech:?} H={heads} shared={shared}");
+                assert_eq!(p.pbs_count, cse.pbs_count(), "{tag}: LUT evals");
+                assert_eq!(
+                    p.blind_rotations_packed,
+                    packed.blind_rotation_count(),
+                    "{tag}: rotations"
+                );
+                assert_eq!(p.head.pbs_count, profile(mech, t, d, 3).pbs_count);
+            }
+        }
+        // The cross-head win is visible in the profile itself: shared-KV
+        // signed needs strictly fewer rotations than H disjoint heads.
+        let fused = profile_multihead(Mechanism::InhibitorSigned, t, d, 3, true, 3);
+        let disjoint = profile_multihead(Mechanism::InhibitorSigned, t, d, 3, false, 3);
+        assert!(fused.blind_rotations_packed < disjoint.blind_rotations_packed);
+        assert!(fused.pbs_count < disjoint.pbs_count);
     }
 
     #[test]

@@ -141,6 +141,42 @@ impl ITensor {
         ITensor::from_vec(&[m, n], out)
     }
 
+    /// Column slice of a rank-2 tensor: `[m, n] → [m, width]` starting
+    /// at `col0` (the multi-head split: head h reads columns
+    /// `[h·d, (h+1)·d)`).
+    pub fn slice_cols(&self, col0: usize, width: usize) -> Self {
+        assert_eq!(self.rank(), 2, "slice_cols needs a rank-2 tensor");
+        let (m, n) = (self.dims()[0], self.dims()[1]);
+        assert!(col0 + width <= n, "column slice [{col0}, {}) exceeds width {n}", col0 + width);
+        let mut data = Vec::with_capacity(m * width);
+        for i in 0..m {
+            data.extend_from_slice(&self.data[i * n + col0..i * n + col0 + width]);
+        }
+        ITensor::from_vec(&[m, width], data)
+    }
+
+    /// Concatenate rank-2 tensors along columns (equal row counts) —
+    /// the multi-head "concat" joining per-head outputs back into
+    /// `[m, Σ widths]`.
+    pub fn concat_cols(parts: &[&ITensor]) -> Self {
+        assert!(!parts.is_empty(), "concat of zero tensors");
+        let m = parts[0].dims()[0];
+        let mut total = 0usize;
+        for p in parts {
+            assert_eq!(p.rank(), 2, "concat_cols needs rank-2 tensors");
+            assert_eq!(p.dims()[0], m, "concat_cols row count mismatch");
+            total += p.dims()[1];
+        }
+        let mut data = Vec::with_capacity(m * total);
+        for i in 0..m {
+            for p in parts {
+                let w = p.dims()[1];
+                data.extend_from_slice(&p.data[i * w..(i + 1) * w]);
+            }
+        }
+        ITensor::from_vec(&[m, total], data)
+    }
+
     /// Transpose a rank-2 tensor.
     pub fn transpose2(&self) -> Self {
         assert_eq!(self.rank(), 2);
@@ -358,6 +394,21 @@ mod tests {
         let minus = t.sub(&t.abs()).map(|v| v / 2);
         assert_eq!(plus, t.relu());
         assert_eq!(minus, t.neg_relu());
+    }
+
+    #[test]
+    fn slice_and_concat_cols_roundtrip() {
+        prop_check("concat(slices) == original", 32, |rng| {
+            let m = 1 + rng.next_bounded(5) as usize;
+            let h = 1 + rng.next_bounded(3) as usize;
+            let d = 1 + rng.next_bounded(4) as usize;
+            let a = ITensor::random(&[m, h * d], -50, 50, rng);
+            let parts: Vec<ITensor> = (0..h).map(|i| a.slice_cols(i * d, d)).collect();
+            let refs: Vec<&ITensor> = parts.iter().collect();
+            prop_assert_eq(ITensor::concat_cols(&refs), a, "roundtrip")
+        });
+        let t = ITensor::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(t.slice_cols(1, 2).data, vec![2, 3, 5, 6]);
     }
 
     #[test]

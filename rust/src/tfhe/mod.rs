@@ -39,9 +39,9 @@ pub use bootstrap::{
     ClientKey, Lut, PreparedLut, PreparedMultiLut, ServerKey,
 };
 pub use encoding::Encoder;
-pub use ops::{default_fhe_threads, CtInt, FheContext};
+pub use ops::{ct_clone_count, default_fhe_threads, CtInt, FheContext};
 pub use params::{DecompParams, TfheParams};
 pub use plan::{
-    CircuitBuilder, CircuitPlan, LevelJob, LutRef, NodeId, PlanRewriter, PlanRun, RewriteConfig,
-    RewriteStats,
+    rewrites_disabled, CircuitBuilder, CircuitPlan, LevelJob, LutRef, NodeId, PlanRewriter,
+    PlanRun, RewriteConfig, RewriteStats,
 };

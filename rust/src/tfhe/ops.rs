@@ -26,7 +26,7 @@ use super::lwe::LweCiphertext;
 use super::plan::LevelJob;
 use crate::util::prng::Xoshiro256;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// Default PBS worker-thread count: the `FHE_THREADS` environment
@@ -50,10 +50,29 @@ pub fn recip_fn(num: i64) -> impl Fn(i64) -> i64 {
     move |v| if v > 0 { (num + v / 2) / v } else { num }
 }
 
+/// Process-global count of [`CtInt`] clones — the observability hook
+/// behind the "input ciphertexts are not copied on the hot path"
+/// regression tests. One relaxed atomic add per clone; a ciphertext is
+/// n+1 words, so the accounting cost is noise.
+static CT_CLONE_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Total [`CtInt`] clones performed by this process so far (tests take
+/// deltas around the operation under scrutiny).
+pub fn ct_clone_count() -> u64 {
+    CT_CLONE_COUNT.load(Ordering::Relaxed)
+}
+
 /// An encrypted signed integer.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct CtInt {
     pub ct: LweCiphertext,
+}
+
+impl Clone for CtInt {
+    fn clone(&self) -> Self {
+        CT_CLONE_COUNT.fetch_add(1, Ordering::Relaxed);
+        CtInt { ct: self.ct.clone() }
+    }
 }
 
 /// Evaluation context: server key + encoder (message layout) + the

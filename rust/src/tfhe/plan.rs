@@ -108,10 +108,14 @@ pub struct CircuitBuilder {
     luts: Vec<LutFn>,
     n_inputs: usize,
     outputs: Vec<NodeId>,
-    /// Cached refs for the standard tables (relu/abs/x²⁄4/identity) so
-    /// each plan registers them at most once (mirrors `FheContext`'s
-    /// prepared standard LUTs).
-    std_luts: [Option<LutRef>; 4],
+    /// Cached refs for the standard tables (relu/abs/x²⁄4/identity/min0)
+    /// so each plan registers them at most once (mirrors `FheContext`'s
+    /// prepared standard LUTs). Shared registration matters beyond
+    /// economy: `Pbs` nodes CSE only on identical `(input, LutRef)`, so
+    /// subgraphs emitted into one builder (e.g. the heads of a fused
+    /// multi-head plan) deduplicate across each other exactly when they
+    /// reference the same registered table.
+    std_luts: [Option<LutRef>; 5],
 }
 
 /// Indices into `CircuitBuilder::std_luts`.
@@ -119,6 +123,7 @@ const STD_RELU: usize = 0;
 const STD_ABS: usize = 1;
 const STD_SQ4: usize = 2;
 const STD_ID: usize = 3;
+const STD_MIN0: usize = 4;
 
 impl CircuitBuilder {
     pub fn new() -> Self {
@@ -127,7 +132,7 @@ impl CircuitBuilder {
             luts: Vec::new(),
             n_inputs: 0,
             outputs: Vec::new(),
-            std_luts: [None; 4],
+            std_luts: [None; 5],
         }
     }
 
@@ -232,6 +237,13 @@ impl CircuitBuilder {
     /// |x| (1 PBS).
     pub fn abs(&mut self, x: NodeId) -> NodeId {
         let lut = self.std_lut(STD_ABS, |v: i64| v.abs());
+        self.pbs(x, lut)
+    }
+
+    /// Negative ReLU x⁻ = min(x, 0) (1 PBS) — the signed inhibitor's
+    /// value-split table (paper eq. 11).
+    pub fn min0(&mut self, x: NodeId) -> NodeId {
+        let lut = self.std_lut(STD_MIN0, |v: i64| v.min(0));
         self.pbs(x, lut)
     }
 
@@ -430,7 +442,19 @@ impl CircuitPlan {
     /// Execute the plan: one batched PBS submission per level through the
     /// context's worker pool, linear ops evaluated between levels.
     pub fn execute(&self, ctx: &FheContext, inputs: &[CtInt]) -> Vec<CtInt> {
-        let mut run = PlanRun::new(self, ctx, inputs);
+        let refs: Vec<&CtInt> = inputs.iter().collect();
+        self.execute_ref(ctx, &refs)
+    }
+
+    /// [`Self::execute`] over borrowed inputs — the zero-copy hot path:
+    /// input ciphertexts are never cloned into the run's value table (a
+    /// PBS node reading an input *directly* still clones that one
+    /// operand into its job, since jobs own their ciphertext). Callers
+    /// holding inputs scattered across structures (e.g. the Q/K/V
+    /// matrices of an attention head) pass references instead of first
+    /// assembling an owned 3·T·d vector.
+    pub fn execute_ref(&self, ctx: &FheContext, inputs: &[&CtInt]) -> Vec<CtInt> {
+        let mut run = PlanRun::new_ref(self, ctx, inputs);
         while let Some(jobs) = run.next_level_jobs(ctx) {
             let outs = ctx.pbs_level(&jobs);
             run.supply(outs);
@@ -471,6 +495,10 @@ impl LevelJob {
 /// then [`PlanRun::finish`].
 pub struct PlanRun<'p> {
     plan: &'p CircuitPlan,
+    /// The circuit inputs, borrowed for the run's lifetime. Input nodes
+    /// resolve through this table instead of being cloned into `values`
+    /// up front — the by-ref hot path (`CircuitPlan::execute_ref`).
+    inputs: Vec<&'p CtInt>,
     values: Vec<Option<CtInt>>,
     /// Whether a node has been computed (its value may since have been
     /// freed once every consumer read it).
@@ -497,7 +525,15 @@ pub struct PlanRun<'p> {
 }
 
 impl<'p> PlanRun<'p> {
-    pub fn new(plan: &'p CircuitPlan, ctx: &FheContext, inputs: &[CtInt]) -> Self {
+    pub fn new(plan: &'p CircuitPlan, ctx: &FheContext, inputs: &'p [CtInt]) -> Self {
+        let refs: Vec<&'p CtInt> = inputs.iter().collect();
+        Self::new_ref(plan, ctx, &refs)
+    }
+
+    /// [`Self::new`] over borrowed inputs (see
+    /// [`CircuitPlan::execute_ref`]): only the *references* are copied
+    /// into the run, never the ciphertexts.
+    pub fn new_ref(plan: &'p CircuitPlan, ctx: &FheContext, inputs: &[&'p CtInt]) -> Self {
         assert_eq!(inputs.len(), plan.n_inputs, "plan expects {} inputs", plan.n_inputs);
         let mut single_use = vec![false; plan.luts.len()];
         for node in &plan.nodes {
@@ -517,7 +553,8 @@ impl<'p> PlanRun<'p> {
         let mut evaluated = vec![false; plan.nodes.len()];
         for (id, node) in plan.nodes.iter().enumerate() {
             match node {
-                Node::Input(i) => values[id] = Some(inputs[*i].clone()),
+                // Inputs resolve from the borrowed table; nothing stored.
+                Node::Input(_) => {}
                 Node::Const(v) => values[id] = Some(ctx.constant(*v)),
                 Node::MultiPbs { luts, .. } => {
                     let fns: Vec<&dyn Fn(i64) -> i64> = luts
@@ -550,6 +587,7 @@ impl<'p> PlanRun<'p> {
         );
         PlanRun {
             plan,
+            inputs: inputs.to_vec(),
             values,
             evaluated,
             remaining: plan.uses.clone(),
@@ -562,6 +600,9 @@ impl<'p> PlanRun<'p> {
     }
 
     fn value(&self, i: NodeId) -> &CtInt {
+        if let Node::Input(ix) = &self.plan.nodes[i] {
+            return self.inputs[*ix];
+        }
         self.values[i].as_ref().expect("operand live (topological order + use counts)")
     }
 
@@ -571,6 +612,24 @@ impl<'p> PlanRun<'p> {
         if self.remaining[i] == 0 {
             self.values[i] = None;
         }
+    }
+
+    /// One consumer read of `i` that needs an *owned* ciphertext (a
+    /// bootstrap job input or a plan output). The last read moves the
+    /// stored value out instead of cloning it; earlier reads clone.
+    /// Borrowed circuit inputs are cloned only here — once per bootstrap
+    /// job that reads an input directly — never en masse.
+    fn consume(&mut self, i: NodeId) -> CtInt {
+        self.remaining[i] -= 1;
+        if self.remaining[i] == 0 {
+            if let Some(v) = self.values[i].take() {
+                return v;
+            }
+        }
+        if let Node::Input(ix) = &self.plan.nodes[i] {
+            return self.inputs[*ix].clone();
+        }
+        self.values[i].clone().expect("operand live (topological order + use counts)")
     }
 
     /// Evaluate every not-yet-evaluated linear node of level < `bound`.
@@ -648,23 +707,17 @@ impl<'p> PlanRun<'p> {
             }
             match node {
                 Node::Pbs { input, lut } => {
-                    let ct = self.values[*input]
-                        .clone()
-                        .expect("PBS input live (level < current)");
+                    let ct = self.consume(*input);
                     let acc = self.resolved[lut.0]
                         .as_ref()
                         .expect("LUT resolved (referenced by a Pbs node)");
                     jobs.push(LevelJob::Single(ct, Arc::clone(acc)));
                     self.pending.push(id);
-                    self.release(*input);
                 }
                 Node::MultiPbs { input, .. } => {
-                    let ct = self.values[*input]
-                        .clone()
-                        .expect("multi-PBS input live (level < current)");
+                    let ct = self.consume(*input);
                     jobs.push(LevelJob::Multi(ct, Arc::clone(&self.multi_accs[&id])));
                     self.pending.push(id);
-                    self.release(*input);
                 }
                 _ => {}
             }
@@ -727,17 +780,35 @@ impl<'p> PlanRun<'p> {
             "finish() before all PBS levels were executed"
         );
         self.eval_linear(ctx, self.plan.max_level + 1);
-        self.plan
-            .outputs
-            .iter()
-            .map(|&id| self.values[id].clone().expect("output live"))
-            .collect()
+        // Each output listing holds one accounted use; consuming it moves
+        // the last copy out (no terminal clone unless a node is listed as
+        // an output more than once or still has other readers).
+        let plan = self.plan;
+        plan.outputs.iter().map(|&id| self.consume(id)).collect()
     }
 }
 
 // ---------------------------------------------------------------------
 // Rewrite passes
 // ---------------------------------------------------------------------
+
+/// The `FHE_NO_REWRITE` escape hatch: when the variable is set to
+/// anything but `0` or the empty string, the cached `plan_for`-style
+/// entry points (every head's `forward()` and the serving engines) skip
+/// the rewrite pipeline and execute raw builder plans. This is the CI
+/// matrix leg that proves the unrewritten pipeline still serves every
+/// circuit bit-identically. Explicit [`PlanRewriter`] invocations ignore
+/// the knob — tests drive both configurations side by side regardless of
+/// the environment.
+pub fn rewrites_disabled() -> bool {
+    match std::env::var("FHE_NO_REWRITE") {
+        Ok(v) => {
+            let v = v.trim();
+            !v.is_empty() && v != "0"
+        }
+        Err(_) => false,
+    }
+}
 
 /// Configuration of the [`PlanRewriter`] pipeline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -1076,6 +1147,19 @@ mod tests {
     }
 
     #[test]
+    fn execute_ref_matches_execute_bit_identically() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup();
+        let p = small_plan();
+        let ca = ctx.encrypt(2, &ck, &mut rng);
+        let cb = ctx.encrypt(-1, &ck, &mut rng);
+        let owned = p.execute(&ctx, &[ca.clone(), cb.clone()]);
+        let got = p.execute_ref(&ctx, &[&ca, &cb]);
+        assert_eq!(got[0].ct, owned[0].ct, "by-ref execution is the same dataflow");
+        assert_eq!(ctx.decrypt(&got[0], &ck), (2i64 + 1).max(0) + 2);
+    }
+
+    #[test]
     fn execute_is_thread_invariant() {
         let _pbs_guard = crate::tfhe::pbs_test_guard();
         let (ck, ctx, mut rng) = setup();
@@ -1119,7 +1203,8 @@ mod tests {
         let p = small_plan();
         let ca = ctx.encrypt(-1, &ck, &mut rng);
         let cb = ctx.encrypt(2, &ck, &mut rng);
-        let mut run = PlanRun::new(&p, &ctx, &[ca, cb]);
+        let inputs = [ca, cb];
+        let mut run = PlanRun::new(&p, &ctx, &inputs);
         let mut rounds = 0;
         while let Some(jobs) = run.next_level_jobs(&ctx) {
             rounds += 1;
@@ -1322,19 +1407,18 @@ mod tests {
         let (q, _) = PlanRewriter::for_ctx(&ctx).rewrite(redundant_plan());
         let ca = ctx.encrypt(1, &ck, &mut rng);
         let cb = ctx.encrypt(0, &ck, &mut rng);
-        let mut run = PlanRun::new(&q, &ctx, &[ca, cb]);
+        let inputs = [ca, cb];
+        let mut run = PlanRun::new(&q, &ctx, &inputs);
         while let Some(jobs) = run.next_level_jobs(&ctx) {
             let outs = ctx.pbs_level(&jobs);
             run.supply(outs);
         }
         let outs = run.finish_in_place(&ctx);
         assert_eq!(outs.len(), 1);
-        // Every consumed node was freed after its last read; only the
-        // listed outputs (whose +1 use is never released) may stay live.
+        // Every consumed node was freed after its last read — including
+        // the listed outputs, whose +1 use `finish` consumes by *moving*
+        // the value out (no terminal clone, no leak).
         for id in 0..q.nodes.len() {
-            if q.outputs.contains(&id) {
-                continue;
-            }
             assert_eq!(run.remaining[id], 0, "node {id} has unconsumed reads");
             assert!(run.values[id].is_none(), "node {id} leaked its ciphertext");
         }

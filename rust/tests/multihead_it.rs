@@ -1,0 +1,441 @@
+//! Cross-head differential test harness for multi-head encrypted
+//! attention (`fhe_circuits::MultiHeadFhe`).
+//!
+//! * **Differential grid**: over a seeded (H, T, d) × {inhibitor,
+//!   inhibitor-signed, dotprod} × {per-head KV, shared KV} grid, the
+//!   encrypted fused H-head forward must decode **bit-identical** to the
+//!   plaintext quantized multi-head reference (per-head mirror on column
+//!   slices, concatenated), with rewrites off (raw builder plan) *and*
+//!   on (full pipeline), at 1 and 4 PBS worker threads, with every
+//!   `PBS_COUNT`/`BLIND_ROTATION_COUNT` delta matching the executed
+//!   plan's own prediction. The `forward()` path (cached `plan_for`,
+//!   which honors `FHE_NO_REWRITE`) is exercised on every point, so the
+//!   CI no-rewrite leg drives the unrewritten pipeline end-to-end here.
+//! * **Count pinning**: the fused plan's closed forms, exact per shape —
+//!   and the cross-head win: at `many_lut_log ≥ 1` the fused shared-KV
+//!   signed plan needs **strictly fewer** blind rotations than H
+//!   separately-rewritten single-head plans.
+//! * **By-ref execution**: `forward()` performs zero `CtInt` clones for
+//!   circuits whose inputs only feed linear nodes — the regression test
+//!   for the "stop copying the 3·T·d·H inputs" hot path.
+//! * **Serving**: co-scheduled multi-head requests ride the router's
+//!   fused level executor and come back bit-identical to solo plan
+//!   execution.
+//!
+//! Counters (`PBS_COUNT`, `BLIND_ROTATION_COUNT`, `ct_clone_count`) are
+//! process-global and libtest runs tests on parallel threads, so every
+//! test serializes through one lock.
+
+use inhibitor::attention::Mechanism;
+use inhibitor::coordinator::{BatchPolicy, Coordinator, EnginePath, Payload, RoutePolicy};
+use inhibitor::fhe_circuits::{CtMatrix, InhibitorSignedFhe, MultiHeadFhe};
+use inhibitor::tensor::ITensor;
+use inhibitor::tfhe::ops::CtInt;
+use inhibitor::tfhe::{
+    bootstrap, ct_clone_count, ClientKey, FheContext, PlanRewriter, RewriteConfig, TfheParams,
+};
+use inhibitor::util::prng::Xoshiro256;
+use std::sync::Mutex;
+use std::time::Duration;
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One differential grid point: random Q/K/V in hand-sized ranges (every
+/// linear intermediate provably fits the keyset's signed code range, so
+/// mirror equality is exact, not probabilistic), executed through the
+/// raw plan, the fully-rewritten plan, and `forward()`, at 1 and 4
+/// worker threads, with plan-predicted counter deltas.
+#[allow(clippy::too_many_arguments)]
+fn check_point(
+    ctx: &FheContext,
+    ck: &ClientKey,
+    rng: &mut Xoshiro256,
+    mech: Mechanism,
+    heads: usize,
+    t: usize,
+    d: usize,
+    shared_kv: bool,
+    qk_range: (i64, i64),
+    v_range: (i64, i64),
+) {
+    let tag = format!("{mech:?} H={heads} T={t} d={d} shared={shared_kv}");
+    let mh = MultiHeadFhe::new(mech, d, heads, shared_kv);
+    let d_model = heads * d;
+    let kv_cols = if shared_kv { d } else { d_model };
+    let q = ITensor::random(&[t, d_model], qk_range.0, qk_range.1, rng);
+    let k = ITensor::random(&[t, kv_cols], qk_range.0, qk_range.1, rng);
+    let v = ITensor::random(&[t, kv_cols], v_range.0, v_range.1, rng);
+    let cq = CtMatrix::encrypt(&q, ctx, ck, rng);
+    let ckk = CtMatrix::encrypt(&k, ctx, ck, rng);
+    let cv = CtMatrix::encrypt(&v, ctx, ck, rng);
+    let want = mh.mirror(&q, &k, &v, ctx.enc.min_signed(), ctx.enc.max_signed());
+    let raw = mh.plan(t, d);
+    let (rewritten, _) = PlanRewriter::for_ctx(ctx).rewrite(mh.plan(t, d));
+    let refs = mh.input_refs(&cq, &ckk, &cv);
+    for threads in [1usize, 4] {
+        ctx.set_threads(threads);
+        for (label, plan) in [("raw", &raw), ("rewritten", &rewritten)] {
+            let before_pbs = bootstrap::pbs_count();
+            let before_rot = bootstrap::blind_rotation_count();
+            let outs = plan.execute_ref(ctx, &refs);
+            assert_eq!(
+                bootstrap::pbs_count() - before_pbs,
+                plan.pbs_count(),
+                "{tag} {label} threads={threads}: PBS delta"
+            );
+            assert_eq!(
+                bootstrap::blind_rotation_count() - before_rot,
+                plan.blind_rotation_count(),
+                "{tag} {label} threads={threads}: rotation delta"
+            );
+            let got: Vec<i64> = outs.iter().map(|c| ctx.decrypt(c, ck)).collect();
+            assert_eq!(got, want.data, "{tag} {label} threads={threads}: mirror equality");
+        }
+        // The serving path: cached plan_for (honors FHE_NO_REWRITE, so
+        // the CI matrix leg drives the unrewritten pipeline through
+        // here) — same decode either way.
+        let fwd = mh.forward(ctx, &cq, &ckk, &cv);
+        assert_eq!((fwd.rows, fwd.cols), (t, d_model), "{tag}: forward shape");
+        assert_eq!(fwd.decrypt(ctx, ck), want, "{tag} forward threads={threads}");
+    }
+}
+
+#[test]
+fn multihead_inhibitor_matches_plaintext_reference_over_grid() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x31AD01);
+    // Ranges: |q−k| ≤ 4 → dist ≤ 8 → z ≤ 5; (v−z)⁺ ≤ 3 summed over
+    // T ≤ 3 → H ≤ 9: all within the 5-bit signed range [−16, 15].
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    for &(heads, t, d, shared) in
+        &[(2usize, 2usize, 2usize, false), (2, 3, 2, true), (3, 2, 1, false)]
+    {
+        check_point(
+            &ctx,
+            &ck,
+            &mut rng,
+            Mechanism::Inhibitor,
+            heads,
+            t,
+            d,
+            shared,
+            (-2, 2),
+            (0, 3),
+        );
+    }
+}
+
+#[test]
+fn multihead_signed_inhibitor_matches_plaintext_reference_over_grid() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x31AD02);
+    // Packing-capable keyset (ϑ = 1 at 4 bits): the fused shared-KV
+    // points execute genuinely packed cross-head rotations. Ranges per
+    // T keep every interleaved partial sum within [−8, 7] (same
+    // derivation as tests/rewrite_it.rs).
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(4), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    assert_eq!(ctx.max_multi_lut(), 2);
+    for &(heads, t, d, shared, qk, v) in &[
+        (2usize, 2usize, 2usize, false, (-2i64, 1i64), (-3i64, 3i64)),
+        (2, 2, 2, true, (-2, 1), (-3, 3)),
+        (3, 2, 2, true, (-1, 1), (-2, 2)),
+    ] {
+        check_point(&ctx, &ck, &mut rng, Mechanism::InhibitorSigned, heads, t, d, shared, qk, v);
+    }
+}
+
+#[test]
+fn multihead_dotprod_matches_plaintext_reference_over_grid() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x31AD03);
+    // 6-bit range [−32, 31]; |q|,|k| ≤ 1 and v ∈ [−1, 2] bound every
+    // intermediate: scores ≤ 2, e ∈ [3, 7], row sums ≤ 14 → r = 1,
+    // p ≤ 7, square-LUT operands ≤ 9 (so (x²/4) ≤ 20), attend
+    // accumulators ∈ [−14, 28].
+    let ck = ClientKey::generate(TfheParams::test_for_bits(6), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    for &(heads, shared) in &[(2usize, false), (2, true)] {
+        check_point(
+            &ctx,
+            &ck,
+            &mut rng,
+            Mechanism::DotProduct,
+            heads,
+            2,
+            2,
+            shared,
+            (-1, 1),
+            (-1, 2),
+        );
+    }
+}
+
+#[test]
+fn fused_multihead_counts_follow_closed_forms() {
+    // Pure DAG analysis — no crypto — so the sweep can be wide.
+    let _g = lock();
+    for &(heads, t, d) in &[(2usize, 2usize, 2usize), (3, 2, 2), (2, 3, 2), (4, 2, 1)] {
+        let (hu, tu, du) = (heads as u64, t as u64, d as u64);
+        for shared in [false, true] {
+            let tag = format!("H={heads} T={t} d={d} shared={shared}");
+            // Inhibitor and dot-product: disjoint subgraphs, exactly H×
+            // the single-head closed forms at one head's level depth.
+            let mh = MultiHeadFhe::new(Mechanism::Inhibitor, d, heads, shared);
+            let p = mh.plan(t, d);
+            assert_eq!(p.pbs_count(), hu * (2 * tu * tu * du + tu * tu + tu * du), "{tag}");
+            assert_eq!(p.blind_rotation_count(), p.pbs_count());
+            assert_eq!(p.levels(), 4, "{tag}: fused depth = one head's depth");
+            assert_eq!(
+                p.level_sizes(),
+                vec![heads * t * t * d, heads * t * t, heads * t * t * d, heads * t * d],
+                "{tag}: per-level jobs are H× one head's"
+            );
+            assert_eq!(p.n_inputs(), mh.n_plan_inputs(t, d));
+            assert_eq!(p.n_outputs(), heads * t * d);
+            let dot = MultiHeadFhe::new(Mechanism::DotProduct, d, heads, shared).plan(t, d);
+            assert_eq!(
+                dot.pbs_count(),
+                hu * (4 * tu * tu * du + 3 * tu * tu + tu + tu * du),
+                "{tag} dotprod"
+            );
+            assert_eq!(dot.levels(), 6);
+            // Signed: verbatim emission is H× regardless of layout; the
+            // rewrite outcomes differ *only* through cross-head sharing.
+            let mh = MultiHeadFhe::new(Mechanism::InhibitorSigned, d, heads, shared);
+            let raw = mh.plan(t, d);
+            assert_eq!(
+                raw.pbs_count(),
+                hu * (5 * tu * tu * du + tu * tu + tu * du),
+                "{tag} signed verbatim"
+            );
+            let (cse, _) = PlanRewriter::new(RewriteConfig::cse_only()).rewrite(mh.plan(t, d));
+            let want_cse = if shared {
+                3 * hu * tu * tu * du + hu * tu * tu + hu * tu * du + 2 * tu * du
+            } else {
+                hu * (3 * tu * tu * du + tu * tu + 3 * tu * du)
+            };
+            assert_eq!(cse.pbs_count(), want_cse, "{tag} signed CSE'd");
+            let (packed, stats) = PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 2 })
+                .rewrite(mh.plan(t, d));
+            assert_eq!(packed.pbs_count(), want_cse, "packing keeps LUT evaluations");
+            let want_rot = if shared {
+                3 * hu * tu * tu * du + hu * tu * tu + hu * tu * du + tu * du
+            } else {
+                hu * (3 * tu * tu * du + tu * tu + 2 * tu * du)
+            };
+            assert_eq!(packed.blind_rotation_count(), want_rot, "{tag} signed packed");
+            // Shared KV: one split-pair group per value for the WHOLE
+            // block; per-head KV: one per value per head.
+            let want_groups = if shared { t * d } else { heads * t * d };
+            assert_eq!(stats.multi_groups, want_groups, "{tag} groups");
+            assert_eq!(packed.levels(), 4, "packing never crosses levels");
+        }
+    }
+}
+
+#[test]
+fn fused_shared_kv_signed_plan_beats_h_separate_plans_on_rotations() {
+    // The acceptance-bar pin: with any packing budget ≥ 2 (many_lut_log
+    // ≥ 1), the fused H-head shared-KV signed plan needs STRICTLY fewer
+    // blind rotations than H separately-rewritten single-head plans —
+    // the first super-pairwise, cross-head saving the IR machinery
+    // delivers end-to-end. The margin is exactly the (H−1)·T·d split
+    // rotations the separate plans each repeat.
+    let _g = lock();
+    let rewriter = PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 2 });
+    for &(heads, t, d) in &[(2usize, 2usize, 2usize), (3, 2, 2), (4, 3, 2)] {
+        let single = InhibitorSignedFhe::new(d, 1);
+        let (single_rw, _) = rewriter.rewrite(single.plan(t, d));
+        let h_separate_rot = heads as u64 * single_rw.blind_rotation_count();
+        let h_separate_pbs = heads as u64 * single_rw.pbs_count();
+        let mh = MultiHeadFhe::new(Mechanism::InhibitorSigned, d, heads, true);
+        let (fused, _) = rewriter.rewrite(mh.plan(t, d));
+        assert!(
+            fused.blind_rotation_count() < h_separate_rot,
+            "H={heads} T={t} d={d}: fused {} !< separate {}",
+            fused.blind_rotation_count(),
+            h_separate_rot
+        );
+        assert_eq!(
+            h_separate_rot - fused.blind_rotation_count(),
+            (heads as u64 - 1) * (t * d) as u64,
+            "the rotation win is exactly the deduped split pairs"
+        );
+        // Cross-head CSE also cuts LUT evaluations themselves.
+        assert!(fused.pbs_count() < h_separate_pbs, "H={heads}: cross-head CSE win");
+        assert_eq!(h_separate_pbs - fused.pbs_count(), 2 * (heads as u64 - 1) * (t * d) as u64);
+    }
+}
+
+#[test]
+fn forward_does_not_clone_input_ciphertexts() {
+    // By-ref execution regression: for circuits whose inputs feed only
+    // free linear nodes (unsigned inhibitor, dot-product — single- and
+    // multi-head alike), a forward pass performs ZERO CtInt clones:
+    // inputs are borrowed, single-consumer PBS operands are moved into
+    // their jobs, and outputs are moved out at finish. This holds for
+    // the raw and the rewritten pipeline identically (the passes don't
+    // touch these circuits), so the pin survives the FHE_NO_REWRITE CI
+    // leg too.
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x31AD04);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let (heads, t, d) = (2usize, 2usize, 2usize);
+    let q = ITensor::random(&[t, heads * d], -2, 2, &mut rng);
+    let k = ITensor::random(&[t, heads * d], -2, 2, &mut rng);
+    let v = ITensor::random(&[t, heads * d], 0, 3, &mut rng);
+    let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+    let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+    let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+    let mh = MultiHeadFhe::new(Mechanism::Inhibitor, d, heads, false);
+    let single = inhibitor::fhe_circuits::InhibitorFhe::new(d, 1);
+    let sq = CtMatrix::encrypt(&q.slice_cols(0, d), &ctx, &ck, &mut rng);
+    let sk_ = CtMatrix::encrypt(&k.slice_cols(0, d), &ctx, &ck, &mut rng);
+    let sv = CtMatrix::encrypt(&v.slice_cols(0, d), &ctx, &ck, &mut rng);
+    // Warm both plan caches so the measurement is the steady-state path.
+    let _ = mh.forward(&ctx, &cq, &ckk, &cv);
+    let _ = single.forward(&ctx, &sq, &sk_, &sv);
+    let before = ct_clone_count();
+    let out_mh = mh.forward(&ctx, &cq, &ckk, &cv);
+    assert_eq!(
+        ct_clone_count() - before,
+        0,
+        "multi-head inhibitor forward must not clone any ciphertext"
+    );
+    let before = ct_clone_count();
+    let out_single = single.forward(&ctx, &sq, &sk_, &sv);
+    assert_eq!(
+        ct_clone_count() - before,
+        0,
+        "single-head inhibitor forward must not clone any ciphertext"
+    );
+    // Dot-product too: its inputs also feed only linear (add/sub) nodes
+    // and every PBS operand is single-consumer. The clone counter is
+    // value-independent, so reusing the 5-bit keyset is fine even where
+    // the baseline's intermediates would wrap at this width.
+    let dot = inhibitor::fhe_circuits::DotProductFhe::new(d, 2);
+    let _ = dot.forward(&ctx, &sq, &sk_, &sv); // warm the plan cache
+    let before = ct_clone_count();
+    let out_dot = dot.forward(&ctx, &sq, &sk_, &sv);
+    assert_eq!(
+        ct_clone_count() - before,
+        0,
+        "dot-product forward must not clone any ciphertext"
+    );
+    // The runs above were real forwards (sanity, not vacuous).
+    assert_eq!(out_mh.data.len(), heads * t * d);
+    assert_eq!(out_single.data.len(), t * d);
+    assert_eq!(out_dot.data.len(), t * d);
+}
+
+#[test]
+fn multihead_engine_serves_coscheduled_requests_through_fusion() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x31AD05);
+    let (heads, t, d) = (2usize, 2usize, 2usize);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let mut coord = Coordinator::new(RoutePolicy::PreferQuant);
+    let session = coord.keymgr.create_session(ctx);
+    let n_req = 2usize;
+    coord
+        .add_fhe_multihead_engine(
+            session,
+            "inhibitor",
+            t,
+            d,
+            heads,
+            false,
+            BatchPolicy { max_batch: n_req, max_wait: Duration::from_secs(2), queue_cap: 64 },
+        )
+        .unwrap();
+    let sess = coord.keymgr.session(session).unwrap();
+    let mh = MultiHeadFhe::new(Mechanism::Inhibitor, d, heads, false);
+    // The engine resolves the same cached-plan construction on its own
+    // worker; PBS is deterministic, so solo executions of this plan are
+    // the exact reference.
+    let plan = mh.plan_for(&sess.ctx, t, d);
+    let mut tensors = Vec::with_capacity(n_req);
+    let mut bundles: Vec<Vec<CtInt>> = Vec::with_capacity(n_req);
+    for _ in 0..n_req {
+        let q = ITensor::random(&[t, heads * d], -2, 2, &mut rng);
+        let k = ITensor::random(&[t, heads * d], -2, 2, &mut rng);
+        let v = ITensor::random(&[t, heads * d], 0, 3, &mut rng);
+        let cq = CtMatrix::encrypt(&q, &sess.ctx, &ck, &mut rng);
+        let ckk = CtMatrix::encrypt(&k, &sess.ctx, &ck, &mut rng);
+        let cv = CtMatrix::encrypt(&v, &sess.ctx, &ck, &mut rng);
+        // Wire layout = plan-input layout, defined once by input_refs.
+        bundles.push(mh.input_refs(&cq, &ckk, &cv).into_iter().cloned().collect());
+        tensors.push((q, k, v));
+    }
+    let solo: Vec<Vec<CtInt>> = bundles.iter().map(|b| plan.execute(&sess.ctx, b)).collect();
+    let path = EnginePath::Encrypted { session, mechanism: mh.engine_mechanism() };
+    let rxs: Vec<_> = bundles
+        .iter()
+        .map(|b| {
+            let blob = sess.register(b.clone());
+            coord.submit(path.clone(), Payload::CiphertextRef(blob)).unwrap()
+        })
+        .collect();
+    let resps: Vec<_> =
+        rxs.into_iter().map(|rx| rx.recv_timeout(Duration::from_secs(300)).unwrap()).collect();
+    for resp in &resps {
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    // Both requests rode ONE fused batch: one fused submission per plan
+    // level (H× the single-head jobs inside each).
+    let m = coord.metrics();
+    assert_eq!(
+        m.fused_levels.load(std::sync::atomic::Ordering::Relaxed),
+        plan.levels() as u64,
+        "co-scheduled multi-head requests must fuse at level granularity"
+    );
+    for (r, resp) in resps.iter().enumerate() {
+        let cts = sess.take(resp.output[0] as u64).unwrap();
+        assert_eq!(cts.len(), heads * t * d);
+        for (i, (got, want)) in cts.iter().zip(&solo[r]).enumerate() {
+            assert_eq!(got.ct, want.ct, "request {r} output {i}: fused == solo");
+        }
+        let (q, k, v) = &tensors[r];
+        let mirror = mh.mirror(q, k, v, sess.ctx.enc.min_signed(), sess.ctx.enc.max_signed());
+        let got: Vec<i64> = cts.iter().map(|c| sess.ctx.decrypt(c, &ck)).collect();
+        assert_eq!(got, mirror.data, "request {r}: plaintext multi-head reference");
+    }
+    assert_eq!(mh.plan_builds(), 1, "reference plan built once from the shared cache");
+}
+
+#[test]
+fn multihead_plan_cache_builds_once_across_forwards_and_clones() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x31AD06);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let (heads, t, d) = (2usize, 2usize, 2usize);
+    let q = ITensor::random(&[t, heads * d], -2, 2, &mut rng);
+    let k = ITensor::random(&[t, heads * d], -2, 2, &mut rng);
+    let v = ITensor::random(&[t, heads * d], 0, 3, &mut rng);
+    let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+    let ckk = CtMatrix::encrypt(&k, &ctx, &ck, &mut rng);
+    let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+    let mh = MultiHeadFhe::new(Mechanism::Inhibitor, d, heads, false);
+    assert_eq!(mh.plan_builds(), 0);
+    let first = mh.forward(&ctx, &cq, &ckk, &cv);
+    let second = mh.forward(&ctx, &cq, &ckk, &cv);
+    assert_eq!(mh.plan_builds(), 1, "repeated forwards reuse the cached fused plan");
+    let clone = mh.clone();
+    let third = clone.forward(&ctx, &cq, &ckk, &cv);
+    assert_eq!(clone.plan_builds(), 1, "clones share the cache");
+    for (a, b) in first.data.iter().zip(second.data.iter()) {
+        assert_eq!(a.ct, b.ct, "cached plan must not change results");
+    }
+    for (a, b) in first.data.iter().zip(third.data.iter()) {
+        assert_eq!(a.ct, b.ct);
+    }
+}
