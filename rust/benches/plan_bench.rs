@@ -11,7 +11,7 @@ use inhibitor::attention::Mechanism;
 use inhibitor::bench_harness::{bench, BenchConfig};
 use inhibitor::coordinator::FusedLevelExecutor;
 use inhibitor::fhe_circuits::{
-    CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, MultiHeadFhe,
+    CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe,
 };
 use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::ops::CtInt;
@@ -206,6 +206,74 @@ fn main() {
         ("speedup", Json::num(m_sep.mean_s / m_fused.mean_s)),
     ])];
 
+    // === Block subsystem: fused L-layer model plan vs per-layer plans ==
+    // The cross-layer payoff: L = 2 full signed transformer blocks
+    // (attention + W_O + residuals + requants + ReLU FFN) in ONE plan —
+    // stacked boundary trios pack and the level loop never drains
+    // between layers — against executing the same two blocks as two
+    // separately-rewritten single-block plans chained through their
+    // intermediate ciphertexts.
+    println!("\n=== Block: fused L=2 signed block stack vs per-layer block plans ===");
+    let (b_heads, b_layers) = (2usize, 2usize);
+    let d_model = b_heads * d;
+    // ϑ = 2 keyset: the cross-layer requant+ReLU+split trios only share
+    // a rotation at budget ≥ 4 — at the rewrite section's ϑ = 1 budget
+    // the fused and per-layer rotation counts provably tie (pinned by
+    // tests/block_it.rs), and this section exists to record the win.
+    let ck = ClientKey::generate(TfheParams::test_multi_lut_theta(4, 2), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    ctx.set_threads(threads);
+    let model = ModelFhe::demo(
+        Mechanism::InhibitorSigned,
+        d_model,
+        b_heads,
+        b_layers,
+        false,
+        d_model,
+        0xB1,
+    );
+    let stage_a = ModelFhe::new(vec![model.blocks[0].clone()]);
+    let stage_b = ModelFhe::new(vec![model.blocks[1].clone()]);
+    let (fused_block, _) = PlanRewriter::for_ctx(&ctx).rewrite(model.plan(t));
+    let (plan_a, _) = PlanRewriter::for_ctx(&ctx).rewrite(stage_a.plan(t));
+    let (plan_b, _) = PlanRewriter::for_ctx(&ctx).rewrite(stage_b.plan(t));
+    let stage_pbs = plan_a.pbs_count() + plan_b.pbs_count();
+    let stage_rot = plan_a.blind_rotation_count() + plan_b.blind_rotation_count();
+    // Timing instrument only: deep-layer intermediates may wrap at the
+    // 4-bit width — bit-exactness at proper widths is
+    // `tests/block_it.rs`' job.
+    let x = ITensor::random(&[t, d_model], -1, 1, &mut rng);
+    let block_inputs: Vec<CtInt> =
+        x.data.iter().map(|&val| ctx.encrypt(val, &ck, &mut rng)).collect();
+    let m_block_fused =
+        bench("block fused L=2", cfg, || fused_block.execute(&ctx, &block_inputs));
+    let m_block_stages = bench("block per-layer x2", cfg, || {
+        let mid = plan_a.execute(&ctx, &block_inputs);
+        plan_b.execute(&ctx, &mid)
+    });
+    println!("  {}", m_block_fused.summary());
+    println!("  {}", m_block_stages.summary());
+    println!(
+        "  L={b_layers} H={b_heads}: pbs {stage_pbs} -> {}, blind rotations {stage_rot} -> {} \
+         ({:.3}x latency)",
+        fused_block.pbs_count(),
+        fused_block.blind_rotation_count(),
+        m_block_stages.mean_s / m_block_fused.mean_s,
+    );
+    let block_records = vec![Json::obj(vec![
+        ("mechanism", Json::str("inhibitor-signed")),
+        ("heads", Json::num(b_heads as f64)),
+        ("layers", Json::num(b_layers as f64)),
+        ("d_model", Json::num(d_model as f64)),
+        ("pbs_fused", Json::num(fused_block.pbs_count() as f64)),
+        ("pbs_stages", Json::num(stage_pbs as f64)),
+        ("blind_rotations_fused", Json::num(fused_block.blind_rotation_count() as f64)),
+        ("blind_rotations_stages", Json::num(stage_rot as f64)),
+        ("fused_s", Json::num(m_block_fused.mean_s)),
+        ("stages_s", Json::num(m_block_stages.mean_s)),
+        ("speedup", Json::num(m_block_stages.mean_s / m_block_fused.mean_s)),
+    ])];
+
     let record = Json::obj(vec![
         ("bench", Json::str("plan_bench")),
         ("seq_len", Json::num(t as f64)),
@@ -215,6 +283,7 @@ fn main() {
         ("fusion", Json::arr(fusion_records)),
         ("rewrite", Json::arr(rewrite_records)),
         ("multihead", Json::arr(multihead_records)),
+        ("block", Json::arr(block_records)),
     ]);
     // Write next to the workspace root (cargo runs benches with CWD at
     // the package root), where the perf-trajectory record is checked in.

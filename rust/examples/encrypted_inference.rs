@@ -56,7 +56,9 @@ fn main() {
         )
         .expect("inference");
     assert!(resp.error.is_none(), "{:?}", resp.error);
-    let out_blob = resp.output[0] as u64;
+    // Typed result reference: the blob id travels in its own response
+    // field, never encoded into the f32 output vector.
+    let out_blob = resp.result_blob.expect("typed result reference");
     println!(
         "server: {} PBS in {:.3}s (engine={})",
         bootstrap::pbs_count(),

@@ -5,7 +5,7 @@
 //! exactly (same equations, same constants), which ties the Rust request
 //! path to the JAX build path numerically.
 
-use crate::tensor::FTensor;
+use crate::tensor::{FTensor, ITensor};
 
 /// Which attention mechanism a head runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -34,6 +34,67 @@ impl Mechanism {
             "inhibitor-signed" | "signed" => Some(Mechanism::InhibitorSigned),
             _ => None,
         }
+    }
+}
+
+/// Column split of a `d_model`-wide activation into `n_heads` head
+/// slices — the single definition of per-head slicing arithmetic shared
+/// by the plaintext block (`model::Block`), the fused multi-head mirror
+/// (`fhe_circuits::MultiHeadFhe`), the encrypted block circuit
+/// (`fhe_circuits::BlockFhe`) and the block profiler
+/// (`optimizer::precision::profile_block`), so the four can never drift
+/// on how a model width maps to head columns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeadSplit {
+    pub d_model: usize,
+    pub n_heads: usize,
+}
+
+impl HeadSplit {
+    /// Panics unless `d_model` splits evenly into `n_heads ≥ 1` slices.
+    pub fn new(d_model: usize, n_heads: usize) -> Self {
+        assert!(n_heads >= 1, "a multi-head split needs at least one head");
+        assert_eq!(d_model % n_heads, 0, "width {d_model} must split into {n_heads} heads");
+        HeadSplit { d_model, n_heads }
+    }
+
+    /// Per-head slice width d = D / H.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// First column of head `h`'s slice.
+    pub fn col0(&self, h: usize) -> usize {
+        assert!(h < self.n_heads, "head {h} out of {} heads", self.n_heads);
+        h * self.d_head()
+    }
+
+    /// Multi-head attention over column slices: apply `f` to each head's
+    /// Q slice (and its K/V slices, or the full `k`/`v` tensors under a
+    /// shared-KV / multi-query layout) and concatenate the per-head
+    /// outputs back into `[T, d_model]` column order.
+    pub fn apply(
+        &self,
+        q: &ITensor,
+        k: &ITensor,
+        v: &ITensor,
+        shared_kv: bool,
+        mut f: impl FnMut(&ITensor, &ITensor, &ITensor) -> ITensor,
+    ) -> ITensor {
+        assert_eq!(q.dims()[1], self.d_model, "q width must be the split's d_model");
+        let d = self.d_head();
+        let parts: Vec<ITensor> = (0..self.n_heads)
+            .map(|h| {
+                let qs = q.slice_cols(self.col0(h), d);
+                if shared_kv {
+                    f(&qs, k, v)
+                } else {
+                    f(&qs, &k.slice_cols(self.col0(h), d), &v.slice_cols(self.col0(h), d))
+                }
+            })
+            .collect();
+        let refs: Vec<&ITensor> = parts.iter().collect();
+        ITensor::concat_cols(&refs)
     }
 }
 
@@ -146,6 +207,33 @@ mod tests {
             assert_eq!(Mechanism::parse(m.name()), Some(m));
         }
         assert_eq!(Mechanism::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn head_split_slices_and_concatenates_column_wise() {
+        let mut rng = Xoshiro256::new(3);
+        let split = HeadSplit::new(6, 3);
+        assert_eq!(split.d_head(), 2);
+        assert_eq!(split.col0(2), 4);
+        let q = ITensor::random(&[4, 6], -5, 5, &mut rng);
+        let k = ITensor::random(&[4, 6], -5, 5, &mut rng);
+        let v = ITensor::random(&[4, 6], -5, 5, &mut rng);
+        // f = per-slice V passthrough → apply must reassemble V exactly.
+        let got = split.apply(&q, &k, &v, false, |_q, _k, vs| vs.clone());
+        assert_eq!(got, v);
+        // Shared-KV layout: every head sees the full k/v tensors.
+        let kv = ITensor::random(&[4, 2], -5, 5, &mut rng);
+        let got = split.apply(&q, &kv, &kv, true, |qs, ks, _vs| {
+            assert_eq!(ks.dims(), &[4, 2]);
+            qs.clone()
+        });
+        assert_eq!(got, q, "shared-KV apply reassembles the per-head Q slices");
+    }
+
+    #[test]
+    #[should_panic(expected = "must split")]
+    fn head_split_rejects_uneven_widths() {
+        let _ = HeadSplit::new(5, 2);
     }
 
     #[test]

@@ -5,7 +5,7 @@ pub mod common;
 pub mod dotprod;
 pub mod inhibitor;
 
-pub use common::{AttnConfig, Mechanism};
+pub use common::{AttnConfig, HeadSplit, Mechanism};
 pub use dotprod::{DotProductHead, IntSoftmax};
 pub use inhibitor::InhibitorHead;
 

@@ -42,6 +42,14 @@ impl Session {
     pub fn put_result(&self, cts: Vec<CtInt>) -> u64 {
         self.register(cts)
     }
+
+    /// Advance the blob-id counter to `next`. Operational hook (id-space
+    /// partitioning) also used by tests to drive ids past the retired
+    /// f32-exact 2²⁴ protocol limit and pin that typed result references
+    /// stay exact at any magnitude.
+    pub fn set_next_blob_id(&self, next: u64) {
+        self.next_blob.store(next, Ordering::Relaxed);
+    }
 }
 
 /// The key manager: session id → Session.

@@ -18,6 +18,6 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use fused::{FusedLevelExecutor, FusedStats};
 pub use keymgr::{KeyManager, Session};
 pub use metrics::Metrics;
-pub use request::{EnginePath, InferRequest, InferResponse, Payload};
+pub use request::{EngineOutput, EnginePath, InferRequest, InferResponse, Payload};
 pub use router::{Coordinator, RoutePolicy};
 pub use scheduler::{EngineFn, Scheduler};

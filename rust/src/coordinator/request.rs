@@ -32,8 +32,20 @@ impl EnginePath {
                     Some((b, s)) => (b, Some(s)),
                     None => (mechanism.as_str(), None),
                 };
-                let canon =
-                    crate::attention::Mechanism::parse(base).map(|m| m.name()).unwrap_or(base);
+                // Block engines prefix the mechanism (`block/<mech>`);
+                // canonicalize the inner name so `block/softmax@…` and
+                // `block/dotprod@…` share a key too.
+                let canon: String = match base.strip_prefix("block/") {
+                    Some(inner) => format!(
+                        "block/{}",
+                        crate::attention::Mechanism::parse(inner)
+                            .map(|m| m.name())
+                            .unwrap_or(inner)
+                    ),
+                    None => crate::attention::Mechanism::parse(base)
+                        .map(|m| m.name().to_string())
+                        .unwrap_or_else(|| base.to_string()),
+                };
                 match suffix {
                     Some(s) => format!("fhe/{canon}@{s}/{session}"),
                     None => format!("fhe/{canon}/{session}"),
@@ -69,13 +81,40 @@ impl InferRequest {
     }
 }
 
+/// One request's engine-side result: clear float outputs, or a typed
+/// reference into the session's ciphertext store. Encrypted engines
+/// return `ResultRef` — the blob id no longer rides the `f32` output
+/// vector, so ids are not limited to the f32-exact 2²⁴ range the old
+/// encoding imposed (ROADMAP item).
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineOutput {
+    Values(Vec<f32>),
+    ResultRef(u64),
+}
+
+impl EngineOutput {
+    /// Split into the response fields (`output`, `result_blob`).
+    pub fn into_response_fields(self) -> (Vec<f32>, Option<u64>) {
+        match self {
+            EngineOutput::Values(v) => (v, None),
+            EngineOutput::ResultRef(id) => (Vec::new(), Some(id)),
+        }
+    }
+}
+
 /// One inference response.
 #[derive(Clone, Debug)]
 pub struct InferResponse {
     pub id: u64,
-    /// Flattened output values (floats for clear paths; decrypt-side
-    /// handles ciphertext outputs referenced by id).
+    /// Flattened output values (floats for clear paths; empty for
+    /// encrypted results, which arrive as [`InferResponse::result_blob`]).
     pub output: Vec<f32>,
+    /// Typed reference to an encrypted result bundle in the session's
+    /// ciphertext store (encrypted engines only). Carried as an exact
+    /// `u64` — unlike the retired encode-as-f32 scheme and its 2²⁴
+    /// limit. (The TCP JSON layer narrows this to the 2⁵³ JSON-number
+    /// range, refusing larger ids loudly — see `server::proto`.)
+    pub result_blob: Option<u64>,
     pub engine: String,
     /// Queue + execution latency in seconds.
     pub latency_s: f64,
@@ -122,5 +161,28 @@ mod tests {
         let two = EnginePath::Encrypted { session: 7, mechanism: "dotprod@h2".into() };
         assert!(canon.batch_key() != single.batch_key());
         assert!(canon.batch_key() != two.batch_key());
+    }
+
+    #[test]
+    fn block_keys_canonicalize_the_inner_mechanism() {
+        let alias = EnginePath::Encrypted { session: 7, mechanism: "block/softmax@h2xL3".into() };
+        let canon = EnginePath::Encrypted { session: 7, mechanism: "block/dotprod@h2xL3".into() };
+        assert_eq!(alias.batch_key(), canon.batch_key());
+        assert_eq!(canon.batch_key(), "fhe/block/dotprod@h2xL3/7");
+        // Block keys never collide with the bare multi-head keys of the
+        // same mechanism/session.
+        let mh = EnginePath::Encrypted { session: 7, mechanism: "dotprod@h2xL3".into() };
+        assert!(canon.batch_key() != mh.batch_key());
+    }
+
+    #[test]
+    fn engine_output_splits_into_response_fields() {
+        assert_eq!(
+            EngineOutput::Values(vec![1.0, 2.0]).into_response_fields(),
+            (vec![1.0, 2.0], None)
+        );
+        // Typed refs carry ids the f32 vector could not represent.
+        let big = (1u64 << 24) + 1;
+        assert_eq!(EngineOutput::ResultRef(big).into_response_fields(), (Vec::new(), Some(big)));
     }
 }

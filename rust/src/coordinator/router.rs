@@ -12,9 +12,9 @@
 use super::batcher::BatchPolicy;
 use super::fused::FusedLevelExecutor;
 use super::keymgr::{KeyManager, Session};
-use super::request::{EnginePath, InferRequest, InferResponse, Payload};
+use super::request::{EngineOutput, EnginePath, InferRequest, InferResponse, Payload};
 use super::scheduler::Scheduler;
-use crate::fhe_circuits::{DotProductFhe, InhibitorFhe, InhibitorSignedFhe, MultiHeadFhe};
+use crate::fhe_circuits::{DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe};
 use crate::model::{ModelInput, QTransformer};
 use crate::tensor::ITensor;
 use crate::tfhe::plan::CircuitPlan;
@@ -75,19 +75,15 @@ impl Coordinator {
                                 .collect();
                             let t = ITensor::from_vec(&[*r, *c], codes);
                             let out = model.forward(&ModelInput::Features(t));
-                            Ok(out
-                                .data
-                                .iter()
-                                .map(|&c| c as f32 * model.act_scale)
-                                .collect::<Vec<f32>>())
+                            Ok(EngineOutput::Values(
+                                out.data.iter().map(|&c| c as f32 * model.act_scale).collect(),
+                            ))
                         }
                         Payload::Tokens(toks) => {
                             let out = model.forward(&ModelInput::Tokens(toks.clone()));
-                            Ok(out
-                                .data
-                                .iter()
-                                .map(|&c| c as f32 * model.act_scale)
-                                .collect::<Vec<f32>>())
+                            Ok(EngineOutput::Values(
+                                out.data.iter().map(|&c| c as f32 * model.act_scale).collect(),
+                            ))
                         }
                         Payload::CiphertextRef(_) => {
                             Err("ciphertext sent to a clear engine".to_string())
@@ -131,6 +127,7 @@ impl Coordinator {
                     .map(|req| match &req.payload {
                         Payload::Features(data, _shape) => engine
                             .run_f32(&[data.clone()])
+                            .map(EngineOutput::Values)
                             .map_err(|e| format!("pjrt execute: {e:#}")),
                         _ => Err("pjrt engine takes float features".to_string()),
                     })
@@ -142,8 +139,8 @@ impl Coordinator {
 
     /// Register the encrypted attention engine for a session. Requests
     /// carry `Payload::CiphertextRef` pointing at a registered Q/K/V
-    /// bundle (3·T·d ciphertexts); the result bundle id is returned as the
-    /// single output value.
+    /// bundle (3·T·d ciphertexts); the result bundle id comes back as
+    /// the response's typed `result_blob` reference.
     ///
     /// The worker builds the head's `CircuitPlan` once (the engine's
     /// mechanism and shape are fixed) and executes every batch through
@@ -221,6 +218,40 @@ impl Coordinator {
             .batch_key();
         self.add_encrypted_engine(&key, session, policy, move |ctx| {
             head.plan_for(ctx, seq_len, d_head)
+        });
+        Ok(())
+    }
+
+    /// Register an encrypted **transformer-block** engine for a session:
+    /// the full L-layer block stack (`fhe_circuits::ModelFhe` — fused
+    /// multi-head attention, W_O projection, residual adds, requant PBS
+    /// and the two-layer ReLU FFN per layer) served as ONE circuit plan,
+    /// so the rewrite passes optimize across heads *and* layers and the
+    /// fused level executor drives the whole model level-by-level.
+    /// The engine key carries the full configuration
+    /// (`block/<mechanism>@h<H>xL<L>[s]`, see
+    /// `ModelFhe::engine_mechanism`). Request bundles hold the `[T, D]`
+    /// residual-stream grid row-major (`ModelFhe::input_refs`); the
+    /// result bundle is the output stream in the same layout, returned
+    /// as a typed `result_blob` reference.
+    pub fn add_fhe_block_engine(
+        &mut self,
+        session_id: u64,
+        model: ModelFhe,
+        seq_len: usize,
+        policy: BatchPolicy,
+    ) -> Result<(), String> {
+        let session = self
+            .keymgr
+            .session(session_id)
+            .ok_or_else(|| format!("unknown session {session_id}"))?;
+        let key = EnginePath::Encrypted {
+            session: session_id,
+            mechanism: model.engine_mechanism(),
+        }
+        .batch_key();
+        self.add_encrypted_engine(&key, session, policy, move |ctx| {
+            model.plan_for(ctx, seq_len)
         });
         Ok(())
     }
@@ -305,33 +336,15 @@ impl Coordinator {
                     metrics
                         .fused_blind_rotations
                         .fetch_add(stats.blind_rotations, Ordering::Relaxed);
-                    // Phase 3 — register each request's result bundle.
-                    // The wire protocol carries the blob id as f32, which
-                    // is exact only below 2^24 — fail loudly rather than
-                    // silently round to a neighboring blob, and roll back
-                    // this batch's registrations so the error leaks no
-                    // unreachable ciphertexts into the session store.
-                    let mut results = Vec::with_capacity(outs.len());
-                    let mut registered = Vec::with_capacity(outs.len());
-                    for data in outs {
-                        let out_blob = session.put_result(data);
-                        if out_blob >= (1u64 << 24) {
-                            let _ = session.take(out_blob);
-                            for blob in registered {
-                                let _ = session.take(blob);
-                            }
-                            // Same contract as the Phase-1 error path:
-                            // give the clients their inputs back.
-                            for (blob, cts) in bundles {
-                                session.restore(blob, cts);
-                            }
-                            return Err(format!(
-                                "result blob id {out_blob} exceeds the f32-exact protocol range"
-                            ));
-                        }
-                        registered.push(out_blob);
-                        results.push(vec![out_blob as f32]);
-                    }
+                    // Phase 3 — register each request's result bundle
+                    // and return a *typed* reference. The id travels in
+                    // the response's dedicated `result_blob` field, so —
+                    // unlike the retired ride-along-as-f32 encoding — it
+                    // is exact at any magnitude and needs no 2²⁴ guard.
+                    let results: Vec<EngineOutput> = outs
+                        .into_iter()
+                        .map(|data| EngineOutput::ResultRef(session.put_result(data)))
+                        .collect();
                     Ok(results)
                 }) as crate::coordinator::scheduler::EngineBody
             }),
@@ -451,6 +464,15 @@ mod tests {
                 .unwrap_err();
             assert!(err.contains("unknown session"), "{mech}: {err}");
         }
+    }
+
+    #[test]
+    fn block_engine_registration_requires_a_session() {
+        use crate::fhe_circuits::ModelFhe;
+        let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+        let model = ModelFhe::demo(Mechanism::Inhibitor, 4, 2, 2, false, 4, 3);
+        let err = c.add_fhe_block_engine(99, model, 2, BatchPolicy::default()).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
     }
 
     #[test]

@@ -6,18 +6,19 @@
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::request::{InferRequest, InferResponse};
+use super::request::{EngineOutput, InferRequest, InferResponse};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// An engine body: maps a batch of requests to outputs (same order).
-/// Errors are reported per-batch and propagated to every member.
-/// The body itself need not be `Send` — it is *created inside* its worker
-/// thread by the factory (PJRT handles, for example, must never cross
-/// threads).
-pub type EngineBody = Box<dyn FnMut(&[InferRequest]) -> Result<Vec<Vec<f32>>, String>>;
+/// An engine body: maps a batch of requests to outputs (same order) —
+/// clear float vectors or typed encrypted-result references
+/// ([`EngineOutput`]). Errors are reported per-batch and propagated to
+/// every member. The body itself need not be `Send` — it is *created
+/// inside* its worker thread by the factory (PJRT handles, for example,
+/// must never cross threads).
+pub type EngineBody = Box<dyn FnMut(&[InferRequest]) -> Result<Vec<EngineOutput>, String>>;
 
 /// Factory that builds the engine body on the worker thread.
 pub type EngineFn = Box<dyn FnOnce() -> EngineBody + Send>;
@@ -101,9 +102,11 @@ impl Scheduler {
                             metrics.latency.record(latency);
                             metrics.completed.fetch_add(1, Ordering::Relaxed);
                             if let Some(tx) = pend.remove(&req.id) {
+                                let (output, result_blob) = out.into_response_fields();
                                 let _ = tx.send(InferResponse {
                                     id: req.id,
-                                    output: out,
+                                    output,
+                                    result_blob,
                                     engine: engine_name.clone(),
                                     latency_s: latency,
                                     error: None,
@@ -117,6 +120,7 @@ impl Scheduler {
                                 let _ = tx.send(InferResponse {
                                     id: req.id,
                                     output: Vec::new(),
+                                    result_blob: None,
                                     engine: engine_name.clone(),
                                     latency_s: req.enqueued.elapsed().as_secs_f64(),
                                     error: Some(e.clone()),
@@ -199,9 +203,11 @@ mod tests {
             Box::new(|batch: &[InferRequest]| {
                 Ok(batch
                     .iter()
-                    .map(|r| match &r.payload {
-                        Payload::Features(f, _) => f.iter().map(|x| x * 2.0).collect(),
-                        _ => vec![r.id as f32],
+                    .map(|r| {
+                        EngineOutput::Values(match &r.payload {
+                            Payload::Features(f, _) => f.iter().map(|x| x * 2.0).collect(),
+                            _ => vec![r.id as f32],
+                        })
                     })
                     .collect())
             })

@@ -174,6 +174,23 @@ impl std::fmt::Debug for PlanCache {
     }
 }
 
+/// Per-head value source for emitting a head's subgraph into a shared
+/// builder (`MultiHeadFhe::emit`): either plain value nodes (every head
+/// circuit takes these — the signed head emits its own V⁺/V⁻ split PBS
+/// from them), or pre-split `(v⁺, v⁻)` node pairs the caller already
+/// emitted. The pre-split form is how the block circuit
+/// (`super::block_fhe::BlockFhe`) folds the previous layer's residual
+/// requant into the splits: the pair then reads the *accumulator* node,
+/// landing on the same input as the plain requant so the packing pass
+/// can fuse all three tables into one blind rotation at ϑ ≥ 2.
+pub(super) enum HeadValues<'a> {
+    Plain(&'a [NodeId]),
+    /// `(v⁺, v⁻)` per value element, row-major `[T, d]`. Only the signed
+    /// inhibitor consumes splits; passing this to any other mechanism
+    /// panics.
+    PreSplit(&'a [(NodeId, NodeId)]),
+}
+
 /// Square-LUT inputs for a batch of eq.-1 products `a·b`: `a+b` for every
 /// pair (first half), then `a−b` (second half). After the square batch,
 /// product `idx` is `sq[idx] − sq[pairs.len() + idx]`.
@@ -415,19 +432,14 @@ impl InhibitorSignedFhe {
         }
     }
 
-    /// Emit this head's subgraph, **verbatim** (no manual deduplication
-    /// — that is the rewriter's job), into a shared builder; see
-    /// [`InhibitorFhe::emit`] for the contract. The value-split tables
-    /// are the builder's *standard* relu/min0 LUTs, so in a fused
-    /// multi-head plan every head references the same registered tables
-    /// — which is exactly what lets CSE collapse split PBS across head
-    /// boundaries when heads share a V segment (multi-query layouts).
-    pub(super) fn emit(
+    /// Shared score path of [`Self::emit`] and [`Self::emit_presplit`]:
+    /// |q − k| abs PBS, per-score free sums, and the fused
+    /// scale-shift-ReLU table. Returns the `T²` score nodes.
+    fn emit_scores(
         &self,
         b: &mut CircuitBuilder,
         q: &[NodeId],
         k: &[NodeId],
-        v: &[NodeId],
         t: usize,
         d: usize,
     ) -> Vec<NodeId> {
@@ -450,6 +462,26 @@ impl InhibitorSignedFhe {
             let dist = b.sum(&abs[ij * d..(ij + 1) * d]);
             z.push(b.pbs(dist, ssr));
         }
+        z
+    }
+
+    /// Emit this head's subgraph, **verbatim** (no manual deduplication
+    /// — that is the rewriter's job), into a shared builder; see
+    /// [`InhibitorFhe::emit`] for the contract. The value-split tables
+    /// are the builder's *standard* relu/min0 LUTs, so in a fused
+    /// multi-head plan every head references the same registered tables
+    /// — which is exactly what lets CSE collapse split PBS across head
+    /// boundaries when heads share a V segment (multi-query layouts).
+    pub(super) fn emit(
+        &self,
+        b: &mut CircuitBuilder,
+        q: &[NodeId],
+        k: &[NodeId],
+        v: &[NodeId],
+        t: usize,
+        d: usize,
+    ) -> Vec<NodeId> {
+        let z = self.emit_scores(b, q, k, t, d);
         // Level 3 — eq. 7's signed inhibition, with the V⁺/V⁻ splits
         // written where the equation uses them (per query row — the
         // duplicates CSE removes and the same-input pairs packing fuses).
@@ -462,6 +494,43 @@ impl InhibitorSignedFhe {
                 for j in 0..t {
                     let vp = b.relu(v[j * d + kk]);
                     let vn = b.min0(v[j * d + kk]);
+                    let pos_in = b.sub(vp, z[i * t + j]);
+                    terms.push(b.relu(pos_in));
+                    let neg_in = b.add(vn, z[i * t + j]);
+                    terms.push(b.min0(neg_in));
+                }
+                let h = b.sum(&terms);
+                outs.push(b.refresh(h));
+            }
+        }
+        outs
+    }
+
+    /// [`Self::emit`] over **pre-split** values: the caller already
+    /// emitted one `(v⁺, v⁻)` node pair per value element (row-major
+    /// `[T, d]`) and the inhibition consumes those pairs directly — no
+    /// split PBS are emitted here. This is the block circuit's seam: it
+    /// lets the splits read the previous layer's residual *accumulator*
+    /// (with the requant folded into the split tables) instead of the
+    /// requanted activation, and under a shared-KV layout lets one pair
+    /// per value serve every head by construction.
+    pub(super) fn emit_presplit(
+        &self,
+        b: &mut CircuitBuilder,
+        q: &[NodeId],
+        k: &[NodeId],
+        vsplits: &[(NodeId, NodeId)],
+        t: usize,
+        d: usize,
+    ) -> Vec<NodeId> {
+        assert_eq!(vsplits.len(), t * d, "one (v⁺, v⁻) pair per value element");
+        let z = self.emit_scores(b, q, k, t, d);
+        let mut outs = Vec::with_capacity(t * d);
+        for i in 0..t {
+            for kk in 0..d {
+                let mut terms = Vec::with_capacity(2 * t);
+                for j in 0..t {
+                    let (vp, vn) = vsplits[j * d + kk];
                     let pos_in = b.sub(vp, z[i * t + j]);
                     terms.push(b.relu(pos_in));
                     let neg_in = b.add(vn, z[i * t + j]);
@@ -512,6 +581,29 @@ impl InhibitorSignedFhe {
         CtMatrix { rows: t, cols: d, data }
     }
 
+    /// Shared score path of the signed mirrors: clamped |q − k| sums
+    /// through the fused scale-shift-ReLU table, exactly as
+    /// [`Self::emit_scores`] computes them.
+    fn mirror_scores(
+        &self,
+        q: &crate::tensor::ITensor,
+        k: &crate::tensor::ITensor,
+        min_s: i64,
+        max_s: i64,
+    ) -> Vec<i64> {
+        let (t, d) = (q.dims()[0], q.dims()[1]);
+        let clamp = |x: i64| x.clamp(min_s, max_s);
+        let mut z = vec![0i64; t * t];
+        for i in 0..t {
+            for j in 0..t {
+                let dist: i64 =
+                    (0..d).map(|kk| clamp((q.at2(i, kk) - k.at2(j, kk)).abs())).sum();
+                z[i * t + j] = clamp(scaled_shift_relu(dist, self.gamma, self.alpha_q));
+            }
+        }
+        z
+    }
+
     /// Plaintext mirror of the exact integer function the circuit
     /// computes, including every LUT clamp, for exact equality testing.
     pub fn mirror(
@@ -524,24 +616,42 @@ impl InhibitorSignedFhe {
     ) -> crate::tensor::ITensor {
         let (t, d) = (q.dims()[0], q.dims()[1]);
         let clamp = |x: i64| x.clamp(min_s, max_s);
-        let mut z = vec![0i64; t * t];
-        for i in 0..t {
-            for j in 0..t {
-                let dist: i64 =
-                    (0..d).map(|kk| clamp((q.at2(i, kk) - k.at2(j, kk)).abs())).sum();
-                z[i * t + j] = clamp(scaled_shift_relu(dist, self.gamma, self.alpha_q));
-            }
+        // The verbatim circuit splits through the std relu/min0 tables:
+        // v⁺ = clamp(v⁺), v⁻ = clamp(v⁻) of the (in-range) value codes.
+        let mut vp = crate::tensor::ITensor::zeros(&[t, d]);
+        let mut vn = crate::tensor::ITensor::zeros(&[t, d]);
+        for e in 0..t * d {
+            vp.data[e] = clamp(v.data[e].max(0));
+            vn.data[e] = clamp(v.data[e].min(0));
         }
+        self.mirror_presplit(q, k, &vp, &vn, min_s, max_s)
+    }
+
+    /// Plaintext mirror of [`Self::emit_presplit`]: identical score
+    /// path, inhibition from caller-provided (already clamped) value
+    /// splits — the block circuit's reference path, where the splits may
+    /// carry a folded requant of the previous layer's accumulator.
+    pub(super) fn mirror_presplit(
+        &self,
+        q: &crate::tensor::ITensor,
+        k: &crate::tensor::ITensor,
+        vp: &crate::tensor::ITensor,
+        vn: &crate::tensor::ITensor,
+        min_s: i64,
+        max_s: i64,
+    ) -> crate::tensor::ITensor {
+        let (t, d) = (q.dims()[0], q.dims()[1]);
+        assert_eq!((vp.dims()[0], vp.dims()[1]), (t, d), "v⁺ must be [T, d]");
+        assert_eq!((vn.dims()[0], vn.dims()[1]), (t, d), "v⁻ must be [T, d]");
+        let clamp = |x: i64| x.clamp(min_s, max_s);
+        let z = self.mirror_scores(q, k, min_s, max_s);
         let mut out = crate::tensor::ITensor::zeros(&[t, d]);
         for i in 0..t {
             for kk in 0..d {
                 let h: i64 = (0..t)
                     .map(|j| {
-                        let vjk = v.at2(j, kk);
-                        let vp = clamp(vjk.max(0));
-                        let vn = clamp(vjk.min(0));
                         let zij = z[i * t + j];
-                        clamp((vp - zij).max(0)) + clamp((vn + zij).min(0))
+                        clamp((vp.at2(j, kk) - zij).max(0)) + clamp((vn.at2(j, kk) + zij).min(0))
                     })
                     .sum();
                 out.data[i * d + kk] = clamp(h);

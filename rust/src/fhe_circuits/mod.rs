@@ -6,10 +6,15 @@
 //! (paper eq. 7) is transcribed verbatim — its redundancy is the
 //! rewriter's to remove. `multihead` fuses H heads of any mechanism
 //! into one combined plan, where the rewrite passes finally work
-//! *across* head boundaries (S6b).
+//! *across* head boundaries (S6b). `block_fhe` completes the picture:
+//! the full transformer block (attention + W_O + residuals + requants +
+//! ReLU FFN) as one plan, stacked over L layers into a single DAG so
+//! the passes also work across *layer* boundaries (S6c).
 
 pub mod attention_fhe;
+pub mod block_fhe;
 pub mod multihead;
 
 pub use attention_fhe::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
+pub use block_fhe::{block_engine_mechanism, BlockFhe, BlockWeights, ModelFhe};
 pub use multihead::{multihead_engine_mechanism, MultiHeadFhe};

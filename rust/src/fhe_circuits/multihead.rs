@@ -37,8 +37,10 @@
 //! is what the differential harness tests encrypted outputs against,
 //! bit for bit.
 
-use super::attention_fhe::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, PlanCache};
-use crate::attention::Mechanism;
+use super::attention_fhe::{
+    CtMatrix, DotProductFhe, HeadValues, InhibitorFhe, InhibitorSignedFhe, PlanCache,
+};
+use crate::attention::{HeadSplit, Mechanism};
 use crate::tensor::ITensor;
 use crate::tfhe::ops::{CtInt, FheContext};
 use crate::tfhe::plan::{CircuitBuilder, CircuitPlan, NodeId};
@@ -122,15 +124,8 @@ impl MultiHeadFhe {
             }
             (qs, ks, vs)
         };
-        let outs: Vec<Vec<NodeId>> = (0..h)
-            .map(|hh| match &self.proto {
-                HeadProto::Inhibitor(head) => head.emit(&mut b, &qs[hh], &ks[hh], &vs[hh], t, d),
-                HeadProto::InhibitorSigned(head) => {
-                    head.emit(&mut b, &qs[hh], &ks[hh], &vs[hh], t, d)
-                }
-                HeadProto::DotProduct(head) => head.emit(&mut b, &qs[hh], &ks[hh], &vs[hh], t, d),
-            })
-            .collect();
+        let values: Vec<HeadValues> = vs.iter().map(|v| HeadValues::Plain(v)).collect();
+        let outs = self.emit(&mut b, &qs, &ks, &values, t, d);
         for i in 0..t {
             for head_out in &outs {
                 for kk in 0..d {
@@ -139,6 +134,45 @@ impl MultiHeadFhe {
             }
         }
         b.build()
+    }
+
+    /// Emit all H heads' subgraphs into a shared builder: `qs`/`ks` are
+    /// per-head `T·d` node segments (the same segment may repeat under a
+    /// shared-KV layout) and `vs` gives each head's value source —
+    /// plain nodes, or pre-split `(v⁺, v⁻)` pairs for the signed
+    /// mechanism (see [`HeadValues`]). Returns the per-head output node
+    /// grids; the caller owns output ordering. Both [`Self::plan`] and
+    /// the block circuit (`super::block_fhe::BlockFhe`) feed through
+    /// here, so the fused multi-head dataflow is defined exactly once.
+    pub(super) fn emit(
+        &self,
+        b: &mut CircuitBuilder,
+        qs: &[Vec<NodeId>],
+        ks: &[Vec<NodeId>],
+        vs: &[HeadValues<'_>],
+        t: usize,
+        d: usize,
+    ) -> Vec<Vec<NodeId>> {
+        assert_eq!(qs.len(), self.n_heads, "one Q segment per head");
+        assert_eq!(ks.len(), self.n_heads, "one K segment per head");
+        assert_eq!(vs.len(), self.n_heads, "one value source per head");
+        (0..self.n_heads)
+            .map(|hh| match (&self.proto, &vs[hh]) {
+                (HeadProto::Inhibitor(head), HeadValues::Plain(v)) => {
+                    head.emit(b, &qs[hh], &ks[hh], v, t, d)
+                }
+                (HeadProto::InhibitorSigned(head), HeadValues::Plain(v)) => {
+                    head.emit(b, &qs[hh], &ks[hh], v, t, d)
+                }
+                (HeadProto::InhibitorSigned(head), HeadValues::PreSplit(pairs)) => {
+                    head.emit_presplit(b, &qs[hh], &ks[hh], pairs, t, d)
+                }
+                (HeadProto::DotProduct(head), HeadValues::Plain(v)) => {
+                    head.emit(b, &qs[hh], &ks[hh], v, t, d)
+                }
+                _ => panic!("pre-split values are only defined for the signed inhibitor"),
+            })
+            .collect()
     }
 
     /// The rewritten, `(T, d, budget)`-cached combined plan `forward()`
@@ -167,23 +201,23 @@ impl MultiHeadFhe {
     ) -> Vec<&'m CtInt> {
         let h = self.n_heads;
         let t = q.rows;
-        assert_eq!(q.cols % h, 0, "q width {} must split into {h} heads", q.cols);
-        let d = q.cols / h;
+        let split = HeadSplit::new(q.cols, h);
+        let d = split.d_head();
         let kv_cols = if self.shared_kv { d } else { h * d };
         assert_eq!((k.rows, k.cols), (t, kv_cols), "k must be [T, {kv_cols}]");
         assert_eq!((v.rows, v.cols), (t, kv_cols), "v must be [T, {kv_cols}]");
         let mut refs = Vec::with_capacity(self.n_plan_inputs(t, d));
         if self.shared_kv {
             for hh in 0..h {
-                push_cols(&mut refs, q, hh * d, d);
+                push_cols(&mut refs, q, split.col0(hh), d);
             }
             push_cols(&mut refs, k, 0, d);
             push_cols(&mut refs, v, 0, d);
         } else {
             for hh in 0..h {
-                push_cols(&mut refs, q, hh * d, d);
-                push_cols(&mut refs, k, hh * d, d);
-                push_cols(&mut refs, v, hh * d, d);
+                push_cols(&mut refs, q, split.col0(hh), d);
+                push_cols(&mut refs, k, split.col0(hh), d);
+                push_cols(&mut refs, v, split.col0(hh), d);
             }
         }
         refs
@@ -212,30 +246,33 @@ impl MultiHeadFhe {
 
     /// Plaintext mirror of the exact integer function the combined
     /// circuit computes (including every LUT clamp): the single-head
-    /// mirror on each column slice, concatenated into `[T, H·d]`.
-    /// `min_s`/`max_s` are the executing encoder's signed bounds.
+    /// mirror on each column slice, concatenated into `[T, H·d]` through
+    /// the shared [`HeadSplit`] slicing helper (the same arithmetic
+    /// `model::Block` uses). `min_s`/`max_s` are the executing encoder's
+    /// signed bounds.
     pub fn mirror(&self, q: &ITensor, k: &ITensor, v: &ITensor, min_s: i64, max_s: i64) -> ITensor {
-        let h = self.n_heads;
-        let (t, dm) = (q.dims()[0], q.dims()[1]);
-        assert_eq!(dm % h, 0, "q width {dm} must split into {h} heads");
-        let d = dm / h;
-        let mut out = ITensor::zeros(&[t, dm]);
-        for hh in 0..h {
-            let qs = q.slice_cols(hh * d, d);
-            let head_out = if self.shared_kv {
-                self.head_mirror(&qs, k, v, min_s, max_s)
-            } else {
-                let ks = k.slice_cols(hh * d, d);
-                let vs = v.slice_cols(hh * d, d);
-                self.head_mirror(&qs, &ks, &vs, min_s, max_s)
-            };
-            for i in 0..t {
-                for kk in 0..d {
-                    out.data[i * dm + hh * d + kk] = head_out.at2(i, kk);
-                }
-            }
+        let split = HeadSplit::new(q.dims()[1], self.n_heads);
+        split.apply(q, k, v, self.shared_kv, |qs, ks, vs| {
+            self.head_mirror(qs, ks, vs, min_s, max_s)
+        })
+    }
+
+    /// One head's mirror over pre-split values — the block circuit's
+    /// per-head reference path (signed mechanism only; see
+    /// [`InhibitorSignedFhe::mirror_presplit`]).
+    pub(super) fn head_mirror_presplit(
+        &self,
+        q: &ITensor,
+        k: &ITensor,
+        vp: &ITensor,
+        vn: &ITensor,
+        min_s: i64,
+        max_s: i64,
+    ) -> ITensor {
+        match &self.proto {
+            HeadProto::InhibitorSigned(head) => head.mirror_presplit(q, k, vp, vn, min_s, max_s),
+            _ => panic!("pre-split mirrors are only defined for the signed inhibitor"),
         }
-        out
     }
 }
 

@@ -48,9 +48,10 @@
 //!   co-scheduled request into one `pbs_batch` submission, filling the
 //!   worker pool at small `T` without changing results or counts.
 //!
-//! See `rust/DESIGN.md` for the system inventory (§4 plan IR, §5 PBS
-//! engine, §6 coordinator fusion) and `BENCH_pbs.json`/`BENCH_plan.json`
-//! for the checked-in perf trajectory records.
+//! See `rust/DESIGN.md` for the system inventory (§4 plan IR, §5 block
+//! subsystem, §6 PBS engine, §7 coordinator fusion) and
+//! `BENCH_pbs.json`/`BENCH_plan.json` for the checked-in perf
+//! trajectory records.
 
 // The integer/FHE kernels are written in explicit index notation to
 // mirror the paper's equations (i, j, k subscripts over T×d heads);

@@ -55,10 +55,13 @@ fn print_help() {
            infer [--mechanism inhibitor] [--seq 16] [--dim 32]\n\
                One-shot quantized inference on random features.\n\
            encrypt-infer [--mechanism inhibitor] [--seq 2] [--bits 5] [--threads N]\n\
-                         [--heads H] [--shared-kv]\n\
+                         [--heads H] [--shared-kv] [--layers L]\n\
                Generate keys, encrypt Q/K/V, run encrypted attention, decrypt.\n\
                --heads > 1 serves an H-head block as ONE fused circuit plan\n\
                (--shared-kv: multi-query layout, one K/V for all heads);\n\
+               --layers >= 1 runs FULL transformer blocks (attention + W_O +\n\
+               residuals + ReLU FFN, demo weights) stacked into one plan —\n\
+               the input is then the residual stream x, not Q/K/V;\n\
                --threads overrides the FHE_THREADS PBS worker count.\n\
            params [--seq 2,4,8,16]\n\
                Run the TFHE parameter optimizer (paper Table 2).\n\
@@ -182,7 +185,7 @@ fn cmd_infer(args: &[String]) -> i32 {
 
 fn cmd_encrypt_infer(args: &[String]) -> i32 {
     use inhibitor::fhe_circuits::{
-        CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, MultiHeadFhe,
+        CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe,
     };
     use inhibitor::tensor::ITensor;
     use inhibitor::tfhe::{bootstrap, ClientKey, FheContext, TfheParams};
@@ -195,13 +198,20 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
     let bits: u32 = flag(args, "--bits", "5").parse().unwrap_or(5);
     let threads: usize = flag(args, "--threads", "0").parse().unwrap_or(0);
     let heads: usize = flag(args, "--heads", "1").parse().unwrap_or(1).max(1);
+    let layers: usize = flag(args, "--layers", "0").parse().unwrap_or(0);
     let shared_kv = has_flag(args, "--shared-kv");
     let dim = 2usize; // per-head width; the paper's encrypted experiments use d=2
     let mut rng = Xoshiro256::new(2024);
     // The signed circuit's V⁺/V⁻ pairs pack into shared blind rotations
     // when the parameter set carries multi-value headroom — give it one.
+    // Stacked signed blocks carry requant+ReLU+split trios, which need
+    // ϑ = 2 to share one rotation per trio.
     let params = if mechanism == Mechanism::InhibitorSigned {
-        TfheParams::test_multi_lut(bits)
+        if layers >= 2 {
+            TfheParams::test_multi_lut_theta(bits, 2)
+        } else {
+            TfheParams::test_multi_lut(bits)
+        }
     } else {
         TfheParams::test_for_bits(bits)
     };
@@ -215,6 +225,55 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
         ctx.set_threads(threads);
     }
     println!("PBS engine: {} worker thread(s)", ctx.threads());
+    if layers >= 1 {
+        // Full transformer blocks stacked into ONE circuit plan: the
+        // input is the residual stream x (demo weights keep every
+        // intermediate inside the demo code range for x ∈ [−1, 1]).
+        let d_model = heads * dim;
+        let model = ModelFhe::demo(
+            mechanism,
+            d_model,
+            heads,
+            layers,
+            shared_kv && heads > 1,
+            d_model,
+            2024,
+        );
+        let x = ITensor::random(&[seq, d_model], -1, 1, &mut rng);
+        println!("encrypting {} ciphertexts (residual stream [T, D])...", seq * d_model);
+        let cx = CtMatrix::encrypt(&x, &ctx, &ck, &mut rng);
+        bootstrap::reset_pbs_count();
+        bootstrap::reset_blind_rotation_count();
+        let t0 = std::time::Instant::now();
+        let h = model.forward(&ctx, &cx);
+        let dt = t0.elapsed();
+        let out = h.decrypt(&ctx, &ck);
+        let mirror = model.mirror(&x, ctx.enc.min_signed(), ctx.enc.max_signed());
+        println!(
+            "mechanism={} T={} d={} heads={heads} layers={layers}{}: {} PBS ({} blind \
+             rotations) in {:.3}s ({:.1} ms/PBS) — one fused {}-level plan",
+            mechanism.name(),
+            seq,
+            dim,
+            if shared_kv && heads > 1 { " shared-kv" } else { "" },
+            bootstrap::pbs_count(),
+            bootstrap::blind_rotation_count(),
+            dt.as_secs_f64(),
+            dt.as_secs_f64() * 1e3 / bootstrap::pbs_count().max(1) as f64,
+            model.plan_for(&ctx, seq).levels(),
+        );
+        println!("decrypted out = {:?}", out.data);
+        if out == mirror {
+            println!("plaintext mirror check: ok");
+        } else {
+            println!(
+                "plaintext mirror check: MISMATCH (expected {:?}) — likely an intermediate \
+                 overflowed {bits} message bits; retry with a larger --bits",
+                mirror.data
+            );
+        }
+        return 0;
+    }
     // Signed inhibition exercises negative values; the other circuits
     // keep the non-negative range their mirrors assume.
     let v_range = if mechanism == Mechanism::InhibitorSigned { (-3, 3) } else { (0, 3) };

@@ -5,7 +5,7 @@
 
 use super::config::{ModelConfig, TaskHead};
 use super::layers::{QEmbedding, QFfn, QLayerNorm, QLinear};
-use crate::attention::{AttentionHead, AttnConfig};
+use crate::attention::{AttentionHead, AttnConfig, HeadSplit};
 use crate::quant::{FixedMult, QParams};
 use crate::tensor::{FTensor, ITensor};
 use crate::util::prng::Xoshiro256;
@@ -38,20 +38,10 @@ impl Block {
         if self.n_heads <= 1 {
             return self.attn.forward(q, k, v);
         }
-        let d_model = q.dims()[1];
-        assert_eq!(d_model % self.n_heads, 0, "dim must split into n_heads");
-        let d = d_model / self.n_heads;
-        let parts: Vec<ITensor> = (0..self.n_heads)
-            .map(|h| {
-                self.attn.forward(
-                    &q.slice_cols(h * d, d),
-                    &k.slice_cols(h * d, d),
-                    &v.slice_cols(h * d, d),
-                )
-            })
-            .collect();
-        let refs: Vec<&ITensor> = parts.iter().collect();
-        ITensor::concat_cols(&refs)
+        // Per-head slicing through the shared HeadSplit helper — the same
+        // arithmetic the fused encrypted plans and the block profiler use.
+        let split = HeadSplit::new(q.dims()[1], self.n_heads);
+        split.apply(q, k, v, false, |qs, ks, vs| self.attn.forward(qs, ks, vs))
     }
 
     pub fn forward(&self, x: &ITensor, act_scale: f32) -> ITensor {

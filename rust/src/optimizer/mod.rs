@@ -7,5 +7,7 @@ pub mod noise;
 pub mod precision;
 pub mod search;
 
-pub use precision::{profile, profile_multihead, CircuitProfile, MultiHeadProfile};
+pub use precision::{
+    profile, profile_block, profile_multihead, BlockProfile, CircuitProfile, MultiHeadProfile,
+};
 pub use search::{optimize, table2, OptimizedParams, SearchConfig, Table2Row};

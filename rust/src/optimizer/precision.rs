@@ -14,7 +14,7 @@
 //! [`CircuitPlan::pbs_count`]: crate::tfhe::plan::CircuitPlan::pbs_count
 //! [`CircuitPlan::linear_op_count`]: crate::tfhe::plan::CircuitPlan::linear_op_count
 
-use crate::attention::Mechanism;
+use crate::attention::{HeadSplit, Mechanism};
 use crate::fhe_circuits::{DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
 use crate::tfhe::plan::{CircuitPlan, PlanRewriter, RewriteConfig};
 
@@ -277,6 +277,111 @@ impl CircuitProfile {
     }
 }
 
+/// Static profile of a fused L-layer transformer-block plan
+/// (`fhe_circuits::ModelFhe`): closed-form LUT-evaluation and
+/// blind-rotation counts at a given packing budget, checked against the
+/// plan's own `pbs_count()`/`blind_rotation_count()` oracles by a unit
+/// test so the formulas can never drift from the IR.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockProfile {
+    pub mechanism: Mechanism,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub ffn_dim: usize,
+    pub shared_kv: bool,
+    /// The packing budget the rotation figure assumes (1 = packing off).
+    pub max_multi_lut: usize,
+    /// LUT evaluations of one forward pass (after the always-safe CSE
+    /// pass — what the serving path executes on any parameter set).
+    pub pbs_count: u64,
+    /// Blind rotations of one forward pass at the given budget.
+    pub blind_rotations: u64,
+    /// PBS execution levels of the stacked plan.
+    pub levels: u64,
+}
+
+/// Closed-form counts of the fused L-layer block plan. Per layer:
+///
+/// * attention per head — the standard closed forms (the signed head's
+///   value splits are emitted once per value by the block builder, so
+///   its per-head body is the CSE'd `3T²d + T² + Td` plus a separate
+///   `2·T·d_kv` split term shared across heads under `shared_kv`);
+/// * dot-product heads attend the residual stream with q = k, so the
+///   eq.-1 sum-half of the (i,j)/(j,i) score products is symmetric and
+///   CSE merges `d·T(T−1)/2` square LUTs per q==k head (every head with
+///   per-head KV; only head 0 under `shared_kv`);
+/// * block tail — W_O requant `T·D`, two residual requants `2·T·D`,
+///   fc2 requant `T·D` and the fused fc1 requant+ReLU `T·F`.
+///
+/// Rotations subtract the packed groups: the layer-0 value-split pairs
+/// (1 rotation saved per value at any budget ≥ 2) and, per stacked
+/// boundary, the requant + ReLU-split + negative-split **trio** on the
+/// previous layer's residual accumulator (1 saved at a budget of 2,
+/// 2 saved — one rotation for all three tables — at ϑ ≥ 2). Both exist
+/// only for the signed mechanism. The forms assume weight matrices with
+/// pairwise-distinct (row, bias) pairs (`BlockWeights::demo` guarantees
+/// it); duplicate rows would CSE further.
+#[allow(clippy::too_many_arguments)]
+pub fn profile_block(
+    mech: Mechanism,
+    seq_len: usize,
+    d_model: usize,
+    n_heads: usize,
+    n_layers: usize,
+    ffn_dim: usize,
+    shared_kv: bool,
+    max_multi_lut: usize,
+) -> BlockProfile {
+    assert!(n_layers >= 1, "a block profile needs at least one layer");
+    let split = HeadSplit::new(d_model, n_heads);
+    let (t, dm, h, f, l) =
+        (seq_len as u64, d_model as u64, n_heads as u64, ffn_dim as u64, n_layers as u64);
+    let d = split.d_head() as u64;
+    let attn_per_head = match mech {
+        Mechanism::Inhibitor => 2 * t * t * d + t * t + t * d,
+        Mechanism::InhibitorSigned => 3 * t * t * d + t * t + t * d,
+        Mechanism::DotProduct => 4 * t * t * d + 3 * t * t + t + t * d,
+    };
+    let vcols = if shared_kv { d } else { dm };
+    let splits = if mech == Mechanism::InhibitorSigned { 2 * t * vcols } else { 0 };
+    let dup = if mech == Mechanism::DotProduct {
+        let merged_heads = if shared_kv { 1 } else { h };
+        merged_heads * d * t * (t - 1) / 2
+    } else {
+        0
+    };
+    let per_layer = h * attn_per_head + splits - dup + 4 * t * dm + t * f;
+    let pbs_count = l * per_layer;
+    let saved = if mech == Mechanism::InhibitorSigned {
+        let nv = t * vcols;
+        let sv_pair: u64 = if max_multi_lut >= 2 { 1 } else { 0 };
+        let sv_trio: u64 = match max_multi_lut {
+            0 | 1 => 0,
+            2 => 1,
+            _ => 2,
+        };
+        nv * sv_pair + (l - 1) * nv * sv_trio
+    } else {
+        0
+    };
+    let per_layer_levels: u64 = if mech == Mechanism::DotProduct { 11 } else { 9 };
+    BlockProfile {
+        mechanism: mech,
+        seq_len,
+        d_model,
+        n_heads,
+        n_layers,
+        ffn_dim,
+        shared_kv,
+        max_multi_lut,
+        pbs_count,
+        blind_rotations: pbs_count - saved,
+        levels: l * per_layer_levels,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -368,6 +473,57 @@ mod tests {
         let disjoint = profile_multihead(Mechanism::InhibitorSigned, t, d, 3, false, 3);
         assert!(fused.blind_rotations_packed < disjoint.blind_rotations_packed);
         assert!(fused.pbs_count < disjoint.pbs_count);
+    }
+
+    #[test]
+    fn block_profile_matches_the_fused_plan_oracles() {
+        // The closed forms must reproduce what the fused L-layer block
+        // plan actually counts after the same rewrite configurations the
+        // other profiles use (CSE for LUT evaluations; CSE + packing at
+        // budgets 1, 2 and 4 for rotations) — for every mechanism, both
+        // KV layouts, one and two layers. Pure DAG analysis, no crypto.
+        use crate::fhe_circuits::ModelFhe;
+        use crate::tfhe::plan::{PlanRewriter, RewriteConfig};
+        for &mech in &[Mechanism::Inhibitor, Mechanism::InhibitorSigned, Mechanism::DotProduct] {
+            for &(heads, layers, t, d, shared) in &[
+                (1usize, 1usize, 2usize, 2usize, false),
+                (2, 1, 3, 2, false),
+                (2, 2, 2, 1, false),
+                (2, 2, 2, 2, true),
+                (1, 2, 2, 2, false),
+            ] {
+                let dm = heads * d;
+                let ffn = 2 * dm;
+                let model = ModelFhe::demo(mech, dm, heads, layers, shared, ffn, 0xB10C7);
+                let tag = format!("{mech:?} H={heads} L={layers} T={t} d={d} shared={shared}");
+                let (cse, _) =
+                    PlanRewriter::new(RewriteConfig::cse_only()).rewrite(model.plan(t));
+                for budget in [1usize, 2, 4] {
+                    let p = profile_block(mech, t, dm, heads, layers, ffn, shared, budget);
+                    assert_eq!(p.pbs_count, cse.pbs_count(), "{tag}: LUT evals");
+                    assert_eq!(p.levels, cse.levels() as u64, "{tag}: levels");
+                    let (packed, _) =
+                        PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: budget })
+                            .rewrite(model.plan(t));
+                    assert_eq!(
+                        p.blind_rotations,
+                        packed.blind_rotation_count(),
+                        "{tag}: rotations at budget {budget}"
+                    );
+                    assert_eq!(packed.pbs_count(), p.pbs_count, "{tag}: packing keeps evals");
+                }
+            }
+        }
+        // The cross-layer win is visible in the profile itself: at ϑ ≥ 2
+        // a stacked signed L=2 plan needs strictly fewer rotations than
+        // at ϑ = 1, by exactly one extra saving per folded trio.
+        let theta1 = profile_block(Mechanism::InhibitorSigned, 2, 4, 2, 2, 4, false, 2);
+        let theta2 = profile_block(Mechanism::InhibitorSigned, 2, 4, 2, 2, 4, false, 4);
+        assert_eq!(theta1.pbs_count, theta2.pbs_count);
+        assert_eq!(
+            theta1.blind_rotations - theta2.blind_rotations,
+            2 * 4, // (L−1) · T · d_model trios, one extra rotation each
+        );
     }
 
     #[test]

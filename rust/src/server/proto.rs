@@ -12,6 +12,13 @@
 //!
 //! Responses:
 //!   {"ok":true,"output":[...],"latency_s":...}  |  {"ok":false,"error":"..."}
+//!
+//! Encrypted results travel as a typed `"result_blob":<id>` field (the
+//! session-store reference), never inside the f32 `output` vector. The
+//! in-process coordinator API carries the id as an exact `u64`; this
+//! JSON layer encodes it as a number, exact up to 2⁵³ — ids past that
+//! (only reachable by deliberately partitioning the id space via
+//! `Session::set_next_blob_id`) are refused loudly rather than rounded.
 
 use crate::util::json::Json;
 
@@ -97,14 +104,34 @@ impl Request {
     }
 }
 
-/// Build a success response line.
-pub fn ok_response(output: &[f32], latency_s: f64) -> String {
-    Json::obj(vec![
+/// Build a success response line. `result_blob` (typed encrypted-result
+/// reference) is included only when present. Ids beyond the JSON-number
+/// exact range (2⁵³) become an error line instead of silently rounding
+/// to a neighboring blob — defensive future-proofing: today's TCP
+/// request path is features-only and never produces encrypted results
+/// (the in-process coordinator API, which the encrypted clients use,
+/// carries the id as an exact `u64`), and a sequential id counter can
+/// only pass 2⁵³ if an operator deliberately partitions the id space
+/// with `Session::set_next_blob_id`. Known limitation if that ever
+/// combines with encrypted-over-TCP serving: by the time this line is
+/// built the engine has already registered the result bundle, so the
+/// error leaves it in the session store — such a protocol must free or
+/// re-expose it through a session-level API, not this response line.
+pub fn ok_response(output: &[f32], result_blob: Option<u64>, latency_s: f64) -> String {
+    let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("output", Json::arr(output.iter().map(|&f| Json::num(f as f64)).collect())),
-        ("latency_s", Json::num(latency_s)),
-    ])
-    .to_string()
+    ];
+    if let Some(id) = result_blob {
+        if id >= (1u64 << 53) {
+            return err_response(&format!(
+                "result blob id {id} exceeds the JSON-number exact range"
+            ));
+        }
+        fields.push(("result_blob", Json::num(id as f64)));
+    }
+    fields.push(("latency_s", Json::num(latency_s)));
+    Json::obj(fields).to_string()
 }
 
 /// Build an error response line.
@@ -154,11 +181,23 @@ mod tests {
     #[test]
     fn responses_are_valid_json() {
         for s in [
-            ok_response(&[1.0, -2.5], 0.01),
+            ok_response(&[1.0, -2.5], None, 0.01),
+            ok_response(&[], Some((1u64 << 24) + 7), 0.01),
             err_response("boom"),
             text_response("a\nb"),
         ] {
             crate::util::json::Json::parse(&s).unwrap();
         }
+        let with_ref = ok_response(&[], Some(42), 0.5);
+        let j = crate::util::json::Json::parse(&with_ref).unwrap();
+        assert_eq!(j.get("result_blob").and_then(|v| v.as_i64()), Some(42));
+        let without = ok_response(&[1.0], None, 0.5);
+        let j = crate::util::json::Json::parse(&without).unwrap();
+        assert!(j.get("result_blob").is_none(), "absent unless encrypted");
+        // Past the JSON-number exact range the encoder refuses loudly
+        // instead of rounding to a neighboring blob id.
+        let too_big = ok_response(&[], Some(1u64 << 53), 0.5);
+        let j = crate::util::json::Json::parse(&too_big).unwrap();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
     }
 }

@@ -83,7 +83,7 @@ fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<Atomi
                     Duration::from_secs(60),
                 ) {
                     Ok(resp) => match resp.error {
-                        None => ok_response(&resp.output, resp.latency_s),
+                        None => ok_response(&resp.output, resp.result_blob, resp.latency_s),
                         Some(e) => err_response(&e),
                     },
                     Err(e) => err_response(&e),

@@ -697,6 +697,37 @@ mod tests {
     }
 
     #[test]
+    fn pbs_multi_decodes_three_lut_packs_at_theta2() {
+        // ϑ = 2 set: stride-4 packing (three tables rounded up to four
+        // sub-slots). The polynomial is scaled by 2^ϑ, so the coarser
+        // mod-switch keeps the ϑ = 1 σ-margin — packed reads of a
+        // requant + relu + min0-shaped trio must decode exactly.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let mut rng = Xoshiro256::new(0x317D);
+        let params = TfheParams::test_multi_lut_theta(3, 2);
+        let ck = ClientKey::generate(params, &mut rng);
+        let sk = ck.server_key(&mut rng);
+        let enc = Encoder::new(params);
+        let space = params.message_space();
+        let lut_a = Lut::from_fn(&params, |m| (m + 1) % space);
+        let lut_b = Lut::from_fn(&params, |m| (m * m) % space);
+        let lut_c = Lut::from_fn(&params, |m| (space - 1) - m);
+        let mlut = sk.prepare_multi_lut(&[&lut_a, &lut_b, &lut_c]);
+        assert_eq!(mlut.n_luts(), 3);
+        for m in 0..space {
+            let ct = enc.encrypt_raw(m, &ck, &mut rng);
+            let before_pbs = pbs_count();
+            let before_rot = blind_rotation_count();
+            let outs = sk.pbs_multi(&ct, &mlut);
+            assert_eq!(pbs_count() - before_pbs, 3, "three LUT evaluations at m={m}");
+            assert_eq!(blind_rotation_count() - before_rot, 1, "one rotation at m={m}");
+            assert_eq!(enc.decrypt_raw(&outs[0], &ck), (m + 1) % space, "lut_a at m={m}");
+            assert_eq!(enc.decrypt_raw(&outs[1], &ck), (m * m) % space, "lut_b at m={m}");
+            assert_eq!(enc.decrypt_raw(&outs[2], &ck), (space - 1) - m, "lut_c at m={m}");
+        }
+    }
+
+    #[test]
     fn prepare_multi_lut_rejects_packs_beyond_the_budget() {
         let mut rng = Xoshiro256::new(0x317B);
         // test_multi_lut(3) advertises ϑ = 1: pairs pack, triples must be

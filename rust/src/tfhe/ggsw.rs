@@ -122,7 +122,7 @@ pub struct GgswFourier {
 /// Reusable scratch buffers for external products / CMux chains (one per
 /// PBS call; shared across all `n` CMux of a blind rotation). Eliminates
 /// every per-CMux heap allocation on the hot path — see rust/DESIGN.md
-/// §5.
+/// §6.
 pub struct ExtScratch {
     /// Spectrum of one decomposed digit polynomial.
     spec: Vec<C64>,

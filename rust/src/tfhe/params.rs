@@ -155,10 +155,22 @@ impl TfheParams {
     /// test grids (`rewrite_it`, `pbs_multi` unit tests) pin the
     /// comfortable ≤ 4-bit sets.
     pub fn test_multi_lut(message_bits: u32) -> Self {
+        Self::test_multi_lut_theta(message_bits, 1)
+    }
+
+    /// Generalization of [`Self::test_multi_lut`] to an arbitrary
+    /// multi-value budget ϑ: the polynomial size scales by `2^ϑ`, buying
+    /// exactly the ϑ bits of mod-switch margin the coarser rounding of a
+    /// `2^ϑ`-way packed accumulator consumes — the σ-margin argument of
+    /// the ϑ = 1 set applies bit-for-bit per doubling. ϑ = 2 is the set
+    /// the block-circuit tests use to execute requant + ReLU + split
+    /// groups of three distinct tables in one blind rotation.
+    pub fn test_multi_lut_theta(message_bits: u32, theta: u32) -> Self {
+        assert!(theta >= 1, "a multi-value test set needs ϑ ≥ 1");
         let mut p = Self::test_for_bits(message_bits);
-        p.poly_size *= 2;
+        p.poly_size <<= theta;
         p.ks_decomp = DecompParams::new(4, 6);
-        p.many_lut_log = 1;
+        p.many_lut_log = theta;
         p
     }
 
@@ -235,6 +247,18 @@ mod tests {
             assert_eq!(p.poly_size, 2 * TfheParams::test_for_bits(bits).poly_size);
         }
         assert_eq!(TfheParams::test_small().max_multi_lut(), 1, "default: packing off");
+    }
+
+    #[test]
+    fn theta2_sets_validate_and_advertise_groups_of_four() {
+        for bits in 3..=5 {
+            let p = TfheParams::test_multi_lut_theta(bits, 2);
+            p.validate().unwrap_or_else(|e| panic!("bits={bits}: {e}"));
+            assert_eq!(p.max_multi_lut(), 4);
+            assert_eq!(p.poly_size, 4 * TfheParams::test_for_bits(bits).poly_size);
+        }
+        // ϑ = 1 must stay exactly the historical test_multi_lut set.
+        assert_eq!(TfheParams::test_multi_lut_theta(4, 1), TfheParams::test_multi_lut(4));
     }
 
     #[test]

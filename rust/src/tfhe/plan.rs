@@ -59,6 +59,7 @@
 
 use super::bootstrap::{BatchJob, PreparedLut, PreparedMultiLut};
 use super::ops::{CtInt, FheContext};
+use crate::quant::FixedMult;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -116,6 +117,22 @@ pub struct CircuitBuilder {
     /// multi-head plan) deduplicate across each other exactly when they
     /// reference the same registered table.
     std_luts: [Option<LutRef>; 5],
+    /// Requantization tables, keyed by the exact fixed-point factor (and
+    /// its fused post-function) — the same register-once mechanism the
+    /// std tables use, extended to a keyed family: every layer of a
+    /// stacked block plan that requants by the same factor references
+    /// the *same* `LutRef`, so CSE/packing see cross-layer requants as
+    /// one table rather than per-layer clones.
+    requant_luts: HashMap<(i64, u32, RequantKind), LutRef>,
+}
+
+/// Post-function fused into a requant table (see
+/// [`CircuitBuilder::requant_relu`] / [`CircuitBuilder::requant_min0`]).
+#[derive(Clone, Copy, Debug, Hash, PartialEq, Eq)]
+enum RequantKind {
+    Plain,
+    Relu,
+    Min0,
 }
 
 /// Indices into `CircuitBuilder::std_luts`.
@@ -133,6 +150,7 @@ impl CircuitBuilder {
             n_inputs: 0,
             outputs: Vec::new(),
             std_luts: [None; 5],
+            requant_luts: HashMap::new(),
         }
     }
 
@@ -256,6 +274,53 @@ impl CircuitBuilder {
     /// Identity noise refresh (1 PBS).
     pub fn refresh(&mut self, x: NodeId) -> NodeId {
         let lut = self.std_lut(STD_ID, |v| v);
+        self.pbs(x, lut)
+    }
+
+    /// Register-once lookup of a requant table for `(m, kind)`.
+    fn requant_lut(&mut self, m: FixedMult, kind: RequantKind) -> LutRef {
+        let key = (m.mult, m.shift, kind);
+        if let Some(&hit) = self.requant_luts.get(&key) {
+            return hit;
+        }
+        let lut = match kind {
+            RequantKind::Plain => self.lut(move |x| m.apply(x)),
+            RequantKind::Relu => self.lut(move |x| m.apply(x).max(0)),
+            RequantKind::Min0 => self.lut(move |x| m.apply(x).min(0)),
+        };
+        self.requant_luts.insert(key, lut);
+        lut
+    }
+
+    /// Fixed-point requantization `x ↦ round(x·m)` (1 PBS) — the
+    /// accumulator→activation rescale of quantized linear layers
+    /// ([`crate::quant::FixedMult::apply`], bit-identical to the
+    /// plaintext model's requant). Tables are registered once per
+    /// distinct factor, so identical requants across the layers of one
+    /// plan share a `LutRef`.
+    pub fn requant(&mut self, x: NodeId, m: FixedMult) -> NodeId {
+        let lut = self.requant_lut(m, RequantKind::Plain);
+        self.pbs(x, lut)
+    }
+
+    /// Fused `relu(round(x·m))` (1 PBS): the requant + ReLU of an FFN
+    /// hidden layer in one table, and the positive half of a
+    /// requant-folded signed value split. Evaluating the composition in
+    /// one bootstrap instead of two both halves the depth and puts the
+    /// split on the *accumulator* node — the same input the plain
+    /// requant reads — which is what lets the packing pass fuse
+    /// requant + ReLU + negative-split groups of three distinct tables
+    /// into one blind rotation at a ϑ ≥ 2 budget.
+    pub fn requant_relu(&mut self, x: NodeId, m: FixedMult) -> NodeId {
+        let lut = self.requant_lut(m, RequantKind::Relu);
+        self.pbs(x, lut)
+    }
+
+    /// Fused `min(round(x·m), 0)` (1 PBS): the negative half of a
+    /// requant-folded signed value split (see
+    /// [`CircuitBuilder::requant_relu`]).
+    pub fn requant_min0(&mut self, x: NodeId, m: FixedMult) -> NodeId {
+        let lut = self.requant_lut(m, RequantKind::Min0);
         self.pbs(x, lut)
     }
 
@@ -405,6 +470,20 @@ impl CircuitPlan {
     /// Number of PBS execution levels (batched rounds).
     pub fn levels(&self) -> usize {
         self.max_level
+    }
+
+    /// Sizes of the packed multi-value groups in this plan (one entry
+    /// per `MultiPbs` node, in node order); empty on unpacked plans.
+    /// Tests use this to assert that a ϑ ≥ 2 budget actually formed a
+    /// group of ≥ 3 distinct tables on one input.
+    pub fn multi_group_sizes(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::MultiPbs { luts, .. } => Some(luts.len()),
+                _ => None,
+            })
+            .collect()
     }
 
     /// Bootstrap jobs per level (one per `Pbs` or `MultiPbs` node),
@@ -1388,6 +1467,57 @@ mod tests {
         assert_eq!(twice.pbs_count(), pbs1);
         assert_eq!(twice.blind_rotation_count(), rot1);
         assert_eq!(twice.linear_op_count(), lin1);
+    }
+
+    #[test]
+    fn requant_tables_are_registered_once_per_factor_and_kind() {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(2);
+        let m = FixedMult::from_f64(0.5);
+        let r1 = b.requant(ins[0], m);
+        let r2 = b.requant(ins[1], m); // same factor → same table
+        let rr = b.requant_relu(ins[0], m); // same factor, fused relu → distinct table
+        let m2 = FixedMult::from_f64(0.25);
+        let r3 = b.requant(ins[0], m2); // different factor → distinct table
+        let s = b.sum(&[r1, r2, rr, r3]);
+        b.output(s);
+        let p = b.build();
+        assert_eq!(p.pbs_count(), 4);
+        assert!(p.multi_group_sizes().is_empty(), "no packed nodes before rewriting");
+        // ins[0] feeds three *distinct* registered tables → one packable
+        // group of 3 at a ϑ ≥ 2 budget; the same-table requants on
+        // different inputs must NOT merge.
+        let (packed, stats) =
+            PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 4 }).rewrite(p);
+        assert_eq!(stats.cse_merged, 0, "distinct inputs/tables: nothing to merge");
+        assert_eq!(stats.multi_groups, 1);
+        assert_eq!(stats.packed_luts, 3);
+        assert_eq!(packed.multi_group_sizes(), vec![3]);
+        assert_eq!(packed.pbs_count(), 4, "packing keeps LUT evaluations");
+        assert_eq!(packed.blind_rotation_count(), 2, "group of 3 + the ins[1] singleton");
+    }
+
+    #[test]
+    fn requant_pbs_matches_fixed_mult_apply_bit_for_bit() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup(); // 4-bit signed range [−8, 7]
+        let m = FixedMult::from_f64(0.5);
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(1);
+        let r = b.requant(ins[0], m);
+        let rr = b.requant_relu(ins[0], m);
+        let rn = b.requant_min0(ins[0], m);
+        b.output(r);
+        b.output(rr);
+        b.output(rn);
+        let p = b.build();
+        for v in [-8i64, -3, -1, 0, 1, 2, 7] {
+            let x = ctx.encrypt(v, &ck, &mut rng);
+            let outs = p.execute(&ctx, &[x]);
+            assert_eq!(ctx.decrypt(&outs[0], &ck), m.apply(v), "requant({v})");
+            assert_eq!(ctx.decrypt(&outs[1], &ck), m.apply(v).max(0), "requant_relu({v})");
+            assert_eq!(ctx.decrypt(&outs[2], &ck), m.apply(v).min(0), "requant_min0({v})");
+        }
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Differential test harness for the encrypted transformer **block**
+//! subsystem (`fhe_circuits::BlockFhe` / `ModelFhe`).
+//!
+//! * **Differential grid**: over mechanism × heads ∈ {1, 2} × layers ∈
+//!   {1, 2} (plus shared-KV points), the fused L-layer encrypted plan
+//!   must decode **bit-identical** to the plaintext reference — both
+//!   `ModelFhe::mirror` and a stack of genuine `model::Block` layer
+//!   objects (`QLinear`/`QFfn` forwards + the multi-head attention
+//!   mirror) built from the same weights — with rewrites off (raw
+//!   builder plan) *and* on (full pipeline), at 1 and 4 PBS worker
+//!   threads, with every `PBS_COUNT`/`BLIND_ROTATION_COUNT` delta
+//!   matching the executed plan's own prediction and the rewritten
+//!   plan's counts matching `optimizer::precision::profile_block`'s
+//!   closed forms. `forward()` (cached `plan_for`, honors
+//!   `FHE_NO_REWRITE`) is exercised on every point, so the CI no-rewrite
+//!   leg drives the unrewritten block pipeline end to end here.
+//! * **Cross-layer rewrite win**: the stacked L = 2 signed plan vs two
+//!   separately-rewritten single-block plans — LUT evaluations pinned
+//!   equal, blind rotations pinned equal at ϑ = 1 and exactly `T·d_kv`
+//!   lower for the stacked plan at ϑ ≥ 2 (the requant + ReLU + split
+//!   trios on the layer boundary), including a packed-group-of-3
+//!   assertion under the `test_multi_lut_theta(·, 2)` parameter set.
+//! * **ϑ = 2 end to end**: a real forward on the ϑ = 2 keyset executes
+//!   the trios in genuinely packed rotations and still decodes exactly.
+//! * **Serving**: co-scheduled block requests ride the router's fused
+//!   level executor through `Coordinator::add_fhe_block_engine`, come
+//!   back bit-identical to solo plan execution, and return their
+//!   encrypted results as typed `result_blob` references.
+//!
+//! Counters are process-global and libtest runs tests on parallel
+//! threads, so every test serializes through one lock.
+
+use inhibitor::attention::Mechanism;
+use inhibitor::coordinator::{BatchPolicy, Coordinator, EnginePath, Payload, RoutePolicy};
+use inhibitor::fhe_circuits::{CtMatrix, ModelFhe};
+use inhibitor::model::transformer::Block;
+use inhibitor::optimizer::profile_block;
+use inhibitor::tensor::ITensor;
+use inhibitor::tfhe::ops::CtInt;
+use inhibitor::tfhe::{
+    bootstrap, rewrites_disabled, ClientKey, FheContext, PlanRewriter, RewriteConfig, TfheParams,
+};
+use inhibitor::util::prng::Xoshiro256;
+use std::sync::Mutex;
+use std::time::Duration;
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One differential grid point: a demo-weight model on random x ∈
+/// [−1, 1] (every linear intermediate provably fits the keyset's signed
+/// code range, so mirror equality is exact), executed through the raw
+/// plan, the fully-rewritten plan, and `forward()`, at 1 and 4 worker
+/// threads, with plan-predicted counter deltas and closed-form pins.
+#[allow(clippy::too_many_arguments)]
+fn check_point(
+    ctx: &FheContext,
+    ck: &ClientKey,
+    rng: &mut Xoshiro256,
+    mech: Mechanism,
+    heads: usize,
+    layers: usize,
+    t: usize,
+    d: usize,
+    shared_kv: bool,
+) {
+    let tag = format!("{mech:?} H={heads} L={layers} T={t} d={d} shared={shared_kv}");
+    let dm = heads * d;
+    let model = ModelFhe::demo(mech, dm, heads, layers, shared_kv, dm, 0xB10C + layers as u64);
+    let x = ITensor::random(&[t, dm], -1, 1, rng);
+    let cx = CtMatrix::encrypt(&x, ctx, ck, rng);
+    let (min_s, max_s) = (ctx.enc.min_signed(), ctx.enc.max_signed());
+    let want = model.mirror(&x, min_s, max_s);
+    // The plaintext QTransformer-side stack must agree with the mirror
+    // bit for bit (the acceptance bar's reference). The bridge has one
+    // definition each way: `BlockWeights::to_model_block` for the
+    // layers, `ModelFhe::reference_stack` for the dataflow.
+    let blocks: Vec<Block> =
+        model.blocks.iter().map(|b| b.weights.to_model_block(mech, heads)).collect();
+    let stack = model.reference_stack(&blocks, &x, min_s, max_s);
+    assert_eq!(want, stack, "{tag}: ModelFhe::mirror vs model::Block stack");
+    // Plans + closed forms: the rewritten plan's counts must equal
+    // profile_block at the executing budget (and the raw plan is already
+    // duplicate-free for the inhibitors).
+    let raw = model.plan(t);
+    let (rewritten, _) = PlanRewriter::for_ctx(ctx).rewrite(model.plan(t));
+    let prof = profile_block(mech, t, dm, heads, layers, dm, shared_kv, ctx.max_multi_lut());
+    assert_eq!(rewritten.pbs_count(), prof.pbs_count, "{tag}: closed-form LUT evals");
+    assert_eq!(
+        rewritten.blind_rotation_count(),
+        prof.blind_rotations,
+        "{tag}: closed-form rotations"
+    );
+    assert_eq!(rewritten.levels() as u64, prof.levels, "{tag}: closed-form levels");
+    if mech != Mechanism::DotProduct {
+        assert_eq!(raw.pbs_count(), prof.pbs_count, "{tag}: raw emission is duplicate-free");
+    }
+    let refs = model.input_refs(&cx);
+    for threads in [1usize, 4] {
+        ctx.set_threads(threads);
+        for (label, plan) in [("raw", &raw), ("rewritten", &rewritten)] {
+            let before_pbs = bootstrap::pbs_count();
+            let before_rot = bootstrap::blind_rotation_count();
+            let outs = plan.execute_ref(ctx, &refs);
+            assert_eq!(
+                bootstrap::pbs_count() - before_pbs,
+                plan.pbs_count(),
+                "{tag} {label} threads={threads}: PBS delta"
+            );
+            assert_eq!(
+                bootstrap::blind_rotation_count() - before_rot,
+                plan.blind_rotation_count(),
+                "{tag} {label} threads={threads}: rotation delta"
+            );
+            let got: Vec<i64> = outs.iter().map(|c| ctx.decrypt(c, ck)).collect();
+            assert_eq!(got, want.data, "{tag} {label} threads={threads}: mirror equality");
+        }
+        // The serving path: cached plan_for (honors FHE_NO_REWRITE, so
+        // the CI matrix leg drives the unrewritten pipeline through
+        // here) — same decode either way.
+        let fwd = model.forward(ctx, &cx);
+        assert_eq!((fwd.rows, fwd.cols), (t, dm), "{tag}: forward shape");
+        assert_eq!(fwd.decrypt(ctx, ck), want, "{tag} forward threads={threads}");
+    }
+}
+
+#[test]
+fn block_inhibitor_matches_plaintext_reference_over_grid() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xB70C01);
+    // 5-bit signed range [−16, 15]: demo weights on x ∈ [−1, 1] keep
+    // every linear intermediate within it for T ≤ 3, L ≤ 2.
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    for &(heads, layers, t, d, shared) in &[
+        (1usize, 1usize, 2usize, 2usize, false),
+        (2, 1, 3, 1, false),
+        (1, 2, 2, 2, false),
+        (2, 2, 2, 1, false),
+        (2, 1, 2, 2, true),
+    ] {
+        check_point(&ctx, &ck, &mut rng, Mechanism::Inhibitor, heads, layers, t, d, shared);
+    }
+}
+
+#[test]
+fn block_signed_inhibitor_matches_plaintext_reference_over_grid() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xB70C02);
+    // Packing-capable keyset (ϑ = 1 at 5 bits): the layer-0 split pairs
+    // and the boundary trios execute genuinely packed rotations.
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    assert_eq!(ctx.max_multi_lut(), 2);
+    for &(heads, layers, t, d, shared) in &[
+        (1usize, 1usize, 2usize, 2usize, false),
+        (1, 2, 2, 2, false),
+        (2, 1, 2, 1, false),
+        (2, 2, 2, 1, false),
+        (2, 1, 2, 2, true),
+    ] {
+        check_point(
+            &ctx,
+            &ck,
+            &mut rng,
+            Mechanism::InhibitorSigned,
+            heads,
+            layers,
+            t,
+            d,
+            shared,
+        );
+    }
+}
+
+#[test]
+fn block_dotprod_matches_plaintext_reference_over_grid() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xB70C03);
+    // 6-bit range [−32, 31]: covers the exp/probability codes and every
+    // square-LUT operand of both layers on demo-weight ranges.
+    let ck = ClientKey::generate(TfheParams::test_for_bits(6), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    for &(heads, layers, t, d, shared) in &[
+        (1usize, 1usize, 2usize, 2usize, false),
+        (1, 2, 2, 2, false),
+        (2, 1, 2, 1, false),
+        (2, 2, 2, 1, false),
+        (2, 1, 2, 2, true),
+    ] {
+        check_point(&ctx, &ck, &mut rng, Mechanism::DotProduct, heads, layers, t, d, shared);
+    }
+}
+
+#[test]
+fn stacked_plan_beats_two_separate_block_plans_at_theta2() {
+    // The cross-layer analogue of PR 4's (H−1)·T·d pin — pure DAG
+    // analysis. LUT evaluations are identical either way (folding moves
+    // tables, never adds them); at ϑ = 1 the rotations tie (pairs pack
+    // in both shapes); at ϑ ≥ 2 the stacked plan wins exactly the
+    // boundary trios: (L−1)·T·d_kv fewer blind rotations.
+    let _g = lock();
+    for &(heads, t, d, shared) in
+        &[(1usize, 2usize, 2usize, false), (2, 2, 1, false), (2, 2, 2, true), (2, 3, 2, false)]
+    {
+        let dm = heads * d;
+        let layers = 2usize;
+        let model = ModelFhe::demo(Mechanism::InhibitorSigned, dm, heads, layers, shared, dm, 7);
+        let single_a = ModelFhe::new(vec![model.blocks[0].clone()]);
+        let single_b = ModelFhe::new(vec![model.blocks[1].clone()]);
+        let vcols = if shared { d } else { dm };
+        let nv = (t * vcols) as u64;
+        let tag = format!("H={heads} T={t} d={d} shared={shared}");
+        for budget in [2usize, 4] {
+            let rewriter = PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: budget });
+            let (fused, _) = rewriter.rewrite(model.plan(t));
+            let (sa, _) = rewriter.rewrite(single_a.plan(t));
+            let (sb, _) = rewriter.rewrite(single_b.plan(t));
+            let sep_luts = sa.pbs_count() + sb.pbs_count();
+            let sep_rot = sa.blind_rotation_count() + sb.blind_rotation_count();
+            assert_eq!(fused.pbs_count(), sep_luts, "{tag} budget={budget}: LUT evals tie");
+            if budget >= 4 {
+                assert_eq!(
+                    sep_rot - fused.blind_rotation_count(),
+                    nv,
+                    "{tag}: the ϑ ≥ 2 win is exactly the boundary trios"
+                );
+                // The trio groups exist as genuine 3-member MultiPbs
+                // nodes — the first ≥ 3-distinct-LUTs-per-input packs
+                // the IR has ever formed.
+                let sizes = fused.multi_group_sizes();
+                assert_eq!(
+                    sizes.iter().filter(|&&s| s == 3).count() as u64,
+                    nv,
+                    "{tag}: one trio per boundary value element"
+                );
+                assert!(sa.multi_group_sizes().iter().all(|&s| s == 2), "{tag}: solo plans pair");
+            } else {
+                assert_eq!(
+                    fused.blind_rotation_count(),
+                    sep_rot,
+                    "{tag}: ϑ = 1 cannot see past the pairwise packing"
+                );
+            }
+            // Closed forms agree with the profiles at both budgets.
+            let prof =
+                profile_block(Mechanism::InhibitorSigned, t, dm, heads, 2, dm, shared, budget);
+            assert_eq!(fused.pbs_count(), prof.pbs_count, "{tag} budget={budget}");
+            assert_eq!(fused.blind_rotation_count(), prof.blind_rotations, "{tag} {budget}");
+        }
+    }
+}
+
+#[test]
+fn theta2_forward_executes_packed_trios_and_decodes_exactly() {
+    // Real crypto on the ϑ = 2 keyset: the L = 2 signed stack executes
+    // its requant + ReLU + split trios in one rotation each, counters
+    // match the executed plan (and, with rewrites enabled, the ϑ = 2
+    // closed forms), and the decode is bit-identical to the plaintext
+    // reference.
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xB70C04);
+    let ck = ClientKey::generate(TfheParams::test_multi_lut_theta(5, 2), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    assert_eq!(ctx.max_multi_lut(), 4);
+    let (heads, layers, t, d) = (1usize, 2usize, 2usize, 2usize);
+    let dm = heads * d;
+    let model = ModelFhe::demo(Mechanism::InhibitorSigned, dm, heads, layers, false, dm, 11);
+    let x = ITensor::random(&[t, dm], -1, 1, &mut rng);
+    let cx = CtMatrix::encrypt(&x, &ctx, &ck, &mut rng);
+    let want = model.mirror(&x, ctx.enc.min_signed(), ctx.enc.max_signed());
+    // The plan forward() will execute (rewritten unless the CI
+    // no-rewrite leg is driving): its own counts are the prediction.
+    let plan = model.plan_for(&ctx, t);
+    let before_pbs = bootstrap::pbs_count();
+    let before_rot = bootstrap::blind_rotation_count();
+    let fwd = model.forward(&ctx, &cx);
+    assert_eq!(bootstrap::pbs_count() - before_pbs, plan.pbs_count(), "PBS delta");
+    assert_eq!(
+        bootstrap::blind_rotation_count() - before_rot,
+        plan.blind_rotation_count(),
+        "rotation delta"
+    );
+    assert_eq!(fwd.decrypt(&ctx, &ck), want, "ϑ = 2 packed execution decodes exactly");
+    if !rewrites_disabled() {
+        // With the pipeline on, the executed plan IS the ϑ = 2 form:
+        // groups of 3 on the layer boundary, closed-form counts.
+        let prof = profile_block(Mechanism::InhibitorSigned, t, dm, heads, layers, dm, false, 4);
+        assert_eq!(plan.pbs_count(), prof.pbs_count, "ϑ = 2 closed-form LUT evals");
+        assert_eq!(plan.blind_rotation_count(), prof.blind_rotations, "ϑ = 2 rotations");
+        assert!(
+            plan.multi_group_sizes().iter().any(|&s| s >= 3),
+            "the executed plan must carry a packed group of ≥ 3 LUTs"
+        );
+    }
+}
+
+#[test]
+fn block_engine_serves_coscheduled_requests_through_fusion() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xB70C05);
+    let (heads, layers, t, d) = (1usize, 2usize, 2usize, 2usize);
+    let dm = heads * d;
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let mut coord = Coordinator::new(RoutePolicy::PreferQuant);
+    let session = coord.keymgr.create_session(ctx);
+    let model = ModelFhe::demo(Mechanism::Inhibitor, dm, heads, layers, false, dm, 5);
+    let n_req = 2usize;
+    coord
+        .add_fhe_block_engine(
+            session,
+            model.clone(),
+            t,
+            BatchPolicy { max_batch: n_req, max_wait: Duration::from_secs(2), queue_cap: 64 },
+        )
+        .unwrap();
+    let sess = coord.keymgr.session(session).unwrap();
+    // The engine resolves the same cached-plan construction on its own
+    // worker (the clone shares the model's plan cache); PBS is
+    // deterministic, so solo executions of this plan are the reference.
+    let plan = model.plan_for(&sess.ctx, t);
+    let mut tensors = Vec::with_capacity(n_req);
+    let mut bundles: Vec<Vec<CtInt>> = Vec::with_capacity(n_req);
+    for _ in 0..n_req {
+        let x = ITensor::random(&[t, dm], -1, 1, &mut rng);
+        let cx = CtMatrix::encrypt(&x, &sess.ctx, &ck, &mut rng);
+        // Wire layout = plan-input layout, defined once by input_refs.
+        bundles.push(model.input_refs(&cx).into_iter().cloned().collect());
+        tensors.push(x);
+    }
+    let solo: Vec<Vec<CtInt>> = bundles.iter().map(|b| plan.execute(&sess.ctx, b)).collect();
+    let path = EnginePath::Encrypted { session, mechanism: model.engine_mechanism() };
+    let rxs: Vec<_> = bundles
+        .iter()
+        .map(|b| {
+            let blob = sess.register(b.clone());
+            coord.submit(path.clone(), Payload::CiphertextRef(blob)).unwrap()
+        })
+        .collect();
+    let resps: Vec<_> =
+        rxs.into_iter().map(|rx| rx.recv_timeout(Duration::from_secs(600)).unwrap()).collect();
+    for resp in &resps {
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    // Both requests rode ONE fused batch: one fused submission per plan
+    // level of the whole L-layer stack.
+    let m = coord.metrics();
+    assert_eq!(
+        m.fused_levels.load(std::sync::atomic::Ordering::Relaxed),
+        plan.levels() as u64,
+        "co-scheduled block requests must fuse at level granularity"
+    );
+    for (r, resp) in resps.iter().enumerate() {
+        let blob = resp.result_blob.expect("typed result reference");
+        assert!(resp.output.is_empty(), "blob ids must not ride the f32 vector");
+        let cts = sess.take(blob).unwrap();
+        assert_eq!(cts.len(), t * dm);
+        for (i, (got, want)) in cts.iter().zip(&solo[r]).enumerate() {
+            assert_eq!(got.ct, want.ct, "request {r} output {i}: fused == solo");
+        }
+        let mirror =
+            model.mirror(&tensors[r], sess.ctx.enc.min_signed(), sess.ctx.enc.max_signed());
+        let got: Vec<i64> = cts.iter().map(|c| sess.ctx.decrypt(c, &ck)).collect();
+        assert_eq!(got, mirror.data, "request {r}: plaintext block-stack reference");
+    }
+    assert_eq!(model.plan_builds(), 1, "reference plan built once from the shared cache");
+}
+
+#[test]
+fn block_plan_cache_builds_once_across_forwards_and_clones() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xB70C06);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let (t, dm) = (2usize, 2usize);
+    let model = ModelFhe::demo(Mechanism::Inhibitor, dm, 1, 1, false, dm, 9);
+    let x = ITensor::random(&[t, dm], -1, 1, &mut rng);
+    let cx = CtMatrix::encrypt(&x, &ctx, &ck, &mut rng);
+    assert_eq!(model.plan_builds(), 0);
+    let first = model.forward(&ctx, &cx);
+    let second = model.forward(&ctx, &cx);
+    assert_eq!(model.plan_builds(), 1, "repeated forwards reuse the cached stacked plan");
+    let clone = model.clone();
+    let third = clone.forward(&ctx, &cx);
+    assert_eq!(clone.plan_builds(), 1, "clones share the cache");
+    for (a, b) in first.data.iter().zip(second.data.iter()) {
+        assert_eq!(a.ct, b.ct, "cached plan must not change results");
+    }
+    for (a, b) in first.data.iter().zip(third.data.iter()) {
+        assert_eq!(a.ct, b.ct);
+    }
+}

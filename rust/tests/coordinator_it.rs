@@ -110,9 +110,13 @@ fn encrypted_path_through_coordinator() {
     let session = c.keymgr.create_session(ctx);
     c.add_fhe_engine(session, "inhibitor", 2, 2, BatchPolicy::default()).unwrap();
     let sess = c.keymgr.session(session).unwrap();
+    // Drive blob ids past the retired f32-exact 2^24 protocol limit: the
+    // typed result reference must round-trip exactly regardless.
+    sess.set_next_blob_id((1u64 << 24) + 5);
     let vals = [1i64, -1, 0, 2, 1, 1, -2, 0, 3, 1, 2, 0];
     let bundle: Vec<_> = vals.iter().map(|&v| sess.ctx.encrypt(v, &ck, &mut rng)).collect();
     let blob = sess.register(bundle);
+    assert!(blob >= (1u64 << 24));
     let resp = c
         .infer_blocking(
             EnginePath::Encrypted { session, mechanism: "inhibitor".into() },
@@ -121,7 +125,10 @@ fn encrypted_path_through_coordinator() {
         )
         .unwrap();
     assert!(resp.error.is_none(), "{:?}", resp.error);
-    let cts = sess.take(resp.output[0] as u64).unwrap();
+    assert!(resp.output.is_empty(), "encrypted results no longer ride the f32 vector");
+    let out_blob = resp.result_blob.expect("typed result reference");
+    assert!(out_blob >= (1u64 << 24), "ids beyond 2^24 are served exactly");
+    let cts = sess.take(out_blob).unwrap();
     let h: Vec<i64> = cts.iter().map(|ct| sess.ctx.decrypt(ct, &ck)).collect();
     assert_eq!(h.len(), 4);
     // Mirror check.

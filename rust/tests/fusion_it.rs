@@ -113,7 +113,7 @@ fn coscheduled_requests_fuse_and_match_single_request_execution() {
     assert!((m.mean_fused_level_size() - expect_mean).abs() < 1e-9);
     // Results: bit-identical to the solo executions.
     for (r, resp) in resps.iter().enumerate() {
-        let cts = sess.take(resp.output[0] as u64).unwrap();
+        let cts = sess.take(resp.result_blob.expect("typed result reference")).unwrap();
         assert_eq!(cts.len(), t * d);
         for (i, (got, want)) in cts.iter().zip(&solo[r]).enumerate() {
             assert_eq!(got.ct, want.ct, "request {r} output {i}");
@@ -161,7 +161,7 @@ fn lone_request_still_served_through_fused_path() {
         )
         .unwrap();
     assert!(resp.error.is_none(), "{:?}", resp.error);
-    let cts = sess.take(resp.output[0] as u64).unwrap();
+    let cts = sess.take(resp.result_blob.expect("typed result reference")).unwrap();
     for (got, want) in cts.iter().zip(&want) {
         assert_eq!(got.ct, want.ct, "batch-of-one must equal solo execution");
     }

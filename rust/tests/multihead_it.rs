@@ -398,7 +398,7 @@ fn multihead_engine_serves_coscheduled_requests_through_fusion() {
         "co-scheduled multi-head requests must fuse at level granularity"
     );
     for (r, resp) in resps.iter().enumerate() {
-        let cts = sess.take(resp.output[0] as u64).unwrap();
+        let cts = sess.take(resp.result_blob.expect("typed result reference")).unwrap();
         assert_eq!(cts.len(), heads * t * d);
         for (i, (got, want)) in cts.iter().zip(&solo[r]).enumerate() {
             assert_eq!(got.ct, want.ct, "request {r} output {i}: fused == solo");
