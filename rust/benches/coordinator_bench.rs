@@ -5,8 +5,14 @@
 //!   cargo bench --bench coordinator_bench
 
 use inhibitor::attention::Mechanism;
-use inhibitor::coordinator::{BatchPolicy, Coordinator, EnginePath, Payload, RoutePolicy};
+use inhibitor::coordinator::{
+    BatchPolicy, Coordinator, EnginePath, FusedLevelExecutor, FusedRequest, Payload, RoutePolicy,
+};
+use inhibitor::fhe_circuits::InhibitorFhe;
 use inhibitor::model::{ModelConfig, QTransformer};
+use inhibitor::tfhe::ops::CtInt;
+use inhibitor::tfhe::{ClientKey, FheContext, TfheParams};
+use inhibitor::util::prng::{Rng64, Xoshiro256};
 use std::time::{Duration, Instant};
 
 fn run_load(c: &Coordinator, n: usize, concurrency: usize) -> (f64, f64) {
@@ -95,5 +101,58 @@ fn main() {
          coordinator overhead per request",
         rps,
         lat * 1e6
+    );
+
+    fault_tolerance_overhead();
+}
+
+/// PR 6: price of the fault-tolerant executor when nothing goes wrong.
+/// Serving routes every encrypted batch through `run_checked` — per-job
+/// panic isolation (`catch_unwind` in the PBS pool) plus deadline/
+/// cancellation checks at each level boundary. Compare it against the
+/// unchecked solo path (`CircuitPlan::execute`) on the same plan and
+/// inputs; the target recorded in BENCH_plan.json is < 1% overhead
+/// (the checks are O(levels), the work is O(PBS)).
+fn fault_tolerance_overhead() {
+    let (t, d) = (2usize, 2usize);
+    let mut rng = Xoshiro256::new(0xFA0BE);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let plan = InhibitorFhe::new(d, 1).plan_for(&ctx, t, d);
+    let inputs: Vec<CtInt> = (0..3 * t * d)
+        .map(|i| {
+            let v = if i < 2 * t * d {
+                rng.next_range_i64(-2, 2)
+            } else {
+                rng.next_range_i64(0, 3)
+            };
+            ctx.encrypt(v, &ck, &mut rng)
+        })
+        .collect();
+    let exec = FusedLevelExecutor::new(&ctx);
+    // Warm both paths (LUT caches, allocator).
+    let _ = plan.execute(&ctx, &inputs);
+    let _ = exec.run_checked(&[FusedRequest::new(&plan, &inputs)]);
+
+    const REPS: usize = 5;
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        let _ = plan.execute(&ctx, &inputs);
+    }
+    let unchecked = t0.elapsed().as_secs_f64() / REPS as f64;
+    let t0 = Instant::now();
+    for _ in 0..REPS {
+        let (results, _) = exec.run_checked(&[FusedRequest::new(&plan, &inputs)]);
+        assert!(results.iter().all(|r| r.is_ok()));
+    }
+    let checked = t0.elapsed().as_secs_f64() / REPS as f64;
+    let overhead_pct = (checked / unchecked - 1.0) * 100.0;
+    println!(
+        "\n=== Fault-tolerance overhead (no faults armed, inhibitor t={t} d={d}) ===\n\
+         unchecked plan.execute : {:.3} ms/run\n\
+         checked   run_checked  : {:.3} ms/run\n\
+         overhead               : {overhead_pct:+.2}% (target < 1%)",
+        unchecked * 1e3,
+        checked * 1e3,
     );
 }

@@ -49,7 +49,7 @@ impl Batcher {
     /// Enqueue a request. Err(req) when the queue is full (backpressure)
     /// or the batcher is closed.
     pub fn submit(&self, req: InferRequest) -> Result<(), InferRequest> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         if g.closed || g.queue.len() >= self.policy.queue_cap {
             return Err(req);
         }
@@ -62,7 +62,7 @@ impl Batcher {
     /// drained. Flushes when `max_batch` is reached or the oldest request
     /// has waited `max_wait`.
     pub fn next_batch(&self) -> Option<Vec<InferRequest>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if g.queue.len() >= self.policy.max_batch {
                 return Some(drain(&mut g.queue, self.policy.max_batch));
@@ -75,26 +75,39 @@ impl Batcher {
                 }
                 // Wait for more requests or the deadline of the oldest.
                 let timeout = self.policy.max_wait - age;
-                let (ng, _) = self.cv.wait_timeout(g, timeout).unwrap();
+                let (ng, _) =
+                    self.cv.wait_timeout(g, timeout).unwrap_or_else(|e| e.into_inner());
                 g = ng;
             } else {
                 if g.closed {
                     return None;
                 }
                 // Idle: sleep until a submit (or close) signals.
-                g = self.cv.wait(g).unwrap();
+                g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
             }
         }
     }
 
     /// Close the batcher: pending requests still drain via next_batch.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).closed = true;
         self.cv.notify_all();
     }
 
+    /// Close **and** evict whatever is still queued, returning the
+    /// evicted requests so the caller can fail them (the scheduler
+    /// responds `Shutdown` — receivers must never be left hanging).
+    /// Unlike [`Self::close`], nothing queued will reach an engine.
+    pub fn abort(&self) -> Vec<InferRequest> {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        g.closed = true;
+        let leftover = g.queue.drain(..).collect();
+        self.cv.notify_all();
+        leftover
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -107,6 +120,7 @@ fn drain(q: &mut VecDeque<InferRequest>, n: usize) -> Vec<InferRequest> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::coordinator::request::{EnginePath, Payload};
@@ -170,6 +184,21 @@ mod tests {
         assert!(b.submit(req(2)).is_err(), "closed batcher rejects");
         assert_eq!(b.next_batch().unwrap().len(), 1);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn abort_evicts_queued_requests() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 10,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 10,
+        });
+        b.submit(req(1)).unwrap();
+        b.submit(req(2)).unwrap();
+        let evicted = b.abort();
+        assert_eq!(evicted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(b.submit(req(3)).is_err(), "aborted batcher rejects");
+        assert!(b.next_batch().is_none(), "nothing left to drain");
     }
 
     #[test]

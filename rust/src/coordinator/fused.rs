@@ -16,9 +16,27 @@
 //! solo execution, so outputs are bit-identical to per-request
 //! `CircuitPlan::execute` and the total PBS count is the sum of the plan
 //! counts.
+//!
+//! ## Failure model (PR 6)
+//!
+//! [`FusedLevelExecutor::run_checked`] is the fault-tolerant serving
+//! entry point. Levels are submitted through the panic-isolated pool
+//! (`FheContext::pbs_level_checked`), so a poisoned job **quarantines**
+//! only the member that owns it — the co-scheduled survivors keep their
+//! in-flight `PlanRun`s and continue in the same lock-step pass,
+//! bit-identical to a fault-free run (no replay needed at this layer;
+//! the scheduler's bounded solo-replay handles wholesale engine
+//! crashes). Every level boundary is also a **cooperative cancellation
+//! point**: a member whose deadline expired or whose [`CancelToken`]
+//! fired abandons its remaining levels right there, returning
+//! `DeadlineExceeded`/`Cancelled` with [`FusedStats::levels_done`]
+//! recording how far it got.
 
+use crate::error::FheError;
+use crate::tfhe::faults::CancelToken;
 use crate::tfhe::ops::{CtInt, FheContext};
 use crate::tfhe::plan::{CircuitPlan, LevelJob, PlanRun};
+use std::time::Instant;
 
 /// What one fused execution did — the observability the "worker pool
 /// actually fills up" claim rests on.
@@ -33,6 +51,34 @@ pub struct FusedStats {
     /// Total blind rotations (= Σ plan.blind_rotation_count(); smaller
     /// than `pbs_total` when the plans carry packed multi-value nodes).
     pub blind_rotations: u64,
+    /// Members removed from the lock-step group because a PBS job they
+    /// owned failed (worker panic — genuine or injected).
+    pub quarantined: u64,
+    /// Members abandoned at a level boundary because their deadline
+    /// expired (injected `deadline@level:N` counts here too).
+    pub deadline_kills: u64,
+    /// Per member (same order as the request slice): PBS levels fully
+    /// executed. Equals the plan's level count on success, strictly
+    /// fewer after a deadline kill or cancellation.
+    pub levels_done: Vec<usize>,
+}
+
+/// One member of a fused execution: a plan over an input bundle, plus
+/// the request's failure-model context (deadline + cancellation token).
+pub struct FusedRequest<'a> {
+    pub plan: &'a CircuitPlan,
+    pub inputs: &'a [CtInt],
+    /// Absolute wall-clock deadline; checked at every level boundary.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancellation; checked at every level boundary.
+    pub cancel: Option<CancelToken>,
+}
+
+impl<'a> FusedRequest<'a> {
+    /// A member with no deadline and no cancellation token.
+    pub fn new(plan: &'a CircuitPlan, inputs: &'a [CtInt]) -> Self {
+        FusedRequest { plan, inputs, deadline: None, cancel: None }
+    }
 }
 
 /// Lock-step executor over many plan runs sharing one context.
@@ -50,56 +96,158 @@ impl<'c> FusedLevelExecutor<'c> {
     /// Requests may have different plans/depths; a request that runs out
     /// of levels simply stops contributing jobs. Returns the per-request
     /// outputs (same order as `requests`) and the fusion stats.
+    ///
+    /// This is the solo/reference path: any failure (which the checked
+    /// path would contain to one member) panics. Serving goes through
+    /// [`Self::run_checked`].
     pub fn run(
         &self,
         requests: &[(&CircuitPlan, &[CtInt])],
     ) -> (Vec<Vec<CtInt>>, FusedStats) {
+        let members: Vec<FusedRequest> =
+            requests.iter().map(|&(plan, inputs)| FusedRequest::new(plan, inputs)).collect();
+        let (results, stats) = self.run_checked(&members);
+        let outputs = results
+            .into_iter()
+            .map(|r| r.expect("fault-free fused run"))
+            .collect();
+        (outputs, stats)
+    }
+
+    /// [`Self::run`] with the full failure model: per-member results, a
+    /// poisoned PBS job quarantines only its owner, and every level
+    /// boundary checks each member's deadline and cancellation token.
+    ///
+    /// An armed [`crate::tfhe::FaultPlan`] on the context participates
+    /// deterministically: `panic@pbs:N` poisons the N-th submitted job,
+    /// and `deadline@level:N` makes the N-th boundary report expiry for
+    /// every member that carries a deadline (the boundary *before* the
+    /// first level is tick 1).
+    pub fn run_checked(
+        &self,
+        requests: &[FusedRequest<'_>],
+    ) -> (Vec<Result<Vec<CtInt>, FheError>>, FusedStats) {
         let ctx = self.ctx;
-        let mut runs: Vec<PlanRun> =
-            requests.iter().map(|(plan, inputs)| PlanRun::new(plan, ctx, inputs)).collect();
-        let mut stats = FusedStats::default();
+        let faults = ctx.fault_plan();
+        let n = requests.len();
+        let mut stats = FusedStats { levels_done: vec![0; n], ..FusedStats::default() };
+        let mut results: Vec<Option<Result<Vec<CtInt>, FheError>>> =
+            (0..n).map(|_| None).collect();
+        // Arity is a request-triggerable failure: reject the member here
+        // rather than letting `PlanRun::new` assert.
+        let mut runs: Vec<Option<PlanRun>> = Vec::with_capacity(n);
+        for (i, req) in requests.iter().enumerate() {
+            if req.inputs.len() != req.plan.n_inputs() {
+                results[i] = Some(Err(FheError::PlanInvalid(format!(
+                    "plan expects {} inputs, request carries {}",
+                    req.plan.n_inputs(),
+                    req.inputs.len()
+                ))));
+                runs.push(None);
+            } else {
+                runs.push(Some(PlanRun::new(req.plan, ctx, req.inputs)));
+            }
+        }
         loop {
-            // Gather the next level of every still-running request.
+            // Level boundary: cooperative cancellation checkpoint. One
+            // fault tick per boundary, shared by every live member.
+            let fault_deadline = faults.as_deref().is_some_and(|f| f.deadline_fires());
+            for i in 0..n {
+                let Some(run) = runs[i].as_ref() else { continue };
+                let req = &requests[i];
+                let cancelled = req.cancel.as_ref().is_some_and(|c| c.is_cancelled());
+                let expired =
+                    req.deadline.is_some_and(|d| fault_deadline || Instant::now() >= d);
+                if !(cancelled || expired) {
+                    continue;
+                }
+                stats.levels_done[i] = run.levels_done();
+                let err = if cancelled {
+                    FheError::Cancelled
+                } else {
+                    stats.deadline_kills += 1;
+                    FheError::DeadlineExceeded(format!(
+                        "deadline expired: abandoned after {}/{} PBS levels",
+                        run.levels_done(),
+                        req.plan.levels()
+                    ))
+                };
+                results[i] = Some(Err(err));
+                runs[i] = None;
+            }
+            // Gather the next level of every still-running member.
             let mut level_jobs: Vec<LevelJob> = Vec::new();
-            // Per run: flattened output count to hand back (a packed
-            // multi job contributes several outputs for one submission).
-            let mut counts: Vec<Option<usize>> = Vec::with_capacity(runs.len());
-            for run in runs.iter_mut() {
+            // Per member: jobs contributed this level (`None` = finished
+            // earlier or not running).
+            let mut njobs: Vec<Option<usize>> = (0..n).map(|_| None).collect();
+            for i in 0..n {
+                let Some(run) = runs[i].as_mut() else { continue };
                 match run.next_level_jobs(ctx) {
                     Some(jobs) => {
-                        counts.push(Some(jobs.iter().map(LevelJob::n_outputs).sum()));
+                        njobs[i] = Some(jobs.len());
                         level_jobs.extend(jobs);
                     }
-                    None => counts.push(None),
+                    None => {
+                        let run = runs[i].take().expect("checked above");
+                        stats.levels_done[i] = run.levels_done();
+                        results[i] = Some(Ok(run.finish(ctx)));
+                    }
                 }
             }
-            if counts.iter().all(|c| c.is_none()) {
+            if level_jobs.is_empty() {
                 break;
             }
             stats.level_batch_sizes.push(level_jobs.len());
             stats.blind_rotations += level_jobs.len() as u64;
             stats.pbs_total += level_jobs.iter().map(|j| j.n_outputs() as u64).sum::<u64>();
-            // One fused submission for the whole level.
-            let mut outs = ctx.pbs_level(&level_jobs).into_iter();
-            // Scatter results back to their runs (same order as gathered).
-            for (run, count) in runs.iter_mut().zip(&counts) {
-                if let Some(n) = count {
-                    run.supply((&mut outs).take(*n).collect());
+            // One panic-isolated fused submission for the whole level.
+            let mut job_results = ctx.pbs_level_checked(&level_jobs).into_iter();
+            // Scatter per-job results back to their members (same order
+            // as gathered). A failed job quarantines its owner; the
+            // survivors' outputs are moved (never cloned) into supply.
+            for i in 0..n {
+                let Some(k) = njobs[i] else { continue };
+                let mut outs: Vec<CtInt> = Vec::new();
+                let mut failed: Option<FheError> = None;
+                for job in (&mut job_results).take(k) {
+                    match job {
+                        Ok(cts) => outs.extend(cts),
+                        Err(e) => {
+                            // Keep the first failure as the member's error.
+                            failed.get_or_insert(e);
+                        }
+                    }
+                }
+                if let Some(e) = failed {
+                    let run = runs[i].take().expect("member contributed jobs");
+                    stats.levels_done[i] = run.levels_done();
+                    stats.quarantined += 1;
+                    results[i] = Some(Err(e));
+                } else if let Some(run) = runs[i].as_mut() {
+                    run.supply(outs);
                 }
             }
         }
-        let outputs = runs.into_iter().map(|run| run.finish(ctx)).collect();
-        (outputs, stats)
+        let results = results
+            .into_iter()
+            .map(|r| r.expect("every member resolved"))
+            .collect();
+        (results, stats)
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::fhe_circuits::InhibitorFhe;
     use crate::tfhe::bootstrap::{pbs_count, ClientKey};
+    use crate::tfhe::faults::FaultPlan;
     use crate::tfhe::params::TfheParams;
+    use crate::tfhe::plan::CircuitBuilder;
     use crate::util::prng::{Rng64, Xoshiro256};
+    use std::sync::Arc;
+    use std::time::Duration;
 
     #[test]
     fn fused_execution_matches_solo_execution_and_sums_level_sizes() {
@@ -138,6 +286,9 @@ mod tests {
         assert_eq!(stats.blind_rotations, stats.pbs_total, "unpacked: 1 rotation per LUT");
         let want_sizes: Vec<usize> = plan.level_sizes().iter().map(|s| 3 * s).collect();
         assert_eq!(stats.level_batch_sizes, want_sizes, "summed per-level batch sizes");
+        assert_eq!(stats.quarantined, 0);
+        assert_eq!(stats.deadline_kills, 0);
+        assert_eq!(stats.levels_done, vec![plan.levels(); 3]);
         // Results: bit-identical to solo execution, request by request.
         for (r, (f, s)) in fused.iter().zip(&solo).enumerate() {
             assert_eq!(f.len(), s.len());
@@ -155,7 +306,6 @@ mod tests {
         let mut rng = Xoshiro256::new(0xD2E9);
         let ck = ClientKey::generate(TfheParams::test_for_bits(4), &mut rng);
         let ctx = FheContext::new(ck.server_key(&mut rng));
-        use crate::tfhe::plan::CircuitBuilder;
         // Shallow: relu(x). Deep: refresh(relu(x)).
         let shallow = {
             let mut b = CircuitBuilder::new();
@@ -180,6 +330,7 @@ mod tests {
             FusedLevelExecutor::new(&ctx).run(&[(&shallow, &in_s), (&deep, &in_d)]);
         assert_eq!(stats.level_batch_sizes, vec![2, 1]);
         assert_eq!(stats.pbs_total, 3);
+        assert_eq!(stats.levels_done, vec![1, 2]);
         assert_eq!(ctx.decrypt(&outs[0][0], &ck), 0);
         assert_eq!(ctx.decrypt(&outs[1][0], &ck), 5);
         // Bit-identity with solo runs.
@@ -236,6 +387,95 @@ mod tests {
             for (i, (a, b)) in f.iter().zip(s.iter()).enumerate() {
                 assert_eq!(a.ct, b.ct, "request {r} output {i}");
             }
+        }
+    }
+
+    /// relu → refresh → relu: three levels of one job each.
+    fn deep_plan() -> CircuitPlan {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(1);
+        let r = b.relu(ins[0]);
+        let f = b.refresh(r);
+        let r2 = b.relu(f);
+        b.output(r2);
+        b.build()
+    }
+
+    #[test]
+    fn injected_deadline_abandons_remaining_levels() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let mut rng = Xoshiro256::new(0xDEAD);
+        let ck = ClientKey::generate(TfheParams::test_for_bits(4), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let plan = deep_plan();
+        assert_eq!(plan.levels(), 3);
+        let inputs = [ctx.encrypt(-2, &ck, &mut rng)];
+        // Boundary ticks: 1 (before level 1), 2 (after level 1) — so the
+        // member executes exactly one of its three levels.
+        ctx.set_fault_plan(Some(Arc::new(FaultPlan::parse("deadline@level:2").unwrap())));
+        let member = FusedRequest {
+            plan: &plan,
+            inputs: &inputs,
+            deadline: Some(Instant::now() + Duration::from_secs(3600)),
+            cancel: None,
+        };
+        let before = pbs_count();
+        let (results, stats) = FusedLevelExecutor::new(&ctx).run_checked(&[member]);
+        ctx.set_fault_plan(None);
+        match &results[0] {
+            Err(FheError::DeadlineExceeded(m)) => assert!(m.contains("1/3"), "{m}"),
+            other => panic!("want DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(stats.deadline_kills, 1);
+        assert_eq!(stats.levels_done, vec![1]);
+        let executed = pbs_count() - before;
+        assert_eq!(executed, 1, "only level 1 ran");
+        assert!(executed < plan.pbs_count(), "levels 2..3 skipped");
+    }
+
+    #[test]
+    fn cancellation_token_abandons_before_any_work() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let mut rng = Xoshiro256::new(0xCA9C);
+        let ck = ClientKey::generate(TfheParams::test_for_bits(4), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let plan = deep_plan();
+        let inputs = [ctx.encrypt(1, &ck, &mut rng)];
+        let token = CancelToken::new();
+        token.cancel();
+        let member = FusedRequest {
+            plan: &plan,
+            inputs: &inputs,
+            deadline: None,
+            cancel: Some(token),
+        };
+        let before = pbs_count();
+        let (results, stats) = FusedLevelExecutor::new(&ctx).run_checked(&[member]);
+        assert_eq!(results[0], Err(FheError::Cancelled));
+        assert_eq!(stats.levels_done, vec![0]);
+        assert_eq!(pbs_count(), before, "no PBS for a pre-cancelled member");
+    }
+
+    #[test]
+    fn wrong_arity_fails_only_that_member() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let mut rng = Xoshiro256::new(0xA217);
+        let ck = ClientKey::generate(TfheParams::test_for_bits(4), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let plan = deep_plan();
+        let good_in = [ctx.encrypt(3, &ck, &mut rng)];
+        let bad_in =
+            [ctx.encrypt(1, &ck, &mut rng), ctx.encrypt(2, &ck, &mut rng)];
+        let members = [
+            FusedRequest::new(&plan, &good_in),
+            FusedRequest::new(&plan, &bad_in),
+        ];
+        let (results, _) = FusedLevelExecutor::new(&ctx).run_checked(&members);
+        let good = results[0].as_ref().expect("well-formed member succeeds");
+        assert_eq!(good[0].ct, plan.execute(&ctx, &good_in)[0].ct);
+        match &results[1] {
+            Err(FheError::PlanInvalid(m)) => assert!(m.contains("expects 1"), "{m}"),
+            other => panic!("want PlanInvalid, got {other:?}"),
         }
     }
 }

@@ -24,19 +24,19 @@ impl Session {
     /// Register a ciphertext bundle; returns its reference id.
     pub fn register(&self, cts: Vec<CtInt>) -> u64 {
         let id = self.next_blob.fetch_add(1, Ordering::Relaxed);
-        self.store.lock().unwrap().insert(id, cts);
+        self.store.lock().unwrap_or_else(|e| e.into_inner()).insert(id, cts);
         id
     }
 
     pub fn take(&self, id: u64) -> Option<Vec<CtInt>> {
-        self.store.lock().unwrap().remove(&id)
+        self.store.lock().unwrap_or_else(|e| e.into_inner()).remove(&id)
     }
 
     /// Re-insert a bundle under its original id — the error-path rollback
     /// of [`Self::take`], so a failed batch does not consume the bundles
     /// of co-batched requests that could otherwise be retried.
     pub fn restore(&self, id: u64, cts: Vec<CtInt>) {
-        self.store.lock().unwrap().insert(id, cts);
+        self.store.lock().unwrap_or_else(|e| e.into_inner()).insert(id, cts);
     }
 
     pub fn put_result(&self, cts: Vec<CtInt>) -> u64 {
@@ -66,16 +66,17 @@ impl KeyManager {
     /// Create a session from a client-provided server key context.
     pub fn create_session(&self, ctx: FheContext) -> u64 {
         let id = self.next_session.fetch_add(1, Ordering::Relaxed);
-        self.sessions.lock().unwrap().insert(id, std::sync::Arc::new(Session::new(ctx)));
+        let sess = std::sync::Arc::new(Session::new(ctx));
+        self.sessions.lock().unwrap_or_else(|e| e.into_inner()).insert(id, sess);
         id
     }
 
     pub fn session(&self, id: u64) -> Option<std::sync::Arc<Session>> {
-        self.sessions.lock().unwrap().get(&id).cloned()
+        self.sessions.lock().unwrap_or_else(|e| e.into_inner()).get(&id).cloned()
     }
 
     pub fn drop_session(&self, id: u64) -> bool {
-        self.sessions.lock().unwrap().remove(&id).is_some()
+        self.sessions.lock().unwrap_or_else(|e| e.into_inner()).remove(&id).is_some()
     }
 
     pub fn params_of(&self, id: u64) -> Option<TfheParams> {

@@ -72,6 +72,24 @@ pub struct Metrics {
     /// Total blind rotations behind those evaluations — smaller than
     /// `fused_pbs` when the rewritten plans pack multi-value bootstraps.
     pub fused_blind_rotations: AtomicU64,
+    // --- failure-model counters (PR 6) ---
+    /// Requests that failed because a worker panicked on their job or
+    /// their whole engine batch crashed.
+    pub worker_panics: AtomicU64,
+    /// Engine workers rebuilt from their factory after a crash.
+    pub respawns: AtomicU64,
+    /// Requests replayed solo after a wholesale engine-batch crash
+    /// (bounded: each request is replayed at most once).
+    pub retries: AtomicU64,
+    /// Members removed from a fused batch (poisoned PBS job) or pinned
+    /// as the poison by the scheduler's solo replay.
+    pub quarantined: AtomicU64,
+    /// Requests abandoned for an expired deadline (at dequeue or at a
+    /// PBS level boundary).
+    pub deadline_kills: AtomicU64,
+    /// Queued requests drained with a `Shutdown` error instead of being
+    /// left with hanging receivers.
+    pub shutdown_drained: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -101,8 +119,9 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
-             fused_levels={} fused_pbs={} fused_blind_rotations={} mean_latency={} p50={} \
-             p99={}",
+             fused_levels={} fused_pbs={} fused_blind_rotations={} worker_panics={} \
+             respawns={} retries={} quarantined={} deadline_kills={} shutdown_drained={} \
+             mean_latency={} p50={} p99={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -111,6 +130,12 @@ impl Metrics {
             self.fused_levels.load(Ordering::Relaxed),
             self.fused_pbs.load(Ordering::Relaxed),
             self.fused_blind_rotations.load(Ordering::Relaxed),
+            self.worker_panics.load(Ordering::Relaxed),
+            self.respawns.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.quarantined.load(Ordering::Relaxed),
+            self.deadline_kills.load(Ordering::Relaxed),
+            self.shutdown_drained.load(Ordering::Relaxed),
             crate::bench_harness::Measurement::fmt_time(self.latency.mean_s()),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.5)),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.99)),

@@ -15,7 +15,7 @@ pub mod router;
 pub mod scheduler;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use fused::{FusedLevelExecutor, FusedStats};
+pub use fused::{FusedLevelExecutor, FusedRequest, FusedStats};
 pub use keymgr::{KeyManager, Session};
 pub use metrics::Metrics;
 pub use request::{EngineOutput, EnginePath, InferRequest, InferResponse, Payload};

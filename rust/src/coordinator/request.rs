@@ -1,5 +1,7 @@
 //! Request/response types for the serving coordinator (S9).
 
+use crate::error::FheError;
+use crate::tfhe::faults::CancelToken;
 use std::time::Instant;
 
 /// Which execution engine a request targets.
@@ -73,11 +75,36 @@ pub struct InferRequest {
     pub path: EnginePath,
     pub payload: Payload,
     pub enqueued: Instant,
+    /// Absolute wall-clock deadline. An expired request is dropped with
+    /// `DeadlineExceeded` at dequeue, and the encrypted executor checks
+    /// it cooperatively at every PBS level boundary.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancellation: callers keep a clone and fire it to
+    /// abandon the request at the next checkpoint.
+    pub cancel: CancelToken,
 }
 
 impl InferRequest {
     pub fn new(id: u64, path: EnginePath, payload: Payload) -> Self {
-        InferRequest { id, path, payload, enqueued: Instant::now() }
+        InferRequest {
+            id,
+            path,
+            payload,
+            enqueued: Instant::now(),
+            deadline: None,
+            cancel: CancelToken::new(),
+        }
+    }
+
+    /// Attach an absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Whether the deadline has already passed.
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 }
 
@@ -118,7 +145,8 @@ pub struct InferResponse {
     pub engine: String,
     /// Queue + execution latency in seconds.
     pub latency_s: f64,
-    pub error: Option<String>,
+    /// Typed failure (its [`FheError::code`] is the wire `error_code`).
+    pub error: Option<FheError>,
 }
 
 #[cfg(test)]

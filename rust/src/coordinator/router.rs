@@ -8,15 +8,23 @@
 //!     lazily *inside* its worker thread: PJRT handles never cross
 //!     threads).
 //!   * `fhe/<mech>/<sid>`  — per-session encrypted attention.
+//!
+//! Every fallible edge speaks [`FheError`] (PR 6): registration,
+//! submission, and each engine body's per-request results. Engine
+//! factories are re-invokable — the scheduler respawns a crashed body
+//! from its factory — so registration closures capture only state that
+//! can be reused (`Arc`s, configs) and rebuild the rest per spawn.
 
 use super::batcher::BatchPolicy;
-use super::fused::FusedLevelExecutor;
+use super::fused::{FusedLevelExecutor, FusedRequest};
 use super::keymgr::{KeyManager, Session};
 use super::request::{EngineOutput, EnginePath, InferRequest, InferResponse, Payload};
 use super::scheduler::Scheduler;
+use crate::error::FheError;
 use crate::fhe_circuits::{DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe};
 use crate::model::{ModelInput, QTransformer};
 use crate::tensor::ITensor;
+use crate::tfhe::ops::CtInt;
 use crate::tfhe::plan::CircuitPlan;
 #[cfg(feature = "xla")]
 use std::path::PathBuf;
@@ -60,36 +68,38 @@ impl Coordinator {
     /// Register a quantized integer model under `quant/<mechanism>`.
     pub fn add_quant_engine(&mut self, mechanism: &str, model: QTransformer, policy: BatchPolicy) {
         let key = EnginePath::QuantInt(mechanism.into()).batch_key();
+        let model = Arc::new(model);
         self.scheduler.add_engine(
             &key,
             policy,
             Box::new(move || {
+                let model = Arc::clone(&model);
                 Box::new(move |batch: &[InferRequest]| {
-                batch
-                    .iter()
-                    .map(|req| match &req.payload {
-                        Payload::Features(data, (r, c)) => {
-                            let codes: Vec<i64> = data
-                                .iter()
-                                .map(|&x| (x / model.act_scale).round() as i64)
-                                .collect();
-                            let t = ITensor::from_vec(&[*r, *c], codes);
-                            let out = model.forward(&ModelInput::Features(t));
-                            Ok(EngineOutput::Values(
-                                out.data.iter().map(|&c| c as f32 * model.act_scale).collect(),
-                            ))
-                        }
-                        Payload::Tokens(toks) => {
-                            let out = model.forward(&ModelInput::Tokens(toks.clone()));
-                            Ok(EngineOutput::Values(
-                                out.data.iter().map(|&c| c as f32 * model.act_scale).collect(),
-                            ))
-                        }
-                        Payload::CiphertextRef(_) => {
-                            Err("ciphertext sent to a clear engine".to_string())
-                        }
-                    })
-                    .collect::<Result<Vec<_>, _>>()
+                    Ok(batch
+                        .iter()
+                        .map(|req| match &req.payload {
+                            Payload::Features(data, (r, c)) => {
+                                let codes: Vec<i64> = data
+                                    .iter()
+                                    .map(|&x| (x / model.act_scale).round() as i64)
+                                    .collect();
+                                let t = ITensor::from_vec(&[*r, *c], codes);
+                                let out = model.forward(&ModelInput::Features(t));
+                                Ok(EngineOutput::Values(
+                                    out.data.iter().map(|&c| c as f32 * model.act_scale).collect(),
+                                ))
+                            }
+                            Payload::Tokens(toks) => {
+                                let out = model.forward(&ModelInput::Tokens(toks.clone()));
+                                Ok(EngineOutput::Values(
+                                    out.data.iter().map(|&c| c as f32 * model.act_scale).collect(),
+                                ))
+                            }
+                            Payload::CiphertextRef(_) => Err(FheError::BadRequest(
+                                "ciphertext sent to a clear engine".to_string(),
+                            )),
+                        })
+                        .collect())
                 }) as crate::coordinator::scheduler::EngineBody
             }),
         );
@@ -109,29 +119,35 @@ impl Coordinator {
             Box::new(move || {
                 // PJRT state is created here, on the worker thread, and
                 // never crosses a thread boundary (xla handles are !Send).
+                // A respawned body simply re-opens the registry.
+                let artifacts_dir = artifacts_dir.clone();
+                let name = name.clone();
                 let mut registry: Option<crate::runtime::Registry> = None;
                 Box::new(move |batch: &[InferRequest]| {
-                if registry.is_none() {
-                    registry = Some(
-                        crate::runtime::Registry::open(artifacts_dir.clone())
-                            .map_err(|e| format!("opening artifacts: {e:#}"))?,
-                    );
-                }
-                let engine = registry
-                    .as_mut()
-                    .unwrap()
-                    .model_engine(&name)
-                    .map_err(|e| format!("loading model '{name}': {e:#}"))?;
-                batch
-                    .iter()
-                    .map(|req| match &req.payload {
-                        Payload::Features(data, _shape) => engine
-                            .run_f32(&[data.clone()])
-                            .map(EngineOutput::Values)
-                            .map_err(|e| format!("pjrt execute: {e:#}")),
-                        _ => Err("pjrt engine takes float features".to_string()),
-                    })
-                    .collect::<Result<Vec<_>, _>>()
+                    if registry.is_none() {
+                        registry = Some(
+                            crate::runtime::Registry::open(artifacts_dir.clone()).map_err(|e| {
+                                FheError::Internal(format!("opening artifacts: {e:#}"))
+                            })?,
+                        );
+                    }
+                    let engine = registry
+                        .as_mut()
+                        .expect("registry populated above")
+                        .model_engine(&name)
+                        .map_err(|e| FheError::Internal(format!("loading model '{name}': {e:#}")))?;
+                    Ok(batch
+                        .iter()
+                        .map(|req| match &req.payload {
+                            Payload::Features(data, _shape) => engine
+                                .run_f32(&[data.clone()])
+                                .map(EngineOutput::Values)
+                                .map_err(|e| FheError::Internal(format!("pjrt execute: {e:#}"))),
+                            _ => Err(FheError::BadRequest(
+                                "pjrt engine takes float features".to_string(),
+                            )),
+                        })
+                        .collect())
                 }) as crate::coordinator::scheduler::EngineBody
             }),
         );
@@ -156,15 +172,15 @@ impl Coordinator {
         seq_len: usize,
         dim: usize,
         policy: BatchPolicy,
-    ) -> Result<(), String> {
+    ) -> Result<(), FheError> {
         // Same name resolution as every other entry point (CLI included):
         // aliases like "softmax" select the dot-product circuit.
         let mech = crate::attention::Mechanism::parse(mechanism)
-            .ok_or_else(|| format!("unknown mechanism '{mechanism}'"))?;
+            .ok_or_else(|| FheError::PlanInvalid(format!("unknown mechanism '{mechanism}'")))?;
         let session = self
             .keymgr
             .session(session_id)
-            .ok_or_else(|| format!("unknown session {session_id}"))?;
+            .ok_or_else(|| FheError::KeyMissing(format!("unknown session {session_id}")))?;
         // Key the engine by the *canonical* mechanism name so routing
         // agrees with registration no matter which alias was used.
         let key = EnginePath::Encrypted { session: session_id, mechanism: mech.name().into() }
@@ -203,16 +219,16 @@ impl Coordinator {
         n_heads: usize,
         shared_kv: bool,
         policy: BatchPolicy,
-    ) -> Result<(), String> {
+    ) -> Result<(), FheError> {
         let mech = crate::attention::Mechanism::parse(mechanism)
-            .ok_or_else(|| format!("unknown mechanism '{mechanism}'"))?;
+            .ok_or_else(|| FheError::PlanInvalid(format!("unknown mechanism '{mechanism}'")))?;
         if n_heads == 0 {
-            return Err("n_heads must be at least 1".into());
+            return Err(FheError::PlanInvalid("n_heads must be at least 1".to_string()));
         }
         let session = self
             .keymgr
             .session(session_id)
-            .ok_or_else(|| format!("unknown session {session_id}"))?;
+            .ok_or_else(|| FheError::KeyMissing(format!("unknown session {session_id}")))?;
         let head = MultiHeadFhe::new(mech, d_head, n_heads, shared_kv);
         let key = EnginePath::Encrypted { session: session_id, mechanism: head.engine_mechanism() }
             .batch_key();
@@ -240,11 +256,11 @@ impl Coordinator {
         model: ModelFhe,
         seq_len: usize,
         policy: BatchPolicy,
-    ) -> Result<(), String> {
+    ) -> Result<(), FheError> {
         let session = self
             .keymgr
             .session(session_id)
-            .ok_or_else(|| format!("unknown session {session_id}"))?;
+            .ok_or_else(|| FheError::KeyMissing(format!("unknown session {session_id}")))?;
         let key = EnginePath::Encrypted {
             session: session_id,
             mechanism: model.engine_mechanism(),
@@ -258,18 +274,27 @@ impl Coordinator {
 
     /// Shared registration body of every encrypted engine: grants the
     /// session the scheduler's PBS worker budget, resolves the
-    /// (rewritten, cached) plan once on the engine's worker thread, and
-    /// executes each batch through [`FusedLevelExecutor`] — the current
-    /// PBS level of all co-scheduled requests goes to the worker pool as
-    /// one fused `pbs_batch`. Fusion never changes results or counts —
-    /// outputs are bit-identical to single-request execution (pinned by
-    /// `tests/fusion_it.rs` and `tests/multihead_it.rs`).
+    /// (rewritten, cached) plan on the engine's worker thread, and
+    /// executes each batch through [`FusedLevelExecutor::run_checked`] —
+    /// the current PBS level of all co-scheduled requests goes to the
+    /// panic-isolated worker pool as one fused `pbs_batch`. Fusion never
+    /// changes results or counts — outputs are bit-identical to
+    /// single-request execution (pinned by `tests/fusion_it.rs` and
+    /// `tests/multihead_it.rs`).
+    ///
+    /// Failure model per member: a bad bundle fails only its own request
+    /// (typed error); a poisoned PBS job quarantines only the member
+    /// that owns it; a deadline or cancellation abandons the member at
+    /// the next level boundary. On any member failure its input bundle
+    /// is restored, so the client can resubmit without re-uploading.
+    /// `make_plan` is a `Fn`: the scheduler respawns a crashed engine
+    /// body from the factory, which re-resolves the (cached) plan.
     fn add_encrypted_engine(
         &mut self,
         key: &str,
         session: Arc<Session>,
         policy: BatchPolicy,
-        make_plan: impl FnOnce(&crate::tfhe::FheContext) -> Arc<CircuitPlan> + Send + 'static,
+        make_plan: impl Fn(&crate::tfhe::FheContext) -> Arc<CircuitPlan> + Send + 'static,
     ) {
         // Grant this session's context the scheduler's PBS worker budget:
         // the fused level batches fan out across it.
@@ -283,69 +308,94 @@ impl Coordinator {
                 // multi-value packing at the session's parameter budget),
                 // cached on the head: the serving path executes the same
                 // reduced-rotation IR the benches and the profile report.
+                let session = Arc::clone(&session);
+                let metrics = Arc::clone(&metrics);
                 let plan = make_plan(&session.ctx);
                 let n_inputs = plan.n_inputs();
                 Box::new(move |batch: &[InferRequest]| {
-                    // Phase 1 — resolve every request's ciphertext bundle.
-                    // Any bad request fails the whole batch (matching the
-                    // scheduler's per-batch error propagation), but the
-                    // bundles already taken are restored so the innocent
-                    // co-batched requests can be resubmitted.
-                    let mut bundles: Vec<(u64, Vec<_>)> = Vec::with_capacity(batch.len());
-                    let mut bad: Option<String> = None;
-                    for req in batch {
-                        let blob = match req.payload {
-                            Payload::CiphertextRef(b) => b,
-                            _ => {
-                                bad = Some("fhe engine takes ciphertext refs".into());
-                                break;
-                            }
-                        };
-                        let cts = match session.take(blob) {
-                            Some(cts) => cts,
-                            None => {
-                                bad = Some(format!("unknown ciphertext bundle {blob}"));
-                                break;
-                            }
-                        };
-                        if cts.len() != n_inputs {
-                            bad = Some(format!(
-                                "bundle must hold {} ciphertexts, got {}",
-                                n_inputs,
-                                cts.len()
-                            ));
-                            session.restore(blob, cts);
-                            break;
-                        }
-                        bundles.push((blob, cts));
+                    // Deterministic fault seam (`panic@engine:N`): fires
+                    // before any bundle is taken, so the scheduler's
+                    // respawn + solo replay sees intact session state.
+                    if let Some(f) = session.ctx.fault_plan() {
+                        f.maybe_panic_engine();
                     }
-                    if let Some(msg) = bad {
-                        for (blob, cts) in bundles {
-                            session.restore(blob, cts);
-                        }
-                        return Err(msg);
-                    }
-                    // Phase 2 — fused level-synchronous execution across
-                    // the whole batch.
-                    let requests: Vec<(&CircuitPlan, &[_])> =
-                        bundles.iter().map(|(_, b)| (plan.as_ref(), b.as_slice())).collect();
-                    let (outs, stats) = FusedLevelExecutor::new(&session.ctx).run(&requests);
+                    // Phase 1 — resolve each request's ciphertext bundle.
+                    // A bad request fails only itself; its co-batched
+                    // neighbors proceed.
+                    let bundles: Vec<Result<(u64, Vec<CtInt>), FheError>> = batch
+                        .iter()
+                        .map(|req| {
+                            let blob = match req.payload {
+                                Payload::CiphertextRef(b) => b,
+                                _ => {
+                                    return Err(FheError::BadRequest(
+                                        "fhe engine takes ciphertext refs".to_string(),
+                                    ))
+                                }
+                            };
+                            let cts = session.take(blob).ok_or_else(|| {
+                                FheError::KeyMissing(format!("unknown ciphertext bundle {blob}"))
+                            })?;
+                            if cts.len() != n_inputs {
+                                let msg = format!(
+                                    "bundle must hold {} ciphertexts, got {}",
+                                    n_inputs,
+                                    cts.len()
+                                );
+                                session.restore(blob, cts);
+                                return Err(FheError::BadRequest(msg));
+                            }
+                            Ok((blob, cts))
+                        })
+                        .collect();
+                    // Phase 2 — fused level-synchronous execution of the
+                    // members that resolved, carrying each request's
+                    // deadline and cancellation token into the
+                    // executor's level-boundary checks.
+                    let fused: Vec<FusedRequest> = bundles
+                        .iter()
+                        .zip(batch)
+                        .filter_map(|(b, req)| {
+                            b.as_ref().ok().map(|(_, cts)| FusedRequest {
+                                plan: plan.as_ref(),
+                                inputs: cts.as_slice(),
+                                deadline: req.deadline,
+                                cancel: Some(req.cancel.clone()),
+                            })
+                        })
+                        .collect();
+                    let (outs, stats) = FusedLevelExecutor::new(&session.ctx).run_checked(&fused);
+                    // `fused` borrows the bundles consumed below.
+                    drop(fused);
                     let levels = stats.level_batch_sizes.len() as u64;
                     metrics.fused_levels.fetch_add(levels, Ordering::Relaxed);
                     metrics.fused_pbs.fetch_add(stats.pbs_total, Ordering::Relaxed);
                     metrics
                         .fused_blind_rotations
                         .fetch_add(stats.blind_rotations, Ordering::Relaxed);
-                    // Phase 3 — register each request's result bundle
-                    // and return a *typed* reference. The id travels in
-                    // the response's dedicated `result_blob` field, so —
-                    // unlike the retired ride-along-as-f32 encoding — it
-                    // is exact at any magnitude and needs no 2²⁴ guard.
-                    let results: Vec<EngineOutput> = outs
+                    metrics.quarantined.fetch_add(stats.quarantined, Ordering::Relaxed);
+                    metrics.deadline_kills.fetch_add(stats.deadline_kills, Ordering::Relaxed);
+                    // Phase 3 — marry executor results back to the batch
+                    // order. Success registers the result bundle and
+                    // returns a *typed* reference (exact at any
+                    // magnitude — no 2²⁴ f32 guard). Failure restores
+                    // the member's input bundle for a clean resubmit.
+                    let mut outs = outs.into_iter();
+                    Ok(bundles
                         .into_iter()
-                        .map(|data| EngineOutput::ResultRef(session.put_result(data)))
-                        .collect();
-                    Ok(results)
+                        .map(|b| {
+                            let (blob, cts) = b?;
+                            match outs.next().expect("one executor result per fused member") {
+                                Ok(data) => {
+                                    Ok(EngineOutput::ResultRef(session.put_result(data)))
+                                }
+                                Err(e) => {
+                                    session.restore(blob, cts);
+                                    Err(e)
+                                }
+                            }
+                        })
+                        .collect())
                 }) as crate::coordinator::scheduler::EngineBody
             }),
         );
@@ -367,8 +417,17 @@ impl Coordinator {
     }
 
     /// Submit a request and get the response receiver.
-    pub fn submit(&self, path: EnginePath, payload: Payload) -> Result<Receiver<InferResponse>, String> {
+    pub fn submit(
+        &self,
+        path: EnginePath,
+        payload: Payload,
+    ) -> Result<Receiver<InferResponse>, FheError> {
         self.scheduler.submit(InferRequest::new(0, path, payload))
+    }
+
+    /// Submit a fully-formed request (deadline/cancel token attached).
+    pub fn submit_request(&self, req: InferRequest) -> Result<Receiver<InferResponse>, FheError> {
+        self.scheduler.submit(req)
     }
 
     /// Submit and block for the response.
@@ -377,17 +436,35 @@ impl Coordinator {
         path: EnginePath,
         payload: Payload,
         timeout: std::time::Duration,
-    ) -> Result<InferResponse, String> {
-        let rx = self.submit(path, payload)?;
-        rx.recv_timeout(timeout).map_err(|e| format!("response timeout: {e}"))
+    ) -> Result<InferResponse, FheError> {
+        self.infer_request_blocking(InferRequest::new(0, path, payload), timeout)
     }
 
+    /// [`Self::infer_blocking`] for a fully-formed request.
+    pub fn infer_request_blocking(
+        &self,
+        req: InferRequest,
+        timeout: std::time::Duration,
+    ) -> Result<InferResponse, FheError> {
+        let rx = self.submit_request(req)?;
+        rx.recv_timeout(timeout)
+            .map_err(|e| FheError::DeadlineExceeded(format!("response timeout: {e}")))
+    }
+
+    /// Graceful shutdown: queued work drains, receivers never hang.
     pub fn shutdown(&mut self) {
         self.scheduler.shutdown();
+    }
+
+    /// Immediate shutdown: queued (not yet running) requests fail with
+    /// a typed `Shutdown` error instead of executing.
+    pub fn shutdown_now(&mut self) {
+        self.scheduler.shutdown_now();
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::attention::Mechanism;
@@ -425,10 +502,30 @@ mod tests {
     }
 
     #[test]
+    fn clear_engine_rejects_ciphertext_payload_per_request() {
+        let cfg = ModelConfig::small(Mechanism::Inhibitor, 4, 8);
+        let model = QTransformer::random(cfg, 1);
+        let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+        c.add_quant_engine("inhibitor", model, BatchPolicy::default());
+        let resp = c
+            .infer_blocking(
+                EnginePath::QuantInt("inhibitor".into()),
+                Payload::CiphertextRef(7),
+                Duration::from_secs(10),
+            )
+            .unwrap();
+        match resp.error {
+            Some(FheError::BadRequest(ref m)) => assert!(m.contains("clear engine"), "{m}"),
+            ref other => panic!("want BadRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn fhe_engine_requires_session() {
         let mut c = Coordinator::new(RoutePolicy::PreferQuant);
         let err = c.add_fhe_engine(99, "inhibitor", 2, 2, BatchPolicy::default()).unwrap_err();
-        assert!(err.contains("unknown session"), "{err}");
+        assert!(matches!(err, FheError::KeyMissing(_)), "{err:?}");
+        assert!(err.to_string().contains("unknown session"), "{err}");
     }
 
     #[test]
@@ -436,13 +533,14 @@ mod tests {
         let mut c = Coordinator::new(RoutePolicy::PreferQuant);
         // Mechanism checks run before session resolution.
         let err = c.add_fhe_engine(1, "nonsense", 2, 2, BatchPolicy::default()).unwrap_err();
-        assert!(err.contains("unknown mechanism"), "{err}");
+        assert!(matches!(err, FheError::PlanInvalid(_)), "{err:?}");
+        assert!(err.to_string().contains("unknown mechanism"), "{err}");
         // Every named mechanism now has an encrypted circuit (the signed
         // inhibitor landed with the rewrite passes): each must get past
         // the mechanism check and fail only on the missing session.
         for mech in ["inhibitor-signed", "softmax", "inhibitor"] {
             let err = c.add_fhe_engine(1, mech, 2, 2, BatchPolicy::default()).unwrap_err();
-            assert!(err.contains("unknown session"), "{mech}: {err}");
+            assert!(err.to_string().contains("unknown session"), "{mech}: {err}");
         }
     }
 
@@ -453,16 +551,16 @@ mod tests {
         let err = c
             .add_fhe_multihead_engine(1, "nonsense", 2, 2, 2, false, BatchPolicy::default())
             .unwrap_err();
-        assert!(err.contains("unknown mechanism"), "{err}");
+        assert!(err.to_string().contains("unknown mechanism"), "{err}");
         let err = c
             .add_fhe_multihead_engine(1, "inhibitor", 2, 2, 0, false, BatchPolicy::default())
             .unwrap_err();
-        assert!(err.contains("n_heads"), "{err}");
+        assert!(err.to_string().contains("n_heads"), "{err}");
         for mech in ["inhibitor", "inhibitor-signed", "softmax"] {
             let err = c
                 .add_fhe_multihead_engine(1, mech, 2, 2, 4, true, BatchPolicy::default())
                 .unwrap_err();
-            assert!(err.contains("unknown session"), "{mech}: {err}");
+            assert!(err.to_string().contains("unknown session"), "{mech}: {err}");
         }
     }
 
@@ -472,7 +570,8 @@ mod tests {
         let mut c = Coordinator::new(RoutePolicy::PreferQuant);
         let model = ModelFhe::demo(Mechanism::Inhibitor, 4, 2, 2, false, 4, 3);
         let err = c.add_fhe_block_engine(99, model, 2, BatchPolicy::default()).unwrap_err();
-        assert!(err.contains("unknown session"), "{err}");
+        assert_eq!(err.code(), "key_missing");
+        assert!(err.to_string().contains("unknown session"), "{err}");
     }
 
     #[test]

@@ -3,25 +3,43 @@
 //! per-request channels. Thread-based (tokio is unavailable offline); for
 //! a CPU-bound FHE/integer workload a thread per engine is the right
 //! granularity anyway.
+//!
+//! ## Supervision (PR 6)
+//!
+//! The worker loop is a supervisor: a panicking engine body is caught,
+//! the body is **respawned from its factory**, and — when the crashed
+//! batch had several members — the survivors are **replayed solo**
+//! (bounded: each request runs at most twice) so one poison request
+//! cannot fail its co-scheduled neighbors. Requests whose deadline
+//! expired while queued are dropped at dequeue with `DeadlineExceeded`
+//! instead of burning engine time, and shutdown drains every pending
+//! receiver with a typed `Shutdown` error — receivers never hang.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{EngineOutput, InferRequest, InferResponse};
-use std::sync::atomic::Ordering;
+use crate::error::{panic_message, FheError};
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// An engine body: maps a batch of requests to outputs (same order) —
-/// clear float vectors or typed encrypted-result references
-/// ([`EngineOutput`]). Errors are reported per-batch and propagated to
-/// every member. The body itself need not be `Send` — it is *created
-/// inside* its worker thread by the factory (PJRT handles, for example,
-/// must never cross threads).
-pub type EngineBody = Box<dyn FnMut(&[InferRequest]) -> Result<Vec<EngineOutput>, String>>;
+/// An engine body: maps a batch of requests to per-request results (same
+/// order) — clear float vectors or typed encrypted-result references
+/// ([`EngineOutput`]), each independently fallible so one bad member
+/// does not fail its neighbors. The outer `Result` is for failures that
+/// genuinely affect the whole batch (and is propagated to every
+/// member). The body itself need not be `Send` — it is *created inside*
+/// its worker thread by the factory (PJRT handles, for example, must
+/// never cross threads).
+pub type EngineBody =
+    Box<dyn FnMut(&[InferRequest]) -> Result<Vec<Result<EngineOutput, FheError>>, FheError>>;
 
-/// Factory that builds the engine body on the worker thread.
-pub type EngineFn = Box<dyn FnOnce() -> EngineBody + Send>;
+/// Factory that builds the engine body on the worker thread — callable
+/// repeatedly, because the supervisor respawns a crashed body from it.
+pub type EngineFn = Box<dyn Fn() -> EngineBody + Send>;
 
 /// Handle to one running engine worker.
 pub struct EngineWorker {
@@ -31,7 +49,51 @@ pub struct EngineWorker {
 }
 
 /// Pending-response routing table.
-type PendingMap = Arc<Mutex<std::collections::HashMap<u64, Sender<InferResponse>>>>;
+type PendingMap = Arc<Mutex<HashMap<u64, Sender<InferResponse>>>>;
+
+/// Resolve one request with its result: remove the pending sender and
+/// ship the response (success records latency/completion; a
+/// `WorkerPanic` bumps its counter).
+fn respond(
+    pending: &Mutex<HashMap<u64, Sender<InferResponse>>>,
+    metrics: &Metrics,
+    engine: &str,
+    req: &InferRequest,
+    result: Result<EngineOutput, FheError>,
+) {
+    let latency = req.enqueued.elapsed().as_secs_f64();
+    let tx = pending.lock().unwrap_or_else(|e| e.into_inner()).remove(&req.id);
+    let Some(tx) = tx else { return };
+    let resp = match result {
+        Ok(out) => {
+            metrics.latency.record(latency);
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            let (output, result_blob) = out.into_response_fields();
+            InferResponse {
+                id: req.id,
+                output,
+                result_blob,
+                engine: engine.to_string(),
+                latency_s: latency,
+                error: None,
+            }
+        }
+        Err(e) => {
+            if matches!(e, FheError::WorkerPanic(_)) {
+                metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+            }
+            InferResponse {
+                id: req.id,
+                output: Vec::new(),
+                result_blob: None,
+                engine: engine.to_string(),
+                latency_s: latency,
+                error: Some(e),
+            }
+        }
+    };
+    let _ = tx.send(resp);
+}
 
 /// The scheduler: owns workers, metrics and the pending-response table.
 pub struct Scheduler {
@@ -39,6 +101,9 @@ pub struct Scheduler {
     pending: PendingMap,
     workers: Vec<EngineWorker>,
     next_id: std::sync::atomic::AtomicU64,
+    /// Set once shutdown begins: new submissions fail `Shutdown` instead
+    /// of racing the closing batchers.
+    closing: Arc<AtomicBool>,
     /// PBS worker threads granted to each encrypted engine's batch stages
     /// (`FHE_THREADS` env or all cores by default). The router applies
     /// this to a session's `FheContext` when its engine is registered.
@@ -49,9 +114,10 @@ impl Scheduler {
     pub fn new() -> Self {
         Scheduler {
             metrics: Arc::new(Metrics::new()),
-            pending: Arc::new(Mutex::new(std::collections::HashMap::new())),
+            pending: Arc::new(Mutex::new(HashMap::new())),
             workers: Vec::new(),
             next_id: std::sync::atomic::AtomicU64::new(1),
+            closing: Arc::new(AtomicBool::new(false)),
             fhe_threads: crate::tfhe::default_fhe_threads(),
         }
     }
@@ -68,7 +134,7 @@ impl Scheduler {
     }
 
     /// Register an engine under `name` with its batching policy; spawns
-    /// the worker thread.
+    /// the supervising worker thread.
     pub fn add_engine(&mut self, name: &str, policy: BatchPolicy, factory: EngineFn) {
         let batcher = Arc::new(Batcher::new(policy));
         let b = Arc::clone(&batcher);
@@ -78,53 +144,107 @@ impl Scheduler {
         let handle = std::thread::spawn(move || {
             let mut body = factory();
             while let Some(batch) = b.next_batch() {
+                // Dequeue-time checkpoint: expired or cancelled requests
+                // are dropped here instead of burning engine time.
+                let mut live = Vec::with_capacity(batch.len());
+                for req in batch {
+                    if req.cancel.is_cancelled() {
+                        respond(&pending, &metrics, &engine_name, &req, Err(FheError::Cancelled));
+                    } else if req.expired() {
+                        metrics.deadline_kills.fetch_add(1, Ordering::Relaxed);
+                        respond(
+                            &pending,
+                            &metrics,
+                            &engine_name,
+                            &req,
+                            Err(FheError::DeadlineExceeded(
+                                "deadline expired while queued".to_string(),
+                            )),
+                        );
+                    } else {
+                        live.push(req);
+                    }
+                }
+                if live.is_empty() {
+                    continue;
+                }
                 metrics.batches.fetch_add(1, Ordering::Relaxed);
-                metrics.batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
-                // A panicking engine body must not kill the worker: convert
-                // panics into per-batch errors and keep serving.
-                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    body(&batch)
-                }))
-                .unwrap_or_else(|p| {
-                    let msg = p
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| p.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "engine panicked".to_string());
-                    Err(format!("engine panic: {msg}"))
-                });
-                let mut pend = pending.lock().unwrap();
-                match result {
-                    Ok(outputs) => {
-                        debug_assert_eq!(outputs.len(), batch.len());
-                        for (req, out) in batch.iter().zip(outputs) {
-                            let latency = req.enqueued.elapsed().as_secs_f64();
-                            metrics.latency.record(latency);
-                            metrics.completed.fetch_add(1, Ordering::Relaxed);
-                            if let Some(tx) = pend.remove(&req.id) {
-                                let (output, result_blob) = out.into_response_fields();
-                                let _ = tx.send(InferResponse {
-                                    id: req.id,
-                                    output,
-                                    result_blob,
-                                    engine: engine_name.clone(),
-                                    latency_s: latency,
-                                    error: None,
-                                });
-                            }
+                metrics.batched_requests.fetch_add(live.len() as u64, Ordering::Relaxed);
+                // A panicking engine body must not kill the worker:
+                // catch, respond, respawn from the factory, keep serving.
+                match catch_unwind(AssertUnwindSafe(|| body(&live))) {
+                    Ok(Ok(outputs)) => {
+                        debug_assert_eq!(outputs.len(), live.len());
+                        let mut saw_panic = false;
+                        for (req, out) in live.iter().zip(outputs) {
+                            saw_panic |=
+                                matches!(&out, Err(FheError::WorkerPanic(_)));
+                            respond(&pending, &metrics, &engine_name, req, out);
+                        }
+                        if saw_panic {
+                            // A pool worker panicked under the body (the
+                            // pool contained it to one job, but the body
+                            // may hold state the panic left mid-update):
+                            // rebuild defensively.
+                            metrics.respawns.fetch_add(1, Ordering::Relaxed);
+                            body = factory();
                         }
                     }
-                    Err(e) => {
-                        for req in &batch {
-                            if let Some(tx) = pend.remove(&req.id) {
-                                let _ = tx.send(InferResponse {
-                                    id: req.id,
-                                    output: Vec::new(),
-                                    result_blob: None,
-                                    engine: engine_name.clone(),
-                                    latency_s: req.enqueued.elapsed().as_secs_f64(),
-                                    error: Some(e.clone()),
-                                });
+                    Ok(Err(e)) => {
+                        // Typed whole-batch failure: propagate to every
+                        // member; the body is intact, no respawn.
+                        for req in &live {
+                            respond(&pending, &metrics, &engine_name, req, Err(e.clone()));
+                        }
+                    }
+                    Err(p) => {
+                        // Wholesale crash. Respawn, then — if several
+                        // members were aboard — replay each solo exactly
+                        // once to pin the poison and save the survivors.
+                        metrics.respawns.fetch_add(1, Ordering::Relaxed);
+                        body = factory();
+                        let msg = panic_message(p);
+                        if live.len() == 1 {
+                            metrics.quarantined.fetch_add(1, Ordering::Relaxed);
+                            respond(
+                                &pending,
+                                &metrics,
+                                &engine_name,
+                                &live[0],
+                                Err(FheError::WorkerPanic(msg)),
+                            );
+                            continue;
+                        }
+                        for req in &live {
+                            metrics.retries.fetch_add(1, Ordering::Relaxed);
+                            let solo = std::slice::from_ref(req);
+                            match catch_unwind(AssertUnwindSafe(|| body(solo))) {
+                                Ok(Ok(mut outs)) => {
+                                    debug_assert_eq!(outs.len(), 1);
+                                    let out = outs.pop().unwrap_or_else(|| {
+                                        Err(FheError::Internal(
+                                            "engine returned no output".to_string(),
+                                        ))
+                                    });
+                                    respond(&pending, &metrics, &engine_name, req, out);
+                                }
+                                Ok(Err(e)) => {
+                                    respond(&pending, &metrics, &engine_name, req, Err(e));
+                                }
+                                Err(p2) => {
+                                    // The poison: quarantine it (no second
+                                    // replay) and respawn once more.
+                                    metrics.quarantined.fetch_add(1, Ordering::Relaxed);
+                                    metrics.respawns.fetch_add(1, Ordering::Relaxed);
+                                    body = factory();
+                                    respond(
+                                        &pending,
+                                        &metrics,
+                                        &engine_name,
+                                        req,
+                                        Err(FheError::WorkerPanic(panic_message(p2))),
+                                    );
+                                }
                             }
                         }
                     }
@@ -144,38 +264,77 @@ impl Scheduler {
     }
 
     /// Submit a request (id is assigned here); returns the response
-    /// receiver, or Err when the engine is unknown or backpressure hits.
-    pub fn submit(
-        &self,
-        mut req: InferRequest,
-    ) -> Result<Receiver<InferResponse>, String> {
+    /// receiver, or a typed error when the engine is unknown,
+    /// backpressure hits, or the scheduler is shutting down.
+    pub fn submit(&self, mut req: InferRequest) -> Result<Receiver<InferResponse>, FheError> {
+        if self.closing.load(Ordering::Relaxed) {
+            return Err(FheError::Shutdown);
+        }
         let key = req.path.batch_key();
-        let worker =
-            self.worker(&key).ok_or_else(|| format!("no engine registered for '{key}'"))?;
+        let worker = self
+            .worker(&key)
+            .ok_or_else(|| FheError::UnknownEngine(format!("no engine registered for '{key}'")))?;
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         req.enqueued = std::time::Instant::now();
         let (tx, rx) = channel();
-        self.pending.lock().unwrap().insert(req.id, tx);
+        self.pending.lock().unwrap_or_else(|e| e.into_inner()).insert(req.id, tx);
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match worker.batcher.submit(req) {
             Ok(()) => Ok(rx),
             Err(rejected) => {
-                self.pending.lock().unwrap().remove(&rejected.id);
+                self.pending.lock().unwrap_or_else(|e| e.into_inner()).remove(&rejected.id);
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(format!("queue full for '{key}'"))
+                if self.closing.load(Ordering::Relaxed) {
+                    Err(FheError::Shutdown)
+                } else {
+                    Err(FheError::QueueFull(format!("queue full for '{key}'")))
+                }
             }
         }
     }
 
-    /// Graceful shutdown: close all batchers, join workers.
+    /// Graceful shutdown: refuse new work, let queued requests drain
+    /// through their engines, join workers, then resolve any receiver
+    /// still pending with `Shutdown` (nothing is ever left hanging).
     pub fn shutdown(&mut self) {
+        self.closing.store(true, Ordering::Relaxed);
         for w in &self.workers {
             w.batcher.close();
         }
+        self.join_and_drain();
+    }
+
+    /// Immediate shutdown: evict queued requests *without* running them
+    /// and fail them (and anything else pending) with `Shutdown`; only
+    /// the batch already inside an engine completes.
+    pub fn shutdown_now(&mut self) {
+        self.closing.store(true, Ordering::Relaxed);
+        for w in &self.workers {
+            let _ = w.batcher.abort();
+        }
+        self.join_and_drain();
+    }
+
+    fn join_and_drain(&mut self) {
         for w in &mut self.workers {
             if let Some(h) = w.handle.take() {
                 let _ = h.join();
             }
+        }
+        // Whatever is still routed (evicted by abort, or orphaned any
+        // other way) resolves with a typed Shutdown error now.
+        let drained: Vec<(u64, Sender<InferResponse>)> =
+            self.pending.lock().unwrap_or_else(|e| e.into_inner()).drain().collect();
+        for (id, tx) in drained {
+            self.metrics.shutdown_drained.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(InferResponse {
+                id,
+                output: Vec::new(),
+                result_blob: None,
+                engine: String::new(),
+                latency_s: 0.0,
+                error: Some(FheError::Shutdown),
+            });
         }
     }
 }
@@ -193,10 +352,12 @@ impl Drop for Scheduler {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::coordinator::request::{EnginePath, Payload};
-    use std::time::Duration;
+    use std::sync::atomic::AtomicU64;
+    use std::time::{Duration, Instant};
 
     fn echo_engine() -> EngineFn {
         Box::new(|| {
@@ -204,10 +365,10 @@ mod tests {
                 Ok(batch
                     .iter()
                     .map(|r| {
-                        EngineOutput::Values(match &r.payload {
+                        Ok(EngineOutput::Values(match &r.payload {
                             Payload::Features(f, _) => f.iter().map(|x| x * 2.0).collect(),
                             _ => vec![r.id as f32],
-                        })
+                        }))
                     })
                     .collect())
             })
@@ -241,16 +402,22 @@ mod tests {
         let err = s
             .submit(InferRequest::new(0, quant_path(), Payload::Tokens(vec![])))
             .unwrap_err();
-        assert!(err.contains("no engine"), "{err}");
+        assert!(matches!(err, FheError::UnknownEngine(_)), "{err:?}");
+        assert_eq!(err.code(), "unknown_engine");
+        assert!(err.to_string().contains("no engine"), "{err}");
     }
 
     #[test]
-    fn errors_propagate_to_all_batch_members() {
+    fn typed_batch_errors_propagate_to_all_batch_members() {
         let mut s = Scheduler::new();
         s.add_engine(
             &quant_path().batch_key(),
             BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5), queue_cap: 64 },
-            Box::new(|| Box::new(|_batch: &[InferRequest]| Err("engine exploded".to_string()))),
+            Box::new(|| {
+                Box::new(|_batch: &[InferRequest]| {
+                    Err(FheError::Internal("engine exploded".to_string()))
+                })
+            }),
         );
         let rxs: Vec<_> = (0..3)
             .map(|i| {
@@ -259,8 +426,37 @@ mod tests {
             .collect();
         for rx in rxs {
             let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-            assert_eq!(resp.error.as_deref(), Some("engine exploded"));
+            assert_eq!(resp.error, Some(FheError::Internal("engine exploded".to_string())));
         }
+        // A typed error is not a crash: the body was never respawned.
+        assert_eq!(s.metrics.respawns.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn per_request_errors_fail_only_their_member() {
+        let mut s = Scheduler::new();
+        s.add_engine(
+            &quant_path().batch_key(),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20), queue_cap: 64 },
+            Box::new(|| {
+                Box::new(|batch: &[InferRequest]| {
+                    Ok(batch
+                        .iter()
+                        .map(|r| match &r.payload {
+                            Payload::Tokens(t) if t == &vec![13] => {
+                                Err(FheError::BadRequest("unlucky".to_string()))
+                            }
+                            _ => Ok(EngineOutput::Values(vec![r.id as f32])),
+                        })
+                        .collect())
+                })
+            }),
+        );
+        let good = s.submit(InferRequest::new(0, quant_path(), Payload::Tokens(vec![1]))).unwrap();
+        let bad = s.submit(InferRequest::new(0, quant_path(), Payload::Tokens(vec![13]))).unwrap();
+        assert!(good.recv_timeout(Duration::from_secs(5)).unwrap().error.is_none());
+        let resp = bad.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.error, Some(FheError::BadRequest("unlucky".to_string())));
     }
 
     #[test]
@@ -287,5 +483,154 @@ mod tests {
         }
         assert_eq!(s.metrics.completed.load(Ordering::Relaxed), 500);
         assert!(s.metrics.mean_batch_size() > 1.0, "batching should kick in");
+    }
+
+    #[test]
+    fn engine_respawned_after_panic_and_keeps_serving() {
+        let mut s = Scheduler::new();
+        let bodies = Arc::new(AtomicU64::new(0));
+        let bodies_in_factory = Arc::clone(&bodies);
+        s.add_engine(
+            &quant_path().batch_key(),
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1), queue_cap: 64 },
+            Box::new(move || {
+                // Body #1 always panics; respawned bodies echo.
+                let generation = bodies_in_factory.fetch_add(1, Ordering::Relaxed) + 1;
+                Box::new(move |batch: &[InferRequest]| {
+                    if generation == 1 {
+                        panic!("engine bug");
+                    }
+                    Ok(batch.iter().map(|r| Ok(EngineOutput::Values(vec![r.id as f32]))).collect())
+                })
+            }),
+        );
+        let rx1 = s.submit(InferRequest::new(0, quant_path(), Payload::Tokens(vec![]))).unwrap();
+        let resp1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap();
+        match resp1.error {
+            Some(FheError::WorkerPanic(ref m)) => assert!(m.contains("engine bug"), "{m}"),
+            ref other => panic!("want WorkerPanic, got {other:?}"),
+        }
+        // The supervisor rebuilt the body: the same engine keeps serving.
+        let rx2 = s.submit(InferRequest::new(0, quant_path(), Payload::Tokens(vec![]))).unwrap();
+        assert!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().error.is_none());
+        assert_eq!(s.metrics.respawns.load(Ordering::Relaxed), 1);
+        assert_eq!(s.metrics.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(s.metrics.quarantined.load(Ordering::Relaxed), 1);
+        assert_eq!(bodies.load(Ordering::Relaxed), 2, "factory called once per spawn");
+    }
+
+    #[test]
+    fn poison_batch_quarantined_by_bounded_solo_replay() {
+        // Batch of 3 with one poison member: the wholesale crash is
+        // replayed solo (each member exactly once); the two survivors
+        // succeed, the poison is quarantined with WorkerPanic.
+        let mut s = Scheduler::new();
+        let poison = |r: &InferRequest| matches!(&r.payload, Payload::Tokens(t) if t == &vec![13]);
+        s.add_engine(
+            &quant_path().batch_key(),
+            BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(5), queue_cap: 64 },
+            Box::new(move || {
+                Box::new(move |batch: &[InferRequest]| {
+                    if batch.iter().any(poison) {
+                        panic!("poisoned job");
+                    }
+                    Ok(batch.iter().map(|r| Ok(EngineOutput::Values(vec![r.id as f32]))).collect())
+                })
+            }),
+        );
+        let payloads = [vec![1], vec![13], vec![2]];
+        let rxs: Vec<_> = payloads
+            .iter()
+            .map(|t| {
+                s.submit(InferRequest::new(0, quant_path(), Payload::Tokens(t.clone()))).unwrap()
+            })
+            .collect();
+        let resps: Vec<_> =
+            rxs.iter().map(|rx| rx.recv_timeout(Duration::from_secs(5)).unwrap()).collect();
+        assert!(resps[0].error.is_none(), "{:?}", resps[0].error);
+        assert!(resps[2].error.is_none(), "{:?}", resps[2].error);
+        match resps[1].error {
+            Some(FheError::WorkerPanic(ref m)) => assert!(m.contains("poisoned job"), "{m}"),
+            ref other => panic!("want WorkerPanic, got {other:?}"),
+        }
+        let m = &s.metrics;
+        assert_eq!(m.retries.load(Ordering::Relaxed), 3, "each member replayed once");
+        assert_eq!(m.quarantined.load(Ordering::Relaxed), 1);
+        assert_eq!(m.respawns.load(Ordering::Relaxed), 2, "batch crash + poison replay");
+        assert_eq!(m.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn expired_deadline_dropped_at_dequeue() {
+        let mut s = Scheduler::new();
+        s.add_engine(&quant_path().batch_key(), BatchPolicy::default(), echo_engine());
+        let req = InferRequest::new(0, quant_path(), Payload::Tokens(vec![]))
+            .with_deadline(Instant::now() - Duration::from_millis(1));
+        let rx = s.submit(req).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(
+            matches!(resp.error, Some(FheError::DeadlineExceeded(_))),
+            "{:?}",
+            resp.error
+        );
+        assert_eq!(s.metrics.deadline_kills.load(Ordering::Relaxed), 1);
+        assert_eq!(s.metrics.completed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn cancelled_request_dropped_at_dequeue() {
+        let mut s = Scheduler::new();
+        s.add_engine(&quant_path().batch_key(), BatchPolicy::default(), echo_engine());
+        let req = InferRequest::new(0, quant_path(), Payload::Tokens(vec![]));
+        let token = req.cancel.clone();
+        token.cancel();
+        let rx = s.submit(req).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.error, Some(FheError::Cancelled));
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests_with_shutdown_error() {
+        // A slow single-request engine with a deep queue: shutdown_now
+        // must resolve every receiver — the in-flight batch finishes,
+        // everything still queued fails with the typed Shutdown error.
+        let mut s = Scheduler::new();
+        s.add_engine(
+            &quant_path().batch_key(),
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1), queue_cap: 64 },
+            Box::new(|| {
+                Box::new(|batch: &[InferRequest]| {
+                    std::thread::sleep(Duration::from_millis(150));
+                    Ok(batch.iter().map(|r| Ok(EngineOutput::Values(vec![r.id as f32]))).collect())
+                })
+            }),
+        );
+        let rxs: Vec<_> = (0..5)
+            .map(|i| {
+                s.submit(InferRequest::new(i, quant_path(), Payload::Tokens(vec![]))).unwrap()
+            })
+            .collect();
+        // Let the worker pick up the first request, then pull the plug.
+        std::thread::sleep(Duration::from_millis(50));
+        s.shutdown_now();
+        let mut ok = 0;
+        let mut shut = 0;
+        for rx in rxs {
+            // Every receiver resolves — the old hang is the regression.
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            match resp.error {
+                None => ok += 1,
+                Some(FheError::Shutdown) => shut += 1,
+                ref other => panic!("unexpected error {other:?}"),
+            }
+        }
+        assert_eq!(ok + shut, 5);
+        assert!(shut >= 1, "queued requests must drain with Shutdown");
+        assert_eq!(s.metrics.shutdown_drained.load(Ordering::Relaxed), shut);
+        // New submissions are refused while shut down.
+        let err =
+            s.submit(InferRequest::new(0, quant_path(), Payload::Tokens(vec![]))).unwrap_err();
+        assert_eq!(err, FheError::Shutdown);
     }
 }

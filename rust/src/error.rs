@@ -1,0 +1,164 @@
+//! Library-wide typed error taxonomy for the serving path.
+//!
+//! Every fallible seam between the TFHE pool, the plan executor, the
+//! coordinator and the wire protocol speaks [`FheError`] instead of bare
+//! `String`s. Each variant carries a **stable machine-readable code**
+//! ([`FheError::code`]) that travels on the wire as the response's
+//! `error_code` field, next to the human-readable message — clients
+//! branch on the code, humans read the message, and neither breaks when
+//! the other is reworded.
+
+/// Typed error for the serving path (coordinator, TFHE pool, executor,
+/// wire protocol). Variants map 1:1 onto stable wire codes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FheError {
+    /// The request or engine configuration does not fit the circuit plan
+    /// (wrong bundle arity, unknown mechanism, zero heads, ...).
+    PlanInvalid(String),
+    /// No engine is registered under the request's batch key.
+    UnknownEngine(String),
+    /// A session or ciphertext bundle the request references does not
+    /// exist (never created, already consumed, or evicted).
+    KeyMissing(String),
+    /// A LUT group or parameter combination exceeds the noise budget
+    /// (e.g. a packed multi-value group past `max_multi_lut`).
+    NoiseBudgetExceeded(String),
+    /// A worker panicked while executing this request's work. The
+    /// message carries the panic payload; the pool isolates the blast
+    /// radius to the requests that depended on the poisoned job.
+    WorkerPanic(String),
+    /// The request's deadline expired; remaining PBS levels were
+    /// abandoned (cooperative cancellation at level boundaries).
+    DeadlineExceeded(String),
+    /// The request's cancellation token fired.
+    Cancelled,
+    /// The scheduler is shutting down; queued requests drain with this
+    /// error instead of hanging their receivers.
+    Shutdown,
+    /// Backpressure: the engine's bounded queue is full.
+    QueueFull(String),
+    /// The request itself is malformed for the engine it targets
+    /// (wrong payload kind, bad feature shape, ...).
+    BadRequest(String),
+    /// Wire-protocol error: unparseable line, unknown op, invalid UTF-8.
+    Protocol(String),
+    /// Anything that does not fit the taxonomy (kept rare on purpose).
+    Internal(String),
+}
+
+impl FheError {
+    /// The stable machine-readable code for this error — the wire
+    /// `error_code` field. Codes are API: never renamed, only added.
+    pub fn code(&self) -> &'static str {
+        match self {
+            FheError::PlanInvalid(_) => "plan_invalid",
+            FheError::UnknownEngine(_) => "unknown_engine",
+            FheError::KeyMissing(_) => "key_missing",
+            FheError::NoiseBudgetExceeded(_) => "noise_budget_exceeded",
+            FheError::WorkerPanic(_) => "worker_panic",
+            FheError::DeadlineExceeded(_) => "deadline_exceeded",
+            FheError::Cancelled => "cancelled",
+            FheError::Shutdown => "shutdown",
+            FheError::QueueFull(_) => "queue_full",
+            FheError::BadRequest(_) => "bad_request",
+            FheError::Protocol(_) => "protocol",
+            FheError::Internal(_) => "internal",
+        }
+    }
+
+    /// Rebuild a typed error from its wire `(code, message)` pair — the
+    /// client-side inverse of [`Self::code`]. Unknown codes (a newer
+    /// server) land in [`FheError::Internal`] with the code prefixed, so
+    /// nothing is silently dropped.
+    pub fn from_code(code: &str, msg: &str) -> FheError {
+        let m = msg.to_string();
+        match code {
+            "plan_invalid" => FheError::PlanInvalid(m),
+            "unknown_engine" => FheError::UnknownEngine(m),
+            "key_missing" => FheError::KeyMissing(m),
+            "noise_budget_exceeded" => FheError::NoiseBudgetExceeded(m),
+            "worker_panic" => FheError::WorkerPanic(m),
+            "deadline_exceeded" => FheError::DeadlineExceeded(m),
+            "cancelled" => FheError::Cancelled,
+            "shutdown" => FheError::Shutdown,
+            "queue_full" => FheError::QueueFull(m),
+            "bad_request" => FheError::BadRequest(m),
+            "protocol" => FheError::Protocol(m),
+            "internal" => FheError::Internal(m),
+            other => FheError::Internal(format!("{other}: {m}")),
+        }
+    }
+}
+
+impl std::fmt::Display for FheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FheError::PlanInvalid(m)
+            | FheError::UnknownEngine(m)
+            | FheError::KeyMissing(m)
+            | FheError::NoiseBudgetExceeded(m)
+            | FheError::WorkerPanic(m)
+            | FheError::DeadlineExceeded(m)
+            | FheError::QueueFull(m)
+            | FheError::BadRequest(m)
+            | FheError::Protocol(m)
+            | FheError::Internal(m) => write!(f, "{m}"),
+            FheError::Cancelled => write!(f, "request cancelled"),
+            FheError::Shutdown => write!(f, "scheduler shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for FheError {}
+
+/// Render a `catch_unwind` payload as a message (panics carry either a
+/// `&str` or a `String`; anything else gets a generic label). Shared by
+/// the PBS pool's per-job isolation and the scheduler's batch guard.
+pub fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "worker panicked (non-string payload)".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_roundtrip_through_from_code() {
+        let cases = vec![
+            FheError::PlanInvalid("p".into()),
+            FheError::UnknownEngine("u".into()),
+            FheError::KeyMissing("k".into()),
+            FheError::NoiseBudgetExceeded("n".into()),
+            FheError::WorkerPanic("w".into()),
+            FheError::DeadlineExceeded("d".into()),
+            FheError::Cancelled,
+            FheError::Shutdown,
+            FheError::QueueFull("q".into()),
+            FheError::BadRequest("b".into()),
+            FheError::Protocol("pr".into()),
+            FheError::Internal("i".into()),
+        ];
+        for e in cases {
+            let back = FheError::from_code(e.code(), &e.to_string());
+            assert_eq!(back.code(), e.code(), "{e:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_code_is_preserved_not_dropped() {
+        let e = FheError::from_code("quota_exhausted", "too many keys");
+        assert_eq!(e.code(), "internal");
+        assert!(e.to_string().contains("quota_exhausted"), "{e}");
+    }
+
+    #[test]
+    fn panic_message_extracts_common_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p), "boom 7");
+        let p = std::panic::catch_unwind(|| panic!("static")).unwrap_err();
+        assert_eq!(panic_message(p), "static");
+    }
+}

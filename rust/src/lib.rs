@@ -62,13 +62,19 @@
 pub mod attention;
 pub mod bench_harness;
 pub mod bench_tables;
+// The serving path must never crash on a request: every request-
+// triggerable failure is a typed `error::FheError`, and the lint keeps
+// new `unwrap()` calls from sneaking raw panics back in.
+#[deny(clippy::unwrap_used)]
 pub mod coordinator;
+pub mod error;
 pub mod fhe_circuits;
 pub mod model;
 pub mod optimizer;
 pub mod quant;
 #[cfg(feature = "xla")]
 pub mod runtime;
+#[deny(clippy::unwrap_used)]
 pub mod server;
 pub mod tensor;
 pub mod tfhe;

@@ -52,8 +52,10 @@ fn print_help() {
                  [--threads N]\n\
                Start the serving coordinator (quant + PJRT engines); --threads\n\
                sets the PBS worker budget for encrypted engines.\n\
-           infer [--mechanism inhibitor] [--seq 16] [--dim 32]\n\
-               One-shot quantized inference on random features.\n\
+           infer [--mechanism inhibitor] [--seq 16] [--dim 32] [--deadline-ms N]\n\
+               One-shot quantized inference on random features; --deadline-ms\n\
+               attaches a request deadline (expired requests fail with the\n\
+               stable error code 'deadline_exceeded').\n\
            encrypt-infer [--mechanism inhibitor] [--seq 2] [--bits 5] [--threads N]\n\
                          [--heads H] [--shared-kv] [--layers L]\n\
                Generate keys, encrypt Q/K/V, run encrypted attention, decrypt.\n\
@@ -69,8 +71,17 @@ fn print_help() {
                Print Table 2 + Table 3 reproductions.\n\
            selftest\n\
                Whole-stack smoke test (quant, FHE, PJRT if artifacts exist).\n\
-           client [--addr 127.0.0.1:7474] [--op ping|metrics|shutdown]\n\
-               Talk to a running server."
+           client [--addr 127.0.0.1:7474] [--op ping|metrics|shutdown|infer]\n\
+                  [--mechanism inhibitor] [--deadline-ms N]\n\
+               Talk to a running server ('infer' sends random features;\n\
+               --deadline-ms rides the wire as the request's budget).\n\
+         \n\
+         ENVIRONMENT:\n\
+           FHE_THREADS   PBS worker threads (default: all cores)\n\
+           FHE_NO_REWRITE  disable the circuit-plan rewrite passes\n\
+           FHE_FAULTS    deterministic fault injection for the serving\n\
+                         path, e.g. 'panic@pbs:17,deadline@level:2'\n\
+                         (see rust/src/tfhe/faults.rs)"
     );
 }
 
@@ -162,22 +173,33 @@ fn cmd_infer(args: &[String]) -> i32 {
     let mut rng = Xoshiro256::new(1);
     let features: Vec<f32> =
         (0..seq * in_features).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
-    match c.infer_blocking(
+    let deadline_ms: Option<u64> = flag(args, "--deadline-ms", "").parse().ok();
+    let mut req = inhibitor::coordinator::InferRequest::new(
+        0,
         inhibitor::coordinator::EnginePath::QuantInt(mechanism.name().into()),
         Payload::Features(features, (seq, in_features)),
-        Duration::from_secs(30),
-    ) {
-        Ok(resp) => {
-            println!(
-                "engine={} latency={:.3}ms output={:?}",
-                resp.engine,
-                resp.latency_s * 1e3,
-                resp.output
-            );
-            0
-        }
+    );
+    if let Some(ms) = deadline_ms {
+        req = req.with_deadline(std::time::Instant::now() + Duration::from_millis(ms));
+    }
+    match c.infer_request_blocking(req, Duration::from_secs(30)) {
+        Ok(resp) => match resp.error {
+            None => {
+                println!(
+                    "engine={} latency={:.3}ms output={:?}",
+                    resp.engine,
+                    resp.latency_s * 1e3,
+                    resp.output
+                );
+                0
+            }
+            Some(e) => {
+                eprintln!("inference failed [{}]: {e}", e.code());
+                1
+            }
+        },
         Err(e) => {
-            eprintln!("inference failed: {e}");
+            eprintln!("inference failed [{}]: {e}", e.code());
             1
         }
     }
@@ -466,6 +488,21 @@ fn cmd_client(args: &[String]) -> i32 {
         "ping" => client.ping().map(|ok| format!("ping ok={ok}")),
         "metrics" => client.metrics(),
         "shutdown" => client.shutdown().map(|_| "shutdown sent".to_string()),
+        "infer" => {
+            // Matches the serve demo's quant engine contract (seq 16,
+            // 2 input features).
+            let mech = flag(args, "--mechanism", "inhibitor");
+            let deadline_ms: Option<u64> = flag(args, "--deadline-ms", "").parse().ok();
+            let mut rng = Xoshiro256::new(1);
+            let features: Vec<f32> =
+                (0..16 * 2).map(|_| rng.next_gaussian() as f32 * 0.5).collect();
+            client.infer_with_deadline("quant", &mech, features, 16, 2, deadline_ms).map(
+                |r| match r {
+                    Ok((out, lat)) => format!("latency={:.3}ms output={out:?}", lat * 1e3),
+                    Err(e) => format!("inference failed [{}]: {e}", e.code()),
+                },
+            )
+        }
         other => {
             eprintln!("unknown op '{other}'");
             return 2;

@@ -2,6 +2,7 @@
 //! and the `inhibitor client` CLI subcommand).
 
 use super::proto::Request;
+use crate::error::FheError;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -45,7 +46,10 @@ impl Client {
         Ok(())
     }
 
-    /// Run an inference; returns (output, latency reported by the server).
+    /// Run an inference; returns (output, latency reported by the server),
+    /// or the server's failure rebuilt as a **typed** [`FheError`] from
+    /// the wire `error_code` (so callers can branch on
+    /// `deadline_exceeded` vs `worker_panic` instead of grepping text).
     pub fn infer(
         &mut self,
         engine: &str,
@@ -53,13 +57,29 @@ impl Client {
         features: Vec<f32>,
         rows: usize,
         cols: usize,
-    ) -> std::io::Result<Result<(Vec<f32>, f64), String>> {
+    ) -> std::io::Result<Result<(Vec<f32>, f64), FheError>> {
+        self.infer_with_deadline(engine, target, features, rows, cols, None)
+    }
+
+    /// [`Self::infer`] with an optional relative deadline budget in
+    /// milliseconds, enforced server-side (scheduler dequeue + PBS level
+    /// boundaries).
+    pub fn infer_with_deadline(
+        &mut self,
+        engine: &str,
+        target: &str,
+        features: Vec<f32>,
+        rows: usize,
+        cols: usize,
+        deadline_ms: Option<u64>,
+    ) -> std::io::Result<Result<(Vec<f32>, f64), FheError>> {
         let req = Request::Infer {
             engine: engine.into(),
             target: target.into(),
             features,
             rows,
             cols,
+            deadline_ms,
         };
         let j = self.roundtrip(&req.to_json_line())?;
         if j.get("ok").and_then(|v| v.as_bool()) == Some(true) {
@@ -71,11 +91,13 @@ impl Client {
             let lat = j.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
             Ok(Ok((out, lat)))
         } else {
-            Ok(Err(j
-                .get("error")
-                .and_then(|v| v.as_str())
-                .unwrap_or("unknown error")
-                .to_string()))
+            let msg = j.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error");
+            let err = match j.get("error_code").and_then(|v| v.as_str()) {
+                Some(code) => FheError::from_code(code, msg),
+                // Pre-PR-6 server without error codes: keep the message.
+                None => FheError::Internal(msg.to_string()),
+            };
+            Ok(Err(err))
         }
     }
 }

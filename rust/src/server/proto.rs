@@ -5,13 +5,20 @@
 //!
 //! Requests:
 //!   {"op":"infer","engine":"quant","mechanism":"inhibitor",
-//!    "features":[...],"rows":R,"cols":C}
+//!    "features":[...],"rows":R,"cols":C[,"deadline_ms":N]}
 //!   {"op":"infer","engine":"pjrt","model":"model_inhibitor",
 //!    "features":[...],"rows":R,"cols":C}
 //!   {"op":"metrics"}   {"op":"ping"}   {"op":"shutdown"}
 //!
 //! Responses:
-//!   {"ok":true,"output":[...],"latency_s":...}  |  {"ok":false,"error":"..."}
+//!   {"ok":true,"output":[...],"latency_s":...}
+//!   {"ok":false,"error":"...","error_code":"..."}
+//!
+//! Error lines carry a **stable machine-readable `error_code`**
+//! ([`FheError::code`] — e.g. `"deadline_exceeded"`, `"worker_panic"`)
+//! alongside the human-readable message; clients rebuild the typed error
+//! with [`FheError::from_code`]. `deadline_ms` is a relative budget the
+//! server turns into an absolute deadline at parse time.
 //!
 //! Encrypted results travel as a typed `"result_blob":<id>` field (the
 //! session-store reference), never inside the f32 `output` vector. The
@@ -20,6 +27,7 @@
 //! (only reachable by deliberately partitioning the id space via
 //! `Session::set_next_blob_id`) are refused loudly rather than rounded.
 
+use crate::error::FheError;
 use crate::util::json::Json;
 
 /// A parsed client request.
@@ -34,12 +42,19 @@ pub enum Request {
         features: Vec<f32>,
         rows: usize,
         cols: usize,
+        /// Relative deadline budget in milliseconds; the server converts
+        /// it to an absolute `Instant` when the request is accepted.
+        deadline_ms: Option<u64>,
     },
 }
 
 impl Request {
-    pub fn parse(line: &str) -> Result<Request, String> {
-        let j = Json::parse(line).map_err(|e| e.to_string())?;
+    /// Parse one request line. Unparseable JSON is a [`FheError::Protocol`]
+    /// failure; well-formed JSON with bad fields is [`FheError::BadRequest`].
+    pub fn parse(line: &str) -> Result<Request, FheError> {
+        let j = Json::parse(line)
+            .map_err(|e| FheError::Protocol(format!("malformed request line: {e}")))?;
+        let bad = |m: &str| FheError::BadRequest(m.to_string());
         match j.get("op").and_then(|v| v.as_str()) {
             Some("ping") => Ok(Request::Ping),
             Some("metrics") => Ok(Request::Metrics),
@@ -48,35 +63,50 @@ impl Request {
                 let engine = j
                     .get("engine")
                     .and_then(|v| v.as_str())
-                    .ok_or("missing 'engine'")?
+                    .ok_or_else(|| bad("missing 'engine'"))?
                     .to_string();
                 let target = j
                     .get("mechanism")
                     .or_else(|| j.get("model"))
                     .and_then(|v| v.as_str())
-                    .ok_or("missing 'mechanism'/'model'")?
+                    .ok_or_else(|| bad("missing 'mechanism'/'model'"))?
                     .to_string();
                 let features = j
                     .get("features")
                     .and_then(|v| v.as_arr())
-                    .ok_or("missing 'features'")?
+                    .ok_or_else(|| bad("missing 'features'"))?
                     .iter()
-                    .map(|v| v.as_f64().map(|f| f as f32).ok_or("non-numeric feature"))
+                    .map(|v| {
+                        v.as_f64().map(|f| f as f32).ok_or_else(|| bad("non-numeric feature"))
+                    })
                     .collect::<Result<Vec<_>, _>>()?;
-                let rows =
-                    j.get("rows").and_then(|v| v.as_i64()).ok_or("missing 'rows'")? as usize;
-                let cols =
-                    j.get("cols").and_then(|v| v.as_i64()).ok_or("missing 'cols'")? as usize;
+                let rows = j
+                    .get("rows")
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| bad("missing 'rows'"))? as usize;
+                let cols = j
+                    .get("cols")
+                    .and_then(|v| v.as_i64())
+                    .ok_or_else(|| bad("missing 'cols'"))? as usize;
                 if rows * cols != features.len() {
-                    return Err(format!(
+                    return Err(FheError::BadRequest(format!(
                         "features length {} != rows*cols {}",
                         features.len(),
                         rows * cols
-                    ));
+                    )));
                 }
-                Ok(Request::Infer { engine, target, features, rows, cols })
+                let deadline_ms = match j.get("deadline_ms") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_i64()
+                            .filter(|&ms| ms >= 0)
+                            .ok_or_else(|| bad("'deadline_ms' must be a non-negative integer"))?
+                            as u64,
+                    ),
+                };
+                Ok(Request::Infer { engine, target, features, rows, cols, deadline_ms })
             }
-            other => Err(format!("unknown op {other:?}")),
+            other => Err(FheError::BadRequest(format!("unknown op {other:?}"))),
         }
     }
 
@@ -85,9 +115,9 @@ impl Request {
             Request::Ping => r#"{"op":"ping"}"#.to_string(),
             Request::Metrics => r#"{"op":"metrics"}"#.to_string(),
             Request::Shutdown => r#"{"op":"shutdown"}"#.to_string(),
-            Request::Infer { engine, target, features, rows, cols } => {
+            Request::Infer { engine, target, features, rows, cols, deadline_ms } => {
                 let key = if engine == "pjrt" { "model" } else { "mechanism" };
-                Json::obj(vec![
+                let mut fields = vec![
                     ("op", Json::str("infer")),
                     ("engine", Json::str(engine.clone())),
                     (key, Json::str(target.clone())),
@@ -97,8 +127,11 @@ impl Request {
                     ),
                     ("rows", Json::num(*rows as f64)),
                     ("cols", Json::num(*cols as f64)),
-                ])
-                .to_string()
+                ];
+                if let Some(ms) = deadline_ms {
+                    fields.push(("deadline_ms", Json::num(*ms as f64)));
+                }
+                Json::obj(fields).to_string()
             }
         }
     }
@@ -124,9 +157,9 @@ pub fn ok_response(output: &[f32], result_blob: Option<u64>, latency_s: f64) -> 
     ];
     if let Some(id) = result_blob {
         if id >= (1u64 << 53) {
-            return err_response(&format!(
+            return error_response(&FheError::Protocol(format!(
                 "result blob id {id} exceeds the JSON-number exact range"
-            ));
+            )));
         }
         fields.push(("result_blob", Json::num(id as f64)));
     }
@@ -134,9 +167,15 @@ pub fn ok_response(output: &[f32], result_blob: Option<u64>, latency_s: f64) -> 
     Json::obj(fields).to_string()
 }
 
-/// Build an error response line.
-pub fn err_response(msg: &str) -> String {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]).to_string()
+/// Build an error response line: human-readable `error` plus the stable
+/// machine-readable `error_code` ([`FheError::code`]).
+pub fn error_response(err: &FheError) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(err.to_string())),
+        ("error_code", Json::str(err.code())),
+    ])
+    .to_string()
 }
 
 /// Build a free-form text response (metrics).
@@ -145,6 +184,7 @@ pub fn text_response(text: &str) -> String {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 
@@ -156,9 +196,29 @@ mod tests {
             features: vec![1.0, 2.0, 3.0, 4.0],
             rows: 2,
             cols: 2,
+            deadline_ms: None,
         };
         let line = req.to_json_line();
         assert_eq!(Request::parse(&line).unwrap(), req);
+    }
+
+    #[test]
+    fn parse_roundtrip_infer_with_deadline() {
+        let req = Request::Infer {
+            engine: "quant".into(),
+            target: "inhibitor".into(),
+            features: vec![1.0],
+            rows: 1,
+            cols: 1,
+            deadline_ms: Some(250),
+        };
+        let line = req.to_json_line();
+        assert!(line.contains("deadline_ms"), "{line}");
+        assert_eq!(Request::parse(&line).unwrap(), req);
+        // Negative budgets are rejected, not wrapped into huge u64s.
+        let neg = r#"{"op":"infer","engine":"quant","mechanism":"x","features":[1],"rows":1,"cols":1,"deadline_ms":-5}"#;
+        let err = Request::parse(neg).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
     }
 
     #[test]
@@ -169,13 +229,16 @@ mod tests {
     }
 
     #[test]
-    fn rejects_malformed() {
-        assert!(Request::parse("not json").is_err());
-        assert!(Request::parse(r#"{"op":"teleport"}"#).is_err());
-        assert!(Request::parse(
-            r#"{"op":"infer","engine":"quant","mechanism":"x","features":[1],"rows":2,"cols":2}"#
+    fn rejects_malformed_with_typed_errors() {
+        // Unparseable bytes are a protocol error; structurally-valid JSON
+        // with bad fields is a bad request.
+        assert_eq!(Request::parse("not json").unwrap_err().code(), "protocol");
+        assert_eq!(Request::parse(r#"{"op":"teleport"}"#).unwrap_err().code(), "bad_request");
+        let err = Request::parse(
+            r#"{"op":"infer","engine":"quant","mechanism":"x","features":[1],"rows":2,"cols":2}"#,
         )
-        .is_err());
+        .unwrap_err();
+        assert_eq!(err.code(), "bad_request");
     }
 
     #[test]
@@ -183,7 +246,7 @@ mod tests {
         for s in [
             ok_response(&[1.0, -2.5], None, 0.01),
             ok_response(&[], Some((1u64 << 24) + 7), 0.01),
-            err_response("boom"),
+            error_response(&FheError::Internal("boom".into())),
             text_response("a\nb"),
         ] {
             crate::util::json::Json::parse(&s).unwrap();
@@ -199,5 +262,20 @@ mod tests {
         let too_big = ok_response(&[], Some(1u64 << 53), 0.5);
         let j = crate::util::json::Json::parse(&too_big).unwrap();
         assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+    }
+
+    #[test]
+    fn error_lines_carry_stable_codes_that_roundtrip() {
+        let err = FheError::DeadlineExceeded("late by 3 levels".into());
+        let line = error_response(&err);
+        let j = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(j.get("error_code").and_then(|v| v.as_str()), Some("deadline_exceeded"));
+        // A client rebuilds the typed error from the wire fields.
+        let rebuilt = FheError::from_code(
+            j.get("error_code").and_then(|v| v.as_str()).unwrap(),
+            j.get("error").and_then(|v| v.as_str()).unwrap(),
+        );
+        assert_eq!(rebuilt, err);
     }
 }

@@ -1,13 +1,29 @@
 //! TCP serving front-end (S9): JSON-lines over std::net, one handler
 //! thread per connection, all inference flowing through the coordinator.
+//!
+//! Hardening (PR 6): each connection reads with a bounded timeout, so
+//! handler threads poll the shutdown flag instead of blocking forever on
+//! an idle socket; partially-received lines survive the poll ticks.
+//! Malformed input (bad JSON, invalid UTF-8) gets a typed error line
+//! with its stable `error_code` rather than an opaque string. Shutdown
+//! is graceful: in-flight requests finish and their replies are written
+//! before the handlers exit and the listener joins them.
 
-use super::proto::{err_response, ok_response, text_response, Request};
-use crate::coordinator::{Coordinator, EnginePath, Payload};
+use super::proto::{error_response, ok_response, text_response, Request};
+use crate::coordinator::{Coordinator, EnginePath, InferRequest, Payload};
+use crate::error::FheError;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// How long a connection read may block before the handler re-checks
+/// the shutdown flag — bounds shutdown latency for idle connections.
+const READ_POLL: Duration = Duration::from_millis(250);
+
+/// Per-request response budget when the client sent no `deadline_ms`.
+const DEFAULT_INFER_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Serve until a shutdown request arrives. Returns the bound address
 /// through `on_ready` (used by tests/benches binding port 0).
@@ -34,6 +50,9 @@ pub fn serve(
             Err(e) => return Err(e),
         }
     }
+    // Graceful drain: every handler finishes its in-flight request and
+    // writes the reply before exiting (they notice `stop` within
+    // READ_POLL once idle).
     for h in handlers {
         let _ = h.join();
     }
@@ -41,58 +60,117 @@ pub fn serve(
 }
 
 fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<AtomicBool>) {
-    let peer = stream.peer_addr().ok();
+    // The listener is non-blocking; make sure the accepted socket is not
+    // (inheritance is platform-dependent) so the read timeout governs.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(READ_POLL));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match Request::parse(&line) {
-            Err(e) => err_response(&e),
-            Ok(Request::Ping) => text_response("pong"),
-            Ok(Request::Metrics) => text_response(&coordinator.metrics().summary()),
-            Ok(Request::Shutdown) => {
-                stop.store(true, Ordering::Relaxed);
-                let _ = writeln!(writer, "{}", text_response("shutting down"));
-                break;
-            }
-            Ok(Request::Infer { engine, target, features, rows, cols }) => {
-                let path = match engine.as_str() {
-                    "quant" => EnginePath::QuantInt(target),
-                    "pjrt" => EnginePath::Pjrt(target),
-                    other => {
-                        let _ = writeln!(
-                            writer,
-                            "{}",
-                            err_response(&format!("unknown engine '{other}'"))
-                        );
-                        continue;
-                    }
-                };
-                match coordinator.infer_blocking(
-                    path,
-                    Payload::Features(features, (rows, cols)),
-                    Duration::from_secs(60),
-                ) {
-                    Ok(resp) => match resp.error {
-                        None => ok_response(&resp.output, resp.result_blob, resp.latency_s),
-                        Some(e) => err_response(&e),
-                    },
-                    Err(e) => err_response(&e),
+    let mut reader = BufReader::new(stream);
+    // One persistent line buffer: a read that times out mid-line keeps
+    // the partial bytes here and the next tick appends to them.
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {
+                let l = std::mem::take(&mut line);
+                let l = l.trim();
+                if l.is_empty() {
+                    continue;
+                }
+                match handle_line(l, &coordinator, &stop, &mut writer) {
+                    LineOutcome::Continue => {}
+                    LineOutcome::Close => break,
                 }
             }
-        };
-        if writeln!(writer, "{reply}").is_err() {
-            break;
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Idle poll tick (partial input, if any, stays in `line`):
+                // exit promptly once shutdown begins.
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // Not UTF-8: tell the client in-protocol, then drop the
+                // connection (the stream offset is unrecoverable).
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    error_response(&FheError::Protocol(
+                        "request line is not valid UTF-8".to_string()
+                    ))
+                );
+                break;
+            }
+            Err(_) => break,
         }
     }
-    let _ = peer;
+}
+
+enum LineOutcome {
+    Continue,
+    Close,
+}
+
+fn handle_line(
+    line: &str,
+    coordinator: &Coordinator,
+    stop: &AtomicBool,
+    writer: &mut TcpStream,
+) -> LineOutcome {
+    let reply = match Request::parse(line) {
+        Err(e) => error_response(&e),
+        Ok(Request::Ping) => text_response("pong"),
+        Ok(Request::Metrics) => text_response(&coordinator.metrics().summary()),
+        Ok(Request::Shutdown) => {
+            stop.store(true, Ordering::Relaxed);
+            let _ = writeln!(writer, "{}", text_response("shutting down"));
+            return LineOutcome::Close;
+        }
+        Ok(Request::Infer { engine, target, features, rows, cols, deadline_ms }) => {
+            let path = match engine.as_str() {
+                "quant" => EnginePath::QuantInt(target),
+                "pjrt" => EnginePath::Pjrt(target),
+                other => {
+                    let e = FheError::UnknownEngine(format!("unknown engine '{other}'"));
+                    let _ = writeln!(writer, "{}", error_response(&e));
+                    return LineOutcome::Continue;
+                }
+            };
+            // The relative wire budget becomes an absolute deadline the
+            // scheduler drops on at dequeue and the encrypted executor
+            // checks at every PBS level boundary.
+            let mut req =
+                InferRequest::new(0, path, Payload::Features(features, (rows, cols)));
+            let timeout = match deadline_ms {
+                Some(ms) => {
+                    let budget = Duration::from_millis(ms);
+                    req = req.with_deadline(Instant::now() + budget);
+                    // Allow the deadline machinery to answer first; the
+                    // recv timeout is only the backstop.
+                    budget + Duration::from_secs(5)
+                }
+                None => DEFAULT_INFER_TIMEOUT,
+            };
+            match coordinator.infer_request_blocking(req, timeout) {
+                Ok(resp) => match resp.error {
+                    None => ok_response(&resp.output, resp.result_blob, resp.latency_s),
+                    Some(e) => error_response(&e),
+                },
+                Err(e) => error_response(&e),
+            }
+        }
+    };
+    if writeln!(writer, "{reply}").is_err() {
+        return LineOutcome::Close;
+    }
+    LineOutcome::Continue
 }

@@ -42,6 +42,7 @@
 //! per-bit child RNGs derived sequentially so the key is thread-count
 //! invariant.
 
+use super::faults::FaultPlan;
 use super::fft::NegacyclicFft;
 use super::ggsw::{ExtScratch, GgswCiphertext, GgswFourier};
 use super::glwe::{GlweCiphertext, GlweSecretKey};
@@ -49,6 +50,7 @@ use super::keyswitch::KeySwitchKey;
 use super::lwe::{LweCiphertext, LweSecretKey};
 use super::params::TfheParams;
 use super::torus::Torus;
+use crate::error::{panic_message, FheError};
 use crate::util::prng::{Rng64, Xoshiro256};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -496,6 +498,85 @@ impl ServerKey {
         out.into_iter().map(|c| c.expect("worker filled every slot")).collect()
     }
 
+    /// [`Self::pbs_batch_mixed`] with **per-job panic isolation**: each
+    /// job runs inside `catch_unwind`, so a poisoned job (a bug, or an
+    /// injected `panic@pbs:N` fault) yields `Err(WorkerPanic)` for that
+    /// job alone while every other job completes normally, bit-identical
+    /// to a fault-free run. Returns one `Result` per job, each `Ok`
+    /// carrying the job's [`BatchJob::n_outputs`] ciphertexts in packing
+    /// order.
+    ///
+    /// `faults` arms deterministic injection: a span of global 1-based
+    /// job indices is reserved in one `fetch_add` per call, so which job
+    /// panics depends only on submission order — never on thread count
+    /// or worker interleaving.
+    pub fn pbs_batch_mixed_isolated(
+        &self,
+        jobs: &[BatchJob],
+        threads: usize,
+        faults: Option<&FaultPlan>,
+    ) -> Vec<Result<Vec<LweCiphertext>, FheError>> {
+        if jobs.is_empty() {
+            return Vec::new();
+        }
+        let base = faults.map_or(0, |f| f.next_pbs_base(jobs.len() as u64));
+        let mut out: Vec<Option<Result<Vec<LweCiphertext>, FheError>>> =
+            (0..jobs.len()).map(|_| None).collect();
+        let threads = threads.max(1).min(jobs.len());
+        if threads == 1 {
+            self.run_isolated_span(jobs, base, faults, &mut out);
+        } else {
+            let chunk = (jobs.len() + threads - 1) / threads;
+            std::thread::scope(|s| {
+                let mut rest: &mut [Option<Result<Vec<LweCiphertext>, FheError>>] = &mut out;
+                for (ci, job_chunk) in jobs.chunks(chunk).enumerate() {
+                    let (head, tail) = rest.split_at_mut(job_chunk.len());
+                    rest = tail;
+                    let span_base = base + (ci * chunk) as u64;
+                    s.spawn(move || self.run_isolated_span(job_chunk, span_base, faults, head));
+                }
+            });
+        }
+        out.into_iter().map(|r| r.expect("worker visited every job")).collect()
+    }
+
+    /// Worker body for [`Self::pbs_batch_mixed_isolated`]: run each job
+    /// of a contiguous span under its own `catch_unwind` guard. A caught
+    /// panic discards the scratch buffers (they may have been left
+    /// mid-update) and rebuilds them before the next job.
+    fn run_isolated_span(
+        &self,
+        jobs: &[BatchJob],
+        span_base: u64,
+        faults: Option<&FaultPlan>,
+        out: &mut [Option<Result<Vec<LweCiphertext>, FheError>>],
+    ) {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let mut scratch = self.scratch();
+        for (i, job) in jobs.iter().enumerate() {
+            let idx = span_base + i as u64 + 1;
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(f) = faults {
+                    f.maybe_panic_pbs(idx);
+                }
+                let n = job.n_outputs();
+                let mut slots: Vec<Option<LweCiphertext>> = (0..n).map(|_| None).collect();
+                self.run_batch_job(job, &mut scratch, &mut slots);
+                slots
+                    .into_iter()
+                    .map(|c| c.expect("job filled every slot"))
+                    .collect::<Vec<LweCiphertext>>()
+            }));
+            out[i] = Some(match res {
+                Ok(cts) => Ok(cts),
+                Err(p) => {
+                    scratch = self.scratch();
+                    Err(FheError::WorkerPanic(panic_message(p)))
+                }
+            });
+        }
+    }
+
     /// Execute one mixed-batch job into its output span (len =
     /// `job.n_outputs()`).
     fn run_batch_job(
@@ -611,6 +692,57 @@ mod tests {
         assert_send_sync::<PreparedMultiLut>();
         assert_send_sync::<Lut>();
         assert_send_sync::<crate::tfhe::ops::FheContext>();
+    }
+
+    #[test]
+    fn isolated_batch_contains_injected_panic_to_one_job() {
+        // The panic-isolation seam: job 3 of 6 is scheduled to panic;
+        // every other job's output must be bit-identical to the plain
+        // batch path, at one thread and at several.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, sk, mut rng) = setup();
+        let enc = Encoder::new(ck.params);
+        let space = ck.params.message_space();
+        let lut = Lut::from_fn(&ck.params, |m| (m + 1) % space);
+        let prepared = sk.prepare_lut(&lut);
+        let cts: Vec<_> = (0..6).map(|m| enc.encrypt_raw(m % space, &ck, &mut rng)).collect();
+        let jobs: Vec<BatchJob> = cts.iter().map(|ct| BatchJob::Single(ct, &prepared)).collect();
+        let clean = sk.pbs_batch_mixed(&jobs, 2);
+        for threads in [1usize, 3] {
+            let faults = FaultPlan::parse("panic@pbs:3").unwrap();
+            let got = sk.pbs_batch_mixed_isolated(&jobs, threads, Some(&faults));
+            assert_eq!(got.len(), 6);
+            for (i, res) in got.iter().enumerate() {
+                if i == 2 {
+                    match res {
+                        Err(FheError::WorkerPanic(m)) => {
+                            assert!(m.contains("panic@pbs:3"), "{m}")
+                        }
+                        other => panic!("job 3 must fail with WorkerPanic, got {other:?}"),
+                    }
+                } else {
+                    let cts = res.as_ref().expect("survivor job");
+                    assert_eq!(cts.as_slice(), &clean[i..i + 1], "job {i} at T={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_batch_without_faults_matches_plain_batch() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, sk, mut rng) = setup();
+        let enc = Encoder::new(ck.params);
+        let space = ck.params.message_space();
+        let lut = Lut::from_fn(&ck.params, |m| (2 * m) % space);
+        let prepared = sk.prepare_lut(&lut);
+        let cts: Vec<_> = (0..5).map(|m| enc.encrypt_raw(m % space, &ck, &mut rng)).collect();
+        let jobs: Vec<BatchJob> = cts.iter().map(|ct| BatchJob::Single(ct, &prepared)).collect();
+        let plain = sk.pbs_batch_mixed(&jobs, 2);
+        let isolated = sk.pbs_batch_mixed_isolated(&jobs, 2, None);
+        let flat: Vec<_> =
+            isolated.into_iter().flat_map(|r| r.expect("no faults armed")).collect();
+        assert_eq!(flat, plain);
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Deterministic fault injection + cooperative cancellation.
+//!
+//! [`FaultPlan`] is the single seam through which tests (and the
+//! `FHE_FAULTS` env knob) inject failures into the serving stack. Every
+//! trigger is keyed on a **deterministic counter** — a global PBS job
+//! index reserved in one `fetch_add` per submission, a level-boundary
+//! tick, an engine-batch tick — never on wall-clock time or thread
+//! interleaving, so a fault plan reproduces the same blast radius at any
+//! `FHE_THREADS` setting.
+//!
+//! Grammar (comma-separated, whitespace-tolerant):
+//!
+//! ```text
+//! FHE_FAULTS=panic@pbs:17,deadline@level:2,panic@engine:1
+//! ```
+//!
+//! - `panic@pbs:N` — the N-th PBS job (1-based, across the process
+//!   lifetime of the plan) panics inside the worker pool.
+//! - `deadline@level:N` — the N-th fused level boundary reports the
+//!   request deadline as expired, forcing cooperative abandonment.
+//! - `panic@engine:N` — the N-th engine batch panics before any work,
+//!   exercising scheduler supervision/respawn.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Cooperative cancellation token carried by a request. Cloning shares
+/// the underlying flag; the executor polls it at every level boundary.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation. Work already in flight finishes its current
+    /// PBS level; remaining levels are abandoned.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// A deterministic schedule of injected faults. Shared (`Arc`) between
+/// the context, pool workers, the fused executor, and engine bodies;
+/// the interior counters are atomic so triggers stay exact-once.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// 1-based global PBS job indices that panic in the worker pool.
+    pbs_panic_at: Vec<u64>,
+    /// 1-based level-boundary ticks at which the deadline check fires.
+    deadline_at_level: Vec<u64>,
+    /// 1-based engine-batch ticks that panic before doing any work.
+    engine_panic_at: Vec<u64>,
+    /// Global PBS job counter; submissions reserve spans via one
+    /// `fetch_add`, making per-job indices independent of thread order.
+    pbs_jobs: AtomicU64,
+    /// Global fused level-boundary counter.
+    levels: AtomicU64,
+    /// Global engine-batch counter.
+    engine_batches: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse the `FHE_FAULTS` grammar. Empty spec → empty plan (armed
+    /// but never fires), useful for measuring the cost of the checks.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, rest) = part
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{part}': expected kind@site:index"))?;
+            let (site, idx) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("fault '{part}': expected kind@site:index"))?;
+            let idx: u64 = idx
+                .parse()
+                .map_err(|_| format!("fault '{part}': index '{idx}' is not a number"))?;
+            if idx == 0 {
+                return Err(format!("fault '{part}': indices are 1-based"));
+            }
+            match (kind, site) {
+                ("panic", "pbs") => plan.pbs_panic_at.push(idx),
+                ("deadline", "level") => plan.deadline_at_level.push(idx),
+                ("panic", "engine") => plan.engine_panic_at.push(idx),
+                _ => {
+                    return Err(format!(
+                        "fault '{part}': unknown trigger '{kind}@{site}' \
+                         (known: panic@pbs, deadline@level, panic@engine)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read `FHE_FAULTS`. Unset/empty → `None`. A malformed spec panics
+    /// loudly: this is a developer knob and a typo must not silently
+    /// disarm a fault-injection CI leg.
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        let spec = std::env::var("FHE_FAULTS").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&spec) {
+            Ok(plan) => Some(Arc::new(plan)),
+            Err(e) => panic!("invalid FHE_FAULTS: {e}"),
+        }
+    }
+
+    /// True if the plan can never fire (all trigger lists empty).
+    pub fn is_empty(&self) -> bool {
+        self.pbs_panic_at.is_empty()
+            && self.deadline_at_level.is_empty()
+            && self.engine_panic_at.is_empty()
+    }
+
+    /// Reserve a span of `n` global PBS job indices for one submission.
+    /// Returns the 0-based base; the jobs are `base+1 ..= base+n`
+    /// (1-based) in submission order, independent of worker scheduling.
+    pub fn next_pbs_base(&self, n: u64) -> u64 {
+        self.pbs_jobs.fetch_add(n, Ordering::Relaxed)
+    }
+
+    /// Panic if the 1-based global PBS job index is scheduled to fail.
+    /// Called by pool workers *inside* their `catch_unwind` guard.
+    pub fn maybe_panic_pbs(&self, idx_1based: u64) {
+        if self.pbs_panic_at.contains(&idx_1based) {
+            panic!("injected fault: panic@pbs:{idx_1based}");
+        }
+    }
+
+    /// Tick the level-boundary counter; true if this boundary is
+    /// scheduled to report the deadline as expired.
+    pub fn deadline_fires(&self) -> bool {
+        let tick = self.levels.fetch_add(1, Ordering::Relaxed) + 1;
+        self.deadline_at_level.contains(&tick)
+    }
+
+    /// Tick the engine-batch counter; panic if this batch is scheduled
+    /// to crash. Called by engine bodies before any real work, inside
+    /// the scheduler's supervision guard.
+    pub fn maybe_panic_engine(&self) {
+        let tick = self.engine_batches.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.engine_panic_at.contains(&tick) {
+            panic!("injected fault: panic@engine:{tick}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_parses_all_trigger_kinds() {
+        let p = FaultPlan::parse("panic@pbs:17, deadline@level:2 ,panic@engine:1").unwrap();
+        assert_eq!(p.pbs_panic_at, vec![17]);
+        assert_eq!(p.deadline_at_level, vec![2]);
+        assert_eq!(p.engine_panic_at, vec![1]);
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("panic@pbs").is_err());
+        assert!(FaultPlan::parse("panic:17").is_err());
+        assert!(FaultPlan::parse("panic@pbs:zero").is_err());
+        assert!(FaultPlan::parse("panic@pbs:0").is_err());
+        assert!(FaultPlan::parse("explode@pbs:1").is_err());
+        assert!(FaultPlan::parse("panic@gpu:1").is_err());
+    }
+
+    #[test]
+    fn pbs_base_reservation_is_contiguous_and_exact() {
+        let p = FaultPlan::parse("panic@pbs:5").unwrap();
+        let a = p.next_pbs_base(3); // jobs 1..=3
+        let b = p.next_pbs_base(4); // jobs 4..=7
+        assert_eq!(a, 0);
+        assert_eq!(b, 3);
+        for idx in [1u64, 2, 3, 4, 6, 7] {
+            p.maybe_panic_pbs(idx); // must not panic
+        }
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.maybe_panic_pbs(5);
+        }));
+        assert!(hit.is_err(), "job 5 must panic");
+    }
+
+    #[test]
+    fn deadline_fires_exactly_at_scheduled_tick() {
+        let p = FaultPlan::parse("deadline@level:3").unwrap();
+        assert!(!p.deadline_fires()); // tick 1
+        assert!(!p.deadline_fires()); // tick 2
+        assert!(p.deadline_fires()); // tick 3
+        assert!(!p.deadline_fires()); // tick 4
+    }
+
+    #[test]
+    fn engine_panic_fires_exactly_at_scheduled_batch() {
+        let p = FaultPlan::parse("panic@engine:2").unwrap();
+        p.maybe_panic_engine(); // batch 1: fine
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.maybe_panic_engine(); // batch 2: boom
+        }));
+        assert!(hit.is_err());
+        p.maybe_panic_engine(); // batch 3: fine again
+    }
+
+    #[test]
+    fn cancel_token_shares_state_across_clones() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        assert!(!u.is_cancelled());
+        t.cancel();
+        assert!(u.is_cancelled());
+    }
+}

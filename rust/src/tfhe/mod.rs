@@ -15,6 +15,7 @@
 
 pub mod bootstrap;
 pub mod encoding;
+pub mod faults;
 pub mod fft;
 pub mod ggsw;
 pub mod glwe;
@@ -39,6 +40,7 @@ pub use bootstrap::{
     ClientKey, Lut, PreparedLut, PreparedMultiLut, ServerKey,
 };
 pub use encoding::Encoder;
+pub use faults::{CancelToken, FaultPlan};
 pub use ops::{ct_clone_count, default_fhe_threads, CtInt, FheContext};
 pub use params::{DecompParams, TfheParams};
 pub use plan::{

@@ -22,8 +22,10 @@
 
 use super::bootstrap::{BatchJob, Lut, PreparedLut, PreparedMultiLut, ServerKey};
 use super::encoding::Encoder;
+use super::faults::FaultPlan;
 use super::lwe::LweCiphertext;
 use super::plan::LevelJob;
+use crate::error::FheError;
 use crate::util::prng::Xoshiro256;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -96,6 +98,12 @@ pub struct FheContext {
     /// length encodes the LUT count and keys cannot collide across group
     /// sizes).
     multi_lut_cache: RwLock<HashMap<Vec<u64>, Arc<PreparedMultiLut>>>,
+    /// Armed fault-injection schedule (from `FHE_FAULTS` or
+    /// [`Self::set_fault_plan`]); `None` in production. Only the checked
+    /// execution paths ([`Self::pbs_level_checked`]) consult it — the
+    /// solo/reference paths stay fault-free so differential harnesses
+    /// can compare against them.
+    faults: RwLock<Option<Arc<FaultPlan>>>,
 }
 
 impl FheContext {
@@ -133,7 +141,20 @@ impl FheContext {
             lut_id,
             lut_cache: RwLock::new(HashMap::new()),
             multi_lut_cache: RwLock::new(HashMap::new()),
+            faults: RwLock::new(FaultPlan::from_env()),
         }
+    }
+
+    /// Arm (or disarm, with `None`) a fault-injection schedule for this
+    /// context. Tests use this to inject deterministic faults without
+    /// touching the process environment.
+    pub fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        *self.faults.write().unwrap_or_else(|e| e.into_inner()) = plan;
+    }
+
+    /// The armed fault schedule, if any.
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.faults.read().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Largest LUT group the plan rewriter may pack into one blind
@@ -355,6 +376,23 @@ impl FheContext {
             .pbs_batch_mixed(&refs, self.threads())
             .into_iter()
             .map(|ct| CtInt { ct })
+            .collect()
+    }
+
+    /// [`Self::pbs_level`] with per-job panic isolation: one `Result`
+    /// per job, each `Ok` carrying the job's outputs (a multi job
+    /// contributes its LUT count of ciphertexts) in packing order. A
+    /// poisoned job — injected via the armed [`FaultPlan`] or a genuine
+    /// bug — fails only itself; survivors stay bit-identical to
+    /// [`Self::pbs_level`]. This is the serving path's entry point; the
+    /// unchecked one remains the solo/reference path.
+    pub fn pbs_level_checked(&self, jobs: &[LevelJob]) -> Vec<Result<Vec<CtInt>, FheError>> {
+        let refs: Vec<BatchJob> = jobs.iter().map(LevelJob::as_batch_job).collect();
+        let faults = self.fault_plan();
+        self.sk
+            .pbs_batch_mixed_isolated(&refs, self.threads(), faults.as_deref())
+            .into_iter()
+            .map(|r| r.map(|cts| cts.into_iter().map(|ct| CtInt { ct }).collect()))
             .collect()
     }
 

@@ -773,6 +773,14 @@ impl<'p> PlanRun<'p> {
     /// has been supplied. Jobs are in node-id order; results must come
     /// back in the same order, flattened (a [`LevelJob::Multi`]
     /// contributes its LUT count of consecutive outputs).
+    /// Number of PBS levels fully executed (supplied) so far. After a
+    /// cooperative abandonment — deadline or cancellation at a level
+    /// boundary — this is strictly less than [`CircuitPlan::levels`],
+    /// which is how tests pin that work was actually skipped.
+    pub fn levels_done(&self) -> usize {
+        self.current - 1
+    }
+
     pub fn next_level_jobs(&mut self, ctx: &FheContext) -> Option<Vec<LevelJob>> {
         assert!(self.pending.is_empty(), "previous level awaits supply()");
         if self.current > self.plan.max_level {
@@ -1307,6 +1315,37 @@ mod tests {
         assert_eq!(rounds, p.levels());
         let outs = run.finish(&ctx);
         assert_eq!(ctx.decrypt(&outs[0], &ck), (-1i64 - 2).max(0) + 2 * 2);
+    }
+
+    #[test]
+    fn abandoning_mid_plan_skips_remaining_levels() {
+        // Deadline/cancellation contract: a run dropped at a level
+        // boundary executes strictly fewer PBS than the full plan, and
+        // `levels_done()` records how far it got.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup();
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(1);
+        let r1 = b.relu(ins[0]);
+        let r2 = b.abs(r1);
+        let r3 = b.relu(r2);
+        b.output(r3);
+        let p = b.build();
+        assert_eq!(p.levels(), 3);
+        let x = ctx.encrypt(-2, &ck, &mut rng);
+        let inputs = [x];
+        let mut run = PlanRun::new(&p, &ctx, &inputs);
+        assert_eq!(run.levels_done(), 0);
+        let before = pbs_count();
+        let jobs = run.next_level_jobs(&ctx).expect("level 1 exists");
+        run.supply(ctx.pbs_level(&jobs));
+        // The deadline "expires" here: abandon by dropping the run.
+        assert_eq!(run.levels_done(), 1);
+        assert!(run.levels_done() < p.levels());
+        drop(run);
+        let executed = pbs_count() - before;
+        assert_eq!(executed, p.level_sizes()[0] as u64, "only level 1 ran");
+        assert!(executed < p.pbs_count(), "levels 2..3 were skipped");
     }
 
     // ----- rewrite passes -----

@@ -1,0 +1,273 @@
+//! Fault-injection differential harness (PR 6): serve encrypted batches
+//! through the coordinator with deterministic faults armed
+//! (`FaultPlan` — the programmatic form of `FHE_FAULTS`) and pin the
+//! blast radius:
+//!
+//!   * an injected PBS worker panic fails ONLY the request that owned
+//!     the poisoned job (`worker_panic`), every co-batched survivor's
+//!     ciphertexts stay **bit-identical** to a fault-free solo run, the
+//!     engine is respawned, and the next request succeeds;
+//!   * an injected deadline abandons the victim at a level boundary
+//!     (`deadline_exceeded`) having executed strictly fewer PBS levels
+//!     than the plan holds (pinned via the global rotation counters);
+//!   * an injected wholesale engine panic is quarantined by the
+//!     scheduler's supervision and the engine keeps serving.
+//!
+//! Solo references are computed BEFORE arming the faults: the reference
+//! path (`CircuitPlan::execute`) never consults the fault plan, so the
+//! comparison is exact.
+
+use inhibitor::coordinator::{
+    BatchPolicy, Coordinator, EnginePath, InferRequest, InferResponse, Payload, RoutePolicy,
+};
+use inhibitor::error::FheError;
+use inhibitor::fhe_circuits::InhibitorFhe;
+use inhibitor::tfhe::ops::CtInt;
+use inhibitor::tfhe::{bootstrap, ClientKey, FaultPlan, FheContext, TfheParams};
+use inhibitor::util::prng::{Rng64, Xoshiro256};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// `PBS_COUNT` is process-global and tests in this binary run on parallel
+/// threads; count-sensitive tests serialize through this lock.
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn encrypt_qkv(
+    ctx: &FheContext,
+    ck: &ClientKey,
+    rng: &mut Xoshiro256,
+    t: usize,
+    d: usize,
+) -> Vec<CtInt> {
+    (0..3 * t * d)
+        .map(|i| {
+            let v = if i < 2 * t * d {
+                rng.next_range_i64(-2, 2) // q, k codes
+            } else {
+                rng.next_range_i64(0, 3) // v codes
+            };
+            ctx.encrypt(v, ck, rng)
+        })
+        .collect()
+}
+
+struct Rig {
+    coord: Coordinator,
+    session: u64,
+    ck: ClientKey,
+}
+
+/// Coordinator + session + single-head inhibitor engine (t=2, d=2),
+/// batching up to `max_batch` co-scheduled requests.
+fn rig(seed: u64, max_batch: usize) -> Rig {
+    let mut rng = Xoshiro256::new(seed);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let mut coord = Coordinator::new(RoutePolicy::PreferQuant);
+    let session = coord.keymgr.create_session(ctx);
+    coord
+        .add_fhe_engine(
+            session,
+            "inhibitor",
+            2,
+            2,
+            BatchPolicy { max_batch, max_wait: Duration::from_secs(2), queue_cap: 64 },
+        )
+        .unwrap();
+    Rig { coord, session, ck }
+}
+
+fn fhe_path(session: u64) -> EnginePath {
+    EnginePath::Encrypted { session, mechanism: "inhibitor".into() }
+}
+
+/// Submit one registered bundle and block for its response.
+fn infer(r: &Rig, blob: u64) -> InferResponse {
+    let path = fhe_path(r.session);
+    r.coord.infer_blocking(path, Payload::CiphertextRef(blob), Duration::from_secs(300)).unwrap()
+}
+
+#[test]
+fn injected_pbs_panic_fails_only_the_victim_and_survivors_stay_bit_identical() {
+    let _g = lock();
+    let (t, d) = (2usize, 2usize);
+    let r = rig(0xFA017, 3);
+    let sess = r.coord.keymgr.session(r.session).unwrap();
+    // The engine serves the *rewritten* plan; use the same one for the
+    // level layout and the solo references.
+    let plan = InhibitorFhe::new(d, 1).plan_for(&sess.ctx, t, d);
+    let mut rng = Xoshiro256::new(0xFA018);
+    let bundles: Vec<Vec<CtInt>> =
+        (0..3).map(|_| encrypt_qkv(&sess.ctx, &r.ck, &mut rng, t, d)).collect();
+    // Fault-free solo references, computed BEFORE arming the fault.
+    let solo: Vec<Vec<CtInt>> =
+        bundles.iter().map(|inputs| plan.execute(&sess.ctx, inputs)).collect();
+    // The fused level 1 submits the members' jobs in request order:
+    // request 0 owns jobs 1..=s1, request 1 owns s1+1..=2·s1, ... Poison
+    // the FIRST job of request 1.
+    let s1 = plan.level_sizes()[0] as u64;
+    let spec = format!("panic@pbs:{}", s1 + 1);
+    sess.ctx.set_fault_plan(Some(Arc::new(FaultPlan::parse(&spec).unwrap())));
+    let blobs: Vec<u64> = bundles.iter().map(|b| sess.register(b.clone())).collect();
+    let rxs: Vec<_> = blobs
+        .iter()
+        .map(|&blob| r.coord.submit(fhe_path(r.session), Payload::CiphertextRef(blob)).unwrap())
+        .collect();
+    let resps: Vec<_> =
+        rxs.into_iter().map(|rx| rx.recv_timeout(Duration::from_secs(300)).unwrap()).collect();
+    sess.ctx.set_fault_plan(None);
+    // Victim: typed WorkerPanic carrying the injected payload.
+    match resps[1].error {
+        Some(FheError::WorkerPanic(ref m)) => {
+            assert!(m.contains(&spec), "panic payload names the injected site: {m}")
+        }
+        ref other => panic!("victim must fail with WorkerPanic, got {other:?}"),
+    }
+    assert_eq!(resps[1].error.as_ref().unwrap().code(), "worker_panic");
+    // The victim's input bundle was restored for a clean resubmit.
+    let restored = sess.take(blobs[1]).expect("victim bundle restored");
+    assert_eq!(restored.len(), 3 * t * d);
+    // Survivors: error-free and bit-identical to the fault-free run.
+    for i in [0usize, 2] {
+        assert!(resps[i].error.is_none(), "survivor {i}: {:?}", resps[i].error);
+        let cts = sess.take(resps[i].result_blob.expect("typed result reference")).unwrap();
+        assert_eq!(cts.len(), solo[i].len());
+        for (j, (got, want)) in cts.iter().zip(&solo[i]).enumerate() {
+            assert_eq!(got.ct, want.ct, "survivor {i} output {j} must be bit-identical");
+        }
+    }
+    let m = r.coord.metrics();
+    assert_eq!(m.quarantined.load(Ordering::Relaxed), 1, "exactly one member quarantined");
+    assert_eq!(m.worker_panics.load(Ordering::Relaxed), 1);
+    assert_eq!(m.respawns.load(Ordering::Relaxed), 1, "engine rebuilt after the caught panic");
+    // The coordinator keeps serving: the respawned engine handles the
+    // victim's resubmission (fault disarmed) bit-identically.
+    let blob = sess.register(restored);
+    let resp = infer(&r, blob);
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let cts = sess.take(resp.result_blob.unwrap()).unwrap();
+    for (j, (got, want)) in cts.iter().zip(&solo[1]).enumerate() {
+        assert_eq!(got.ct, want.ct, "resubmitted victim output {j}");
+    }
+}
+
+#[test]
+fn injected_deadline_abandons_with_strictly_fewer_pbs_levels() {
+    let _g = lock();
+    let (t, d) = (2usize, 2usize);
+    let r = rig(0xDEAD1, 1);
+    let sess = r.coord.keymgr.session(r.session).unwrap();
+    let plan = InhibitorFhe::new(d, 1).plan_for(&sess.ctx, t, d);
+    assert!(plan.levels() >= 2, "needs at least two levels to abandon between");
+    let mut rng = Xoshiro256::new(0xDEAD2);
+    let inputs = encrypt_qkv(&sess.ctx, &r.ck, &mut rng, t, d);
+    let blob = sess.register(inputs);
+    // Boundary ticks: 1 fires before level 1, 2 after it — the member
+    // executes exactly one PBS level, then abandons.
+    sess.ctx.set_fault_plan(Some(Arc::new(FaultPlan::parse("deadline@level:2").unwrap())));
+    let before_rot = bootstrap::blind_rotation_count();
+    let before_pbs = bootstrap::pbs_count();
+    // A far-future real deadline: only the injected tick can fire, so
+    // the test is timing-independent.
+    let req = InferRequest::new(0, fhe_path(r.session), Payload::CiphertextRef(blob))
+        .with_deadline(Instant::now() + Duration::from_secs(3600));
+    let resp = r.coord.infer_request_blocking(req, Duration::from_secs(300)).unwrap();
+    sess.ctx.set_fault_plan(None);
+    match resp.error {
+        Some(FheError::DeadlineExceeded(ref m)) => {
+            assert!(m.contains(&format!("1/{}", plan.levels())), "{m}")
+        }
+        ref other => panic!("want DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(resp.error.as_ref().unwrap().code(), "deadline_exceeded");
+    // Strictly fewer PBS levels than the plan holds: exactly level 1 ran.
+    let rotations = bootstrap::blind_rotation_count() - before_rot;
+    assert_eq!(rotations as usize, plan.level_sizes()[0], "only level 1 rotated");
+    assert!(
+        bootstrap::pbs_count() - before_pbs < plan.pbs_count(),
+        "remaining levels were abandoned"
+    );
+    let m = r.coord.metrics();
+    assert_eq!(m.deadline_kills.load(Ordering::Relaxed), 1);
+    // The abandoned request's inputs were restored.
+    assert!(sess.take(blob).is_some(), "bundle restored after deadline kill");
+    // Fault disarmed: the same engine serves the next request fully.
+    let inputs = encrypt_qkv(&sess.ctx, &r.ck, &mut rng, t, d);
+    let want = plan.execute(&sess.ctx, &inputs);
+    let blob = sess.register(inputs);
+    let resp = infer(&r, blob);
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let cts = sess.take(resp.result_blob.unwrap()).unwrap();
+    for (j, (got, w)) in cts.iter().zip(&want).enumerate() {
+        assert_eq!(got.ct, w.ct, "post-deadline output {j}");
+    }
+}
+
+#[test]
+fn injected_engine_panic_is_supervised_and_the_engine_keeps_serving() {
+    let _g = lock();
+    let (t, d) = (2usize, 2usize);
+    let r = rig(0xE9519, 1);
+    let sess = r.coord.keymgr.session(r.session).unwrap();
+    let plan = InhibitorFhe::new(d, 1).plan_for(&sess.ctx, t, d);
+    let mut rng = Xoshiro256::new(0xE9520);
+    let inputs = encrypt_qkv(&sess.ctx, &r.ck, &mut rng, t, d);
+    let want = plan.execute(&sess.ctx, &inputs);
+    let blob = sess.register(inputs);
+    // The engine body's first batch panics wholesale (tick 1); tick 2
+    // proceeds. The seam fires BEFORE the bundle is taken, so the blob
+    // survives the crash untouched.
+    sess.ctx.set_fault_plan(Some(Arc::new(FaultPlan::parse("panic@engine:1").unwrap())));
+    let resp = infer(&r, blob);
+    match resp.error {
+        Some(FheError::WorkerPanic(ref m)) => assert!(m.contains("panic@engine:1"), "{m}"),
+        ref other => panic!("want WorkerPanic, got {other:?}"),
+    }
+    let m = r.coord.metrics();
+    assert_eq!(m.respawns.load(Ordering::Relaxed), 1, "supervisor rebuilt the engine body");
+    assert_eq!(m.quarantined.load(Ordering::Relaxed), 1);
+    // Same blob, same engine, fault plan still armed (tick 2 is clean):
+    // the respawned body serves it bit-identically.
+    let resp = infer(&r, blob);
+    sess.ctx.set_fault_plan(None);
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let cts = sess.take(resp.result_blob.unwrap()).unwrap();
+    for (j, (got, w)) in cts.iter().zip(&want).enumerate() {
+        assert_eq!(got.ct, w.ct, "post-respawn output {j}");
+    }
+}
+
+#[test]
+fn armed_but_never_firing_faults_leave_serving_bit_identical() {
+    // The CI fault leg runs the whole encrypted suite with
+    // FHE_FAULTS=panic@pbs:999999999 — armed checks, no fire. Pin the
+    // same invariant directly: the checked path with an armed plan is
+    // bit-identical to the solo reference.
+    let _g = lock();
+    let (t, d) = (2usize, 2usize);
+    let r = rig(0xC1EA9, 2);
+    let sess = r.coord.keymgr.session(r.session).unwrap();
+    let plan = InhibitorFhe::new(d, 1).plan_for(&sess.ctx, t, d);
+    let mut rng = Xoshiro256::new(0xC1EB0);
+    let inputs = encrypt_qkv(&sess.ctx, &r.ck, &mut rng, t, d);
+    let want = plan.execute(&sess.ctx, &inputs);
+    sess.ctx
+        .set_fault_plan(Some(Arc::new(FaultPlan::parse("panic@pbs:999999999").unwrap())));
+    let blob = sess.register(inputs);
+    let resp = infer(&r, blob);
+    sess.ctx.set_fault_plan(None);
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let cts = sess.take(resp.result_blob.unwrap()).unwrap();
+    for (j, (got, w)) in cts.iter().zip(&want).enumerate() {
+        assert_eq!(got.ct, w.ct, "armed-but-idle output {j}");
+    }
+    let m = r.coord.metrics();
+    assert_eq!(m.worker_panics.load(Ordering::Relaxed), 0);
+    assert_eq!(m.quarantined.load(Ordering::Relaxed), 0);
+    assert_eq!(m.respawns.load(Ordering::Relaxed), 0);
+}
