@@ -11,7 +11,7 @@ use inhibitor::attention::Mechanism;
 use inhibitor::bench_harness::{bench, BenchConfig};
 use inhibitor::coordinator::FusedLevelExecutor;
 use inhibitor::fhe_circuits::{
-    CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe,
+    CtMatrix, DecodeFhe, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe,
 };
 use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::ops::CtInt;
@@ -274,6 +274,72 @@ fn main() {
         ("speedup", Json::num(m_block_stages.mean_s / m_block_fused.mean_s)),
     ])];
 
+    // === Incremental decode: per-token step vs full-prefix recompute ===
+    // The PR 7 payoff: at prefix length t the step plan does O(t·d)
+    // work where the non-incremental alternative re-runs the whole
+    // causal prefill — O(t²·d) cumulative over a stream. Three numbers
+    // per token position: the stream-opening prefill (T = 1), the
+    // steady-state step, and the full recompute it replaces. Same
+    // timing-instrument caveat as the block section: widths are for
+    // latency only, bit-exactness lives in tests/decode_it.rs.
+    println!("\n=== Decode: per-token step plan vs full-prefix recompute (signed, L=1) ===");
+    let dec_model =
+        ModelFhe::demo(Mechanism::InhibitorSigned, d_model, b_heads, 1, false, d_model, 0xDE);
+    let decode = DecodeFhe::new(dec_model);
+    let cached_len = 2usize;
+    let dec_x = ITensor::random(&[cached_len + 1, d_model], -1, 1, &mut rng);
+    let dec_grid = CtMatrix::encrypt(&dec_x, &ctx, &ck, &mut rng);
+    // Steady-state operands: the encrypted cache bundle at prefix
+    // `cached_len` plus the next token's row.
+    let grid_t0 = CtMatrix {
+        rows: cached_len,
+        cols: d_model,
+        data: dec_grid.data[..cached_len * d_model].to_vec(),
+    };
+    let (_, dec_cache) = decode.prefill(&ctx, &grid_t0);
+    let new_row = &dec_grid.data[cached_len * d_model..];
+    let step_plan = decode.step_plan_for(&ctx, cached_len);
+    let full_plan = decode.prefill_plan_for(&ctx, cached_len + 1);
+    let prefill_plan = decode.prefill_plan_for(&ctx, 1);
+    let step_refs: Vec<&CtInt> = new_row.iter().chain(dec_cache.iter()).collect();
+    let full_refs: Vec<&CtInt> = dec_grid.data.iter().collect();
+    let first_refs: Vec<&CtInt> = dec_grid.data[..d_model].iter().collect();
+    let m_dec_prefill =
+        bench("decode prefill T=1", cfg, || prefill_plan.execute_ref(&ctx, &first_refs));
+    let m_dec_step = bench(&format!("decode step @t={cached_len}"), cfg, || {
+        step_plan.execute_ref(&ctx, &step_refs)
+    });
+    let m_dec_full = bench(&format!("full recompute T={}", cached_len + 1), cfg, || {
+        full_plan.execute_ref(&ctx, &full_refs)
+    });
+    println!("  {}", m_dec_prefill.summary());
+    println!("  {}", m_dec_step.summary());
+    println!("  {}", m_dec_full.summary());
+    println!(
+        "  t={cached_len}: pbs {} (step) vs {} (recompute), {:.3}x latency",
+        step_plan.pbs_count(),
+        full_plan.pbs_count(),
+        m_dec_full.mean_s / m_dec_step.mean_s,
+    );
+    let decode_records = vec![Json::obj(vec![
+        ("mechanism", Json::str("inhibitor-signed")),
+        ("heads", Json::num(b_heads as f64)),
+        ("layers", Json::num(1.0)),
+        ("d_model", Json::num(d_model as f64)),
+        ("cached_len", Json::num(cached_len as f64)),
+        ("pbs_step", Json::num(step_plan.pbs_count() as f64)),
+        ("pbs_full_recompute", Json::num(full_plan.pbs_count() as f64)),
+        ("blind_rotations_step", Json::num(step_plan.blind_rotation_count() as f64)),
+        (
+            "blind_rotations_full_recompute",
+            Json::num(full_plan.blind_rotation_count() as f64),
+        ),
+        ("prefill_s", Json::num(m_dec_prefill.mean_s)),
+        ("step_s", Json::num(m_dec_step.mean_s)),
+        ("full_recompute_s", Json::num(m_dec_full.mean_s)),
+        ("step_speedup_vs_recompute", Json::num(m_dec_full.mean_s / m_dec_step.mean_s)),
+    ])];
+
     let record = Json::obj(vec![
         ("bench", Json::str("plan_bench")),
         ("seq_len", Json::num(t as f64)),
@@ -284,6 +350,7 @@ fn main() {
         ("rewrite", Json::arr(rewrite_records)),
         ("multihead", Json::arr(multihead_records)),
         ("block", Json::arr(block_records)),
+        ("decode", Json::arr(decode_records)),
     ]);
     // Write next to the workspace root (cargo runs benches with CWD at
     // the package root), where the perf-trajectory record is checked in.

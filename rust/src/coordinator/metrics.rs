@@ -90,6 +90,13 @@ pub struct Metrics {
     /// Queued requests drained with a `Shutdown` error instead of being
     /// left with hanging receivers.
     pub shutdown_drained: AtomicU64,
+    // --- incremental decode (PR 7) ---
+    /// Successful decode steps served (prefills are not steps).
+    pub decode_steps: AtomicU64,
+    /// Gauge: live decode cache bundles in the session store.
+    pub cache_blobs_live: AtomicU64,
+    /// Gauge: ciphertext bytes held live by those bundles.
+    pub cache_bytes: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -121,6 +128,7 @@ impl Metrics {
             "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
              fused_levels={} fused_pbs={} fused_blind_rotations={} worker_panics={} \
              respawns={} retries={} quarantined={} deadline_kills={} shutdown_drained={} \
+             decode_steps={} cache_blobs_live={} cache_bytes={} \
              mean_latency={} p50={} p99={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -136,6 +144,9 @@ impl Metrics {
             self.quarantined.load(Ordering::Relaxed),
             self.deadline_kills.load(Ordering::Relaxed),
             self.shutdown_drained.load(Ordering::Relaxed),
+            self.decode_steps.load(Ordering::Relaxed),
+            self.cache_blobs_live.load(Ordering::Relaxed),
+            self.cache_bytes.load(Ordering::Relaxed),
             crate::bench_harness::Measurement::fmt_time(self.latency.mean_s()),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.5)),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.99)),

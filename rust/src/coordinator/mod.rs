@@ -13,6 +13,7 @@ pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod scheduler;
+pub mod session_store;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use fused::{FusedLevelExecutor, FusedRequest, FusedStats};
@@ -21,3 +22,4 @@ pub use metrics::Metrics;
 pub use request::{EngineOutput, EnginePath, InferRequest, InferResponse, Payload};
 pub use router::{Coordinator, RoutePolicy};
 pub use scheduler::{EngineFn, Scheduler};
+pub use session_store::SessionStore;

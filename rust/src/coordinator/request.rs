@@ -34,9 +34,10 @@ impl EnginePath {
                     Some((b, s)) => (b, Some(s)),
                     None => (mechanism.as_str(), None),
                 };
-                // Block engines prefix the mechanism (`block/<mech>`);
-                // canonicalize the inner name so `block/softmax@…` and
-                // `block/dotprod@…` share a key too.
+                // Block and decode engines prefix the mechanism
+                // (`block/<mech>`, `decode/<mech>`); canonicalize the
+                // inner name so `block/softmax@…` and `block/dotprod@…`
+                // share a key too.
                 let canon: String = match base.strip_prefix("block/") {
                     Some(inner) => format!(
                         "block/{}",
@@ -44,9 +45,17 @@ impl EnginePath {
                             .map(|m| m.name())
                             .unwrap_or(inner)
                     ),
-                    None => crate::attention::Mechanism::parse(base)
-                        .map(|m| m.name().to_string())
-                        .unwrap_or_else(|| base.to_string()),
+                    None => match base.strip_prefix("decode/") {
+                        Some(inner) => format!(
+                            "decode/{}",
+                            crate::attention::Mechanism::parse(inner)
+                                .map(|m| m.name())
+                                .unwrap_or(inner)
+                        ),
+                        None => crate::attention::Mechanism::parse(base)
+                            .map(|m| m.name().to_string())
+                            .unwrap_or_else(|| base.to_string()),
+                    },
                 };
                 match suffix {
                     Some(s) => format!("fhe/{canon}@{s}/{session}"),
@@ -82,6 +91,13 @@ pub struct InferRequest {
     /// Cooperative cancellation: callers keep a clone and fire it to
     /// abandon the request at the next checkpoint.
     pub cancel: CancelToken,
+    /// Decode engines only: the stream id whose server-side cache bundle
+    /// this request extends. `None` means prefill (start a stream).
+    pub cache_ref: Option<u64>,
+    /// Decode engines only: the stream id the successor cache bundle is
+    /// stored under. Steps default to `cache_ref` when `None`; prefill
+    /// requires it (there is no stream yet to inherit from).
+    pub cache_out: Option<u64>,
 }
 
 impl InferRequest {
@@ -93,12 +109,21 @@ impl InferRequest {
             enqueued: Instant::now(),
             deadline: None,
             cancel: CancelToken::new(),
+            cache_ref: None,
+            cache_out: None,
         }
     }
 
     /// Attach an absolute deadline.
     pub fn with_deadline(mut self, deadline: Instant) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Attach decode-stream cache routing (see the field docs).
+    pub fn with_cache(mut self, cache_ref: Option<u64>, cache_out: Option<u64>) -> Self {
+        self.cache_ref = cache_ref;
+        self.cache_out = cache_out;
         self
     }
 
@@ -201,6 +226,27 @@ mod tests {
         // same mechanism/session.
         let mh = EnginePath::Encrypted { session: 7, mechanism: "dotprod@h2xL3".into() };
         assert!(canon.batch_key() != mh.batch_key());
+    }
+
+    #[test]
+    fn decode_keys_canonicalize_the_inner_mechanism() {
+        let alias = EnginePath::Encrypted { session: 7, mechanism: "decode/softmax@h2xL3".into() };
+        let canon = EnginePath::Encrypted { session: 7, mechanism: "decode/dotprod@h2xL3".into() };
+        assert_eq!(alias.batch_key(), canon.batch_key());
+        assert_eq!(canon.batch_key(), "fhe/decode/dotprod@h2xL3/7");
+        // Decode keys never collide with the block keys of the same
+        // mechanism/session — their plan inventories are disjoint.
+        let blk = EnginePath::Encrypted { session: 7, mechanism: "block/dotprod@h2xL3".into() };
+        assert!(canon.batch_key() != blk.batch_key());
+    }
+
+    #[test]
+    fn cache_routing_defaults_off_and_attaches_via_builder() {
+        let base = InferRequest::new(1, EnginePath::QuantInt("dotprod".into()), Payload::Tokens(vec![]));
+        assert!(base.cache_ref.is_none() && base.cache_out.is_none());
+        let step = base.with_cache(Some(3), Some(4));
+        assert_eq!(step.cache_ref, Some(3));
+        assert_eq!(step.cache_out, Some(4));
     }
 
     #[test]

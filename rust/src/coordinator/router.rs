@@ -8,6 +8,9 @@
 //!     lazily *inside* its worker thread: PJRT handles never cross
 //!     threads).
 //!   * `fhe/<mech>/<sid>`  — per-session encrypted attention.
+//!   * `fhe/decode/<mech>@h<H>xL<L>/<sid>` — per-session incremental
+//!     decode over session-persistent encrypted KV-cache bundles
+//!     (PR 7: per-token step plans, prefill, restore-on-abandon).
 //!
 //! Every fallible edge speaks [`FheError`] (PR 6): registration,
 //! submission, and each engine body's per-request results. Engine
@@ -20,8 +23,11 @@ use super::fused::{FusedLevelExecutor, FusedRequest};
 use super::keymgr::{KeyManager, Session};
 use super::request::{EngineOutput, EnginePath, InferRequest, InferResponse, Payload};
 use super::scheduler::Scheduler;
+use super::session_store::{CacheEntry, SessionStore};
 use crate::error::FheError;
-use crate::fhe_circuits::{DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe};
+use crate::fhe_circuits::{
+    DecodeFhe, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe,
+};
 use crate::model::{ModelInput, QTransformer};
 use crate::tensor::ITensor;
 use crate::tfhe::ops::CtInt;
@@ -48,15 +54,38 @@ pub struct Coordinator {
     scheduler: Scheduler,
     pub keymgr: Arc<KeyManager>,
     pub policy: RoutePolicy,
+    /// Session-persistent decode cache bundles (`(session, stream)` →
+    /// encrypted KV-cache), shared by every decode engine.
+    session_store: Arc<SessionStore>,
 }
 
 impl Coordinator {
     pub fn new(policy: RoutePolicy) -> Self {
-        Coordinator { scheduler: Scheduler::new(), keymgr: Arc::new(KeyManager::new()), policy }
+        Coordinator {
+            scheduler: Scheduler::new(),
+            keymgr: Arc::new(KeyManager::new()),
+            policy,
+            session_store: Arc::new(SessionStore::default()),
+        }
     }
 
     pub fn metrics(&self) -> &super::metrics::Metrics {
         &self.scheduler.metrics
+    }
+
+    /// The decode cache-bundle store (cap knob, gauges).
+    pub fn session_store(&self) -> &SessionStore {
+        &self.session_store
+    }
+
+    /// Drop a decode stream's cache bundle (the `release_cache` wire
+    /// op); `true` if one was live. Updates the cache gauges.
+    pub fn release_cache(&self, session: u64, stream: u64) -> bool {
+        let hit = self.session_store.release(session, stream);
+        let m = &self.scheduler.metrics;
+        m.cache_blobs_live.store(self.session_store.live_blobs(), Ordering::Relaxed);
+        m.cache_bytes.store(self.session_store.live_bytes(), Ordering::Relaxed);
+        hit
     }
 
     /// PBS worker threads granted to encrypted engines registered from
@@ -269,6 +298,266 @@ impl Coordinator {
         self.add_encrypted_engine(&key, session, policy, move |ctx| {
             model.plan_for(ctx, seq_len)
         });
+        Ok(())
+    }
+
+    /// Register the encrypted **incremental decode** engine for a
+    /// session: the same L-layer model as [`Self::add_fhe_block_engine`]
+    /// served autoregressively (`fhe_circuits::DecodeFhe`). A stream
+    /// starts with one *prefill* request (`cache_ref: None`, bundle = the
+    /// `[T, D]` input grid) which runs the causal prefill plan and
+    /// deposits the stream's encrypted KV-cache bundle in the
+    /// coordinator's [`SessionStore`] under `cache_out`. Every following
+    /// *step* request (`cache_ref: Some(stream)`, bundle = one `[D]` row)
+    /// consumes that bundle **by move**, runs the per-token step plan —
+    /// O(t·d) work, the prefix is never recomputed — and deposits the
+    /// successor bundle (under `cache_out`, defaulting to the same
+    /// stream). The engine key carries the full configuration
+    /// (`decode/<mechanism>@h<H>xL<L>[s]`, see
+    /// `DecodeFhe::engine_mechanism`); result rows come back as typed
+    /// `result_blob` references like every encrypted engine.
+    ///
+    /// Abandonment contract: on any member failure (bad request,
+    /// deadline, quarantined PBS job, cache-cap overflow) the member's
+    /// input bundle AND the stream's *pre-step* cache bundle are
+    /// restored, so a resubmit replays the exact same step
+    /// (`tests/decode_it.rs`, `tests/faults_it.rs`).
+    pub fn add_fhe_decode_engine(
+        &mut self,
+        session_id: u64,
+        model: ModelFhe,
+        policy: BatchPolicy,
+    ) -> Result<(), FheError> {
+        let session = self
+            .keymgr
+            .session(session_id)
+            .ok_or_else(|| FheError::KeyMissing(format!("unknown session {session_id}")))?;
+        let decode = DecodeFhe::new(model);
+        let key = EnginePath::Encrypted {
+            session: session_id,
+            mechanism: decode.engine_mechanism(),
+        }
+        .batch_key();
+        session.ctx.set_threads(self.scheduler.fhe_threads());
+        let metrics = Arc::clone(&self.scheduler.metrics);
+        let store = Arc::clone(&self.session_store);
+        self.scheduler.add_engine(
+            &key,
+            policy,
+            Box::new(move || {
+                let session = Arc::clone(&session);
+                let metrics = Arc::clone(&metrics);
+                let store = Arc::clone(&store);
+                let decode = decode.clone();
+                let dm = decode.d_model();
+                Box::new(move |batch: &[InferRequest]| {
+                    // What phase 1 resolved for one member, plus how to
+                    // undo its takes if the step is abandoned.
+                    enum Kind {
+                        Prefill { t: usize, out_stream: u64 },
+                        Step { cached_len: usize, stream: u64, out_stream: u64 },
+                    }
+                    struct Member {
+                        blob: u64,
+                        /// Step: row ‖ pre-step cache; prefill: the grid.
+                        inputs: Vec<CtInt>,
+                        plan: Arc<CircuitPlan>,
+                        kind: Kind,
+                    }
+                    // Deterministic fault seam (`panic@engine:N`), fired
+                    // before any bundle is taken.
+                    if let Some(f) = session.ctx.fault_plan() {
+                        f.maybe_panic_engine();
+                    }
+                    // Phase 1 — resolve each member's input bundle and,
+                    // for steps, take the stream's cache bundle by move
+                    // and pick the step plan for its prefix length.
+                    let members: Vec<Result<Member, FheError>> = batch
+                        .iter()
+                        .map(|req| {
+                            let blob = match req.payload {
+                                Payload::CiphertextRef(b) => b,
+                                _ => {
+                                    return Err(FheError::BadRequest(
+                                        "decode engine takes ciphertext refs".to_string(),
+                                    ))
+                                }
+                            };
+                            let cts = session.take(blob).ok_or_else(|| {
+                                FheError::KeyMissing(format!("unknown ciphertext bundle {blob}"))
+                            })?;
+                            match req.cache_ref {
+                                None => {
+                                    let Some(out_stream) = req.cache_out else {
+                                        session.restore(blob, cts);
+                                        return Err(FheError::BadRequest(
+                                            "prefill must name cache_out (the stream id)"
+                                                .to_string(),
+                                        ));
+                                    };
+                                    if cts.is_empty() || cts.len() % dm != 0 {
+                                        let msg = format!(
+                                            "prefill bundle must be a non-empty [T, {dm}] grid, \
+                                             got {} ciphertexts",
+                                            cts.len()
+                                        );
+                                        session.restore(blob, cts);
+                                        return Err(FheError::BadRequest(msg));
+                                    }
+                                    let t = cts.len() / dm;
+                                    let plan = decode.prefill_plan_for(&session.ctx, t);
+                                    Ok(Member {
+                                        blob,
+                                        inputs: cts,
+                                        plan,
+                                        kind: Kind::Prefill { t, out_stream },
+                                    })
+                                }
+                                Some(stream) => {
+                                    if cts.len() != dm {
+                                        let msg = format!(
+                                            "step bundle must be one [{dm}] row, got {} \
+                                             ciphertexts",
+                                            cts.len()
+                                        );
+                                        session.restore(blob, cts);
+                                        return Err(FheError::BadRequest(msg));
+                                    }
+                                    let Some(entry) = store.take(session_id, stream) else {
+                                        session.restore(blob, cts);
+                                        return Err(FheError::KeyMissing(format!(
+                                            "no live cache bundle for stream {stream}"
+                                        )));
+                                    };
+                                    if entry.cts.len() != decode.cache_len(entry.cached_len) {
+                                        let msg = format!(
+                                            "stream {stream} cache holds {} ciphertexts, want {}",
+                                            entry.cts.len(),
+                                            decode.cache_len(entry.cached_len)
+                                        );
+                                        session.restore(blob, cts);
+                                        store.restore(session_id, stream, entry);
+                                        return Err(FheError::Internal(msg));
+                                    }
+                                    let cached_len = entry.cached_len;
+                                    let plan = decode.step_plan_for(&session.ctx, cached_len);
+                                    // Thread the cache into the plan by
+                                    // move: row ‖ cache, executed by ref —
+                                    // no ciphertext is ever cloned.
+                                    let mut inputs = cts;
+                                    inputs.extend(entry.cts);
+                                    let out_stream = req.cache_out.unwrap_or(stream);
+                                    Ok(Member {
+                                        blob,
+                                        inputs,
+                                        plan,
+                                        kind: Kind::Step { cached_len, stream, out_stream },
+                                    })
+                                }
+                            }
+                        })
+                        .collect();
+                    // Phase 2 — fused level-synchronous execution. Steps
+                    // at different prefix lengths and prefills co-batch:
+                    // the executor handles heterogeneous plans/depths.
+                    let fused: Vec<FusedRequest> = members
+                        .iter()
+                        .zip(batch)
+                        .filter_map(|(m, req)| {
+                            m.as_ref().ok().map(|m| FusedRequest {
+                                plan: m.plan.as_ref(),
+                                inputs: m.inputs.as_slice(),
+                                deadline: req.deadline,
+                                cancel: Some(req.cancel.clone()),
+                            })
+                        })
+                        .collect();
+                    let (outs, stats) = FusedLevelExecutor::new(&session.ctx).run_checked(&fused);
+                    drop(fused);
+                    let levels = stats.level_batch_sizes.len() as u64;
+                    metrics.fused_levels.fetch_add(levels, Ordering::Relaxed);
+                    metrics.fused_pbs.fetch_add(stats.pbs_total, Ordering::Relaxed);
+                    metrics
+                        .fused_blind_rotations
+                        .fetch_add(stats.blind_rotations, Ordering::Relaxed);
+                    metrics.quarantined.fetch_add(stats.quarantined, Ordering::Relaxed);
+                    metrics.deadline_kills.fetch_add(stats.deadline_kills, Ordering::Relaxed);
+                    // Phase 3 — deposit successor cache bundles and typed
+                    // result refs, or restore the pre-step world exactly.
+                    let mut outs = outs.into_iter();
+                    let results: Vec<Result<EngineOutput, FheError>> = members
+                        .into_iter()
+                        .map(|m| {
+                            let Member { blob, mut inputs, plan: _, kind } = m?;
+                            match outs.next().expect("one executor result per fused member") {
+                                Err(e) => {
+                                    match kind {
+                                        Kind::Prefill { .. } => session.restore(blob, inputs),
+                                        Kind::Step { cached_len, stream, .. } => {
+                                            let cache_old = inputs.split_off(dm);
+                                            session.restore(blob, inputs);
+                                            store.restore(
+                                                session_id,
+                                                stream,
+                                                CacheEntry { cts: cache_old, cached_len },
+                                            );
+                                        }
+                                    }
+                                    Err(e)
+                                }
+                                Ok(data) => match kind {
+                                    Kind::Prefill { t, out_stream } => {
+                                        let (out, cache) = decode.cache_from_prefill(t, data);
+                                        match store.put(session_id, out_stream, cache, t) {
+                                            Ok(()) => Ok(EngineOutput::ResultRef(
+                                                session.put_result(out),
+                                            )),
+                                            Err(e) => {
+                                                session.restore(blob, inputs);
+                                                Err(e)
+                                            }
+                                        }
+                                    }
+                                    Kind::Step { cached_len, stream, out_stream } => {
+                                        let cache_old = inputs.split_off(dm);
+                                        // Reserve the output slot first
+                                        // (atomic cap check): on overflow
+                                        // the pre-step cache is still in
+                                        // one piece to restore.
+                                        if let Err(e) =
+                                            store.put(session_id, out_stream, Vec::new(), 0)
+                                        {
+                                            session.restore(blob, inputs);
+                                            store.restore(
+                                                session_id,
+                                                stream,
+                                                CacheEntry { cts: cache_old, cached_len },
+                                            );
+                                            return Err(e);
+                                        }
+                                        let (out_row, cache_new) =
+                                            decode.cache_after_step(cached_len, cache_old, data);
+                                        store.restore(
+                                            session_id,
+                                            out_stream,
+                                            CacheEntry {
+                                                cts: cache_new,
+                                                cached_len: cached_len + 1,
+                                            },
+                                        );
+                                        metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+                                        Ok(EngineOutput::ResultRef(session.put_result(out_row)))
+                                    }
+                                },
+                            }
+                        })
+                        .collect();
+                    metrics.cache_blobs_live.store(store.live_blobs(), Ordering::Relaxed);
+                    metrics.cache_bytes.store(store.live_bytes(), Ordering::Relaxed);
+                    Ok(results)
+                }) as crate::coordinator::scheduler::EngineBody
+            }),
+        );
         Ok(())
     }
 
@@ -572,6 +861,26 @@ mod tests {
         let err = c.add_fhe_block_engine(99, model, 2, BatchPolicy::default()).unwrap_err();
         assert_eq!(err.code(), "key_missing");
         assert!(err.to_string().contains("unknown session"), "{err}");
+    }
+
+    #[test]
+    fn decode_engine_registration_requires_a_session() {
+        use crate::fhe_circuits::ModelFhe;
+        let mut c = Coordinator::new(RoutePolicy::PreferQuant);
+        let model = ModelFhe::demo(Mechanism::Inhibitor, 4, 2, 2, false, 4, 3);
+        let err = c.add_fhe_decode_engine(99, model, BatchPolicy::default()).unwrap_err();
+        assert_eq!(err.code(), "key_missing");
+        assert!(err.to_string().contains("unknown session"), "{err}");
+    }
+
+    #[test]
+    fn release_cache_reports_liveness_and_updates_gauges() {
+        let c = Coordinator::new(RoutePolicy::PreferQuant);
+        assert!(!c.release_cache(1, 1), "nothing live yet");
+        c.session_store().put(1, 1, Vec::new(), 0).unwrap();
+        assert!(c.release_cache(1, 1));
+        assert_eq!(c.metrics().cache_blobs_live.load(Ordering::Relaxed), 0);
+        assert_eq!(c.metrics().cache_bytes.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Session-persistent ciphertext state for incremental decode (S7): the
+//! coordinator-side store of decode **cache bundles**, keyed by
+//! `(session, stream_id)`, held between requests of one token stream.
+//!
+//! A decode stream's KV-cache never leaves the server: prefill deposits
+//! the bundle here, every step `take`s it (by move — the scheduler
+//! threads it into by-ref plan execution without cloning a single
+//! ciphertext), and the successor bundle is `put` back under the same
+//! stream id. Abandonment (deadline, fault, panic) uses [`restore`] to
+//! roll the *pre-step* bundle back so a resubmit is exact — the same
+//! contract `keymgr::Session::restore` gives victim request bundles.
+//!
+//! Hygiene: live bundles are capped **per session**
+//! ([`SessionStore::put`] returns [`FheError::CacheOverflow`] past the
+//! cap), the `release_cache` wire op drops a stream's bundle
+//! explicitly, and the `cache_blobs_live`/`cache_bytes` gauges in
+//! `coordinator::metrics` track the store's footprint.
+//!
+//! [`restore`]: SessionStore::restore
+
+use crate::error::FheError;
+use crate::tfhe::ops::CtInt;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default cap on live cache bundles per session.
+pub const DEFAULT_CACHE_CAP: usize = 8;
+
+/// One stream's persisted decode state: the cache bundle in the
+/// canonical `fhe_circuits::decode` layout plus its prefix length.
+pub struct CacheEntry {
+    pub cts: Vec<CtInt>,
+    /// Positions the bundle encodes (the step plan key).
+    pub cached_len: usize,
+}
+
+/// The `(session, stream)`-keyed cache-bundle store (see module docs).
+pub struct SessionStore {
+    streams: Mutex<HashMap<(u64, u64), CacheEntry>>,
+    max_per_session: AtomicUsize,
+}
+
+impl SessionStore {
+    pub fn new(max_per_session: usize) -> Self {
+        SessionStore {
+            streams: Mutex::new(HashMap::new()),
+            max_per_session: AtomicUsize::new(max_per_session),
+        }
+    }
+
+    /// Adjust the per-session live-bundle cap (operational knob; tests
+    /// use it to drive overflow cheaply).
+    pub fn set_cache_cap(&self, cap: usize) {
+        self.max_per_session.store(cap, Ordering::Relaxed);
+    }
+
+    /// Deposit a stream's bundle. Replacing the same stream's bundle is
+    /// always allowed; opening a *new* stream past the per-session cap
+    /// fails with [`FheError::CacheOverflow`] (the bundle is dropped —
+    /// the caller owns rollback of anything it consumed first).
+    pub fn put(
+        &self,
+        session: u64,
+        stream: u64,
+        cts: Vec<CtInt>,
+        cached_len: usize,
+    ) -> Result<(), FheError> {
+        let mut map = self.streams.lock().unwrap_or_else(|e| e.into_inner());
+        let key = (session, stream);
+        if !map.contains_key(&key) {
+            let live = map.keys().filter(|(s, _)| *s == session).count();
+            let cap = self.max_per_session.load(Ordering::Relaxed);
+            if live >= cap {
+                return Err(FheError::CacheOverflow(format!(
+                    "session {session} already holds {live} live cache bundles (cap {cap}); \
+                     release_cache a stream before opening another"
+                )));
+            }
+        }
+        map.insert(key, CacheEntry { cts, cached_len });
+        Ok(())
+    }
+
+    /// Consume a stream's bundle (by move — the executor reads the
+    /// ciphertexts by reference, so nothing is ever cloned).
+    pub fn take(&self, session: u64, stream: u64) -> Option<CacheEntry> {
+        self.streams.lock().unwrap_or_else(|e| e.into_inner()).remove(&(session, stream))
+    }
+
+    /// Roll a consumed bundle back after an abandoned step (deadline,
+    /// fault, panic) so a resubmit is exact. Never cap-checked: the
+    /// entry was live moments ago and rollback must not fail.
+    pub fn restore(&self, session: u64, stream: u64, entry: CacheEntry) {
+        self.streams
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert((session, stream), entry);
+    }
+
+    /// Drop a stream's bundle explicitly (the `release_cache` wire op);
+    /// `true` if one existed.
+    pub fn release(&self, session: u64, stream: u64) -> bool {
+        self.streams
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .remove(&(session, stream))
+            .is_some()
+    }
+
+    /// Live bundles across all sessions (the `cache_blobs_live` gauge).
+    pub fn live_blobs(&self) -> u64 {
+        self.streams.lock().unwrap_or_else(|e| e.into_inner()).len() as u64
+    }
+
+    /// Approximate ciphertext bytes held live (the `cache_bytes` gauge):
+    /// LWE mask + body words per cached ciphertext.
+    pub fn live_bytes(&self) -> u64 {
+        let map = self.streams.lock().unwrap_or_else(|e| e.into_inner());
+        map.values().map(|e| e.cts.iter().map(ct_bytes).sum::<u64>()).sum()
+    }
+}
+
+impl Default for SessionStore {
+    fn default() -> Self {
+        Self::new(DEFAULT_CACHE_CAP)
+    }
+}
+
+/// Heap bytes of one LWE ciphertext (mask words + body word).
+fn ct_bytes(ct: &CtInt) -> u64 {
+    ((ct.ct.mask.len() + 1) * std::mem::size_of::<u64>()) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::bootstrap::ClientKey;
+    use crate::tfhe::ops::FheContext;
+    use crate::tfhe::params::TfheParams;
+    use crate::util::prng::Xoshiro256;
+
+    fn some_cts(n: usize) -> (FheContext, Vec<CtInt>) {
+        let mut rng = Xoshiro256::new(5);
+        let ck = ClientKey::generate(TfheParams::test_small(), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let cts = (0..n).map(|i| ctx.encrypt(i as i64 % 3, &ck, &mut rng)).collect();
+        (ctx, cts)
+    }
+
+    #[test]
+    fn put_take_restore_release_lifecycle() {
+        let (_ctx, cts) = some_cts(4);
+        let store = SessionStore::new(4);
+        assert!(store.put(1, 10, cts, 2).is_ok());
+        assert_eq!(store.live_blobs(), 1);
+        assert!(store.live_bytes() > 0);
+        let entry = store.take(1, 10).expect("bundle exists");
+        assert_eq!(entry.cached_len, 2);
+        assert_eq!(entry.cts.len(), 4);
+        assert!(store.take(1, 10).is_none(), "take consumes");
+        assert_eq!(store.live_blobs(), 0);
+        store.restore(1, 10, entry);
+        assert_eq!(store.live_blobs(), 1);
+        assert!(store.release(1, 10));
+        assert!(!store.release(1, 10), "release is idempotent-false");
+        assert_eq!(store.live_bytes(), 0);
+    }
+
+    #[test]
+    fn per_session_cap_is_enforced_and_typed() {
+        let store = SessionStore::new(2);
+        let (_ctx, cts) = some_cts(6);
+        let mut cts = cts.into_iter();
+        let two = |it: &mut dyn Iterator<Item = CtInt>| it.by_ref().take(2).collect::<Vec<_>>();
+        assert!(store.put(1, 1, two(&mut cts), 1).is_ok());
+        assert!(store.put(1, 2, two(&mut cts), 1).is_ok());
+        let err = store.put(1, 3, two(&mut cts), 1).unwrap_err();
+        assert_eq!(err.code(), "cache_overflow", "{err}");
+        // Replacing a live stream is not an "open".
+        assert!(store.put(1, 2, Vec::new(), 0).is_ok());
+        // Other sessions have their own budget.
+        assert!(store.put(2, 1, Vec::new(), 0).is_ok());
+        // Raising the cap unblocks.
+        store.set_cache_cap(3);
+        assert!(store.put(1, 3, Vec::new(), 0).is_ok());
+    }
+}

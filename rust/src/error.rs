@@ -37,6 +37,9 @@ pub enum FheError {
     Shutdown,
     /// Backpressure: the engine's bounded queue is full.
     QueueFull(String),
+    /// A session exceeded its live decode-cache bundle cap; the client
+    /// must `release_cache` (or finish a stream) before opening more.
+    CacheOverflow(String),
     /// The request itself is malformed for the engine it targets
     /// (wrong payload kind, bad feature shape, ...).
     BadRequest(String),
@@ -60,6 +63,7 @@ impl FheError {
             FheError::Cancelled => "cancelled",
             FheError::Shutdown => "shutdown",
             FheError::QueueFull(_) => "queue_full",
+            FheError::CacheOverflow(_) => "cache_overflow",
             FheError::BadRequest(_) => "bad_request",
             FheError::Protocol(_) => "protocol",
             FheError::Internal(_) => "internal",
@@ -82,6 +86,7 @@ impl FheError {
             "cancelled" => FheError::Cancelled,
             "shutdown" => FheError::Shutdown,
             "queue_full" => FheError::QueueFull(m),
+            "cache_overflow" => FheError::CacheOverflow(m),
             "bad_request" => FheError::BadRequest(m),
             "protocol" => FheError::Protocol(m),
             "internal" => FheError::Internal(m),
@@ -100,6 +105,7 @@ impl std::fmt::Display for FheError {
             | FheError::WorkerPanic(m)
             | FheError::DeadlineExceeded(m)
             | FheError::QueueFull(m)
+            | FheError::CacheOverflow(m)
             | FheError::BadRequest(m)
             | FheError::Protocol(m)
             | FheError::Internal(m) => write!(f, "{m}"),
@@ -137,6 +143,7 @@ mod tests {
             FheError::Cancelled,
             FheError::Shutdown,
             FheError::QueueFull("q".into()),
+            FheError::CacheOverflow("c".into()),
             FheError::BadRequest("b".into()),
             FheError::Protocol("pr".into()),
             FheError::Internal("i".into()),

@@ -104,13 +104,16 @@ fn qkv_input_refs<'m>(q: &'m CtMatrix, k: &'m CtMatrix, v: &'m CtMatrix) -> Vec<
 }
 
 /// Scale-shift LUT shared by circuit and mirror: `relu(round(x/γ) − α)`.
-fn scaled_shift_relu(x: i64, gamma: f64, alpha_q: i64) -> i64 {
+/// `pub(super)` so the incremental-decode mirror (`super::decode`)
+/// evaluates the identical table.
+pub(super) fn scaled_shift_relu(x: i64, gamma: f64, alpha_q: i64) -> i64 {
     ((x as f64 / gamma).round() as i64 - alpha_q).max(0)
 }
 
 /// exp LUT shared by the dot-product circuit and its mirror, normalized
-/// to (0, max_out]: exp of the max score maps to max_out.
-fn exp_lut_at(exp_scale: f64, x: i64, max_out: i64) -> i64 {
+/// to (0, max_out]: exp of the max score maps to max_out. `pub(super)`
+/// for the same reason as [`scaled_shift_relu`].
+pub(super) fn exp_lut_at(exp_scale: f64, x: i64, max_out: i64) -> i64 {
     let e = (x as f64 * exp_scale).exp();
     (e * max_out as f64).round().clamp(1.0, max_out as f64) as i64
 }
@@ -288,6 +291,55 @@ impl InhibitorFhe {
                 let h = b.sum(&terms);
                 outs.push(b.refresh(h));
             }
+        }
+        outs
+    }
+
+    /// Incremental-decode form of [`Self::emit`]: one query row `q`
+    /// (`d` nodes) attending `n` key/value positions (`n·d` nodes each,
+    /// position-major — the cached prefix plus the new token's own
+    /// row). Emits exactly the dataflow [`Self::emit`] produces for a
+    /// single query row, so a causal prefill built by looping this
+    /// recurrence is bit-identical to streaming the same tokens one
+    /// step at a time. The scale-shift table is registered fresh per
+    /// call — as in `emit` — so steps never CSE-merge across tokens and
+    /// the per-step closed form `2·n·d + n + d` is rewrite-stable.
+    pub(super) fn emit_step(
+        &self,
+        b: &mut CircuitBuilder,
+        q: &[NodeId],
+        k: &[NodeId],
+        v: &[NodeId],
+        n: usize,
+        d: usize,
+    ) -> Vec<NodeId> {
+        assert_eq!(q.len(), d, "one query row");
+        assert_eq!(k.len(), n * d, "n cached+new key rows");
+        assert_eq!(v.len(), n * d, "n cached+new value rows");
+        let gamma = self.gamma;
+        let alpha_q = self.alpha_q;
+        let mut abs = Vec::with_capacity(n * d);
+        for j in 0..n {
+            for kk in 0..d {
+                let diff = b.sub(q[kk], k[j * d + kk]);
+                abs.push(b.abs(diff));
+            }
+        }
+        let ssr = b.lut(move |x| scaled_shift_relu(x, gamma, alpha_q));
+        let mut z = Vec::with_capacity(n);
+        for j in 0..n {
+            let dist = b.sum(&abs[j * d..(j + 1) * d]);
+            z.push(b.pbs(dist, ssr));
+        }
+        let mut outs = Vec::with_capacity(d);
+        for kk in 0..d {
+            let mut terms = Vec::with_capacity(n);
+            for j in 0..n {
+                let diff = b.sub(v[j * d + kk], z[j]);
+                terms.push(b.relu(diff));
+            }
+            let h = b.sum(&terms);
+            outs.push(b.refresh(h));
         }
         outs
     }
@@ -543,6 +595,91 @@ impl InhibitorSignedFhe {
         outs
     }
 
+    /// Incremental-decode score path: one query row against `n`
+    /// cached+new key rows. Fresh scale-shift table per call, exactly
+    /// like [`Self::emit_scores`] — one table per (token, head).
+    fn emit_step_scores(
+        &self,
+        b: &mut CircuitBuilder,
+        q: &[NodeId],
+        k: &[NodeId],
+        n: usize,
+        d: usize,
+    ) -> Vec<NodeId> {
+        assert_eq!(q.len(), d, "one query row");
+        assert_eq!(k.len(), n * d, "n cached+new key rows");
+        let gamma = self.gamma;
+        let alpha_q = self.alpha_q;
+        let mut abs = Vec::with_capacity(n * d);
+        for j in 0..n {
+            for kk in 0..d {
+                let diff = b.sub(q[kk], k[j * d + kk]);
+                abs.push(b.abs(diff));
+            }
+        }
+        let ssr = b.lut(move |x| scaled_shift_relu(x, gamma, alpha_q));
+        let mut z = Vec::with_capacity(n);
+        for j in 0..n {
+            let dist = b.sum(&abs[j * d..(j + 1) * d]);
+            z.push(b.pbs(dist, ssr));
+        }
+        z
+    }
+
+    /// Incremental-decode form of [`Self::emit_presplit`]: one query
+    /// row, `n` pre-split `(v⁺, v⁻)` pairs (position-major). The block
+    /// circuit's decode seam — cached splits arrive as plan inputs, the
+    /// new token's pair is emitted by the caller from its residual
+    /// accumulator. Positive and negative terms interleave per j
+    /// exactly as in the full emitter, so partial-sum magnitudes match.
+    /// Per-step closed form: `3·n·d + n + d` LUT evaluations.
+    pub(super) fn emit_step_presplit(
+        &self,
+        b: &mut CircuitBuilder,
+        q: &[NodeId],
+        k: &[NodeId],
+        vsplits: &[(NodeId, NodeId)],
+        n: usize,
+        d: usize,
+    ) -> Vec<NodeId> {
+        assert_eq!(vsplits.len(), n * d, "one (v⁺, v⁻) pair per value element");
+        let z = self.emit_step_scores(b, q, k, n, d);
+        let mut outs = Vec::with_capacity(d);
+        for kk in 0..d {
+            let mut terms = Vec::with_capacity(2 * n);
+            for j in 0..n {
+                let (vp, vn) = vsplits[j * d + kk];
+                let pos_in = b.sub(vp, z[j]);
+                terms.push(b.relu(pos_in));
+                let neg_in = b.add(vn, z[j]);
+                terms.push(b.min0(neg_in));
+            }
+            let h = b.sum(&terms);
+            outs.push(b.refresh(h));
+        }
+        outs
+    }
+
+    /// Incremental-decode form of [`Self::emit`] over plain values:
+    /// splits each of the `n` value elements once (std relu/min0
+    /// tables) and feeds [`Self::emit_step_presplit`]. Standalone
+    /// multi-head decode uses this arm; the block circuit passes
+    /// pre-split pairs instead.
+    pub(super) fn emit_step(
+        &self,
+        b: &mut CircuitBuilder,
+        q: &[NodeId],
+        k: &[NodeId],
+        v: &[NodeId],
+        n: usize,
+        d: usize,
+    ) -> Vec<NodeId> {
+        assert_eq!(v.len(), n * d, "n cached+new value rows");
+        let splits: Vec<(NodeId, NodeId)> =
+            v.iter().map(|&x| (b.relu(x), b.min0(x))).collect();
+        self.emit_step_presplit(b, q, k, &splits, n, d)
+    }
+
     /// Build the head's circuit plan. Inputs `q ‖ k ‖ v` row-major;
     /// outputs `H` row-major. Four PBS levels: score abs + value splits
     /// (3·T²·d) → fused scale-shift-ReLU (T²) → signed inhibition
@@ -753,6 +890,48 @@ impl DotProductFhe {
                 let acc = b.sum(&terms);
                 outs.push(b.pbs(acc, rescale));
             }
+        }
+        outs
+    }
+
+    /// Incremental-decode form of [`Self::emit`]: one query row against
+    /// `n` cached+new key/value rows (the causal softmax row — only
+    /// positions ≤ the new token exist, so no transposed product pair
+    /// ever forms and the per-step count `4·n·d + 3·n + 1 + d` is
+    /// rewrite-stable). exp/recip/rescale tables are registered fresh
+    /// per call, as in `emit`.
+    pub(super) fn emit_step(
+        &self,
+        b: &mut CircuitBuilder,
+        q: &[NodeId],
+        k: &[NodeId],
+        v: &[NodeId],
+        n: usize,
+        d: usize,
+    ) -> Vec<NodeId> {
+        assert_eq!(q.len(), d, "one query row");
+        assert_eq!(k.len(), n * d, "n cached+new key rows");
+        assert_eq!(v.len(), n * d, "n cached+new value rows");
+        let exp_scale = self.exp_scale;
+        let max_out = (1i64 << self.prob_bits) - 1;
+        let mut scores = Vec::with_capacity(n);
+        for j in 0..n {
+            let prods: Vec<_> = (0..d).map(|kk| b.ct_mul(q[kk], k[j * d + kk])).collect();
+            scores.push(b.sum(&prods));
+        }
+        let exp = b.lut(move |x| exp_lut_at(exp_scale, x, max_out));
+        let e: Vec<_> = scores.iter().map(|&s| b.pbs(s, exp)).collect();
+        let recip = b.lut(crate::tfhe::ops::recip_fn(max_out));
+        let row = b.sum(&e);
+        let r = b.pbs(row, recip);
+        let probs: Vec<_> = e.iter().map(|&ej| b.ct_mul(ej, r)).collect();
+        let rescale = b.lut(move |x| (x as f64 / max_out as f64).round() as i64);
+        let mut outs = Vec::with_capacity(d);
+        for kk in 0..d {
+            let terms: Vec<_> =
+                (0..n).map(|j| b.ct_mul(probs[j], v[j * d + kk])).collect();
+            let acc = b.sum(&terms);
+            outs.push(b.pbs(acc, rescale));
         }
         outs
     }

@@ -381,6 +381,123 @@ impl BlockFhe {
         (out, accs)
     }
 
+    /// Incremental-decode form of [`Self::emit`]: one new residual-stream
+    /// row against `t_cached` cached positions. `x_row` is the new
+    /// token's `[D]` input row; `cached_x` is the `[t_cached, D]` grid of
+    /// *this layer's* previous input rows (the decode cache); for the
+    /// signed mechanism `cached_splits` carries the `t_cached · vcols`
+    /// already-computed (v⁺, v⁻) pairs (position-major) so cached value
+    /// splits cost zero fresh PBS, and `x_acc_row` is the previous
+    /// layer's accumulator for the new row only — the same fold seam as
+    /// the full emitter, now per token. Returns the requanted output
+    /// row, the raw accumulator row (next layer's `x_acc_row`) and the
+    /// new position's split pairs (empty for unsigned mechanisms), which
+    /// the caller appends to the cache.
+    pub(super) fn emit_step(
+        &self,
+        b: &mut CircuitBuilder,
+        x_row: &[NodeId],
+        x_acc_row: Option<(&[NodeId], FixedMult)>,
+        cached_x: &[NodeId],
+        cached_splits: &[(NodeId, NodeId)],
+        t_cached: usize,
+    ) -> (Vec<NodeId>, Vec<NodeId>, Vec<(NodeId, NodeId)>) {
+        let dm = self.split.d_model;
+        let d = self.split.d_head();
+        let heads = self.split.n_heads;
+        let n = t_cached + 1;
+        assert_eq!(x_row.len(), dm, "step input must be one [d_model] row");
+        assert_eq!(cached_x.len(), t_cached * dm, "cache must be [t_cached, d_model]");
+        if let Some((acc, _)) = x_acc_row {
+            assert_eq!(acc.len(), dm, "accumulator row must match the input row");
+        }
+        let w = &self.weights;
+        // --- attention: the new row's query against cached + new K/V ---
+        let q_slice = |col0: usize| -> Vec<NodeId> {
+            (0..d).map(|kk| x_row[col0 + kk]).collect()
+        };
+        let k_slice = |col0: usize| -> Vec<NodeId> {
+            let mut s = Vec::with_capacity(n * d);
+            for j in 0..t_cached {
+                for kk in 0..d {
+                    s.push(cached_x[j * dm + col0 + kk]);
+                }
+            }
+            for kk in 0..d {
+                s.push(x_row[col0 + kk]);
+            }
+            s
+        };
+        let qs: Vec<Vec<NodeId>> = (0..heads).map(|h| q_slice(self.split.col0(h))).collect();
+        let ks: Vec<Vec<NodeId>> =
+            (0..heads).map(|h| k_slice(if self.shared_kv { 0 } else { self.split.col0(h) })).collect();
+        let (outs, new_pairs) = if self.mechanism == Mechanism::InhibitorSigned {
+            let vcols = if self.shared_kv { d } else { dm };
+            assert_eq!(
+                cached_splits.len(),
+                t_cached * vcols,
+                "cached splits must be [t_cached, vcols]"
+            );
+            // Only the NEW position's splits are emitted; every cached
+            // pair arrives as a plan input — the O(T·d) saving.
+            let mut new_pairs = Vec::with_capacity(vcols);
+            for c in 0..vcols {
+                let pair = match x_acc_row {
+                    Some((acc, m)) => {
+                        (b.requant_relu(acc[c], m), b.requant_min0(acc[c], m))
+                    }
+                    None => (b.relu(x_row[c]), b.min0(x_row[c])),
+                };
+                new_pairs.push(pair);
+            }
+            let pair_slice = |col0: usize| -> Vec<(NodeId, NodeId)> {
+                let mut s = Vec::with_capacity(n * d);
+                for j in 0..t_cached {
+                    for kk in 0..d {
+                        s.push(cached_splits[j * vcols + col0 + kk]);
+                    }
+                }
+                for kk in 0..d {
+                    s.push(new_pairs[col0 + kk]);
+                }
+                s
+            };
+            let per_head: Vec<Vec<(NodeId, NodeId)>> = (0..heads)
+                .map(|h| pair_slice(if self.shared_kv { 0 } else { self.split.col0(h) }))
+                .collect();
+            let values: Vec<HeadValues> =
+                per_head.iter().map(|p| HeadValues::PreSplit(p)).collect();
+            (self.attn.emit_step(b, &qs, &ks, &values, n, d), new_pairs)
+        } else {
+            let values: Vec<HeadValues> = ks.iter().map(|k| HeadValues::Plain(k)).collect();
+            (self.attn.emit_step(b, &qs, &ks, &values, n, d), Vec::new())
+        };
+        // Concatenate the head output rows into one [D] row.
+        let mut hrow = vec![0usize; dm];
+        for (h, head_out) in outs.iter().enumerate() {
+            let c0 = self.split.col0(h);
+            hrow[c0..c0 + d].copy_from_slice(head_out);
+        }
+        // --- W_O projection + first residual requant (t = 1 rows) ---
+        let wo_out = self.emit_linear(b, &hrow, 1, &w.wo, &w.wo_b, w.wo_requant, false);
+        let mut x1 = Vec::with_capacity(dm);
+        for c in 0..dm {
+            let acc = b.add(x_row[c], wo_out[c]);
+            x1.push(b.requant(acc, w.resid_requant));
+        }
+        // --- FFN + second residual, exactly like the full emitter ---
+        let h1 = self.emit_linear(b, &x1, 1, &w.fc1, &w.fc1_b, w.fc1_requant, true);
+        let f = self.emit_linear(b, &h1, 1, &w.fc2, &w.fc2_b, w.fc2_requant, false);
+        let mut out = Vec::with_capacity(dm);
+        let mut accs = Vec::with_capacity(dm);
+        for c in 0..dm {
+            let acc = b.add(x1[c], f[c]);
+            out.push(b.requant(acc, w.resid_requant));
+            accs.push(acc);
+        }
+        (out, accs, new_pairs)
+    }
+
     /// Lower `y = requant(x·Wᵀ + b)` (optionally with the ReLU fused
     /// into the requant table) to free scalar_mul/sum/add_const linear
     /// nodes plus one requant PBS per output element — the plaintext
@@ -508,7 +625,9 @@ impl BlockFhe {
 
 /// Plaintext mirror of [`BlockFhe::emit_linear`]: i64-exact matmul +
 /// bias, then the (optionally ReLU-fused) requant table with its clamp.
-fn mirror_linear(
+/// `pub(super)` because the incremental-decode mirror (`super::decode`)
+/// reuses it row by row.
+pub(super) fn mirror_linear(
     x: &ITensor,
     w: &ITensor,
     bias: &[i64],

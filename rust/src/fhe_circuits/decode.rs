@@ -1,0 +1,797 @@
+//! Incremental **decode** subsystem (S7): token-by-token encrypted
+//! inference with an encrypted KV-cache, instead of recomputing the full
+//! T×T attention every forward.
+//!
+//! ## The recurrence
+//!
+//! Real serving of the paper's inhibitor attention is autoregressive:
+//! one new token enters, attends **causally** over everything before it,
+//! and the model emits one output row. [`DecodeFhe`] compiles exactly
+//! that recurrence:
+//!
+//! * a **step plan** ([`DecodeFhe::step_plan`]) takes the new token's
+//!   `[D]` input row plus the *cache bundle* at prefix length `t` as
+//!   plan inputs, and emits only the new token's work — the new row's
+//!   scores against every cached position, the inhibition sums over
+//!   cached values, the W_O/FFN/residual row — returning the output row
+//!   plus the cache *extension* (each layer's new residual-stream row
+//!   and, for the signed mechanism, the new (v⁺, v⁻) split pair). Fresh
+//!   PBS per token is **O(T·d)**, not O(T²·d).
+//! * a **prefill plan** ([`DecodeFhe::prefill_plan`]) bootstraps a
+//!   stream: the *same* per-token emitter ([`DecodeFhe`]'s internal
+//!   `emit_token`) looped over the `[T, D]` input grid, so the causal
+//!   prefill is **by construction** the identical dataflow as T
+//!   consecutive steps — the step ≡ one-shot bit-identity the
+//!   differential harness pins is structural, not coincidental. Its
+//!   output tail *is* the cache bundle at `t = T`.
+//!
+//! The degenerate `T = 1` stream is the companion paper's gated-RNN
+//! workload: prefill one token, then pure recurrence — same plans, same
+//! cache, no special case.
+//!
+//! ## Cache bundle layout
+//!
+//! One flat `Vec<CtInt>`, per layer ℓ in order:
+//!
+//! ```text
+//! x^ℓ rows      t·D          layer ℓ's INPUT rows, position-major
+//!                            (x⁰ = model input; x^ℓ = layer ℓ−1 out)
+//! split pairs   2·t·vcols    signed mechanism only: the (v⁺, v⁻)
+//!                            pairs, position-major, interleaved p,n
+//! ```
+//!
+//! with `vcols = d_head` under `shared_kv` else `D`. Cached positions
+//! cost **zero** fresh PBS at every later step: K rows are the cached
+//! x rows verbatim (q = k = v residual-stream attention), and the
+//! signed value splits — the one per-position PBS product the full
+//! circuit re-derives T times — are cached post-PBS. The residual
+//! *accumulator* seam (the ϑ ≥ 2 trio fold of the block circuit) never
+//! enters the cache: layer ℓ's new-token splits read layer ℓ−1's
+//! accumulator row **in-step**, threading through the step plan exactly
+//! as the full stacked plan threads it across layers.
+//!
+//! Closed forms for the per-step counts live in
+//! [`crate::optimizer::precision::profile_step`] and are pinned against
+//! the plan oracles; because every per-call LUT (`ssr`, `exp`, `recip`,
+//! `rescale`) registers fresh per token and causal ordering admits no
+//! transposed product pairs, the prefill counts are *exactly* the sum of
+//! the step counts over prefixes — also pinned.
+//!
+//! The plaintext reference is [`DecodeMirror`]: the same streaming
+//! recurrence over integer state with every LUT clamp applied, matching
+//! the encrypted decode bit for bit.
+
+use super::attention_fhe::{
+    exp_lut_at, scaled_shift_relu, CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe,
+    PlanCache,
+};
+use super::block_fhe::{mirror_linear, BlockFhe, ModelFhe};
+use crate::attention::Mechanism;
+use crate::quant::FixedMult;
+use crate::tensor::ITensor;
+use crate::tfhe::ops::{CtInt, FheContext};
+use crate::tfhe::plan::{CircuitBuilder, CircuitPlan, NodeId};
+use std::sync::Arc;
+
+/// Per-layer node state threaded through `emit_token`: this layer's
+/// input rows so far, plus (signed mechanism) the cached split pairs.
+struct LayerState {
+    x_rows: Vec<NodeId>,
+    splits: Vec<(NodeId, NodeId)>,
+}
+
+/// The incremental-decode compiler over a [`ModelFhe`] block stack: step
+/// plans per prefix length, the causal prefill plan, and the cache
+/// bundle plumbing (see the module docs for the layout).
+#[derive(Clone, Debug)]
+pub struct DecodeFhe {
+    pub model: ModelFhe,
+    /// Step plans keyed `(t_cached, D, budget)`.
+    step_cache: Arc<PlanCache>,
+    /// Prefill plans keyed `(T, D, budget)` — a separate cache so a
+    /// step plan at prefix t and a prefill of length t cannot collide.
+    prefill_cache: Arc<PlanCache>,
+}
+
+impl DecodeFhe {
+    pub fn new(model: ModelFhe) -> Self {
+        DecodeFhe {
+            model,
+            step_cache: Arc::new(PlanCache::default()),
+            prefill_cache: Arc::new(PlanCache::default()),
+        }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.model.split.d_model
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.model.n_layers()
+    }
+
+    fn signed(&self) -> bool {
+        self.model.mechanism == Mechanism::InhibitorSigned
+    }
+
+    /// Width of the cached split rows: the shared K/V slice under
+    /// multi-query, the full stream otherwise.
+    fn vcols(&self) -> usize {
+        if self.model.shared_kv { self.model.split.d_head() } else { self.d_model() }
+    }
+
+    /// Cache ciphertexts per position per layer (see the module docs).
+    fn per_position_len(&self) -> usize {
+        self.d_model() + if self.signed() { 2 * self.vcols() } else { 0 }
+    }
+
+    /// One layer's cache slice length at prefix `t`.
+    pub fn cache_layer_len(&self, t: usize) -> usize {
+        t * self.per_position_len()
+    }
+
+    /// Total cache bundle length at prefix `t`.
+    pub fn cache_len(&self, t: usize) -> usize {
+        self.n_layers() * self.cache_layer_len(t)
+    }
+
+    /// Prefix length a well-formed cache bundle of `len` ciphertexts
+    /// encodes; `None` if `len` is not a whole number of positions.
+    pub fn cached_len_of(&self, len: usize) -> Option<usize> {
+        let per_t = self.n_layers() * self.per_position_len();
+        if per_t == 0 || len % per_t != 0 {
+            None
+        } else {
+            Some(len / per_t)
+        }
+    }
+
+    /// Step-plan inputs at prefix `t`: the new `[D]` row, then the cache
+    /// bundle in its canonical layout.
+    pub fn n_step_inputs(&self, t: usize) -> usize {
+        self.d_model() + self.cache_len(t)
+    }
+
+    /// Step-plan outputs: the final output row, then per layer the cache
+    /// extension (new x row; signed: new split pair per value column).
+    pub fn n_step_outputs(&self) -> usize {
+        self.d_model() + self.n_layers() * self.per_position_len()
+    }
+
+    /// Mechanism string the serving registry keys decode engines by:
+    /// `decode/<mechanism>@h<H>xL<L>[s]` (router key
+    /// `fhe/decode/<mech>@h<H>xL<L>[s]/<session>`).
+    pub fn engine_mechanism(&self) -> String {
+        decode_engine_mechanism(
+            self.model.mechanism,
+            self.model.split.n_heads,
+            self.n_layers(),
+            self.model.shared_kv,
+        )
+    }
+
+    /// Emit one token's pass through the whole block stack: the new
+    /// row's work at every layer, against (and extending) the per-layer
+    /// `states`. The accumulator seam threads across layers exactly as
+    /// in [`ModelFhe::plan`]; each layer's consumed input row and new
+    /// split pair are appended to its state, so after the call the state
+    /// tails are this token's cache extension. Both the step and the
+    /// prefill plan builders feed through here — the single definition
+    /// of the decode recurrence.
+    fn emit_token(
+        &self,
+        b: &mut CircuitBuilder,
+        states: &mut [LayerState],
+        x_row: &[NodeId],
+    ) -> Vec<NodeId> {
+        let dm = self.d_model();
+        let mut row = x_row.to_vec();
+        let mut acc: Option<(Vec<NodeId>, FixedMult)> = None;
+        for (blk, st) in self.model.blocks.iter().zip(states.iter_mut()) {
+            let t_cached = st.x_rows.len() / dm;
+            let (out, naccs, new_pairs) = blk.emit_step(
+                b,
+                &row,
+                acc.as_ref().map(|(a, m)| (a.as_slice(), *m)),
+                &st.x_rows,
+                &st.splits,
+                t_cached,
+            );
+            st.x_rows.extend_from_slice(&row);
+            st.splits.extend(new_pairs);
+            acc = Some((naccs, blk.weights.resid_requant));
+            row = out;
+        }
+        row
+    }
+
+    /// Build the step plan at prefix `t_cached`, **raw** (the rewrite
+    /// pipeline is `step_plan_for`'s). Inputs: new row ‖ cache bundle;
+    /// outputs: output row ‖ cache extension (layer 0's "new x row" is
+    /// the plan's own input row, re-exported so every layer's extension
+    /// has one shape).
+    pub fn step_plan(&self, t_cached: usize) -> CircuitPlan {
+        let dm = self.d_model();
+        let vcols = self.vcols();
+        let mut b = CircuitBuilder::new();
+        let x_row = b.inputs(dm);
+        let mut states = Vec::with_capacity(self.n_layers());
+        for _ in 0..self.n_layers() {
+            let x_rows = b.inputs(t_cached * dm);
+            let splits = if self.signed() {
+                let raw = b.inputs(2 * t_cached * vcols);
+                raw.chunks(2).map(|p| (p[0], p[1])).collect()
+            } else {
+                Vec::new()
+            };
+            states.push(LayerState { x_rows, splits });
+        }
+        let out = self.emit_token(&mut b, &mut states, &x_row);
+        for id in out {
+            b.output(id);
+        }
+        for st in &states {
+            for &id in &st.x_rows[t_cached * dm..] {
+                b.output(id);
+            }
+            if self.signed() {
+                for &(p, n) in &st.splits[t_cached * vcols..] {
+                    b.output(p);
+                    b.output(n);
+                }
+            }
+        }
+        b.build()
+    }
+
+    /// Build the causal prefill plan for `t` tokens, **raw**: the step
+    /// recurrence looped over the `[T, D]` input grid. Outputs: the
+    /// `[T, D]` causal output grid, then the cache bundle at prefix `t`
+    /// (the per-layer states in canonical layout).
+    pub fn prefill_plan(&self, t: usize) -> CircuitPlan {
+        assert!(t >= 1, "prefill needs at least one token");
+        let dm = self.d_model();
+        let mut b = CircuitBuilder::new();
+        let grid = b.inputs(t * dm);
+        let mut states: Vec<LayerState> = (0..self.n_layers())
+            .map(|_| LayerState { x_rows: Vec::new(), splits: Vec::new() })
+            .collect();
+        let mut outs = Vec::with_capacity(t * dm);
+        for i in 0..t {
+            let row = self.emit_token(&mut b, &mut states, &grid[i * dm..(i + 1) * dm]);
+            outs.extend(row);
+        }
+        for id in outs {
+            b.output(id);
+        }
+        for st in &states {
+            for &id in &st.x_rows {
+                b.output(id);
+            }
+            for &(p, n) in &st.splits {
+                b.output(p);
+                b.output(n);
+            }
+        }
+        b.build()
+    }
+
+    /// The rewritten, cached step plan for prefix `t_cached` under `ctx`
+    /// (honors `FHE_NO_REWRITE`, like every `plan_for`).
+    pub fn step_plan_for(&self, ctx: &FheContext, t_cached: usize) -> Arc<CircuitPlan> {
+        self.step_cache.rewritten_for(ctx, t_cached, self.d_model(), || self.step_plan(t_cached))
+    }
+
+    /// The rewritten, cached prefill plan for `t` tokens under `ctx`.
+    pub fn prefill_plan_for(&self, ctx: &FheContext, t: usize) -> Arc<CircuitPlan> {
+        self.prefill_cache.rewritten_for(ctx, t, self.d_model(), || self.prefill_plan(t))
+    }
+
+    /// Step-plan cache regression counter (see `InhibitorFhe::plan_builds`).
+    pub fn step_plan_builds(&self) -> usize {
+        self.step_cache.builds()
+    }
+
+    /// Prefill-plan cache regression counter.
+    pub fn prefill_plan_builds(&self) -> usize {
+        self.prefill_cache.builds()
+    }
+
+    /// Split a prefill plan's output vector into (causal `[T, D]` output
+    /// rows, cache bundle at prefix `t`).
+    pub fn cache_from_prefill(&self, t: usize, mut outputs: Vec<CtInt>) -> (Vec<CtInt>, Vec<CtInt>) {
+        let dm = self.d_model();
+        assert_eq!(outputs.len(), t * dm + self.cache_len(t), "prefill output length");
+        let cache = outputs.split_off(t * dm);
+        (outputs, cache)
+    }
+
+    /// Merge a step plan's outputs into the successor cache bundle:
+    /// per layer, old x rows ‖ new x row ‖ old splits ‖ new splits.
+    /// Consumes the pre-step bundle and returns `(output row, cache at
+    /// t_cached + 1)`.
+    pub fn cache_after_step(
+        &self,
+        t_cached: usize,
+        old_cache: Vec<CtInt>,
+        mut step_out: Vec<CtInt>,
+    ) -> (Vec<CtInt>, Vec<CtInt>) {
+        let dm = self.d_model();
+        let vcols = self.vcols();
+        assert_eq!(old_cache.len(), self.cache_len(t_cached), "pre-step cache length");
+        assert_eq!(step_out.len(), self.n_step_outputs(), "step output length");
+        let tail = step_out.split_off(dm);
+        let out_row = step_out;
+        let mut cache = Vec::with_capacity(self.cache_len(t_cached + 1));
+        let mut old = old_cache.into_iter();
+        let mut new = tail.into_iter();
+        for _ in 0..self.n_layers() {
+            cache.extend(old.by_ref().take(t_cached * dm));
+            cache.extend(new.by_ref().take(dm));
+            if self.signed() {
+                cache.extend(old.by_ref().take(2 * t_cached * vcols));
+                cache.extend(new.by_ref().take(2 * vcols));
+            }
+        }
+        (out_row, cache)
+    }
+
+    /// Encrypted prefill: execute the causal prefill plan over the
+    /// `[T, D]` input grid and return (causal output rows, cache bundle).
+    pub fn prefill(&self, ctx: &FheContext, x: &CtMatrix) -> (CtMatrix, Vec<CtInt>) {
+        let dm = self.d_model();
+        assert_eq!(x.cols, dm, "input must be [T, d_model]");
+        let t = x.rows;
+        let refs: Vec<&CtInt> = x.data.iter().collect();
+        let outputs = self.prefill_plan_for(ctx, t).execute_ref(ctx, &refs);
+        let (out, cache) = self.cache_from_prefill(t, outputs);
+        (CtMatrix { rows: t, cols: dm, data: out }, cache)
+    }
+
+    /// Encrypted decode step: one new input row against (and consuming)
+    /// the cache bundle; returns `(output row, successor cache)`.
+    pub fn step(&self, ctx: &FheContext, x_row: &[CtInt], cache: Vec<CtInt>) -> (Vec<CtInt>, Vec<CtInt>) {
+        let dm = self.d_model();
+        assert_eq!(x_row.len(), dm, "step input must be one [d_model] row");
+        let t_cached = self
+            .cached_len_of(cache.len())
+            .unwrap_or_else(|| panic!("malformed cache bundle of {} ciphertexts", cache.len()));
+        let plan = self.step_plan_for(ctx, t_cached);
+        let mut refs: Vec<&CtInt> = Vec::with_capacity(dm + cache.len());
+        refs.extend(x_row.iter());
+        refs.extend(cache.iter());
+        let outputs = plan.execute_ref(ctx, &refs);
+        self.cache_after_step(t_cached, cache, outputs)
+    }
+}
+
+/// See [`DecodeFhe::engine_mechanism`]: `decode/<mech>@h<H>xL<L>[s]`.
+pub fn decode_engine_mechanism(
+    mech: Mechanism,
+    n_heads: usize,
+    n_layers: usize,
+    shared_kv: bool,
+) -> String {
+    format!(
+        "decode/{}@h{}xL{}{}",
+        mech.name(),
+        n_heads,
+        n_layers,
+        if shared_kv { "s" } else { "" }
+    )
+}
+
+// ---------------------------------------------------------------------
+// Plaintext streaming mirror
+// ---------------------------------------------------------------------
+
+/// Per-layer integer state of the streaming mirror.
+struct MirrorLayer {
+    /// This layer's input rows so far, `[t, D]` row-major.
+    x_rows: Vec<i64>,
+    /// Signed mechanism: cached v⁺ rows, `[t, vcols]`.
+    vp: Vec<i64>,
+    /// Signed mechanism: cached v⁻ rows, `[t, vcols]`.
+    vn: Vec<i64>,
+}
+
+/// Plaintext mirror of the decode recurrence: the exact integer function
+/// the step plans compute (every LUT clamp included), carried as mutable
+/// per-layer state so a stream of `step` calls mirrors a stream of
+/// encrypted steps position for position. Because the encrypted prefill
+/// is the same recurrence looped, [`Self::prefill`] simply steps over
+/// the grid rows.
+pub struct DecodeMirror {
+    model: ModelFhe,
+    min_s: i64,
+    max_s: i64,
+    layers: Vec<MirrorLayer>,
+}
+
+impl DecodeMirror {
+    /// `min_s`/`max_s` are the executing encoder's signed bounds (the
+    /// LUT clamp range, e.g. −16..15 at 5 bits).
+    pub fn new(model: &ModelFhe, min_s: i64, max_s: i64) -> Self {
+        let layers = (0..model.n_layers())
+            .map(|_| MirrorLayer { x_rows: Vec::new(), vp: Vec::new(), vn: Vec::new() })
+            .collect();
+        DecodeMirror { model: model.clone(), min_s, max_s, layers }
+    }
+
+    /// Positions decoded so far.
+    pub fn cached_len(&self) -> usize {
+        self.layers[0].x_rows.len() / self.model.split.d_model
+    }
+
+    /// One decode step: the new input row in, the output row back, state
+    /// extended by one position.
+    pub fn step(&mut self, x_row: &[i64]) -> Vec<i64> {
+        let dm = self.model.split.d_model;
+        assert_eq!(x_row.len(), dm, "step input must be one [d_model] row");
+        let mut row = x_row.to_vec();
+        let mut acc: Option<(Vec<i64>, FixedMult)> = None;
+        // Split borrows: the block list is read-only while layer states
+        // mutate, so iterate indices.
+        for ell in 0..self.model.blocks.len() {
+            let blk = &self.model.blocks[ell];
+            let st = &self.layers[ell];
+            let t_cached = st.x_rows.len() / dm;
+            let (out, naccs, vp_new, vn_new) = mirror_block_step(
+                blk,
+                &row,
+                acc.as_ref().map(|(a, m)| (a.as_slice(), *m)),
+                &st.x_rows,
+                &st.vp,
+                &st.vn,
+                t_cached,
+                self.min_s,
+                self.max_s,
+            );
+            let st = &mut self.layers[ell];
+            st.x_rows.extend_from_slice(&row);
+            st.vp.extend(vp_new);
+            st.vn.extend(vn_new);
+            acc = Some((naccs, blk.weights.resid_requant));
+            row = out;
+        }
+        row
+    }
+
+    /// Causal prefill: step over the `[T, D]` grid rows, returning the
+    /// `[T, D]` causal output grid.
+    pub fn prefill(&mut self, x: &ITensor) -> ITensor {
+        let dm = self.model.split.d_model;
+        assert_eq!(x.dims()[1], dm, "input must be [T, d_model]");
+        let t = x.dims()[0];
+        let mut out = ITensor::zeros(&[t, dm]);
+        for i in 0..t {
+            let row = self.step(&x.data[i * dm..(i + 1) * dm]);
+            out.data[i * dm..(i + 1) * dm].copy_from_slice(&row);
+        }
+        out
+    }
+}
+
+/// Plaintext mirror of [`BlockFhe::emit_step`] (see `block_fhe`'s
+/// `mirror_step` for the full-grid analogue): one new row through one
+/// block, against cached state. Returns `(out_row, acc_row, vp_new,
+/// vn_new)` — the split extensions empty for unsigned mechanisms.
+#[allow(clippy::too_many_arguments)]
+fn mirror_block_step(
+    blk: &BlockFhe,
+    x_row: &[i64],
+    x_acc_row: Option<(&[i64], FixedMult)>,
+    cached_x: &[i64],
+    cached_vp: &[i64],
+    cached_vn: &[i64],
+    t_cached: usize,
+    min_s: i64,
+    max_s: i64,
+) -> (Vec<i64>, Vec<i64>, Vec<i64>, Vec<i64>) {
+    let dm = blk.split.d_model;
+    let d = blk.split.d_head();
+    let heads = blk.split.n_heads;
+    let n = t_cached + 1;
+    let clamp = |v: i64| v.clamp(min_s, max_s);
+    let w = &blk.weights;
+    // Row-major [n, d] column slice of cached rows + the new row.
+    let seg = |rows: &[i64], new_row: &[i64], width: usize, col0: usize| -> Vec<i64> {
+        let mut s = Vec::with_capacity(n * d);
+        for j in 0..t_cached {
+            for kk in 0..d {
+                s.push(rows[j * width + col0 + kk]);
+            }
+        }
+        for kk in 0..d {
+            s.push(new_row[col0 + kk]);
+        }
+        s
+    };
+    let mut h_row = vec![0i64; dm];
+    let (vp_new, vn_new) = match blk.mechanism {
+        Mechanism::InhibitorSigned => {
+            let vcols = if blk.shared_kv { d } else { dm };
+            let mut vp_new = Vec::with_capacity(vcols);
+            let mut vn_new = Vec::with_capacity(vcols);
+            for c in 0..vcols {
+                let (p, nn) = match x_acc_row {
+                    Some((acc, m)) => {
+                        let raw = m.apply(acc[c]);
+                        (clamp(raw.max(0)), clamp(raw.min(0)))
+                    }
+                    None => (clamp(x_row[c].max(0)), clamp(x_row[c].min(0))),
+                };
+                vp_new.push(p);
+                vn_new.push(nn);
+            }
+            // The same per-head defaults `MultiHeadFhe::new` documents
+            // (α_q = 1) — the mirror's single source of the score table.
+            let head = InhibitorSignedFhe::new(d, 1);
+            for h in 0..heads {
+                let c0 = blk.split.col0(h);
+                let kc0 = if blk.shared_kv { 0 } else { c0 };
+                let q = &x_row[c0..c0 + d];
+                let k = seg(cached_x, x_row, dm, kc0);
+                let vp = seg(cached_vp, &vp_new, vcols, kc0);
+                let vn = seg(cached_vn, &vn_new, vcols, kc0);
+                let out = step_mirror_signed_presplit(&head, q, &k, &vp, &vn, n, d, min_s, max_s);
+                h_row[c0..c0 + d].copy_from_slice(&out);
+            }
+            (vp_new, vn_new)
+        }
+        Mechanism::Inhibitor => {
+            let head = InhibitorFhe::new(d, 1);
+            for h in 0..heads {
+                let c0 = blk.split.col0(h);
+                let kc0 = if blk.shared_kv { 0 } else { c0 };
+                let q = &x_row[c0..c0 + d];
+                let k = seg(cached_x, x_row, dm, kc0);
+                let out = step_mirror_inhibitor(&head, q, &k, &k, n, d, max_s);
+                h_row[c0..c0 + d].copy_from_slice(&out);
+            }
+            (Vec::new(), Vec::new())
+        }
+        Mechanism::DotProduct => {
+            let head = DotProductFhe::new(d, 2);
+            for h in 0..heads {
+                let c0 = blk.split.col0(h);
+                let kc0 = if blk.shared_kv { 0 } else { c0 };
+                let q = &x_row[c0..c0 + d];
+                let k = seg(cached_x, x_row, dm, kc0);
+                let out = step_mirror_dotprod(&head, q, &k, &k, n, d, min_s, max_s);
+                h_row[c0..c0 + d].copy_from_slice(&out);
+            }
+            (Vec::new(), Vec::new())
+        }
+    };
+    // --- W_O + first residual, FFN, second residual: the block mirror
+    // at t = 1, row-wise ---
+    let h_t = ITensor::from_vec(&[1, dm], h_row);
+    let wo_out = mirror_linear(&h_t, &w.wo, &w.wo_b, w.wo_requant, false, min_s, max_s);
+    let x1: Vec<i64> =
+        (0..dm).map(|c| clamp(w.resid_requant.apply(x_row[c] + wo_out.data[c]))).collect();
+    let x1_t = ITensor::from_vec(&[1, dm], x1.clone());
+    let h1 = mirror_linear(&x1_t, &w.fc1, &w.fc1_b, w.fc1_requant, true, min_s, max_s);
+    let f = mirror_linear(&h1, &w.fc2, &w.fc2_b, w.fc2_requant, false, min_s, max_s);
+    let mut out = Vec::with_capacity(dm);
+    let mut accs = Vec::with_capacity(dm);
+    for c in 0..dm {
+        let acc = x1[c] + f.data[c];
+        out.push(clamp(w.resid_requant.apply(acc)));
+        accs.push(acc);
+    }
+    (out, accs, vp_new, vn_new)
+}
+
+/// Row mirror of `InhibitorFhe::emit_step` — the single-row case of
+/// `InhibitorFhe::mirror` (which, like its circuit, only clamps at the
+/// table maximum).
+#[allow(clippy::too_many_arguments)]
+fn step_mirror_inhibitor(
+    head: &InhibitorFhe,
+    q: &[i64],
+    k: &[i64],
+    v: &[i64],
+    n: usize,
+    d: usize,
+    max_s: i64,
+) -> Vec<i64> {
+    let mut z = vec![0i64; n];
+    for j in 0..n {
+        let dist: i64 = (0..d).map(|kk| (q[kk] - k[j * d + kk]).abs()).sum();
+        z[j] = scaled_shift_relu(dist, head.gamma, head.alpha_q).min(max_s);
+    }
+    (0..d)
+        .map(|kk| (0..n).map(|j| (v[j * d + kk] - z[j]).max(0).min(max_s)).sum())
+        .collect()
+}
+
+/// Row mirror of `InhibitorSignedFhe::emit_step_presplit` — the
+/// single-row case of `InhibitorSignedFhe::mirror_presplit`.
+#[allow(clippy::too_many_arguments)]
+fn step_mirror_signed_presplit(
+    head: &InhibitorSignedFhe,
+    q: &[i64],
+    k: &[i64],
+    vp: &[i64],
+    vn: &[i64],
+    n: usize,
+    d: usize,
+    min_s: i64,
+    max_s: i64,
+) -> Vec<i64> {
+    let clamp = |x: i64| x.clamp(min_s, max_s);
+    let mut z = vec![0i64; n];
+    for j in 0..n {
+        let dist: i64 = (0..d).map(|kk| clamp((q[kk] - k[j * d + kk]).abs())).sum();
+        z[j] = clamp(scaled_shift_relu(dist, head.gamma, head.alpha_q));
+    }
+    (0..d)
+        .map(|kk| {
+            let h: i64 = (0..n)
+                .map(|j| {
+                    clamp((vp[j * d + kk] - z[j]).max(0)) + clamp((vn[j * d + kk] + z[j]).min(0))
+                })
+                .sum();
+            clamp(h)
+        })
+        .collect()
+}
+
+/// Row mirror of `DotProductFhe::emit_step` — the single-row case of
+/// `DotProductFhe::mirror`.
+#[allow(clippy::too_many_arguments)]
+fn step_mirror_dotprod(
+    head: &DotProductFhe,
+    q: &[i64],
+    k: &[i64],
+    v: &[i64],
+    n: usize,
+    d: usize,
+    min_s: i64,
+    max_s: i64,
+) -> Vec<i64> {
+    let max_out = (1i64 << head.prob_bits) - 1;
+    let clamp = |x: i64| x.clamp(min_s, max_s);
+    let mut e = vec![0i64; n];
+    for j in 0..n {
+        let s: i64 = (0..d).map(|kk| q[kk] * k[j * d + kk]).sum();
+        e[j] = clamp(exp_lut_at(head.exp_scale, clamp(s), max_out));
+    }
+    let srow: i64 = e.iter().sum();
+    let r = clamp(if srow > 0 { (max_out + srow / 2) / srow } else { max_out });
+    (0..d)
+        .map(|kk| {
+            let acc: i64 = (0..n).map(|j| clamp(clamp(e[j] * r) * v[j * d + kk])).sum();
+            clamp((acc as f64 / max_out as f64).round() as i64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn demo(mech: Mechanism, heads: usize, layers: usize, shared: bool) -> DecodeFhe {
+        let dm = 2 * heads;
+        DecodeFhe::new(ModelFhe::demo(mech, dm, heads, layers, shared, dm, 0xDEC0))
+    }
+
+    #[test]
+    fn step_plan_shapes_levels_and_io() {
+        // Analysis only — no crypto. The step plan keeps the full
+        // stack's level depth (the new row threads every layer) with
+        // O(n·d) width.
+        for &(mech, per_layer) in &[
+            (Mechanism::Inhibitor, 9usize),
+            (Mechanism::InhibitorSigned, 9),
+            (Mechanism::DotProduct, 11),
+        ] {
+            for &(heads, layers, t) in &[(1usize, 1usize, 0usize), (2, 2, 1), (2, 1, 3)] {
+                let dec = demo(mech, heads, layers, false);
+                let p = dec.step_plan(t);
+                let tag = format!("{mech:?} H={heads} L={layers} t={t}");
+                assert_eq!(p.n_inputs(), dec.n_step_inputs(t), "{tag}: inputs");
+                assert_eq!(p.n_outputs(), dec.n_step_outputs(), "{tag}: outputs");
+                assert_eq!(p.levels(), layers * per_layer, "{tag}: levels");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_plan_shapes_and_levels() {
+        for &(mech, per_layer) in &[
+            (Mechanism::Inhibitor, 9usize),
+            (Mechanism::InhibitorSigned, 9),
+            (Mechanism::DotProduct, 11),
+        ] {
+            for &(heads, layers, t) in &[(1usize, 1usize, 1usize), (2, 2, 2), (1, 2, 3)] {
+                let dec = demo(mech, heads, layers, false);
+                let dm = dec.d_model();
+                let p = dec.prefill_plan(t);
+                let tag = format!("{mech:?} H={heads} L={layers} T={t}");
+                assert_eq!(p.n_inputs(), t * dm, "{tag}: inputs");
+                assert_eq!(p.n_outputs(), t * dm + dec.cache_len(t), "{tag}: outputs");
+                // Causal: layer ℓ's keys are layer ℓ−1 outputs, never a
+                // *later* token's — so depth stays L·per_layer, exactly
+                // the step plans'.
+                assert_eq!(p.levels(), layers * per_layer, "{tag}: levels");
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_prefill_equals_streamed_steps() {
+        // The structural identity at the mirror level: prefilling T
+        // tokens and streaming T steps are the same recurrence.
+        let mut rng = Xoshiro256::new(0xDEC1);
+        for mech in [Mechanism::Inhibitor, Mechanism::InhibitorSigned, Mechanism::DotProduct] {
+            for shared in [false, true] {
+                let dec = demo(mech, 2, 2, shared);
+                let dm = dec.d_model();
+                let x = ITensor::random(&[3, dm], -1, 1, &mut rng);
+                let mut one_shot = DecodeMirror::new(&dec.model, -16, 15);
+                let grid = one_shot.prefill(&x);
+                let mut streamed = DecodeMirror::new(&dec.model, -16, 15);
+                for i in 0..3 {
+                    let row = streamed.step(&x.data[i * dm..(i + 1) * dm]);
+                    assert_eq!(
+                        row,
+                        grid.data[i * dm..(i + 1) * dm].to_vec(),
+                        "{mech:?} shared={shared} token {i}"
+                    );
+                }
+                assert_eq!(streamed.cached_len(), 3);
+            }
+        }
+    }
+
+    #[test]
+    fn single_token_decode_matches_the_full_model_mirror() {
+        // T = 1 is the one prefix where causal and full attention
+        // coincide, so the decode mirror must agree with the model
+        // mirror exactly — the RNN-mode anchor.
+        let mut rng = Xoshiro256::new(0xDEC2);
+        for mech in [Mechanism::Inhibitor, Mechanism::InhibitorSigned, Mechanism::DotProduct] {
+            let dec = demo(mech, 2, 2, false);
+            let dm = dec.d_model();
+            let x = ITensor::random(&[1, dm], -1, 1, &mut rng);
+            let mut mirror = DecodeMirror::new(&dec.model, -16, 15);
+            let got = mirror.prefill(&x);
+            let want = dec.model.mirror(&x, -16, 15);
+            assert_eq!(got, want, "{mech:?}");
+        }
+    }
+
+    #[test]
+    fn cache_layout_lengths_are_consistent() {
+        let dec = demo(Mechanism::InhibitorSigned, 2, 2, true);
+        // shared_kv signed: per position per layer D + 2·d_head.
+        assert_eq!(dec.cache_layer_len(3), 3 * (4 + 2 * 2));
+        assert_eq!(dec.cache_len(3), 2 * dec.cache_layer_len(3));
+        assert_eq!(dec.cached_len_of(dec.cache_len(3)), Some(3));
+        assert_eq!(dec.cached_len_of(dec.cache_len(3) + 1), None);
+        assert_eq!(dec.n_step_inputs(3), 4 + dec.cache_len(3));
+        assert_eq!(dec.n_step_outputs(), 4 + 2 * (4 + 2 * 2));
+        let plain = demo(Mechanism::Inhibitor, 2, 1, false);
+        assert_eq!(plain.cache_len(2), 2 * 4);
+        assert_eq!(plain.n_step_outputs(), 4 + 4);
+    }
+
+    #[test]
+    fn engine_mechanism_strings_are_distinct_per_configuration() {
+        assert_eq!(
+            decode_engine_mechanism(Mechanism::Inhibitor, 2, 3, false),
+            "decode/inhibitor@h2xL3"
+        );
+        assert_eq!(
+            decode_engine_mechanism(Mechanism::InhibitorSigned, 4, 1, true),
+            "decode/inhibitor-signed@h4xL1s"
+        );
+        let dec = demo(Mechanism::DotProduct, 2, 2, true);
+        assert_eq!(dec.engine_mechanism(), "decode/dotprod@h2xL2s");
+        // Decode and block engines of the same shape never collide.
+        assert_ne!(dec.engine_mechanism(), dec.model.engine_mechanism());
+    }
+}

@@ -9,12 +9,17 @@
 //! *across* head boundaries (S6b). `block_fhe` completes the picture:
 //! the full transformer block (attention + W_O + residuals + requants +
 //! ReLU FFN) as one plan, stacked over L layers into a single DAG so
-//! the passes also work across *layer* boundaries (S6c).
+//! the passes also work across *layer* boundaries (S6c). `decode` turns
+//! the stacked model autoregressive (S7): per-token step plans over an
+//! encrypted KV-cache, the causal prefill built from the same per-token
+//! recurrence, and the streaming plaintext mirror.
 
 pub mod attention_fhe;
 pub mod block_fhe;
+pub mod decode;
 pub mod multihead;
 
 pub use attention_fhe::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
 pub use block_fhe::{block_engine_mechanism, BlockFhe, BlockWeights, ModelFhe};
+pub use decode::{decode_engine_mechanism, DecodeFhe, DecodeMirror};
 pub use multihead::{multihead_engine_mechanism, MultiHeadFhe};

@@ -175,6 +175,43 @@ impl MultiHeadFhe {
             .collect()
     }
 
+    /// Incremental-decode form of [`Self::emit`]: each head attends one
+    /// query row (`qs[h]` is `d` nodes) against `n` cached+new
+    /// positions (`ks[h]`/`vs[h]` cover `n·d` elements, position-major).
+    /// Dispatch mirrors `emit` exactly, so a causal prefill looped
+    /// through this recurrence is the same dataflow streaming emits
+    /// step by step.
+    pub(super) fn emit_step(
+        &self,
+        b: &mut CircuitBuilder,
+        qs: &[Vec<NodeId>],
+        ks: &[Vec<NodeId>],
+        vs: &[HeadValues<'_>],
+        n: usize,
+        d: usize,
+    ) -> Vec<Vec<NodeId>> {
+        assert_eq!(qs.len(), self.n_heads, "one Q row per head");
+        assert_eq!(ks.len(), self.n_heads, "one K segment per head");
+        assert_eq!(vs.len(), self.n_heads, "one value source per head");
+        (0..self.n_heads)
+            .map(|hh| match (&self.proto, &vs[hh]) {
+                (HeadProto::Inhibitor(head), HeadValues::Plain(v)) => {
+                    head.emit_step(b, &qs[hh], &ks[hh], v, n, d)
+                }
+                (HeadProto::InhibitorSigned(head), HeadValues::Plain(v)) => {
+                    head.emit_step(b, &qs[hh], &ks[hh], v, n, d)
+                }
+                (HeadProto::InhibitorSigned(head), HeadValues::PreSplit(pairs)) => {
+                    head.emit_step_presplit(b, &qs[hh], &ks[hh], pairs, n, d)
+                }
+                (HeadProto::DotProduct(head), HeadValues::Plain(v)) => {
+                    head.emit_step(b, &qs[hh], &ks[hh], v, n, d)
+                }
+                _ => panic!("pre-split values are only defined for the signed inhibitor"),
+            })
+            .collect()
+    }
+
     /// The rewritten, `(T, d, budget)`-cached combined plan `forward()`
     /// executes under `ctx` (honors `FHE_NO_REWRITE`, like every
     /// single-head `plan_for`).

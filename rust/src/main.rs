@@ -57,13 +57,19 @@ fn print_help() {
                attaches a request deadline (expired requests fail with the\n\
                stable error code 'deadline_exceeded').\n\
            encrypt-infer [--mechanism inhibitor] [--seq 2] [--bits 5] [--threads N]\n\
-                         [--heads H] [--shared-kv] [--layers L]\n\
+                         [--heads H] [--shared-kv] [--layers L] [--decode-steps N]\n\
                Generate keys, encrypt Q/K/V, run encrypted attention, decrypt.\n\
                --heads > 1 serves an H-head block as ONE fused circuit plan\n\
                (--shared-kv: multi-query layout, one K/V for all heads);\n\
                --layers >= 1 runs FULL transformer blocks (attention + W_O +\n\
                residuals + ReLU FFN, demo weights) stacked into one plan —\n\
                the input is then the residual stream x, not Q/K/V;\n\
+               --decode-steps N (with --layers >= 1) switches to incremental\n\
+               decode: prefill --seq tokens once, then stream N single-token\n\
+               steps over the encrypted KV-cache, each pinned against the\n\
+               streaming mirror and the profile_step closed form (O(t*d) per\n\
+               step, no prefix recompute; --seq 1 is the gated-RNN T=1 mode;\n\
+               keep --seq + N <= 3 for mirror-exact demo weights at --bits 5);\n\
                --threads overrides the FHE_THREADS PBS worker count.\n\
            params [--seq 2,4,8,16]\n\
                Run the TFHE parameter optimizer (paper Table 2).\n\
@@ -207,7 +213,8 @@ fn cmd_infer(args: &[String]) -> i32 {
 
 fn cmd_encrypt_infer(args: &[String]) -> i32 {
     use inhibitor::fhe_circuits::{
-        CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe,
+        CtMatrix, DecodeFhe, DecodeMirror, DotProductFhe, InhibitorFhe, InhibitorSignedFhe,
+        ModelFhe, MultiHeadFhe,
     };
     use inhibitor::tensor::ITensor;
     use inhibitor::tfhe::{bootstrap, ClientKey, FheContext, TfheParams};
@@ -261,6 +268,80 @@ fn cmd_encrypt_infer(args: &[String]) -> i32 {
             d_model,
             2024,
         );
+        let decode_steps: usize = flag(args, "--decode-steps", "0").parse().unwrap_or(0);
+        if decode_steps > 0 {
+            // Incremental decode: prefill --seq tokens once, then stream
+            // --decode-steps single-token steps against the encrypted
+            // KV-cache — per-step work is O(t·d), the prefix is never
+            // recomputed. `--seq 1` is the gated-RNN degenerate mode
+            // (every plan is the T = 1 recurrence).
+            let decode = DecodeFhe::new(model);
+            let total = seq + decode_steps;
+            let x = ITensor::random(&[total, d_model], -1, 1, &mut rng);
+            let mut mirror =
+                DecodeMirror::new(&decode.model, ctx.enc.min_signed(), ctx.enc.max_signed());
+            let xp = ITensor::from_vec(&[seq, d_model], x.data[..seq * d_model].to_vec());
+            println!("encrypting {} ciphertexts (prefill [T, D])...", seq * d_model);
+            let cx = CtMatrix::encrypt(&xp, &ctx, &ck, &mut rng);
+            bootstrap::reset_pbs_count();
+            bootstrap::reset_blind_rotation_count();
+            let t0 = std::time::Instant::now();
+            let (out, mut cache) = decode.prefill(&ctx, &cx);
+            let dt = t0.elapsed();
+            let prefill_ok = out.decrypt(&ctx, &ck) == mirror.prefill(&xp);
+            println!(
+                "prefill T={seq}: {} PBS ({} blind rotations) in {:.3}s — cache bundle {} \
+                 ciphertexts, mirror {}",
+                bootstrap::pbs_count(),
+                bootstrap::blind_rotation_count(),
+                dt.as_secs_f64(),
+                cache.len(),
+                if prefill_ok { "ok" } else { "MISMATCH (retry with a larger --bits)" }
+            );
+            for i in 0..decode_steps {
+                let t_cached = seq + i;
+                let row = ITensor::from_vec(
+                    &[1, d_model],
+                    x.data[t_cached * d_model..(t_cached + 1) * d_model].to_vec(),
+                );
+                let crow = CtMatrix::encrypt(&row, &ctx, &ck, &mut rng);
+                bootstrap::reset_pbs_count();
+                bootstrap::reset_blind_rotation_count();
+                let t0 = std::time::Instant::now();
+                let (out_row, next_cache) = decode.step(&ctx, &crow.data, cache);
+                cache = next_cache;
+                let dt = t0.elapsed();
+                let (pbs, rot) =
+                    (bootstrap::pbs_count(), bootstrap::blind_rotation_count());
+                let prof = inhibitor::optimizer::profile_step(
+                    mechanism,
+                    t_cached,
+                    d_model,
+                    heads,
+                    layers,
+                    d_model,
+                    shared_kv && heads > 1,
+                    ctx.max_multi_lut(),
+                );
+                let m_row = mirror.step(&row.data);
+                let dec = CtMatrix { rows: 1, cols: d_model, data: out_row }.decrypt(&ctx, &ck);
+                println!(
+                    "step {}: prefix {t_cached} -> {}: {pbs} PBS ({rot} rotations) in {:.3}s \
+                     — closed form {} PBS ({} rotations), mirror {}",
+                    i + 1,
+                    t_cached + 1,
+                    dt.as_secs_f64(),
+                    prof.pbs_count,
+                    prof.blind_rotations,
+                    if dec.data == m_row { "ok" } else { "MISMATCH" }
+                );
+            }
+            println!(
+                "decode stream done: {seq} prefill token(s) + {decode_steps} step(s), \
+                 per-step cost linear in the prefix (no T\u{b2} recompute)"
+            );
+            return 0;
+        }
         let x = ITensor::random(&[seq, d_model], -1, 1, &mut rng);
         println!("encrypting {} ciphertexts (residual stream [T, D])...", seq * d_model);
         let cx = CtMatrix::encrypt(&x, &ctx, &ck, &mut rng);

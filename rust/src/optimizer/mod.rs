@@ -8,6 +8,7 @@ pub mod precision;
 pub mod search;
 
 pub use precision::{
-    profile, profile_block, profile_multihead, BlockProfile, CircuitProfile, MultiHeadProfile,
+    profile, profile_block, profile_multihead, profile_prefill, profile_step, BlockProfile,
+    CircuitProfile, MultiHeadProfile, StepProfile,
 };
 pub use search::{optimize, table2, OptimizedParams, SearchConfig, Table2Row};

@@ -382,6 +382,159 @@ pub fn profile_block(
     }
 }
 
+/// Static profile of one incremental-decode **step** plan
+/// (`fhe_circuits::DecodeFhe::step_plan`) — or, via [`profile_prefill`],
+/// of the causal prefill plan, which is exactly the per-prefix step sum.
+/// Checked against the plan's own oracles by a unit test so the forms
+/// can never drift from the IR.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepProfile {
+    pub mechanism: Mechanism,
+    /// Positions already cached (the step attends `cached_len + 1`
+    /// positions). For a prefill profile: the prefill length `T`.
+    pub cached_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub ffn_dim: usize,
+    pub shared_kv: bool,
+    /// The packing budget the rotation figure assumes (1 = packing off).
+    pub max_multi_lut: usize,
+    /// LUT evaluations (after the always-safe CSE pass).
+    pub pbs_count: u64,
+    /// Blind rotations at the given budget.
+    pub blind_rotations: u64,
+    /// PBS execution levels.
+    pub levels: u64,
+}
+
+/// Closed-form counts of one decode step at prefix `cached_len`
+/// (`n = cached_len + 1` attended positions). Per layer:
+///
+/// * attention per head, one query row against `n` positions —
+///   inhibitor `2nd + n + d`, signed (pre-split values) `3nd + n + d`,
+///   dot-product `4nd + 3n + 1 + d`. Strictly **linear** in the prefix
+///   length: the T² term of the full circuits is gone, which a unit
+///   test pins by checking the per-step delta is constant in `t`;
+/// * signed mechanisms add `2·vcols` fresh split PBS for the *new*
+///   position only (every cached split arrives as a plan input);
+/// * block tail — W_O requant `D`, two residual requants `2·D`, fc2
+///   requant `D`, fused fc1 requant+ReLU `F`.
+///
+/// No CSE term exists: the step emitters produce no duplicate PBS
+/// (causal ordering admits no transposed dot-product pairs, and splits
+/// are emitted once by construction). Rotations subtract the same
+/// signed packing groups as [`profile_block`], per token: the layer-0
+/// relu/min0 pair on the new input row (`vcols` at budget ≥ 2) and the
+/// requant/split trio on each stacked boundary's accumulator row
+/// (`(L−1)·vcols`, 1 saved at a budget of 2, 2 at ϑ ≥ 2).
+#[allow(clippy::too_many_arguments)]
+pub fn profile_step(
+    mech: Mechanism,
+    cached_len: usize,
+    d_model: usize,
+    n_heads: usize,
+    n_layers: usize,
+    ffn_dim: usize,
+    shared_kv: bool,
+    max_multi_lut: usize,
+) -> StepProfile {
+    assert!(n_layers >= 1, "a step profile needs at least one layer");
+    let split = HeadSplit::new(d_model, n_heads);
+    let (n, dm, h, f, l) = (
+        cached_len as u64 + 1,
+        d_model as u64,
+        n_heads as u64,
+        ffn_dim as u64,
+        n_layers as u64,
+    );
+    let d = split.d_head() as u64;
+    let attn_per_head = match mech {
+        Mechanism::Inhibitor => 2 * n * d + n + d,
+        Mechanism::InhibitorSigned => 3 * n * d + n + d,
+        Mechanism::DotProduct => 4 * n * d + 3 * n + 1 + d,
+    };
+    let vcols = if shared_kv { d } else { dm };
+    let splits_new = if mech == Mechanism::InhibitorSigned { 2 * vcols } else { 0 };
+    let per_layer = h * attn_per_head + splits_new + 4 * dm + f;
+    let pbs_count = l * per_layer;
+    let saved = step_packing_saved(mech, vcols, l, max_multi_lut);
+    let per_layer_levels: u64 = if mech == Mechanism::DotProduct { 11 } else { 9 };
+    StepProfile {
+        mechanism: mech,
+        cached_len,
+        d_model,
+        n_heads,
+        n_layers,
+        ffn_dim,
+        shared_kv,
+        max_multi_lut,
+        pbs_count,
+        blind_rotations: pbs_count - saved,
+        levels: l * per_layer_levels,
+    }
+}
+
+/// Rotations one decode token saves to packing (signed mechanism only;
+/// independent of the prefix length — the groups sit on the *new*
+/// row's nodes).
+fn step_packing_saved(mech: Mechanism, vcols: u64, n_layers: u64, max_multi_lut: usize) -> u64 {
+    if mech != Mechanism::InhibitorSigned {
+        return 0;
+    }
+    let sv_pair: u64 = if max_multi_lut >= 2 { 1 } else { 0 };
+    let sv_trio: u64 = match max_multi_lut {
+        0 | 1 => 0,
+        2 => 1,
+        _ => 2,
+    };
+    vcols * sv_pair + (n_layers - 1) * vcols * sv_trio
+}
+
+/// Closed-form counts of the causal prefill plan for `seq_len` tokens
+/// (`fhe_circuits::DecodeFhe::prefill_plan`): exactly the sum of
+/// [`profile_step`] over prefixes `0..seq_len` — the prefill *is* the
+/// step recurrence looped, per-call LUT registration prevents any
+/// cross-token CSE, and causal ordering admits no transposed product
+/// pairs — with the level depth staying `L·(9|11)` (layer-0 work of any
+/// token depends only on plan inputs, so token index adds no depth).
+/// Also pinned against the plan oracles.
+#[allow(clippy::too_many_arguments)]
+pub fn profile_prefill(
+    mech: Mechanism,
+    seq_len: usize,
+    d_model: usize,
+    n_heads: usize,
+    n_layers: usize,
+    ffn_dim: usize,
+    shared_kv: bool,
+    max_multi_lut: usize,
+) -> StepProfile {
+    assert!(seq_len >= 1, "a prefill profile needs at least one token");
+    let mut pbs_count = 0u64;
+    let mut blind_rotations = 0u64;
+    let mut levels = 0u64;
+    for t in 0..seq_len {
+        let s = profile_step(mech, t, d_model, n_heads, n_layers, ffn_dim, shared_kv, max_multi_lut);
+        pbs_count += s.pbs_count;
+        blind_rotations += s.blind_rotations;
+        levels = s.levels;
+    }
+    StepProfile {
+        mechanism: mech,
+        cached_len: seq_len,
+        d_model,
+        n_heads,
+        n_layers,
+        ffn_dim,
+        shared_kv,
+        max_multi_lut,
+        pbs_count,
+        blind_rotations,
+        levels,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -524,6 +677,106 @@ mod tests {
             theta1.blind_rotations - theta2.blind_rotations,
             2 * 4, // (L−1) · T · d_model trios, one extra rotation each
         );
+    }
+
+    #[test]
+    fn step_profile_matches_the_decode_plan_oracles() {
+        // The per-step closed forms must reproduce what the decode step
+        // plan actually counts after the same rewrite configurations the
+        // block profile uses — for every mechanism, both KV layouts,
+        // several prefix lengths. Pure DAG analysis, no crypto.
+        use crate::fhe_circuits::{DecodeFhe, ModelFhe};
+        use crate::tfhe::plan::{PlanRewriter, RewriteConfig};
+        for &mech in &[Mechanism::Inhibitor, Mechanism::InhibitorSigned, Mechanism::DotProduct] {
+            for &(heads, layers, t, d, shared) in &[
+                (1usize, 1usize, 0usize, 2usize, false),
+                (2, 1, 1, 2, false),
+                (2, 2, 2, 1, false),
+                (2, 2, 1, 2, true),
+                (1, 2, 3, 2, false),
+            ] {
+                let dm = heads * d;
+                let ffn = 2 * dm;
+                let dec = DecodeFhe::new(ModelFhe::demo(mech, dm, heads, layers, shared, ffn, 0xDEC3));
+                let tag = format!("{mech:?} H={heads} L={layers} t={t} d={d} shared={shared}");
+                let (cse, _) =
+                    PlanRewriter::new(RewriteConfig::cse_only()).rewrite(dec.step_plan(t));
+                for budget in [1usize, 2, 4] {
+                    let p = profile_step(mech, t, dm, heads, layers, ffn, shared, budget);
+                    assert_eq!(p.pbs_count, cse.pbs_count(), "{tag}: LUT evals");
+                    assert_eq!(p.levels, cse.levels() as u64, "{tag}: levels");
+                    let (packed, _) =
+                        PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: budget })
+                            .rewrite(dec.step_plan(t));
+                    assert_eq!(
+                        p.blind_rotations,
+                        packed.blind_rotation_count(),
+                        "{tag}: rotations at budget {budget}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_cost_is_linear_in_prefix_length() {
+        // The whole point of the decode subsystem: the per-step delta is
+        // CONSTANT in t (no T² term), and strictly below the full
+        // recompute's delta already at small prefixes.
+        for &mech in &[Mechanism::Inhibitor, Mechanism::InhibitorSigned, Mechanism::DotProduct] {
+            let p = |t| profile_step(mech, t, 4, 2, 2, 8, false, 2);
+            let delta = p(1).pbs_count - p(0).pbs_count;
+            for t in 1..8 {
+                assert_eq!(
+                    p(t + 1).pbs_count - p(t).pbs_count,
+                    delta,
+                    "{mech:?}: per-step delta must be constant in t"
+                );
+            }
+            // Full recompute at T grows quadratically; the step at the
+            // same prefix stays linear.
+            let full = profile_block(mech, 8, 4, 2, 2, 8, false, 2);
+            let step = p(7);
+            assert!(step.pbs_count < full.pbs_count, "{mech:?}: step beats recompute");
+        }
+    }
+
+    #[test]
+    fn prefill_profile_is_the_step_sum_and_matches_the_plan_oracles() {
+        use crate::fhe_circuits::{DecodeFhe, ModelFhe};
+        use crate::tfhe::plan::{PlanRewriter, RewriteConfig};
+        for &mech in &[Mechanism::Inhibitor, Mechanism::InhibitorSigned, Mechanism::DotProduct] {
+            for &(heads, layers, t, shared) in
+                &[(1usize, 1usize, 2usize, false), (2, 2, 3, false), (2, 2, 2, true)]
+            {
+                let dm = 2 * heads;
+                let ffn = 2 * dm;
+                let dec = DecodeFhe::new(ModelFhe::demo(mech, dm, heads, layers, shared, ffn, 0xDEC4));
+                let tag = format!("{mech:?} H={heads} L={layers} T={t} shared={shared}");
+                let (cse, _) =
+                    PlanRewriter::new(RewriteConfig::cse_only()).rewrite(dec.prefill_plan(t));
+                for budget in [1usize, 2] {
+                    let p = profile_prefill(mech, t, dm, heads, layers, ffn, shared, budget);
+                    // The sum identity, independent of the oracles.
+                    let sum: u64 = (0..t)
+                        .map(|i| {
+                            profile_step(mech, i, dm, heads, layers, ffn, shared, budget).pbs_count
+                        })
+                        .sum();
+                    assert_eq!(p.pbs_count, sum, "{tag}: prefill = Σ steps");
+                    assert_eq!(p.pbs_count, cse.pbs_count(), "{tag}: LUT evals");
+                    assert_eq!(p.levels, cse.levels() as u64, "{tag}: levels");
+                    let (packed, _) =
+                        PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: budget })
+                            .rewrite(dec.prefill_plan(t));
+                    assert_eq!(
+                        p.blind_rotations,
+                        packed.blind_rotation_count(),
+                        "{tag}: rotations at budget {budget}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

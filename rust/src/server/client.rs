@@ -91,13 +91,69 @@ impl Client {
             let lat = j.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
             Ok(Ok((out, lat)))
         } else {
-            let msg = j.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error");
-            let err = match j.get("error_code").and_then(|v| v.as_str()) {
-                Some(code) => FheError::from_code(code, msg),
-                // Pre-PR-6 server without error codes: keep the message.
-                None => FheError::Internal(msg.to_string()),
-            };
-            Ok(Err(err))
+            Ok(Err(Self::wire_error(&j)))
+        }
+    }
+
+    /// One incremental-decode request (PR 7): prefill sends the
+    /// registered `[T, D]` grid bundle and opens `stream`; a step sends a
+    /// one-row bundle extending it. Returns (result blob id, latency) —
+    /// the output row stays encrypted in the session store — or the
+    /// server's typed failure.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        &mut self,
+        session: u64,
+        mechanism: &str,
+        stream: u64,
+        blob: u64,
+        prefill: bool,
+        deadline_ms: Option<u64>,
+    ) -> std::io::Result<Result<(u64, f64), FheError>> {
+        let req = Request::Decode {
+            session,
+            mechanism: mechanism.into(),
+            stream,
+            blob,
+            prefill,
+            deadline_ms,
+        };
+        let j = self.roundtrip(&req.to_json_line())?;
+        if j.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            let lat = j.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            match j.get("result_blob").and_then(|v| v.as_i64()) {
+                Some(id) if id >= 0 => Ok(Ok((id as u64, lat))),
+                _ => Ok(Err(FheError::Protocol(
+                    "decode response carried no result_blob".to_string(),
+                ))),
+            }
+        } else {
+            Ok(Err(Self::wire_error(&j)))
+        }
+    }
+
+    /// Drop a decode stream's server-side cache bundle explicitly.
+    pub fn release_cache(
+        &mut self,
+        session: u64,
+        stream: u64,
+    ) -> std::io::Result<Result<(), FheError>> {
+        let req = Request::ReleaseCache { session, stream };
+        let j = self.roundtrip(&req.to_json_line())?;
+        if j.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            Ok(Ok(()))
+        } else {
+            Ok(Err(Self::wire_error(&j)))
+        }
+    }
+
+    /// Rebuild the server's typed failure from the wire fields.
+    fn wire_error(j: &Json) -> FheError {
+        let msg = j.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error");
+        match j.get("error_code").and_then(|v| v.as_str()) {
+            Some(code) => FheError::from_code(code, msg),
+            // Pre-PR-6 server without error codes: keep the message.
+            None => FheError::Internal(msg.to_string()),
         }
     }
 }

@@ -8,6 +8,9 @@
 //!    "features":[...],"rows":R,"cols":C[,"deadline_ms":N]}
 //!   {"op":"infer","engine":"pjrt","model":"model_inhibitor",
 //!    "features":[...],"rows":R,"cols":C}
+//!   {"op":"decode","session":S,"mechanism":"inhibitor@h2xL2",
+//!    "stream":N,"blob":B,"prefill":true[,"deadline_ms":N]}
+//!   {"op":"release_cache","session":S,"stream":N}
 //!   {"op":"metrics"}   {"op":"ping"}   {"op":"shutdown"}
 //!
 //! Responses:
@@ -46,6 +49,22 @@ pub enum Request {
         /// it to an absolute `Instant` when the request is accepted.
         deadline_ms: Option<u64>,
     },
+    /// One incremental-decode request against a session's decode engine
+    /// (PR 7). `prefill: true` sends the registered `[T, D]` grid bundle
+    /// `blob` and opens stream `stream` (depositing its encrypted
+    /// KV-cache server-side); `prefill: false` sends a one-row bundle
+    /// that extends the stream's cache by one position. The mechanism may
+    /// be given with or without its `decode/` prefix.
+    Decode {
+        session: u64,
+        mechanism: String,
+        stream: u64,
+        blob: u64,
+        prefill: bool,
+        deadline_ms: Option<u64>,
+    },
+    /// Drop a decode stream's server-side cache bundle explicitly.
+    ReleaseCache { session: u64, stream: u64 },
 }
 
 impl Request {
@@ -106,6 +125,47 @@ impl Request {
                 };
                 Ok(Request::Infer { engine, target, features, rows, cols, deadline_ms })
             }
+            Some("decode") => {
+                let id = |field: &'static str| {
+                    j.get(field)
+                        .and_then(|v| v.as_i64())
+                        .filter(|&v| v >= 0)
+                        .map(|v| v as u64)
+                        .ok_or_else(|| bad(&format!("'{field}' must be a non-negative integer")))
+                };
+                let mechanism = j
+                    .get("mechanism")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| bad("missing 'mechanism'"))?
+                    .to_string();
+                let deadline_ms = match j.get("deadline_ms") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_i64()
+                            .filter(|&ms| ms >= 0)
+                            .ok_or_else(|| bad("'deadline_ms' must be a non-negative integer"))?
+                            as u64,
+                    ),
+                };
+                Ok(Request::Decode {
+                    session: id("session")?,
+                    mechanism,
+                    stream: id("stream")?,
+                    blob: id("blob")?,
+                    prefill: j.get("prefill").and_then(|v| v.as_bool()).unwrap_or(false),
+                    deadline_ms,
+                })
+            }
+            Some("release_cache") => {
+                let id = |field: &'static str| {
+                    j.get(field)
+                        .and_then(|v| v.as_i64())
+                        .filter(|&v| v >= 0)
+                        .map(|v| v as u64)
+                        .ok_or_else(|| bad(&format!("'{field}' must be a non-negative integer")))
+                };
+                Ok(Request::ReleaseCache { session: id("session")?, stream: id("stream")? })
+            }
             other => Err(FheError::BadRequest(format!("unknown op {other:?}"))),
         }
     }
@@ -133,6 +193,26 @@ impl Request {
                 }
                 Json::obj(fields).to_string()
             }
+            Request::Decode { session, mechanism, stream, blob, prefill, deadline_ms } => {
+                let mut fields = vec![
+                    ("op", Json::str("decode")),
+                    ("session", Json::num(*session as f64)),
+                    ("mechanism", Json::str(mechanism.clone())),
+                    ("stream", Json::num(*stream as f64)),
+                    ("blob", Json::num(*blob as f64)),
+                    ("prefill", Json::Bool(*prefill)),
+                ];
+                if let Some(ms) = deadline_ms {
+                    fields.push(("deadline_ms", Json::num(*ms as f64)));
+                }
+                Json::obj(fields).to_string()
+            }
+            Request::ReleaseCache { session, stream } => Json::obj(vec![
+                ("op", Json::str("release_cache")),
+                ("session", Json::num(*session as f64)),
+                ("stream", Json::num(*stream as f64)),
+            ])
+            .to_string(),
         }
     }
 }
@@ -219,6 +299,51 @@ mod tests {
         let neg = r#"{"op":"infer","engine":"quant","mechanism":"x","features":[1],"rows":1,"cols":1,"deadline_ms":-5}"#;
         let err = Request::parse(neg).unwrap_err();
         assert_eq!(err.code(), "bad_request");
+    }
+
+    #[test]
+    fn parse_roundtrip_decode_and_release_cache() {
+        let prefill = Request::Decode {
+            session: 3,
+            mechanism: "inhibitor@h2xL2".into(),
+            stream: 11,
+            blob: 42,
+            prefill: true,
+            deadline_ms: None,
+        };
+        assert_eq!(Request::parse(&prefill.to_json_line()).unwrap(), prefill);
+        let step = Request::Decode {
+            session: 3,
+            mechanism: "decode/softmax@h1xL1".into(),
+            stream: 11,
+            blob: 43,
+            prefill: false,
+            deadline_ms: Some(500),
+        };
+        let line = step.to_json_line();
+        assert!(line.contains("deadline_ms"), "{line}");
+        assert_eq!(Request::parse(&line).unwrap(), step);
+        // `prefill` defaults to false when absent.
+        let bare = r#"{"op":"decode","session":1,"mechanism":"m","stream":2,"blob":3}"#;
+        match Request::parse(bare).unwrap() {
+            Request::Decode { prefill, .. } => assert!(!prefill),
+            other => panic!("want Decode, got {other:?}"),
+        }
+        let rel = Request::ReleaseCache { session: 3, stream: 11 };
+        assert_eq!(Request::parse(&rel.to_json_line()).unwrap(), rel);
+    }
+
+    #[test]
+    fn decode_rejects_bad_ids_with_typed_errors() {
+        for line in [
+            r#"{"op":"decode","mechanism":"m","stream":2,"blob":3}"#,
+            r#"{"op":"decode","session":-1,"mechanism":"m","stream":2,"blob":3}"#,
+            r#"{"op":"decode","session":1,"stream":2,"blob":3}"#,
+            r#"{"op":"release_cache","session":1}"#,
+            r#"{"op":"release_cache","session":1,"stream":-2}"#,
+        ] {
+            assert_eq!(Request::parse(line).unwrap_err().code(), "bad_request", "{line}");
+        }
     }
 
     #[test]

@@ -168,6 +168,46 @@ fn handle_line(
                 Err(e) => error_response(&e),
             }
         }
+        Ok(Request::Decode { session, mechanism, stream, blob, prefill, deadline_ms }) => {
+            // The decode op implies the engine-key prefix; accept the
+            // mechanism with or without it.
+            let mechanism = if mechanism.starts_with("decode/") {
+                mechanism
+            } else {
+                format!("decode/{mechanism}")
+            };
+            let path = EnginePath::Encrypted { session, mechanism };
+            // Prefill opens the stream (no cache yet); a step extends it
+            // in place. Either way the successor cache lands under
+            // `stream`.
+            let cache_ref = if prefill { None } else { Some(stream) };
+            let mut req = InferRequest::new(0, path, Payload::CiphertextRef(blob))
+                .with_cache(cache_ref, Some(stream));
+            let timeout = match deadline_ms {
+                Some(ms) => {
+                    let budget = Duration::from_millis(ms);
+                    req = req.with_deadline(Instant::now() + budget);
+                    budget + Duration::from_secs(5)
+                }
+                None => DEFAULT_INFER_TIMEOUT,
+            };
+            match coordinator.infer_request_blocking(req, timeout) {
+                Ok(resp) => match resp.error {
+                    None => ok_response(&resp.output, resp.result_blob, resp.latency_s),
+                    Some(e) => error_response(&e),
+                },
+                Err(e) => error_response(&e),
+            }
+        }
+        Ok(Request::ReleaseCache { session, stream }) => {
+            if coordinator.release_cache(session, stream) {
+                text_response("cache released")
+            } else {
+                error_response(&FheError::KeyMissing(format!(
+                    "no live cache bundle for stream {stream}"
+                )))
+            }
+        }
     };
     if writeln!(writer, "{reply}").is_err() {
         return LineOutcome::Close;

@@ -1,0 +1,381 @@
+//! Differential test harness for the **incremental decode** subsystem
+//! (`fhe_circuits::DecodeFhe` + the coordinator's session ciphertext
+//! state, PR 7).
+//!
+//! * **Stream ≡ one-shot**: over mechanism × heads ∈ {1, 2} × layers ∈
+//!   {1, 2} (plus a shared-KV point), a stream of single-token decode
+//!   steps must be **bit-identical** to the one-shot causal prefill
+//!   forward at EVERY prefix length — output rows and the entire
+//!   encrypted KV-cache bundle — and decode to the streaming plaintext
+//!   mirror. Steps run alternating 1 and 4 PBS worker threads, and
+//!   `decode.step` resolves plans through the `FHE_NO_REWRITE`-honoring
+//!   cache, so the CI no-rewrite and thread legs drive both pipelines
+//!   through here.
+//! * **Closed forms**: every step's `PBS_COUNT`/`BLIND_ROTATION_COUNT`
+//!   delta equals the executed plan's own prediction, and (rewrites on)
+//!   the plan's counts equal `optimizer::profile_step` — whose
+//!   per-prefix growth is pinned **constant** (strictly O(t·d): no T²
+//!   term hides in a second difference).
+//! * **Serving**: `Coordinator::add_fhe_decode_engine` streams through
+//!   the session store — prefill deposits the cache bundle, steps
+//!   consume and replace it by move, results come back as typed
+//!   `result_blob` references bit-identical to solo execution; gauges
+//!   (`decode_steps`, `cache_blobs_live`, `cache_bytes`), the explicit
+//!   `release_cache`, the per-session cap with its typed
+//!   `cache_overflow`, and the restore-on-failure contract are pinned.
+//!
+//! Counters are process-global and libtest runs tests on parallel
+//! threads, so every test serializes through one lock.
+
+use inhibitor::attention::Mechanism;
+use inhibitor::coordinator::{
+    BatchPolicy, Coordinator, EnginePath, InferRequest, Payload, RoutePolicy,
+};
+use inhibitor::fhe_circuits::{CtMatrix, DecodeFhe, DecodeMirror, ModelFhe};
+use inhibitor::optimizer::profile_step;
+use inhibitor::tensor::ITensor;
+use inhibitor::tfhe::ops::CtInt;
+use inhibitor::tfhe::{bootstrap, rewrites_disabled, ClientKey, FheContext, TfheParams};
+use inhibitor::util::prng::Xoshiro256;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+use std::time::Duration;
+
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One grid point: stream T = 3 tokens (prefill 1, then 2 steps) and pin
+/// the stream against the one-shot causal forward at every prefix
+/// length, bit for bit, with per-step counter deltas matching the
+/// executed plan and (rewrites on) the `profile_step` closed forms.
+#[allow(clippy::too_many_arguments)]
+fn check_stream(
+    ctx: &FheContext,
+    ck: &ClientKey,
+    rng: &mut Xoshiro256,
+    mech: Mechanism,
+    heads: usize,
+    layers: usize,
+    d: usize,
+    shared_kv: bool,
+) {
+    let tag = format!("{mech:?} H={heads} L={layers} d={d} shared={shared_kv}");
+    let dm = heads * d;
+    let t_total = 3usize;
+    let model = ModelFhe::demo(mech, dm, heads, layers, shared_kv, dm, 0xDEC0DE + layers as u64);
+    let decode = DecodeFhe::new(model);
+    let x = ITensor::random(&[t_total, dm], -1, 1, rng);
+    let cx = CtMatrix::encrypt(&x, ctx, ck, rng);
+    let mut mirror = DecodeMirror::new(&decode.model, ctx.enc.min_signed(), ctx.enc.max_signed());
+    let m_out = mirror.prefill(&x);
+    // One-shot causal references at EVERY prefix length, on the same
+    // input ciphertexts (PBS is deterministic, so bit-identity is the
+    // bar, not just equal decodes).
+    let one_shot: Vec<(Vec<CtInt>, Vec<CtInt>)> = (1..=t_total)
+        .map(|p| {
+            let xp = CtMatrix { rows: p, cols: dm, data: cx.data[..p * dm].to_vec() };
+            let (out, cache) = decode.prefill(ctx, &xp);
+            (out.data, cache)
+        })
+        .collect();
+    // The streamed path: prefill the first token, then one step per
+    // remaining token, alternating the PBS worker count so both thread
+    // budgets drive the same bit-identical recurrence.
+    let x0 = CtMatrix { rows: 1, cols: dm, data: cx.data[..dm].to_vec() };
+    let (out0, mut cache) = decode.prefill(ctx, &x0);
+    let mut stream_out: Vec<CtInt> = out0.data;
+    for t in 1..t_total {
+        ctx.set_threads(if t % 2 == 1 { 1 } else { 4 });
+        let row = &cx.data[t * dm..(t + 1) * dm];
+        let plan = decode.step_plan_for(ctx, t);
+        let before_pbs = bootstrap::pbs_count();
+        let before_rot = bootstrap::blind_rotation_count();
+        let (out_row, next) = decode.step(ctx, row, cache);
+        assert_eq!(
+            bootstrap::pbs_count() - before_pbs,
+            plan.pbs_count(),
+            "{tag} step t={t}: PBS delta"
+        );
+        assert_eq!(
+            bootstrap::blind_rotation_count() - before_rot,
+            plan.blind_rotation_count(),
+            "{tag} step t={t}: rotation delta"
+        );
+        if !rewrites_disabled() {
+            let prof = profile_step(mech, t, dm, heads, layers, dm, shared_kv, ctx.max_multi_lut());
+            assert_eq!(plan.pbs_count(), prof.pbs_count, "{tag} t={t}: closed-form LUT evals");
+            assert_eq!(
+                plan.blind_rotation_count(),
+                prof.blind_rotations,
+                "{tag} t={t}: closed-form rotations"
+            );
+            assert_eq!(plan.levels() as u64, prof.levels, "{tag} t={t}: closed-form levels");
+        }
+        cache = next;
+        // The streamed cache bundle is the one-shot bundle, bit for bit.
+        let os_cache = &one_shot[t].1;
+        assert_eq!(cache.len(), os_cache.len(), "{tag} t={t}: cache length");
+        for (i, (a, b)) in cache.iter().zip(os_cache).enumerate() {
+            assert_eq!(a.ct, b.ct, "{tag} t={t}: cache ct {i} streamed == one-shot");
+        }
+        // The step's output row is the one-shot grid's last row.
+        let os_out = &one_shot[t].0;
+        for (i, (a, b)) in out_row.iter().zip(&os_out[t * dm..]).enumerate() {
+            assert_eq!(a.ct, b.ct, "{tag} t={t}: output {i} streamed == one-shot");
+        }
+        stream_out.extend(out_row);
+    }
+    ctx.set_threads(1);
+    // The whole streamed output grid is the full one-shot forward …
+    let full = &one_shot[t_total - 1].0;
+    assert_eq!(stream_out.len(), full.len(), "{tag}: stream covers the grid");
+    for (i, (a, b)) in stream_out.iter().zip(full).enumerate() {
+        assert_eq!(a.ct, b.ct, "{tag}: grid ct {i} streamed == one-shot");
+    }
+    // … and decodes to the streaming plaintext mirror.
+    let got: Vec<i64> = stream_out.iter().map(|c| ctx.decrypt(c, ck)).collect();
+    assert_eq!(got, m_out.data, "{tag}: plaintext mirror");
+}
+
+#[test]
+fn decode_inhibitor_stream_equals_one_shot_at_every_prefix() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xDEC071);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    for &(heads, layers, d, shared) in &[
+        (1usize, 1usize, 2usize, false),
+        (2, 1, 1, false),
+        (1, 2, 2, false),
+        (2, 2, 1, false),
+        (2, 1, 2, true),
+    ] {
+        check_stream(&ctx, &ck, &mut rng, Mechanism::Inhibitor, heads, layers, d, shared);
+    }
+}
+
+#[test]
+fn decode_signed_inhibitor_stream_equals_one_shot_at_every_prefix() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xDEC072);
+    // Packing-capable keyset: the new-token split pairs (and, stacked,
+    // the boundary trios) pack — profile_step's saved-rotation terms are
+    // live, not zero.
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    assert_eq!(ctx.max_multi_lut(), 2);
+    for &(heads, layers, d, shared) in &[
+        (1usize, 1usize, 2usize, false),
+        (1, 2, 2, false),
+        (2, 1, 1, false),
+        (2, 2, 1, false),
+        (2, 1, 2, true),
+    ] {
+        check_stream(&ctx, &ck, &mut rng, Mechanism::InhibitorSigned, heads, layers, d, shared);
+    }
+}
+
+#[test]
+fn decode_dotprod_stream_equals_one_shot_at_every_prefix() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xDEC073);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(6), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    for &(heads, layers, d, shared) in &[
+        (1usize, 1usize, 2usize, false),
+        (1, 2, 2, false),
+        (2, 1, 1, false),
+        (2, 2, 1, false),
+        (2, 1, 2, true),
+    ] {
+        check_stream(&ctx, &ck, &mut rng, Mechanism::DotProduct, heads, layers, d, shared);
+    }
+}
+
+#[test]
+fn step_cost_growth_is_constant_per_position_no_t_squared() {
+    // Pure plan analysis (no crypto): the per-step LUT count's FIRST
+    // difference over the prefix length is a constant, so the second
+    // difference is zero — per-step work is strictly O(t·d), never
+    // O(t²). Pinned on the built plans themselves, not just the closed
+    // forms, for every mechanism.
+    let _g = lock();
+    for mech in [Mechanism::Inhibitor, Mechanism::InhibitorSigned, Mechanism::DotProduct] {
+        let model = ModelFhe::demo(mech, 2, 1, 1, false, 2, 0xDEC074);
+        let decode = DecodeFhe::new(model);
+        let pbs: Vec<u64> = (0..6).map(|t| decode.step_plan(t).pbs_count()).collect();
+        let slopes: Vec<u64> = pbs.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!(
+            slopes.windows(2).all(|w| w[0] == w[1]),
+            "{mech:?}: per-step LUT growth must be constant per position, got {pbs:?}"
+        );
+    }
+}
+
+#[test]
+fn decode_engine_streams_through_the_session_store_bit_identically() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xDEC075);
+    let (heads, layers, d) = (1usize, 2usize, 2usize);
+    let dm = heads * d;
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let mut coord = Coordinator::new(RoutePolicy::PreferQuant);
+    let session = coord.keymgr.create_session(ctx);
+    let model = ModelFhe::demo(Mechanism::Inhibitor, dm, heads, layers, false, dm, 0xDEC0);
+    // Plan construction and PBS are both deterministic, so this solo
+    // DecodeFhe executes the exact circuits the engine serves and solo
+    // runs are a bit-identical reference.
+    let decode = DecodeFhe::new(model.clone());
+    coord.add_fhe_decode_engine(session, model, BatchPolicy::default()).unwrap();
+    let sess = coord.keymgr.session(session).unwrap();
+    let t_total = 3usize;
+    let x = ITensor::random(&[t_total, dm], -1, 1, &mut rng);
+    let cx = CtMatrix::encrypt(&x, &sess.ctx, &ck, &mut rng);
+    // In-process reference stream (PBS deterministic → bit-identity).
+    let x0 = CtMatrix { rows: 1, cols: dm, data: cx.data[..dm].to_vec() };
+    let (ref_out0, mut ref_cache) = decode.prefill(&sess.ctx, &x0);
+    let path = EnginePath::Encrypted { session, mechanism: decode.engine_mechanism() };
+    let stream_id = 77u64;
+    let m = coord.metrics();
+    // Prefill request opens the stream and deposits the cache bundle.
+    let blob = sess.register(cx.data[..dm].to_vec());
+    let req = InferRequest::new(0, path.clone(), Payload::CiphertextRef(blob))
+        .with_cache(None, Some(stream_id));
+    let resp = coord.infer_request_blocking(req, Duration::from_secs(600)).unwrap();
+    assert!(resp.error.is_none(), "prefill: {:?}", resp.error);
+    assert!(resp.output.is_empty(), "blob ids must not ride the f32 vector");
+    let out = sess.take(resp.result_blob.expect("typed result reference")).unwrap();
+    assert_eq!(out.len(), dm);
+    for (i, (a, b)) in out.iter().zip(&ref_out0.data).enumerate() {
+        assert_eq!(a.ct, b.ct, "prefill output {i}: served == solo");
+    }
+    assert_eq!(m.cache_blobs_live.load(Ordering::Relaxed), 1, "prefill deposited one bundle");
+    assert!(m.cache_bytes.load(Ordering::Relaxed) > 0, "live bundle has bytes");
+    assert_eq!(m.decode_steps.load(Ordering::Relaxed), 0, "a prefill is not a step");
+    // Stream the remaining tokens as single-row step requests.
+    for t in 1..t_total {
+        let row = cx.data[t * dm..(t + 1) * dm].to_vec();
+        let (ref_row, next) = decode.step(&sess.ctx, &row, ref_cache);
+        ref_cache = next;
+        let blob = sess.register(row);
+        let req = InferRequest::new(0, path.clone(), Payload::CiphertextRef(blob))
+            .with_cache(Some(stream_id), None);
+        let resp = coord.infer_request_blocking(req, Duration::from_secs(600)).unwrap();
+        assert!(resp.error.is_none(), "step t={t}: {:?}", resp.error);
+        let out = sess.take(resp.result_blob.expect("typed result reference")).unwrap();
+        for (i, (a, b)) in out.iter().zip(&ref_row).enumerate() {
+            assert_eq!(a.ct, b.ct, "step t={t} output {i}: served == solo");
+        }
+    }
+    assert_eq!(m.decode_steps.load(Ordering::Relaxed), (t_total - 1) as u64);
+    // The stream's live bundle equals the reference cache bit for bit.
+    let entry = coord.session_store().take(session, stream_id).expect("live bundle");
+    assert_eq!(entry.cached_len, t_total);
+    assert_eq!(entry.cts.len(), ref_cache.len());
+    for (i, (a, b)) in entry.cts.iter().zip(&ref_cache).enumerate() {
+        assert_eq!(a.ct, b.ct, "cache ct {i}: stored == reference");
+    }
+    coord.session_store().restore(session, stream_id, entry);
+    // Explicit release drops it and the gauges read zero.
+    assert!(coord.release_cache(session, stream_id));
+    assert!(!coord.release_cache(session, stream_id), "release is not idempotent-true");
+    assert_eq!(m.cache_blobs_live.load(Ordering::Relaxed), 0);
+    assert_eq!(m.cache_bytes.load(Ordering::Relaxed), 0);
+    // A step against the released stream fails typed and restores the
+    // row bundle for a clean resubmit.
+    let blob = sess.register(cx.data[..dm].to_vec());
+    let req = InferRequest::new(0, path, Payload::CiphertextRef(blob))
+        .with_cache(Some(stream_id), None);
+    let resp = coord.infer_request_blocking(req, Duration::from_secs(600)).unwrap();
+    assert_eq!(resp.error.as_ref().map(|e| e.code()), Some("key_missing"), "{:?}", resp.error);
+    assert!(sess.take(blob).is_some(), "row bundle restored after the miss");
+}
+
+#[test]
+fn cache_cap_overflow_is_typed_and_restores_the_pre_step_world_exactly() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xDEC076);
+    let (heads, layers, d) = (1usize, 1usize, 2usize);
+    let dm = heads * d;
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let mut coord = Coordinator::new(RoutePolicy::PreferQuant);
+    let session = coord.keymgr.create_session(ctx);
+    let model = ModelFhe::demo(Mechanism::Inhibitor, dm, heads, layers, false, dm, 0xDEC1);
+    let decode = DecodeFhe::new(model.clone());
+    coord.add_fhe_decode_engine(session, model, BatchPolicy::default()).unwrap();
+    let sess = coord.keymgr.session(session).unwrap();
+    let x = ITensor::random(&[2, dm], -1, 1, &mut rng);
+    let cx = CtMatrix::encrypt(&x, &sess.ctx, &ck, &mut rng);
+    let path = EnginePath::Encrypted { session, mechanism: decode.engine_mechanism() };
+    // Reference stream for stream A, computed solo up front.
+    let xa = CtMatrix { rows: 1, cols: dm, data: cx.data[..dm].to_vec() };
+    let (_, ref_cache0) = decode.prefill(&sess.ctx, &xa);
+    let step_row = cx.data[dm..2 * dm].to_vec();
+    let (ref_row1, ref_cache1) =
+        decode.step(&sess.ctx, &step_row, ref_cache0.iter().cloned().collect());
+    // Open streams A and B, then clamp the cap below the live count.
+    for (stream, lo) in [(1u64, 0usize), (2, dm)] {
+        let blob = sess.register(cx.data[lo..lo + dm].to_vec());
+        let req = InferRequest::new(0, path.clone(), Payload::CiphertextRef(blob))
+            .with_cache(None, Some(stream));
+        let resp = coord.infer_request_blocking(req, Duration::from_secs(600)).unwrap();
+        assert!(resp.error.is_none(), "prefill stream {stream}: {:?}", resp.error);
+        sess.take(resp.result_blob.unwrap()).unwrap();
+    }
+    coord.session_store().set_cache_cap(1);
+    // A prefill for a third stream overflows: typed error, grid restored.
+    let blob = sess.register(cx.data[..dm].to_vec());
+    let req = InferRequest::new(0, path.clone(), Payload::CiphertextRef(blob))
+        .with_cache(None, Some(3));
+    let resp = coord.infer_request_blocking(req, Duration::from_secs(600)).unwrap();
+    assert_eq!(
+        resp.error.as_ref().map(|e| e.code()),
+        Some("cache_overflow"),
+        "{:?}",
+        resp.error
+    );
+    assert!(sess.take(blob).is_some(), "prefill grid restored after overflow");
+    // A step on A forking its output to a NEW stream overflows at the
+    // deposit; the pre-step world must come back exactly: the row bundle
+    // AND stream A's cache, bit for bit.
+    let blob = sess.register(step_row.clone());
+    let req = InferRequest::new(0, path.clone(), Payload::CiphertextRef(blob))
+        .with_cache(Some(1), Some(4));
+    let resp = coord.infer_request_blocking(req, Duration::from_secs(600)).unwrap();
+    assert_eq!(
+        resp.error.as_ref().map(|e| e.code()),
+        Some("cache_overflow"),
+        "{:?}",
+        resp.error
+    );
+    let row = sess.take(blob).expect("row bundle restored after overflow");
+    for (i, (a, b)) in row.iter().zip(&step_row).enumerate() {
+        assert_eq!(a.ct, b.ct, "restored row ct {i}");
+    }
+    let entry = coord.session_store().take(session, 1).expect("stream A still live");
+    assert_eq!(entry.cached_len, 1);
+    for (i, (a, b)) in entry.cts.iter().zip(&ref_cache0).enumerate() {
+        assert_eq!(a.ct, b.ct, "restored cache ct {i} == pre-step bundle");
+    }
+    coord.session_store().restore(session, 1, entry);
+    // Cap lifted: the exact resubmit replays the step bit-identically.
+    coord.session_store().set_cache_cap(8);
+    let blob = sess.register(row);
+    let req = InferRequest::new(0, path, Payload::CiphertextRef(blob)).with_cache(Some(1), None);
+    let resp = coord.infer_request_blocking(req, Duration::from_secs(600)).unwrap();
+    assert!(resp.error.is_none(), "resubmit: {:?}", resp.error);
+    let out = sess.take(resp.result_blob.unwrap()).unwrap();
+    for (i, (a, b)) in out.iter().zip(&ref_row1).enumerate() {
+        assert_eq!(a.ct, b.ct, "resubmitted step output {i}");
+    }
+    let entry = coord.session_store().take(session, 1).unwrap();
+    assert_eq!(entry.cached_len, 2);
+    for (i, (a, b)) in entry.cts.iter().zip(&ref_cache1).enumerate() {
+        assert_eq!(a.ct, b.ct, "post-resubmit cache ct {i}");
+    }
+}

@@ -17,11 +17,13 @@
 //! path (`CircuitPlan::execute`) never consults the fault plan, so the
 //! comparison is exact.
 
+use inhibitor::attention::Mechanism;
 use inhibitor::coordinator::{
     BatchPolicy, Coordinator, EnginePath, InferRequest, InferResponse, Payload, RoutePolicy,
 };
 use inhibitor::error::FheError;
-use inhibitor::fhe_circuits::InhibitorFhe;
+use inhibitor::fhe_circuits::{CtMatrix, DecodeFhe, InhibitorFhe, ModelFhe};
+use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::ops::CtInt;
 use inhibitor::tfhe::{bootstrap, ClientKey, FaultPlan, FheContext, TfheParams};
 use inhibitor::util::prng::{Rng64, Xoshiro256};
@@ -240,6 +242,158 @@ fn injected_engine_panic_is_supervised_and_the_engine_keeps_serving() {
     for (j, (got, w)) in cts.iter().zip(&want).enumerate() {
         assert_eq!(got.ct, w.ct, "post-respawn output {j}");
     }
+}
+
+/// Coordinator + session + decode engine (single-head inhibitor, L = 1,
+/// d_model = 2) plus a solo [`DecodeFhe`] whose plan/PBS determinism
+/// makes its streams a bit-identical reference for the served ones.
+struct DecodeRig {
+    coord: Coordinator,
+    session: u64,
+    ck: ClientKey,
+    decode: DecodeFhe,
+}
+
+fn decode_rig(seed: u64) -> DecodeRig {
+    let mut rng = Xoshiro256::new(seed);
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let mut coord = Coordinator::new(RoutePolicy::PreferQuant);
+    let session = coord.keymgr.create_session(ctx);
+    let model = ModelFhe::demo(Mechanism::Inhibitor, 2, 1, 1, false, 2, 0xDF);
+    let decode = DecodeFhe::new(model.clone());
+    coord
+        .add_fhe_decode_engine(
+            session,
+            model,
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_secs(2), queue_cap: 64 },
+        )
+        .unwrap();
+    DecodeRig { coord, session, ck, decode }
+}
+
+fn decode_path(r: &DecodeRig) -> EnginePath {
+    EnginePath::Encrypted { session: r.session, mechanism: r.decode.engine_mechanism() }
+}
+
+/// Shared skeleton for the mid-stream decode fault tests: build an
+/// unfaulted 3-token reference stream solo, serve the prefill + first
+/// step cleanly, fault the SECOND step via `spec`, pin the typed error
+/// and the exact pre-step restoration (row bundle AND cache bundle),
+/// then disarm, resubmit, and pin the resumed stream bit-identical to
+/// the unfaulted reference. Returns the blind-rotation delta measured
+/// across the faulted request alone.
+fn decode_midstream_fault(r: &DecodeRig, spec: &str, want_code: &str) -> u64 {
+    let sess = r.coord.keymgr.session(r.session).unwrap();
+    let dm = r.decode.d_model();
+    let mut rng = Xoshiro256::new(0xDEC0FA);
+    let x = ITensor::random(&[3, dm], -1, 1, &mut rng);
+    let cx = CtMatrix::encrypt(&x, &sess.ctx, &r.ck, &mut rng);
+    // Unfaulted reference stream, computed solo BEFORE arming anything
+    // (plan execution outside the engine never consults the fault plan).
+    let x0 = CtMatrix { rows: 1, cols: dm, data: cx.data[..dm].to_vec() };
+    let (_, ref_cache0) = r.decode.prefill(&sess.ctx, &x0);
+    let row1 = cx.data[dm..2 * dm].to_vec();
+    let (ref_row1, ref_cache1) = r.decode.step(&sess.ctx, &row1, ref_cache0);
+    let row2 = cx.data[2 * dm..3 * dm].to_vec();
+    let (ref_row2, ref_cache2) = r.decode.step(&sess.ctx, &row2, ref_cache1.clone());
+    let stream = 9u64;
+    // Serve the prefill and the first step cleanly.
+    let blob = sess.register(cx.data[..dm].to_vec());
+    let req = InferRequest::new(0, decode_path(r), Payload::CiphertextRef(blob))
+        .with_cache(None, Some(stream));
+    let resp = r.coord.infer_request_blocking(req, Duration::from_secs(300)).unwrap();
+    assert!(resp.error.is_none(), "prefill: {:?}", resp.error);
+    sess.take(resp.result_blob.unwrap()).unwrap();
+    let blob = sess.register(row1);
+    let req = InferRequest::new(0, decode_path(r), Payload::CiphertextRef(blob))
+        .with_cache(Some(stream), None);
+    let resp = r.coord.infer_request_blocking(req, Duration::from_secs(300)).unwrap();
+    assert!(resp.error.is_none(), "step 1: {:?}", resp.error);
+    let out1 = sess.take(resp.result_blob.unwrap()).unwrap();
+    for (i, (a, b)) in out1.iter().zip(&ref_row1).enumerate() {
+        assert_eq!(a.ct, b.ct, "served step 1 output {i} == solo reference");
+    }
+    // Fault the second step. The far-future real deadline means only an
+    // injected deadline tick can fire, keeping the test timing-free.
+    sess.ctx.set_fault_plan(Some(Arc::new(FaultPlan::parse(spec).unwrap())));
+    let before_rot = bootstrap::blind_rotation_count();
+    let blob = sess.register(row2.clone());
+    let req = InferRequest::new(0, decode_path(r), Payload::CiphertextRef(blob))
+        .with_cache(Some(stream), None)
+        .with_deadline(Instant::now() + Duration::from_secs(3600));
+    let resp = r.coord.infer_request_blocking(req, Duration::from_secs(300)).unwrap();
+    sess.ctx.set_fault_plan(None);
+    let faulted_rotations = bootstrap::blind_rotation_count() - before_rot;
+    assert_eq!(
+        resp.error.as_ref().map(|e| e.code()),
+        Some(want_code),
+        "faulted step: {:?}",
+        resp.error
+    );
+    // The pre-step world came back exactly: the input row bundle …
+    let row_back = sess.take(blob).expect("row bundle restored after the fault");
+    for (i, (a, b)) in row_back.iter().zip(&row2).enumerate() {
+        assert_eq!(a.ct, b.ct, "restored row ct {i}");
+    }
+    // … and the stream's cache bundle, bit for bit at the pre-step
+    // prefix length.
+    let entry = r.coord.session_store().take(r.session, stream).expect("cache restored");
+    assert_eq!(entry.cached_len, 2, "cache is the post-step-1 bundle");
+    assert_eq!(entry.cts.len(), ref_cache1.len());
+    for (i, (a, b)) in entry.cts.iter().zip(&ref_cache1).enumerate() {
+        assert_eq!(a.ct, b.ct, "restored cache ct {i} == pre-step bundle");
+    }
+    r.coord.session_store().restore(r.session, stream, entry);
+    // Resume: the exact resubmit completes the stream bit-identically to
+    // the unfaulted reference — output row and successor cache.
+    let blob = sess.register(row_back);
+    let req = InferRequest::new(0, decode_path(r), Payload::CiphertextRef(blob))
+        .with_cache(Some(stream), None);
+    let resp = r.coord.infer_request_blocking(req, Duration::from_secs(300)).unwrap();
+    assert!(resp.error.is_none(), "resumed step: {:?}", resp.error);
+    let out2 = sess.take(resp.result_blob.unwrap()).unwrap();
+    for (i, (a, b)) in out2.iter().zip(&ref_row2).enumerate() {
+        assert_eq!(a.ct, b.ct, "resumed step output {i} == unfaulted reference");
+    }
+    let entry = r.coord.session_store().take(r.session, stream).unwrap();
+    assert_eq!(entry.cached_len, 3);
+    for (i, (a, b)) in entry.cts.iter().zip(&ref_cache2).enumerate() {
+        assert_eq!(a.ct, b.ct, "resumed cache ct {i} == unfaulted reference");
+    }
+    faulted_rotations
+}
+
+#[test]
+fn decode_step_deadline_restores_the_cache_and_the_stream_resumes_exactly() {
+    let _g = lock();
+    let r = decode_rig(0xDEAD3);
+    let sess = r.coord.keymgr.session(r.session).unwrap();
+    // Boundary ticks: 1 fires before level 1, 2 after it — the faulted
+    // step executes exactly one PBS level, then abandons.
+    let plan = r.decode.step_plan_for(&sess.ctx, 2);
+    assert!(plan.levels() >= 2, "needs at least two levels to abandon between");
+    let rotations = decode_midstream_fault(&r, "deadline@level:2", "deadline_exceeded");
+    assert_eq!(
+        rotations as usize,
+        plan.level_sizes()[0],
+        "the faulted step rotated exactly its first PBS level"
+    );
+    let m = r.coord.metrics();
+    assert_eq!(m.deadline_kills.load(Ordering::Relaxed), 1);
+    assert_eq!(m.decode_steps.load(Ordering::Relaxed), 2, "clean + resumed steps counted");
+}
+
+#[test]
+fn decode_step_pbs_panic_restores_the_cache_and_the_stream_resumes_exactly() {
+    let _g = lock();
+    let r = decode_rig(0xFA019);
+    decode_midstream_fault(&r, "panic@pbs:1", "worker_panic");
+    let m = r.coord.metrics();
+    assert_eq!(m.worker_panics.load(Ordering::Relaxed), 1, "exactly one poisoned job");
+    assert_eq!(m.quarantined.load(Ordering::Relaxed), 1, "only the victim member quarantined");
+    assert_eq!(m.respawns.load(Ordering::Relaxed), 1, "engine rebuilt after the caught panic");
+    assert_eq!(m.decode_steps.load(Ordering::Relaxed), 2, "clean + resumed steps counted");
 }
 
 #[test]
