@@ -9,13 +9,15 @@
 
 use inhibitor::attention::Mechanism;
 use inhibitor::bench_harness::{bench, BenchConfig};
-use inhibitor::coordinator::FusedLevelExecutor;
+use inhibitor::coordinator::{FusedLevelExecutor, FusedRequest};
 use inhibitor::fhe_circuits::{
     CtMatrix, DecodeFhe, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe,
 };
 use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::ops::CtInt;
-use inhibitor::tfhe::{CircuitPlan, ClientKey, FheContext, PlanRewriter, TfheParams};
+use inhibitor::tfhe::{
+    set_wavefront_dispatch, CircuitPlan, ClientKey, FheContext, PlanRewriter, TfheParams,
+};
 use inhibitor::util::json::Json;
 use inhibitor::util::prng::Xoshiro256;
 
@@ -107,6 +109,82 @@ fn main() {
             ("fused_speedup", Json::num(fused_rps / solo_rps)),
         ]));
     }
+
+    // === Wavefront vs legacy barrier dispatch (PR 8) ===================
+    // The same co-scheduled batch under both dispatchers. Waves ≡ levels
+    // in this IR, so the executed work is identical — the delta is
+    // scheduling only (ready-set dispatch + work stealing vs a strict
+    // level barrier), recorded as requests/sec. A cross-key pair (two
+    // sessions, distinct server keys) then runs through one fused
+    // execution: every tick sweeps both keys' jobs in one pool pass.
+    println!("\n=== Wavefront dispatch: barrier vs wavefront req/s, cross-key fusion ===");
+    let n_req = 4usize;
+    let wf_bundles: Vec<Vec<CtInt>> = (0..n_req)
+        .map(|_| {
+            let q = ITensor::random(&[t, d], -2, 2, &mut rng);
+            let k = ITensor::random(&[t, d], -2, 2, &mut rng);
+            let v = ITensor::random(&[t, d], 0, 3, &mut rng);
+            let mut inputs = Vec::with_capacity(3 * t * d);
+            for tensor in [&q, &k, &v] {
+                inputs.extend(
+                    tensor.data.iter().map(|&val| ctx.encrypt(val, &ck, &mut rng)),
+                );
+            }
+            inputs
+        })
+        .collect();
+    let wf_requests: Vec<(&CircuitPlan, &[CtInt])> =
+        wf_bundles.iter().map(|b| (&plan, b.as_slice())).collect();
+    set_wavefront_dispatch(Some(false));
+    let m_barrier = bench(&format!("barrier x{n_req}"), cfg, || {
+        FusedLevelExecutor::new(&ctx).run(&wf_requests)
+    });
+    set_wavefront_dispatch(Some(true));
+    let m_wave = bench(&format!("wavefront x{n_req}"), cfg, || {
+        FusedLevelExecutor::new(&ctx).run(&wf_requests)
+    });
+    set_wavefront_dispatch(None);
+    let barrier_rps = n_req as f64 / m_barrier.mean_s;
+    let wavefront_rps = n_req as f64 / m_wave.mean_s;
+    let ck_b = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    let ctx_b = FheContext::new(ck_b.server_key(&mut rng));
+    ctx_b.set_threads(threads);
+    let bundle_b: Vec<CtInt> = {
+        let q = ITensor::random(&[t, d], -2, 2, &mut rng);
+        let k = ITensor::random(&[t, d], -2, 2, &mut rng);
+        let v = ITensor::random(&[t, d], 0, 3, &mut rng);
+        let mut inputs = Vec::with_capacity(3 * t * d);
+        for tensor in [&q, &k, &v] {
+            inputs.extend(tensor.data.iter().map(|&val| ctx_b.encrypt(val, &ck_b, &mut rng)));
+        }
+        inputs
+    };
+    let cross: Vec<FusedRequest> = vec![
+        FusedRequest::new(&plan, &wf_bundles[0]),
+        FusedRequest::new(&plan, &bundle_b).with_ctx(&ctx_b),
+    ];
+    let m_cross =
+        bench("cross-key x2", cfg, || FusedLevelExecutor::new(&ctx).run_checked(&cross));
+    let (_, cross_stats) = FusedLevelExecutor::new(&ctx).run_checked(&cross);
+    println!(
+        "  R={n_req}: barrier {barrier_rps:.2} req/s, wavefront {wavefront_rps:.2} req/s \
+         ({:.2}x); cross-key fused_keys={} stolen_jobs={} worker_utilization={:.3}",
+        wavefront_rps / barrier_rps,
+        cross_stats.fused_keys,
+        cross_stats.stolen_jobs,
+        cross_stats.worker_utilization(),
+    );
+    let wavefront_records = vec![Json::obj(vec![
+        ("requests", Json::num(n_req as f64)),
+        ("barrier_req_per_sec", Json::num(barrier_rps)),
+        ("wavefront_req_per_sec", Json::num(wavefront_rps)),
+        ("wavefront_speedup", Json::num(wavefront_rps / barrier_rps)),
+        ("cross_key_requests", Json::num(cross.len() as f64)),
+        ("cross_key_s", Json::num(m_cross.mean_s)),
+        ("fused_keys", Json::num(cross_stats.fused_keys as f64)),
+        ("stolen_jobs", Json::num(cross_stats.stolen_jobs as f64)),
+        ("worker_utilization", Json::num(cross_stats.worker_utilization())),
+    ])];
 
     // === Rewritten vs unrewritten plans (CSE + multi-value packing) ====
     // The signed inhibitor is the circuit where both passes bite: the
@@ -347,6 +425,7 @@ fn main() {
         ("threads", Json::num(threads as f64)),
         ("plan_vs_staged", Json::arr(records)),
         ("fusion", Json::arr(fusion_records)),
+        ("wavefront", Json::arr(wavefront_records)),
         ("rewrite", Json::arr(rewrite_records)),
         ("multihead", Json::arr(multihead_records)),
         ("block", Json::arr(block_records)),

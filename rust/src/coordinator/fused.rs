@@ -31,8 +31,28 @@
 //! fired abandons its remaining levels right there, returning
 //! `DeadlineExceeded`/`Cancelled` with [`FusedStats::levels_done`]
 //! recording how far it got.
+//!
+//! ## Wavefront dispatch + cross-key fusion (PR 8)
+//!
+//! The lock-step loop now advances by **wavefront ticks**: each member's
+//! `PlanRun` is stepped through the mode-aware
+//! [`PlanRun::next_jobs`] (readiness-driven by default, legacy level
+//! barriers under `FHE_WAVEFRONT=0` — bit-identical either way), and the
+//! gathered jobs go through the **work-stealing, cross-key pool**
+//! (`tfhe::bootstrap::pbs_batch_keyed_isolated`) in a single sweep per
+//! tick. Every job carries its member's server key: a member may bring
+//! its own [`FheContext`] ([`FusedRequest::with_ctx`]), so requests from
+//! *different sessions with different keys* fuse into one pool pass —
+//! [`FusedStats::fused_keys`] records how many keys one sweep served,
+//! [`FusedStats::stolen_jobs`] and
+//! [`FusedStats::worker_utilization`] how well the pool stayed
+//! saturated. The failure-model checkpoints (deadline, cancellation,
+//! fault ticks) sit at the top of each wavefront tick — the same
+//! cadence the level boundaries had, since waves and levels advance in
+//! lockstep — and per-job `catch_unwind` quarantine is unchanged.
 
 use crate::error::FheError;
+use crate::tfhe::bootstrap::{pbs_batch_keyed_isolated, KeyedJob};
 use crate::tfhe::faults::CancelToken;
 use crate::tfhe::ops::{CtInt, FheContext};
 use crate::tfhe::plan::{CircuitPlan, LevelJob, PlanRun};
@@ -61,6 +81,28 @@ pub struct FusedStats {
     /// executed. Equals the plan's level count on success, strictly
     /// fewer after a deadline kill or cancellation.
     pub levels_done: Vec<usize>,
+    /// Jobs executed by a pool worker other than the one they were
+    /// assigned to (summed over ticks) — nonzero means the
+    /// work-stealing pool actually rebalanced a skewed tick.
+    pub stolen_jobs: u64,
+    /// Most distinct server keys any single pool sweep served — ≥ 2
+    /// proves cross-key fusion happened in one pass.
+    pub fused_keys: usize,
+    /// Worker-nanoseconds spent executing jobs, summed over ticks.
+    pub busy_ns: u64,
+    /// Worker-nanoseconds available (threads × wall), summed over ticks.
+    pub capacity_ns: u64,
+}
+
+impl FusedStats {
+    /// Fraction of pool worker-time spent executing jobs across the
+    /// whole run (0 when nothing ran).
+    pub fn worker_utilization(&self) -> f64 {
+        if self.capacity_ns == 0 {
+            return 0.0;
+        }
+        self.busy_ns as f64 / self.capacity_ns as f64
+    }
 }
 
 /// One member of a fused execution: a plan over an input bundle, plus
@@ -68,20 +110,37 @@ pub struct FusedStats {
 pub struct FusedRequest<'a> {
     pub plan: &'a CircuitPlan,
     pub inputs: &'a [CtInt],
-    /// Absolute wall-clock deadline; checked at every level boundary.
+    /// Absolute wall-clock deadline; checked at every wavefront tick.
     pub deadline: Option<Instant>,
-    /// Cooperative cancellation; checked at every level boundary.
+    /// Cooperative cancellation; checked at every wavefront tick.
     pub cancel: Option<CancelToken>,
+    /// The member's own context (its session's server key, LUT caches,
+    /// encoder). `None` means "the executor's context" — the single-key
+    /// case. Distinct contexts across members is what cross-key fusion
+    /// is: each member's jobs are tagged with *its* key and the pool
+    /// sweeps them all in one pass.
+    pub ctx: Option<&'a FheContext>,
 }
 
 impl<'a> FusedRequest<'a> {
-    /// A member with no deadline and no cancellation token.
+    /// A member with no deadline, no cancellation token, and the
+    /// executor's own context.
     pub fn new(plan: &'a CircuitPlan, inputs: &'a [CtInt]) -> Self {
-        FusedRequest { plan, inputs, deadline: None, cancel: None }
+        FusedRequest { plan, inputs, deadline: None, cancel: None, ctx: None }
+    }
+
+    /// Attach the member's own session context (cross-key fusion).
+    pub fn with_ctx(mut self, ctx: &'a FheContext) -> Self {
+        self.ctx = Some(ctx);
+        self
     }
 }
 
-/// Lock-step executor over many plan runs sharing one context.
+/// Lock-step executor over many plan runs. Members default to the
+/// executor's context; members carrying their own ([`FusedRequest::
+/// with_ctx`]) fuse across server keys in the same pool sweeps. The
+/// executor's context supplies the pool width (`threads()`) and the
+/// armed fault plan.
 pub struct FusedLevelExecutor<'c> {
     ctx: &'c FheContext,
 }
@@ -145,12 +204,17 @@ impl<'c> FusedLevelExecutor<'c> {
                 ))));
                 runs.push(None);
             } else {
-                runs.push(Some(PlanRun::new(req.plan, ctx, req.inputs)));
+                // Resolve LUT accumulators against the member's own
+                // context — under cross-key fusion each member's
+                // bootstraps must run under that member's server key.
+                runs.push(Some(PlanRun::new(req.plan, req.ctx.unwrap_or(ctx), req.inputs)));
             }
         }
         loop {
-            // Level boundary: cooperative cancellation checkpoint. One
-            // fault tick per boundary, shared by every live member.
+            // Wavefront tick: cooperative cancellation checkpoint. One
+            // fault tick per boundary, shared by every live member —
+            // waves and levels advance in lockstep, so `deadline@level:N`
+            // keeps its exact meaning under wavefront dispatch.
             let fault_deadline = faults.as_deref().is_some_and(|f| f.deadline_fires());
             for i in 0..n {
                 let Some(run) = runs[i].as_ref() else { continue };
@@ -175,14 +239,15 @@ impl<'c> FusedLevelExecutor<'c> {
                 results[i] = Some(Err(err));
                 runs[i] = None;
             }
-            // Gather the next level of every still-running member.
+            // Gather the next wave of every still-running member.
             let mut level_jobs: Vec<LevelJob> = Vec::new();
-            // Per member: jobs contributed this level (`None` = finished
+            // Per member: jobs contributed this tick (`None` = finished
             // earlier or not running).
             let mut njobs: Vec<Option<usize>> = (0..n).map(|_| None).collect();
             for i in 0..n {
                 let Some(run) = runs[i].as_mut() else { continue };
-                match run.next_level_jobs(ctx) {
+                let mctx = requests[i].ctx.unwrap_or(ctx);
+                match run.next_jobs(mctx) {
                     Some(jobs) => {
                         njobs[i] = Some(jobs.len());
                         level_jobs.extend(jobs);
@@ -190,7 +255,7 @@ impl<'c> FusedLevelExecutor<'c> {
                     None => {
                         let run = runs[i].take().expect("checked above");
                         stats.levels_done[i] = run.levels_done();
-                        results[i] = Some(Ok(run.finish(ctx)));
+                        results[i] = Some(Ok(run.finish(mctx)));
                     }
                 }
             }
@@ -200,8 +265,28 @@ impl<'c> FusedLevelExecutor<'c> {
             stats.level_batch_sizes.push(level_jobs.len());
             stats.blind_rotations += level_jobs.len() as u64;
             stats.pbs_total += level_jobs.iter().map(|j| j.n_outputs() as u64).sum::<u64>();
-            // One panic-isolated fused submission for the whole level.
-            let mut job_results = ctx.pbs_level_checked(&level_jobs).into_iter();
+            // Tag every job with its member's server key and sweep the
+            // whole tick — all members, all keys — through the
+            // work-stealing pool in one panic-isolated pass.
+            let mut keyed: Vec<KeyedJob> = Vec::with_capacity(level_jobs.len());
+            {
+                let mut off = 0;
+                for i in 0..n {
+                    let Some(k) = njobs[i] else { continue };
+                    let key = &requests[i].ctx.unwrap_or(ctx).sk;
+                    for job in &level_jobs[off..off + k] {
+                        keyed.push(KeyedJob { key, job: job.as_batch_job() });
+                    }
+                    off += k;
+                }
+            }
+            let (tick_results, pool) =
+                pbs_batch_keyed_isolated(&keyed, ctx.threads(), faults.as_deref());
+            stats.stolen_jobs += pool.stolen_jobs;
+            stats.fused_keys = stats.fused_keys.max(pool.keys);
+            stats.busy_ns += pool.busy_ns;
+            stats.capacity_ns += pool.capacity_ns;
+            let mut job_results = tick_results.into_iter();
             // Scatter per-job results back to their members (same order
             // as gathered). A failed job quarantines its owner; the
             // survivors' outputs are moved (never cloned) into supply.
@@ -211,7 +296,7 @@ impl<'c> FusedLevelExecutor<'c> {
                 let mut failed: Option<FheError> = None;
                 for job in (&mut job_results).take(k) {
                     match job {
-                        Ok(cts) => outs.extend(cts),
+                        Ok(cts) => outs.extend(cts.into_iter().map(|ct| CtInt { ct })),
                         Err(e) => {
                             // Keep the first failure as the member's error.
                             failed.get_or_insert(e);
@@ -418,6 +503,7 @@ mod tests {
             inputs: &inputs,
             deadline: Some(Instant::now() + Duration::from_secs(3600)),
             cancel: None,
+            ctx: None,
         };
         let before = pbs_count();
         let (results, stats) = FusedLevelExecutor::new(&ctx).run_checked(&[member]);
@@ -448,12 +534,95 @@ mod tests {
             inputs: &inputs,
             deadline: None,
             cancel: Some(token),
+            ctx: None,
         };
         let before = pbs_count();
         let (results, stats) = FusedLevelExecutor::new(&ctx).run_checked(&[member]);
         assert_eq!(results[0], Err(FheError::Cancelled));
         assert_eq!(stats.levels_done, vec![0]);
         assert_eq!(pbs_count(), before, "no PBS for a pre-cancelled member");
+    }
+
+    #[test]
+    fn cross_key_members_fuse_into_one_pool_sweep() {
+        // The acceptance shape: two sessions with *distinct server keys*
+        // co-scheduled into one fused execution. Every tick must sweep
+        // both members' jobs in a single pool pass (level_batch_sizes =
+        // summed level sizes, fused_keys = 2), and each member's outputs
+        // must be bit-identical to a solo run under its own context.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let params = TfheParams::test_for_bits(4);
+        let mut rng_a = Xoshiro256::new(0x5E551);
+        let mut rng_b = Xoshiro256::new(0x5E552);
+        let ck_a = ClientKey::generate(params, &mut rng_a);
+        let ck_b = ClientKey::generate(params, &mut rng_b);
+        let ctx_a = FheContext::new(ck_a.server_key(&mut rng_a));
+        let ctx_b = FheContext::new(ck_b.server_key(&mut rng_b));
+        let plan = deep_plan();
+        let in_a = [ctx_a.encrypt(-3, &ck_a, &mut rng_a)];
+        let in_b = [ctx_b.encrypt(2, &ck_b, &mut rng_b)];
+        let solo_a = plan.execute(&ctx_a, &in_a);
+        let solo_b = plan.execute(&ctx_b, &in_b);
+        let members = [
+            FusedRequest::new(&plan, &in_a), // executor default = session A
+            FusedRequest::new(&plan, &in_b).with_ctx(&ctx_b),
+        ];
+        let before = pbs_count();
+        let (results, stats) = FusedLevelExecutor::new(&ctx_a).run_checked(&members);
+        assert_eq!(pbs_count() - before, 2 * plan.pbs_count(), "fusion never changes cost");
+        assert_eq!(stats.fused_keys, 2, "one sweep must serve both sessions' keys");
+        let want_sizes: Vec<usize> = plan.level_sizes().iter().map(|s| 2 * s).collect();
+        assert_eq!(stats.level_batch_sizes, want_sizes, "both members in every sweep");
+        assert_eq!(stats.levels_done, vec![plan.levels(); 2]);
+        assert_eq!(stats.quarantined, 0);
+        let out_a = results[0].as_ref().expect("member A succeeds");
+        let out_b = results[1].as_ref().expect("member B succeeds");
+        assert_eq!(out_a[0].ct, solo_a[0].ct, "A bit-identical to solo under key A");
+        assert_eq!(out_b[0].ct, solo_b[0].ct, "B bit-identical to solo under key B");
+        assert_eq!(ctx_a.decrypt(&out_a[0], &ck_a), 0, "relu(relu(-3)) refreshed");
+        assert_eq!(ctx_b.decrypt(&out_b[0], &ck_b), 2);
+        // Pool observability is coherent: busy time was recorded and
+        // utilization is a fraction.
+        assert!(stats.busy_ns > 0);
+        let u = stats.worker_utilization();
+        assert!(u > 0.0 && u <= 1.0, "utilization {u} out of range");
+    }
+
+    #[test]
+    fn cross_key_quarantine_contains_fault_to_the_victim_member() {
+        // An injected PBS panic inside a cross-key sweep must quarantine
+        // only the member that owns the poisoned job; the other session's
+        // member survives bit-identically.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let params = TfheParams::test_for_bits(4);
+        let mut rng_a = Xoshiro256::new(0x5E553);
+        let mut rng_b = Xoshiro256::new(0x5E554);
+        let ck_a = ClientKey::generate(params, &mut rng_a);
+        let ck_b = ClientKey::generate(params, &mut rng_b);
+        let ctx_a = FheContext::new(ck_a.server_key(&mut rng_a));
+        let ctx_b = FheContext::new(ck_b.server_key(&mut rng_b));
+        let plan = deep_plan();
+        let in_a = [ctx_a.encrypt(4, &ck_a, &mut rng_a)];
+        let in_b = [ctx_b.encrypt(-1, &ck_b, &mut rng_b)];
+        let solo_a = plan.execute(&ctx_a, &in_a);
+        // Tick 1 submits [A's job, B's job]; poison the 2nd submitted
+        // job — B's — through the executor context's fault plan.
+        ctx_a.set_fault_plan(Some(Arc::new(FaultPlan::parse("panic@pbs:2").unwrap())));
+        let members = [
+            FusedRequest::new(&plan, &in_a),
+            FusedRequest::new(&plan, &in_b).with_ctx(&ctx_b),
+        ];
+        let (results, stats) = FusedLevelExecutor::new(&ctx_a).run_checked(&members);
+        ctx_a.set_fault_plan(None);
+        assert_eq!(stats.quarantined, 1, "exactly the victim is quarantined");
+        assert!(
+            matches!(&results[1], Err(FheError::WorkerPanic(m)) if m.contains("panic@pbs:2")),
+            "member B is the victim"
+        );
+        let out_a = results[0].as_ref().expect("member A survives");
+        assert_eq!(out_a[0].ct, solo_a[0].ct, "survivor bit-identical across keys");
+        assert_eq!(stats.levels_done[1], 0, "B fell at its first level");
+        assert_eq!(stats.levels_done[0], plan.levels());
     }
 
     #[test]

@@ -97,6 +97,17 @@ pub struct Metrics {
     pub cache_blobs_live: AtomicU64,
     /// Gauge: ciphertext bytes held live by those bundles.
     pub cache_bytes: AtomicU64,
+    // --- wavefront work-stealing pool (PR 8) ---
+    /// PBS jobs executed by a pool worker other than their assigned one
+    /// — the work-stealing pool rebalancing skewed sweeps.
+    pub stolen_jobs: AtomicU64,
+    /// High-water mark: most distinct server keys any single pool sweep
+    /// served (≥ 2 means cross-session fusion happened in one pass).
+    pub fused_keys: AtomicU64,
+    /// Worker-nanoseconds spent executing PBS jobs.
+    pub pool_busy_ns: AtomicU64,
+    /// Worker-nanoseconds available (threads × wall per sweep).
+    pub pool_capacity_ns: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -123,12 +134,37 @@ impl Metrics {
         self.fused_pbs.load(Ordering::Relaxed) as f64 / l as f64
     }
 
+    /// Fraction of pool worker-time spent executing PBS jobs across all
+    /// fused sweeps recorded so far (0 before the first sweep).
+    pub fn worker_utilization(&self) -> f64 {
+        let cap = self.pool_capacity_ns.load(Ordering::Relaxed);
+        if cap == 0 {
+            return 0.0;
+        }
+        self.pool_busy_ns.load(Ordering::Relaxed) as f64 / cap as f64
+    }
+
+    /// Fold one fused execution's stats into the serving counters — the
+    /// single recording point the engine bodies share.
+    pub fn record_fused(&self, stats: &crate::coordinator::fused::FusedStats) {
+        self.fused_levels.fetch_add(stats.level_batch_sizes.len() as u64, Ordering::Relaxed);
+        self.fused_pbs.fetch_add(stats.pbs_total, Ordering::Relaxed);
+        self.fused_blind_rotations.fetch_add(stats.blind_rotations, Ordering::Relaxed);
+        self.quarantined.fetch_add(stats.quarantined, Ordering::Relaxed);
+        self.deadline_kills.fetch_add(stats.deadline_kills, Ordering::Relaxed);
+        self.stolen_jobs.fetch_add(stats.stolen_jobs, Ordering::Relaxed);
+        self.fused_keys.fetch_max(stats.fused_keys as u64, Ordering::Relaxed);
+        self.pool_busy_ns.fetch_add(stats.busy_ns, Ordering::Relaxed);
+        self.pool_capacity_ns.fetch_add(stats.capacity_ns, Ordering::Relaxed);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
              fused_levels={} fused_pbs={} fused_blind_rotations={} worker_panics={} \
              respawns={} retries={} quarantined={} deadline_kills={} shutdown_drained={} \
              decode_steps={} cache_blobs_live={} cache_bytes={} \
+             stolen_jobs={} fused_keys={} worker_utilization={:.3} \
              mean_latency={} p50={} p99={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -147,6 +183,9 @@ impl Metrics {
             self.decode_steps.load(Ordering::Relaxed),
             self.cache_blobs_live.load(Ordering::Relaxed),
             self.cache_bytes.load(Ordering::Relaxed),
+            self.stolen_jobs.load(Ordering::Relaxed),
+            self.fused_keys.load(Ordering::Relaxed),
+            self.worker_utilization(),
             crate::bench_harness::Measurement::fmt_time(self.latency.mean_s()),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.5)),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.99)),
@@ -180,5 +219,45 @@ mod tests {
         m.batched_requests.store(10, Ordering::Relaxed);
         assert!((m.mean_batch_size() - 2.5).abs() < 1e-9);
         assert!(m.summary().contains("mean_batch=2.50"));
+    }
+
+    #[test]
+    fn record_fused_accumulates_counters_and_key_high_water() {
+        use crate::coordinator::fused::FusedStats;
+        let m = Metrics::new();
+        let first = FusedStats {
+            level_batch_sizes: vec![4, 2],
+            pbs_total: 6,
+            blind_rotations: 6,
+            stolen_jobs: 3,
+            fused_keys: 2,
+            busy_ns: 600,
+            capacity_ns: 1_000,
+            ..FusedStats::default()
+        };
+        let second = FusedStats {
+            level_batch_sizes: vec![5],
+            pbs_total: 5,
+            blind_rotations: 4,
+            stolen_jobs: 1,
+            fused_keys: 1,
+            busy_ns: 200,
+            capacity_ns: 1_000,
+            ..FusedStats::default()
+        };
+        m.record_fused(&first);
+        m.record_fused(&second);
+        assert_eq!(m.fused_levels.load(Ordering::Relaxed), 3);
+        assert_eq!(m.fused_pbs.load(Ordering::Relaxed), 11);
+        assert_eq!(m.fused_blind_rotations.load(Ordering::Relaxed), 10);
+        assert_eq!(m.stolen_jobs.load(Ordering::Relaxed), 4);
+        // High-water, not sum: a later single-key sweep must not erase
+        // the evidence that a sweep served two keys.
+        assert_eq!(m.fused_keys.load(Ordering::Relaxed), 2);
+        assert!((m.worker_utilization() - 0.4).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("stolen_jobs=4"), "{s}");
+        assert!(s.contains("fused_keys=2"), "{s}");
+        assert!(s.contains("worker_utilization=0.400"), "{s}");
     }
 }

@@ -469,19 +469,13 @@ impl Coordinator {
                                 inputs: m.inputs.as_slice(),
                                 deadline: req.deadline,
                                 cancel: Some(req.cancel.clone()),
+                                ctx: None,
                             })
                         })
                         .collect();
                     let (outs, stats) = FusedLevelExecutor::new(&session.ctx).run_checked(&fused);
                     drop(fused);
-                    let levels = stats.level_batch_sizes.len() as u64;
-                    metrics.fused_levels.fetch_add(levels, Ordering::Relaxed);
-                    metrics.fused_pbs.fetch_add(stats.pbs_total, Ordering::Relaxed);
-                    metrics
-                        .fused_blind_rotations
-                        .fetch_add(stats.blind_rotations, Ordering::Relaxed);
-                    metrics.quarantined.fetch_add(stats.quarantined, Ordering::Relaxed);
-                    metrics.deadline_kills.fetch_add(stats.deadline_kills, Ordering::Relaxed);
+                    metrics.record_fused(&stats);
                     // Phase 3 — deposit successor cache bundles and typed
                     // result refs, or restore the pre-step world exactly.
                     let mut outs = outs.into_iter();
@@ -650,20 +644,14 @@ impl Coordinator {
                                 inputs: cts.as_slice(),
                                 deadline: req.deadline,
                                 cancel: Some(req.cancel.clone()),
+                                ctx: None,
                             })
                         })
                         .collect();
                     let (outs, stats) = FusedLevelExecutor::new(&session.ctx).run_checked(&fused);
                     // `fused` borrows the bundles consumed below.
                     drop(fused);
-                    let levels = stats.level_batch_sizes.len() as u64;
-                    metrics.fused_levels.fetch_add(levels, Ordering::Relaxed);
-                    metrics.fused_pbs.fetch_add(stats.pbs_total, Ordering::Relaxed);
-                    metrics
-                        .fused_blind_rotations
-                        .fetch_add(stats.blind_rotations, Ordering::Relaxed);
-                    metrics.quarantined.fetch_add(stats.quarantined, Ordering::Relaxed);
-                    metrics.deadline_kills.fetch_add(stats.deadline_kills, Ordering::Relaxed);
+                    metrics.record_fused(&stats);
                     // Phase 3 — marry executor results back to the batch
                     // order. Success registers the result bundle and
                     // returns a *typed* reference (exact at any

@@ -35,18 +35,59 @@ pub struct CacheEntry {
     pub cached_len: usize,
 }
 
+/// Store state behind one lock: the stream map plus the gauges derived
+/// from it. Counts and bytes are maintained *incrementally* on every
+/// mutation — `put`/`take`/`restore`/`release` each adjust them by the
+/// touched entry only — so the per-session cap check and the
+/// `live_bytes` gauge are O(1) instead of rescanning every live bundle
+/// under the lock.
+struct Inner {
+    streams: HashMap<(u64, u64), CacheEntry>,
+    /// Live-bundle count per session (entries removed at zero, so the
+    /// map never outgrows the set of sessions with live state).
+    per_session: HashMap<u64, usize>,
+    /// Running ciphertext-byte total across all live bundles.
+    bytes: u64,
+}
+
+impl Inner {
+    /// Account one bundle entering the store.
+    fn credit(&mut self, session: u64, entry: &CacheEntry) {
+        *self.per_session.entry(session).or_insert(0) += 1;
+        self.bytes += entry_bytes(entry);
+    }
+
+    /// Account one bundle leaving the store.
+    fn debit(&mut self, session: u64, entry: &CacheEntry) {
+        let n = self.per_session.get_mut(&session).expect("session has live bundles");
+        *n -= 1;
+        if *n == 0 {
+            self.per_session.remove(&session);
+        }
+        self.bytes -= entry_bytes(entry);
+    }
+}
+
 /// The `(session, stream)`-keyed cache-bundle store (see module docs).
 pub struct SessionStore {
-    streams: Mutex<HashMap<(u64, u64), CacheEntry>>,
+    inner: Mutex<Inner>,
     max_per_session: AtomicUsize,
 }
 
 impl SessionStore {
     pub fn new(max_per_session: usize) -> Self {
         SessionStore {
-            streams: Mutex::new(HashMap::new()),
+            inner: Mutex::new(Inner {
+                streams: HashMap::new(),
+                per_session: HashMap::new(),
+                bytes: 0,
+            }),
             max_per_session: AtomicUsize::new(max_per_session),
         }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Adjust the per-session live-bundle cap (operational knob; tests
@@ -66,10 +107,10 @@ impl SessionStore {
         cts: Vec<CtInt>,
         cached_len: usize,
     ) -> Result<(), FheError> {
-        let mut map = self.streams.lock().unwrap_or_else(|e| e.into_inner());
+        let mut inner = self.lock();
         let key = (session, stream);
-        if !map.contains_key(&key) {
-            let live = map.keys().filter(|(s, _)| *s == session).count();
+        if !inner.streams.contains_key(&key) {
+            let live = inner.per_session.get(&session).copied().unwrap_or(0);
             let cap = self.max_per_session.load(Ordering::Relaxed);
             if live >= cap {
                 return Err(FheError::CacheOverflow(format!(
@@ -78,46 +119,50 @@ impl SessionStore {
                 )));
             }
         }
-        map.insert(key, CacheEntry { cts, cached_len });
+        let entry = CacheEntry { cts, cached_len };
+        inner.credit(session, &entry);
+        if let Some(old) = inner.streams.insert(key, entry) {
+            inner.debit(session, &old);
+        }
         Ok(())
     }
 
     /// Consume a stream's bundle (by move — the executor reads the
     /// ciphertexts by reference, so nothing is ever cloned).
     pub fn take(&self, session: u64, stream: u64) -> Option<CacheEntry> {
-        self.streams.lock().unwrap_or_else(|e| e.into_inner()).remove(&(session, stream))
+        let mut inner = self.lock();
+        let entry = inner.streams.remove(&(session, stream))?;
+        inner.debit(session, &entry);
+        Some(entry)
     }
 
     /// Roll a consumed bundle back after an abandoned step (deadline,
     /// fault, panic) so a resubmit is exact. Never cap-checked: the
     /// entry was live moments ago and rollback must not fail.
     pub fn restore(&self, session: u64, stream: u64, entry: CacheEntry) {
-        self.streams
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .insert((session, stream), entry);
+        let mut inner = self.lock();
+        inner.credit(session, &entry);
+        if let Some(old) = inner.streams.insert((session, stream), entry) {
+            inner.debit(session, &old);
+        }
     }
 
     /// Drop a stream's bundle explicitly (the `release_cache` wire op);
     /// `true` if one existed.
     pub fn release(&self, session: u64, stream: u64) -> bool {
-        self.streams
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .remove(&(session, stream))
-            .is_some()
+        self.take(session, stream).is_some()
     }
 
     /// Live bundles across all sessions (the `cache_blobs_live` gauge).
     pub fn live_blobs(&self) -> u64 {
-        self.streams.lock().unwrap_or_else(|e| e.into_inner()).len() as u64
+        self.lock().streams.len() as u64
     }
 
     /// Approximate ciphertext bytes held live (the `cache_bytes` gauge):
-    /// LWE mask + body words per cached ciphertext.
+    /// LWE mask + body words per cached ciphertext. O(1) — read off the
+    /// running total, not recomputed by walking the store.
     pub fn live_bytes(&self) -> u64 {
-        let map = self.streams.lock().unwrap_or_else(|e| e.into_inner());
-        map.values().map(|e| e.cts.iter().map(ct_bytes).sum::<u64>()).sum()
+        self.lock().bytes
     }
 }
 
@@ -130,6 +175,12 @@ impl Default for SessionStore {
 /// Heap bytes of one LWE ciphertext (mask words + body word).
 fn ct_bytes(ct: &CtInt) -> u64 {
     ((ct.ct.mask.len() + 1) * std::mem::size_of::<u64>()) as u64
+}
+
+/// Heap bytes of one cache bundle — the unit the running byte gauge is
+/// credited/debited in.
+fn entry_bytes(entry: &CacheEntry) -> u64 {
+    entry.cts.iter().map(ct_bytes).sum()
 }
 
 #[cfg(test)]
@@ -184,5 +235,68 @@ mod tests {
         // Raising the cap unblocks.
         store.set_cache_cap(3);
         assert!(store.put(1, 3, Vec::new(), 0).is_ok());
+    }
+
+    /// Pins the incremental gauge accounting: after every randomized
+    /// `put`/`take`/`restore`/`release`, the store's O(1) `live_blobs`
+    /// and `live_bytes` gauges must equal a full recompute over a shadow
+    /// copy of the live entries — including across cap rejections
+    /// (which must leave the gauges untouched) and same-stream
+    /// replacements (which must debit the evicted bundle).
+    #[test]
+    fn gauges_match_full_recompute_across_randomized_lifecycle() {
+        use crate::util::prng::Rng64;
+        let (_ctx, pool) = some_cts(3);
+        let bundle = |n: usize| -> Vec<CtInt> { pool.iter().take(n).cloned().collect() };
+        let store = SessionStore::new(2);
+        // Shadow of the live entries: key -> ciphertext count, recomputed
+        // from scratch after every operation.
+        let mut shadow: HashMap<(u64, u64), usize> = HashMap::new();
+        let per_ct = ct_bytes(&pool[0]);
+        let mut rng = Xoshiro256::new(42);
+        let mut taken: Vec<(u64, u64, CacheEntry)> = Vec::new();
+        let mut saw_live = false;
+        for _ in 0..400 {
+            let session = rng.next_u64() % 3;
+            let stream = rng.next_u64() % 4;
+            let n = (rng.next_u64() % 4) as usize;
+            match rng.next_u64() % 4 {
+                0 => {
+                    let live = shadow.keys().filter(|(s, _)| *s == session).count();
+                    let opens = !shadow.contains_key(&(session, stream));
+                    let res = store.put(session, stream, bundle(n), n);
+                    if opens && live >= 2 {
+                        assert_eq!(res.unwrap_err().code(), "cache_overflow");
+                    } else {
+                        res.expect("under cap");
+                        shadow.insert((session, stream), n);
+                    }
+                }
+                1 => {
+                    let entry = store.take(session, stream);
+                    assert_eq!(entry.is_some(), shadow.remove(&(session, stream)).is_some());
+                    if let Some(entry) = entry {
+                        taken.push((session, stream, entry));
+                    }
+                }
+                2 => {
+                    if let Some((s, t, entry)) = taken.pop() {
+                        shadow.insert((s, t), entry.cts.len());
+                        store.restore(s, t, entry);
+                    }
+                }
+                _ => {
+                    assert_eq!(
+                        store.release(session, stream),
+                        shadow.remove(&(session, stream)).is_some()
+                    );
+                }
+            }
+            assert_eq!(store.live_blobs(), shadow.len() as u64);
+            let expect_bytes: u64 = shadow.values().map(|&n| n as u64 * per_ct).sum();
+            assert_eq!(store.live_bytes(), expect_bytes);
+            saw_live = saw_live || !shadow.is_empty();
+        }
+        assert!(saw_live, "lifecycle exercised live state");
     }
 }

@@ -90,7 +90,11 @@ impl FheError {
             "bad_request" => FheError::BadRequest(m),
             "protocol" => FheError::Protocol(m),
             "internal" => FheError::Internal(m),
-            other => FheError::Internal(format!("{other}: {m}")),
+            // A newer server's code: label it explicitly so the message
+            // says *why* it landed in Internal, and keep the code even
+            // when the server sent no message at all.
+            other if m.is_empty() => FheError::Internal(format!("unknown error_code '{other}'")),
+            other => FheError::Internal(format!("unknown error_code '{other}': {m}")),
         }
     }
 }
@@ -158,7 +162,17 @@ mod tests {
     fn unknown_code_is_preserved_not_dropped() {
         let e = FheError::from_code("quota_exhausted", "too many keys");
         assert_eq!(e.code(), "internal");
-        assert!(e.to_string().contains("quota_exhausted"), "{e}");
+        assert_eq!(e.to_string(), "unknown error_code 'quota_exhausted': too many keys");
+        // A codeless, messageless response still names the code instead
+        // of collapsing to an empty Internal("").
+        let e = FheError::from_code("quota_exhausted", "");
+        assert_eq!(e.code(), "internal");
+        assert_eq!(e.to_string(), "unknown error_code 'quota_exhausted'");
+        // Round-tripping the *re-encoded* unknown error keeps the
+        // original code visible in the message on the second hop too.
+        let back = FheError::from_code(e.code(), &e.to_string());
+        assert_eq!(back.code(), "internal");
+        assert!(back.to_string().contains("quota_exhausted"), "{back}");
     }
 
     #[test]

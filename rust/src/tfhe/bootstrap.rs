@@ -41,6 +41,29 @@
 //! [`ClientKey::server_key`] are independent and run across workers, with
 //! per-bit child RNGs derived sequentially so the key is thread-count
 //! invariant.
+//!
+//! ## Work-stealing, cross-key pool
+//!
+//! The pool no longer carves the batch into static contiguous chunks
+//! (which strangled on skewed batches: a run of expensive multi-value
+//! jobs landing on one chunk serialized behind a single worker while the
+//! rest idled). Jobs are claimed through a [`StealQueue`]: each worker
+//! owns a contiguous range and takes from it with one atomic `fetch_add`
+//! per claim; a worker whose range runs dry *steals* from the other
+//! ranges' cursors, so the pass ends only when every job is done —
+//! regardless of how cost is distributed over the batch. Because a PBS
+//! is deterministic, which worker executes a job can never change a
+//! ciphertext bit; the counters are atomic, so accounting stays exact.
+//!
+//! Jobs additionally carry **their own server key** ([`KeyedJob`]):
+//! [`pbs_batch_keyed`] / [`pbs_batch_keyed_isolated`] sweep jobs from
+//! any number of users' keys in one pool pass (per-worker scratch is
+//! cached per key, since keys may differ in geometry). This is the seam
+//! the coordinator's cross-session fusion stands on. The per-key
+//! entry points ([`ServerKey::pbs_batch_mixed`] and friends) are thin
+//! wrappers that tag every job with `self`. [`PoolStats`] reports what a
+//! pass did — stolen jobs, distinct keys, and busy/capacity worker time
+//! — feeding the `worker_utilization` serving metric.
 
 use super::faults::FaultPlan;
 use super::fft::NegacyclicFft;
@@ -452,50 +475,20 @@ impl ServerKey {
     /// and multi-value bootstraps mixed freely — across `threads`
     /// workers.
     ///
-    /// Jobs are split into contiguous chunks, one `std::thread::scope`
-    /// worker per chunk, each with its own reusable [`ExtScratch`].
-    /// Outputs are flattened in job order (a multi job contributes
-    /// [`BatchJob::n_outputs`] consecutive ciphertexts in packing
-    /// order), and every output is bit-identical to what sequential
-    /// execution produces (both bootstrap flavors are deterministic).
-    /// `PBS_COUNT` advances by the total LUT evaluations,
-    /// `BLIND_ROTATION_COUNT` by exactly `jobs.len()`.
+    /// A thin single-key wrapper over the work-stealing pool
+    /// ([`pbs_batch_keyed`]): every job is tagged with `self` and jobs
+    /// are claimed dynamically, so batches mixing cheap single-LUT and
+    /// expensive multi-value jobs no longer straggle on whichever static
+    /// chunk the expensive run landed in. Outputs are flattened in job
+    /// order (a multi job contributes [`BatchJob::n_outputs`]
+    /// consecutive ciphertexts in packing order), and every output is
+    /// bit-identical to what sequential execution produces at any thread
+    /// count (both bootstrap flavors are deterministic). `PBS_COUNT`
+    /// advances by the total LUT evaluations, `BLIND_ROTATION_COUNT` by
+    /// exactly `jobs.len()`.
     pub fn pbs_batch_mixed(&self, jobs: &[BatchJob], threads: usize) -> Vec<LweCiphertext> {
-        if jobs.is_empty() {
-            return Vec::new();
-        }
-        let total: usize = jobs.iter().map(|j| j.n_outputs()).sum();
-        let mut out: Vec<Option<LweCiphertext>> = (0..total).map(|_| None).collect();
-        let threads = threads.max(1).min(jobs.len());
-        if threads == 1 {
-            let mut scratch = self.scratch();
-            let mut off = 0;
-            for job in jobs {
-                let n = job.n_outputs();
-                self.run_batch_job(job, &mut scratch, &mut out[off..off + n]);
-                off += n;
-            }
-        } else {
-            let chunk = (jobs.len() + threads - 1) / threads;
-            std::thread::scope(|s| {
-                let mut rest: &mut [Option<LweCiphertext>] = &mut out;
-                for job_chunk in jobs.chunks(chunk) {
-                    let n: usize = job_chunk.iter().map(|j| j.n_outputs()).sum();
-                    let (head, tail) = rest.split_at_mut(n);
-                    rest = tail;
-                    s.spawn(move || {
-                        let mut scratch = self.scratch();
-                        let mut off = 0;
-                        for job in job_chunk {
-                            let k = job.n_outputs();
-                            self.run_batch_job(job, &mut scratch, &mut head[off..off + k]);
-                            off += k;
-                        }
-                    });
-                }
-            });
-        }
-        out.into_iter().map(|c| c.expect("worker filled every slot")).collect()
+        let keyed: Vec<KeyedJob> = jobs.iter().map(|&job| KeyedJob { key: self, job }).collect();
+        pbs_batch_keyed(&keyed, threads).0
     }
 
     /// [`Self::pbs_batch_mixed`] with **per-job panic isolation**: each
@@ -507,74 +500,18 @@ impl ServerKey {
     /// order.
     ///
     /// `faults` arms deterministic injection: a span of global 1-based
-    /// job indices is reserved in one `fetch_add` per call, so which job
-    /// panics depends only on submission order — never on thread count
-    /// or worker interleaving.
+    /// job indices is reserved in one `fetch_add` per call and each job's
+    /// fault index is `span base + submission index + 1`, so which job
+    /// panics depends only on submission order — never on thread count,
+    /// work stealing, or worker interleaving.
     pub fn pbs_batch_mixed_isolated(
         &self,
         jobs: &[BatchJob],
         threads: usize,
         faults: Option<&FaultPlan>,
     ) -> Vec<Result<Vec<LweCiphertext>, FheError>> {
-        if jobs.is_empty() {
-            return Vec::new();
-        }
-        let base = faults.map_or(0, |f| f.next_pbs_base(jobs.len() as u64));
-        let mut out: Vec<Option<Result<Vec<LweCiphertext>, FheError>>> =
-            (0..jobs.len()).map(|_| None).collect();
-        let threads = threads.max(1).min(jobs.len());
-        if threads == 1 {
-            self.run_isolated_span(jobs, base, faults, &mut out);
-        } else {
-            let chunk = (jobs.len() + threads - 1) / threads;
-            std::thread::scope(|s| {
-                let mut rest: &mut [Option<Result<Vec<LweCiphertext>, FheError>>] = &mut out;
-                for (ci, job_chunk) in jobs.chunks(chunk).enumerate() {
-                    let (head, tail) = rest.split_at_mut(job_chunk.len());
-                    rest = tail;
-                    let span_base = base + (ci * chunk) as u64;
-                    s.spawn(move || self.run_isolated_span(job_chunk, span_base, faults, head));
-                }
-            });
-        }
-        out.into_iter().map(|r| r.expect("worker visited every job")).collect()
-    }
-
-    /// Worker body for [`Self::pbs_batch_mixed_isolated`]: run each job
-    /// of a contiguous span under its own `catch_unwind` guard. A caught
-    /// panic discards the scratch buffers (they may have been left
-    /// mid-update) and rebuilds them before the next job.
-    fn run_isolated_span(
-        &self,
-        jobs: &[BatchJob],
-        span_base: u64,
-        faults: Option<&FaultPlan>,
-        out: &mut [Option<Result<Vec<LweCiphertext>, FheError>>],
-    ) {
-        use std::panic::{catch_unwind, AssertUnwindSafe};
-        let mut scratch = self.scratch();
-        for (i, job) in jobs.iter().enumerate() {
-            let idx = span_base + i as u64 + 1;
-            let res = catch_unwind(AssertUnwindSafe(|| {
-                if let Some(f) = faults {
-                    f.maybe_panic_pbs(idx);
-                }
-                let n = job.n_outputs();
-                let mut slots: Vec<Option<LweCiphertext>> = (0..n).map(|_| None).collect();
-                self.run_batch_job(job, &mut scratch, &mut slots);
-                slots
-                    .into_iter()
-                    .map(|c| c.expect("job filled every slot"))
-                    .collect::<Vec<LweCiphertext>>()
-            }));
-            out[i] = Some(match res {
-                Ok(cts) => Ok(cts),
-                Err(p) => {
-                    scratch = self.scratch();
-                    Err(FheError::WorkerPanic(panic_message(p)))
-                }
-            });
-        }
+        let keyed: Vec<KeyedJob> = jobs.iter().map(|&job| KeyedJob { key: self, job }).collect();
+        pbs_batch_keyed_isolated(&keyed, threads, faults).0
     }
 
     /// Execute one mixed-batch job into its output span (len =
@@ -610,6 +547,258 @@ impl ServerKey {
     pub fn key_material_eq(&self, other: &ServerKey) -> bool {
         self.params == other.params && self.bsk == other.bsk && self.ksk == other.ksk
     }
+}
+
+/// One job of a cross-key pool pass: a [`BatchJob`] plus the server key
+/// it must execute under. Carrying the key per job is what lets a single
+/// worker-pool sweep serve several users at once — the fused executor
+/// tags each member's jobs with that member's own key and submits them
+/// all to one [`pbs_batch_keyed_isolated`] call.
+#[derive(Clone, Copy)]
+pub struct KeyedJob<'a> {
+    pub key: &'a ServerKey,
+    pub job: BatchJob<'a>,
+}
+
+/// What one work-stealing pool pass did — the saturation observability
+/// behind the coordinator's `worker_utilization` / `stolen_jobs` /
+/// `fused_keys` serving metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Jobs executed by a worker other than the one whose range they
+    /// were assigned to (idle workers pulling from busy workers' ranges).
+    pub stolen_jobs: u64,
+    /// Distinct server keys the pass swept jobs from.
+    pub keys: usize,
+    /// Worker-nanoseconds actually spent inside worker loops (summed
+    /// over workers).
+    pub busy_ns: u64,
+    /// Worker-nanoseconds available: `threads × wall time` of the pass.
+    pub capacity_ns: u64,
+}
+
+impl PoolStats {
+    /// Fraction of the pool's worker-time spent executing jobs; 0 when
+    /// nothing ran. Bounded by 1 (each worker's loop time is at most the
+    /// pass's wall time).
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_ns == 0 {
+            return 0.0;
+        }
+        self.busy_ns as f64 / self.capacity_ns as f64
+    }
+
+    /// Accumulate another pass into this one (`keys` keeps the maximum
+    /// seen in any single pass — "how many keys did one sweep fuse").
+    pub fn absorb(&mut self, other: &PoolStats) {
+        self.stolen_jobs += other.stolen_jobs;
+        self.keys = self.keys.max(other.keys);
+        self.busy_ns += other.busy_ns;
+        self.capacity_ns += other.capacity_ns;
+    }
+}
+
+/// Claim coordinator of the work-stealing pool. Jobs `0..n` are split
+/// into per-worker contiguous ranges; a worker claims from its own
+/// range's cursor with one `fetch_add` per claim and, once its range
+/// runs dry, *steals* from the other ranges' cursors. `fetch_add` hands
+/// out strictly increasing positions and a claim only counts while it
+/// lands inside the range, so every index is claimed exactly once no
+/// matter how workers interleave.
+struct StealQueue {
+    /// Per worker: (next position to claim, exclusive range end).
+    ranges: Vec<(std::sync::atomic::AtomicUsize, usize)>,
+}
+
+impl StealQueue {
+    fn new(n_jobs: usize, workers: usize) -> StealQueue {
+        let chunk = (n_jobs + workers - 1) / workers.max(1);
+        let ranges = (0..workers.max(1))
+            .map(|w| {
+                let start = (w * chunk).min(n_jobs);
+                let end = ((w + 1) * chunk).min(n_jobs);
+                (std::sync::atomic::AtomicUsize::new(start), end)
+            })
+            .collect();
+        StealQueue { ranges }
+    }
+
+    /// Claim the next job for `worker`: its own range first, then a
+    /// sweep over the other workers' ranges. Returns the job index and
+    /// whether it was stolen; `None` once every range is drained.
+    fn claim(&self, worker: usize) -> Option<(usize, bool)> {
+        let n = self.ranges.len();
+        for k in 0..n {
+            let w = (worker + k) % n;
+            let (cursor, end) = &self.ranges[w];
+            if cursor.load(Ordering::Relaxed) >= *end {
+                continue;
+            }
+            let idx = cursor.fetch_add(1, Ordering::Relaxed);
+            if idx < *end {
+                return Some((idx, k != 0));
+            }
+        }
+        None
+    }
+}
+
+/// Per-worker scratch buffers keyed by server-key identity. A cross-key
+/// pass may hop a worker between keys with different geometry, so each
+/// worker keeps one [`ExtScratch`] per key it has executed for (the key
+/// count per pass is tiny — one per co-scheduled session). Keys are
+/// identified by address, which is stable for the duration of the pass
+/// because every key is borrowed by the job list.
+#[derive(Default)]
+struct ScratchCache {
+    entries: Vec<(usize, ExtScratch)>,
+}
+
+impl ScratchCache {
+    fn for_key(&mut self, key: &ServerKey) -> &mut ExtScratch {
+        let id = key as *const ServerKey as usize;
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == id) {
+            return &mut self.entries[pos].1;
+        }
+        self.entries.push((id, key.scratch()));
+        &mut self.entries.last_mut().expect("entry just pushed").1
+    }
+
+    /// Drop every buffer — called after a caught panic, which may have
+    /// left a buffer mid-update.
+    fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+/// Work-stealing pool skeleton shared by the plain and panic-isolated
+/// entry points: claim jobs through a [`StealQueue`], run `run_one` on
+/// each, collect `(job index, result)` pairs per worker and scatter them
+/// after the scope joins (no locks, no shared output slices). A panic
+/// escaping `run_one` propagates out of the pool (the isolated entry
+/// point catches per job before it gets here).
+fn run_keyed_pool<R, F>(jobs: &[KeyedJob], threads: usize, run_one: F) -> (Vec<Option<R>>, PoolStats)
+where
+    R: Send,
+    F: Fn(usize, &KeyedJob, &mut ScratchCache) -> R + Sync,
+{
+    let n = jobs.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut stats = PoolStats::default();
+    let mut key_ids: Vec<usize> =
+        jobs.iter().map(|j| j.key as *const ServerKey as usize).collect();
+    key_ids.sort_unstable();
+    key_ids.dedup();
+    stats.keys = key_ids.len();
+    if n == 0 {
+        return (slots, stats);
+    }
+    let threads = threads.max(1).min(n);
+    let wall = std::time::Instant::now();
+    if threads == 1 {
+        let mut cache = ScratchCache::default();
+        for (i, job) in jobs.iter().enumerate() {
+            slots[i] = Some(run_one(i, job, &mut cache));
+        }
+        stats.busy_ns = wall.elapsed().as_nanos() as u64;
+        stats.capacity_ns = stats.busy_ns;
+        return (slots, stats);
+    }
+    let queue = StealQueue::new(n, threads);
+    let stolen = AtomicU64::new(0);
+    let busy = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                let (queue, run_one, stolen, busy) = (&queue, &run_one, &stolen, &busy);
+                s.spawn(move || {
+                    let t0 = std::time::Instant::now();
+                    let mut cache = ScratchCache::default();
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    while let Some((idx, was_stolen)) = queue.claim(w) {
+                        if was_stolen {
+                            stolen.fetch_add(1, Ordering::Relaxed);
+                        }
+                        local.push((idx, run_one(idx, &jobs[idx], &mut cache)));
+                    }
+                    busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (idx, r) in h.join().expect("pool worker panicked") {
+                slots[idx] = Some(r);
+            }
+        }
+    });
+    stats.capacity_ns = wall.elapsed().as_nanos() as u64 * threads as u64;
+    stats.stolen_jobs = stolen.load(Ordering::Relaxed);
+    stats.busy_ns = busy.load(Ordering::Relaxed);
+    (slots, stats)
+}
+
+/// Execute independent PBS jobs spanning **any number of server keys**
+/// through the work-stealing pool. Outputs are flattened in job order (a
+/// multi job contributes its `n_outputs` ciphertexts consecutively) and
+/// are bit-identical to per-key sequential execution at any thread count
+/// — both bootstrap flavors are deterministic, so claim order cannot
+/// change a ciphertext bit.
+pub fn pbs_batch_keyed(jobs: &[KeyedJob], threads: usize) -> (Vec<LweCiphertext>, PoolStats) {
+    let (slots, stats) = run_keyed_pool(jobs, threads, |_, kj, cache| {
+        let n = kj.job.n_outputs();
+        let mut out: Vec<Option<LweCiphertext>> = (0..n).map(|_| None).collect();
+        kj.key.run_batch_job(&kj.job, cache.for_key(kj.key), &mut out);
+        out.into_iter().map(|c| c.expect("job filled every slot")).collect::<Vec<LweCiphertext>>()
+    });
+    let flat = slots.into_iter().flat_map(|r| r.expect("worker visited every job")).collect();
+    (flat, stats)
+}
+
+/// [`pbs_batch_keyed`] with **per-job panic isolation**: each job runs
+/// inside `catch_unwind`, so a poisoned job (a bug, or an injected
+/// `panic@pbs:N` fault) yields `Err(WorkerPanic)` for that job alone
+/// while every other job — including jobs under *other* keys sharing the
+/// pass — completes bit-identical to a fault-free run. A caught panic
+/// discards the worker's scratch buffers (they may have been left
+/// mid-update); fresh ones are built on the next claim.
+///
+/// `faults` arms deterministic injection: a span of global 1-based job
+/// indices is reserved in one `fetch_add` per call and each job's fault
+/// index is `span base + submission index + 1`, independent of which
+/// worker executes (or steals) the job.
+pub fn pbs_batch_keyed_isolated(
+    jobs: &[KeyedJob],
+    threads: usize,
+    faults: Option<&FaultPlan>,
+) -> (Vec<Result<Vec<LweCiphertext>, FheError>>, PoolStats) {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    if jobs.is_empty() {
+        return (Vec::new(), PoolStats::default());
+    }
+    let base = faults.map_or(0, |f| f.next_pbs_base(jobs.len() as u64));
+    let (slots, stats) = run_keyed_pool(jobs, threads, |i, kj, cache| {
+        let idx = base + i as u64 + 1;
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(f) = faults {
+                f.maybe_panic_pbs(idx);
+            }
+            let n = kj.job.n_outputs();
+            let mut out: Vec<Option<LweCiphertext>> = (0..n).map(|_| None).collect();
+            kj.key.run_batch_job(&kj.job, cache.for_key(kj.key), &mut out);
+            out.into_iter()
+                .map(|c| c.expect("job filled every slot"))
+                .collect::<Vec<LweCiphertext>>()
+        }));
+        match res {
+            Ok(cts) => Ok(cts),
+            Err(p) => {
+                cache.clear();
+                Err(FheError::WorkerPanic(panic_message(p)))
+            }
+        }
+    });
+    (slots.into_iter().map(|r| r.expect("worker visited every job")).collect(), stats)
 }
 
 #[cfg(test)]
@@ -935,5 +1124,166 @@ mod tests {
             assert_eq!(batched, sequential, "threads={threads}");
         }
         assert!(sk.pbs_batch(&[], 4).is_empty(), "empty batch");
+    }
+
+    #[test]
+    fn steal_queue_hands_out_each_index_once_and_marks_steals() {
+        // Deterministic single-threaded walk of the claim mechanics:
+        // worker 1 drains its own range [4, 8), then steals from the
+        // front of worker 0's range; worker 0 resumes behind the thefts.
+        let q = StealQueue::new(8, 2);
+        for want in 4..8 {
+            assert_eq!(q.claim(1), Some((want, false)));
+        }
+        assert_eq!(q.claim(1), Some((0, true)), "own range dry: steal from worker 0");
+        assert_eq!(q.claim(1), Some((1, true)));
+        assert_eq!(q.claim(0), Some((2, false)), "owner resumes behind the thefts");
+        assert_eq!(q.claim(0), Some((3, false)));
+        assert_eq!(q.claim(0), None, "all ranges drained");
+        assert_eq!(q.claim(1), None);
+        // Uneven split: 3 jobs over 2 workers → ranges [0, 2) and [2, 3).
+        let q = StealQueue::new(3, 2);
+        assert_eq!(q.claim(1), Some((2, false)));
+        assert_eq!(q.claim(1), Some((0, true)));
+        assert_eq!(q.claim(1), Some((1, true)));
+        assert_eq!(q.claim(1), None);
+        // More workers than jobs leaves the surplus ranges empty.
+        let q = StealQueue::new(0, 3);
+        assert_eq!(q.claim(0), None);
+        assert_eq!(q.claim(2), None);
+    }
+
+    #[test]
+    fn steal_queue_claims_exactly_once_under_contention() {
+        // 8 workers hammering 1000 indices: the union of claims must be
+        // exactly 0..1000, each index once, however the threads race.
+        let n = 1000usize;
+        let workers = 8usize;
+        let q = StealQueue::new(n, workers);
+        let mut all: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    let q = &q;
+                    s.spawn(move || {
+                        let mut mine = Vec::new();
+                        while let Some((idx, _)) = q.claim(w) {
+                            mine.push(idx);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().expect("claimer")).collect()
+        });
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "every index claimed exactly once");
+    }
+
+    #[test]
+    fn skewed_multi_front_loaded_batch_is_thread_count_invariant() {
+        // Regression for the static-chunk straggler: every expensive
+        // multi-value job packed at the front of the batch — the layout
+        // that used to land all of them on one worker's contiguous chunk
+        // while the cheap tail idled the rest. The work-stealing pool
+        // must return bit-identical flattened outputs at every thread
+        // count, and its pass accounting must stay coherent.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let mut rng = Xoshiro256::new(0x57EA);
+        let params = TfheParams::test_multi_lut(3);
+        let ck = ClientKey::generate(params, &mut rng);
+        let sk = ck.server_key(&mut rng);
+        let enc = Encoder::new(params);
+        let space = params.message_space();
+        let single = sk.prepare_lut(&Lut::from_fn(&params, |m| (m + 3) % space));
+        let lut_a = Lut::from_fn(&params, |m| (m + 1) % space);
+        let lut_b = Lut::from_fn(&params, |m| (2 * m) % space);
+        let mlut = sk.prepare_multi_lut(&[&lut_a, &lut_b]);
+        let cts: Vec<LweCiphertext> =
+            (0..8u64).map(|i| enc.encrypt_raw(i % space, &ck, &mut rng)).collect();
+        let jobs: Vec<BatchJob> = cts
+            .iter()
+            .enumerate()
+            .map(|(i, ct)| {
+                if i < 4 {
+                    BatchJob::Multi(ct, &mlut)
+                } else {
+                    BatchJob::Single(ct, &single)
+                }
+            })
+            .collect();
+        let before_rot = blind_rotation_count();
+        let reference = sk.pbs_batch_mixed(&jobs, 1);
+        assert_eq!(blind_rotation_count() - before_rot, jobs.len() as u64);
+        for threads in [2usize, 3, 4, 8] {
+            let batched = sk.pbs_batch_mixed(&jobs, threads);
+            assert_eq!(batched, reference, "threads={threads}");
+            let keyed: Vec<KeyedJob> =
+                jobs.iter().map(|&job| KeyedJob { key: &sk, job }).collect();
+            let (flat, stats) = pbs_batch_keyed(&keyed, threads);
+            assert_eq!(flat, reference, "keyed pool, threads={threads}");
+            assert_eq!(stats.keys, 1);
+            assert!(stats.busy_ns > 0, "workers must report busy time");
+            assert!(stats.busy_ns <= stats.capacity_ns, "busy cannot exceed capacity");
+            let u = stats.utilization();
+            assert!(u > 0.0 && u <= 1.0, "utilization {u} out of range at T={threads}");
+        }
+    }
+
+    #[test]
+    fn keyed_batch_sweeps_jobs_from_distinct_server_keys_in_one_pass() {
+        // Cross-key fusion at the pool layer: jobs under two different
+        // users' keys interleaved into one pass. Each output must equal
+        // what that job's own key produces sequentially, and the pass
+        // must report both keys.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let params = TfheParams::test_small();
+        let mut rng_a = Xoshiro256::new(0xA11CE);
+        let mut rng_b = Xoshiro256::new(0xB0B);
+        let ck_a = ClientKey::generate(params, &mut rng_a);
+        let ck_b = ClientKey::generate(params, &mut rng_b);
+        let sk_a = ck_a.server_key(&mut rng_a);
+        let sk_b = ck_b.server_key(&mut rng_b);
+        let enc = Encoder::new(params);
+        let space = params.message_space();
+        let lut = Lut::from_fn(&params, |m| (m + 1) % space);
+        let (pl_a, pl_b) = (sk_a.prepare_lut(&lut), sk_b.prepare_lut(&lut));
+        let cts_a: Vec<_> = (0..3).map(|m| enc.encrypt_raw(m % space, &ck_a, &mut rng_a)).collect();
+        let cts_b: Vec<_> = (0..3).map(|m| enc.encrypt_raw(m % space, &ck_b, &mut rng_b)).collect();
+        // Interleave A and B jobs so neither key owns a contiguous span.
+        let mut jobs: Vec<KeyedJob> = Vec::new();
+        for i in 0..3 {
+            jobs.push(KeyedJob { key: &sk_a, job: BatchJob::Single(&cts_a[i], &pl_a) });
+            jobs.push(KeyedJob { key: &sk_b, job: BatchJob::Single(&cts_b[i], &pl_b) });
+        }
+        let solo: Vec<LweCiphertext> = (0..3)
+            .flat_map(|i| {
+                [sk_a.pbs_prepared(&cts_a[i], &pl_a), sk_b.pbs_prepared(&cts_b[i], &pl_b)]
+            })
+            .collect();
+        for threads in [1usize, 2, 3] {
+            let (flat, stats) = pbs_batch_keyed(&jobs, threads);
+            assert_eq!(flat, solo, "threads={threads}");
+            assert_eq!(stats.keys, 2, "one pass must sweep both keys");
+        }
+        // Isolated flavor: a panic at submission index 1 (B's first job)
+        // quarantines that job alone; survivors under both keys stay
+        // bit-identical to the clean pass.
+        let faults = FaultPlan::parse("panic@pbs:2").unwrap();
+        let (got, stats) = pbs_batch_keyed_isolated(&jobs, 3, Some(&faults));
+        assert_eq!(stats.keys, 2);
+        for (i, res) in got.iter().enumerate() {
+            if i == 1 {
+                assert!(
+                    matches!(res, Err(FheError::WorkerPanic(m)) if m.contains("panic@pbs:2")),
+                    "job 2 must be the quarantined victim"
+                );
+            } else {
+                assert_eq!(
+                    res.as_ref().expect("survivor").as_slice(),
+                    &solo[i..i + 1],
+                    "survivor {i} bit-identical across keys"
+                );
+            }
+        }
     }
 }

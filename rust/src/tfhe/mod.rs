@@ -36,14 +36,15 @@ pub(crate) fn pbs_test_guard() -> std::sync::MutexGuard<'static, ()> {
 }
 
 pub use bootstrap::{
-    blind_rotation_count, pbs_count, reset_blind_rotation_count, reset_pbs_count, BatchJob,
-    ClientKey, Lut, PreparedLut, PreparedMultiLut, ServerKey,
+    blind_rotation_count, pbs_batch_keyed, pbs_batch_keyed_isolated, pbs_count,
+    reset_blind_rotation_count, reset_pbs_count, BatchJob, ClientKey, KeyedJob, Lut, PoolStats,
+    PreparedLut, PreparedMultiLut, ServerKey,
 };
 pub use encoding::Encoder;
 pub use faults::{CancelToken, FaultPlan};
 pub use ops::{ct_clone_count, default_fhe_threads, CtInt, FheContext};
 pub use params::{DecompParams, TfheParams};
 pub use plan::{
-    rewrites_disabled, CircuitBuilder, CircuitPlan, LevelJob, LutRef, NodeId, PlanRewriter,
-    PlanRun, RewriteConfig, RewriteStats,
+    rewrites_disabled, set_wavefront_dispatch, wavefront_enabled, CircuitBuilder, CircuitPlan,
+    LevelJob, LutRef, NodeId, PlanRewriter, PlanRun, RewriteConfig, RewriteStats,
 };

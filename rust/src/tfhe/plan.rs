@@ -54,6 +54,25 @@
 //! pre/post plans expose `pbs_count()` / `blind_rotation_count()` so
 //! tests pin the saving exactly (`tests/rewrite_it.rs`).
 //!
+//! ## Wavefront dispatch
+//!
+//! Beside the leveling pass (kept verbatim — it is the counting oracle
+//! `levels()` / `level_sizes()` report from), [`PlanRun`] offers a
+//! *readiness-driven* stepper: [`PlanRun::next_wave_jobs`] hands out
+//! every bootstrap whose operand ciphertext is already materialized,
+//! instead of every bootstrap whose level number equals the open level.
+//! For this IR the two coincide wave-for-wave — a node's level *is* its
+//! exact bootstrap dependency depth, so the ready set at each wave
+//! boundary equals the level set — which is precisely why wavefront
+//! dispatch is bit-identical with unchanged counter deltas (pinned by
+//! tests here and in the differential harnesses). The payoff is at the
+//! pool layer: wavefront ticks submit through the work-stealing,
+//! cross-key pool (`tfhe::bootstrap::pbs_batch_keyed`), where idle
+//! workers steal ready jobs instead of parking at a level barrier. The
+//! mode is selected by [`wavefront_enabled`] (`FHE_WAVEFRONT=0` forces
+//! the legacy barrier; [`set_wavefront_dispatch`] overrides
+//! programmatically for in-process A/B tests).
+//!
 //! [`ServerKey::pbs_batch`]: super::bootstrap::ServerKey::pbs_batch
 //! [`ServerKey::pbs_multi`]: super::bootstrap::ServerKey::pbs_multi
 
@@ -61,6 +80,7 @@ use super::bootstrap::{BatchJob, PreparedLut, PreparedMultiLut};
 use super::ops::{CtInt, FheContext};
 use crate::quant::FixedMult;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Arc;
 
 /// Index of a node inside its plan (topological: a node only references
@@ -534,7 +554,7 @@ impl CircuitPlan {
     /// assembling an owned 3·T·d vector.
     pub fn execute_ref(&self, ctx: &FheContext, inputs: &[&CtInt]) -> Vec<CtInt> {
         let mut run = PlanRun::new_ref(self, ctx, inputs);
-        while let Some(jobs) = run.next_level_jobs(ctx) {
+        while let Some(jobs) = run.next_jobs(ctx) {
             let outs = ctx.pbs_level(&jobs);
             run.supply(outs);
         }
@@ -711,12 +731,44 @@ impl<'p> PlanRun<'p> {
         self.values[i].clone().expect("operand live (topological order + use counts)")
     }
 
-    /// Evaluate every not-yet-evaluated linear node of level < `bound`.
-    /// Ids are topological, so a single in-order pass sees all operands
-    /// (earlier linear nodes this pass, PBS results from prior levels).
-    fn eval_linear(&mut self, ctx: &FheContext, bound: usize) {
+    /// Whether node `i` can serve as an operand right now: computed (its
+    /// value may live in `values`) or a circuit input (resolved from the
+    /// borrowed input table).
+    fn operand_ready(&self, i: NodeId) -> bool {
+        self.evaluated[i] || matches!(self.plan.nodes[i], Node::Input(_))
+    }
+
+    /// Readiness of a *linear* node: every operand materialized. Always
+    /// false for inputs/constants/bootstrap nodes (they are filled by
+    /// `new_ref` or `supply`, never computed here).
+    fn operands_ready(&self, id: NodeId) -> bool {
+        match &self.plan.nodes[id] {
+            Node::Add(a, b) | Node::Sub(a, b) => {
+                self.operand_ready(*a) && self.operand_ready(*b)
+            }
+            Node::Neg(a) | Node::AddConst(a, _) | Node::ScalarMul(a, _) => {
+                self.operand_ready(*a)
+            }
+            Node::Sum(xs) => xs.iter().all(|&x| self.operand_ready(x)),
+            _ => false,
+        }
+    }
+
+    /// Evaluate every not-yet-evaluated linear node that is eligible:
+    /// with `bound = Some(b)`, every node of level < `b` (the leveling
+    /// pass — eligibility known from the level map alone); with `bound =
+    /// None`, every node whose operands are materialized (the wavefront
+    /// pass — eligibility read off the dataflow). Ids are topological,
+    /// so a single in-order pass sees all operands (earlier linear nodes
+    /// this pass, PBS results from prior waves) and reaches the fixpoint
+    /// either way.
+    fn eval_linear(&mut self, ctx: &FheContext, bound: Option<usize>) {
         for id in 0..self.plan.nodes.len() {
-            if self.evaluated[id] || self.plan.levels[id] >= bound {
+            let skip = match bound {
+                Some(b) => self.plan.levels[id] >= b,
+                None => !self.operands_ready(id),
+            };
+            if self.evaluated[id] || skip {
                 continue;
             }
             // Operand refs live in the plan (`&'p`), so computing the
@@ -786,7 +838,7 @@ impl<'p> PlanRun<'p> {
         if self.current > self.plan.max_level {
             return None;
         }
-        self.eval_linear(ctx, self.current);
+        self.eval_linear(ctx, Some(self.current));
         let mut jobs = Vec::new();
         for (id, node) in self.plan.nodes.iter().enumerate() {
             if self.plan.levels[id] != self.current {
@@ -810,6 +862,61 @@ impl<'p> PlanRun<'p> {
             }
         }
         Some(jobs)
+    }
+
+    /// Readiness-driven counterpart of [`Self::next_level_jobs`]: hand
+    /// out every bootstrap whose operand ciphertext is materialized,
+    /// without consulting the level map. Linear nodes are folded forward
+    /// first, so a bootstrap becomes ready the moment the linear chain
+    /// feeding it resolves. Because a node's level is its exact
+    /// bootstrap dependency depth, the ready set at each wave boundary
+    /// *equals* the level set — waves and levels advance in lockstep and
+    /// the two steppers are bit-identical with identical counter deltas
+    /// (`levels_done`, `supply`, and `finish` keep their semantics
+    /// unchanged). What wavefront mode buys is at the pool layer: its
+    /// ticks are the submission points for the work-stealing cross-key
+    /// pool, where idle workers steal instead of parking at barriers.
+    pub fn next_wave_jobs(&mut self, ctx: &FheContext) -> Option<Vec<LevelJob>> {
+        assert!(self.pending.is_empty(), "previous wave awaits supply()");
+        if self.current > self.plan.max_level {
+            return None;
+        }
+        self.eval_linear(ctx, None);
+        let mut jobs = Vec::new();
+        for (id, node) in self.plan.nodes.iter().enumerate() {
+            if self.evaluated[id] {
+                continue;
+            }
+            match node {
+                Node::Pbs { input, lut } if self.operand_ready(*input) => {
+                    let ct = self.consume(*input);
+                    let acc = self.resolved[lut.0]
+                        .as_ref()
+                        .expect("LUT resolved (referenced by a Pbs node)");
+                    jobs.push(LevelJob::Single(ct, Arc::clone(acc)));
+                    self.pending.push(id);
+                }
+                Node::MultiPbs { input, .. } if self.operand_ready(*input) => {
+                    let ct = self.consume(*input);
+                    jobs.push(LevelJob::Multi(ct, Arc::clone(&self.multi_accs[&id])));
+                    self.pending.push(id);
+                }
+                _ => {}
+            }
+        }
+        Some(jobs)
+    }
+
+    /// Mode-aware stepping: wavefront readiness when
+    /// [`wavefront_enabled`] (the default), legacy level barriers under
+    /// `FHE_WAVEFRONT=0`. Executors drive this so one knob A/Bs the two
+    /// dispatch modes end to end.
+    pub fn next_jobs(&mut self, ctx: &FheContext) -> Option<Vec<LevelJob>> {
+        if wavefront_enabled() {
+            self.next_wave_jobs(ctx)
+        } else {
+            self.next_level_jobs(ctx)
+        }
     }
 
     /// Hand back the results of the jobs returned by the last
@@ -866,7 +973,7 @@ impl<'p> PlanRun<'p> {
             self.current > self.plan.max_level && self.pending.is_empty(),
             "finish() before all PBS levels were executed"
         );
-        self.eval_linear(ctx, self.plan.max_level + 1);
+        self.eval_linear(ctx, Some(self.plan.max_level + 1));
         // Each output listing holds one accounted use; consuming it moves
         // the last copy out (no terminal clone unless a node is listed as
         // an output more than once or still has other readers).
@@ -894,6 +1001,46 @@ pub fn rewrites_disabled() -> bool {
             !v.is_empty() && v != "0"
         }
         Err(_) => false,
+    }
+}
+
+/// Programmatic override for [`wavefront_enabled`]: `0` = defer to the
+/// environment, `1` = force legacy barriers, `2` = force wavefront.
+/// A process-global atomic rather than `std::env::set_var` because the
+/// latter is racy in multithreaded test binaries — in-process A/B tests
+/// flip this instead.
+static WAVEFRONT_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force (`Some(true)` / `Some(false)`) or clear (`None`) the dispatch
+/// mode, overriding `FHE_WAVEFRONT`. Tests that A/B the two steppers in
+/// one process use this; whole-process selection (the CI legs) uses the
+/// environment variable.
+pub fn set_wavefront_dispatch(mode: Option<bool>) {
+    let v = match mode {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    WAVEFRONT_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The `FHE_WAVEFRONT` dispatch knob. Wavefront (readiness-driven)
+/// dispatch is the **default**; setting the variable to `0` (or empty)
+/// selects the legacy level-barrier stepper — the CI matrix leg that
+/// keeps both modes green. [`set_wavefront_dispatch`] takes precedence
+/// over the environment when armed.
+pub fn wavefront_enabled() -> bool {
+    match WAVEFRONT_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return false,
+        2 => return true,
+        _ => {}
+    }
+    match std::env::var("FHE_WAVEFRONT") {
+        Ok(v) => {
+            let v = v.trim();
+            !v.is_empty() && v != "0"
+        }
+        Err(_) => true,
     }
 }
 
@@ -1591,5 +1738,99 @@ mod tests {
             assert_eq!(run.remaining[id], 0, "node {id} has unconsumed reads");
             assert!(run.values[id].is_none(), "node {id} leaked its ciphertext");
         }
+    }
+
+    /// Clears the dispatch override on drop so a panicking assertion
+    /// can't leak a forced mode into concurrently running tests.
+    struct WavefrontGuard;
+    impl Drop for WavefrontGuard {
+        fn drop(&mut self) {
+            set_wavefront_dispatch(None);
+        }
+    }
+
+    #[test]
+    fn wavefront_stepper_matches_level_stepper_bit_identically() {
+        // Drive the two steppers side by side over a multi-level plan
+        // (rewritten, so MultiPbs/MultiOut nodes are in play): every
+        // wave's job count must equal the corresponding level size, and
+        // outputs plus PBS counter deltas must be bit-identical.
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = multi_setup();
+        let (q, _) = PlanRewriter::for_ctx(&ctx).rewrite(redundant_plan());
+        let ca = ctx.encrypt(1, &ck, &mut rng);
+        let cb = ctx.encrypt(-2, &ck, &mut rng);
+        let inputs = [ca, cb];
+        let sizes = q.level_sizes();
+        let mut by_level = PlanRun::new(&q, &ctx, &inputs);
+        let mut by_wave = PlanRun::new(&q, &ctx, &inputs);
+        let mut waves = 0usize;
+        loop {
+            let lj = by_level.next_level_jobs(&ctx);
+            let wj = by_wave.next_wave_jobs(&ctx);
+            match (lj, wj) {
+                (None, None) => break,
+                (Some(lj), Some(wj)) => {
+                    assert_eq!(lj.len(), wj.len(), "wave {waves} ready set = level set");
+                    assert_eq!(lj.len(), sizes[waves], "wave {waves} matches the oracle");
+                    by_level.supply(ctx.pbs_level(&lj));
+                    by_wave.supply(ctx.pbs_level(&wj));
+                    assert_eq!(by_level.levels_done(), by_wave.levels_done());
+                    waves += 1;
+                }
+                (l, w) => panic!(
+                    "steppers must exhaust together: level={:?} wave={:?}",
+                    l.map(|j| j.len()),
+                    w.map(|j| j.len())
+                ),
+            }
+        }
+        assert_eq!(waves, q.levels(), "waves and levels advance in lockstep");
+        let a = by_level.finish(&ctx);
+        let b = by_wave.finish(&ctx);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ct, y.ct, "wavefront output bit-identical");
+        }
+    }
+
+    #[test]
+    fn wavefront_execute_matches_barrier_execute_with_equal_counters() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let _mode_guard = WavefrontGuard;
+        let (ck, ctx, mut rng) = setup();
+        let p = small_plan();
+        let ca = ctx.encrypt(2, &ck, &mut rng);
+        let cb = ctx.encrypt(-1, &ck, &mut rng);
+        set_wavefront_dispatch(Some(false));
+        let before = pbs_count();
+        let barrier = p.execute_ref(&ctx, &[&ca, &cb]);
+        let barrier_pbs = pbs_count() - before;
+        set_wavefront_dispatch(Some(true));
+        let before = pbs_count();
+        let wave = p.execute_ref(&ctx, &[&ca, &cb]);
+        let wave_pbs = pbs_count() - before;
+        assert_eq!(barrier[0].ct, wave[0].ct, "modes are bit-identical");
+        assert_eq!(barrier_pbs, wave_pbs, "modes cost the same PBS");
+        assert_eq!(wave_pbs, p.pbs_count(), "both match the plan oracle");
+    }
+
+    #[test]
+    fn wavefront_knob_override_beats_environment() {
+        let _mode_guard = WavefrontGuard;
+        set_wavefront_dispatch(Some(false));
+        assert!(!wavefront_enabled(), "forced off");
+        set_wavefront_dispatch(Some(true));
+        assert!(wavefront_enabled(), "forced on");
+        set_wavefront_dispatch(None);
+        // Cleared: the mode falls back to FHE_WAVEFRONT (default on).
+        let env_default = match std::env::var("FHE_WAVEFRONT") {
+            Ok(v) => {
+                let v = v.trim();
+                !v.is_empty() && v != "0"
+            }
+            Err(_) => true,
+        };
+        assert_eq!(wavefront_enabled(), env_default);
     }
 }

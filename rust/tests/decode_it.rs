@@ -10,7 +10,10 @@
 //!   mirror. Steps run alternating 1 and 4 PBS worker threads, and
 //!   `decode.step` resolves plans through the `FHE_NO_REWRITE`-honoring
 //!   cache, so the CI no-rewrite and thread legs drive both pipelines
-//!   through here.
+//!   through here. Every grid point additionally runs under **both**
+//!   PBS dispatch modes — the wavefront ready-set stepper and the
+//!   legacy level barrier — on identical inputs, pinned bit-identical
+//!   with the same counter deltas (PR 8).
 //! * **Closed forms**: every step's `PBS_COUNT`/`BLIND_ROTATION_COUNT`
 //!   delta equals the executed plan's own prediction, and (rewrites on)
 //!   the plan's counts equal `optimizer::profile_step` — whose
@@ -35,7 +38,9 @@ use inhibitor::fhe_circuits::{CtMatrix, DecodeFhe, DecodeMirror, ModelFhe};
 use inhibitor::optimizer::profile_step;
 use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::ops::CtInt;
-use inhibitor::tfhe::{bootstrap, rewrites_disabled, ClientKey, FheContext, TfheParams};
+use inhibitor::tfhe::{
+    bootstrap, rewrites_disabled, set_wavefront_dispatch, ClientKey, FheContext, TfheParams,
+};
 use inhibitor::util::prng::Xoshiro256;
 use std::sync::atomic::Ordering;
 use std::sync::Mutex;
@@ -45,6 +50,24 @@ static COUNTER_LOCK: Mutex<()> = Mutex::new(());
 
 fn lock() -> std::sync::MutexGuard<'static, ()> {
     COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pins the PBS dispatch mode for a scope and restores the
+/// environment-driven default on drop (panic-safe — a failing assert
+/// must not leak a forced mode into sibling tests).
+struct WavefrontGuard;
+
+impl WavefrontGuard {
+    fn set(mode: bool) -> Self {
+        set_wavefront_dispatch(Some(mode));
+        WavefrontGuard
+    }
+}
+
+impl Drop for WavefrontGuard {
+    fn drop(&mut self) {
+        set_wavefront_dispatch(None);
+    }
 }
 
 /// One grid point: stream T = 3 tokens (prefill 1, then 2 steps) and pin
@@ -61,7 +84,7 @@ fn check_stream(
     layers: usize,
     d: usize,
     shared_kv: bool,
-) {
+) -> Vec<CtInt> {
     let tag = format!("{mech:?} H={heads} L={layers} d={d} shared={shared_kv}");
     let dm = heads * d;
     let t_total = 3usize;
@@ -138,6 +161,40 @@ fn check_stream(
     // … and decodes to the streaming plaintext mirror.
     let got: Vec<i64> = stream_out.iter().map(|c| ctx.decrypt(c, ck)).collect();
     assert_eq!(got, m_out.data, "{tag}: plaintext mirror");
+    stream_out
+}
+
+/// Run one grid point under wavefront dispatch AND the legacy level
+/// barrier, on identical inputs (the PRNG is forked so both runs derive
+/// the same plaintexts and encryption randomness), and pin the two
+/// streamed output grids **bit-identical**. Every in-stream assertion —
+/// counter deltas vs the executed plan, closed forms, cache identity —
+/// runs in both modes.
+#[allow(clippy::too_many_arguments)]
+fn check_stream_both_dispatch_modes(
+    ctx: &FheContext,
+    ck: &ClientKey,
+    rng: &mut Xoshiro256,
+    mech: Mechanism,
+    heads: usize,
+    layers: usize,
+    d: usize,
+    shared_kv: bool,
+) {
+    let mut rng_barrier = rng.clone();
+    let wave = {
+        let _m = WavefrontGuard::set(true);
+        check_stream(ctx, ck, rng, mech, heads, layers, d, shared_kv)
+    };
+    let barrier = {
+        let _m = WavefrontGuard::set(false);
+        check_stream(ctx, ck, &mut rng_barrier, mech, heads, layers, d, shared_kv)
+    };
+    let tag = format!("{mech:?} H={heads} L={layers} d={d} shared={shared_kv}");
+    assert_eq!(wave.len(), barrier.len(), "{tag}: grid sizes across dispatch modes");
+    for (i, (a, b)) in wave.iter().zip(&barrier).enumerate() {
+        assert_eq!(a.ct, b.ct, "{tag}: grid ct {i} wavefront == barrier");
+    }
 }
 
 #[test]
@@ -153,7 +210,16 @@ fn decode_inhibitor_stream_equals_one_shot_at_every_prefix() {
         (2, 2, 1, false),
         (2, 1, 2, true),
     ] {
-        check_stream(&ctx, &ck, &mut rng, Mechanism::Inhibitor, heads, layers, d, shared);
+        check_stream_both_dispatch_modes(
+            &ctx,
+            &ck,
+            &mut rng,
+            Mechanism::Inhibitor,
+            heads,
+            layers,
+            d,
+            shared,
+        );
     }
 }
 
@@ -174,7 +240,16 @@ fn decode_signed_inhibitor_stream_equals_one_shot_at_every_prefix() {
         (2, 2, 1, false),
         (2, 1, 2, true),
     ] {
-        check_stream(&ctx, &ck, &mut rng, Mechanism::InhibitorSigned, heads, layers, d, shared);
+        check_stream_both_dispatch_modes(
+            &ctx,
+            &ck,
+            &mut rng,
+            Mechanism::InhibitorSigned,
+            heads,
+            layers,
+            d,
+            shared,
+        );
     }
 }
 
@@ -191,7 +266,16 @@ fn decode_dotprod_stream_equals_one_shot_at_every_prefix() {
         (2, 2, 1, false),
         (2, 1, 2, true),
     ] {
-        check_stream(&ctx, &ck, &mut rng, Mechanism::DotProduct, heads, layers, d, shared);
+        check_stream_both_dispatch_modes(
+            &ctx,
+            &ck,
+            &mut rng,
+            Mechanism::DotProduct,
+            heads,
+            layers,
+            d,
+            shared,
+        );
     }
 }
 

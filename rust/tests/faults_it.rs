@@ -16,6 +16,11 @@
 //! Solo references are computed BEFORE arming the faults: the reference
 //! path (`CircuitPlan::execute`) never consults the fault plan, so the
 //! comparison is exact.
+//!
+//! Every test body runs twice — under wavefront dispatch and under the
+//! legacy level barrier (PR 8) — because fault indices are assigned by
+//! submission order and cancellation ticks fire at wave ≡ level
+//! boundaries, so the whole contract must be dispatch-invariant.
 
 use inhibitor::attention::Mechanism;
 use inhibitor::coordinator::{
@@ -25,7 +30,9 @@ use inhibitor::error::FheError;
 use inhibitor::fhe_circuits::{CtMatrix, DecodeFhe, InhibitorFhe, ModelFhe};
 use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::ops::CtInt;
-use inhibitor::tfhe::{bootstrap, ClientKey, FaultPlan, FheContext, TfheParams};
+use inhibitor::tfhe::{
+    bootstrap, set_wavefront_dispatch, ClientKey, FaultPlan, FheContext, TfheParams,
+};
 use inhibitor::util::prng::{Rng64, Xoshiro256};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
@@ -37,6 +44,26 @@ static COUNTER_LOCK: Mutex<()> = Mutex::new(());
 
 fn lock() -> std::sync::MutexGuard<'static, ()> {
     COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pins the PBS dispatch mode for a scope and restores the
+/// environment-driven default on drop (panic-safe). Every fault test
+/// runs its body once per mode: fault indices are submission-order and
+/// cancellation ticks sit at wave ≡ level boundaries, so the entire
+/// blast-radius contract must be dispatch-invariant (PR 8).
+struct WavefrontGuard;
+
+impl WavefrontGuard {
+    fn set(mode: bool) -> Self {
+        set_wavefront_dispatch(Some(mode));
+        WavefrontGuard
+    }
+}
+
+impl Drop for WavefrontGuard {
+    fn drop(&mut self) {
+        set_wavefront_dispatch(None);
+    }
 }
 
 fn encrypt_qkv(
@@ -97,6 +124,13 @@ fn infer(r: &Rig, blob: u64) -> InferResponse {
 #[test]
 fn injected_pbs_panic_fails_only_the_victim_and_survivors_stay_bit_identical() {
     let _g = lock();
+    for mode in [true, false] {
+        let _m = WavefrontGuard::set(mode);
+        pbs_panic_blast_radius();
+    }
+}
+
+fn pbs_panic_blast_radius() {
     let (t, d) = (2usize, 2usize);
     let r = rig(0xFA017, 3);
     let sess = r.coord.keymgr.session(r.session).unwrap();
@@ -161,6 +195,13 @@ fn injected_pbs_panic_fails_only_the_victim_and_survivors_stay_bit_identical() {
 #[test]
 fn injected_deadline_abandons_with_strictly_fewer_pbs_levels() {
     let _g = lock();
+    for mode in [true, false] {
+        let _m = WavefrontGuard::set(mode);
+        deadline_abandons_between_levels();
+    }
+}
+
+fn deadline_abandons_between_levels() {
     let (t, d) = (2usize, 2usize);
     let r = rig(0xDEAD1, 1);
     let sess = r.coord.keymgr.session(r.session).unwrap();
@@ -213,6 +254,13 @@ fn injected_deadline_abandons_with_strictly_fewer_pbs_levels() {
 #[test]
 fn injected_engine_panic_is_supervised_and_the_engine_keeps_serving() {
     let _g = lock();
+    for mode in [true, false] {
+        let _m = WavefrontGuard::set(mode);
+        engine_panic_is_supervised();
+    }
+}
+
+fn engine_panic_is_supervised() {
     let (t, d) = (2usize, 2usize);
     let r = rig(0xE9519, 1);
     let sess = r.coord.keymgr.session(r.session).unwrap();
@@ -367,6 +415,13 @@ fn decode_midstream_fault(r: &DecodeRig, spec: &str, want_code: &str) -> u64 {
 #[test]
 fn decode_step_deadline_restores_the_cache_and_the_stream_resumes_exactly() {
     let _g = lock();
+    for mode in [true, false] {
+        let _m = WavefrontGuard::set(mode);
+        decode_deadline_midstream();
+    }
+}
+
+fn decode_deadline_midstream() {
     let r = decode_rig(0xDEAD3);
     let sess = r.coord.keymgr.session(r.session).unwrap();
     // Boundary ticks: 1 fires before level 1, 2 after it — the faulted
@@ -387,6 +442,13 @@ fn decode_step_deadline_restores_the_cache_and_the_stream_resumes_exactly() {
 #[test]
 fn decode_step_pbs_panic_restores_the_cache_and_the_stream_resumes_exactly() {
     let _g = lock();
+    for mode in [true, false] {
+        let _m = WavefrontGuard::set(mode);
+        decode_pbs_panic_midstream();
+    }
+}
+
+fn decode_pbs_panic_midstream() {
     let r = decode_rig(0xFA019);
     decode_midstream_fault(&r, "panic@pbs:1", "worker_panic");
     let m = r.coord.metrics();
@@ -403,6 +465,13 @@ fn armed_but_never_firing_faults_leave_serving_bit_identical() {
     // same invariant directly: the checked path with an armed plan is
     // bit-identical to the solo reference.
     let _g = lock();
+    for mode in [true, false] {
+        let _m = WavefrontGuard::set(mode);
+        armed_but_idle_is_bit_identical();
+    }
+}
+
+fn armed_but_idle_is_bit_identical() {
     let (t, d) = (2usize, 2usize);
     let r = rig(0xC1EA9, 2);
     let sess = r.coord.keymgr.session(r.session).unwrap();
