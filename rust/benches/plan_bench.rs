@@ -9,7 +9,8 @@
 
 use inhibitor::attention::Mechanism;
 use inhibitor::bench_harness::{bench, BenchConfig};
-use inhibitor::coordinator::{FusedLevelExecutor, FusedRequest};
+use inhibitor::coordinator::storage::DEFAULT_STORAGE_BUDGET;
+use inhibitor::coordinator::{Bundle, CtStore, FusedLevelExecutor, FusedRequest, KeyManager};
 use inhibitor::fhe_circuits::{
     CtMatrix, DecodeFhe, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe,
 };
@@ -418,6 +419,53 @@ fn main() {
         ("step_speedup_vs_recompute", Json::num(m_dec_full.mean_s / m_dec_step.mean_s)),
     ])];
 
+    // === Storage tier: hot takes vs sink spill/rehydrate, key parking ==
+    // The PR 9 seam: one CtStore take/insert cycle served from the hot
+    // tier vs the same cycle at budget 0 (encode → sink put on insert,
+    // sink get → decode on take), plus KeyManager session parking — the
+    // server key encoded into the sink — and the cold attach that
+    // rebuilds it (key decode + FFT-plan rebuild).
+    println!("\n=== Storage tier: hot vs spilled take/insert, park + cold attach ===");
+    let bundle_cts: Vec<CtInt> =
+        (0..d_model).map(|i| ctx.encrypt((i as i64 % 3) - 1, &ck, &mut rng)).collect();
+    let hot_store = CtStore::with_memory("bench", DEFAULT_STORAGE_BUDGET);
+    hot_store.insert(1, 1, Bundle { cts: bundle_cts.clone(), meta: 0 });
+    let m_hot = bench("storage hot take+insert", cfg, || {
+        let b = hot_store.try_take(1, 1).expect("tier").expect("live");
+        hot_store.insert(1, 1, b);
+    });
+    let cold_store = CtStore::with_memory("bench", 0);
+    cold_store.insert(1, 1, Bundle { cts: bundle_cts, meta: 0 });
+    let m_cold = bench("storage spill+rehydrate", cfg, || {
+        let b = cold_store.try_take(1, 1).expect("tier").expect("live");
+        cold_store.insert(1, 1, b);
+    });
+    let km = KeyManager::new();
+    let mut park_rng = Xoshiro256::new(0x57A6);
+    let park_ck = ClientKey::generate(TfheParams::test_small(), &mut park_rng);
+    let park_id = km.create_session(FheContext::new(park_ck.server_key(&mut park_rng)));
+    let m_attach = bench("key park + cold attach", cfg, || {
+        km.park_session(park_id).expect("parkable");
+        let _ = km.session(park_id).expect("cold attach");
+    });
+    let cold_attaches =
+        km.storage().metrics().cold_key_attaches.load(std::sync::atomic::Ordering::Relaxed);
+    println!("  {}", m_hot.summary());
+    println!("  {}", m_cold.summary());
+    println!("  {}", m_attach.summary());
+    println!(
+        "  spilled/hot latency ratio: {:.2}, cold attaches: {cold_attaches}",
+        m_cold.mean_s / m_hot.mean_s,
+    );
+    let storage_records = vec![Json::obj(vec![
+        ("bundle_cts", Json::num(d_model as f64)),
+        ("hot_take_insert_s", Json::num(m_hot.mean_s)),
+        ("spill_rehydrate_s", Json::num(m_cold.mean_s)),
+        ("spill_over_hot", Json::num(m_cold.mean_s / m_hot.mean_s)),
+        ("park_cold_attach_s", Json::num(m_attach.mean_s)),
+        ("cold_key_attaches", Json::num(cold_attaches as f64)),
+    ])];
+
     let record = Json::obj(vec![
         ("bench", Json::str("plan_bench")),
         ("seq_len", Json::num(t as f64)),
@@ -430,6 +478,7 @@ fn main() {
         ("multihead", Json::arr(multihead_records)),
         ("block", Json::arr(block_records)),
         ("decode", Json::arr(decode_records)),
+        ("storage", Json::arr(storage_records)),
     ]);
     // Write next to the workspace root (cargo runs benches with CWD at
     // the package root), where the perf-trajectory record is checked in.

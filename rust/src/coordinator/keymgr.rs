@@ -2,45 +2,112 @@
 //! server keys (bootstrap + key-switch material) and registered
 //! ciphertext payloads. Client secret keys never enter this process in a
 //! real deployment; tests generate both sides locally.
+//!
+//! Since S9 a session's ciphertext bundles live in a shared [`CtStore`]
+//! spill tier under the `"blob"` namespace (LRU-evicted past the hot
+//! byte budget, capped per session), and *whole sessions* can be parked
+//! cold: [`KeyManager::park_session`] serializes the server key through
+//! `tfhe::codec` into the tier's sink, and the next
+//! [`KeyManager::session`] lookup rebuilds the evaluation context
+//! transparently — the cold-key attach path whose latency
+//! `coordinator::metrics` tracks. Teardown
+//! ([`KeyManager::drop_session`]) releases the session's key material
+//! *and* every bundle it holds, hot or spilled, through the same
+//! accounting path.
 
+use crate::coordinator::storage::{Bundle, CtStore, DEFAULT_STORAGE_BUDGET};
+use crate::error::FheError;
+use crate::tfhe::codec::{decode_server_key, CtCodec};
 use crate::tfhe::ops::{CtInt, FheContext};
 use crate::tfhe::params::TfheParams;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-/// One client session: evaluation context + ciphertext store.
+/// Default cap on live ciphertext bundles per session — one misbehaving
+/// client that never `take`s its results cannot grow the server
+/// unboundedly (bundles past the cap fail typed; bundles under it can
+/// still spill cold, so the cap bounds *state*, not RAM).
+pub const DEFAULT_BLOB_CAP: usize = 1024;
+
+/// One client session: evaluation context + a handle into the shared
+/// blob tier (bundles are keyed by this session's id).
 pub struct Session {
     pub ctx: FheContext,
-    store: Mutex<HashMap<u64, Vec<CtInt>>>,
+    id: u64,
+    blobs: Arc<CtStore>,
     next_blob: AtomicU64,
+    max_blobs: AtomicUsize,
 }
 
 impl Session {
-    pub fn new(ctx: FheContext) -> Self {
-        Session { ctx, store: Mutex::new(HashMap::new()), next_blob: AtomicU64::new(1) }
+    fn new(ctx: FheContext, id: u64, blobs: Arc<CtStore>) -> Self {
+        Session {
+            ctx,
+            id,
+            blobs,
+            next_blob: AtomicU64::new(1),
+            max_blobs: AtomicUsize::new(DEFAULT_BLOB_CAP),
+        }
     }
 
-    /// Register a ciphertext bundle; returns its reference id.
+    /// This session's id in the key manager.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Register a ciphertext bundle; returns its reference id. Client
+    /// upload surface — panics past the per-session blob cap (tests and
+    /// examples stay far under it; the serving path uses the fallible
+    /// [`Self::try_register`]/[`Self::put_result`]).
     pub fn register(&self, cts: Vec<CtInt>) -> u64 {
-        let id = self.next_blob.fetch_add(1, Ordering::Relaxed);
-        self.store.lock().unwrap_or_else(|e| e.into_inner()).insert(id, cts);
-        id
+        self.try_register(cts).expect("session blob cap exceeded")
     }
 
+    /// Register a ciphertext bundle, failing typed past the per-session
+    /// cap ([`FheError::CacheOverflow`]; the bundle is dropped).
+    pub fn try_register(&self, cts: Vec<CtInt>) -> Result<u64, FheError> {
+        let id = self.next_blob.fetch_add(1, Ordering::Relaxed);
+        let cap = self.max_blobs.load(Ordering::Relaxed);
+        self.blobs.try_insert(
+            self.id,
+            id,
+            Bundle { cts, meta: 0 },
+            cap,
+            "ciphertext bundles",
+            "take results (or drop the session) before registering more",
+        )?;
+        Ok(id)
+    }
+
+    /// Consume a bundle by id, rehydrating transparently if the tier
+    /// spilled it. Collapses storage failures to `None`; the serving
+    /// path uses [`Self::try_take`] to keep them typed.
     pub fn take(&self, id: u64) -> Option<Vec<CtInt>> {
-        self.store.lock().unwrap_or_else(|e| e.into_inner()).remove(&id)
+        self.try_take(id).ok().flatten()
+    }
+
+    /// Consume a bundle by id. `Ok(None)` if the id holds nothing;
+    /// `Err(`[`FheError::Storage`]`)` if its spilled bytes are missing
+    /// or corrupt.
+    pub fn try_take(&self, id: u64) -> Result<Option<Vec<CtInt>>, FheError> {
+        Ok(self.blobs.try_take(self.id, id)?.map(|b| b.cts))
     }
 
     /// Re-insert a bundle under its original id — the error-path rollback
     /// of [`Self::take`], so a failed batch does not consume the bundles
-    /// of co-batched requests that could otherwise be retried.
+    /// of co-batched requests that could otherwise be retried. Never
+    /// cap-checked: rollback must not fail.
     pub fn restore(&self, id: u64, cts: Vec<CtInt>) {
-        self.store.lock().unwrap_or_else(|e| e.into_inner()).insert(id, cts);
+        self.blobs.insert(self.id, id, Bundle { cts, meta: 0 });
     }
 
-    pub fn put_result(&self, cts: Vec<CtInt>) -> u64 {
-        self.register(cts)
+    /// Deposit a result bundle for the client to `take`, failing typed
+    /// past the per-session cap (the satellite bugfix: results a client
+    /// never collects can no longer grow the server unboundedly).
+    pub fn put_result(&self, cts: Vec<CtInt>) -> Result<u64, FheError> {
+        self.try_register(cts)
     }
 
     /// Advance the blob-id counter to `next`. Operational hook (id-space
@@ -50,37 +117,200 @@ impl Session {
     pub fn set_next_blob_id(&self, next: u64) {
         self.next_blob.store(next, Ordering::Relaxed);
     }
+
+    /// Adjust the per-session blob cap (operational knob; tests use it
+    /// to drive overflow cheaply).
+    pub fn set_blob_cap(&self, cap: usize) {
+        self.max_blobs.store(cap, Ordering::Relaxed);
+    }
+
+    /// Live bundles this session holds (hot + spilled).
+    pub fn live_blobs(&self) -> usize {
+        self.blobs.session_live(self.id)
+    }
 }
 
-/// The key manager: session id → Session.
+/// A session whose server key lives cold in the blob sink. Everything
+/// needed to answer metadata queries and resume exactly — the blob-id
+/// counter, the thread setting, the parameter set — without touching
+/// the sink.
+struct ParkedSession {
+    next_blob: u64,
+    threads: usize,
+    params: TfheParams,
+}
+
+/// The key manager: session id → live [`Session`] or parked key
+/// material. Lock order is `sessions` → `parked` everywhere (attach,
+/// park, drop, params), which is what makes the cold-attach path
+/// race-free without a third lock.
 pub struct KeyManager {
-    sessions: Mutex<HashMap<u64, std::sync::Arc<Session>>>,
+    sessions: Mutex<HashMap<u64, Arc<Session>>>,
+    parked: Mutex<HashMap<u64, ParkedSession>>,
+    blobs: Arc<CtStore>,
     next_session: AtomicU64,
 }
 
 impl KeyManager {
+    /// A manager over a private in-memory blob tier (tests, examples).
     pub fn new() -> Self {
-        KeyManager { sessions: Mutex::new(HashMap::new()), next_session: AtomicU64::new(1) }
+        Self::with_storage(Arc::new(CtStore::with_memory("blob", DEFAULT_STORAGE_BUDGET)))
+    }
+
+    /// A manager over an externally wired blob tier (shared sink and
+    /// metrics) — how the coordinator builds it.
+    pub fn with_storage(blobs: Arc<CtStore>) -> Self {
+        KeyManager {
+            sessions: Mutex::new(HashMap::new()),
+            parked: Mutex::new(HashMap::new()),
+            blobs,
+            next_session: AtomicU64::new(1),
+        }
+    }
+
+    fn lock_sessions(&self) -> std::sync::MutexGuard<'_, HashMap<u64, Arc<Session>>> {
+        self.sessions.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_parked(&self) -> std::sync::MutexGuard<'_, HashMap<u64, ParkedSession>> {
+        self.parked.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn key_of(id: u64) -> String {
+        format!("key/{id}")
+    }
+
+    /// The blob tier sessions store their bundles in (and whose sink
+    /// parks cold keys).
+    pub fn storage(&self) -> &Arc<CtStore> {
+        &self.blobs
     }
 
     /// Create a session from a client-provided server key context.
     pub fn create_session(&self, ctx: FheContext) -> u64 {
         let id = self.next_session.fetch_add(1, Ordering::Relaxed);
-        let sess = std::sync::Arc::new(Session::new(ctx));
-        self.sessions.lock().unwrap_or_else(|e| e.into_inner()).insert(id, sess);
+        let sess = Arc::new(Session::new(ctx, id, Arc::clone(&self.blobs)));
+        self.lock_sessions().insert(id, sess);
         id
     }
 
-    pub fn session(&self, id: u64) -> Option<std::sync::Arc<Session>> {
-        self.sessions.lock().unwrap_or_else(|e| e.into_inner()).get(&id).cloned()
+    /// Look up a session, attaching it from the cold tier if it was
+    /// parked: the serialized server key is fetched from the sink,
+    /// decoded, and rebuilt into an evaluation context (FFT plan
+    /// included) under the session's original blob-id counter and thread
+    /// setting. The attach latency lands in the `key_attach` histogram.
+    /// A sink or codec failure leaves the session parked (a recovered
+    /// sink can still serve it) and reads as `None`.
+    pub fn session(&self, id: u64) -> Option<Arc<Session>> {
+        let mut sessions = self.lock_sessions();
+        if let Some(s) = sessions.get(&id) {
+            return Some(Arc::clone(s));
+        }
+        let mut parked = self.lock_parked();
+        let info = parked.remove(&id)?;
+        let start = Instant::now();
+        let skey = Self::key_of(id);
+        let attached = self
+            .blobs
+            .sink()
+            .get(&skey)
+            .and_then(|raw| {
+                raw.ok_or_else(|| {
+                    FheError::Storage(format!("parked key {skey} missing from sink"))
+                })
+            })
+            .and_then(|raw| {
+                decode_server_key(&raw)
+                    .map_err(|e| FheError::Storage(format!("corrupt parked key {skey}: {e}")))
+            });
+        match attached {
+            Ok(sk) => {
+                let ctx = FheContext::with_threads(sk, info.threads);
+                let sess = Arc::new(Session::new(ctx, id, Arc::clone(&self.blobs)));
+                sess.set_next_blob_id(info.next_blob);
+                let _ = self.blobs.sink().delete(&skey);
+                let m = self.blobs.metrics();
+                m.cold_key_attaches.fetch_add(1, Ordering::Relaxed);
+                m.key_attach.record(start.elapsed().as_secs_f64());
+                sessions.insert(id, Arc::clone(&sess));
+                Some(sess)
+            }
+            Err(e) => {
+                parked.insert(id, info);
+                eprintln!("cold attach of session {id} failed: {e}");
+                None
+            }
+        }
     }
 
+    /// Park a live session cold: serialize its server key into the blob
+    /// tier's sink and drop the in-memory evaluation context (bootstrap
+    /// key, FFT plan and all). `Ok(false)` if the id is unknown or
+    /// already parked; `Err(`[`FheError::Storage`]`)` if the session is
+    /// pinned by a live holder (e.g. a registered decode engine) or the
+    /// sink write fails — in both cases the session stays live and
+    /// untouched. The session's bundles stay in the tier (LRU-spillable)
+    /// and its blob-id counter resumes exactly on attach.
+    pub fn park_session(&self, id: u64) -> Result<bool, FheError> {
+        let mut sessions = self.lock_sessions();
+        let mut parked = self.lock_parked();
+        let Some(sess) = sessions.get(&id) else {
+            return Ok(false);
+        };
+        if Arc::strong_count(sess) > 1 {
+            return Err(FheError::Storage(format!(
+                "session {id} is pinned by a live engine or handle; cannot park"
+            )));
+        }
+        let mut codec = CtCodec::new();
+        self.blobs.sink().put(&Self::key_of(id), codec.encode_server_key(&sess.ctx.sk))?;
+        let info = ParkedSession {
+            next_blob: sess.next_blob.load(Ordering::Relaxed),
+            threads: sess.ctx.threads(),
+            params: sess.ctx.sk.params,
+        };
+        sessions.remove(&id);
+        parked.insert(id, info);
+        self.blobs.metrics().evictions.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Sessions currently parked cold (observability / tests).
+    pub fn parked_sessions(&self) -> usize {
+        self.lock_parked().len()
+    }
+
+    /// Tear a session down — live or parked — releasing its key
+    /// material (including parked sink bytes) *and* every ciphertext
+    /// bundle it holds in the blob tier. `true` if it existed. The
+    /// decode-cache side of teardown lives in
+    /// `Coordinator::drop_session`, which pairs this with
+    /// `SessionStore::release_session`.
     pub fn drop_session(&self, id: u64) -> bool {
-        self.sessions.lock().unwrap_or_else(|e| e.into_inner()).remove(&id).is_some()
+        let mut sessions = self.lock_sessions();
+        let mut parked = self.lock_parked();
+        let live = sessions.remove(&id).is_some();
+        let was_parked = parked.remove(&id).is_some();
+        if was_parked {
+            let _ = self.blobs.sink().delete(&Self::key_of(id));
+        }
+        drop(parked);
+        drop(sessions);
+        let existed = live || was_parked;
+        if existed {
+            self.blobs.release_session(id);
+        }
+        existed
     }
 
+    /// Parameter set of a session — answered for parked sessions from
+    /// their metadata, *without* triggering a cold attach.
     pub fn params_of(&self, id: u64) -> Option<TfheParams> {
-        self.session(id).map(|s| s.ctx.sk.params)
+        let sessions = self.lock_sessions();
+        if let Some(s) = sessions.get(&id) {
+            return Some(s.ctx.sk.params);
+        }
+        self.lock_parked().get(&id).map(|p| p.params)
     }
 }
 
@@ -91,6 +321,7 @@ impl Default for KeyManager {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::tfhe::bootstrap::ClientKey;
@@ -109,6 +340,7 @@ mod tests {
         let km = KeyManager::new();
         let sid = km.create_session(ctx);
         let sess = km.session(sid).expect("session exists");
+        assert_eq!(sess.id(), sid);
         let mut rng = Xoshiro256::new(1);
         let ct = sess.ctx.encrypt(2, &ck, &mut rng);
         let blob = sess.register(vec![ct]);
@@ -124,5 +356,98 @@ mod tests {
         let km = KeyManager::new();
         assert!(km.session(42).is_none());
         assert!(!km.drop_session(42));
+        assert!(!km.park_session(42).unwrap());
+    }
+
+    #[test]
+    fn park_and_cold_attach_evaluate_bit_identically() {
+        let _guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx) = make_ctx();
+        let km = KeyManager::new();
+        let sid = km.create_session(ctx);
+        let mut rng = Xoshiro256::new(3);
+        let sess = km.session(sid).expect("live");
+        let x = sess.ctx.encrypt(-1, &ck, &mut rng);
+        let hot = sess.ctx.relu(&x);
+        let blob = sess.register(vec![x.clone()]);
+        drop(sess);
+        assert!(km.park_session(sid).unwrap());
+        assert_eq!(km.parked_sessions(), 1);
+        assert!(km.storage().sink().len() >= 1, "key bytes parked in the sink");
+        assert!(km.params_of(sid).is_some(), "params readable without attaching");
+        assert_eq!(km.parked_sessions(), 1, "params_of does not attach");
+        assert!(!km.park_session(sid).unwrap(), "already parked reads as false");
+        let sess = km.session(sid).expect("cold attach");
+        assert_eq!(km.parked_sessions(), 0);
+        // PBS under the re-attached (decoded, fresh-FFT) key is
+        // bit-identical to the original context.
+        let cold = sess.ctx.relu(&x);
+        assert_eq!(hot.ct, cold.ct, "deterministic PBS across park/attach");
+        // Bundles survive parking; the blob-id counter resumes, so new
+        // ids never collide with pre-park ones.
+        let got = sess.take(blob).expect("pre-park bundle survives");
+        assert_eq!(got[0].ct, x.ct);
+        let blob2 = sess.register(vec![x]);
+        assert!(blob2 > blob, "blob ids resume past pre-park ids");
+        let m = km.storage().metrics();
+        assert_eq!(m.cold_key_attaches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.key_attach.count(), 1, "attach latency recorded");
+    }
+
+    #[test]
+    fn park_refuses_pinned_sessions() {
+        let (_ck, ctx) = make_ctx();
+        let km = KeyManager::new();
+        let sid = km.create_session(ctx);
+        let pin = km.session(sid).expect("live");
+        let err = km.park_session(sid).unwrap_err();
+        assert_eq!(err.code(), "storage", "{err}");
+        assert!(km.session(sid).is_some(), "refused park leaves the session live");
+        drop(pin);
+        assert!(km.park_session(sid).unwrap());
+        // Dropping a parked session reclaims its sink bytes too.
+        assert!(km.drop_session(sid));
+        assert_eq!(km.storage().sink().len(), 0);
+        assert!(km.session(sid).is_none());
+        assert!(km.params_of(sid).is_none());
+    }
+
+    #[test]
+    fn result_blob_cap_is_typed_and_take_frees_it() {
+        let (ck, ctx) = make_ctx();
+        let km = KeyManager::new();
+        let sid = km.create_session(ctx);
+        let sess = km.session(sid).expect("live");
+        sess.set_blob_cap(2);
+        let mut rng = Xoshiro256::new(4);
+        let ct = sess.ctx.encrypt(1, &ck, &mut rng);
+        let a = sess.try_register(vec![ct.clone()]).unwrap();
+        let _b = sess.put_result(vec![ct.clone()]).unwrap();
+        let err = sess.put_result(vec![ct.clone()]).unwrap_err();
+        assert_eq!(err.code(), "cache_overflow", "{err}");
+        assert_eq!(sess.live_blobs(), 2);
+        // Consuming a bundle frees the cap slot.
+        assert!(sess.take(a).is_some());
+        sess.put_result(vec![ct]).unwrap();
+    }
+
+    #[test]
+    fn drop_session_releases_every_bundle_and_byte() {
+        let (ck, ctx) = make_ctx();
+        let km = KeyManager::new();
+        let sid = km.create_session(ctx);
+        let sess = km.session(sid).expect("live");
+        let mut rng = Xoshiro256::new(6);
+        let ct = sess.ctx.encrypt(0, &ck, &mut rng);
+        sess.register(vec![ct.clone()]);
+        sess.register(vec![ct]);
+        assert_eq!(sess.live_blobs(), 2);
+        assert!(km.storage().live_bytes() > 0);
+        drop(sess);
+        assert!(km.drop_session(sid));
+        assert_eq!(km.storage().session_live(sid), 0);
+        assert_eq!(km.storage().live_blobs(), 0);
+        assert_eq!(km.storage().live_bytes(), 0);
+        assert_eq!(km.storage().sink().len(), 0);
     }
 }

@@ -56,6 +56,40 @@ impl LatencyHistogram {
     }
 }
 
+/// Storage-tier metrics (S9): shared between the coordinator's
+/// [`Metrics`] and the `coordinator::storage` tiers, which hold the same
+/// `Arc` and count directly — no polling, no drift.
+#[derive(Default)]
+pub struct StorageMetrics {
+    /// Bundles spilled cold to the blob sink (hot tier over budget).
+    pub evictions: AtomicU64,
+    /// Spilled bundles decoded back into the hot path on `take`.
+    pub rehydrations: AtomicU64,
+    /// `take`s served from the hot tier.
+    pub hits: AtomicU64,
+    /// `take`s that had to touch the sink.
+    pub misses: AtomicU64,
+    /// Parked sessions whose server key was rebuilt from the sink on
+    /// first touch.
+    pub cold_key_attaches: AtomicU64,
+    /// Latency of those cold-key attaches (decode + FFT-plan rebuild —
+    /// the price of parking a session).
+    pub key_attach: LatencyHistogram,
+}
+
+impl StorageMetrics {
+    /// Fraction of tier `take`s served hot (1.0 when nothing ever
+    /// spilled, including before any traffic).
+    pub fn hit_rate(&self) -> f64 {
+        let hits = self.hits.load(Ordering::Relaxed);
+        let misses = self.misses.load(Ordering::Relaxed);
+        if hits + misses == 0 {
+            return 1.0;
+        }
+        hits as f64 / (hits + misses) as f64
+    }
+}
+
 /// Top-level serving metrics.
 #[derive(Default)]
 pub struct Metrics {
@@ -108,6 +142,10 @@ pub struct Metrics {
     pub pool_busy_ns: AtomicU64,
     /// Worker-nanoseconds available (threads × wall per sweep).
     pub pool_capacity_ns: AtomicU64,
+    // --- storage tier (PR 9) ---
+    /// Spill-tier counters, shared by `Arc` with the `CtStore` tiers so
+    /// evictions/rehydrations are counted at the point they happen.
+    pub storage: std::sync::Arc<StorageMetrics>,
     pub latency: LatencyHistogram,
 }
 
@@ -158,6 +196,15 @@ impl Metrics {
         self.pool_capacity_ns.fetch_add(stats.capacity_ns, Ordering::Relaxed);
     }
 
+    /// Refresh the store-footprint gauges from the session store — the
+    /// one place `cache_blobs_live`/`cache_bytes` are written, shared by
+    /// `release_cache`, the decode engine body, and session teardown so
+    /// the storage paths cannot drift out of sync with the store.
+    pub fn refresh_cache_gauges(&self, store: &crate::coordinator::session_store::SessionStore) {
+        self.cache_blobs_live.store(store.live_blobs(), Ordering::Relaxed);
+        self.cache_bytes.store(store.live_bytes(), Ordering::Relaxed);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} rejected={} batches={} mean_batch={:.2} \
@@ -165,6 +212,8 @@ impl Metrics {
              respawns={} retries={} quarantined={} deadline_kills={} shutdown_drained={} \
              decode_steps={} cache_blobs_live={} cache_bytes={} \
              stolen_jobs={} fused_keys={} worker_utilization={:.3} \
+             storage_evictions={} storage_rehydrations={} storage_hit_rate={:.3} \
+             cold_key_attaches={} \
              mean_latency={} p50={} p99={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -186,6 +235,10 @@ impl Metrics {
             self.stolen_jobs.load(Ordering::Relaxed),
             self.fused_keys.load(Ordering::Relaxed),
             self.worker_utilization(),
+            self.storage.evictions.load(Ordering::Relaxed),
+            self.storage.rehydrations.load(Ordering::Relaxed),
+            self.storage.hit_rate(),
+            self.storage.cold_key_attaches.load(Ordering::Relaxed),
             crate::bench_harness::Measurement::fmt_time(self.latency.mean_s()),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.5)),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.99)),
@@ -219,6 +272,22 @@ mod tests {
         m.batched_requests.store(10, Ordering::Relaxed);
         assert!((m.mean_batch_size() - 2.5).abs() < 1e-9);
         assert!(m.summary().contains("mean_batch=2.50"));
+    }
+
+    #[test]
+    fn storage_hit_rate_and_summary_fields() {
+        let m = Metrics::new();
+        assert!((m.storage.hit_rate() - 1.0).abs() < 1e-9, "no traffic reads as all-hot");
+        m.storage.hits.store(3, Ordering::Relaxed);
+        m.storage.misses.store(1, Ordering::Relaxed);
+        m.storage.evictions.store(2, Ordering::Relaxed);
+        m.storage.rehydrations.store(1, Ordering::Relaxed);
+        m.storage.key_attach.record(0.01);
+        let s = m.summary();
+        assert!(s.contains("storage_evictions=2"), "{s}");
+        assert!(s.contains("storage_rehydrations=1"), "{s}");
+        assert!(s.contains("storage_hit_rate=0.750"), "{s}");
+        assert!(s.contains("cold_key_attaches=0"), "{s}");
     }
 
     #[test]

@@ -14,12 +14,14 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod session_store;
+pub mod storage;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use fused::{FusedLevelExecutor, FusedRequest, FusedStats};
 pub use keymgr::{KeyManager, Session};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, StorageMetrics};
 pub use request::{EngineOutput, EnginePath, InferRequest, InferResponse, Payload};
 pub use router::{Coordinator, RoutePolicy};
 pub use scheduler::{EngineFn, Scheduler};
 pub use session_store::SessionStore;
+pub use storage::{BlobSink, Bundle, CtStore, DiskSink, MemorySink, ObjectStoreSink};

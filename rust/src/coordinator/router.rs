@@ -23,7 +23,8 @@ use super::fused::{FusedLevelExecutor, FusedRequest};
 use super::keymgr::{KeyManager, Session};
 use super::request::{EngineOutput, EnginePath, InferRequest, InferResponse, Payload};
 use super::scheduler::Scheduler;
-use super::session_store::{CacheEntry, SessionStore};
+use super::session_store::{CacheEntry, SessionStore, DEFAULT_CACHE_CAP};
+use super::storage::{BlobSink, CtStore, DiskSink, MemorySink, DEFAULT_STORAGE_BUDGET};
 use crate::error::FheError;
 use crate::fhe_circuits::{
     DecodeFhe, DotProductFhe, InhibitorFhe, InhibitorSignedFhe, ModelFhe, MultiHeadFhe,
@@ -60,12 +61,44 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Build with storage wiring from the environment: `FHE_STORAGE_DIR`
+    /// selects a [`DiskSink`] root for cold bundles (default: in-memory
+    /// sink), `FHE_STORAGE_BUDGET` the hot-tier byte budget (`0` spills
+    /// every bundle — the CI tiny-budget leg).
     pub fn new(policy: RoutePolicy) -> Self {
+        let sink: Arc<dyn BlobSink> = match std::env::var("FHE_STORAGE_DIR") {
+            Ok(dir) if !dir.is_empty() => match DiskSink::new(&dir) {
+                Ok(s) => Arc::new(s),
+                Err(e) => {
+                    eprintln!("FHE_STORAGE_DIR={dir} unusable ({e}); using in-memory sink");
+                    Arc::new(MemorySink::new())
+                }
+            },
+            _ => Arc::new(MemorySink::new()),
+        };
+        let budget = std::env::var("FHE_STORAGE_BUDGET")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(DEFAULT_STORAGE_BUDGET);
+        Self::with_storage(policy, sink, budget)
+    }
+
+    /// Build over an explicit blob sink and hot-tier byte budget. Both
+    /// stores — the key manager's result blobs (`"blob"` namespace) and
+    /// the decode cache (`"cache"`) — share the sink and the scheduler's
+    /// storage metrics, so eviction/rehydration counters and teardown go
+    /// through one accounting path. Tests use this to force spill
+    /// through a `DiskSink` without racing on process-global env vars.
+    pub fn with_storage(policy: RoutePolicy, sink: Arc<dyn BlobSink>, budget: u64) -> Self {
+        let scheduler = Scheduler::new();
+        let sm = Arc::clone(&scheduler.metrics.storage);
+        let blob_tier = Arc::new(CtStore::new("blob", Arc::clone(&sink), Arc::clone(&sm), budget));
+        let cache_tier = Arc::new(CtStore::new("cache", sink, sm, budget));
         Coordinator {
-            scheduler: Scheduler::new(),
-            keymgr: Arc::new(KeyManager::new()),
+            keymgr: Arc::new(KeyManager::with_storage(blob_tier)),
             policy,
-            session_store: Arc::new(SessionStore::default()),
+            session_store: Arc::new(SessionStore::with_store(DEFAULT_CACHE_CAP, cache_tier)),
+            scheduler,
         }
     }
 
@@ -82,10 +115,22 @@ impl Coordinator {
     /// op); `true` if one was live. Updates the cache gauges.
     pub fn release_cache(&self, session: u64, stream: u64) -> bool {
         let hit = self.session_store.release(session, stream);
-        let m = &self.scheduler.metrics;
-        m.cache_blobs_live.store(self.session_store.live_blobs(), Ordering::Relaxed);
-        m.cache_bytes.store(self.session_store.live_bytes(), Ordering::Relaxed);
+        self.scheduler.metrics.refresh_cache_gauges(&self.session_store);
         hit
+    }
+
+    /// Tear a session down completely (the `drop_session` wire op): its
+    /// key material (live or parked), every registered ciphertext
+    /// bundle, and every decode cache bundle — hot, spilled, and sink
+    /// bytes — with the cache gauges refreshed afterwards. `true` if the
+    /// session existed. This is the satellite bugfix for the pre-S9
+    /// leak where `KeyManager::drop_session` left the dropped session's
+    /// cache bundles live forever.
+    pub fn drop_session(&self, session: u64) -> bool {
+        let existed = self.keymgr.drop_session(session);
+        self.session_store.release_session(session);
+        self.scheduler.metrics.refresh_cache_gauges(&self.session_store);
+        existed
     }
 
     /// PBS worker threads granted to encrypted engines registered from
@@ -383,7 +428,7 @@ impl Coordinator {
                                     ))
                                 }
                             };
-                            let cts = session.take(blob).ok_or_else(|| {
+                            let cts = session.try_take(blob)?.ok_or_else(|| {
                                 FheError::KeyMissing(format!("unknown ciphertext bundle {blob}"))
                             })?;
                             match req.cache_ref {
@@ -423,11 +468,21 @@ impl Coordinator {
                                         session.restore(blob, cts);
                                         return Err(FheError::BadRequest(msg));
                                     }
-                                    let Some(entry) = store.take(session_id, stream) else {
-                                        session.restore(blob, cts);
-                                        return Err(FheError::KeyMissing(format!(
-                                            "no live cache bundle for stream {stream}"
-                                        )));
+                                    let entry = match store.try_take(session_id, stream) {
+                                        Ok(Some(entry)) => entry,
+                                        Ok(None) => {
+                                            session.restore(blob, cts);
+                                            return Err(FheError::KeyMissing(format!(
+                                                "no live cache bundle for stream {stream}"
+                                            )));
+                                        }
+                                        Err(e) => {
+                                            // Storage-tier failure (lost or
+                                            // corrupt spilled bytes): typed,
+                                            // and the row stays resubmittable.
+                                            session.restore(blob, cts);
+                                            return Err(e);
+                                        }
                                     };
                                     if entry.cts.len() != decode.cache_len(entry.cached_len) {
                                         let msg = format!(
@@ -503,9 +558,17 @@ impl Coordinator {
                                     Kind::Prefill { t, out_stream } => {
                                         let (out, cache) = decode.cache_from_prefill(t, data);
                                         match store.put(session_id, out_stream, cache, t) {
-                                            Ok(()) => Ok(EngineOutput::ResultRef(
-                                                session.put_result(out),
-                                            )),
+                                            Ok(()) => match session.put_result(out) {
+                                                Ok(rid) => Ok(EngineOutput::ResultRef(rid)),
+                                                Err(e) => {
+                                                    // Blob cap: roll the fresh
+                                                    // cache deposit back too so
+                                                    // the prefill replays clean.
+                                                    store.release(session_id, out_stream);
+                                                    session.restore(blob, inputs);
+                                                    Err(e)
+                                                }
+                                            },
                                             Err(e) => {
                                                 session.restore(blob, inputs);
                                                 Err(e)
@@ -514,8 +577,9 @@ impl Coordinator {
                                     }
                                     Kind::Step { cached_len, stream, out_stream } => {
                                         let cache_old = inputs.split_off(dm);
-                                        // Reserve the output slot first
-                                        // (atomic cap check): on overflow
+                                        // Reserve the output cache slot and
+                                        // the result blob id first (atomic
+                                        // cap checks): on either overflow
                                         // the pre-step cache is still in
                                         // one piece to restore.
                                         if let Err(e) =
@@ -529,6 +593,19 @@ impl Coordinator {
                                             );
                                             return Err(e);
                                         }
+                                        let rid = match session.put_result(Vec::new()) {
+                                            Ok(rid) => rid,
+                                            Err(e) => {
+                                                store.release(session_id, out_stream);
+                                                session.restore(blob, inputs);
+                                                store.restore(
+                                                    session_id,
+                                                    stream,
+                                                    CacheEntry { cts: cache_old, cached_len },
+                                                );
+                                                return Err(e);
+                                            }
+                                        };
                                         let (out_row, cache_new) =
                                             decode.cache_after_step(cached_len, cache_old, data);
                                         store.restore(
@@ -539,15 +616,19 @@ impl Coordinator {
                                                 cached_len: cached_len + 1,
                                             },
                                         );
+                                        // Fill the reserved result id with
+                                        // the actual row (restore = replace
+                                        // under an existing id, never
+                                        // cap-checked).
+                                        session.restore(rid, out_row);
                                         metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
-                                        Ok(EngineOutput::ResultRef(session.put_result(out_row)))
+                                        Ok(EngineOutput::ResultRef(rid))
                                     }
                                 },
                             }
                         })
                         .collect();
-                    metrics.cache_blobs_live.store(store.live_blobs(), Ordering::Relaxed);
-                    metrics.cache_bytes.store(store.live_bytes(), Ordering::Relaxed);
+                    metrics.refresh_cache_gauges(&store);
                     Ok(results)
                 }) as crate::coordinator::scheduler::EngineBody
             }),
@@ -616,7 +697,7 @@ impl Coordinator {
                                     ))
                                 }
                             };
-                            let cts = session.take(blob).ok_or_else(|| {
+                            let cts = session.try_take(blob)?.ok_or_else(|| {
                                 FheError::KeyMissing(format!("unknown ciphertext bundle {blob}"))
                             })?;
                             if cts.len() != n_inputs {
@@ -663,9 +744,13 @@ impl Coordinator {
                         .map(|b| {
                             let (blob, cts) = b?;
                             match outs.next().expect("one executor result per fused member") {
-                                Ok(data) => {
-                                    Ok(EngineOutput::ResultRef(session.put_result(data)))
-                                }
+                                Ok(data) => match session.put_result(data) {
+                                    Ok(rid) => Ok(EngineOutput::ResultRef(rid)),
+                                    Err(e) => {
+                                        session.restore(blob, cts);
+                                        Err(e)
+                                    }
+                                },
                                 Err(e) => {
                                     session.restore(blob, cts);
                                     Err(e)
@@ -869,6 +954,37 @@ mod tests {
         assert!(c.release_cache(1, 1));
         assert_eq!(c.metrics().cache_blobs_live.load(Ordering::Relaxed), 0);
         assert_eq!(c.metrics().cache_bytes.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn drop_session_clears_cache_state_and_gauges() {
+        use crate::tfhe::{ClientKey, FheContext, TfheParams};
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::new(41);
+        let ck = ClientKey::generate(TfheParams::test_small(), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let c = Coordinator::new(RoutePolicy::PreferQuant);
+        let sid = c.keymgr.create_session(ctx);
+        let sess = c.keymgr.session(sid).expect("live session");
+        let cts: Vec<_> = (0..3i64).map(|i| sess.ctx.encrypt(i - 1, &ck, &mut rng)).collect();
+        sess.register(cts.clone());
+        c.session_store().put(sid, 1, cts.clone(), 1).unwrap();
+        c.session_store().put(sid, 2, cts, 2).unwrap();
+        c.metrics().refresh_cache_gauges(c.session_store());
+        assert_eq!(c.metrics().cache_blobs_live.load(Ordering::Relaxed), 2);
+        assert!(c.metrics().cache_bytes.load(Ordering::Relaxed) > 0);
+        drop(sess);
+        assert!(c.drop_session(sid), "session was live");
+        assert_eq!(c.session_store().live_blobs(), 0, "decode cache bundles released");
+        assert_eq!(c.session_store().live_bytes(), 0);
+        assert_eq!(c.keymgr.storage().live_blobs(), 0, "result blobs released");
+        assert_eq!(
+            c.metrics().cache_blobs_live.load(Ordering::Relaxed),
+            0,
+            "teardown refreshes the gauges"
+        );
+        assert_eq!(c.metrics().cache_bytes.load(Ordering::Relaxed), 0);
+        assert!(!c.drop_session(sid), "second teardown is a no-op");
     }
 
     #[test]

@@ -10,19 +10,28 @@
 //! roll the *pre-step* bundle back so a resubmit is exact — the same
 //! contract `keymgr::Session::restore` gives victim request bundles.
 //!
+//! Since S9 the bundles live in a [`CtStore`] spill tier under the
+//! `"cache"` namespace: bundles past the hot byte budget are encoded and
+//! spilled to the configured [`BlobSink`], and a `take` of a spilled
+//! bundle rehydrates it bit-identically (PBS is deterministic, so a
+//! stream served through disk equals one served all-in-memory — pinned
+//! by `tests/decode_it.rs`). Gauges (`cache_blobs_live`/`cache_bytes`)
+//! count hot + spilled state uniformly.
+//!
 //! Hygiene: live bundles are capped **per session**
 //! ([`SessionStore::put`] returns [`FheError::CacheOverflow`] past the
-//! cap), the `release_cache` wire op drops a stream's bundle
-//! explicitly, and the `cache_blobs_live`/`cache_bytes` gauges in
-//! `coordinator::metrics` track the store's footprint.
+//! cap), the `release_cache` wire op drops a stream's bundle explicitly,
+//! and session teardown calls [`SessionStore::release_session`] so a
+//! dropped session leaves zero bundles and zero bytes behind.
 //!
 //! [`restore`]: SessionStore::restore
+//! [`BlobSink`]: crate::coordinator::storage::BlobSink
 
+use crate::coordinator::storage::{ct_bytes, Bundle, CtStore, DEFAULT_STORAGE_BUDGET};
 use crate::error::FheError;
 use crate::tfhe::ops::CtInt;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 
 /// Default cap on live cache bundles per session.
 pub const DEFAULT_CACHE_CAP: usize = 8;
@@ -35,65 +44,44 @@ pub struct CacheEntry {
     pub cached_len: usize,
 }
 
-/// Store state behind one lock: the stream map plus the gauges derived
-/// from it. Counts and bytes are maintained *incrementally* on every
-/// mutation — `put`/`take`/`restore`/`release` each adjust them by the
-/// touched entry only — so the per-session cap check and the
-/// `live_bytes` gauge are O(1) instead of rescanning every live bundle
-/// under the lock.
-struct Inner {
-    streams: HashMap<(u64, u64), CacheEntry>,
-    /// Live-bundle count per session (entries removed at zero, so the
-    /// map never outgrows the set of sessions with live state).
-    per_session: HashMap<u64, usize>,
-    /// Running ciphertext-byte total across all live bundles.
-    bytes: u64,
-}
-
-impl Inner {
-    /// Account one bundle entering the store.
-    fn credit(&mut self, session: u64, entry: &CacheEntry) {
-        *self.per_session.entry(session).or_insert(0) += 1;
-        self.bytes += entry_bytes(entry);
-    }
-
-    /// Account one bundle leaving the store.
-    fn debit(&mut self, session: u64, entry: &CacheEntry) {
-        let n = self.per_session.get_mut(&session).expect("session has live bundles");
-        *n -= 1;
-        if *n == 0 {
-            self.per_session.remove(&session);
-        }
-        self.bytes -= entry_bytes(entry);
-    }
-}
-
-/// The `(session, stream)`-keyed cache-bundle store (see module docs).
+/// The `(session, stream)`-keyed cache-bundle store (see module docs) —
+/// a per-session-capped facade over the `"cache"` storage tier.
 pub struct SessionStore {
-    inner: Mutex<Inner>,
+    store: Arc<CtStore>,
     max_per_session: AtomicUsize,
 }
 
 impl SessionStore {
+    /// A store over a private in-memory tier with the default budget
+    /// (never spills in practice — tests and small deployments).
     pub fn new(max_per_session: usize) -> Self {
-        SessionStore {
-            inner: Mutex::new(Inner {
-                streams: HashMap::new(),
-                per_session: HashMap::new(),
-                bytes: 0,
-            }),
-            max_per_session: AtomicUsize::new(max_per_session),
-        }
+        Self::with_store(
+            max_per_session,
+            Arc::new(CtStore::with_memory("cache", DEFAULT_STORAGE_BUDGET)),
+        )
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
-        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    /// A store over an externally wired tier (shared sink, shared
+    /// metrics) — how the coordinator builds it.
+    pub fn with_store(max_per_session: usize, store: Arc<CtStore>) -> Self {
+        SessionStore { store, max_per_session: AtomicUsize::new(max_per_session) }
+    }
+
+    /// The underlying spill tier (tests reach through for eviction
+    /// counters and budget control).
+    pub fn storage(&self) -> &Arc<CtStore> {
+        &self.store
     }
 
     /// Adjust the per-session live-bundle cap (operational knob; tests
     /// use it to drive overflow cheaply).
     pub fn set_cache_cap(&self, cap: usize) {
         self.max_per_session.store(cap, Ordering::Relaxed);
+    }
+
+    /// Adjust the hot-tier byte budget (0 = spill every bundle).
+    pub fn set_storage_budget(&self, bytes: u64) {
+        self.store.set_budget(bytes);
     }
 
     /// Deposit a stream's bundle. Replacing the same stream's bundle is
@@ -107,62 +95,73 @@ impl SessionStore {
         cts: Vec<CtInt>,
         cached_len: usize,
     ) -> Result<(), FheError> {
-        let mut inner = self.lock();
-        let key = (session, stream);
-        if !inner.streams.contains_key(&key) {
-            let live = inner.per_session.get(&session).copied().unwrap_or(0);
-            let cap = self.max_per_session.load(Ordering::Relaxed);
-            if live >= cap {
-                return Err(FheError::CacheOverflow(format!(
-                    "session {session} already holds {live} live cache bundles (cap {cap}); \
-                     release_cache a stream before opening another"
-                )));
-            }
-        }
-        let entry = CacheEntry { cts, cached_len };
-        inner.credit(session, &entry);
-        if let Some(old) = inner.streams.insert(key, entry) {
-            inner.debit(session, &old);
-        }
-        Ok(())
+        let cap = self.max_per_session.load(Ordering::Relaxed);
+        self.store.try_insert(
+            session,
+            stream,
+            Bundle { cts, meta: cached_len as u64 },
+            cap,
+            "cache bundles",
+            "release_cache a stream before opening another",
+        )
     }
 
     /// Consume a stream's bundle (by move — the executor reads the
-    /// ciphertexts by reference, so nothing is ever cloned).
+    /// ciphertexts by reference, so nothing is ever cloned). Collapses
+    /// storage-tier failures to `None`; the serving path uses
+    /// [`Self::try_take`] to keep them typed.
     pub fn take(&self, session: u64, stream: u64) -> Option<CacheEntry> {
-        let mut inner = self.lock();
-        let entry = inner.streams.remove(&(session, stream))?;
-        inner.debit(session, &entry);
-        Some(entry)
+        self.try_take(session, stream).ok().flatten()
+    }
+
+    /// Consume a stream's bundle, rehydrating from the sink if it was
+    /// spilled. `Ok(None)` if the stream holds nothing;
+    /// `Err(`[`FheError::Storage`]`)` if it exists but its cold bytes
+    /// are missing or corrupt.
+    pub fn try_take(&self, session: u64, stream: u64) -> Result<Option<CacheEntry>, FheError> {
+        Ok(self
+            .store
+            .try_take(session, stream)?
+            .map(|b| CacheEntry { cached_len: b.meta as usize, cts: b.cts }))
     }
 
     /// Roll a consumed bundle back after an abandoned step (deadline,
     /// fault, panic) so a resubmit is exact. Never cap-checked: the
     /// entry was live moments ago and rollback must not fail.
     pub fn restore(&self, session: u64, stream: u64, entry: CacheEntry) {
-        let mut inner = self.lock();
-        inner.credit(session, &entry);
-        if let Some(old) = inner.streams.insert((session, stream), entry) {
-            inner.debit(session, &old);
-        }
+        self.store.insert(
+            session,
+            stream,
+            Bundle { cts: entry.cts, meta: entry.cached_len as u64 },
+        );
     }
 
     /// Drop a stream's bundle explicitly (the `release_cache` wire op);
     /// `true` if one existed.
     pub fn release(&self, session: u64, stream: u64) -> bool {
-        self.take(session, stream).is_some()
+        self.store.release(session, stream)
     }
 
-    /// Live bundles across all sessions (the `cache_blobs_live` gauge).
+    /// Drop *all* of a session's bundles — hot, spilled, and sink bytes
+    /// — plus its per-session counter entry. Called from session
+    /// teardown (`Coordinator::drop_session`); returns how many streams
+    /// were released.
+    pub fn release_session(&self, session: u64) -> usize {
+        self.store.release_session(session)
+    }
+
+    /// Live bundles across all sessions, hot + spilled (the
+    /// `cache_blobs_live` gauge).
     pub fn live_blobs(&self) -> u64 {
-        self.lock().streams.len() as u64
+        self.store.live_blobs()
     }
 
     /// Approximate ciphertext bytes held live (the `cache_bytes` gauge):
-    /// LWE mask + body words per cached ciphertext. O(1) — read off the
-    /// running total, not recomputed by walking the store.
+    /// LWE mask + body words per cached ciphertext, counted identically
+    /// for hot and spilled bundles. O(1) — read off the tier's running
+    /// totals, not recomputed by walking the store.
     pub fn live_bytes(&self) -> u64 {
-        self.lock().bytes
+        self.store.live_bytes()
     }
 }
 
@@ -172,24 +171,15 @@ impl Default for SessionStore {
     }
 }
 
-/// Heap bytes of one LWE ciphertext (mask words + body word).
-fn ct_bytes(ct: &CtInt) -> u64 {
-    ((ct.ct.mask.len() + 1) * std::mem::size_of::<u64>()) as u64
-}
-
-/// Heap bytes of one cache bundle — the unit the running byte gauge is
-/// credited/debited in.
-fn entry_bytes(entry: &CacheEntry) -> u64 {
-    entry.cts.iter().map(ct_bytes).sum()
-}
-
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
     use crate::tfhe::bootstrap::ClientKey;
     use crate::tfhe::ops::FheContext;
     use crate::tfhe::params::TfheParams;
     use crate::util::prng::Xoshiro256;
+    use std::collections::HashMap;
 
     fn some_cts(n: usize) -> (FheContext, Vec<CtInt>) {
         let mut rng = Xoshiro256::new(5);
@@ -237,6 +227,42 @@ mod tests {
         assert!(store.put(1, 3, Vec::new(), 0).is_ok());
     }
 
+    #[test]
+    fn release_session_drops_every_stream_and_all_bytes() {
+        let (_ctx, cts) = some_cts(4);
+        let mut it = cts.into_iter();
+        let mut two = || -> Vec<CtInt> { it.by_ref().take(2).collect() };
+        let store = SessionStore::new(4);
+        store.put(1, 1, two(), 1).unwrap();
+        store.put(1, 2, two(), 2).unwrap();
+        store.put(2, 1, Vec::new(), 0).unwrap();
+        assert_eq!(store.release_session(1), 2);
+        assert_eq!(store.live_blobs(), 1, "other sessions untouched");
+        assert!(store.take(1, 1).is_none());
+        assert!(store.take(1, 2).is_none());
+        assert_eq!(store.release_session(1), 0, "idempotent");
+        // The freed cap is actually reusable.
+        store.set_cache_cap(1);
+        assert!(store.put(1, 9, Vec::new(), 0).is_ok());
+    }
+
+    #[test]
+    fn spilled_streams_rehydrate_bit_identically_through_the_facade() {
+        let (_ctx, cts) = some_cts(3);
+        let originals: Vec<_> = cts.iter().map(|c| c.ct.clone()).collect();
+        let store = SessionStore::new(4);
+        store.set_storage_budget(0);
+        store.put(1, 7, cts, 3).unwrap();
+        assert_eq!(store.storage().spilled_blobs(), 1, "zero budget spills the bundle");
+        assert_eq!(store.live_blobs(), 1, "spilled is still live");
+        let entry = store.try_take(1, 7).unwrap().expect("rehydrates");
+        assert_eq!(entry.cached_len, 3);
+        for (a, b) in entry.cts.iter().zip(&originals) {
+            assert_eq!(&a.ct, b, "bit-identical after spill + rehydrate");
+        }
+        assert_eq!(store.storage().metrics().rehydrations.load(Ordering::Relaxed), 1);
+    }
+
     /// Pins the incremental gauge accounting: after every randomized
     /// `put`/`take`/`restore`/`release`, the store's O(1) `live_blobs`
     /// and `live_bytes` gauges must equal a full recompute over a shadow
@@ -248,55 +274,65 @@ mod tests {
         use crate::util::prng::Rng64;
         let (_ctx, pool) = some_cts(3);
         let bundle = |n: usize| -> Vec<CtInt> { pool.iter().take(n).cloned().collect() };
-        let store = SessionStore::new(2);
-        // Shadow of the live entries: key -> ciphertext count, recomputed
-        // from scratch after every operation.
-        let mut shadow: HashMap<(u64, u64), usize> = HashMap::new();
         let per_ct = ct_bytes(&pool[0]);
-        let mut rng = Xoshiro256::new(42);
-        let mut taken: Vec<(u64, u64, CacheEntry)> = Vec::new();
-        let mut saw_live = false;
-        for _ in 0..400 {
-            let session = rng.next_u64() % 3;
-            let stream = rng.next_u64() % 4;
-            let n = (rng.next_u64() % 4) as usize;
-            match rng.next_u64() % 4 {
-                0 => {
-                    let live = shadow.keys().filter(|(s, _)| *s == session).count();
-                    let opens = !shadow.contains_key(&(session, stream));
-                    let res = store.put(session, stream, bundle(n), n);
-                    if opens && live >= 2 {
-                        assert_eq!(res.unwrap_err().code(), "cache_overflow");
-                    } else {
-                        res.expect("under cap");
-                        shadow.insert((session, stream), n);
+        // Exercise the same lifecycle twice: all-hot (default budget)
+        // and all-spilled (zero budget). The gauges must not notice.
+        for budget in [DEFAULT_STORAGE_BUDGET, 0] {
+            let store = SessionStore::new(2);
+            store.set_storage_budget(budget);
+            // Shadow of the live entries: key -> ciphertext count,
+            // recomputed from scratch after every operation.
+            let mut shadow: HashMap<(u64, u64), usize> = HashMap::new();
+            let mut rng = Xoshiro256::new(42);
+            let mut taken: Vec<(u64, u64, CacheEntry)> = Vec::new();
+            let mut saw_live = false;
+            for _ in 0..400 {
+                let session = rng.next_u64() % 3;
+                let stream = rng.next_u64() % 4;
+                let n = (rng.next_u64() % 4) as usize;
+                match rng.next_u64() % 4 {
+                    0 => {
+                        let live = shadow.keys().filter(|(s, _)| *s == session).count();
+                        let opens = !shadow.contains_key(&(session, stream));
+                        let res = store.put(session, stream, bundle(n), n);
+                        if opens && live >= 2 {
+                            assert_eq!(res.unwrap_err().code(), "cache_overflow");
+                        } else {
+                            res.expect("under cap");
+                            shadow.insert((session, stream), n);
+                        }
+                    }
+                    1 => {
+                        let entry = store.take(session, stream);
+                        assert_eq!(entry.is_some(), shadow.remove(&(session, stream)).is_some());
+                        if let Some(entry) = entry {
+                            taken.push((session, stream, entry));
+                        }
+                    }
+                    2 => {
+                        if let Some((s, t, entry)) = taken.pop() {
+                            shadow.insert((s, t), entry.cts.len());
+                            store.restore(s, t, entry);
+                        }
+                    }
+                    _ => {
+                        assert_eq!(
+                            store.release(session, stream),
+                            shadow.remove(&(session, stream)).is_some()
+                        );
                     }
                 }
-                1 => {
-                    let entry = store.take(session, stream);
-                    assert_eq!(entry.is_some(), shadow.remove(&(session, stream)).is_some());
-                    if let Some(entry) = entry {
-                        taken.push((session, stream, entry));
-                    }
-                }
-                2 => {
-                    if let Some((s, t, entry)) = taken.pop() {
-                        shadow.insert((s, t), entry.cts.len());
-                        store.restore(s, t, entry);
-                    }
-                }
-                _ => {
-                    assert_eq!(
-                        store.release(session, stream),
-                        shadow.remove(&(session, stream)).is_some()
-                    );
-                }
+                assert_eq!(store.live_blobs(), shadow.len() as u64, "budget={budget}");
+                let expect_bytes: u64 = shadow.values().map(|&n| n as u64 * per_ct).sum();
+                assert_eq!(store.live_bytes(), expect_bytes, "budget={budget}");
+                saw_live = saw_live || !shadow.is_empty();
             }
-            assert_eq!(store.live_blobs(), shadow.len() as u64);
-            let expect_bytes: u64 = shadow.values().map(|&n| n as u64 * per_ct).sum();
-            assert_eq!(store.live_bytes(), expect_bytes);
-            saw_live = saw_live || !shadow.is_empty();
+            assert!(saw_live, "lifecycle exercised live state");
+            if budget == 0 {
+                let m = store.storage().metrics();
+                assert!(m.evictions.load(Ordering::Relaxed) > 0, "zero budget forced spills");
+                assert!(m.rehydrations.load(Ordering::Relaxed) > 0, "takes rehydrated");
+            }
         }
-        assert!(saw_live, "lifecycle exercised live state");
     }
 }

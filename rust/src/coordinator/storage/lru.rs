@@ -1,0 +1,105 @@
+//! Recency index for the spill tier (S9): a logical-clock LRU over
+//! arbitrary keys. Two maps — key→tick and tick→key — give O(log n)
+//! touch/evict with no unsafe linked-list plumbing, in the spirit of the
+//! `cache/lru.rs` exemplar named in the ROADMAP. Ticks come from a
+//! monotonically increasing `u64` (never reused, so a billion touches
+//! per second would take half a millennium to wrap).
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+
+/// LRU recency index. Tracks *order only* — the owner keeps the values
+/// and byte accounting; this keeps the index reusable for both the
+/// decode-cache tier and the session blob tier.
+pub struct LruIndex<K> {
+    tick_of: HashMap<K, u64>,
+    by_tick: BTreeMap<u64, K>,
+    clock: u64,
+}
+
+impl<K: Eq + Hash + Clone> Default for LruIndex<K> {
+    fn default() -> Self {
+        LruIndex { tick_of: HashMap::new(), by_tick: BTreeMap::new(), clock: 0 }
+    }
+}
+
+impl<K: Eq + Hash + Clone> LruIndex<K> {
+    pub fn new() -> Self {
+        LruIndex::default()
+    }
+
+    /// Insert `key` as most-recent (or refresh it if already present).
+    pub fn touch(&mut self, key: K) {
+        if let Some(old) = self.tick_of.get(&key) {
+            self.by_tick.remove(old);
+        }
+        self.clock += 1;
+        self.tick_of.insert(key.clone(), self.clock);
+        self.by_tick.insert(self.clock, key);
+    }
+
+    /// Forget `key`; `true` if it was tracked.
+    pub fn remove(&mut self, key: &K) -> bool {
+        match self.tick_of.remove(key) {
+            Some(tick) => {
+                self.by_tick.remove(&tick);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Pop the least-recently-touched key (eviction candidate).
+    pub fn pop_oldest(&mut self) -> Option<K> {
+        let (&tick, _) = self.by_tick.iter().next()?;
+        let key = self.by_tick.remove(&tick)?;
+        self.tick_of.remove(&key);
+        Some(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tick_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tick_of.is_empty()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eviction_order_follows_recency() {
+        let mut lru = LruIndex::new();
+        for k in [1u64, 2, 3] {
+            lru.touch(k);
+        }
+        assert_eq!(lru.len(), 3);
+        // Re-touching 1 makes 2 the oldest.
+        lru.touch(1);
+        assert_eq!(lru.pop_oldest(), Some(2));
+        assert_eq!(lru.pop_oldest(), Some(3));
+        assert_eq!(lru.pop_oldest(), Some(1));
+        assert_eq!(lru.pop_oldest(), None);
+        assert!(lru.is_empty());
+    }
+
+    #[test]
+    fn remove_and_retouch_are_consistent() {
+        let mut lru = LruIndex::new();
+        lru.touch((1u64, 7u64));
+        lru.touch((2, 8));
+        assert!(lru.remove(&(1, 7)));
+        assert!(!lru.remove(&(1, 7)), "second remove is false");
+        assert_eq!(lru.len(), 1);
+        // Double-touch keeps exactly one entry per key.
+        lru.touch((2, 8));
+        lru.touch((2, 8));
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.pop_oldest(), Some((2, 8)));
+        assert!(lru.is_empty());
+    }
+}

@@ -1,0 +1,17 @@
+//! Pluggable ciphertext/key storage tier (S9): blob sinks
+//! ([`BlobSink`]: memory, disk, object-store stub), an LRU recency
+//! index, and the byte-budgeted spill tier ([`CtStore`]) the
+//! coordinator's two stores — `keymgr::Session` result blobs and the
+//! decode `SessionStore` — are refactored onto. Serialization is the
+//! alloc-free word codec in `tfhe::codec`; see rust/DESIGN.md §9b for
+//! the layout and the teardown contract.
+
+pub mod lru;
+pub mod sink;
+pub mod tier;
+
+pub use lru::LruIndex;
+pub use sink::{BlobSink, DiskSink, MemorySink, ObjectStoreSink};
+pub use tier::{Bundle, CtStore, DEFAULT_STORAGE_BUDGET};
+
+pub(crate) use tier::ct_bytes;

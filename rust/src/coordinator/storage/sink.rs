@@ -1,0 +1,244 @@
+//! Blob sinks (S9): the pluggable persistence seam under the LRU spill
+//! tier. A sink is a flat key→bytes store — it knows nothing about
+//! ciphertexts, sessions, or the codec; the tier above owns layout and
+//! accounting, the sink owns durability.
+//!
+//! Keys follow the grammar `"{namespace}/{session}/{id}"` (e.g.
+//! `"cache/3/7"`, `"blob/3/12"`, `"key/3"`). [`DiskSink`] flattens them
+//! to single path components, so the grammar's alphanumeric segments
+//! guarantee collision-freedom on disk.
+
+use crate::error::FheError;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// A flat blob store the spill tier writes cold bundles into. All
+/// methods are infallible-by-absence: `get` on a missing key is
+/// `Ok(None)`, `delete` on a missing key is `Ok(false)` — only real I/O
+/// or backend failures surface as [`FheError::Storage`].
+pub trait BlobSink: Send + Sync {
+    /// Store `bytes` under `key`, replacing any previous value.
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), FheError>;
+    /// Fetch the blob under `key`; `None` if absent.
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, FheError>;
+    /// Remove the blob under `key`; `true` if one existed.
+    fn delete(&self, key: &str) -> Result<bool, FheError>;
+    /// Number of blobs currently held.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// In-process sink: a mutexed map. The default backend — spilling to it
+/// still bounds the *hot* tier (decoded ciphertexts cost ~8x their
+/// encoded form once mask `Vec`s and `CtInt` overhead are live) and it
+/// is the substrate the [`ObjectStoreSink`] stub delegates to.
+#[derive(Default)]
+pub struct MemorySink {
+    blobs: Mutex<HashMap<String, Vec<u8>>>,
+}
+
+impl MemorySink {
+    pub fn new() -> Self {
+        MemorySink::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, Vec<u8>>> {
+        self.blobs.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl BlobSink for MemorySink {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), FheError> {
+        self.lock().insert(key.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, FheError> {
+        Ok(self.lock().get(key).cloned())
+    }
+
+    fn delete(&self, key: &str) -> Result<bool, FheError> {
+        Ok(self.lock().remove(key).is_some())
+    }
+
+    fn len(&self) -> usize {
+        self.lock().len()
+    }
+}
+
+/// Filesystem sink: one file per blob under a root directory. Keys are
+/// sanitized to a single path component (every non-alphanumeric byte
+/// becomes `_`), which is collision-free under the tier's key grammar
+/// and keeps the sink immune to path traversal in hostile keys.
+pub struct DiskSink {
+    root: PathBuf,
+}
+
+impl DiskSink {
+    /// Open (creating if needed) a sink rooted at `root`.
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self, FheError> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .map_err(|e| FheError::Storage(format!("create sink dir {}: {e}", root.display())))?;
+        Ok(DiskSink { root })
+    }
+
+    fn path_of(&self, key: &str) -> PathBuf {
+        let flat: String =
+            key.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect();
+        self.root.join(format!("{flat}.blob"))
+    }
+}
+
+impl BlobSink for DiskSink {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), FheError> {
+        let path = self.path_of(key);
+        std::fs::write(&path, bytes)
+            .map_err(|e| FheError::Storage(format!("write {}: {e}", path.display())))
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, FheError> {
+        let path = self.path_of(key);
+        match std::fs::read(&path) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(FheError::Storage(format!("read {}: {e}", path.display()))),
+        }
+    }
+
+    fn delete(&self, key: &str) -> Result<bool, FheError> {
+        let path = self.path_of(key);
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(FheError::Storage(format!("delete {}: {e}", path.display()))),
+        }
+    }
+
+    fn len(&self) -> usize {
+        std::fs::read_dir(&self.root)
+            .map(|d| {
+                d.filter_map(Result::ok)
+                    .filter(|e| e.path().extension().is_some_and(|x| x == "blob"))
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// Object-store sink **stub**: the S3/GCS-shaped backend slot. The
+/// offline build vendors no HTTP stack, so this delegates to an
+/// in-process [`MemorySink`] while pinning the trait surface a real
+/// implementation must satisfy (same key grammar, same absent-key
+/// semantics). `bucket` is carried so wiring code exercises the real
+/// configuration shape.
+pub struct ObjectStoreSink {
+    bucket: String,
+    inner: MemorySink,
+}
+
+impl ObjectStoreSink {
+    pub fn new(bucket: impl Into<String>) -> Self {
+        ObjectStoreSink { bucket: bucket.into(), inner: MemorySink::new() }
+    }
+
+    /// The configured bucket name (diagnostics only in the stub).
+    pub fn bucket(&self) -> &str {
+        &self.bucket
+    }
+}
+
+impl BlobSink for ObjectStoreSink {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), FheError> {
+        self.inner.put(key, bytes)
+    }
+
+    fn get(&self, key: &str) -> Result<Option<Vec<u8>>, FheError> {
+        self.inner.get(key)
+    }
+
+    fn delete(&self, key: &str) -> Result<bool, FheError> {
+        self.inner.delete(key)
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+}
+
+/// A unique scratch directory per test invocation (no tempfile crate in
+/// the offline build). Shared by the tier tests.
+#[cfg(test)]
+pub(crate) fn scratch_dir(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("inhibitor-sink-{tag}-{}-{n}", std::process::id()))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    fn exercise(sink: &dyn BlobSink) {
+        assert!(sink.is_empty());
+        assert_eq!(sink.get("cache/1/2").unwrap(), None);
+        assert!(!sink.delete("cache/1/2").unwrap());
+        sink.put("cache/1/2", b"alpha").unwrap();
+        sink.put("blob/1/2", b"beta").unwrap();
+        assert_eq!(sink.len(), 2);
+        assert_eq!(sink.get("cache/1/2").unwrap().as_deref(), Some(&b"alpha"[..]));
+        // Replace is idempotent on count.
+        sink.put("cache/1/2", b"gamma").unwrap();
+        assert_eq!(sink.len(), 2);
+        assert_eq!(sink.get("cache/1/2").unwrap().as_deref(), Some(&b"gamma"[..]));
+        assert!(sink.delete("cache/1/2").unwrap());
+        assert!(!sink.delete("cache/1/2").unwrap());
+        assert_eq!(sink.len(), 1);
+        assert!(sink.delete("blob/1/2").unwrap());
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn memory_sink_contract() {
+        exercise(&MemorySink::new());
+    }
+
+    #[test]
+    fn object_store_stub_contract() {
+        let sink = ObjectStoreSink::new("inhibitor-sessions");
+        assert_eq!(sink.bucket(), "inhibitor-sessions");
+        exercise(&sink);
+    }
+
+    #[test]
+    fn disk_sink_contract_and_key_sanitization() {
+        let dir = scratch_dir("contract");
+        let sink = DiskSink::new(&dir).unwrap();
+        exercise(&sink);
+        // Hostile keys cannot escape the root.
+        sink.put("../../etc/passwd", b"nope").unwrap();
+        let stored = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(stored, 1, "traversal key flattened into the root");
+        assert_eq!(sink.get("../../etc/passwd").unwrap().as_deref(), Some(&b"nope"[..]));
+        assert!(sink.delete("../../etc/passwd").unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disk_sink_persists_across_reopen() {
+        let dir = scratch_dir("reopen");
+        {
+            let sink = DiskSink::new(&dir).unwrap();
+            sink.put("key/7", &[1, 2, 3]).unwrap();
+        }
+        let sink = DiskSink::new(&dir).unwrap();
+        assert_eq!(sink.get("key/7").unwrap(), Some(vec![1, 2, 3]));
+        assert_eq!(sink.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,488 @@
+//! The LRU spill tier (S9): a byte-budgeted hot cache of decoded
+//! ciphertext bundles in front of a [`BlobSink`]. Bundles over budget
+//! are encoded (`tfhe::codec`) and spilled coldest-first; a `take` of a
+//! spilled bundle rehydrates it transparently — and bit-identically,
+//! which is the property the differential tests pin (PBS is
+//! deterministic, so a decode stream served through disk must equal one
+//! served all-in-memory).
+//!
+//! One [`CtStore`] instance backs each of the two coordinator stores
+//! (`keymgr::Session` result blobs under the `"blob"` namespace, the
+//! decode `SessionStore` under `"cache"`), typically sharing one sink —
+//! eviction, rehydration, and session teardown all flow through this
+//! single accounting path, so the liveness gauges cannot drift from the
+//! store (the pre-S9 leak class).
+//!
+//! Accounting is *logical*: `live_bytes` counts decoded ciphertext bytes
+//! (mask + body words) whether a bundle is hot or spilled, so the
+//! `cache_bytes` gauge reads the same for a spilled and an in-memory
+//! run. `live_blobs` likewise counts hot + spilled. Sink I/O happens
+//! under the tier lock — the spill path trades a wider critical section
+//! for crash-consistent accounting (a bundle is never half-moved).
+
+use super::lru::LruIndex;
+use super::sink::{BlobSink, MemorySink};
+use crate::coordinator::metrics::StorageMetrics;
+use crate::error::FheError;
+use crate::tfhe::codec::{decode_bundle, CtCodec};
+use crate::tfhe::ops::CtInt;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default hot-tier byte budget: 256 MiB of decoded ciphertext. Large
+/// enough that unit tests and single-session serving never spill unless
+/// a test (or `FHE_STORAGE_BUDGET`) forces it.
+pub const DEFAULT_STORAGE_BUDGET: u64 = 256 * 1024 * 1024;
+
+/// A stored unit: a ciphertext bundle plus one caller-owned metadata
+/// word (the decode cache keeps its `cached_len` here; result blobs
+/// leave it zero).
+pub struct Bundle {
+    pub cts: Vec<CtInt>,
+    pub meta: u64,
+}
+
+/// Tier state behind one lock. Gauges are maintained incrementally on
+/// every mutation (same discipline the pre-S9 `SessionStore` pinned with
+/// its randomized shadow test, which now runs against this path).
+struct TierInner {
+    hot: HashMap<(u64, u64), Bundle>,
+    lru: LruIndex<(u64, u64)>,
+    /// Spilled keys → their *logical* (decoded) byte size.
+    spilled: HashMap<(u64, u64), u64>,
+    hot_bytes: u64,
+    spilled_bytes: u64,
+    /// Live entries (hot + spilled) per session; removed at zero.
+    per_session: HashMap<u64, usize>,
+    /// Reusable encoder — spilling allocates nothing once warm.
+    codec: CtCodec,
+}
+
+impl TierInner {
+    fn inc_session(&mut self, session: u64) {
+        *self.per_session.entry(session).or_insert(0) += 1;
+    }
+
+    fn dec_session(&mut self, session: u64) {
+        if let Some(n) = self.per_session.get_mut(&session) {
+            *n -= 1;
+            if *n == 0 {
+                self.per_session.remove(&session);
+            }
+        }
+    }
+}
+
+/// Byte-budgeted LRU store of ciphertext bundles over a [`BlobSink`]
+/// (see module docs).
+pub struct CtStore {
+    /// Key-grammar prefix: `"{namespace}/{session}/{id}"`.
+    namespace: &'static str,
+    sink: Arc<dyn BlobSink>,
+    metrics: Arc<StorageMetrics>,
+    budget_bytes: AtomicU64,
+    inner: Mutex<TierInner>,
+}
+
+impl CtStore {
+    pub fn new(
+        namespace: &'static str,
+        sink: Arc<dyn BlobSink>,
+        metrics: Arc<StorageMetrics>,
+        budget_bytes: u64,
+    ) -> Self {
+        CtStore {
+            namespace,
+            sink,
+            metrics,
+            budget_bytes: AtomicU64::new(budget_bytes),
+            inner: Mutex::new(TierInner {
+                hot: HashMap::new(),
+                lru: LruIndex::new(),
+                spilled: HashMap::new(),
+                hot_bytes: 0,
+                spilled_bytes: 0,
+                per_session: HashMap::new(),
+                codec: CtCodec::new(),
+            }),
+        }
+    }
+
+    /// Convenience: a memory-sink tier with private metrics (the default
+    /// wiring when no disk root is configured).
+    pub fn with_memory(namespace: &'static str, budget_bytes: u64) -> Self {
+        CtStore::new(
+            namespace,
+            Arc::new(MemorySink::new()),
+            Arc::new(StorageMetrics::default()),
+            budget_bytes,
+        )
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, TierInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn skey(&self, session: u64, id: u64) -> String {
+        format!("{}/{session}/{id}", self.namespace)
+    }
+
+    /// The backing sink (the key-manager parks serialized server keys in
+    /// it directly, outside the bundle namespaces).
+    pub fn sink(&self) -> &Arc<dyn BlobSink> {
+        &self.sink
+    }
+
+    pub fn metrics(&self) -> &Arc<StorageMetrics> {
+        &self.metrics
+    }
+
+    /// Adjust the hot-tier byte budget; the next insert spills down to
+    /// it. `0` forces eviction on every insert (the CI tiny-budget leg).
+    pub fn set_budget(&self, bytes: u64) {
+        self.budget_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Deposit a bundle unconditionally (rollback/`restore` path — the
+    /// entry was live moments ago and rollback must not fail).
+    pub fn insert(&self, session: u64, id: u64, bundle: Bundle) {
+        let mut inner = self.lock();
+        self.insert_locked(&mut inner, session, id, bundle);
+    }
+
+    /// Deposit a bundle, enforcing a per-session live-entry cap
+    /// atomically under the tier lock. Replacing a live key is always
+    /// allowed; opening a *new* key past `cap` fails with
+    /// [`FheError::CacheOverflow`] (the bundle is dropped — the caller
+    /// owns rollback of anything it consumed first). `what`/`hint`
+    /// flavor the error for the two namespaces.
+    pub fn try_insert(
+        &self,
+        session: u64,
+        id: u64,
+        bundle: Bundle,
+        cap: usize,
+        what: &str,
+        hint: &str,
+    ) -> Result<(), FheError> {
+        let mut inner = self.lock();
+        let key = (session, id);
+        if !inner.hot.contains_key(&key) && !inner.spilled.contains_key(&key) {
+            let live = inner.per_session.get(&session).copied().unwrap_or(0);
+            if live >= cap {
+                return Err(FheError::CacheOverflow(format!(
+                    "session {session} already holds {live} live {what} (cap {cap}); {hint}"
+                )));
+            }
+        }
+        self.insert_locked(&mut inner, session, id, bundle);
+        Ok(())
+    }
+
+    fn insert_locked(&self, inner: &mut TierInner, session: u64, id: u64, bundle: Bundle) {
+        let key = (session, id);
+        let bytes = bundle_bytes(&bundle);
+        // Drop any previous incarnation of this key (replace semantics).
+        if let Some(old) = inner.hot.remove(&key) {
+            inner.lru.remove(&key);
+            inner.hot_bytes -= bundle_bytes(&old);
+            inner.dec_session(session);
+        } else if let Some(old_bytes) = inner.spilled.remove(&key) {
+            inner.spilled_bytes -= old_bytes;
+            inner.dec_session(session);
+            // Best-effort: a stale sink blob under a replaced key is
+            // garbage, not state.
+            let _ = self.sink.delete(&self.skey(session, id));
+        }
+        inner.hot.insert(key, bundle);
+        inner.lru.touch(key);
+        inner.hot_bytes += bytes;
+        inner.inc_session(session);
+        self.spill_over_budget(inner);
+    }
+
+    /// Spill coldest-first until the hot tier fits the budget. A sink
+    /// failure keeps the victim hot (state is never dropped to meet a
+    /// budget) and stops the pass.
+    fn spill_over_budget(&self, inner: &mut TierInner) {
+        let budget = self.budget_bytes.load(Ordering::Relaxed);
+        while inner.hot_bytes > budget {
+            let Some(key) = inner.lru.pop_oldest() else { break };
+            let Some(bundle) = inner.hot.remove(&key) else { break };
+            let bytes = bundle_bytes(&bundle);
+            let encoded = inner.codec.encode_bundle(&bundle.cts, bundle.meta);
+            match self.sink.put(&self.skey(key.0, key.1), encoded) {
+                Ok(()) => {
+                    inner.hot_bytes -= bytes;
+                    inner.spilled.insert(key, bytes);
+                    inner.spilled_bytes += bytes;
+                    self.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    let hot_again = Bundle { cts: bundle.cts, meta: bundle.meta };
+                    inner.hot.insert(key, hot_again);
+                    inner.lru.touch(key);
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Consume an entry by move, rehydrating transparently if it was
+    /// spilled. `Ok(None)` if the key holds nothing; `Err(Storage)` if
+    /// the entry exists but its spilled bytes are missing or corrupt (the
+    /// spilled record is kept, so a sink that recovers can still serve a
+    /// retry).
+    pub fn try_take(&self, session: u64, id: u64) -> Result<Option<Bundle>, FheError> {
+        let mut inner = self.lock();
+        let key = (session, id);
+        if let Some(bundle) = inner.hot.remove(&key) {
+            inner.lru.remove(&key);
+            inner.hot_bytes -= bundle_bytes(&bundle);
+            inner.dec_session(session);
+            self.metrics.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Some(bundle));
+        }
+        let Some(&bytes) = inner.spilled.get(&key) else {
+            return Ok(None);
+        };
+        self.metrics.misses.fetch_add(1, Ordering::Relaxed);
+        let skey = self.skey(session, id);
+        let raw = self
+            .sink
+            .get(&skey)?
+            .ok_or_else(|| FheError::Storage(format!("spilled blob {skey} missing from sink")))?;
+        let (cts, meta) = decode_bundle(&raw)
+            .map_err(|e| FheError::Storage(format!("corrupt spilled blob {skey}: {e}")))?;
+        inner.spilled.remove(&key);
+        inner.spilled_bytes -= bytes;
+        inner.dec_session(session);
+        let _ = self.sink.delete(&skey);
+        self.metrics.rehydrations.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(Bundle { cts, meta }))
+    }
+
+    /// Whether the key holds a live entry (hot or spilled).
+    pub fn contains(&self, session: u64, id: u64) -> bool {
+        let inner = self.lock();
+        let key = (session, id);
+        inner.hot.contains_key(&key) || inner.spilled.contains_key(&key)
+    }
+
+    /// Drop one entry; `true` if it existed (either tier).
+    pub fn release(&self, session: u64, id: u64) -> bool {
+        let mut inner = self.lock();
+        let key = (session, id);
+        if let Some(bundle) = inner.hot.remove(&key) {
+            inner.lru.remove(&key);
+            inner.hot_bytes -= bundle_bytes(&bundle);
+            inner.dec_session(session);
+            true
+        } else if let Some(bytes) = inner.spilled.remove(&key) {
+            inner.spilled_bytes -= bytes;
+            inner.dec_session(session);
+            let _ = self.sink.delete(&self.skey(session, id));
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drop *every* entry a session holds — hot, spilled, and their sink
+    /// bytes — and its per-session counter. The teardown path
+    /// (`drop_session`) calls this so a dropped session leaves zero
+    /// bundles and zero bytes behind. Returns the number of entries
+    /// released.
+    pub fn release_session(&self, session: u64) -> usize {
+        let mut inner = self.lock();
+        let hot_keys: Vec<(u64, u64)> =
+            inner.hot.keys().filter(|k| k.0 == session).copied().collect();
+        for key in &hot_keys {
+            if let Some(bundle) = inner.hot.remove(key) {
+                inner.lru.remove(key);
+                inner.hot_bytes -= bundle_bytes(&bundle);
+            }
+        }
+        let cold_keys: Vec<(u64, u64)> =
+            inner.spilled.keys().filter(|k| k.0 == session).copied().collect();
+        for key in &cold_keys {
+            if let Some(bytes) = inner.spilled.remove(key) {
+                inner.spilled_bytes -= bytes;
+                let _ = self.sink.delete(&self.skey(key.0, key.1));
+            }
+        }
+        inner.per_session.remove(&session);
+        hot_keys.len() + cold_keys.len()
+    }
+
+    /// Live entries a session holds (hot + spilled).
+    pub fn session_live(&self, session: u64) -> usize {
+        self.lock().per_session.get(&session).copied().unwrap_or(0)
+    }
+
+    /// Live entries across all sessions, hot + spilled (a spilled bundle
+    /// is still *live* state — it just lives cold).
+    pub fn live_blobs(&self) -> u64 {
+        let inner = self.lock();
+        (inner.hot.len() + inner.spilled.len()) as u64
+    }
+
+    /// Logical ciphertext bytes held live (hot + spilled; see module
+    /// docs for why spilled entries count their decoded size).
+    pub fn live_bytes(&self) -> u64 {
+        let inner = self.lock();
+        inner.hot_bytes + inner.spilled_bytes
+    }
+
+    /// Entries currently spilled cold (observability / tests).
+    pub fn spilled_blobs(&self) -> u64 {
+        self.lock().spilled.len() as u64
+    }
+}
+
+/// Heap bytes of one LWE ciphertext (mask words + body word) — the unit
+/// both gauges and the spill budget are denominated in.
+pub(crate) fn ct_bytes(ct: &CtInt) -> u64 {
+    ((ct.ct.mask.len() + 1) * std::mem::size_of::<u64>()) as u64
+}
+
+fn bundle_bytes(bundle: &Bundle) -> u64 {
+    bundle.cts.iter().map(ct_bytes).sum()
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::super::sink::{scratch_dir, DiskSink};
+    use super::*;
+    use crate::tfhe::bootstrap::ClientKey;
+    use crate::tfhe::ops::FheContext;
+    use crate::tfhe::params::TfheParams;
+    use crate::util::prng::Xoshiro256;
+
+    fn some_cts(n: usize) -> (FheContext, ClientKey, Vec<CtInt>) {
+        let mut rng = Xoshiro256::new(17);
+        let ck = ClientKey::generate(TfheParams::test_small(), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let cts = (0..n).map(|i| ctx.encrypt(i as i64 % 3 - 1, &ck, &mut rng)).collect();
+        (ctx, ck, cts)
+    }
+
+    #[test]
+    fn zero_budget_spills_every_insert_and_rehydrates_bit_identically() {
+        let (_ctx, _ck, cts) = some_cts(3);
+        let originals: Vec<_> = cts.iter().map(|c| c.ct.clone()).collect();
+        let store = CtStore::with_memory("cache", 0);
+        store.insert(7, 1, Bundle { cts, meta: 5 });
+        assert_eq!(store.spilled_blobs(), 1, "zero budget spills immediately");
+        assert_eq!(store.live_blobs(), 1, "spilled is still live");
+        assert!(store.live_bytes() > 0);
+        assert_eq!(store.sink().len(), 1);
+        assert_eq!(store.metrics().evictions.load(Ordering::Relaxed), 1);
+        let bundle = store.try_take(7, 1).unwrap().expect("rehydrates");
+        assert_eq!(bundle.meta, 5);
+        assert_eq!(bundle.cts.len(), 3);
+        for (a, b) in bundle.cts.iter().zip(&originals) {
+            assert_eq!(&a.ct, b, "rehydrated ciphertext is bit-identical");
+        }
+        assert_eq!(store.metrics().rehydrations.load(Ordering::Relaxed), 1);
+        assert_eq!(store.live_blobs(), 0);
+        assert_eq!(store.live_bytes(), 0);
+        assert_eq!(store.sink().len(), 0, "rehydration reclaims sink bytes");
+        assert!(store.try_take(7, 1).unwrap().is_none());
+    }
+
+    #[test]
+    fn lru_spills_coldest_first_and_gauges_span_both_tiers() {
+        let (_ctx, _ck, cts) = some_cts(6);
+        let per = ct_bytes(&cts[0]);
+        let mut it = cts.into_iter();
+        let mut two = || -> Vec<CtInt> { it.by_ref().take(2).collect() };
+        // Budget fits exactly two 2-ct bundles.
+        let store = CtStore::with_memory("cache", 4 * per);
+        store.insert(1, 10, Bundle { cts: two(), meta: 0 });
+        store.insert(1, 11, Bundle { cts: two(), meta: 0 });
+        assert_eq!(store.spilled_blobs(), 0);
+        // Touch 10 (take + restore) so 11 becomes coldest.
+        let b = store.try_take(1, 10).unwrap().unwrap();
+        store.insert(1, 10, b);
+        store.insert(1, 12, Bundle { cts: two(), meta: 0 });
+        assert_eq!(store.spilled_blobs(), 1);
+        assert!(!store.try_take(1, 11).unwrap().unwrap().cts.is_empty(), "11 was the victim");
+        assert_eq!(store.metrics().rehydrations.load(Ordering::Relaxed), 1);
+        // Gauges count hot + spilled uniformly.
+        assert_eq!(store.live_blobs(), 2);
+        assert_eq!(store.live_bytes(), 4 * per);
+        assert_eq!(store.session_live(1), 2);
+    }
+
+    #[test]
+    fn try_insert_cap_is_atomic_and_spill_aware() {
+        let (_ctx, _ck, cts) = some_cts(2);
+        let store = CtStore::with_memory("cache", 0);
+        store.insert(1, 1, Bundle { cts, meta: 0 });
+        assert_eq!(store.spilled_blobs(), 1);
+        // A spilled entry still counts against the cap...
+        let err = store
+            .try_insert(1, 2, Bundle { cts: Vec::new(), meta: 0 }, 1, "cache bundles", "release")
+            .unwrap_err();
+        assert_eq!(err.code(), "cache_overflow", "{err}");
+        // ...and replacing a *spilled* key is not an "open".
+        store
+            .try_insert(1, 1, Bundle { cts: Vec::new(), meta: 9 }, 1, "cache bundles", "release")
+            .unwrap();
+        assert_eq!(store.sink().len(), 0, "replaced spill reclaims stale sink bytes");
+        assert_eq!(store.try_take(1, 1).unwrap().unwrap().meta, 9);
+    }
+
+    #[test]
+    fn release_session_clears_hot_spilled_and_sink_state() {
+        let (_ctx, _ck, cts) = some_cts(4);
+        let per = ct_bytes(&cts[0]);
+        let mut it = cts.into_iter();
+        let mut one = || -> Vec<CtInt> { it.by_ref().take(1).collect() };
+        // Budget of one ciphertext: the older of two bundles spills.
+        let store = CtStore::with_memory("cache", per);
+        store.insert(1, 1, Bundle { cts: one(), meta: 0 });
+        store.insert(1, 2, Bundle { cts: one(), meta: 0 });
+        store.insert(2, 1, Bundle { cts: one(), meta: 0 });
+        assert!(store.spilled_blobs() >= 1);
+        assert_eq!(store.release_session(1), 2);
+        assert_eq!(store.session_live(1), 0);
+        assert!(!store.contains(1, 1));
+        assert!(!store.contains(1, 2));
+        // Session 2's entry survives; no session-1 bytes linger anywhere.
+        assert_eq!(store.live_blobs(), 1);
+        assert!(store.contains(2, 1));
+        assert_eq!(store.release_session(1), 0, "idempotent");
+        store.release_session(2);
+        assert_eq!(store.live_bytes(), 0);
+        assert_eq!(store.sink().len(), 0);
+    }
+
+    #[test]
+    fn disk_sink_round_trip_through_the_tier() {
+        let dir = scratch_dir("tier");
+        let (_ctx, _ck, cts) = some_cts(2);
+        let originals: Vec<_> = cts.iter().map(|c| c.ct.clone()).collect();
+        let store = CtStore::new(
+            "cache",
+            Arc::new(DiskSink::new(&dir).unwrap()),
+            Arc::new(StorageMetrics::default()),
+            0,
+        );
+        store.insert(3, 8, Bundle { cts, meta: 2 });
+        assert_eq!(store.sink().len(), 1, "bundle written to disk");
+        let bundle = store.try_take(3, 8).unwrap().expect("rehydrates from disk");
+        assert_eq!(bundle.meta, 2);
+        for (a, b) in bundle.cts.iter().zip(&originals) {
+            assert_eq!(&a.ct, b);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -45,6 +45,11 @@ pub enum FheError {
     BadRequest(String),
     /// Wire-protocol error: unparseable line, unknown op, invalid UTF-8.
     Protocol(String),
+    /// The storage tier failed: a blob sink I/O error, a corrupt spilled
+    /// blob, or a park/attach precondition violation. Distinct from
+    /// [`FheError::KeyMissing`] — the state *should* exist but could not
+    /// be produced.
+    Storage(String),
     /// Anything that does not fit the taxonomy (kept rare on purpose).
     Internal(String),
 }
@@ -66,6 +71,7 @@ impl FheError {
             FheError::CacheOverflow(_) => "cache_overflow",
             FheError::BadRequest(_) => "bad_request",
             FheError::Protocol(_) => "protocol",
+            FheError::Storage(_) => "storage",
             FheError::Internal(_) => "internal",
         }
     }
@@ -89,6 +95,7 @@ impl FheError {
             "cache_overflow" => FheError::CacheOverflow(m),
             "bad_request" => FheError::BadRequest(m),
             "protocol" => FheError::Protocol(m),
+            "storage" => FheError::Storage(m),
             "internal" => FheError::Internal(m),
             // A newer server's code: label it explicitly so the message
             // says *why* it landed in Internal, and keep the code even
@@ -112,6 +119,7 @@ impl std::fmt::Display for FheError {
             | FheError::CacheOverflow(m)
             | FheError::BadRequest(m)
             | FheError::Protocol(m)
+            | FheError::Storage(m)
             | FheError::Internal(m) => write!(f, "{m}"),
             FheError::Cancelled => write!(f, "request cancelled"),
             FheError::Shutdown => write!(f, "scheduler shutting down"),
@@ -150,6 +158,7 @@ mod tests {
             FheError::CacheOverflow("c".into()),
             FheError::BadRequest("b".into()),
             FheError::Protocol("pr".into()),
+            FheError::Storage("s".into()),
             FheError::Internal("i".into()),
         ];
         for e in cases {

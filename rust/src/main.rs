@@ -49,9 +49,12 @@ fn print_help() {
          \n\
          COMMANDS:\n\
            serve [--addr 127.0.0.1:7474] [--artifacts artifacts] [--mechanism inhibitor]\n\
-                 [--threads N]\n\
+                 [--threads N] [--storage-budget BYTES] [--storage-dir DIR]\n\
                Start the serving coordinator (quant + PJRT engines); --threads\n\
-               sets the PBS worker budget for encrypted engines.\n\
+               sets the PBS worker budget for encrypted engines;\n\
+               --storage-budget caps the hot ciphertext tier in bytes (cold\n\
+               bundles spill to the blob sink; 0 spills everything) and\n\
+               --storage-dir spills to disk under DIR instead of memory.\n\
            infer [--mechanism inhibitor] [--seq 16] [--dim 32] [--deadline-ms N]\n\
                One-shot quantized inference on random features; --deadline-ms\n\
                attaches a request deadline (expired requests fail with the\n\
@@ -87,7 +90,11 @@ fn print_help() {
            FHE_NO_REWRITE  disable the circuit-plan rewrite passes\n\
            FHE_FAULTS    deterministic fault injection for the serving\n\
                          path, e.g. 'panic@pbs:17,deadline@level:2'\n\
-                         (see rust/src/tfhe/faults.rs)"
+                         (see rust/src/tfhe/faults.rs)\n\
+           FHE_STORAGE_BUDGET  hot ciphertext-tier byte budget (LRU spill\n\
+                         past it; 0 spills everything; default 256 MiB)\n\
+           FHE_STORAGE_DIR  spill evicted ciphertext bundles and parked\n\
+                         server keys to this directory instead of memory"
     );
 }
 
@@ -108,6 +115,16 @@ fn cmd_serve(args: &[String]) -> i32 {
     let artifacts = flag(args, "--artifacts", "artifacts");
     let mech_s = flag(args, "--mechanism", "inhibitor");
     let threads: usize = flag(args, "--threads", "0").parse().unwrap_or(0);
+    let storage_budget = flag(args, "--storage-budget", "");
+    let storage_dir = flag(args, "--storage-dir", "");
+    // The serve flags are sugar over the env knobs Coordinator::new
+    // reads, so one storage configuration path serves both.
+    if !storage_budget.is_empty() {
+        std::env::set_var("FHE_STORAGE_BUDGET", &storage_budget);
+    }
+    if !storage_dir.is_empty() {
+        std::env::set_var("FHE_STORAGE_DIR", &storage_dir);
+    }
     let Some(mechanism) = Mechanism::parse(&mech_s) else {
         eprintln!("unknown mechanism '{mech_s}'");
         return 2;

@@ -147,6 +147,18 @@ impl Client {
         }
     }
 
+    /// Tear a session down completely on the server: key material,
+    /// result blobs, and every decode cache bundle.
+    pub fn drop_session(&mut self, session: u64) -> std::io::Result<Result<(), FheError>> {
+        let req = Request::DropSession { session };
+        let j = self.roundtrip(&req.to_json_line())?;
+        if j.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+            Ok(Ok(()))
+        } else {
+            Ok(Err(Self::wire_error(&j)))
+        }
+    }
+
     /// Rebuild the server's typed failure from the wire fields.
     fn wire_error(j: &Json) -> FheError {
         let msg = j.get("error").and_then(|v| v.as_str()).unwrap_or("unknown error");

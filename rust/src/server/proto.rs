@@ -11,6 +11,7 @@
 //!   {"op":"decode","session":S,"mechanism":"inhibitor@h2xL2",
 //!    "stream":N,"blob":B,"prefill":true[,"deadline_ms":N]}
 //!   {"op":"release_cache","session":S,"stream":N}
+//!   {"op":"drop_session","session":S}
 //!   {"op":"metrics"}   {"op":"ping"}   {"op":"shutdown"}
 //!
 //! Responses:
@@ -65,6 +66,9 @@ pub enum Request {
     },
     /// Drop a decode stream's server-side cache bundle explicitly.
     ReleaseCache { session: u64, stream: u64 },
+    /// Tear a session down completely: key material, result blobs, and
+    /// every decode cache bundle (hot, spilled, and sink bytes).
+    DropSession { session: u64 },
 }
 
 impl Request {
@@ -166,6 +170,15 @@ impl Request {
                 };
                 Ok(Request::ReleaseCache { session: id("session")?, stream: id("stream")? })
             }
+            Some("drop_session") => {
+                let session = j
+                    .get("session")
+                    .and_then(|v| v.as_i64())
+                    .filter(|&v| v >= 0)
+                    .map(|v| v as u64)
+                    .ok_or_else(|| bad("'session' must be a non-negative integer"))?;
+                Ok(Request::DropSession { session })
+            }
             other => Err(FheError::BadRequest(format!("unknown op {other:?}"))),
         }
     }
@@ -211,6 +224,11 @@ impl Request {
                 ("op", Json::str("release_cache")),
                 ("session", Json::num(*session as f64)),
                 ("stream", Json::num(*stream as f64)),
+            ])
+            .to_string(),
+            Request::DropSession { session } => Json::obj(vec![
+                ("op", Json::str("drop_session")),
+                ("session", Json::num(*session as f64)),
             ])
             .to_string(),
         }
@@ -331,6 +349,8 @@ mod tests {
         }
         let rel = Request::ReleaseCache { session: 3, stream: 11 };
         assert_eq!(Request::parse(&rel.to_json_line()).unwrap(), rel);
+        let drop = Request::DropSession { session: 3 };
+        assert_eq!(Request::parse(&drop.to_json_line()).unwrap(), drop);
     }
 
     #[test]
@@ -341,6 +361,8 @@ mod tests {
             r#"{"op":"decode","session":1,"stream":2,"blob":3}"#,
             r#"{"op":"release_cache","session":1}"#,
             r#"{"op":"release_cache","session":1,"stream":-2}"#,
+            r#"{"op":"drop_session"}"#,
+            r#"{"op":"drop_session","session":-1}"#,
         ] {
             assert_eq!(Request::parse(line).unwrap_err().code(), "bad_request", "{line}");
         }

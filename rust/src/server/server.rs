@@ -208,6 +208,13 @@ fn handle_line(
                 )))
             }
         }
+        Ok(Request::DropSession { session }) => {
+            if coordinator.drop_session(session) {
+                text_response("session dropped")
+            } else {
+                error_response(&FheError::KeyMissing(format!("unknown session {session}")))
+            }
+        }
     };
     if writeln!(writer, "{reply}").is_err() {
         return LineOutcome::Close;

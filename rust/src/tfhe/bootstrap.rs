@@ -547,6 +547,29 @@ impl ServerKey {
     pub fn key_material_eq(&self, other: &ServerKey) -> bool {
         self.params == other.params && self.bsk == other.bsk && self.ksk == other.ksk
     }
+
+    /// Bootstrap-key material — read access for the storage codec
+    /// (`tfhe::codec`), which serializes keys for the cold-session tier.
+    pub(crate) fn bsk(&self) -> &[GgswFourier] {
+        &self.bsk
+    }
+
+    /// Key-switch key — read access for the storage codec.
+    pub(crate) fn ksk(&self) -> &KeySwitchKey {
+        &self.ksk
+    }
+
+    /// Rebuild a server key from decoded material. The FFT plan carries
+    /// no secrets and its twiddles are a pure function of the polynomial
+    /// size, so it is reconstructed here instead of being serialized.
+    pub(crate) fn from_material(
+        params: TfheParams,
+        bsk: Vec<GgswFourier>,
+        ksk: KeySwitchKey,
+    ) -> Self {
+        let fft = NegacyclicFft::new(params.poly_size);
+        ServerKey { params, bsk, ksk, fft }
+    }
 }
 
 /// One job of a cross-key pool pass: a [`BatchJob`] plus the server key

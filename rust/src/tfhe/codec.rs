@@ -1,0 +1,382 @@
+//! Alloc-free fixed-layout binary codec for ciphertext bundles and
+//! server-key material (S9) — the serialization seam under the
+//! `coordinator::storage` spill tier.
+//!
+//! Everything is **little-endian u64 words** appended to a reusable
+//! buffer ([`CtCodec`] keeps its `Vec<u8>` across calls, so a warmed
+//! encoder performs zero heap allocation per bundle). No serde: the
+//! offline build vendors nothing, and the layouts below are small enough
+//! to keep honest by hand. `f64` fields travel as IEEE-754 bit patterns
+//! (`to_bits`/`from_bits`) so round-trips are bit-exact, which is the
+//! contract the spill tier's differential tests pin (a rehydrated decode
+//! stream must be *bit-identical* to one served all-in-memory).
+//!
+//! Layouts (one u64 word each unless noted):
+//!
+//! **Bundle** (`encode_bundle`): `BUNDLE_MAGIC`, `meta` (caller-owned,
+//! e.g. the decode cache's `cached_len`), `count`, `dim`, then per
+//! ciphertext `dim` mask words followed by the body word. The dimension
+//! is uniform across the bundle — every ciphertext in one session lives
+//! under one parameter set.
+//!
+//! **Server key** (`encode_server_key`): `KEY_MAGIC`, 11 parameter words
+//! (`lwe_dim`, `poly_size`, `glwe_dim`, the two noise stds as f64 bits,
+//! `pbs_decomp` base/level, `ks_decomp` base/level, `message_bits`,
+//! `many_lut_log`), then the bootstrap key (count, then per GGSW the
+//! nested `rows`/`row`/`poly` lengths and two words per spectral
+//! coefficient) and the key-switch rows (nested lengths, mask words,
+//! body). The FFT plan is *not* serialized: its twiddles are a pure
+//! function of `poly_size`, so the decoder rebuilds it.
+//!
+//! Decoding is defensive — truncated input, a wrong magic, or a length
+//! prefix larger than the remaining payload all return `Err(String)`
+//! before any oversized allocation happens.
+
+use super::bootstrap::ServerKey;
+use super::fft::C64;
+use super::ggsw::GgswFourier;
+use super::keyswitch::KeySwitchKey;
+use super::lwe::LweCiphertext;
+use super::ops::CtInt;
+use super::params::{DecompParams, TfheParams};
+
+/// Format tag for ciphertext bundles (ASCII "CTBNDL" + version 1).
+pub const BUNDLE_MAGIC: u64 = 0x0100_4C44_4E42_5443;
+/// Format tag for server-key material (ASCII "SRVKEY" + version 1).
+pub const KEY_MAGIC: u64 = 0x0100_5945_4B56_5253;
+
+/// Reusable encoder: owns one append buffer that survives across calls,
+/// so steady-state encoding allocates nothing.
+#[derive(Default)]
+pub struct CtCodec {
+    buf: Vec<u8>,
+}
+
+impl CtCodec {
+    pub fn new() -> Self {
+        CtCodec::default()
+    }
+
+    #[inline]
+    fn word(&mut self, w: u64) {
+        self.buf.extend_from_slice(&w.to_le_bytes());
+    }
+
+    /// Encode a ciphertext bundle plus one caller-owned `meta` word into
+    /// the internal buffer and return the encoded bytes. The returned
+    /// slice is valid until the next `encode_*` call. Panics if the
+    /// bundle mixes LWE dimensions (one session = one parameter set; a
+    /// mixed bundle is a coordinator logic error, not bad input).
+    pub fn encode_bundle(&mut self, cts: &[CtInt], meta: u64) -> &[u8] {
+        self.buf.clear();
+        let dim = cts.first().map(|c| c.ct.mask.len()).unwrap_or(0);
+        self.word(BUNDLE_MAGIC);
+        self.word(meta);
+        self.word(cts.len() as u64);
+        self.word(dim as u64);
+        for ct in cts {
+            assert_eq!(ct.ct.mask.len(), dim, "bundle mixes LWE dimensions");
+            for &m in &ct.ct.mask {
+                self.word(m);
+            }
+            self.word(ct.ct.body);
+        }
+        &self.buf
+    }
+
+    /// Encode a server key's material (params + bootstrap key +
+    /// key-switch key) into the internal buffer. The FFT plan is
+    /// deliberately omitted — see the module docs.
+    pub fn encode_server_key(&mut self, sk: &ServerKey) -> &[u8] {
+        self.buf.clear();
+        self.word(KEY_MAGIC);
+        let p = &sk.params;
+        self.word(p.lwe_dim as u64);
+        self.word(p.poly_size as u64);
+        self.word(p.glwe_dim as u64);
+        self.word(p.lwe_noise_std.to_bits());
+        self.word(p.glwe_noise_std.to_bits());
+        self.word(p.pbs_decomp.base_log as u64);
+        self.word(p.pbs_decomp.level as u64);
+        self.word(p.ks_decomp.base_log as u64);
+        self.word(p.ks_decomp.level as u64);
+        self.word(u64::from(p.message_bits));
+        self.word(u64::from(p.many_lut_log));
+        let bsk = sk.bsk();
+        self.word(bsk.len() as u64);
+        for ggsw in bsk {
+            self.word(ggsw.rows.len() as u64);
+            for row in &ggsw.rows {
+                self.word(row.len() as u64);
+                for poly in row {
+                    self.word(poly.len() as u64);
+                    for c in poly {
+                        self.word(c.re.to_bits());
+                        self.word(c.im.to_bits());
+                    }
+                }
+            }
+        }
+        let ksk_rows = sk.ksk().rows();
+        self.word(ksk_rows.len() as u64);
+        for row in ksk_rows {
+            self.word(row.len() as u64);
+            for ct in row {
+                self.word(ct.mask.len() as u64);
+                for &m in &ct.mask {
+                    self.word(m);
+                }
+                self.word(ct.body);
+            }
+        }
+        &self.buf
+    }
+}
+
+/// Cursor over the encoded words; every read is bounds-checked so a
+/// truncated or corrupt blob fails fast instead of panicking or
+/// allocating absurdly.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Reader { bytes, pos: 0 }
+    }
+
+    fn remaining_words(&self) -> usize {
+        (self.bytes.len() - self.pos) / 8
+    }
+
+    fn word(&mut self) -> Result<u64, String> {
+        let end = self.pos + 8;
+        if end > self.bytes.len() {
+            return Err(format!("truncated blob: wanted 8 bytes at offset {}", self.pos));
+        }
+        let mut raw = [0u8; 8];
+        raw.copy_from_slice(&self.bytes[self.pos..end]);
+        self.pos = end;
+        Ok(u64::from_le_bytes(raw))
+    }
+
+    /// Read a length prefix whose elements each occupy at least one
+    /// word, rejecting any count that cannot fit in the remaining
+    /// payload (the guard against corrupt-length allocation bombs).
+    fn len(&mut self, what: &str) -> Result<usize, String> {
+        let n = self.word()?;
+        if n as usize > self.remaining_words() {
+            return Err(format!("{what} length {n} exceeds remaining payload"));
+        }
+        Ok(n as usize)
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos == self.bytes.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after decode", self.bytes.len() - self.pos))
+        }
+    }
+}
+
+/// Decode a ciphertext bundle; inverse of [`CtCodec::encode_bundle`].
+/// Returns the ciphertexts and the caller's `meta` word.
+pub fn decode_bundle(bytes: &[u8]) -> Result<(Vec<CtInt>, u64), String> {
+    let mut r = Reader::new(bytes);
+    let magic = r.word()?;
+    if magic != BUNDLE_MAGIC {
+        return Err(format!("bad bundle magic {magic:#018x}"));
+    }
+    let meta = r.word()?;
+    let count = r.len("bundle ciphertext")?;
+    let dim = r.word()? as usize;
+    let fits = count
+        .checked_mul(dim + 1)
+        .map(|w| w <= r.remaining_words())
+        .unwrap_or(false);
+    if !fits {
+        return Err(format!("bundle of {count} x dim {dim} exceeds remaining payload"));
+    }
+    let mut cts = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut mask = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            mask.push(r.word()?);
+        }
+        let body = r.word()?;
+        cts.push(CtInt { ct: LweCiphertext { mask, body } });
+    }
+    r.done()?;
+    Ok((cts, meta))
+}
+
+/// Decode server-key material; inverse of
+/// [`CtCodec::encode_server_key`]. Rebuilds the FFT plan from
+/// `poly_size` — the decoded key is `key_material_eq` to the original
+/// and PBS under it is bit-identical.
+pub fn decode_server_key(bytes: &[u8]) -> Result<ServerKey, String> {
+    let mut r = Reader::new(bytes);
+    let magic = r.word()?;
+    if magic != KEY_MAGIC {
+        return Err(format!("bad server-key magic {magic:#018x}"));
+    }
+    let params = TfheParams {
+        lwe_dim: r.word()? as usize,
+        poly_size: r.word()? as usize,
+        glwe_dim: r.word()? as usize,
+        lwe_noise_std: f64::from_bits(r.word()?),
+        glwe_noise_std: f64::from_bits(r.word()?),
+        pbs_decomp: DecompParams::new(r.word()? as usize, r.word()? as usize),
+        ks_decomp: DecompParams::new(r.word()? as usize, r.word()? as usize),
+        message_bits: r.word()? as u32,
+        many_lut_log: r.word()? as u32,
+    };
+    let n_ggsw = r.len("bootstrap-key")?;
+    let mut bsk = Vec::with_capacity(n_ggsw);
+    for _ in 0..n_ggsw {
+        let n_rows = r.len("ggsw row")?;
+        let mut rows = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            let n_polys = r.len("ggsw component")?;
+            let mut row = Vec::with_capacity(n_polys);
+            for _ in 0..n_polys {
+                let n_coeffs = r.len("spectrum coefficient")?;
+                let mut poly = Vec::with_capacity(n_coeffs);
+                for _ in 0..n_coeffs {
+                    let re = f64::from_bits(r.word()?);
+                    let im = f64::from_bits(r.word()?);
+                    poly.push(C64 { re, im });
+                }
+                row.push(poly);
+            }
+            rows.push(row);
+        }
+        bsk.push(GgswFourier {
+            rows,
+            decomp: params.pbs_decomp,
+            glwe_dim: params.glwe_dim,
+            poly_size: params.poly_size,
+        });
+    }
+    let n_ksk = r.len("key-switch row")?;
+    let mut ksk_rows = Vec::with_capacity(n_ksk);
+    for _ in 0..n_ksk {
+        let n_cts = r.len("key-switch level")?;
+        let mut row = Vec::with_capacity(n_cts);
+        for _ in 0..n_cts {
+            let dim = r.len("key-switch mask")?;
+            let mut mask = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                mask.push(r.word()?);
+            }
+            let body = r.word()?;
+            row.push(LweCiphertext { mask, body });
+        }
+        ksk_rows.push(row);
+    }
+    r.done()?;
+    let ksk = KeySwitchKey::from_material(ksk_rows, params.ks_decomp, params.lwe_dim);
+    Ok(ServerKey::from_material(params, bsk, ksk))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tfhe::bootstrap::ClientKey;
+    use crate::tfhe::ops::FheContext;
+    use crate::util::prng::Xoshiro256;
+
+    fn context() -> (ClientKey, FheContext, Xoshiro256) {
+        let mut rng = Xoshiro256::new(901);
+        let ck = ClientKey::generate(TfheParams::test_small(), &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        (ck, ctx, rng)
+    }
+
+    #[test]
+    fn bundle_roundtrip_is_bit_exact_and_buffer_is_reused() {
+        let (ck, ctx, mut rng) = context();
+        let cts: Vec<CtInt> = (0..5).map(|i| ctx.encrypt(i - 2, &ck, &mut rng)).collect();
+        let mut codec = CtCodec::new();
+        let bytes = codec.encode_bundle(&cts, 42).to_vec();
+        let (back, meta) = decode_bundle(&bytes).expect("decodes");
+        assert_eq!(meta, 42);
+        assert_eq!(back.len(), cts.len());
+        for (a, b) in back.iter().zip(&cts) {
+            assert_eq!(a.ct, b.ct, "bit-exact round trip");
+        }
+        // Warmed encoder: re-encoding an equally-sized bundle must not
+        // grow the buffer (alloc-free steady state).
+        let cap = {
+            codec.encode_bundle(&cts, 7);
+            codec.buf.capacity()
+        };
+        codec.encode_bundle(&cts, 9);
+        assert_eq!(codec.buf.capacity(), cap, "no realloc on re-encode");
+        // Empty bundles are legal (reserved slots travel as zero cts).
+        let empty = codec.encode_bundle(&[], 3).to_vec();
+        let (none, meta) = decode_bundle(&empty).expect("decodes");
+        assert!(none.is_empty());
+        assert_eq!(meta, 3);
+    }
+
+    #[test]
+    fn corrupt_bundles_are_rejected_not_panicked() {
+        let (ck, ctx, mut rng) = context();
+        let cts = vec![ctx.encrypt(1, &ck, &mut rng)];
+        let mut codec = CtCodec::new();
+        let bytes = codec.encode_bundle(&cts, 0).to_vec();
+        // Wrong magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode_bundle(&bad).is_err());
+        // Truncation at every word boundary.
+        for cut in (8..bytes.len()).step_by(8) {
+            assert!(decode_bundle(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage.
+        let mut long = bytes.clone();
+        long.extend_from_slice(&[0u8; 8]);
+        assert!(decode_bundle(&long).is_err());
+        // Absurd count must fail before allocating (length guard).
+        let mut bomb = bytes.clone();
+        bomb[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_bundle(&bomb).is_err());
+    }
+
+    #[test]
+    fn server_key_roundtrip_preserves_key_material() {
+        let (_ck, ctx, _rng) = context();
+        let mut codec = CtCodec::new();
+        let bytes = codec.encode_server_key(&ctx.sk).to_vec();
+        let back = decode_server_key(&bytes).expect("decodes");
+        assert!(back.key_material_eq(&ctx.sk), "params + bsk + ksk survive");
+        // Corrupt magic and truncation fail typed.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode_server_key(&bad).is_err());
+        assert!(decode_server_key(&bytes[..bytes.len() - 8]).is_err());
+    }
+
+    #[test]
+    fn decoded_server_key_evaluates_bit_identically() {
+        // PBS is deterministic server-side, so a rebuilt key (fresh FFT
+        // plan, decoded material) must produce the *same ciphertext* as
+        // the original — the property the spill tier's cold-attach path
+        // rests on.
+        let _guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = context();
+        let mut codec = CtCodec::new();
+        let bytes = codec.encode_server_key(&ctx.sk).to_vec();
+        let rebuilt = FheContext::new(decode_server_key(&bytes).expect("decodes"));
+        for v in [-2i64, 0, 3] {
+            let x = ctx.encrypt(v, &ck, &mut rng);
+            let a = ctx.relu(&x);
+            let b = rebuilt.relu(&x);
+            assert_eq!(a.ct, b.ct, "relu({v}) bit-identical under decoded key");
+            assert_eq!(rebuilt.decrypt(&b, &ck), v.max(0));
+        }
+    }
+}

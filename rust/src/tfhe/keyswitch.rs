@@ -62,6 +62,21 @@ impl KeySwitchKey {
         KeySwitchKey { rows, decomp, out_dim: to_key.dim() }
     }
 
+    /// Decomposition rows — read access for the storage codec
+    /// (`tfhe::codec`).
+    pub(crate) fn rows(&self) -> &[Vec<LweCiphertext>] {
+        &self.rows
+    }
+
+    /// Rebuild from decoded rows (`tfhe::codec`).
+    pub(crate) fn from_material(
+        rows: Vec<Vec<LweCiphertext>>,
+        decomp: DecompParams,
+        out_dim: usize,
+    ) -> Self {
+        KeySwitchKey { rows, decomp, out_dim }
+    }
+
     /// Switch `ct` (under `from_key`) to the target key:
     /// `out = (0, b) − Σ_j Σ_l digit_{j,l} · KSK[j][l]`.
     pub fn keyswitch(&self, ct: &LweCiphertext) -> LweCiphertext {

@@ -14,6 +14,7 @@
 //! research artifact for cost reproduction, not a deployment library.
 
 pub mod bootstrap;
+pub mod codec;
 pub mod encoding;
 pub mod faults;
 pub mod fft;
@@ -40,6 +41,7 @@ pub use bootstrap::{
     reset_blind_rotation_count, reset_pbs_count, BatchJob, ClientKey, KeyedJob, Lut, PoolStats,
     PreparedLut, PreparedMultiLut, ServerKey,
 };
+pub use codec::{decode_bundle, decode_server_key, CtCodec};
 pub use encoding::Encoder;
 pub use faults::{CancelToken, FaultPlan};
 pub use ops::{ct_clone_count, default_fhe_threads, CtInt, FheContext};

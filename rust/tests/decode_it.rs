@@ -31,19 +31,22 @@
 //! threads, so every test serializes through one lock.
 
 use inhibitor::attention::Mechanism;
+use inhibitor::coordinator::storage::DEFAULT_STORAGE_BUDGET;
 use inhibitor::coordinator::{
-    BatchPolicy, Coordinator, EnginePath, InferRequest, Payload, RoutePolicy,
+    BatchPolicy, Coordinator, DiskSink, EnginePath, InferRequest, MemorySink, Payload, RoutePolicy,
+    Session,
 };
 use inhibitor::fhe_circuits::{CtMatrix, DecodeFhe, DecodeMirror, ModelFhe};
 use inhibitor::optimizer::profile_step;
 use inhibitor::tensor::ITensor;
 use inhibitor::tfhe::ops::CtInt;
 use inhibitor::tfhe::{
-    bootstrap, rewrites_disabled, set_wavefront_dispatch, ClientKey, FheContext, TfheParams,
+    bootstrap, rewrites_disabled, set_wavefront_dispatch, ClientKey, FaultPlan, FheContext,
+    TfheParams,
 };
 use inhibitor::util::prng::Xoshiro256;
 use std::sync::atomic::Ordering;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 static COUNTER_LOCK: Mutex<()> = Mutex::new(());
@@ -462,4 +465,158 @@ fn cache_cap_overflow_is_typed_and_restores_the_pre_step_world_exactly() {
     for (i, (a, b)) in entry.cts.iter().zip(&ref_cache1).enumerate() {
         assert_eq!(a.ct, b.ct, "post-resubmit cache ct {i}");
     }
+}
+
+/// Serve one token through a coordinator's decode engine: register the
+/// row, submit, and take the typed result bundle back out.
+fn serve_token(
+    coord: &Coordinator,
+    sess: &Session,
+    session: u64,
+    mechanism: &str,
+    row: Vec<CtInt>,
+    stream: u64,
+    prefill: bool,
+) -> Vec<CtInt> {
+    let path = EnginePath::Encrypted { session, mechanism: mechanism.to_string() };
+    let blob = sess.register(row);
+    let (take_from, deposit_to) =
+        if prefill { (None, Some(stream)) } else { (Some(stream), None) };
+    let req = InferRequest::new(0, path, Payload::CiphertextRef(blob))
+        .with_cache(take_from, deposit_to);
+    let resp = coord.infer_request_blocking(req, Duration::from_secs(600)).unwrap();
+    assert!(resp.error.is_none(), "token (prefill={prefill}): {:?}", resp.error);
+    sess.take(resp.result_blob.expect("typed result reference")).unwrap()
+}
+
+/// The storage-tier differential (PR 9): the same decode stream served
+/// through a zero-budget coordinator — EVERY bundle (input blobs, result
+/// blobs, the KV-cache) evicted to a [`DiskSink`] and rehydrated through
+/// the word codec on take — must be **bit-identical** to the stream
+/// served all-in-memory, including the replay after an injected PBS
+/// worker panic mid-stream. The logical-byte gauges must agree between
+/// the two runs, and `drop_session` must leave zero bundles, zero bytes,
+/// and an empty sink behind.
+#[test]
+fn spilled_decode_stream_is_bit_identical_to_in_memory_and_survives_faults() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xDEC077);
+    let (heads, layers, d) = (1usize, 1usize, 2usize);
+    let dm = heads * d;
+    let t_total = 3usize;
+    let ck = ClientKey::generate(TfheParams::test_for_bits(5), &mut rng);
+    // Fork the PRNG so both coordinators hold bit-identical server keys:
+    // PBS is deterministic, so every served ciphertext must then match
+    // bit for bit between the in-memory and spill-everything runs.
+    let mut rng_b = rng.clone();
+    let ctx_a = FheContext::new(ck.server_key(&mut rng));
+    let ctx_b = FheContext::new(ck.server_key(&mut rng_b));
+    // A: all-in-memory with the default budget, pinned explicitly so the
+    // CI tiny-budget env leg cannot turn this arm into a spill run too.
+    let mut coord_a = Coordinator::with_storage(
+        RoutePolicy::PreferQuant,
+        Arc::new(MemorySink::new()),
+        DEFAULT_STORAGE_BUDGET,
+    );
+    // B: budget 0 over a disk sink — every bundle spills immediately.
+    let dir = std::env::temp_dir().join(format!("inhibitor-decode-spill-{}", std::process::id()));
+    let sink = Arc::new(DiskSink::new(&dir).expect("disk sink"));
+    let mut coord_b = Coordinator::with_storage(RoutePolicy::PreferQuant, sink, 0);
+
+    let model = ModelFhe::demo(Mechanism::Inhibitor, dm, heads, layers, false, dm, 0xDEC2);
+    let mech = DecodeFhe::new(model.clone()).engine_mechanism();
+    let sid_a = coord_a.keymgr.create_session(ctx_a);
+    let sid_b = coord_b.keymgr.create_session(ctx_b);
+    coord_a.add_fhe_decode_engine(sid_a, model.clone(), BatchPolicy::default()).unwrap();
+    coord_b.add_fhe_decode_engine(sid_b, model, BatchPolicy::default()).unwrap();
+    let sess_a = coord_a.keymgr.session(sid_a).unwrap();
+    let sess_b = coord_b.keymgr.session(sid_b).unwrap();
+
+    let x = ITensor::random(&[t_total, dm], -1, 1, &mut rng);
+    let cx = CtMatrix::encrypt(&x, &sess_a.ctx, &ck, &mut rng);
+    let stream = 9u64;
+
+    // Prefill + first step through both coordinators, pinned identical.
+    for (t, prefill) in [(0usize, true), (1, false)] {
+        let row = cx.data[t * dm..(t + 1) * dm].to_vec();
+        let out_a = serve_token(&coord_a, &sess_a, sid_a, &mech, row.clone(), stream, prefill);
+        let out_b = serve_token(&coord_b, &sess_b, sid_b, &mech, row, stream, prefill);
+        assert_eq!(out_a.len(), out_b.len(), "t={t}: output sizes");
+        for (i, (a, b)) in out_a.iter().zip(&out_b).enumerate() {
+            assert_eq!(a.ct, b.ct, "t={t} output {i}: spilled == in-memory");
+        }
+    }
+    let sm_b = &coord_b.metrics().storage;
+    assert!(sm_b.evictions.load(Ordering::Relaxed) > 0, "budget 0 must evict");
+    assert!(sm_b.rehydrations.load(Ordering::Relaxed) > 0, "takes must rehydrate from the sink");
+    assert!(sm_b.hit_rate() < 1.0, "every tier take on B touched the sink");
+    assert_eq!(
+        coord_a.metrics().storage.evictions.load(Ordering::Relaxed),
+        0,
+        "the in-memory arm must never spill"
+    );
+    // Logical-byte accounting: the gauges agree between the runs even
+    // though B's bundles live encoded in the sink.
+    assert_eq!(
+        coord_a.metrics().cache_blobs_live.load(Ordering::Relaxed),
+        coord_b.metrics().cache_blobs_live.load(Ordering::Relaxed),
+        "live-bundle gauges agree across tiers"
+    );
+    let bytes_a = coord_a.metrics().cache_bytes.load(Ordering::Relaxed);
+    assert!(bytes_a > 0);
+    assert_eq!(
+        bytes_a,
+        coord_b.metrics().cache_bytes.load(Ordering::Relaxed),
+        "spilled bundles are gauged at their decoded (logical) size"
+    );
+
+    // Inject a PBS worker panic into B's final step: the request fails
+    // typed, the row bundle and the spilled cache come back intact, and
+    // the disarmed replay is bit-identical to A's fault-free step.
+    let row = cx.data[2 * dm..3 * dm].to_vec();
+    let out_a = serve_token(&coord_a, &sess_a, sid_a, &mech, row.clone(), stream, false);
+    let fault_spec = "panic@pbs:1";
+    sess_b.ctx.set_fault_plan(Some(Arc::new(FaultPlan::parse(fault_spec).unwrap())));
+    let path = EnginePath::Encrypted { session: sid_b, mechanism: mech.clone() };
+    let blob = sess_b.register(row);
+    let req = InferRequest::new(0, path, Payload::CiphertextRef(blob))
+        .with_cache(Some(stream), None);
+    let resp = coord_b.infer_request_blocking(req, Duration::from_secs(600)).unwrap();
+    sess_b.ctx.set_fault_plan(None);
+    assert_eq!(
+        resp.error.as_ref().map(|e| e.code()),
+        Some("worker_panic"),
+        "{:?}",
+        resp.error
+    );
+    let restored = sess_b.take(blob).expect("victim row restored through the spill tier");
+    let out_b = serve_token(&coord_b, &sess_b, sid_b, &mech, restored, stream, false);
+    for (i, (a, b)) in out_a.iter().zip(&out_b).enumerate() {
+        assert_eq!(a.ct, b.ct, "replayed step output {i}: spilled == in-memory");
+    }
+    // The full streamed KV-cache bundles match bit for bit.
+    let ea = coord_a.session_store().take(sid_a, stream).expect("A's bundle live");
+    let eb = coord_b.session_store().take(sid_b, stream).expect("B's bundle rehydrates");
+    assert_eq!(ea.cached_len, t_total);
+    assert_eq!(eb.cached_len, t_total);
+    assert_eq!(ea.cts.len(), eb.cts.len());
+    for (i, (a, b)) in ea.cts.iter().zip(&eb.cts).enumerate() {
+        assert_eq!(a.ct, b.ct, "cache ct {i}: spilled == in-memory");
+    }
+    coord_a.session_store().restore(sid_a, stream, ea);
+    coord_b.session_store().restore(sid_b, stream, eb);
+
+    // Teardown: the session leaves zero bundles, zero bytes, and an
+    // empty sink behind, and the gauges agree (the drop_session leak
+    // regression).
+    drop(sess_b);
+    assert!(coord_b.drop_session(sid_b));
+    assert_eq!(coord_b.session_store().live_blobs(), 0);
+    assert_eq!(coord_b.session_store().live_bytes(), 0);
+    assert_eq!(coord_b.keymgr.storage().live_blobs(), 0);
+    assert_eq!(coord_b.keymgr.storage().sink().len(), 0, "no orphaned sink files");
+    assert_eq!(coord_b.metrics().cache_blobs_live.load(Ordering::Relaxed), 0);
+    assert_eq!(coord_b.metrics().cache_bytes.load(Ordering::Relaxed), 0);
+    assert!(!coord_b.drop_session(sid_b), "second teardown is a no-op");
+    std::fs::remove_dir_all(&dir).ok();
 }
