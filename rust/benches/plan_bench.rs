@@ -466,6 +466,68 @@ fn main() {
         ("cold_key_attaches", Json::num(cold_attaches as f64)),
     ])];
 
+    // === Radix wide arithmetic: legalized wide accumulator vs native ===
+    // The PR 10 seam: the same signed inhibitor once at native width and
+    // once with a declared 9-bit accumulator — legalized into three
+    // 3-bit limbs with packed carry propagation — on one 6-bit ϑ = 1
+    // keyset. Counts come from the plans and the legalizer's RadixInfo;
+    // the closed-form oracle (`optimizer::profile_radix`) is pinned
+    // against these counters by tests/radix_it.rs, so the record here is
+    // the carry overhead actually paid plus wall-clock.
+    println!("\n=== Radix: legalized 9-bit accumulator vs native signed inhibitor ===");
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(6), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    ctx.set_threads(threads);
+    let declared_bits = 9u32;
+    let narrow_head = InhibitorSignedFhe::new(d, 1);
+    let wide_head = InhibitorSignedFhe::new(d, 1).with_accumulator_bits(declared_bits);
+    let (narrow_plan, _) = PlanRewriter::for_ctx(&ctx).rewrite(narrow_head.plan(t, d));
+    let (wide_plan, wide_stats) = PlanRewriter::for_ctx(&ctx).rewrite(wide_head.plan(t, d));
+    let radix_info = wide_plan.radix().expect("declared width must legalize").clone();
+    let mut radix_inputs: Vec<CtInt> = Vec::with_capacity(3 * t * d);
+    for (lo, hi, n) in [(-2i64, 1i64, 2 * t * d), (-3, 3, t * d)] {
+        let vals = ITensor::random(&[n, 1], lo, hi, &mut rng);
+        radix_inputs.extend(vals.data.iter().map(|&val| ctx.encrypt(val, &ck, &mut rng)));
+    }
+    let m_narrow = bench("signed native width", cfg, || narrow_plan.execute(&ctx, &radix_inputs));
+    let m_wide = bench(
+        &format!("signed wide {declared_bits}-bit x{} limbs", radix_info.spec.limbs),
+        cfg,
+        || wide_plan.execute(&ctx, &radix_inputs),
+    );
+    println!("  {}", m_narrow.summary());
+    println!("  {}", m_wide.summary());
+    println!(
+        "  {declared_bits}-bit / native: pbs {} -> {}, blind rotations {} -> {} \
+         (widened={} x{} limbs, carry_luts={}, carry_rotations={}, {:.3}x latency)",
+        narrow_plan.pbs_count(),
+        wide_plan.pbs_count(),
+        narrow_plan.blind_rotation_count(),
+        wide_plan.blind_rotation_count(),
+        radix_info.widened,
+        radix_info.spec.limbs,
+        radix_info.carry_luts,
+        radix_info.carry_rotations,
+        m_wide.mean_s / m_narrow.mean_s,
+    );
+    let radix_records = vec![Json::obj(vec![
+        ("mechanism", Json::str("inhibitor-signed")),
+        ("declared_bits", Json::num(declared_bits as f64)),
+        ("native_bits", Json::num(radix_info.spec.native_bits as f64)),
+        ("limb_bits", Json::num(radix_info.spec.limb_bits as f64)),
+        ("limbs", Json::num(radix_info.spec.limbs as f64)),
+        ("widened_outputs", Json::num(wide_stats.radix_widened as f64)),
+        ("pbs_native", Json::num(narrow_plan.pbs_count() as f64)),
+        ("pbs_wide", Json::num(wide_plan.pbs_count() as f64)),
+        ("blind_rotations_native", Json::num(narrow_plan.blind_rotation_count() as f64)),
+        ("blind_rotations_wide", Json::num(wide_plan.blind_rotation_count() as f64)),
+        ("carry_luts", Json::num(radix_info.carry_luts as f64)),
+        ("carry_rotations", Json::num(radix_info.carry_rotations as f64)),
+        ("native_s", Json::num(m_narrow.mean_s)),
+        ("wide_s", Json::num(m_wide.mean_s)),
+        ("wide_over_native", Json::num(m_wide.mean_s / m_narrow.mean_s)),
+    ])];
+
     let record = Json::obj(vec![
         ("bench", Json::str("plan_bench")),
         ("seq_len", Json::num(t as f64)),
@@ -479,6 +541,7 @@ fn main() {
         ("block", Json::arr(block_records)),
         ("decode", Json::arr(decode_records)),
         ("storage", Json::arr(storage_records)),
+        ("radix", Json::arr(radix_records)),
     ]);
     // Write next to the workspace root (cargo runs benches with CWD at
     // the package root), where the perf-trajectory record is checked in.

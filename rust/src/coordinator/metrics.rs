@@ -146,6 +146,12 @@ pub struct Metrics {
     /// Spill-tier counters, shared by `Arc` with the `CtStore` tiers so
     /// evictions/rehydrations are counted at the point they happen.
     pub storage: std::sync::Arc<StorageMetrics>,
+    // --- radix wide arithmetic (PR 10) ---
+    /// Limb slots materialized by radix-legalized plans the serving
+    /// layer built (Σ over plans of widened sources × limbs).
+    pub radix_limbs: AtomicU64,
+    /// Blind rotations those plans spend on packed carry propagation.
+    pub carry_rotations: AtomicU64,
     pub latency: LatencyHistogram,
 }
 
@@ -196,6 +202,16 @@ impl Metrics {
         self.pool_capacity_ns.fetch_add(stats.capacity_ns, Ordering::Relaxed);
     }
 
+    /// Fold a legalized plan's radix accounting into the serving
+    /// counters — called wherever the serving layer rewrites a plan
+    /// whose legalization produced wide values (no-op plans carry no
+    /// [`crate::tfhe::radix::RadixInfo`] and never reach here).
+    pub fn record_radix(&self, info: &crate::tfhe::radix::RadixInfo) {
+        self.radix_limbs
+            .fetch_add(info.widened as u64 * info.spec.limbs as u64, Ordering::Relaxed);
+        self.carry_rotations.fetch_add(info.carry_rotations, Ordering::Relaxed);
+    }
+
     /// Refresh the store-footprint gauges from the session store — the
     /// one place `cache_blobs_live`/`cache_bytes` are written, shared by
     /// `release_cache`, the decode engine body, and session teardown so
@@ -214,6 +230,7 @@ impl Metrics {
              stolen_jobs={} fused_keys={} worker_utilization={:.3} \
              storage_evictions={} storage_rehydrations={} storage_hit_rate={:.3} \
              cold_key_attaches={} \
+             radix_limbs={} carry_rotations={} \
              mean_latency={} p50={} p99={}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -239,6 +256,8 @@ impl Metrics {
             self.storage.rehydrations.load(Ordering::Relaxed),
             self.storage.hit_rate(),
             self.storage.cold_key_attaches.load(Ordering::Relaxed),
+            self.radix_limbs.load(Ordering::Relaxed),
+            self.carry_rotations.load(Ordering::Relaxed),
             crate::bench_harness::Measurement::fmt_time(self.latency.mean_s()),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.5)),
             crate::bench_harness::Measurement::fmt_time(self.latency.quantile_s(0.99)),
@@ -288,6 +307,26 @@ mod tests {
         assert!(s.contains("storage_rehydrations=1"), "{s}");
         assert!(s.contains("storage_hit_rate=0.750"), "{s}");
         assert!(s.contains("cold_key_attaches=0"), "{s}");
+    }
+
+    #[test]
+    fn record_radix_accumulates_limbs_and_carry_rotations() {
+        use crate::tfhe::radix::{RadixInfo, RadixSpec};
+        let m = Metrics::new();
+        let info = RadixInfo {
+            spec: RadixSpec::new(3, 3, 6),
+            widened: 4,
+            carry_luts: 10,
+            carry_rotations: 6,
+            wide_outputs: 2,
+        };
+        m.record_radix(&info);
+        m.record_radix(&info);
+        assert_eq!(m.radix_limbs.load(Ordering::Relaxed), 24, "2 × widened·limbs");
+        assert_eq!(m.carry_rotations.load(Ordering::Relaxed), 12);
+        let s = m.summary();
+        assert!(s.contains("radix_limbs=24"), "{s}");
+        assert!(s.contains("carry_rotations=12"), "{s}");
     }
 
     #[test]

@@ -531,6 +531,11 @@ impl Coordinator {
                     let (outs, stats) = FusedLevelExecutor::new(&session.ctx).run_checked(&fused);
                     drop(fused);
                     metrics.record_fused(&stats);
+                    for m in members.iter().flatten() {
+                        if let Some(r) = m.plan.radix() {
+                            metrics.record_radix(r);
+                        }
+                    }
                     // Phase 3 — deposit successor cache bundles and typed
                     // result refs, or restore the pre-step world exactly.
                     let mut outs = outs.into_iter();
@@ -675,6 +680,9 @@ impl Coordinator {
                 let session = Arc::clone(&session);
                 let metrics = Arc::clone(&metrics);
                 let plan = make_plan(&session.ctx);
+                if let Some(r) = plan.radix() {
+                    metrics.record_radix(r);
+                }
                 let n_inputs = plan.n_inputs();
                 Box::new(move |batch: &[InferRequest]| {
                     // Deterministic fault seam (`panic@engine:N`): fires

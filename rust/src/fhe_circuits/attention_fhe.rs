@@ -52,7 +52,8 @@
 
 use crate::tfhe::bootstrap::ClientKey;
 use crate::tfhe::ops::{CtInt, FheContext};
-use crate::tfhe::plan::{CircuitBuilder, CircuitPlan, NodeId, PlanRewriter};
+use crate::tfhe::plan::{CircuitBuilder, CircuitPlan, NodeId, PlanRewriter, RewriteConfig};
+use crate::tfhe::radix::RadixConfig;
 use crate::util::prng::Xoshiro256;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -135,9 +136,13 @@ impl PlanCache {
     /// Fetch the rewritten plan for `(t, d)` under `ctx`'s parameter
     /// budget, building (and rewriting) it on first use. Honors the
     /// `FHE_NO_REWRITE` knob ([`crate::tfhe::plan::rewrites_disabled`]):
-    /// when set, the raw builder plan is served instead, cached under a
-    /// sentinel budget so toggling the knob between calls can never leak
-    /// a rewritten plan into a no-rewrite run or vice versa.
+    /// when set, CSE and packing are suppressed and the plan is cached
+    /// under a sentinel budget so toggling the knob between calls can
+    /// never leak a rewritten plan into a no-rewrite run or vice versa.
+    /// Radix legalization still runs under the knob — declared widths
+    /// are a correctness obligation, not an optimization, so a plan
+    /// that declares accumulators wider than the native message space
+    /// must be legalized on every path that executes it.
     pub(super) fn rewritten_for(
         &self,
         ctx: &FheContext,
@@ -157,7 +162,10 @@ impl PlanCache {
         // identical.
         self.builds.fetch_add(1, Ordering::Relaxed);
         let plan = if no_rewrite {
-            build()
+            PlanRewriter::new(RewriteConfig::none())
+                .with_radix(RadixConfig::for_params(&ctx.sk.params))
+                .rewrite(build())
+                .0
         } else {
             PlanRewriter::for_ctx(ctx).rewrite(build()).0
         };
@@ -215,6 +223,10 @@ pub struct InhibitorFhe {
     pub gamma: f64,
     /// Shift α quantized to the score scale.
     pub alpha_q: i64,
+    /// Declared output-accumulator width in bits; `None` keeps the
+    /// native-width tail (refresh PBS). See
+    /// [`InhibitorFhe::with_accumulator_bits`].
+    pub(super) acc_bits: Option<u32>,
     cache: Arc<PlanCache>,
 }
 
@@ -223,8 +235,25 @@ impl InhibitorFhe {
         InhibitorFhe {
             gamma: (dim as f64).sqrt(),
             alpha_q,
+            acc_bits: None,
             cache: Arc::new(PlanCache::default()),
         }
+    }
+
+    /// Declare the head's output accumulators `bits` wide. The emitted
+    /// tail then skips the output refresh and marks the raw inhibition
+    /// sum with [`CircuitBuilder::declare_width`], so the radix
+    /// legalization pass splits it into message-space limbs and
+    /// `forward()` returns limb vectors (`cols = d · limbs`,
+    /// little-endian per element — decode with
+    /// [`crate::tfhe::radix::RadixSpec::decode`] via the plan's
+    /// [`CircuitPlan::radix`] info). The mirror correspondingly keeps
+    /// the unclamped accumulator. Resets the plan cache: cached plans
+    /// embed the old tail.
+    pub fn with_accumulator_bits(mut self, bits: u32) -> Self {
+        self.acc_bits = Some(bits);
+        self.cache = Arc::new(PlanCache::default());
+        self
     }
 
     /// The rewritten, `(T, d)`-cached plan `forward()` executes under
@@ -289,7 +318,13 @@ impl InhibitorFhe {
                     terms.push(b.relu(diff));
                 }
                 let h = b.sum(&terms);
-                outs.push(b.refresh(h));
+                match self.acc_bits {
+                    Some(w) => {
+                        b.declare_width(h, w);
+                        outs.push(h);
+                    }
+                    None => outs.push(b.refresh(h)),
+                }
             }
         }
         outs
@@ -339,7 +374,13 @@ impl InhibitorFhe {
                 terms.push(b.relu(diff));
             }
             let h = b.sum(&terms);
-            outs.push(b.refresh(h));
+            match self.acc_bits {
+                Some(w) => {
+                    b.declare_width(h, w);
+                    outs.push(h);
+                }
+                None => outs.push(b.refresh(h)),
+            }
         }
         outs
     }
@@ -365,13 +406,16 @@ impl InhibitorFhe {
     /// no copy of the 3·T·d input ciphertexts. (The rewrite pipeline
     /// finds nothing to change in this circuit — its verbatim dataflow
     /// is already duplicate-free with all-distinct PBS inputs — so
-    /// counts and ciphertexts are those of the raw plan.)
+    /// counts and ciphertexts are those of the raw plan.) Under a
+    /// declared accumulator width the output matrix is `[T, d·limbs]`:
+    /// each element's limbs are contiguous, little-endian.
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         assert_eq!((k.rows, k.cols), (t, d));
         assert_eq!((v.rows, v.cols), (t, d));
         let data = self.plan_for(ctx, t, d).execute_ref(ctx, &qkv_input_refs(q, k, v));
-        CtMatrix { rows: t, cols: d, data }
+        let cols = data.len() / t;
+        CtMatrix { rows: t, cols, data }
     }
 
     /// The PR 1 hand-staged forward (level-synchronous loops over
@@ -472,6 +516,9 @@ pub struct InhibitorSignedFhe {
     pub gamma: f64,
     /// Shift α quantized to the score scale.
     pub alpha_q: i64,
+    /// Declared output-accumulator width in bits; `None` keeps the
+    /// native-width tail. See [`InhibitorFhe::with_accumulator_bits`].
+    pub(super) acc_bits: Option<u32>,
     cache: Arc<PlanCache>,
 }
 
@@ -480,8 +527,18 @@ impl InhibitorSignedFhe {
         InhibitorSignedFhe {
             gamma: (dim as f64).sqrt(),
             alpha_q,
+            acc_bits: None,
             cache: Arc::new(PlanCache::default()),
         }
+    }
+
+    /// Declare the head's output accumulators `bits` wide; see
+    /// [`InhibitorFhe::with_accumulator_bits`] for the full contract
+    /// (limb layout, mirror behavior, cache reset).
+    pub fn with_accumulator_bits(mut self, bits: u32) -> Self {
+        self.acc_bits = Some(bits);
+        self.cache = Arc::new(PlanCache::default());
+        self
     }
 
     /// Shared score path of [`Self::emit`] and [`Self::emit_presplit`]:
@@ -552,7 +609,13 @@ impl InhibitorSignedFhe {
                     terms.push(b.min0(neg_in));
                 }
                 let h = b.sum(&terms);
-                outs.push(b.refresh(h));
+                match self.acc_bits {
+                    Some(w) => {
+                        b.declare_width(h, w);
+                        outs.push(h);
+                    }
+                    None => outs.push(b.refresh(h)),
+                }
             }
         }
         outs
@@ -589,7 +652,13 @@ impl InhibitorSignedFhe {
                     terms.push(b.min0(neg_in));
                 }
                 let h = b.sum(&terms);
-                outs.push(b.refresh(h));
+                match self.acc_bits {
+                    Some(w) => {
+                        b.declare_width(h, w);
+                        outs.push(h);
+                    }
+                    None => outs.push(b.refresh(h)),
+                }
             }
         }
         outs
@@ -655,7 +724,13 @@ impl InhibitorSignedFhe {
                 terms.push(b.min0(neg_in));
             }
             let h = b.sum(&terms);
-            outs.push(b.refresh(h));
+            match self.acc_bits {
+                Some(w) => {
+                    b.declare_width(h, w);
+                    outs.push(h);
+                }
+                None => outs.push(b.refresh(h)),
+            }
         }
         outs
     }
@@ -709,13 +784,15 @@ impl InhibitorSignedFhe {
     /// Encrypted forward: executes the cached rewritten plan by
     /// reference (no input copies). On packing-capable parameter sets
     /// this is where the multi-value saving lands in serving: fewer
-    /// blind rotations, identical decrypted outputs.
+    /// blind rotations, identical decrypted outputs. Under a declared
+    /// accumulator width the output matrix is `[T, d·limbs]`.
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         assert_eq!((k.rows, k.cols), (t, d));
         assert_eq!((v.rows, v.cols), (t, d));
         let data = self.plan_for(ctx, t, d).execute_ref(ctx, &qkv_input_refs(q, k, v));
-        CtMatrix { rows: t, cols: d, data }
+        let cols = data.len() / t;
+        CtMatrix { rows: t, cols, data }
     }
 
     /// Shared score path of the signed mirrors: clamped |q − k| sums
@@ -791,7 +868,10 @@ impl InhibitorSignedFhe {
                         clamp((vp.at2(j, kk) - zij).max(0)) + clamp((vn.at2(j, kk) + zij).min(0))
                     })
                     .sum();
-                out.data[i * d + kk] = clamp(h);
+                // A declared-wide tail has no output refresh: the radix
+                // limbs carry the exact accumulator, so the mirror keeps
+                // it unclamped too.
+                out.data[i * d + kk] = if self.acc_bits.is_some() { h } else { clamp(h) };
             }
         }
         out
@@ -805,6 +885,10 @@ pub struct DotProductFhe {
     pub prob_bits: u32,
     /// exp LUT scale: e(x) = round(exp(x·exp_scale)·(2^prob_bits − 1)).
     pub exp_scale: f64,
+    /// Declared output-accumulator width in bits; `None` keeps the
+    /// native-width tail (rescale PBS). See
+    /// [`DotProductFhe::with_accumulator_bits`].
+    pub(super) acc_bits: Option<u32>,
     cache: Arc<PlanCache>,
 }
 
@@ -816,8 +900,22 @@ impl DotProductFhe {
         DotProductFhe {
             prob_bits: 3,
             exp_scale: 3.0 / max_score as f64,
+            acc_bits: None,
             cache: Arc::new(PlanCache::default()),
         }
+    }
+
+    /// Declare the head's output accumulators `bits` wide. The tail
+    /// then keeps the raw fixed-point attend accumulator `Σ_j p_ij·v_jk`
+    /// (probabilities still scaled by `2^prob_bits − 1` — the rescale
+    /// PBS is not emitted) as radix limbs; the mirror matches by
+    /// skipping the rescale and final clamp. See
+    /// [`InhibitorFhe::with_accumulator_bits`] for the limb layout and
+    /// cache-reset contract.
+    pub fn with_accumulator_bits(mut self, bits: u32) -> Self {
+        self.acc_bits = Some(bits);
+        self.cache = Arc::new(PlanCache::default());
+        self
     }
 
     /// The rewritten, `(T, d)`-cached plan `forward()` executes under
@@ -888,7 +986,13 @@ impl DotProductFhe {
                 let terms: Vec<_> =
                     (0..t).map(|j| b.ct_mul(probs[i * t + j], v[j * d + kk])).collect();
                 let acc = b.sum(&terms);
-                outs.push(b.pbs(acc, rescale));
+                match self.acc_bits {
+                    Some(w) => {
+                        b.declare_width(acc, w);
+                        outs.push(acc);
+                    }
+                    None => outs.push(b.pbs(acc, rescale)),
+                }
             }
         }
         outs
@@ -931,7 +1035,13 @@ impl DotProductFhe {
             let terms: Vec<_> =
                 (0..n).map(|j| b.ct_mul(probs[j], v[j * d + kk])).collect();
             let acc = b.sum(&terms);
-            outs.push(b.pbs(acc, rescale));
+            match self.acc_bits {
+                Some(w) => {
+                    b.declare_width(acc, w);
+                    outs.push(acc);
+                }
+                None => outs.push(b.pbs(acc, rescale)),
+            }
         }
         outs
     }
@@ -955,13 +1065,15 @@ impl DotProductFhe {
     /// Encrypted forward: executes the cached rewritten plan by
     /// reference — one batched PBS submission per level, no input
     /// copies. (As with the unsigned inhibitor, the rewrite pipeline is
-    /// a no-op on this circuit's all-distinct dataflow.)
+    /// a no-op on this circuit's all-distinct dataflow.) Under a
+    /// declared accumulator width the output matrix is `[T, d·limbs]`.
     pub fn forward(&self, ctx: &FheContext, q: &CtMatrix, k: &CtMatrix, v: &CtMatrix) -> CtMatrix {
         let (t, d) = (q.rows, q.cols);
         assert_eq!((k.rows, k.cols), (t, d));
         assert_eq!((v.rows, v.cols), (t, d));
         let data = self.plan_for(ctx, t, d).execute_ref(ctx, &qkv_input_refs(q, k, v));
-        CtMatrix { rows: t, cols: d, data }
+        let cols = data.len() / t;
+        CtMatrix { rows: t, cols, data }
     }
 
     /// The PR 1 hand-staged forward, kept as the reference implementation
@@ -1078,7 +1190,13 @@ impl DotProductFhe {
                 let acc: i64 = (0..t)
                     .map(|j| clamp(clamp(e[i * t + j] * r) * v.at2(j, kk)))
                     .sum();
-                out.data[i * d + kk] = clamp((acc as f64 / max_out as f64).round() as i64);
+                // A declared-wide tail keeps the raw fixed-point
+                // accumulator (no rescale PBS is emitted).
+                out.data[i * d + kk] = if self.acc_bits.is_some() {
+                    acc
+                } else {
+                    clamp((acc as f64 / max_out as f64).round() as i64)
+                };
             }
         }
         out

@@ -235,6 +235,13 @@ pub struct BlockFhe {
     /// (`MultiHeadFhe::emit` — per-head defaults identical to the
     /// standalone multi-head engines).
     attn: MultiHeadFhe,
+    /// Declared width for the block's *output* residual accumulators.
+    /// When set, the final residual requant is not emitted: the block's
+    /// outputs are the raw second-residual accumulators, declared
+    /// `out_acc_bits` wide so the radix legalization pass splits them
+    /// into limbs. Only meaningful on the last block of a stack — a
+    /// following block expects a narrow residual stream.
+    pub(super) out_acc_bits: Option<u32>,
 }
 
 impl BlockFhe {
@@ -248,7 +255,16 @@ impl BlockFhe {
         let split = HeadSplit::new(d_model, n_heads);
         weights.validate(d_model);
         let attn = MultiHeadFhe::new(mechanism, split.d_head(), n_heads, shared_kv);
-        BlockFhe { mechanism, split, shared_kv, weights, attn }
+        BlockFhe { mechanism, split, shared_kv, weights, attn, out_acc_bits: None }
+    }
+
+    /// Declare this block's output accumulators `bits` wide (see the
+    /// `out_acc_bits` field docs). Exposed so single-block plans can be
+    /// built wide; stacks should use [`ModelFhe::with_accumulator_bits`],
+    /// which applies it to the last layer only.
+    pub fn with_output_accumulator_bits(mut self, bits: u32) -> Self {
+        self.out_acc_bits = Some(bits);
+        self
     }
 
     /// Build a block circuit from a plaintext `model::Block` (mechanism,
@@ -375,7 +391,13 @@ impl BlockFhe {
         let mut accs = Vec::with_capacity(t * dm);
         for idx in 0..t * dm {
             let acc = b.add(x1[idx], f[idx]);
-            out.push(b.requant(acc, w.resid_requant));
+            match self.out_acc_bits {
+                Some(wbits) => {
+                    b.declare_width(acc, wbits);
+                    out.push(acc);
+                }
+                None => out.push(b.requant(acc, w.resid_requant)),
+            }
             accs.push(acc);
         }
         (out, accs)
@@ -492,7 +514,13 @@ impl BlockFhe {
         let mut accs = Vec::with_capacity(dm);
         for c in 0..dm {
             let acc = b.add(x1[c], f[c]);
-            out.push(b.requant(acc, w.resid_requant));
+            match self.out_acc_bits {
+                Some(wbits) => {
+                    b.declare_width(acc, wbits);
+                    out.push(acc);
+                }
+                None => out.push(b.requant(acc, w.resid_requant)),
+            }
             accs.push(acc);
         }
         (out, accs, new_pairs)
@@ -617,7 +645,13 @@ impl BlockFhe {
         for e in 0..t * dm {
             let acc = x1.data[e] + f.data[e];
             accs.data[e] = acc;
-            out.data[e] = clamp(w.resid_requant.apply(acc));
+            // A wide-declared output tail keeps the raw accumulator (no
+            // requant PBS is emitted).
+            out.data[e] = if self.out_acc_bits.is_some() {
+                acc
+            } else {
+                clamp(w.resid_requant.apply(acc))
+            };
         }
         (out, accs)
     }
@@ -714,6 +748,20 @@ impl ModelFhe {
         self.blocks.len()
     }
 
+    /// Declare the stack's output accumulators `bits` wide: the last
+    /// block's final residual requant is replaced by a declared-width
+    /// accumulator (see [`BlockFhe::with_output_accumulator_bits`]), so
+    /// `forward()` returns `[T, D·limbs]` radix limb vectors and
+    /// [`Self::mirror`] keeps the last layer's raw accumulators.
+    /// Interior layers are untouched — they feed the next layer's narrow
+    /// residual stream. Resets the plan cache.
+    pub fn with_accumulator_bits(mut self, bits: u32) -> Self {
+        let last = self.blocks.last_mut().expect("a model has at least one block");
+        last.out_acc_bits = Some(bits);
+        self.cache = Arc::new(PlanCache::default());
+        self
+    }
+
     /// Ciphertexts the stacked plan takes: the `[T, D]` input grid.
     pub fn n_plan_inputs(&self, t: usize) -> usize {
         t * self.split.d_model
@@ -776,7 +824,8 @@ impl ModelFhe {
         let t = x.rows;
         let refs = self.input_refs(x);
         let data = self.plan_for(ctx, t).execute_ref(ctx, &refs);
-        CtMatrix { rows: t, cols: self.split.d_model, data }
+        let cols = data.len() / t;
+        CtMatrix { rows: t, cols, data }
     }
 
     /// Plaintext mirror of the exact integer function the stacked plan

@@ -102,6 +102,18 @@ impl DecodeFhe {
         }
     }
 
+    /// Declare the wrapped model's output accumulators `bits` wide (see
+    /// [`ModelFhe::with_accumulator_bits`]): step and prefill output
+    /// *rows* become radix limb vectors, while the cache bundle stays
+    /// narrow — cached rows are layer inputs, which wide outputs never
+    /// feed. Resets both plan caches.
+    pub fn with_accumulator_bits(mut self, bits: u32) -> Self {
+        self.model = self.model.with_accumulator_bits(bits);
+        self.step_cache = Arc::new(PlanCache::default());
+        self.prefill_cache = Arc::new(PlanCache::default());
+        self
+    }
+
     pub fn d_model(&self) -> usize {
         self.model.split.d_model
     }
@@ -298,11 +310,16 @@ impl DecodeFhe {
     }
 
     /// Split a prefill plan's output vector into (causal `[T, D]` output
-    /// rows, cache bundle at prefix `t`).
+    /// rows, cache bundle at prefix `t`). The cache bundle has a fixed
+    /// (always-narrow) length, so the split point is measured from the
+    /// back — under a declared accumulator width the output rows expand
+    /// to `D·limbs` slots each and this still lands correctly.
     pub fn cache_from_prefill(&self, t: usize, mut outputs: Vec<CtInt>) -> (Vec<CtInt>, Vec<CtInt>) {
         let dm = self.d_model();
-        assert_eq!(outputs.len(), t * dm + self.cache_len(t), "prefill output length");
-        let cache = outputs.split_off(t * dm);
+        let cache_len = self.cache_len(t);
+        assert!(outputs.len() >= t * dm + cache_len, "prefill output length");
+        assert_eq!((outputs.len() - cache_len) % t, 0, "ragged prefill output rows");
+        let cache = outputs.split_off(outputs.len() - cache_len);
         (outputs, cache)
     }
 
@@ -319,8 +336,11 @@ impl DecodeFhe {
         let dm = self.d_model();
         let vcols = self.vcols();
         assert_eq!(old_cache.len(), self.cache_len(t_cached), "pre-step cache length");
-        assert_eq!(step_out.len(), self.n_step_outputs(), "step output length");
-        let tail = step_out.split_off(dm);
+        // The cache extension is always narrow, so split from the back:
+        // a wide-declared model returns `D·limbs` output-row slots.
+        let ext_len = self.n_layers() * self.per_position_len();
+        assert!(step_out.len() >= dm + ext_len, "step output length");
+        let tail = step_out.split_off(step_out.len() - ext_len);
         let out_row = step_out;
         let mut cache = Vec::with_capacity(self.cache_len(t_cached + 1));
         let mut old = old_cache.into_iter();
@@ -345,7 +365,8 @@ impl DecodeFhe {
         let refs: Vec<&CtInt> = x.data.iter().collect();
         let outputs = self.prefill_plan_for(ctx, t).execute_ref(ctx, &refs);
         let (out, cache) = self.cache_from_prefill(t, outputs);
-        (CtMatrix { rows: t, cols: dm, data: out }, cache)
+        let cols = out.len() / t;
+        (CtMatrix { rows: t, cols, data: out }, cache)
     }
 
     /// Encrypted decode step: one new input row against (and consuming)
@@ -577,7 +598,13 @@ fn mirror_block_step(
     let mut accs = Vec::with_capacity(dm);
     for c in 0..dm {
         let acc = x1[c] + f.data[c];
-        out.push(clamp(w.resid_requant.apply(acc)));
+        // Wide-declared output tail: the raw accumulator, as in
+        // `BlockFhe::mirror_step`.
+        out.push(if blk.out_acc_bits.is_some() {
+            acc
+        } else {
+            clamp(w.resid_requant.apply(acc))
+        });
         accs.push(acc);
     }
     (out, accs, vp_new, vn_new)

@@ -83,6 +83,23 @@ impl MultiHeadFhe {
         MultiHeadFhe { mechanism, n_heads, shared_kv, proto, cache: Arc::new(PlanCache::default()) }
     }
 
+    /// Declare every head's output accumulators `bits` wide (see
+    /// [`InhibitorFhe::with_accumulator_bits`] for the per-head
+    /// contract): the combined plan's outputs become radix limb
+    /// vectors and `forward()` returns `[T, H·d·limbs]`, limbs
+    /// innermost. Resets the plan cache.
+    pub fn with_accumulator_bits(mut self, bits: u32) -> Self {
+        self.proto = match self.proto {
+            HeadProto::Inhibitor(h) => HeadProto::Inhibitor(h.with_accumulator_bits(bits)),
+            HeadProto::InhibitorSigned(h) => {
+                HeadProto::InhibitorSigned(h.with_accumulator_bits(bits))
+            }
+            HeadProto::DotProduct(h) => HeadProto::DotProduct(h.with_accumulator_bits(bits)),
+        };
+        self.cache = Arc::new(PlanCache::default());
+        self
+    }
+
     /// Ciphertexts the combined plan takes: H Q segments of `T·d` each,
     /// plus H (or, under `shared_kv`, one) K and V segment pairs.
     pub fn n_plan_inputs(&self, t: usize, d: usize) -> usize {
@@ -268,7 +285,8 @@ impl MultiHeadFhe {
         let d = q.cols / self.n_heads;
         let refs = self.input_refs(q, k, v);
         let data = self.plan_for(ctx, t, d).execute_ref(ctx, &refs);
-        CtMatrix { rows: t, cols: self.n_heads * d, data }
+        let cols = data.len() / t;
+        CtMatrix { rows: t, cols, data }
     }
 
     /// One head's mirror, dispatched per mechanism (the unsigned

@@ -8,7 +8,7 @@ pub mod precision;
 pub mod search;
 
 pub use precision::{
-    profile, profile_block, profile_multihead, profile_prefill, profile_step, BlockProfile,
-    CircuitProfile, MultiHeadProfile, StepProfile,
+    profile, profile_block, profile_multihead, profile_prefill, profile_radix, profile_step,
+    BlockProfile, CircuitProfile, MultiHeadProfile, RadixProfile, StepProfile,
 };
 pub use search::{optimize, table2, OptimizedParams, SearchConfig, Table2Row};

@@ -134,6 +134,18 @@ pub fn params_feasible(p: &TfheParams, linear_growth: f64, p_fail: f64) -> bool 
     decode_failure_prob(at_rotation, delta_half) <= p_fail
 }
 
+/// Packed-path variant of [`params_feasible`]: a `2^ϑ`-way multi-value
+/// bootstrap pre-rotates by the *coarse* half-slot, so the phase must
+/// clear a window ϑ bits narrower than the standard mod-switch target —
+/// the "coarse-rounding headroom" a set spends when it advertises
+/// `many_lut_log > 0`. Degenerates to the standard check at ϑ = 0.
+pub fn params_feasible_packed(p: &TfheParams, linear_growth: f64, p_fail: f64) -> bool {
+    let delta_half = 2f64.powi(-(p.message_bits as i32) - 2 - p.many_lut_log as i32);
+    let worst_in = post_pbs_var(p).max(p.lwe_noise_std * p.lwe_noise_std) * linear_growth;
+    let at_rotation = worst_in + mod_switch_var(p);
+    decode_failure_prob(at_rotation, delta_half) <= p_fail
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +194,35 @@ mod tests {
                 mod_switch_var(&p)
             );
         }
+    }
+
+    #[test]
+    fn bench_packed_sets_are_feasible() {
+        // The noise side of the coarse-rounding headroom invariant:
+        // every bench width that advertises a packed budget must clear
+        // the ϑ-bits-narrower half-slot at the same linear growth and
+        // failure class the unpacked bench check uses — packing may
+        // spend headroom, never correctness.
+        let mut packed = 0;
+        for bits in 2..=7 {
+            let p = TfheParams::bench_for_bits(bits);
+            packed += (p.many_lut_log > 0) as u32;
+            assert!(
+                params_feasible_packed(&p, 8.0, 2f64.powi(-17)),
+                "bench set {bits} bits infeasible at ϑ={}: pbs_var={:e} ms_var={:e}",
+                p.many_lut_log,
+                post_pbs_var(&p),
+                mod_switch_var(&p)
+            );
+        }
+        assert!(packed >= 3, "bench curve must provision packing on the low widths");
+        // At ϑ = 0 the packed check is exactly the standard one.
+        let p = TfheParams::bench_for_bits(7);
+        assert_eq!(p.many_lut_log, 0);
+        assert_eq!(
+            params_feasible_packed(&p, 8.0, 2f64.powi(-17)),
+            params_feasible(&p, 8.0, 2f64.powi(-17))
+        );
     }
 
     #[test]

@@ -17,6 +17,7 @@
 use crate::attention::{HeadSplit, Mechanism};
 use crate::fhe_circuits::{DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
 use crate::tfhe::plan::{CircuitPlan, PlanRewriter, RewriteConfig};
+use crate::tfhe::radix::RadixSpec;
 
 /// Profile-side counts of one circuit plan: LUT evaluations and linear
 /// ops after the always-safe CSE pass (what `forward()` executes on any
@@ -535,6 +536,86 @@ pub fn profile_prefill(
     }
 }
 
+/// Static profile of the radix legalization pass (`tfhe::plan`, see
+/// rust/DESIGN.md §10) on the canonical accumulator shape: a sum of
+/// `n_terms` bootstrap outputs declared wider than the native message
+/// space and split onto `spec`. Checked against the legalized plan's own
+/// `pbs_count()`/`blind_rotation_count()` oracles and the rewriter's
+/// carry counters by a unit test so the forms can never drift from the
+/// legalizer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RadixProfile {
+    /// Limb shape the pass legalizes against.
+    pub spec: RadixSpec,
+    /// Narrow bootstrap outputs feeding the wide accumulator.
+    pub n_terms: usize,
+    /// The packing budget the rotation figures assume (1 = packing off).
+    pub max_multi_lut: usize,
+    /// Digit-decomposition LUT evaluations: `span` same-input tables per
+    /// narrow source entering the wide domain.
+    pub decomp_pbs: u64,
+    /// Blind rotations of the decomposition groups: ⌈span/budget⌉ per
+    /// source once packing fuses the same-input digit tables.
+    pub decomp_rotations: u64,
+    /// Carry-propagation ripples the capacity discipline forces: one per
+    /// accumulator overflow during the fold, plus the output ripple
+    /// whenever the result is not already canonical.
+    pub canons: u64,
+    /// Message/carry/top-wrap LUT evaluations: `2k − 1` per ripple.
+    pub carry_pbs: u64,
+    /// Rotations of those ripples: the message and carry tables of one
+    /// limb share a rotation at budget ≥ 2, the top wrap stands alone.
+    pub carry_rotations: u64,
+    /// Total LUT evaluations the legalization adds to the narrow plan.
+    pub pbs: u64,
+    /// Total blind rotations the legalization adds.
+    pub blind_rotations: u64,
+}
+
+/// Closed-form radix-legalization counts: the exact bound-bookkeeping
+/// simulation of the legalizer's left-first `Sum` fold. Each term enters
+/// the wide domain with limbs bounded by `digit_max`; the running
+/// accumulator ripples whenever the next add could push a limb past
+/// `add_cap`, and once more at the output unless a lone term's
+/// decomposition already fills every limb (span = k).
+pub fn profile_radix(n_terms: usize, spec: RadixSpec, max_multi_lut: usize) -> RadixProfile {
+    assert!(n_terms >= 1, "a radix profile needs at least one term");
+    let budget = max_multi_lut.max(1) as u64;
+    let (k, span) = (spec.limbs as u64, spec.span() as u64);
+    let (dm, cap) = (spec.digit_max(), spec.add_cap());
+    let n = n_terms as u64;
+    let decomp_pbs = n * span;
+    let decomp_rotations = n * span.div_ceil(budget);
+    let mut canons = 0u64;
+    let mut bound = dm;
+    let mut canonical = span == k;
+    for _ in 1..n_terms {
+        if bound + dm > cap {
+            canons += 1;
+            bound = dm;
+        }
+        bound += dm;
+        canonical = false;
+    }
+    if !canonical {
+        canons += 1;
+    }
+    let carry_pbs = canons * (2 * k - 1);
+    let per_ripple = (k - 1) * if budget >= 2 { 1 } else { 2 } + 1;
+    RadixProfile {
+        spec,
+        n_terms,
+        max_multi_lut,
+        decomp_pbs,
+        decomp_rotations,
+        canons,
+        carry_pbs,
+        carry_rotations: canons * per_ripple,
+        pbs: decomp_pbs + carry_pbs,
+        blind_rotations: decomp_rotations + canons * per_ripple,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -777,6 +858,70 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn radix_profile_matches_the_legalized_plan_oracles() {
+        // The closed forms must reproduce what the legalized plan
+        // actually counts on the canonical accumulator shape — n
+        // distinct-LUT bootstraps feeding one wide-declared Sum — for
+        // every limb grid spec, several term counts, and the same
+        // budgets the other profiles sweep. Pure DAG analysis, no
+        // crypto: the narrow plan costs exactly n LUT evaluations and n
+        // rotations, so the legalization delta is the whole difference.
+        use crate::tfhe::plan::CircuitBuilder;
+        use crate::tfhe::radix::RadixConfig;
+        for &(w, native, declared) in &[(5u32, 8u32, 10u32), (3, 6, 9), (2, 6, 8), (1, 4, 6)] {
+            let cfg = RadixConfig::new(native).with_limb_bits(w);
+            let spec = cfg.spec_for(declared).unwrap();
+            for n in [1usize, 2, 3, 7] {
+                let build = || {
+                    let mut b = CircuitBuilder::new();
+                    let xs = b.inputs(n);
+                    let terms: Vec<_> = xs
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &x)| {
+                            let lut = b.lut(move |v| v + i as i64);
+                            b.pbs(x, lut)
+                        })
+                        .collect();
+                    let s = b.sum(&terms);
+                    b.output(s);
+                    b.declare_width(s, declared);
+                    b.build()
+                };
+                for budget in [1usize, 2, 4] {
+                    let p = profile_radix(n, spec, budget);
+                    let (plan, stats) =
+                        PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: budget })
+                            .with_radix(cfg)
+                            .rewrite(build());
+                    let tag = format!("w={w} native={native} n={n} budget={budget}");
+                    assert_eq!(plan.pbs_count(), n as u64 + p.pbs, "{tag}: LUT evals");
+                    assert_eq!(
+                        plan.blind_rotation_count(),
+                        n as u64 + p.blind_rotations,
+                        "{tag}: rotations"
+                    );
+                    assert_eq!(stats.carry_luts, p.carry_pbs, "{tag}: carry LUTs");
+                    assert_eq!(stats.carry_rotations, p.carry_rotations, "{tag}: carry rots");
+                    assert_eq!(p.pbs, p.decomp_pbs + p.carry_pbs);
+                }
+            }
+        }
+        // The capacity discipline is visible in the profile itself: a
+        // long fold at a cramped native space ripples strictly more
+        // often than the same fold with generous limb headroom.
+        let cramped = profile_radix(16, RadixSpec::new(1, 6, 4), 2);
+        let roomy = profile_radix(16, RadixSpec::new(3, 3, 8), 2);
+        assert!(cramped.canons > roomy.canons, "{cramped:?} vs {roomy:?}");
+        // Packing pays off: budget ≥ 2 needs strictly fewer rotations
+        // than unpacked execution of the same legalized plan.
+        let unpacked = profile_radix(4, RadixSpec::new(2, 4, 6), 1);
+        let packed = profile_radix(4, RadixSpec::new(2, 4, 6), 2);
+        assert_eq!(unpacked.pbs, packed.pbs);
+        assert!(packed.blind_rotations < unpacked.blind_rotations);
     }
 
     #[test]

@@ -68,17 +68,15 @@ pub fn optimize(profile: &CircuitProfile, cfg: SearchConfig) -> Option<Optimized
                         profile.linear_growth,
                         cfg,
                     ) {
-                        let p = TfheParams {
-                            lwe_dim: n,
+                        let p = TfheParams::search_candidate(
+                            n,
                             poly_size,
-                            glwe_dim: 1,
-                            lwe_noise_std: min_noise_for_security(n, cfg.security),
-                            glwe_noise_std: glwe_noise,
-                            pbs_decomp: DecompParams::new(base_log, level),
-                            ks_decomp: ks,
-                            message_bits: msg_bits,
-                            many_lut_log: 0,
-                        };
+                            glwe_noise,
+                            DecompParams::new(base_log, level),
+                            ks,
+                            msg_bits,
+                            cfg.security,
+                        );
                         let cost = circuit_cost(&p, profile.pbs_count, profile.linear_ops).0;
                         let improved = match &best {
                             Some((c, _)) => cost < *c,
@@ -111,17 +109,15 @@ fn min_feasible_lwe_dim(
     cfg: SearchConfig,
 ) -> Option<usize> {
     let feasible = |n: usize| -> bool {
-        let p = TfheParams {
-            lwe_dim: n,
+        let p = TfheParams::search_candidate(
+            n,
             poly_size,
-            glwe_dim: 1,
-            lwe_noise_std: min_noise_for_security(n, cfg.security),
-            glwe_noise_std: glwe_noise,
+            glwe_noise,
             pbs_decomp,
             ks_decomp,
-            message_bits: msg_bits,
-            many_lut_log: 0,
-        };
+            msg_bits,
+            cfg.security,
+        );
         params_feasible(&p, linear_growth, cfg.p_fail)
     };
     let (mut lo, mut hi) = (500usize, 1100usize);

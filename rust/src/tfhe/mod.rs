@@ -25,6 +25,7 @@ pub mod lwe;
 pub mod ops;
 pub mod params;
 pub mod plan;
+pub mod radix;
 pub mod torus;
 
 /// Serializes unit tests that bootstrap (and hence touch the
@@ -50,3 +51,4 @@ pub use plan::{
     rewrites_disabled, set_wavefront_dispatch, wavefront_enabled, CircuitBuilder, CircuitPlan,
     LevelJob, LutRef, NodeId, PlanRewriter, PlanRun, RewriteConfig, RewriteStats,
 };
+pub use radix::{set_radix_native_bits, RadixConfig, RadixInfo, RadixSpec};

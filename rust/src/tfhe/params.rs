@@ -189,13 +189,23 @@ impl TfheParams {
             _ => (8192, DecompParams::new(15, 2)),
         };
         // Higher precision needs a quieter small key (KS noise ∝ σ_lwe²),
-        // and a finer KS decomposition.
+        // and a finer KS decomposition. Bits 4 takes the deeper split
+        // already at bench scale: its packed budget (below) narrows the
+        // half-slot by one bit, and the (4,6) rows would eat the margin.
         let lwe_dim = 750 + 30 * message_bits as usize;
         let ks_decomp = match message_bits {
-            0..=4 => DecompParams::new(4, 6),
-            5..=6 => DecompParams::new(3, 8),
+            0..=3 => DecompParams::new(4, 6),
+            4..=6 => DecompParams::new(3, 8),
             _ => DecompParams::new(2, 14),
         };
+        // Packed budget: a 2^ϑ-way multi-value bootstrap mod-switches to
+        // a ϑ-bit-coarser grid, so ϑ > 0 is only advertised where the
+        // λ=128 curve still clears the narrower half-slot at the bench
+        // failure class (2^-17) — through 4 message bits at these macro
+        // parameters, pinned by `optimizer::noise::bench_packed_sets_are_
+        // feasible` and the headroom test below. Wider spaces stay
+        // unpacked until the curve provisions the extra margin.
+        let many_lut_log = if message_bits <= 4 { 1 } else { 0 };
         TfheParams {
             lwe_dim,
             poly_size,
@@ -205,10 +215,35 @@ impl TfheParams {
             pbs_decomp,
             ks_decomp,
             message_bits,
-            // The bench curve sizes N for the *standard* mod-switch; a
-            // packing budget would spend margin the λ=128 noise curve
-            // has not provisioned. Enable per-width after validating the
-            // coarse-rounding failure rate on a perf host.
+            many_lut_log,
+        }
+    }
+
+    /// Candidate set the parameter search probes: both the grid walk and
+    /// the feasibility binary search in `optimizer::search` build their
+    /// candidates through this one constructor so the candidate shape
+    /// (k = 1, noise on the λ=`security` curve, packing off — the search
+    /// costs by LUT evaluations, a conservative bound when the chosen
+    /// set carries no packing headroom) cannot silently diverge between
+    /// the two call sites.
+    pub fn search_candidate(
+        lwe_dim: usize,
+        poly_size: usize,
+        glwe_noise_std: f64,
+        pbs_decomp: DecompParams,
+        ks_decomp: DecompParams,
+        message_bits: u32,
+        security: u32,
+    ) -> Self {
+        TfheParams {
+            lwe_dim,
+            poly_size,
+            glwe_dim: 1,
+            lwe_noise_std: crate::optimizer::noise::min_noise_for_security(lwe_dim, security),
+            glwe_noise_std,
+            pbs_decomp,
+            ks_decomp,
+            message_bits,
             many_lut_log: 0,
         }
     }
@@ -281,5 +316,40 @@ mod tests {
             p.validate().unwrap_or_else(|e| panic!("bits={bits}: {e}"));
             assert!(p.lwe_dim >= 750);
         }
+    }
+
+    #[test]
+    fn bench_packed_budget_keeps_coarse_rounding_headroom() {
+        // The coarse-rounding headroom invariant at bench scale: every
+        // width that advertises a packed budget must keep at least one
+        // spare power of two between the packed sub-slot floor
+        // 2^(p + 1 + ϑ) and N — the same clearance ratio the unpacked
+        // curve keeps between 2^(p + 1) and N — so pbs_multi's coarser
+        // mod-switch grid never lands inside the half-slot the standard
+        // path was provisioned to resolve. The noise side of the same
+        // invariant (the λ=128 curve clearing the narrower half-slot at
+        // the 2^-17 bench failure class) is pinned in
+        // `optimizer::noise::tests::bench_packed_sets_are_feasible`.
+        let mut packed_widths = 0;
+        for bits in 2..=8u32 {
+            let p = TfheParams::bench_for_bits(bits);
+            if p.many_lut_log == 0 {
+                continue;
+            }
+            packed_widths += 1;
+            assert!(
+                p.poly_size >= (1usize << (p.message_bits + 2 + p.many_lut_log)),
+                "bits={bits}: N={} leaves no coarse-rounding headroom at ϑ={}",
+                p.poly_size,
+                p.many_lut_log
+            );
+            assert!(p.max_multi_lut() >= 2, "bits={bits}");
+        }
+        // Table-4 / plan_bench widths exercise packed rotations: the
+        // budget is provisioned on the low-precision bench rows, not
+        // merely allowed by validate().
+        assert!(packed_widths >= 3, "only {packed_widths} bench widths carry a packed budget");
+        assert_eq!(TfheParams::bench_for_bits(4).max_multi_lut(), 2);
+        assert_eq!(TfheParams::bench_for_bits(5).max_multi_lut(), 1, "unprovisioned width");
     }
 }

@@ -144,6 +144,11 @@ pub struct CircuitBuilder {
     /// the *same* `LutRef`, so CSE/packing see cross-layer requants as
     /// one table rather than per-layer clones.
     requant_luts: HashMap<(i64, u32, RequantKind), LutRef>,
+    /// Declared bit-widths ([`CircuitBuilder::declare_width`]): nodes
+    /// whose accumulator must hold more bits than the native message
+    /// space. The radix legalization pass inside [`PlanRewriter`]
+    /// rewrites them into limb vectors; undeclared plans are untouched.
+    widths: HashMap<NodeId, u32>,
 }
 
 /// Post-function fused into a requant table (see
@@ -171,6 +176,7 @@ impl CircuitBuilder {
             outputs: Vec::new(),
             std_luts: [None; 5],
             requant_luts: HashMap::new(),
+            widths: HashMap::new(),
         }
     }
 
@@ -360,9 +366,24 @@ impl CircuitBuilder {
         self.outputs.push(id);
     }
 
+    /// Declare that `id`'s value needs `bits` bits of accumulator width.
+    /// Widths at or below the executing set's native message space are
+    /// free annotations (legalization is a no-op); wider declarations
+    /// make the radix pass split the node — and everything it feeds —
+    /// into message-space limbs. Re-declaring keeps the widest request.
+    pub fn declare_width(&mut self, id: NodeId, bits: u32) {
+        self.check(id);
+        assert!((1..=32).contains(&bits), "declared width must be 1..=32 bits, got {bits}");
+        let w = self.widths.entry(id).or_insert(bits);
+        *w = (*w).max(bits);
+    }
+
     /// Finalize: runs the leveling pass and freezes the DAG.
     pub fn build(self) -> CircuitPlan {
-        CircuitPlan::from_parts(self.nodes, self.luts, self.n_inputs, self.outputs)
+        let mut plan =
+            CircuitPlan::from_parts(self.nodes, self.luts, self.n_inputs, self.outputs);
+        plan.widths = self.widths;
+        plan
     }
 }
 
@@ -385,6 +406,13 @@ pub struct CircuitPlan {
     /// executor's liveness information.
     uses: Vec<u32>,
     max_level: usize,
+    /// Declared accumulator widths awaiting legalization (cleared once
+    /// the radix pass has rewritten the plan; remapped in place by
+    /// CSE/packing so a declared plan survives any pass order).
+    widths: HashMap<NodeId, u32>,
+    /// Set by the radix legalization pass: how wide values were split
+    /// into limbs and which outputs now span `spec.limbs` slots.
+    radix: Option<super::radix::RadixInfo>,
 }
 
 impl CircuitPlan {
@@ -442,7 +470,17 @@ impl CircuitPlan {
         for &out in &outputs {
             uses[out] += 1;
         }
-        CircuitPlan { nodes, luts, n_inputs, outputs, levels, uses, max_level }
+        CircuitPlan {
+            nodes,
+            luts,
+            n_inputs,
+            outputs,
+            levels,
+            uses,
+            max_level,
+            widths: HashMap::new(),
+            radix: None,
+        }
     }
 
     /// Decompose into the rewriter's working set (nodes, LUT registry,
@@ -454,6 +492,33 @@ impl CircuitPlan {
     /// Number of circuit input ciphertexts.
     pub fn n_inputs(&self) -> usize {
         self.n_inputs
+    }
+
+    /// Radix legalization record, when the rewriter widened this plan:
+    /// the limb spec plus which outputs now occupy `spec.limbs` slots.
+    pub fn radix(&self) -> Option<&super::radix::RadixInfo> {
+        self.radix.as_ref()
+    }
+
+    /// Declared accumulator widths not yet legalized (empty after the
+    /// radix pass runs, and on plans that never declared any).
+    pub fn declared_widths(&self) -> &HashMap<NodeId, u32> {
+        &self.widths
+    }
+
+    /// Order-sensitive structural fingerprint of the DAG (nodes with
+    /// commutative operand order normalized, LUTs by registry index),
+    /// ignoring the analysis tables. Tests pin "legalization is a no-op
+    /// when the declared width fits the native space" by hash equality.
+    pub fn structural_hash(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.n_inputs.hash(&mut h);
+        self.outputs.hash(&mut h);
+        for node in &self.nodes {
+            node_key(node).hash(&mut h);
+        }
+        h.finish()
     }
 
     /// Number of circuit outputs.
@@ -1085,27 +1150,56 @@ pub struct RewriteStats {
     pub multi_groups: usize,
     /// `Pbs` nodes folded into those groups (≥ 2 per group).
     pub packed_luts: usize,
+    /// Narrow sources the radix pass decomposed into limb vectors.
+    pub radix_widened: usize,
+    /// Limb count of the radix spec the pass legalized against (0 when
+    /// the pass did not fire).
+    pub radix_limbs: usize,
+    /// Carry-propagation LUT evaluations the radix pass emitted
+    /// (message/carry/top-wrap tables; decomposition digit LUTs are
+    /// ordinary `Pbs` nodes counted by the plan oracles).
+    pub carry_luts: u64,
+    /// Blind rotations those carry LUTs cost after packing: the message
+    /// and carry table of one limb read the same input, so they share a
+    /// rotation whenever the budget allows ϑ ≥ 1 groups.
+    pub carry_rotations: u64,
 }
 
-/// Ordered rewrite pipeline over [`CircuitPlan`]s: CSE first (so
-/// duplicate `Pbs` nodes collapse instead of wasting packing slots),
-/// then multi-value packing. Rewritten plans go through the same
+/// Ordered rewrite pipeline over [`CircuitPlan`]s: radix legalization
+/// first (declared-wide nodes become limb vectors, so the passes behind
+/// it see only native-width nodes), then CSE (so duplicate `Pbs` nodes
+/// collapse instead of wasting packing slots), then multi-value packing —
+/// which is what turns the legalizer's same-input digit and carry tables
+/// into shared blind rotations. Rewritten plans go through the same
 /// leveling pass as freshly built ones, so every consumer of the IR —
 /// `execute`, the fused executor, the optimizer profile, the benches —
 /// picks the rewrites up transparently. Running the pipeline twice is a
 /// no-op (pinned by tests).
 pub struct PlanRewriter {
     cfg: RewriteConfig,
+    /// Radix legalization config; `None` skips the pass entirely (plans
+    /// with declared widths keep them, un-legalized).
+    radix: Option<super::radix::RadixConfig>,
 }
 
 impl PlanRewriter {
     pub fn new(cfg: RewriteConfig) -> Self {
-        PlanRewriter { cfg }
+        PlanRewriter { cfg, radix: None }
     }
 
-    /// Pipeline at the executing context's parameter budget.
+    /// Enable radix legalization against `rcfg`'s native message space.
+    pub fn with_radix(mut self, rcfg: super::radix::RadixConfig) -> Self {
+        self.radix = Some(rcfg);
+        self
+    }
+
+    /// Pipeline at the executing context's parameter budget, radix
+    /// legalization armed at the set's native message width (so plans
+    /// without declared widths are untouched, and declared-wide plans
+    /// legalize against the space they will actually execute in).
     pub fn for_ctx(ctx: &FheContext) -> Self {
         Self::new(RewriteConfig::for_params(&ctx.sk.params))
+            .with_radix(super::radix::RadixConfig::for_params(&ctx.sk.params))
     }
 
     pub fn config(&self) -> RewriteConfig {
@@ -1114,16 +1208,38 @@ impl PlanRewriter {
 
     /// Run the configured passes, returning the rewritten plan and what
     /// changed.
-    pub fn rewrite(&self, plan: CircuitPlan) -> (CircuitPlan, RewriteStats) {
+    pub fn rewrite(&self, mut plan: CircuitPlan) -> (CircuitPlan, RewriteStats) {
         let mut stats = RewriteStats::default();
-        let (mut nodes, luts, n_inputs, mut outputs) = plan.into_parts();
+        let prev_radix = plan.radix.take();
+        let mut widths = std::mem::take(&mut plan.widths);
+        let (mut nodes, mut luts, n_inputs, mut outputs) = plan.into_parts();
+        let radix_info = match &self.radix {
+            Some(rcfg) if !widths.is_empty() => radix_pass(
+                &mut nodes,
+                &mut luts,
+                &mut outputs,
+                &widths,
+                rcfg,
+                self.cfg.max_multi_lut.max(1),
+                &mut stats,
+            ),
+            _ => None,
+        };
+        if radix_info.is_some() {
+            // The declared widths are satisfied; a second rewrite must
+            // not re-legalize the limb nodes (idempotence).
+            widths.clear();
+        }
         if self.cfg.cse {
-            cse_pass(&mut nodes, &mut outputs, &mut stats);
+            cse_pass(&mut nodes, &mut outputs, &mut widths, &mut stats);
         }
         if self.cfg.max_multi_lut > 1 {
-            pack_pass(&mut nodes, &mut outputs, self.cfg.max_multi_lut, &mut stats);
+            pack_pass(&mut nodes, &mut outputs, &mut widths, self.cfg.max_multi_lut, &mut stats);
         }
-        (CircuitPlan::from_parts(nodes, luts, n_inputs, outputs), stats)
+        let mut out = CircuitPlan::from_parts(nodes, luts, n_inputs, outputs);
+        out.widths = widths;
+        out.radix = radix_info.or(prev_radix);
+        (out, stats)
     }
 }
 
@@ -1195,7 +1311,12 @@ fn remap_node(node: &Node, remap: &[NodeId]) -> Node {
 /// canonicalized key was already seen. Because a duplicate's operands
 /// were remapped to the survivor's first, chains of duplicates collapse
 /// in a single pass, and the pass is idempotent.
-fn cse_pass(nodes: &mut Vec<Node>, outputs: &mut [NodeId], stats: &mut RewriteStats) {
+fn cse_pass(
+    nodes: &mut Vec<Node>,
+    outputs: &mut [NodeId],
+    widths: &mut HashMap<NodeId, u32>,
+    stats: &mut RewriteStats,
+) {
     let mut remap: Vec<NodeId> = Vec::with_capacity(nodes.len());
     let mut seen: HashMap<NodeKey, NodeId> = HashMap::with_capacity(nodes.len());
     let mut kept: Vec<Node> = Vec::with_capacity(nodes.len());
@@ -1217,7 +1338,21 @@ fn cse_pass(nodes: &mut Vec<Node>, outputs: &mut [NodeId], stats: &mut RewriteSt
     for out in outputs.iter_mut() {
         *out = remap[*out];
     }
+    remap_widths(widths, &remap);
     *nodes = kept;
+}
+
+/// Send pending width declarations through a pass's id remap (merged
+/// declarations keep the widest request, matching `declare_width`).
+fn remap_widths(widths: &mut HashMap<NodeId, u32>, remap: &[NodeId]) {
+    if widths.is_empty() {
+        return;
+    }
+    let old = std::mem::take(widths);
+    for (id, w) in old {
+        let e = widths.entry(remap[id]).or_insert(w);
+        *e = (*e).max(w);
+    }
 }
 
 /// Multi-value packing: group `Pbs` nodes by input ciphertext, split
@@ -1230,6 +1365,7 @@ fn cse_pass(nodes: &mut Vec<Node>, outputs: &mut [NodeId], stats: &mut RewriteSt
 fn pack_pass(
     nodes: &mut Vec<Node>,
     outputs: &mut [NodeId],
+    widths: &mut HashMap<NodeId, u32>,
     max_multi: usize,
     stats: &mut RewriteStats,
 ) {
@@ -1292,7 +1428,422 @@ fn pack_pass(
     for out in outputs.iter_mut() {
         *out = remap[*out];
     }
+    remap_widths(widths, &remap);
     *nodes = kept;
+}
+
+// ---------------------------------------------------------------------------
+// Radix legalization (see rust/DESIGN.md §10)
+// ---------------------------------------------------------------------------
+
+/// A wide value mid-legalization: little-endian limb node ids plus the
+/// bookkeeping the capacity discipline runs on. `bound` is an upper
+/// bound on any limb's magnitude and must never exceed the spec's
+/// `add_cap` — the ripple injects up to `carry_cap` into a limb before
+/// its split LUTs fire, and the sum has to stay inside the native
+/// message space the LUTs resolve.
+#[derive(Clone)]
+struct WideVal {
+    limbs: Vec<NodeId>,
+    bound: i64,
+    /// Limbs are canonical digits (unsigned below a signed top limb).
+    canonical: bool,
+}
+
+/// Working state of the radix pass: the new node list being built, the
+/// shared LUT registry, register-once digit/carry tables, and the
+/// per-old-node caches that make decomposition and carry propagation
+/// happen at most once per value.
+struct Legalizer<'a> {
+    spec: super::radix::RadixSpec,
+    /// Packing budget the enclosing pipeline will run with (≥ 1); only
+    /// used to account `carry_rotations` — message + carry of one limb
+    /// share a blind rotation whenever the budget allows pairs.
+    budget: usize,
+    nodes: Vec<Node>,
+    luts: &'a mut Vec<LutFn>,
+    /// Old id → new id for nodes that keep a narrow incarnation
+    /// (`usize::MAX` placeholder for purely-wide linear nodes).
+    remap: Vec<NodeId>,
+    /// Old id → its wide form, once decomposed or computed. Doubles as
+    /// the canonicalization cache: `canon_old` stores the rippled form
+    /// back, so later consumers reuse it instead of re-propagating.
+    wides: Vec<Option<WideVal>>,
+    /// Digit-extraction tables, keyed by (divisions, is-quotient-digit).
+    digit_luts: HashMap<(usize, bool), LutRef>,
+    msg_lut: Option<LutRef>,
+    carry_lut: Option<LutRef>,
+    top_lut: Option<LutRef>,
+    widened: usize,
+    carry_luts_count: u64,
+    carry_rotations: u64,
+}
+
+impl<'a> Legalizer<'a> {
+    fn push(&mut self, node: Node) -> NodeId {
+        self.nodes.push(node);
+        self.nodes.len() - 1
+    }
+
+    fn add_lut(&mut self, f: impl Fn(i64) -> i64 + Send + Sync + 'static) -> LutRef {
+        self.luts.push(Arc::new(f));
+        LutRef(self.luts.len() - 1)
+    }
+
+    /// Message half of a carry split: `s mod B` (register-once).
+    fn msg_lut(&mut self) -> LutRef {
+        if let Some(l) = self.msg_lut {
+            return l;
+        }
+        let base = self.spec.base();
+        let l = self.add_lut(move |s| super::radix::carry_split(s, base).0);
+        self.msg_lut = Some(l);
+        l
+    }
+
+    /// Carry half of a carry split: `s div B` (register-once).
+    fn carry_lut(&mut self) -> LutRef {
+        if let Some(l) = self.carry_lut {
+            return l;
+        }
+        let base = self.spec.base();
+        let l = self.add_lut(move |s| super::radix::carry_split(s, base).1);
+        self.carry_lut = Some(l);
+        l
+    }
+
+    /// Signed wrap of the top limb into `[-B/2, B/2)` (register-once).
+    fn top_lut(&mut self) -> LutRef {
+        if let Some(l) = self.top_lut {
+            return l;
+        }
+        let base = self.spec.base();
+        let l = self.add_lut(move |s| super::radix::wrap_digit(s, base));
+        self.top_lut = Some(l);
+        l
+    }
+
+    /// Digit `j` of a narrow source (remainder digit, or the exact
+    /// signed quotient for the last digit of the decomposition span).
+    fn digit_lut(&mut self, j: usize, top: bool) -> LutRef {
+        if let Some(&l) = self.digit_luts.get(&(j, top)) {
+            return l;
+        }
+        let base = self.spec.base();
+        let l = self.add_lut(move |x| super::radix::decomp_digit(x, base, j, top));
+        self.digit_luts.insert((j, top), l);
+        l
+    }
+
+    /// Wide form of old node `old`, decomposing on first request.
+    /// Constants split into constant digit limbs (0 PBS); everything
+    /// else gets `span` digit LUTs on its narrow incarnation — the
+    /// same-input group the packing pass fuses into shared rotations.
+    fn get_wide(&mut self, old_nodes: &[Node], old: NodeId) -> WideVal {
+        if let Some(w) = &self.wides[old] {
+            return w.clone();
+        }
+        let spec = self.spec;
+        let w = if let Node::Const(c) = &old_nodes[old] {
+            let digits = spec.encode(*c);
+            let bound = digits.iter().map(|d| d.abs()).max().unwrap_or(0);
+            let limbs = digits.into_iter().map(|d| self.push(Node::Const(d))).collect();
+            WideVal { limbs, bound, canonical: true }
+        } else {
+            let src = self.remap[old];
+            debug_assert_ne!(src, usize::MAX, "wide source must have a narrow incarnation");
+            self.widened += 1;
+            let span = spec.span();
+            let mut limbs = Vec::with_capacity(spec.limbs);
+            for j in 0..span {
+                let lut = self.digit_lut(j, j + 1 == span);
+                limbs.push(self.push(Node::Pbs { input: src, lut }));
+            }
+            for _ in span..spec.limbs {
+                limbs.push(self.push(Node::Const(0)));
+            }
+            // The quotient digit sits below the top position whenever
+            // span < limbs, so the vector is only canonical when the
+            // decomposition fills every limb.
+            WideVal { limbs, bound: spec.digit_max(), canonical: span == spec.limbs }
+        };
+        self.wides[old] = Some(w.clone());
+        w
+    }
+
+    /// Emit a carry-propagation ripple: per non-top limb one packed
+    /// message + carry LUT pair on `limb + carry_in`, a signed wrap on
+    /// the top — `2k − 1` LUT evaluations, `k − 1` shared rotations plus
+    /// the top one at a ϑ ≥ 1 budget.
+    fn canon(&mut self, w: &WideVal) -> WideVal {
+        if w.canonical {
+            return w.clone();
+        }
+        let k = self.spec.limbs;
+        let mut limbs = Vec::with_capacity(k);
+        let mut carry: Option<NodeId> = None;
+        for j in 0..k {
+            let s = match carry {
+                None => w.limbs[j],
+                Some(c) => self.push(Node::Add(w.limbs[j], c)),
+            };
+            if j + 1 < k {
+                let m = self.msg_lut();
+                let c = self.carry_lut();
+                limbs.push(self.push(Node::Pbs { input: s, lut: m }));
+                carry = Some(self.push(Node::Pbs { input: s, lut: c }));
+            } else {
+                let t = self.top_lut();
+                limbs.push(self.push(Node::Pbs { input: s, lut: t }));
+            }
+        }
+        self.carry_luts_count += 2 * k as u64 - 1;
+        self.carry_rotations += (k as u64 - 1) * if self.budget >= 2 { 1 } else { 2 } + 1;
+        WideVal { limbs, bound: self.spec.digit_max(), canonical: true }
+    }
+
+    /// Canonicalize `old`'s wide form, caching the result so every later
+    /// consumer reuses the same rippled limbs.
+    fn canon_old(&mut self, old_nodes: &[Node], old: NodeId) -> WideVal {
+        let w = self.get_wide(old_nodes, old);
+        if w.canonical {
+            return w;
+        }
+        let c = self.canon(&w);
+        self.wides[old] = Some(c.clone());
+        c
+    }
+
+    /// Limb-wise combination of two wides, carry propagation inserted
+    /// only when the bound bookkeeping says the result could overflow
+    /// the native space. The *left* side ripples first (it is the running
+    /// accumulator in a `Sum` fold; `profile_radix` mirrors this order),
+    /// and two canonical values always fit (`2·digit_max ≤ add_cap` is a
+    /// spec invariant).
+    fn combine(
+        &mut self,
+        old_nodes: &[Node],
+        mut wa: WideVal,
+        a_old: Option<NodeId>,
+        mut wb: WideVal,
+        b_old: Option<NodeId>,
+        sub: bool,
+    ) -> WideVal {
+        if wa.bound + wb.bound > self.spec.add_cap() {
+            wa = match a_old {
+                Some(id) => self.canon_old(old_nodes, id),
+                None => self.canon(&wa),
+            };
+            if wa.bound + wb.bound > self.spec.add_cap() {
+                wb = match b_old {
+                    Some(id) => self.canon_old(old_nodes, id),
+                    None => self.canon(&wb),
+                };
+            }
+        }
+        let mut limbs = Vec::with_capacity(self.spec.limbs);
+        for (&la, &lb) in wa.limbs.iter().zip(&wb.limbs) {
+            limbs.push(self.push(if sub { Node::Sub(la, lb) } else { Node::Add(la, lb) }));
+        }
+        WideVal { limbs, bound: wa.bound + wb.bound, canonical: false }
+    }
+}
+
+/// Does this node keep a narrow incarnation even when declared wide?
+/// Sources (inputs, constants, bootstrap results) are narrow values
+/// that *enter* the wide domain by decomposition; linear nodes over
+/// wide operands exist only as limb vectors.
+fn is_narrow_source(node: &Node) -> bool {
+    matches!(node, Node::Input(_) | Node::Const(_) | Node::Pbs { .. } | Node::MultiOut { .. })
+}
+
+/// Radix legalization: rewrite every node whose declared width exceeds
+/// the native message space — and every linear node a wide value flows
+/// into — onto limb vectors (`spec.limbs` little-endian message-space
+/// digits, signed top). Narrow sources entering the wide domain are
+/// decomposed by `span` same-input digit LUTs; deferred carries are
+/// propagated by packed message/carry LUT pairs only when the bound
+/// bookkeeping requires it; wide outputs are rippled to canonical form
+/// and spliced as `spec.limbs` consecutive output slots (recorded in
+/// the returned [`RadixInfo`]). Runs before CSE/packing, which then
+/// treat the limb nodes like any others — packing is what turns the
+/// same-input digit and carry tables into ϑ ≥ 2 shared rotations.
+///
+/// Returns `None` (plan untouched) when no declared width exceeds the
+/// native space.
+fn radix_pass(
+    nodes: &mut Vec<Node>,
+    luts: &mut Vec<LutFn>,
+    outputs: &mut Vec<NodeId>,
+    widths: &HashMap<NodeId, u32>,
+    rcfg: &super::radix::RadixConfig,
+    budget: usize,
+    stats: &mut RewriteStats,
+) -> Option<super::radix::RadixInfo> {
+    // Which nodes carry wide values: declared wider than native, plus
+    // everything downstream through linear ops.
+    let mut wide = vec![false; nodes.len()];
+    let mut max_declared = 0u32;
+    for (&id, &w) in widths {
+        if rcfg.spec_for(w).is_some() {
+            wide[id] = true;
+            max_declared = max_declared.max(w);
+        }
+    }
+    if max_declared == 0 {
+        return None;
+    }
+    let spec = rcfg.spec_for(max_declared).expect("checked wide above");
+    for id in 0..nodes.len() {
+        let prop = match &nodes[id] {
+            Node::Add(a, b) | Node::Sub(a, b) => wide[*a] || wide[*b],
+            Node::Neg(a) | Node::AddConst(a, _) | Node::ScalarMul(a, _) => wide[*a],
+            Node::Sum(xs) => xs.iter().any(|&x| wide[x]),
+            Node::Pbs { input, .. } | Node::MultiPbs { input, .. } => {
+                // A bootstrap can read a *declared* source (it still has
+                // a narrow incarnation) but never a genuinely wide
+                // linear value — a LUT cannot resolve more bits than
+                // the native space holds.
+                assert!(
+                    !wide[*input] || is_narrow_source(&nodes[*input]),
+                    "radix legalization: PBS of a wide value is unsupported — declare the \
+                     width after the last bootstrap of the chain"
+                );
+                false
+            }
+            Node::Input(_) | Node::Const(_) | Node::MultiOut { .. } => false,
+        };
+        if prop {
+            assert!(
+                !matches!(nodes[id], Node::MultiPbs { .. }),
+                "radix legalization: cannot widen a multi-output bootstrap node"
+            );
+            wide[id] = true;
+        }
+    }
+
+    let old_nodes = std::mem::take(nodes);
+    let mut leg = Legalizer {
+        spec,
+        budget: budget.max(1),
+        nodes: Vec::with_capacity(old_nodes.len() * 2),
+        luts,
+        remap: Vec::with_capacity(old_nodes.len()),
+        wides: vec![None; old_nodes.len()],
+        digit_luts: HashMap::new(),
+        msg_lut: None,
+        carry_lut: None,
+        top_lut: None,
+        widened: 0,
+        carry_luts_count: 0,
+        carry_rotations: 0,
+    };
+
+    for (id, node) in old_nodes.iter().enumerate() {
+        if !wide[id] || is_narrow_source(node) {
+            let n = remap_node(node, &leg.remap);
+            let new_id = leg.push(n);
+            leg.remap.push(new_id);
+            continue;
+        }
+        let wv = match node {
+            Node::Add(a, b) | Node::Sub(a, b) => {
+                let wa = leg.get_wide(&old_nodes, *a);
+                let wb = leg.get_wide(&old_nodes, *b);
+                let sub = matches!(node, Node::Sub(..));
+                leg.combine(&old_nodes, wa, Some(*a), wb, Some(*b), sub)
+            }
+            Node::Neg(a) => {
+                let wa = leg.get_wide(&old_nodes, *a);
+                let limbs = wa.limbs.iter().map(|&l| leg.push(Node::Neg(l))).collect();
+                WideVal { limbs, bound: wa.bound, canonical: false }
+            }
+            Node::AddConst(a, c) => {
+                let digits = spec.encode(*c);
+                let need = digits.iter().map(|d| d.abs()).max().unwrap_or(0);
+                let mut wa = leg.get_wide(&old_nodes, *a);
+                if need == 0 {
+                    wa
+                } else {
+                    if wa.bound + need > spec.add_cap() {
+                        wa = leg.canon_old(&old_nodes, *a);
+                    }
+                    let mut limbs = Vec::with_capacity(spec.limbs);
+                    for (&la, &d) in wa.limbs.iter().zip(&digits) {
+                        limbs.push(if d == 0 { la } else { leg.push(Node::AddConst(la, d)) });
+                    }
+                    WideVal { limbs, bound: wa.bound + need, canonical: false }
+                }
+            }
+            Node::ScalarMul(a, s) => {
+                if *s == 1 {
+                    leg.get_wide(&old_nodes, *a)
+                } else {
+                    let m = s.unsigned_abs() as i64;
+                    assert!(
+                        m.saturating_mul(spec.digit_max()) <= spec.add_cap(),
+                        "radix legalization: scalar multiplier {s} exceeds the limb \
+                         headroom of {spec:?} — fold it into a LUT before the declaration"
+                    );
+                    let mut wa = leg.get_wide(&old_nodes, *a);
+                    if wa.bound.saturating_mul(m) > spec.add_cap() {
+                        wa = leg.canon_old(&old_nodes, *a);
+                    }
+                    let limbs =
+                        wa.limbs.iter().map(|&l| leg.push(Node::ScalarMul(l, *s))).collect();
+                    WideVal { limbs, bound: wa.bound * m, canonical: *s == 0 }
+                }
+            }
+            Node::Sum(xs) => {
+                let mut acc = leg.get_wide(&old_nodes, xs[0]);
+                let mut acc_old = Some(xs[0]);
+                for &x in &xs[1..] {
+                    let wx = leg.get_wide(&old_nodes, x);
+                    acc = leg.combine(&old_nodes, acc, acc_old, wx, Some(x), false);
+                    acc_old = None;
+                }
+                acc
+            }
+            Node::MultiPbs { .. } => {
+                panic!("radix legalization: cannot declare a width on a multi-output bootstrap")
+            }
+            Node::Input(_) | Node::Const(_) | Node::Pbs { .. } | Node::MultiOut { .. } => {
+                unreachable!("narrow sources handled above")
+            }
+        };
+        leg.remap.push(usize::MAX);
+        leg.wides[id] = Some(wv);
+    }
+
+    // Wide outputs leave the plan in canonical form, spliced as
+    // `spec.limbs` consecutive slots.
+    let mut wide_outputs = Vec::with_capacity(outputs.len());
+    let mut new_outputs = Vec::with_capacity(outputs.len());
+    for &out in outputs.iter() {
+        if wide[out] {
+            let w = leg.canon_old(&old_nodes, out);
+            new_outputs.extend(w.limbs.iter().copied());
+            wide_outputs.push(true);
+        } else {
+            new_outputs.push(leg.remap[out]);
+            wide_outputs.push(false);
+        }
+    }
+
+    stats.radix_widened = leg.widened;
+    stats.radix_limbs = spec.limbs;
+    stats.carry_luts = leg.carry_luts_count;
+    stats.carry_rotations = leg.carry_rotations;
+    let info = super::radix::RadixInfo {
+        spec,
+        widened: leg.widened,
+        carry_luts: leg.carry_luts_count,
+        carry_rotations: leg.carry_rotations,
+        wide_outputs,
+    };
+    *nodes = leg.nodes;
+    *outputs = new_outputs;
+    Some(info)
 }
 
 #[cfg(test)]
@@ -1832,5 +2383,136 @@ mod tests {
             Err(_) => true,
         };
         assert_eq!(wavefront_enabled(), env_default);
+    }
+
+    // ----- radix legalization -----
+
+    use crate::tfhe::radix::RadixConfig;
+
+    #[test]
+    fn radix_is_a_noop_when_declared_width_fits_native() {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(2);
+        let s = b.add(ins[0], ins[1]);
+        b.declare_width(s, 4); // fits a 6-bit native space
+        b.output(s);
+        let plan = b.build();
+        let before = plan.structural_hash();
+        let (out, stats) = PlanRewriter::new(RewriteConfig::none())
+            .with_radix(RadixConfig::new(6))
+            .rewrite(plan);
+        assert_eq!(out.structural_hash(), before, "no-op legalization keeps the DAG");
+        assert!(out.radix().is_none());
+        assert_eq!(stats, RewriteStats::default());
+        // The declaration survives for a later rewrite at a narrower set.
+        assert_eq!(out.declared_widths().get(&s), Some(&4));
+    }
+
+    #[test]
+    fn radix_wide_add_executes_bit_identically_to_the_mirror() {
+        let _pbs_guard = crate::tfhe::pbs_test_guard();
+        let (ck, ctx, mut rng) = setup(); // 4-bit native space
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(2);
+        let s = b.add(ins[0], ins[1]);
+        b.declare_width(s, 6);
+        b.output(s);
+        let (plan, stats) = PlanRewriter::new(RewriteConfig::cse_only())
+            .with_radix(RadixConfig::new(4))
+            .rewrite(b.build());
+        let info = plan.radix().expect("legalization fired").clone();
+        let spec = info.spec;
+        assert_eq!((spec.limb_bits, spec.limbs), (1, 6), "4-bit native forces 1-bit limbs");
+        assert_eq!(stats.radix_widened, 2, "both operands decomposed");
+        assert_eq!(stats.radix_limbs, 6);
+        assert_eq!(stats.carry_luts, 2 * 6 - 1, "one output ripple");
+        assert_eq!(info.wide_outputs, vec![true]);
+        // 2·span digit extractions + one 2k−1 carry ripple.
+        assert_eq!(plan.pbs_count(), 2 * spec.span() as u64 + stats.carry_luts);
+        for (a, bv) in [(7i64, 7), (-7, -7), (-7, 6), (5, -3), (0, 0)] {
+            let ca = ctx.encrypt(a, &ck, &mut rng);
+            let cb = ctx.encrypt(bv, &ck, &mut rng);
+            let before = pbs_count();
+            let outs = plan.execute(&ctx, &[ca, cb]);
+            assert_eq!(pbs_count() - before, plan.pbs_count(), "oracle a={a} b={bv}");
+            let limbs: Vec<i64> = outs.iter().map(|o| ctx.decrypt(o, &ck)).collect();
+            assert_eq!(limbs, spec.encode(a + bv), "canonical limbs a={a} b={bv}");
+            assert_eq!(info.decode_outputs(&limbs), vec![a + bv]);
+        }
+    }
+
+    #[test]
+    fn radix_rewrite_is_idempotent_and_keeps_the_record() {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(3);
+        let s = b.sum(&ins);
+        b.declare_width(s, 6);
+        b.output(s);
+        let rw = PlanRewriter::new(RewriteConfig::cse_only()).with_radix(RadixConfig::new(4));
+        let (once, stats1) = rw.rewrite(b.build());
+        assert!(stats1.radix_limbs > 0, "first rewrite legalizes");
+        let hash = once.structural_hash();
+        let (twice, stats2) = rw.rewrite(once);
+        assert_eq!(stats2, RewriteStats::default(), "second rewrite is a no-op");
+        assert_eq!(twice.structural_hash(), hash);
+        assert!(twice.radix().is_some(), "legalization record survives re-rewriting");
+    }
+
+    #[test]
+    fn radix_digit_groups_pack_to_four_luts_at_theta2() {
+        // 2-bit limbs over an 8-bit native space: span-4 digit
+        // extraction from each narrow source — exactly a 2^ϑ = 4 group.
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(2);
+        let p1 = b.relu(ins[0]);
+        let p2 = b.abs(ins[1]);
+        let s = b.add(p1, p2);
+        b.declare_width(s, 10);
+        b.output(s);
+        let (plan, stats) =
+            PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 4 })
+                .with_radix(RadixConfig::new(8).with_limb_bits(2))
+                .rewrite(b.build());
+        let spec = plan.radix().unwrap().spec;
+        assert_eq!((spec.limb_bits, spec.limbs, spec.span()), (2, 5, 4));
+        let sizes = plan.multi_group_sizes();
+        assert_eq!(
+            sizes.iter().filter(|&&g| g >= 4).count(),
+            2,
+            "each decomposed source packs its span-4 digit group, got {sizes:?}"
+        );
+        // relu + abs + 2 span-4 decompositions + one k=5 ripple.
+        assert_eq!(plan.pbs_count(), 2 + 8 + 9);
+        // Rotations: 2 singletons + 1 per digit group + (k−1) message +
+        // carry pairs + the top wrap.
+        assert_eq!(plan.blind_rotation_count(), 2 + 2 + 4 + 1);
+        assert_eq!(stats.carry_rotations, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "PBS of a wide value")]
+    fn radix_rejects_bootstrap_of_a_wide_value() {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(2);
+        let s = b.add(ins[0], ins[1]);
+        b.declare_width(s, 9);
+        let r = b.relu(s);
+        b.output(r);
+        let _ = PlanRewriter::new(RewriteConfig::none())
+            .with_radix(RadixConfig::new(6))
+            .rewrite(b.build());
+    }
+
+    #[test]
+    #[should_panic(expected = "scalar multiplier")]
+    fn radix_rejects_oversized_scalar_multipliers() {
+        let mut b = CircuitBuilder::new();
+        let ins = b.inputs(1);
+        let m = b.scalar_mul(ins[0], 100);
+        b.declare_width(m, 9);
+        b.output(m);
+        let _ = PlanRewriter::new(RewriteConfig::none())
+            .with_radix(RadixConfig::new(6))
+            .rewrite(b.build());
     }
 }

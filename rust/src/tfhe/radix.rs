@@ -1,0 +1,551 @@
+//! Radix wide-integer arithmetic: one logical value as a little-endian
+//! vector of message-space limbs.
+//!
+//! One torus message space caps every accumulator in the repo at
+//! `message_bits` of precision. This module defines the *representation*
+//! a wide value takes when that is not enough — `limbs` digits of
+//! `limb_bits` each, unsigned except for a two's-complement signed top
+//! limb — plus the plaintext mirror arithmetic the differential tests
+//! compare against. The *circuit* side (rewriting a declared-wide plan
+//! node into limb-wise linear ops and packed carry-propagation PBS)
+//! lives in `tfhe::plan` as a legalization pass inside `PlanRewriter`;
+//! see rust/DESIGN.md §10.
+//!
+//! Limb layout (base B = 2^limb_bits, k = limbs):
+//!
+//! - limbs 0..k-2 hold digits in `[0, B-1]` (canonical form),
+//! - the top limb holds a signed digit in `[-B/2, B/2)`,
+//! - the represented value is `Σ dᵢ·Bⁱ`, ranging over exactly
+//!   `[-Bᵏ/2, Bᵏ/2)` — ordinary two's complement in base B.
+//!
+//! Between carry propagations, limbs drift outside the canonical digit
+//! range (linear ops are applied limb-wise with no carries); the value
+//! `Σ dᵢ·Bⁱ` stays exact as long as every limb stays within the native
+//! message space. [`RadixSpec::add_cap`]/[`RadixSpec::carry_cap`] budget
+//! that headroom: a carry-propagation PBS may only be *skipped* while
+//! `|limb| ≤ add_cap`, because the ripple itself adds a carry of up to
+//! `carry_cap` to the next limb before its split LUTs fire.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::params::TfheParams;
+
+/// Shape of a radix representation: `limbs` digits of `limb_bits` each,
+/// legalized against a native message space of `native_bits`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RadixSpec {
+    /// Bits per limb (digit base is `2^limb_bits`).
+    pub limb_bits: u32,
+    /// Number of limbs (little-endian; the last is the signed top digit).
+    pub limbs: usize,
+    /// Native message-space width the limbs must fit inside, carries and
+    /// all (the `message_bits` of the parameter set, or a forced override).
+    pub native_bits: u32,
+}
+
+impl RadixSpec {
+    /// Build and validate a spec. Panics on shapes that cannot host a
+    /// carry discipline (see the capacity invariant below).
+    pub fn new(limb_bits: u32, limbs: usize, native_bits: u32) -> Self {
+        assert!(limb_bits >= 1, "radix: limb_bits must be >= 1");
+        assert!(limbs >= 2, "radix: a wide value needs >= 2 limbs");
+        assert!(
+            limb_bits < native_bits,
+            "radix: limb_bits {limb_bits} must leave carry headroom below native {native_bits}"
+        );
+        let spec = RadixSpec { limb_bits, limbs, native_bits };
+        assert!(
+            spec.width_bits() <= 32,
+            "radix: total width {} exceeds the 32-bit mirror range",
+            spec.width_bits()
+        );
+        // Capacity invariant: after a carry propagation every limb is a
+        // digit (≤ B-1), and one limb-wise add of two canonical values
+        // must fit back under add_cap — otherwise no sequence of ops can
+        // ever make progress without overflowing the native space.
+        assert!(
+            2 * spec.digit_max() <= spec.add_cap(),
+            "radix: limb_bits {limb_bits} leaves no add headroom at native {native_bits} \
+             (2·digit_max {} > add_cap {})",
+            2 * spec.digit_max(),
+            spec.add_cap()
+        );
+        spec
+    }
+
+    /// Spec covering `width_bits` of precision with `limb_bits`-wide
+    /// digits at the given native space (limb count rounded up, min 2).
+    pub fn for_width(width_bits: u32, limb_bits: u32, native_bits: u32) -> Self {
+        let limbs = (width_bits.div_ceil(limb_bits) as usize).max(2);
+        Self::new(limb_bits, limbs, native_bits)
+    }
+
+    /// Digit base B = 2^limb_bits.
+    pub fn base(&self) -> i64 {
+        1i64 << self.limb_bits
+    }
+
+    /// Total represented width in bits (`limb_bits · limbs`).
+    pub fn width_bits(&self) -> u32 {
+        self.limb_bits * self.limbs as u32
+    }
+
+    /// Largest canonical digit, B-1.
+    pub fn digit_max(&self) -> i64 {
+        self.base() - 1
+    }
+
+    /// Largest magnitude the native message space holds: 2^(native-1)-1.
+    pub fn native_cap(&self) -> i64 {
+        (1i64 << (self.native_bits - 1)) - 1
+    }
+
+    /// Worst-case carry magnitude the ripple can inject into a limb that
+    /// is itself at `add_cap`: `⌊native_cap/B⌋ + 1`.
+    pub fn carry_cap(&self) -> i64 {
+        self.native_cap() / self.base() + 1
+    }
+
+    /// Largest limb magnitude at which carry propagation may still be
+    /// deferred: the ripple adds up to `carry_cap` before the split LUTs
+    /// see the limb, and the sum must stay inside the native space.
+    pub fn add_cap(&self) -> i64 {
+        self.native_cap() - self.carry_cap()
+    }
+
+    /// Digits needed to cover one native-space value: ⌈native/limb_bits⌉.
+    /// Decomposing a narrow value emits exactly this many digit LUTs from
+    /// the *same* input — the natural packed multi-value group.
+    pub fn span(&self) -> usize {
+        self.native_bits.div_ceil(self.limb_bits) as usize
+    }
+
+    /// Wrap-around modulus of the representation, B^limbs.
+    pub fn modulus(&self) -> i64 {
+        1i64 << self.width_bits()
+    }
+
+    // ---- plaintext mirror arithmetic -----------------------------------
+
+    /// Reduce `v` into the represented range `[-B^k/2, B^k/2)`.
+    pub fn wrap(&self, v: i64) -> i64 {
+        let m = self.modulus();
+        let r = v.rem_euclid(m);
+        if r >= m / 2 { r - m } else { r }
+    }
+
+    /// Canonical little-endian digits of `wrap(v)`: unsigned digits with
+    /// a signed top limb.
+    pub fn encode(&self, v: i64) -> Vec<i64> {
+        let b = self.base();
+        let mut x = self.wrap(v);
+        let mut digits = Vec::with_capacity(self.limbs);
+        for _ in 0..self.limbs - 1 {
+            digits.push(x.rem_euclid(b));
+            x = x.div_euclid(b);
+        }
+        digits.push(x); // top quotient is already in [-B/2, B/2)
+        digits
+    }
+
+    /// Value of a (not necessarily canonical) limb vector, Σ dᵢ·Bⁱ.
+    /// Exact as long as the true value fits i64 — limbs here are small
+    /// (≤ native_cap) and width ≤ 32 bits, so it always does.
+    pub fn decode(&self, limbs: &[i64]) -> i64 {
+        assert_eq!(limbs.len(), self.limbs, "radix decode: wrong limb count");
+        let mut acc = 0i64;
+        for (i, &d) in limbs.iter().enumerate() {
+            acc += d << (self.limb_bits * i as u32);
+        }
+        acc
+    }
+
+    /// Plaintext carry ripple: bring arbitrary in-range limbs back to
+    /// canonical form. Mirrors the PBS ripple the legalizer emits
+    /// (`carry_split` per non-top limb, `wrap_digit` on the top).
+    pub fn canonicalize(&self, limbs: &[i64]) -> Vec<i64> {
+        assert_eq!(limbs.len(), self.limbs, "radix canonicalize: wrong limb count");
+        let b = self.base();
+        let mut out = Vec::with_capacity(self.limbs);
+        let mut carry = 0i64;
+        for (i, &d) in limbs.iter().enumerate() {
+            let s = d + carry;
+            if i + 1 < self.limbs {
+                let (m, c) = carry_split(s, b);
+                out.push(m);
+                carry = c;
+            } else {
+                out.push(wrap_digit(s, b));
+            }
+        }
+        out
+    }
+}
+
+/// Split `s` into a canonical message digit and its carry:
+/// `s = m + c·base` with `m ∈ [0, base)`.
+pub fn carry_split(s: i64, base: i64) -> (i64, i64) {
+    (s.rem_euclid(base), s.div_euclid(base))
+}
+
+/// Wrap `s` into the signed top-digit range `[-base/2, base/2)`.
+pub fn wrap_digit(s: i64, base: i64) -> i64 {
+    let r = s.rem_euclid(base);
+    if r >= base / 2 { r - base } else { r }
+}
+
+/// Digit `j` of a narrow value: `j` euclidean divisions by `base`, then
+/// either the remainder (`top = false`) or the remaining signed quotient
+/// (`top = true`). The quotient digit makes a partial decomposition
+/// exact: `Σ_{i<j} rem_i·Bⁱ + quot_j·Bʲ = x` for any signed `x`.
+pub fn decomp_digit(mut x: i64, base: i64, j: usize, top: bool) -> i64 {
+    for _ in 0..j {
+        x = x.div_euclid(base);
+    }
+    if top { x } else { x.rem_euclid(base) }
+}
+
+/// Largest `limb_bits` whose [`RadixSpec`] capacity invariant holds at
+/// `native_bits` (i.e. `2·(B-1) ≤ add_cap`). Panics below 4 native bits,
+/// where no base leaves carry headroom.
+pub fn max_limb_bits_for(native_bits: u32) -> u32 {
+    for w in (1..native_bits).rev() {
+        let base = 1i64 << w;
+        let cap = (1i64 << (native_bits - 1)) - 1;
+        let carry_cap = cap / base + 1;
+        let add_cap = cap - carry_cap;
+        if 2 * (base - 1) <= add_cap {
+            return w;
+        }
+    }
+    panic!("radix: no limb width fits a native message space of {native_bits} bits (need >= 4)");
+}
+
+// ---- configuration -----------------------------------------------------
+
+/// Forced native width for the legalizer, overriding parameter sets:
+/// 0 = unset (defer to the `FHE_RADIX_NATIVE_BITS` environment knob).
+static RADIX_NATIVE_OVERRIDE: AtomicU32 = AtomicU32::new(0);
+
+/// Programmatic override for the native message-space width the radix
+/// legalizer assumes (`None` restores the environment default). Used by
+/// tests and the forced-radix CI leg to make legalization fire on plans
+/// whose parameter sets would otherwise hold the declared width natively.
+pub fn set_radix_native_bits(bits: Option<u32>) {
+    RADIX_NATIVE_OVERRIDE.store(bits.unwrap_or(0), Ordering::SeqCst);
+}
+
+/// Forced native width, if any: the programmatic override beats the
+/// `FHE_RADIX_NATIVE_BITS` environment variable.
+pub fn radix_native_override() -> Option<u32> {
+    match RADIX_NATIVE_OVERRIDE.load(Ordering::SeqCst) {
+        0 => std::env::var("FHE_RADIX_NATIVE_BITS").ok().and_then(|v| v.parse().ok()),
+        n => Some(n),
+    }
+}
+
+/// Legalizer configuration: how wide the native message space is and how
+/// to slice declared-wide values into limbs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RadixConfig {
+    /// Native message-space width. `None` disables legalization.
+    pub native_bits: Option<u32>,
+    /// Bits per limb; `None` picks [`max_limb_bits_for`] the native width.
+    pub limb_bits: Option<u32>,
+}
+
+impl RadixConfig {
+    /// Explicit config (env/override-immune); see [`Self::for_params`]
+    /// for the production path.
+    pub fn new(native_bits: u32) -> Self {
+        RadixConfig { native_bits: Some(native_bits), limb_bits: None }
+    }
+
+    /// Production config for a parameter set: native width is the set's
+    /// `message_bits`, lowered by [`set_radix_native_bits`] /
+    /// `FHE_RADIX_NATIVE_BITS` when forced (the forced-radix CI leg).
+    pub fn for_params(p: &TfheParams) -> Self {
+        let mut native = p.message_bits;
+        if let Some(forced) = radix_native_override() {
+            native = native.min(forced.max(4));
+        }
+        RadixConfig { native_bits: Some(native), limb_bits: None }
+    }
+
+    /// Fix the per-limb width instead of deriving it from the native
+    /// space (e.g. `limb_bits = 2` at 8 native bits yields span-4 digit
+    /// groups, the ϑ = 2 packing showcase).
+    pub fn with_limb_bits(mut self, w: u32) -> Self {
+        self.limb_bits = Some(w);
+        self
+    }
+
+    /// Native width this config legalizes against, if enabled.
+    pub fn effective_native(&self) -> Option<u32> {
+        self.native_bits
+    }
+
+    /// Spec for a node declared `declared` bits wide, or `None` when the
+    /// native space already holds it (legalization is a no-op).
+    pub fn spec_for(&self, declared: u32) -> Option<RadixSpec> {
+        let native = self.native_bits?;
+        if declared <= native {
+            return None;
+        }
+        let w = self.limb_bits.unwrap_or_else(|| max_limb_bits_for(native));
+        Some(RadixSpec::for_width(declared, w, native))
+    }
+}
+
+// ---- per-plan legalization record --------------------------------------
+
+/// What the legalization pass did to one plan: attached to the rewritten
+/// [`CircuitPlan`](super::plan::CircuitPlan) so executors, metrics, and
+/// tests can interpret the widened output layout without re-deriving it.
+#[derive(Clone, Debug)]
+pub struct RadixInfo {
+    /// Limb shape every wide value in the plan uses.
+    pub spec: RadixSpec,
+    /// Number of distinct narrow sources decomposed into limbs.
+    pub widened: usize,
+    /// Carry-propagation LUT evaluations emitted (message/carry/top-wrap
+    /// tables), excluding the decomposition digit LUTs.
+    pub carry_luts: u64,
+    /// Blind rotations those carry LUTs cost after ϑ-packing (message +
+    /// carry of one limb share a rotation at budget ≥ 2).
+    pub carry_rotations: u64,
+    /// Per *original* output: `true` if that output was widened into
+    /// `spec.limbs` consecutive slots of the rewritten plan's outputs.
+    pub wide_outputs: Vec<bool>,
+}
+
+impl RadixInfo {
+    /// Total output slots of the legalized plan (wide outputs occupy
+    /// `spec.limbs` consecutive slots each).
+    pub fn n_slots(&self) -> usize {
+        self.wide_outputs
+            .iter()
+            .map(|&w| if w { self.spec.limbs } else { 1 })
+            .sum()
+    }
+
+    /// Recombine a legalized plan's decrypted outputs back into the
+    /// original circuit's output list (wide slots decoded via Σ dᵢ·Bⁱ).
+    pub fn decode_outputs(&self, slots: &[i64]) -> Vec<i64> {
+        assert_eq!(slots.len(), self.n_slots(), "radix: wrong output slot count");
+        let mut out = Vec::with_capacity(self.wide_outputs.len());
+        let mut i = 0;
+        for &wide in &self.wide_outputs {
+            if wide {
+                out.push(self.spec.decode(&slots[i..i + self.spec.limbs]));
+                i += self.spec.limbs;
+            } else {
+                out.push(slots[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng64;
+    use crate::util::prop::{prop_assert, prop_assert_eq, prop_check};
+
+    fn specs_under_test() -> Vec<RadixSpec> {
+        vec![
+            RadixSpec::new(5, 2, 8),  // k=2 grid point
+            RadixSpec::new(3, 3, 6),  // k=3 grid point
+            RadixSpec::new(2, 4, 6),  // k=4 grid point
+            RadixSpec::new(2, 5, 8),  // span-4 packing showcase shape
+            RadixSpec::new(1, 6, 4),  // smallest viable native space
+        ]
+    }
+
+    #[test]
+    fn capacity_invariants_hold() {
+        for spec in specs_under_test() {
+            assert!(spec.add_cap() + spec.carry_cap() == spec.native_cap());
+            assert!(2 * spec.digit_max() <= spec.add_cap(), "{spec:?}");
+            assert!(spec.span() <= spec.limbs, "{spec:?}: span must not exceed limbs");
+        }
+    }
+
+    #[test]
+    fn max_limb_bits_matches_hand_checks() {
+        assert_eq!(max_limb_bits_for(8), 5);
+        assert_eq!(max_limb_bits_for(6), 3);
+        assert_eq!(max_limb_bits_for(5), 2);
+        assert_eq!(max_limb_bits_for(4), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "no limb width fits")]
+    fn native_three_bits_has_no_limb_width() {
+        max_limb_bits_for(3);
+    }
+
+    #[test]
+    fn encode_decode_round_trips_whole_range() {
+        // Exhaustive over the full represented range for every spec.
+        for spec in specs_under_test() {
+            let m = spec.modulus();
+            for v in -m / 2..m / 2 {
+                let digits = spec.encode(v);
+                assert_eq!(digits.len(), spec.limbs);
+                for (i, &d) in digits.iter().enumerate() {
+                    if i + 1 < spec.limbs {
+                        assert!((0..spec.base()).contains(&d), "{spec:?} v={v}: digit {d}");
+                    } else {
+                        assert!(
+                            (-spec.base() / 2..spec.base() / 2).contains(&d),
+                            "{spec:?} v={v}: top digit {d}"
+                        );
+                    }
+                }
+                assert_eq!(spec.decode(&digits), v, "{spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn wrap_is_twos_complement() {
+        let spec = RadixSpec::new(3, 2, 6); // 6-bit representation
+        assert_eq!(spec.wrap(31), 31);
+        assert_eq!(spec.wrap(32), -32); // overflow wraps to max-negative
+        assert_eq!(spec.wrap(-33), 31);
+        assert_eq!(spec.wrap(64), 0);
+    }
+
+    #[test]
+    fn max_negative_edge_cases() {
+        for spec in specs_under_test() {
+            let min = -spec.modulus() / 2;
+            let digits = spec.encode(min);
+            // -B^k/2 is all-zero digits below a top limb of -B/2.
+            for &d in &digits[..spec.limbs - 1] {
+                assert_eq!(d, 0, "{spec:?}");
+            }
+            assert_eq!(digits[spec.limbs - 1], -spec.base() / 2, "{spec:?}");
+            assert_eq!(spec.decode(&digits), min);
+            // Negating max-negative wraps back to itself (two's complement).
+            assert_eq!(spec.wrap(-min), min, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn all_carries_ripple_end_to_end() {
+        // Limbs all at digit_max with a +1 in the lowest: the carry must
+        // ripple through every position (… B-1, B-1, B ⇒ 0, 0, …, +1 top).
+        for spec in specs_under_test() {
+            let mut limbs = vec![spec.digit_max(); spec.limbs];
+            limbs[0] += 1;
+            let canon = spec.canonicalize(&limbs);
+            assert_eq!(spec.decode(&canon), spec.wrap(spec.decode(&limbs)), "{spec:?}");
+            for &d in &canon[..spec.limbs - 1] {
+                assert_eq!(d, 0, "{spec:?}: ripple must clear every message digit");
+            }
+        }
+    }
+
+    #[test]
+    fn canonicalize_matches_encode_of_decode() {
+        // Property: for limbs drifting anywhere inside add_cap (the
+        // legalizer's invariant), the PBS-shaped ripple equals the
+        // canonical digits of the represented value — including signed
+        // digits below the top position (partial decompositions).
+        for spec in specs_under_test() {
+            prop_check(&format!("canonicalize {spec:?}"), 256, |rng| {
+                let cap = spec.add_cap();
+                let limbs: Vec<i64> =
+                    (0..spec.limbs).map(|_| rng.next_range_i64(-cap, cap)).collect();
+                let canon = spec.canonicalize(&limbs);
+                let want = spec.encode(spec.decode(&limbs));
+                prop_assert_eq(canon, want, "ripple vs encode∘decode")
+            });
+        }
+    }
+
+    #[test]
+    fn decomp_digit_partial_sums_are_exact() {
+        // Signed/unsigned boundary: a quotient digit at position j makes
+        // the j+1-digit partial decomposition exact for negative values.
+        for spec in specs_under_test() {
+            prop_check(&format!("decomp {spec:?}"), 256, |rng| {
+                let cap = spec.native_cap();
+                let x = rng.next_range_i64(-cap, cap);
+                let b = spec.base();
+                for j in 0..spec.span() {
+                    let mut acc = 0i64;
+                    for i in 0..j {
+                        acc += decomp_digit(x, b, i, false) << (spec.limb_bits * i as u32);
+                    }
+                    acc += decomp_digit(x, b, j, true) << (spec.limb_bits * j as u32);
+                    prop_assert_eq(acc, x, &format!("partial at j={j}"))?;
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn carry_split_and_wrap_digit_cover_signed_boundary() {
+        prop_check("carry_split", 512, |rng| {
+            let base = 1i64 << rng.next_range_i64(1, 6);
+            let s = rng.next_range_i64(-1000, 1000);
+            let (m, c) = carry_split(s, base);
+            prop_assert((0..base).contains(&m), "message digit in range")?;
+            prop_assert_eq(m + c * base, s, "split reassembles")?;
+            let w = wrap_digit(s, base);
+            prop_assert((-base / 2..base / 2).contains(&w), "top digit in range")?;
+            prop_assert_eq((w - s).rem_euclid(base), 0, "wrap preserves residue")
+        });
+    }
+
+    #[test]
+    fn config_spec_for_gates_on_native_width() {
+        let cfg = RadixConfig::new(6);
+        assert!(cfg.spec_for(6).is_none(), "fits native: no-op");
+        assert!(cfg.spec_for(4).is_none());
+        let spec = cfg.spec_for(9).unwrap();
+        assert_eq!((spec.limb_bits, spec.limbs, spec.native_bits), (3, 3, 6));
+        let spec = cfg.with_limb_bits(2).spec_for(8).unwrap();
+        assert_eq!((spec.limb_bits, spec.limbs), (2, 4));
+        assert_eq!(RadixConfig::default().spec_for(64), None, "disabled config");
+    }
+
+    #[test]
+    fn forced_native_override_lowers_for_params() {
+        let p = TfheParams::test_for_bits(6);
+        assert_eq!(RadixConfig::for_params(&p).native_bits, Some(6));
+        set_radix_native_bits(Some(4));
+        let forced = RadixConfig::for_params(&p);
+        set_radix_native_bits(None);
+        assert_eq!(forced.native_bits, Some(4));
+        // The override only ever lowers: an 8-bit force on 6-bit params
+        // stays at the params' own width.
+        set_radix_native_bits(Some(8));
+        let kept = RadixConfig::for_params(&p);
+        set_radix_native_bits(None);
+        assert_eq!(kept.native_bits, Some(6));
+    }
+
+    #[test]
+    fn info_decodes_mixed_output_layouts() {
+        let spec = RadixSpec::new(3, 3, 6);
+        let info = RadixInfo {
+            spec,
+            widened: 1,
+            carry_luts: 0,
+            carry_rotations: 0,
+            wide_outputs: vec![false, true, false],
+        };
+        assert_eq!(info.n_slots(), 5);
+        let mut slots = vec![7];
+        slots.extend(spec.encode(-200));
+        slots.push(-3);
+        assert_eq!(info.decode_outputs(&slots), vec![7, -200, -3]);
+    }
+}

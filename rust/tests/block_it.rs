@@ -371,6 +371,50 @@ fn block_engine_serves_coscheduled_requests_through_fusion() {
 }
 
 #[test]
+fn wide_output_block_decodes_canonical_limbs() {
+    // A declared 9-bit output accumulator on the final residual: the
+    // radix legalization pass widens the stack's outputs into canonical
+    // limbs with no per-circuit changes beyond the declaration. On this
+    // 6-bit keyset legalization fires natively (3-bit limbs, k = 3);
+    // under the forced-radix CI leg (`FHE_RADIX_NATIVE_BITS=5`) it fires
+    // at the forced width instead (2-bit limbs, k = 5) — either way the
+    // limbs must decode to the exact wide mirror.
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0xB70C07);
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(6), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let (heads, layers, t, d) = (1usize, 2usize, 2usize, 2usize);
+    let dm = heads * d;
+    let model = ModelFhe::demo(Mechanism::InhibitorSigned, dm, heads, layers, false, dm, 13)
+        .with_accumulator_bits(9);
+    let x = ITensor::random(&[t, dm], -1, 1, &mut rng);
+    let cx = CtMatrix::encrypt(&x, &ctx, &ck, &mut rng);
+    let want = model.mirror(&x, ctx.enc.min_signed(), ctx.enc.max_signed());
+    let plan = model.plan_for(&ctx, t);
+    let info = plan
+        .radix()
+        .expect("a 9-bit accumulator exceeds every CI leg's native space")
+        .clone();
+    let before_pbs = bootstrap::pbs_count();
+    let fwd = model.forward(&ctx, &cx);
+    assert_eq!(bootstrap::pbs_count() - before_pbs, plan.pbs_count(), "PBS delta");
+    let limbs = info.spec.limbs;
+    assert_eq!((fwd.rows, fwd.cols), (t, dm * limbs), "wide output matrix layout");
+    for i in 0..t {
+        for e in 0..dm {
+            let slots: Vec<i64> = (0..limbs)
+                .map(|l| ctx.decrypt(&fwd.data[i * dm * limbs + e * limbs + l], &ck))
+                .collect();
+            assert_eq!(
+                slots,
+                info.spec.encode(want.data[i * dm + e]),
+                "canonical limbs of output ({i}, {e})"
+            );
+        }
+    }
+}
+
+#[test]
 fn block_plan_cache_builds_once_across_forwards_and_clones() {
     let _g = lock();
     let mut rng = Xoshiro256::new(0xB70C06);

@@ -1,0 +1,342 @@
+//! Differential harness for the radix wide-arithmetic subsystem: over a
+//! (limb count × mechanism × rewrite mode × dispatch mode) grid, every
+//! attention circuit with a declared accumulator width must decrypt to
+//! canonical limbs of the *exact* plaintext wide-integer mirror, with
+//! executed `PBS_COUNT` / `BLIND_ROTATION_COUNT` deltas equal to the
+//! plan oracles; dedicated wide-sum circuits pin those oracles against
+//! `optimizer::precision::profile_radix`'s closed forms; the ϑ = 2
+//! showcase pins ≥ 4-LUT packed digit groups; and legalization is a
+//! structural no-op whenever the declared width already fits the native
+//! message space.
+
+use inhibitor::fhe_circuits::{CtMatrix, DotProductFhe, InhibitorFhe, InhibitorSignedFhe};
+use inhibitor::optimizer::profile_radix;
+use inhibitor::tensor::ITensor;
+use inhibitor::tfhe::ops::CtInt;
+use inhibitor::tfhe::{
+    bootstrap, set_radix_native_bits, set_wavefront_dispatch, CircuitBuilder, CircuitPlan,
+    ClientKey, FheContext, PlanRewriter, RadixConfig, RadixInfo, RewriteConfig, TfheParams,
+};
+use inhibitor::util::prng::Xoshiro256;
+use std::sync::Mutex;
+
+/// `PBS_COUNT` / `BLIND_ROTATION_COUNT`, the wavefront override, and the
+/// radix native override are process-global and tests in this binary run
+/// on parallel threads; every test serializes through this lock.
+static GLOBAL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Expected decrypted slot list of a legalized plan: each wide output is
+/// the canonical limb encoding of its mirror value (the legalizer always
+/// ripples at the output), narrow outputs pass through.
+fn expected_slots(info: &RadixInfo, want: &[i64]) -> Vec<i64> {
+    assert_eq!(info.wide_outputs.len(), want.len(), "one mirror value per original output");
+    let mut slots = Vec::with_capacity(info.n_slots());
+    for (&wide, &w) in info.wide_outputs.iter().zip(want) {
+        if wide {
+            slots.extend(info.spec.encode(w));
+        } else {
+            slots.push(w);
+        }
+    }
+    slots
+}
+
+/// Execute `plan`, assert the global counter deltas equal the plan's own
+/// oracles, and assert the decrypted slots are bit-identical to the
+/// mirror's canonical limbs. Returns the output ciphertexts.
+fn run_and_check(
+    plan: &CircuitPlan,
+    ctx: &FheContext,
+    ck: &ClientKey,
+    inputs: &[CtInt],
+    want: &[i64],
+    label: &str,
+) -> Vec<CtInt> {
+    let info = plan.radix().expect("legalization fired").clone();
+    let before_pbs = bootstrap::pbs_count();
+    let before_rot = bootstrap::blind_rotation_count();
+    let outs = plan.execute(ctx, inputs);
+    assert_eq!(
+        bootstrap::pbs_count() - before_pbs,
+        plan.pbs_count(),
+        "{label}: PBS_COUNT delta must match the plan oracle"
+    );
+    assert_eq!(
+        bootstrap::blind_rotation_count() - before_rot,
+        plan.blind_rotation_count(),
+        "{label}: BLIND_ROTATION_COUNT delta must match the plan oracle"
+    );
+    let slots: Vec<i64> = outs.iter().map(|c| ctx.decrypt(c, ck)).collect();
+    assert_eq!(slots, expected_slots(&info, want), "{label}: canonical limbs");
+    assert_eq!(info.decode_outputs(&slots), want, "{label}: recombined wide values");
+    outs
+}
+
+fn encrypt_qkv(
+    ctx: &FheContext,
+    ck: &ClientKey,
+    rng: &mut Xoshiro256,
+    q: &ITensor,
+    k: &ITensor,
+    v: &ITensor,
+) -> Vec<CtInt> {
+    let mut inputs = Vec::with_capacity(q.data.len() * 3);
+    for tensor in [q, k, v] {
+        inputs.extend(tensor.data.iter().map(|&val| ctx.encrypt(val, ck, rng)));
+    }
+    inputs
+}
+
+/// The full differential grid of the tentpole: limb counts {2, 3, 4} ×
+/// all three attention mechanisms × rewrites on/off (off = the
+/// legalize-only pipeline `FHE_NO_REWRITE` serving runs) × both dispatch
+/// modes. Every cell must be bit-identical to the wide-integer mirror
+/// and match the plan's own counter oracles exactly.
+#[test]
+fn wide_attention_grid_is_bit_identical_to_the_mirror() {
+    let _g = lock();
+    let (t, d) = (2usize, 1usize);
+    // (parameter set, native bits, forced limb width, declared width,
+    // limb count). The 7-bit row needs no forced limb width either:
+    // max_limb_bits_for(7) = 4, so a declared width of 8 takes 2 limbs.
+    let seven = {
+        // test_for_bits(7) picks N = 2048, one poly doubling short of the
+        // σ-margin the decode-exact 6-bit tests run at; double it.
+        let mut p = TfheParams::test_for_bits(7);
+        p.poly_size = 4096;
+        p
+    };
+    let grid: [(TfheParams, u32, Option<u32>, u32, usize); 3] = [
+        (seven, 7, None, 8, 2),
+        (TfheParams::test_multi_lut(6), 6, None, 9, 3),
+        (TfheParams::test_multi_lut(6), 6, Some(2), 8, 4),
+    ];
+    for (params, bits, limb_bits, width, k_limbs) in grid {
+        let mut rng = Xoshiro256::new(0x5AD1 + width as u64);
+        let ck = ClientKey::generate(params, &mut rng);
+        let ctx = FheContext::new(ck.server_key(&mut rng));
+        let (min_s, max_s) = (ctx.enc.min_signed(), ctx.enc.max_signed());
+        let q = ITensor::from_vec(&[t, d], vec![1, -2]);
+        let kk = ITensor::from_vec(&[t, d], vec![1, 0]);
+        // (mechanism label, raw wide-plan builder, mirror outputs, values).
+        type PlanBuilder = Box<dyn Fn() -> CircuitPlan>;
+        let mechanisms: Vec<(&str, PlanBuilder, Vec<i64>, ITensor)> = vec![
+            {
+                let v = ITensor::from_vec(&[t, d], vec![3, 1]);
+                let head = InhibitorFhe::new(d, 1).with_accumulator_bits(width);
+                let want = head.mirror(&q, &kk, &v, max_s).data;
+                ("inhibitor", Box::new(move || head.plan(t, d)) as PlanBuilder, want, v)
+            },
+            {
+                let v = ITensor::from_vec(&[t, d], vec![3, -2]);
+                let head = InhibitorSignedFhe::new(d, 1).with_accumulator_bits(width);
+                let want = head.mirror(&q, &kk, &v, min_s, max_s).data;
+                ("signed", Box::new(move || head.plan(t, d)) as PlanBuilder, want, v)
+            },
+            {
+                let v = ITensor::from_vec(&[t, d], vec![2, -1]);
+                let head = DotProductFhe::new(d, 2).with_accumulator_bits(width);
+                let want = head.mirror(&q, &kk, &v, min_s, max_s).data;
+                ("dotprod", Box::new(move || head.plan(t, d)) as PlanBuilder, want, v)
+            },
+        ];
+        for (name, build, want, v) in mechanisms {
+            let inputs = encrypt_qkv(&ctx, &ck, &mut rng, &q, &kk, &v);
+            let mut rcfg = RadixConfig::new(bits);
+            if let Some(w) = limb_bits {
+                rcfg = rcfg.with_limb_bits(w);
+            }
+            for cfg in [RewriteConfig::none(), RewriteConfig::for_params(&ctx.sk.params)] {
+                let label =
+                    format!("{name} k={k_limbs} cse={} budget={}", cfg.cse, cfg.max_multi_lut);
+                // Radix legalization is correctness, not optimization: it
+                // runs even under the all-passes-off config serving uses
+                // for its no-rewrite CI leg.
+                let (plan, _) = PlanRewriter::new(cfg).with_radix(rcfg).rewrite(build());
+                let info = plan.radix().unwrap_or_else(|| panic!("{label}: no legalization"));
+                assert_eq!(info.spec.limbs, k_limbs, "{label}");
+                assert!(info.wide_outputs.iter().all(|&w| w), "{label}: every output is wide");
+                let mut per_mode: Vec<Vec<CtInt>> = Vec::new();
+                for wavefront in [false, true] {
+                    set_wavefront_dispatch(Some(wavefront));
+                    let outs = run_and_check(
+                        &plan,
+                        &ctx,
+                        &ck,
+                        &inputs,
+                        &want,
+                        &format!("{label} wavefront={wavefront}"),
+                    );
+                    per_mode.push(outs);
+                }
+                set_wavefront_dispatch(None);
+                for (i, (a, b)) in per_mode[0].iter().zip(per_mode[1].iter()).enumerate() {
+                    assert_eq!(
+                        a.ct, b.ct,
+                        "{label}: dispatch modes must be ciphertext-identical (slot {i})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A wide `Sum` of `n` distinct bootstrap outputs: the canonical shape
+/// `profile_radix` models. Declared `width` bits wide.
+fn wide_sum_plan(n: usize, width: u32) -> CircuitPlan {
+    let mut b = CircuitBuilder::new();
+    let ins = b.inputs(n);
+    let terms: Vec<_> = ins
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            let l = b.lut(move |v| v + i as i64);
+            b.pbs(x, l)
+        })
+        .collect();
+    let s = b.sum(&terms);
+    b.declare_width(s, width);
+    b.output(s);
+    b.build()
+}
+
+/// `profile_radix`'s closed forms must equal the legalized plan's own
+/// counter oracles at every grid point — the pass and the profile are
+/// two derivations of the same arithmetic.
+#[test]
+fn wide_sum_counters_match_profile_radix_closed_forms() {
+    for &(native, limb_bits, width) in &[(8u32, 5u32, 10u32), (6, 3, 9), (6, 2, 8)] {
+        let rcfg = RadixConfig::new(native).with_limb_bits(limb_bits);
+        let spec = rcfg.spec_for(width).expect("declared width exceeds native");
+        for n in [1usize, 2, 3, 7] {
+            for budget in [1usize, 2, 4] {
+                let profile = profile_radix(n, spec, budget);
+                let (plan, stats) =
+                    PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: budget })
+                        .with_radix(rcfg)
+                        .rewrite(wide_sum_plan(n, width));
+                let label = format!("native={native} w={limb_bits} n={n} budget={budget}");
+                assert_eq!(plan.radix().unwrap().spec, spec, "{label}");
+                // The n front bootstraps are untouched singletons (all
+                // distinct inputs); everything else is the legalization.
+                assert_eq!(plan.pbs_count(), n as u64 + profile.pbs, "{label}: pbs");
+                assert_eq!(
+                    plan.blind_rotation_count(),
+                    n as u64 + profile.blind_rotations,
+                    "{label}: rotations"
+                );
+                assert_eq!(stats.radix_widened, n, "{label}");
+                assert_eq!(stats.carry_luts, profile.carry_pbs, "{label}");
+                assert_eq!(stats.carry_rotations, profile.carry_rotations, "{label}");
+            }
+        }
+    }
+}
+
+/// One wide-sum oracle executed end to end: counter deltas equal the
+/// plan oracles (and therefore the closed forms pinned above), and the
+/// limbs decode to the exact plaintext fold.
+#[test]
+fn wide_sum_executes_to_the_exact_plaintext_fold() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x5AD2);
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(6), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let (plan, _) = PlanRewriter::new(RewriteConfig::for_params(&ctx.sk.params))
+        .with_radix(RadixConfig::new(6))
+        .rewrite(wide_sum_plan(3, 9));
+    for xs in [[5i64, -7, 2], [-31, -30, -20], [31, 30, 29]] {
+        let want: i64 = xs.iter().enumerate().map(|(i, &x)| x + i as i64).sum();
+        let inputs: Vec<CtInt> = xs.iter().map(|&x| ctx.encrypt(x, &ck, &mut rng)).collect();
+        run_and_check(&plan, &ctx, &ck, &inputs, &[want], &format!("wide sum {xs:?}"));
+    }
+}
+
+/// The ϑ = 2 showcase of the issue: 2-bit limbs over an 8-bit native
+/// space give span-4 digit extractions — each decomposed source of a
+/// real mechanism circuit must pack into one ≥ 4-LUT blind rotation.
+#[test]
+fn packed_digit_groups_reach_four_luts_at_theta2() {
+    let (t, d) = (2usize, 1usize);
+    let head = InhibitorSignedFhe::new(d, 1).with_accumulator_bits(10);
+    let (plan, _) = PlanRewriter::new(RewriteConfig { cse: true, max_multi_lut: 4 })
+        .with_radix(RadixConfig::new(8).with_limb_bits(2))
+        .rewrite(head.plan(t, d));
+    let info = plan.radix().expect("legalization fired");
+    assert_eq!((info.spec.limb_bits, info.spec.limbs, info.spec.span()), (2, 5, 4));
+    let sizes = plan.multi_group_sizes();
+    let big = sizes.iter().filter(|&&g| g >= 4).count();
+    assert!(big >= 1, "at least one packed ϑ = 2 digit group, got {sizes:?}");
+    assert_eq!(
+        big, info.widened,
+        "every decomposed source packs its span-4 digit group, got {sizes:?}"
+    );
+}
+
+/// When the declared width already fits the native message space the
+/// pass must leave the plan untouched — same structural hash, no radix
+/// record, widths preserved for a later, narrower set.
+#[test]
+fn legalization_is_a_noop_when_the_width_fits_native() {
+    let (t, d) = (2usize, 1usize);
+    let head = InhibitorSignedFhe::new(d, 1).with_accumulator_bits(10);
+    let raw = head.plan(t, d);
+    let before = raw.structural_hash();
+    let (out, stats) = PlanRewriter::new(RewriteConfig::none())
+        .with_radix(RadixConfig::new(10))
+        .rewrite(raw);
+    assert_eq!(out.structural_hash(), before, "no-op legalization keeps the DAG");
+    assert!(out.radix().is_none());
+    assert_eq!(stats.radix_widened, 0);
+    assert_eq!(out.declared_widths().len(), t * d, "declarations survive for narrower sets");
+}
+
+/// The production head path under a forced native width (the
+/// `FHE_RADIX_NATIVE_BITS` CI leg's mechanism): `plan_for`/`forward`
+/// legalize through `RadixConfig::for_params`, the output matrix widens
+/// to `[T, d·limbs]`, and the limbs decode to the wide mirror.
+#[test]
+fn forced_native_override_legalizes_through_the_head_path() {
+    let _g = lock();
+    let mut rng = Xoshiro256::new(0x5AD3);
+    let ck = ClientKey::generate(TfheParams::test_multi_lut(6), &mut rng);
+    let ctx = FheContext::new(ck.server_key(&mut rng));
+    let (t, d) = (2usize, 1usize);
+    let head = InhibitorSignedFhe::new(d, 1).with_accumulator_bits(8);
+    set_radix_native_bits(Some(5));
+    let plan = head.plan_for(&ctx, t, d);
+    let info = plan.radix().expect("forced native must trigger legalization").clone();
+    // max_limb_bits_for(5) = 2, so a declared width of 8 takes 4 limbs.
+    assert_eq!(
+        (info.spec.limb_bits, info.spec.limbs, info.spec.native_bits),
+        (2, 4, 5),
+        "forced-native spec"
+    );
+    let q = ITensor::from_vec(&[t, d], vec![1, -2]);
+    let kk = ITensor::from_vec(&[t, d], vec![1, 0]);
+    let v = ITensor::from_vec(&[t, d], vec![3, -2]);
+    let cq = CtMatrix::encrypt(&q, &ctx, &ck, &mut rng);
+    let ckk = CtMatrix::encrypt(&kk, &ctx, &ck, &mut rng);
+    let cv = CtMatrix::encrypt(&v, &ctx, &ck, &mut rng);
+    let h = head.forward(&ctx, &cq, &ckk, &cv);
+    set_radix_native_bits(None);
+    let limbs = info.spec.limbs;
+    assert_eq!((h.rows, h.cols), (t, d * limbs), "wide output matrix layout");
+    let want = head.mirror(&q, &kk, &v, ctx.enc.min_signed(), ctx.enc.max_signed());
+    for i in 0..t {
+        for e in 0..d {
+            let slots: Vec<i64> = (0..limbs)
+                .map(|l| ctx.decrypt(&h.data[i * d * limbs + e * limbs + l], &ck))
+                .collect();
+            assert_eq!(
+                slots,
+                info.spec.encode(want.data[i * d + e]),
+                "canonical limbs of output ({i}, {e})"
+            );
+        }
+    }
+}
